@@ -1,0 +1,74 @@
+//! Cost explorer: the §6 deployment-cost analysis as an interactive tool.
+//!
+//! Prints Tables 2 and 3, then lets you explore what-if scenarios from the
+//! command line:
+//!
+//! ```text
+//! cargo run --release --example cost_explorer -- \
+//!     --servers 400 --freed 0.39 --f1-vcpus 8 --f1-price 1.2266
+//! ```
+//!
+//! The paper's central point falls out of the arithmetic: as long as the
+//! cloud pairs a big FPGA with a small CPU, the CPU-capacity replacement
+//! factor (48/8 = 6 instances per freed server) dominates any FPGA gain.
+
+use erbium_search::benchkit::print_table;
+use erbium_search::costmodel::{
+    catalog, cloud_units_for_cpu_capacity, freed_server_count, queries_per_dollar, table2,
+    table3, CostRow, HOURS_PER_YEAR,
+};
+
+fn arg(name: &str, default: f64) -> f64 {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn print_rows(title: &str, rows: &[CostRow]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.deployment.clone(),
+                r.element.name.to_string(),
+                r.units.to_string(),
+                r.total_label(),
+            ]
+        })
+        .collect();
+    print_table(title, &["deployment", "element", "units", "total"], &table);
+}
+
+fn main() {
+    print_rows("Table 2 — Domain Explorer + ERBIUM", &table2());
+    print_rows("Table 3 — + Route Scoring", &table3());
+
+    // What-if scenario.
+    let servers = arg("--servers", 400.0) as usize;
+    let freed = arg("--freed", 0.39);
+    let f1_vcpus = arg("--f1-vcpus", catalog::AWS_F1_2XL.vcpus as f64) as usize;
+    let f1_price = arg("--f1-price", catalog::AWS_F1_2XL.unit_cost);
+    let cpu_price = arg("--cpu-price", catalog::AWS_C5_12XL.unit_cost);
+
+    let reduced = (servers as f64 * (1.0 - freed)).round() as usize;
+    let f1_units = cloud_units_for_cpu_capacity(reduced, f1_vcpus);
+    let cpu_only = servers as f64 * cpu_price * HOURS_PER_YEAR;
+    let fpga = f1_units as f64 * f1_price * HOURS_PER_YEAR;
+    println!("\n== what-if (AWS) ==");
+    println!("  servers {servers}, freed {:.0} %, FPGA-instance vCPUs {f1_vcpus}, price {f1_price}/h", freed * 100.0);
+    println!("  CPU-only : {servers} × c5-like = {:.1} M/year", cpu_only / 1e6);
+    println!("  FPGA     : {f1_units} × f1-like = {:.1} M/year  ({:.2}× CPU-only)", fpga / 1e6, fpga / cpu_only);
+    let breakeven = (servers as f64 * cpu_price) / (reduced as f64 * f1_price) * 48.0;
+    println!("  break-even FPGA-instance vCPUs ≈ {breakeven:.1} (paper: 'a much more powerful CPU would solve the problem')");
+    println!(
+        "  engine efficiency: {:.0} G queries/USD at 32 M q/s on the FPGA instance",
+        queries_per_dollar(32e6, f1_price) / 1e9
+    );
+    println!("\nsanity: paper-reported units 244 / 1464 / 1171 → ours {} / {} / {}",
+        freed_server_count(400),
+        cloud_units_for_cpu_capacity(freed_server_count(400), 8),
+        cloud_units_for_cpu_capacity(freed_server_count(400), 10));
+}

@@ -1,0 +1,141 @@
+//! End-to-end driver — the full system on a real (scaled) workload, proving
+//! all three layers compose:
+//!
+//!   synthetic IATA-like v2 rule feed (20 k rules)
+//!     → offline toolchain (optimiser → parser → partitioned NFA images)
+//!     → AOT XLA artifact (Pallas NFA kernel, `make artifacts`)
+//!     → Rust coordinator: Injector → p Domain-Explorer processes →
+//!       router → w wrapper workers → k engine servers → PJRT execution
+//!     → MCT decisions filtering Travel Solutions, p50/p90 latency,
+//!       wall-clock and hardware-model throughput
+//!     → CPU-baseline replay of the same trace for the Fig 12 comparison.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_search`
+//! Scale knobs: E2E_UQ (user queries, default 24), E2E_RULES (default 20000),
+//! E2E_BACKEND=native to skip the XLA path.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use erbium_search::coordinator::domain_explorer::{DomainExplorer, MctStrategy};
+use erbium_search::coordinator::{Pipeline, Topology};
+use erbium_search::cpu_baseline::CpuBaseline;
+use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
+use erbium_search::nfa::constraint_gen::{estimate, HardwareConfig};
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{Schema, StandardVersion};
+use erbium_search::runtime::Runtime;
+use erbium_search::workload::{generate_trace, TraceConfig};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_uq = env_usize("E2E_UQ", 12);
+    let n_rules = env_usize("E2E_RULES", 2_000);
+    let use_xla = std::env::var("E2E_BACKEND").map(|b| b != "native").unwrap_or(true)
+        && Runtime::default_dir().join("manifest.txt").exists();
+
+    println!("== erbium-search end-to-end driver ==");
+    let gen_cfg = GeneratorConfig { n_rules, ..GeneratorConfig::default() };
+    let world = generate_world(&gen_cfg);
+    let schema = Schema::for_version(StandardVersion::V2);
+    let rs = generate_rule_set(&gen_cfg, &world, StandardVersion::V2);
+    println!("rule feed: {} v2 rules over {} airports", rs.rules.len(), gen_cfg.n_airports);
+
+    let t0 = Instant::now();
+    let (nfa, cstats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    println!(
+        "offline toolchain: {} levels, {} partitions, {} transitions, split +{} rules ({:.0} ms)",
+        cstats.depth,
+        cstats.partitions,
+        cstats.total_transitions,
+        cstats.rules_added_by_split,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    let hw = HardwareConfig::v2_aws(4);
+    let est = estimate(&hw, &nfa);
+    println!(
+        "constraint generator: {:.0} resource units, {:.1} MiB NFA memory, {:.1} MHz clock",
+        est.resource_units,
+        est.memory_bytes as f64 / (1 << 20) as f64,
+        est.frequency_mhz
+    );
+
+    // Workload: scaled production trace (same §5.2 marginals).
+    let trace = generate_trace(
+        &TraceConfig { n_user_queries: n_uq, mean_ts_per_query: 150.0, ..TraceConfig::default() },
+        &world,
+    );
+    let stats = trace.stats();
+    println!(
+        "trace: {} user queries → {} TS → {} MCT queries ({:.0} % direct)",
+        stats.user_queries,
+        stats.travel_solutions,
+        stats.mct_queries,
+        stats.direct_fraction() * 100.0
+    );
+
+    // The coordinator topology (paper's Pareto pick for a 20 M q/s floor).
+    let topology = Topology::new(4, 2, 1, 4);
+    let model = FpgaModel::new(hw, cstats.depth);
+    let backend_label = if use_xla { "XLA artifact via PJRT" } else { "native simulator" };
+    println!("pipeline: {} | backend: {backend_label}", topology.label());
+
+    let nfa_for_factory = nfa.clone();
+    let factory: erbium_search::coordinator::pipeline::EngineFactory =
+        Arc::new(move || {
+            let backend = if use_xla {
+                Backend::Xla {
+                    runtime: Arc::new(Runtime::cpu(Runtime::default_dir())?),
+                    batch_hint: 1024,
+                }
+            } else {
+                Backend::Native
+            };
+            ErbiumEngine::new(nfa_for_factory.clone(), model, backend, 28, 64)
+        });
+
+    let run0 = Instant::now();
+    let report = Pipeline::new(topology, factory).run(&trace)?;
+    let wall_s = run0.elapsed().as_secs_f64();
+    println!("\n== pipeline report ==");
+    println!("  user queries           : {}", report.user_queries);
+    println!("  TS examined / valid    : {} / {}", report.travel_solutions_examined, report.valid_travel_solutions);
+    println!("  MCT queries            : {}", report.mct_queries);
+    println!("  engine calls           : {}", report.engine_calls);
+    println!("  wall time              : {:.2} s", wall_s);
+    println!("  wall MCT throughput    : {:.1} k q/s (CPU stand-in)", report.wall_qps / 1e3);
+    println!(
+        "  hw-model kernel time   : {:.2} ms  → modeled throughput {:.1} M q/s",
+        report.modeled_kernel_us / 1e3,
+        report.mct_queries as f64 / report.modeled_kernel_us * 1.0
+    );
+    println!("  user-query latency p50 : {:.1} ms (wall)", report.uq_latency_p50_ms);
+    println!("  user-query latency p90 : {:.1} ms (wall)", report.uq_latency_p90_ms);
+    if use_xla {
+        println!("  note: XLA-CPU wall time is the functional-validation path; the paper's");
+        println!("  accelerator time is the hw-model clock above (DESIGN.md §Dual-clock).");
+    }
+
+    // CPU-baseline replay (the §5.2 comparison) on the same trace.
+    let cpu = CpuBaseline::new(schema.clone(), &rs);
+    let de = DomainExplorer::new(MctStrategy::CpuPerTs);
+    let c0 = Instant::now();
+    let mut cpu_valid = 0usize;
+    for uq in &trace.queries {
+        cpu_valid += de.process(uq, |qs| cpu.evaluate_batch(qs)).valid_ts;
+    }
+    let cpu_s = c0.elapsed().as_secs_f64();
+    println!("\n== CPU baseline replay ==");
+    println!("  wall time              : {:.2} s ({:.1} k q/s)", cpu_s, stats.mct_queries as f64 / cpu_s / 1e3);
+    println!("  valid TS               : {cpu_valid} (pipeline: {})", report.valid_travel_solutions);
+    println!(
+        "\nheadline: modeled accelerator is {:.0}× the CPU baseline on this trace (hw-model clock)",
+        (stats.mct_queries as f64 / (report.modeled_kernel_us * 1e-6)) / (stats.mct_queries as f64 / cpu_s)
+    );
+    println!("e2e OK");
+    Ok(())
+}

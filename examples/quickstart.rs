@@ -1,0 +1,95 @@
+//! Quickstart: the Table-1 scenario end to end, in ~60 lines of API use.
+//!
+//! Builds a tiny MCT v2 rule set in the spirit of Table 1 (ZRH/CDG rules of
+//! varying precision), compiles it through the full offline toolchain
+//! (optimiser → parser → partitioned NFA), and answers the query
+//! ρ0 = (ZRH, 12 Aug, Schengen, T1) with the native functional backend.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use erbium_search::encoder::WorldDicts;
+use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::rules::generator::{generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{Schema, StandardVersion};
+use erbium_search::rules::types::{ExactSlot, RangeSlot, Rule, RuleSet, WILDCARD};
+use erbium_search::workload::query_for_station;
+
+fn main() -> anyhow::Result<()> {
+    // Reference data (airports, carriers, …) + symbol tables.
+    let world = generate_world(&GeneratorConfig::small(42, 0));
+    let dicts = WorldDicts::from_world(&world);
+    let schema = Schema::for_version(StandardVersion::V2);
+    let zrh = 7u32; // stand-ins for "ZRH" / "CDG" in the synthetic world
+    let cdg = 9u32;
+    println!(
+        "airports: station {} = {:?}, station {} = {:?}",
+        zrh,
+        dicts.airports.symbol(zrh).unwrap(),
+        cdg,
+        dicts.airports.symbol(cdg).unwrap()
+    );
+
+    // Table-1-style rules: r0 generic 90', r1 terminal-specific 25',
+    // r2 adds a date window 40', r5 CDG 45'.
+    let wild = |id: u32, st: u32, min: u16| Rule {
+        id,
+        exact: {
+            let mut e = vec![WILDCARD; schema.exact_slots.len()];
+            e[schema.exact_index(ExactSlot::Station).unwrap()] = st;
+            e
+        },
+        ranges: schema.range_slots.iter().map(|s| Schema::full_range(*s)).collect(),
+        cs_ind: Some(false),
+        decision_min: min,
+    };
+    let mut r0 = wild(0, zrh, 90);
+    r0.exact[schema.exact_index(ExactSlot::ArrRegion).unwrap()] = 1; // International
+    let mut r1 = wild(1, zrh, 25);
+    r1.exact[schema.exact_index(ExactSlot::ArrRegion).unwrap()] = 0; // Schengen
+    r1.exact[schema.exact_index(ExactSlot::ArrTerminal).unwrap()] = 0; // T1
+    let mut r2 = r1.clone();
+    r2.id = 2;
+    r2.decision_min = 40;
+    r2.ranges[schema.range_index(RangeSlot::EffDateRange).unwrap()] = (120, 200); // summer
+    let mut r5 = wild(5, cdg, 45);
+    r5.exact[schema.exact_index(ExactSlot::ArrRegion).unwrap()] = 1;
+    let rs = RuleSet { version: StandardVersion::V2, rules: vec![r0, r1, r2, r5] };
+
+    // Offline toolchain: optimiser + parser → partitioned NFA.
+    let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    println!(
+        "compiled: {} levels, {} partitions, {} transitions",
+        stats.depth, stats.partitions, stats.total_transitions
+    );
+
+    // Online engine (native functional backend; swap Backend::Xla to run
+    // the AOT artifact through PJRT — see examples/e2e_search.rs).
+    let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+    let engine = ErbiumEngine::new(nfa, model, Backend::Native, 28, 64)?;
+
+    // ρ0: ZRH, Schengen arrival into T1, a summer date.
+    let mut q = query_for_station(&world, zrh, 1);
+    q.arr_region = 0;
+    q.arr_terminal = 0;
+    q.date = 150;
+    let d = &engine.evaluate_batch(&[q])?[0];
+    println!("ρ0 @ ZRH/T1/Schengen/summer → {d}");
+    assert_eq!(d.minutes, 40, "most precise rule (r2, dated) must win");
+
+    q.date = 40; // winter: r2 out, r1 wins
+    let d = &engine.evaluate_batch(&[q])?[0];
+    println!("ρ0 @ ZRH/T1/Schengen/winter → {d}");
+    assert_eq!(d.minutes, 25);
+
+    q.arr_region = 1; // international: only generic r0
+    let d = &engine.evaluate_batch(&[q])?[0];
+    println!("ρ0 @ ZRH international → {d}");
+    assert_eq!(d.minutes, 90);
+
+    let (_, t) = engine.evaluate_batch_timed(&[q])?;
+    println!("hardware-model time for a 1-query call: {:.1} µs (XDMA small-batch tax)", t.total_us);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py, whose recipe this follows.
+
+Artifacts are **rule-set independent**: the NFA image tensors are runtime
+parameters, so one ``(B, S, L)`` variant serves every compiled rule set that
+fits. ``make artifacts`` regenerates them only when the Python sources
+change.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: (batch, states/level, levels) variants shipped by default. L = 28 covers
+#: both standards (22 v1 / 26 v2 consolidated criteria + padding).
+VARIANTS = [
+    (64, 64, 28),
+    (256, 64, 28),
+    (1024, 64, 28),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(b, s, l) -> str:
+    lowered = jax.jit(model.evaluate).lower(*model.example_args(b, s, l))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(f"{b}x{s}x{l}" for b, s, l in VARIANTS),
+        help="comma-separated BxSxL triples",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for spec in args.variants.split(","):
+        b, s, l = (int(x) for x in spec.split("x"))
+        name = f"nfa_b{b}_s{s}_l{l}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_variant(b, s, l)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {b} {s} {l} {name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

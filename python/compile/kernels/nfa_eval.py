@@ -1,0 +1,137 @@
+"""L1 — the ERBIUM NFA evaluation engine as a Pallas kernel.
+
+The FPGA kernel of the paper (§3.1) is a spatial pipeline: one NFA level per
+stage, transitions resolved from BRAM, one query per clock once the pipeline
+is full. The TPU re-think (DESIGN.md §Hardware-Adaptation):
+
+* BRAM transition memory  →  dense per-level tensors ``kinds/lo/hi [L,S,S]``
+  sized so one level fits a VMEM tile (S ≤ 128);
+* pipeline parallelism    →  batch parallelism: a whole query tile advances
+  through one level per step via a masked batched matmul
+  ``active'[b,t] = (active[b,s] @ match[b,s,t]) > 0`` — the contraction is
+  MXU-shaped (S×S), the match mask comes from broadcast compares;
+* per-rule priority encoder →  masked argmax over accept weights.
+
+Edge kinds (shared with ``rust/src/nfa/memory.rs`` — keep in sync):
+0 = no edge, 1 = exact (q == lo), 2 = any, 3 = range (lo <= q <= hi).
+
+The kernel MUST be lowered with ``interpret=True``: real TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md). Correctness is pinned against the pure-jnp
+oracle in ``ref.py`` by ``python/tests/``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Keep in sync with rust/src/nfa/memory.rs.
+KIND_NONE = 0
+KIND_EXACT = 1
+KIND_ANY = 2
+KIND_RANGE = 3
+
+#: Score of inactive final states before the argmax (rust: NEG_INF_SCORE).
+NEG_INF_SCORE = -1.0e9
+
+#: Batch tile: 64 queries advance together through each level. On a real
+#: TPU this bounds the match-mask VMEM tile to TB*S*S*4 B (= 1 MiB at
+#: S = 64); under interpret=True it only shapes the HLO.
+DEFAULT_TILE = 64
+
+
+def _level_match(kinds_l, lo_l, hi_l, q_l):
+    """Match mask of one level: [TB, S, S] from labels [S,S] and queries [TB].
+
+    Vectorised label compare — the TPU analogue of the FPGA's per-stage
+    comparator array.
+    """
+    q = q_l[:, None, None]  # [TB, 1, 1]
+    m_exact = (kinds_l == KIND_EXACT) & (q == lo_l)
+    m_any = kinds_l == KIND_ANY
+    m_range = (kinds_l == KIND_RANGE) & (q >= lo_l) & (q <= hi_l)
+    return (m_exact | m_any | m_range).astype(jnp.float32)
+
+
+def _nfa_kernel(q_ref, kinds_ref, lo_ref, hi_ref, w_ref, d_ref,
+                best_ref, weight_ref, decision_ref, matched_ref, *, levels):
+    """Pallas kernel body: evaluate one batch tile through all L levels."""
+    q = q_ref[...]            # [TB, L] i32
+    w = w_ref[...]            # [S] f32
+    d = d_ref[...]            # [S] f32
+    tb = q.shape[0]
+    s = w.shape[0]
+    # Root one-hot active set.
+    active = jnp.zeros((tb, s), jnp.float32).at[:, 0].set(1.0)
+    for l in range(levels):
+        m = _level_match(kinds_ref[l], lo_ref[l], hi_ref[l], q[:, l])
+        # [TB,1,S] @ [TB,S,S] -> [TB,1,S]; counts > 0 ⇒ state reachable.
+        nxt = jax.lax.dot_general(
+            active[:, None, :], m,
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )[:, 0, :]
+        active = (nxt > 0.0).astype(jnp.float32)
+    # Priority encoder: most precise active accept wins; ties resolve to the
+    # lowest state index (= lowest rule id, the parser builds in id order).
+    score = jnp.where(active > 0.0, w[None, :], NEG_INF_SCORE)
+    best = jnp.argmax(score, axis=1).astype(jnp.int32)
+    matched = (jnp.max(active, axis=1) > 0.0).astype(jnp.float32)
+    best_ref[...] = best
+    weight_ref[...] = jnp.take(w, best) * matched
+    decision_ref[...] = jnp.take(d, best) * matched
+    matched_ref[...] = matched
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def nfa_eval(queries, kinds, lo, hi, weights, decisions, *, tile=DEFAULT_TILE):
+    """Evaluate a batch of encoded queries against one NFA image.
+
+    Args:
+      queries:   i32[B, L] level-ordered encoded query values.
+      kinds:     i32[L, S, S] edge kinds.
+      lo, hi:    i32[L, S, S] edge label bounds.
+      weights:   f32[S] accept precision weights.
+      decisions: f32[S] accept decisions (MCT minutes).
+      tile:      batch tile TB (must divide B).
+
+    Returns:
+      (best i32[B], weight f32[B], decision f32[B], matched f32[B]).
+      ``best`` is only meaningful where ``matched > 0``.
+    """
+    b, l = queries.shape
+    lk, s, _ = kinds.shape
+    assert lk == l, f"queries L={l} vs kinds L={lk}"
+    tile = min(tile, b)
+    assert b % tile == 0, f"batch {b} not divisible by tile {tile}"
+
+    grid = (b // tile,)
+    kernel = functools.partial(_nfa_kernel, levels=l)
+    full = lambda *dims: pl.BlockSpec(dims, lambda i: tuple(0 for _ in dims))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, l), lambda i: (i, 0)),
+            full(lk, s, s),
+            full(lk, s, s),
+            full(lk, s, s),
+            full(s,),
+            full(s,),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT execution; see module docstring.
+    )(queries, kinds, lo, hi, weights, decisions)

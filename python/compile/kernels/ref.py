@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the NFA evaluation kernel.
+
+Deliberately a *different formulation* from ``nfa_eval.py`` (boolean
+max-reduction over an explicit [B,S,S] mask instead of a batched f32 matmul)
+so the two implementations fail independently. Binary active sets make the
+two exactly equal, so tests assert bitwise agreement on every output.
+"""
+
+import jax.numpy as jnp
+
+from .nfa_eval import KIND_ANY, KIND_EXACT, KIND_RANGE, NEG_INF_SCORE
+
+
+def nfa_eval_ref(queries, kinds, lo, hi, weights, decisions):
+    """Reference evaluation; same signature/returns as ``nfa_eval``."""
+    b, l = queries.shape
+    _, s, _ = kinds.shape
+    active = jnp.zeros((b, s), jnp.bool_).at[:, 0].set(True)
+    for lv in range(l):
+        q = queries[:, lv][:, None, None]  # [B,1,1]
+        k, a, z = kinds[lv], lo[lv], hi[lv]
+        m = ((k == KIND_EXACT) & (q == a)) | (k == KIND_ANY) | (
+            (k == KIND_RANGE) & (q >= a) & (q <= z)
+        )  # [B,S,S]
+        # next[b,t] = OR_s active[b,s] AND m[b,s,t]
+        active = jnp.any(active[:, :, None] & m, axis=1)
+    score = jnp.where(active, weights[None, :], NEG_INF_SCORE)
+    best = jnp.argmax(score, axis=1).astype(jnp.int32)
+    matched = jnp.any(active, axis=1).astype(jnp.float32)
+    return (
+        best,
+        jnp.take(weights, best) * matched,
+        jnp.take(decisions, best) * matched,
+        matched,
+    )

@@ -1,0 +1,41 @@
+"""L2 — the JAX model around the NFA kernel.
+
+The paper's accelerated computation has no backward pass: the "model" is the
+batched rule-engine evaluation (the Domain Explorer's MCT call), i.e. the
+Pallas kernel plus the host-facing output head. This module is what
+``aot.py`` lowers to HLO text and what the Rust runtime executes; its
+*reference twin* (``evaluate_ref``) is the pure-jnp oracle.
+
+Inputs / outputs are documented in ``kernels/nfa_eval.py``; the parameter
+order here is the ABI contract with ``rust/src/runtime/``:
+
+    (queries, kinds, lo, hi, weights, decisions)
+      -> (best, weight, decision, matched)
+"""
+
+import jax.numpy as jnp
+
+from .kernels.nfa_eval import nfa_eval
+from .kernels.ref import nfa_eval_ref
+
+
+def evaluate(queries, kinds, lo, hi, weights, decisions):
+    """The AOT entry point: one NFA image, one batch of encoded queries."""
+    return nfa_eval(queries, kinds, lo, hi, weights, decisions)
+
+
+def evaluate_ref(queries, kinds, lo, hi, weights, decisions):
+    """Oracle twin of :func:`evaluate`."""
+    return nfa_eval_ref(queries, kinds, lo, hi, weights, decisions)
+
+
+def example_args(b, s, l):
+    """Shape specs for AOT lowering of one (B, S, L) variant."""
+    return (
+        jnp.zeros((b, l), jnp.int32),
+        jnp.zeros((l, s, s), jnp.int32),
+        jnp.zeros((l, s, s), jnp.int32),
+        jnp.zeros((l, s, s), jnp.int32),
+        jnp.zeros((s,), jnp.float32),
+        jnp.zeros((s,), jnp.float32),
+    )

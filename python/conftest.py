@@ -1,0 +1,6 @@
+# Make `compile.*` importable when pytest is invoked from the repo root
+# (e.g. `pytest python/tests/ -q`).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+The decisive signal: ``nfa_eval`` (batched-matmul Pallas formulation,
+interpret=True) must agree *bitwise* with ``nfa_eval_ref`` (boolean
+max-reduction) on random tensor fleets (hypothesis) and on hand-built NFAs
+with known answers. The Rust side re-checks the same semantics against its
+sparse evaluator and the ground-truth rule semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.nfa_eval import (
+    KIND_ANY,
+    KIND_EXACT,
+    KIND_NONE,
+    KIND_RANGE,
+    nfa_eval,
+)
+from compile.kernels.ref import nfa_eval_ref
+from compile import model
+
+
+def random_image(rng, s, l, value_max=16):
+    """Random dense NFA tensors (not necessarily trie-shaped: the kernel's
+    semantics are defined for arbitrary edge tensors)."""
+    kinds = rng.choice(
+        [KIND_NONE, KIND_EXACT, KIND_ANY, KIND_RANGE],
+        size=(l, s, s),
+        p=[0.82, 0.08, 0.06, 0.04],
+    ).astype(np.int32)
+    lo = rng.integers(0, value_max, size=(l, s, s)).astype(np.int32)
+    width = rng.integers(0, value_max, size=(l, s, s)).astype(np.int32)
+    hi = lo + width
+    weights = rng.uniform(0.0, 40.0, size=(s,)).astype(np.float32)
+    decisions = rng.integers(10, 180, size=(s,)).astype(np.float32)
+    return kinds, lo, hi, weights, decisions
+
+
+def assert_same(got, want):
+    best_g, w_g, d_g, m_g = got
+    best_w, w_w, d_w, m_w = want
+    np.testing.assert_array_equal(np.asarray(m_g), np.asarray(m_w))
+    # best is only defined where matched.
+    m = np.asarray(m_w) > 0
+    np.testing.assert_array_equal(np.asarray(best_g)[m], np.asarray(best_w)[m])
+    np.testing.assert_array_equal(np.asarray(w_g), np.asarray(w_w))
+    np.testing.assert_array_equal(np.asarray(d_g), np.asarray(d_w))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([1, 2, 8, 64]),
+    s=st.sampled_from([4, 8, 16]),
+    l=st.sampled_from([1, 2, 5, 9]),
+)
+def test_kernel_matches_ref_random(seed, b, s, l):
+    rng = np.random.default_rng(seed)
+    kinds, lo, hi, weights, decisions = random_image(rng, s, l)
+    queries = rng.integers(0, 16, size=(b, l)).astype(np.int32)
+    got = nfa_eval(queries, kinds, lo, hi, weights, decisions, tile=min(64, b))
+    want = nfa_eval_ref(queries, kinds, lo, hi, weights, decisions)
+    assert_same(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_ref_artifact_shape(seed):
+    """The exact shape AOT ships: B=256, S=64, L=28."""
+    rng = np.random.default_rng(seed)
+    kinds, lo, hi, weights, decisions = random_image(rng, 64, 28, value_max=1000)
+    queries = rng.integers(0, 1000, size=(256, 28)).astype(np.int32)
+    got = nfa_eval(queries, kinds, lo, hi, weights, decisions)
+    want = nfa_eval_ref(queries, kinds, lo, hi, weights, decisions)
+    assert_same(got, want)
+
+
+def tiny_image(s=8, l=4):
+    """Mirror of the Rust `nfa::memory::tests::tiny()` NFA:
+    level 0: root -Exact(7)-> s0, root -Any-> s1
+    level 1: s0 -Exact(1)-> accept0 (w=5, 25min); s1 -Any-> accept1 (w=1, 90min)
+    levels 2..: identity-Any padding.
+    """
+    kinds = np.zeros((l, s, s), np.int32)
+    lo = np.zeros((l, s, s), np.int32)
+    hi = np.zeros((l, s, s), np.int32)
+    kinds[0, 0, 0] = KIND_EXACT
+    lo[0, 0, 0] = 7
+    kinds[0, 0, 1] = KIND_ANY
+    kinds[1, 0, 0] = KIND_EXACT
+    lo[1, 0, 0] = 1
+    kinds[1, 1, 1] = KIND_ANY
+    for lv in range(2, l):
+        for st_ in range(s):
+            kinds[lv, st_, st_] = KIND_ANY
+    weights = np.zeros((s,), np.float32)
+    decisions = np.zeros((s,), np.float32)
+    weights[0], decisions[0] = 5.0, 25.0
+    weights[1], decisions[1] = 1.0, 90.0
+    return kinds, lo, hi, weights, decisions
+
+
+def test_tiny_nfa_known_answers():
+    kinds, lo, hi, w, d = tiny_image()
+    queries = np.array(
+        [
+            [7, 1, 0, 0],   # precise path wins: rule0, 25 min
+            [9, 1, 0, 0],   # only generic path: rule1, 90 min
+            [7, 2, 0, 0],   # precise dies at level 1: rule1, 90 min
+        ],
+        np.int32,
+    )
+    best, weight, decision, matched = nfa_eval(queries, kinds, lo, hi, w, d, tile=1)
+    np.testing.assert_array_equal(np.asarray(best), [0, 1, 1])
+    np.testing.assert_array_equal(np.asarray(decision), [25.0, 90.0, 90.0])
+    np.testing.assert_array_equal(np.asarray(matched), [1.0, 1.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(weight), [5.0, 1.0, 1.0])
+
+
+def test_no_match_reports_zero():
+    kinds, lo, hi, w, d = tiny_image()
+    # Kill the generic path so station 9 matches nothing.
+    kinds[0, 0, 1] = KIND_NONE
+    best, weight, decision, matched = nfa_eval(
+        np.array([[9, 1, 0, 0]], np.int32), kinds, lo, hi, w, d, tile=1
+    )
+    assert float(matched[0]) == 0.0
+    assert float(weight[0]) == 0.0
+    assert float(decision[0]) == 0.0
+
+
+def test_tie_breaks_to_lowest_state():
+    kinds, lo, hi, w, d = tiny_image()
+    w[0] = w[1] = 3.0  # equal precision
+    best, _, decision, matched = nfa_eval(
+        np.array([[7, 1, 0, 0]], np.int32), kinds, lo, hi, w, d, tile=1
+    )
+    assert int(best[0]) == 0, "argmax ties must resolve to the lowest state"
+    assert float(decision[0]) == 25.0
+
+
+def test_model_evaluate_is_kernel():
+    rng = np.random.default_rng(0)
+    kinds, lo, hi, w, d = random_image(rng, 8, 3)
+    q = rng.integers(0, 16, size=(8, 3)).astype(np.int32)
+    assert_same(model.evaluate(q, kinds, lo, hi, w, d), model.evaluate_ref(q, kinds, lo, hi, w, d))
+
+
+@pytest.mark.parametrize("b,tile", [(64, 64), (64, 32), (128, 64)])
+def test_tiling_is_transparent(b, tile):
+    rng = np.random.default_rng(b * 1000 + tile)
+    kinds, lo, hi, w, d = random_image(rng, 8, 3)
+    q = rng.integers(0, 16, size=(b, 3)).astype(np.int32)
+    got = nfa_eval(q, kinds, lo, hi, w, d, tile=tile)
+    want = nfa_eval_ref(q, kinds, lo, hi, w, d)
+    assert_same(got, want)

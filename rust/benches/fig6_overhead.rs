@@ -1,0 +1,81 @@
+//! Fig 6 — Execution time of an MCT query decomposed into the processing
+//! steps of the integrated architecture (basic 1p 1w 1k 1e configuration),
+//! as a function of the batch size.
+//!
+//! Steps, in flow order (Fig 5): ZeroMQ request → Encoder → PCIe transfer
+//! in → FPGA kernel → PCIe transfer out → result partition → ZeroMQ reply.
+//! Software steps use the calibrated overhead models; the *real* Rust
+//! encoder is also measured and printed alongside for calibration evidence.
+
+use erbium_search::benchkit::{fmt_us, measure, print_table};
+use erbium_search::coordinator::overheads::Overheads;
+use erbium_search::encoder::QueryEncoder;
+use erbium_search::erbium::FpgaModel;
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::prng::Rng;
+use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{Schema, StandardVersion};
+use erbium_search::workload::random_query;
+
+fn main() {
+    let o = Overheads::default();
+    let model = FpgaModel::new(HardwareConfig::v2_aws(1), 26);
+
+    // Real encoder measurement (our QueryEncoder on a real compiled plan).
+    let gen_cfg = GeneratorConfig::small(0xF16, 2_000);
+    let world = generate_world(&gen_cfg);
+    let schema = Schema::for_version(StandardVersion::V2);
+    let rs = generate_rule_set(&gen_cfg, &world, StandardVersion::V2);
+    let (nfa, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    let enc = QueryEncoder::new(&nfa.plan, 28);
+    let mut rng = Rng::new(1);
+    let queries: Vec<_> = (0..4096).map(|_| random_query(&mut rng, &world, 1)).collect();
+    let mut buf = Vec::new();
+    let st = measure(60.0, || {
+        enc.encode_batch(&queries, 4096, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    let real_ns_per_q = st.p50_ns / 4096.0;
+    println!(
+        "real QueryEncoder: {:.1} ns/query (calibrated production-encoder model: {:.0} ns/query)",
+        real_ns_per_q, o.encode.ns_per_query
+    );
+
+    let batches: Vec<usize> = (4..=18).step_by(2).map(|i| 1usize << i).collect();
+    let mut rows = Vec::new();
+    for &b in &batches {
+        let t = model.batch_timing(b);
+        let zmq_req = o.zmq.request_us(b);
+        let encode = o.encode.us(b);
+        let xrt = o.xrt.submission_us(1);
+        let partition = o.sched.us(b);
+        let zmq_rep = o.zmq.reply_us(b);
+        let total =
+            zmq_req + encode + xrt + t.transfer_in_us + t.compute_us + t.transfer_out_us
+                + partition + zmq_rep + t.setup_us;
+        let zmq_share = (zmq_req + zmq_rep) / total * 100.0;
+        rows.push(vec![
+            b.to_string(),
+            fmt_us(zmq_req),
+            fmt_us(encode),
+            fmt_us(t.setup_us + t.transfer_in_us),
+            fmt_us(t.compute_us),
+            fmt_us(t.transfer_out_us),
+            fmt_us(partition),
+            fmt_us(zmq_rep),
+            fmt_us(total),
+            format!("{zmq_share:.0} %"),
+        ]);
+    }
+    print_table(
+        "Fig 6 — per-step execution time decomposition (1p 1w 1k 1e, MCT v2/XDMA)",
+        &[
+            "batch", "zmq req", "encode", "shell+PCIe in", "kernel", "PCIe out", "partition",
+            "zmq reply", "total", "zmq share",
+        ],
+        &rows,
+    );
+    println!("\npaper anchors: ZeroMQ 60 %→30 % of total; data movement dominates ≤4 096;");
+    println!("encoder linear and above kernel time at large batches.");
+}

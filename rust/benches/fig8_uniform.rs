@@ -1,0 +1,39 @@
+//! Fig 8 — Varying the number of parallel components uniformly: n × (1p 1w
+//! 1k) with a fixed engine count per kernel. Throughput rises with the
+//! added kernels; per-request execution time *also* rises because the
+//! fuller board clocks lower (§4.3).
+
+use erbium_search::benchkit::{fmt_qps, fmt_us, print_table};
+use erbium_search::coordinator::{simulate, SimConfig, Topology};
+
+fn main() {
+    let batches: Vec<usize> = (8..=17).map(|i| 1usize << i).collect();
+    let configs = [
+        Topology::new(1, 1, 1, 1),
+        Topology::new(2, 2, 2, 1),
+        Topology::new(4, 4, 4, 1),
+        Topology::new(1, 1, 1, 2),
+        Topology::new(2, 2, 2, 2),
+    ];
+    let mut thr_rows = Vec::new();
+    let mut lat_rows = Vec::new();
+    for &b in &batches {
+        let mut thr = vec![b.to_string()];
+        let mut lat = vec![b.to_string()];
+        for t in &configs {
+            let r = simulate(&SimConfig::v2_cloud(*t, b));
+            thr.push(fmt_qps(r.throughput_qps));
+            lat.push(fmt_us(r.exec_p90_us));
+        }
+        thr_rows.push(thr);
+        lat_rows.push(lat);
+    }
+    let labels: Vec<String> = configs.iter().map(|t| t.label()).collect();
+    let mut headers = vec!["batch/request".to_string()];
+    headers.extend(labels);
+    let h: Vec<&str> = headers.iter().map(String::as_str).collect();
+    print_table("Fig 8a — global throughput (uniform scaling)", &h, &thr_rows);
+    print_table("Fig 8b — p90 execution time of a single MCT request", &h, &lat_rows);
+    println!("\npaper anchors: throughput scales with kernels; latency increases as the");
+    println!("board fills (slower clock); throughput prioritised over single-request time.");
+}

@@ -1,0 +1,121 @@
+//! §Perf — hot-path microbenchmarks feeding EXPERIMENTS.md §Perf:
+//!
+//! * L3: native NFA evaluation rate (the bulk-sweep engine), the real
+//!   encoder, and the CPU baseline;
+//! * L1/L2 via PJRT: XLA artifact execution per batch (requires
+//!   `artifacts/`; skipped otherwise).
+
+use erbium_search::benchkit::{fmt_qps, measure, print_table};
+use erbium_search::encoder::QueryEncoder;
+use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
+use erbium_search::cpu_baseline::CpuBaseline;
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::nfa::memory::NfaImage;
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::prng::Rng;
+use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{Schema, StandardVersion};
+use erbium_search::runtime::Runtime;
+use erbium_search::workload::random_query;
+
+fn main() {
+    let gen_cfg = GeneratorConfig { n_rules: 20_000, ..GeneratorConfig::default() };
+    let world = generate_world(&gen_cfg);
+    let schema = Schema::for_version(StandardVersion::V2);
+    let rs = generate_rule_set(&gen_cfg, &world, StandardVersion::V2);
+    let (nfa, cstats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    let model = FpgaModel::new(HardwareConfig::v2_aws(4), cstats.depth);
+    let engine =
+        ErbiumEngine::new(nfa.clone(), model, Backend::Native, 28, 64).expect("engine");
+    let cpu = CpuBaseline::new(schema.clone(), &rs);
+    let enc = QueryEncoder::new(&nfa.plan, 28);
+
+    let mut rng = Rng::new(0xBEEF);
+    let queries: Vec<_> = (0..8192)
+        .map(|_| {
+            let st = rng.index(gen_cfg.n_airports) as u32;
+            random_query(&mut rng, &world, st)
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+
+    // Encoder.
+    let mut buf = Vec::new();
+    let st = measure(200.0, || {
+        enc.encode_batch(&queries, 8192, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    rows.push(vec![
+        "L3 encoder (encode_batch)".into(),
+        format!("{:.1} ns/query", st.p50_ns / 8192.0),
+        fmt_qps(8192.0 / (st.p50_ns * 1e-9)),
+    ]);
+
+    // Native NFA evaluation (bulk sweep engine).
+    let st = measure(400.0, || {
+        std::hint::black_box(engine.evaluate_batch(&queries).unwrap());
+    });
+    rows.push(vec![
+        "native NFA evaluate_batch (8k)".into(),
+        format!("{:.0} ns/query", st.p50_ns / 8192.0),
+        fmt_qps(8192.0 / (st.p50_ns * 1e-9)),
+    ]);
+
+    // CPU baseline.
+    let st = measure(400.0, || {
+        std::hint::black_box(cpu.evaluate_batch(&queries));
+    });
+    rows.push(vec![
+        "CPU baseline evaluate_batch (8k)".into(),
+        format!("{:.0} ns/query", st.p50_ns / 8192.0),
+        fmt_qps(8192.0 / (st.p50_ns * 1e-9)),
+    ]);
+
+    // XLA path, if artifacts exist.
+    if Runtime::default_dir().join("manifest.txt").exists() {
+        let rt = std::sync::Arc::new(Runtime::cpu(Runtime::default_dir()).unwrap());
+        // Raw kernel invocation on one uploaded partition (B=1024).
+        let exe = rt.load("nfa_b1024_s64_l28").unwrap();
+        let pi = (0..nfa.partitions.len())
+            .max_by_key(|&i| nfa.partitions[i].accepts.len())
+            .unwrap();
+        let img = NfaImage::from_compiled(&nfa.partitions[pi], 28, 64).unwrap();
+        let dev = exe.upload(&img).unwrap();
+        let station = nfa.partitions[pi].station.unwrap();
+        let qs: Vec<_> = (0..1024).map(|_| random_query(&mut rng, &world, station)).collect();
+        let mut ebuf = Vec::new();
+        enc.encode_batch(&qs, 1024, &mut ebuf);
+        let st = measure(1_500.0, || {
+            std::hint::black_box(exe.execute(&ebuf, &dev).unwrap());
+        });
+        rows.push(vec![
+            "XLA kernel execute (B=1024, 1 partition)".into(),
+            format!("{:.2} ms/batch", st.p50_ns / 1e6),
+            fmt_qps(1024.0 / (st.p50_ns * 1e-9)),
+        ]);
+
+        // Full engine path through partition routing.
+        let xeng = ErbiumEngine::new(
+            nfa.clone(),
+            model,
+            Backend::Xla { runtime: rt, batch_hint: 1024 },
+            28,
+            64,
+        )
+        .unwrap();
+        let sample: Vec<_> = queries.iter().take(2048).copied().collect();
+        let st = measure(2_000.0, || {
+            std::hint::black_box(xeng.evaluate_batch(&sample).unwrap());
+        });
+        rows.push(vec![
+            "XLA engine evaluate_batch (2k mixed)".into(),
+            format!("{:.2} ms", st.p50_ns / 1e6),
+            fmt_qps(2048.0 / (st.p50_ns * 1e-9)),
+        ]);
+    } else {
+        println!("artifacts missing — XLA rows skipped (run `make artifacts`)");
+    }
+
+    print_table("§Perf — hot-path microbenchmarks", &["path", "unit cost", "rate"], &rows);
+}

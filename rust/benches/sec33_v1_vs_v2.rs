@@ -1,0 +1,67 @@
+//! §3.3 scalars — the MCT v1 → v2 adaptation cost, compiled from the same
+//! synthetic world:
+//!
+//! * consolidated criteria (NFA depth): 22 vs 26;
+//! * resource intensity: paper reports v2 **+56 %**;
+//! * FPGA memory: paper reports v2 **−4 %** (more homogeneous per-level
+//!   transition distribution despite more rules);
+//! * operating frequency: v2 **−11 %**;
+//! * §3.2.2 range splitting: "zero to a few hundred" extra rules.
+
+use erbium_search::benchkit::print_table;
+use erbium_search::nfa::constraint_gen::{estimate, HardwareConfig};
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{Schema, StandardVersion};
+
+fn main() {
+    let gen_cfg = GeneratorConfig { n_rules: 40_000, ..GeneratorConfig::default() };
+    let world = generate_world(&gen_cfg);
+    let opts = CompileOptions::default();
+
+    let mut per_version = Vec::new();
+    for version in [StandardVersion::V1, StandardVersion::V2] {
+        let schema = Schema::for_version(version);
+        let rs = generate_rule_set(&gen_cfg, &world, version);
+        let (nfa, stats) = compile_rule_set(&schema, &rs, &opts);
+        let hw = match version {
+            StandardVersion::V1 => HardwareConfig::v1_onprem(4),
+            StandardVersion::V2 => HardwareConfig::v2_aws(4),
+        };
+        let est = estimate(&hw, &nfa);
+        per_version.push((version, rs.rules.len(), stats, est));
+    }
+    let (_, n1, s1, e1) = &per_version[0];
+    let (_, n2, s2, e2) = &per_version[1];
+
+    let rows = vec![
+        vec!["rules".into(), n1.to_string(), n2.to_string(),
+             format!("{:+.1} %", (*n2 as f64 / *n1 as f64 - 1.0) * 100.0), "larger set".into()],
+        vec!["consolidated criteria (depth)".into(), s1.depth.to_string(), s2.depth.to_string(),
+             format!("{:+}", s2.depth as i64 - s1.depth as i64), "22 → 26".into()],
+        vec!["resource units".into(), format!("{:.0}", e1.resource_units),
+             format!("{:.0}", e2.resource_units),
+             format!("{:+.1} %", (e2.resource_units / e1.resource_units - 1.0) * 100.0),
+             "+56 %".into()],
+        vec!["FPGA memory (bytes)".into(), e1.memory_bytes.to_string(), e2.memory_bytes.to_string(),
+             format!("{:+.1} %", (e2.memory_bytes as f64 / e1.memory_bytes as f64 - 1.0) * 100.0),
+             "−4 %".into()],
+        vec!["frequency (MHz)".into(), format!("{:.1}", e1.frequency_mhz),
+             format!("{:.1}", e2.frequency_mhz),
+             format!("{:+.1} %", (e2.frequency_mhz / e1.frequency_mhz - 1.0) * 100.0),
+             "−11 %".into()],
+        vec!["rules added by §3.2.2 split".into(), s1.rules_added_by_split.to_string(),
+             s2.rules_added_by_split.to_string(), "—".into(), "0 .. few hundred".into()],
+        vec!["partitions (VMEM tiles)".into(), s1.partitions.to_string(),
+             s2.partitions.to_string(), "—".into(), "(ours: TPU adaptation)".into()],
+        vec!["total transitions".into(), s1.total_transitions.to_string(),
+             s2.total_transitions.to_string(),
+             format!("{:+.1} %", (s2.total_transitions as f64 / s1.total_transitions as f64 - 1.0) * 100.0),
+             "—".into()],
+    ];
+    print_table(
+        "§3.3 — MCT v1 vs v2 deployment characteristics",
+        &["metric", "v1", "v2", "delta", "paper"],
+        &rows,
+    );
+}

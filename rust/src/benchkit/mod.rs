@@ -1,0 +1,117 @@
+//! Minimal benchmarking toolkit (criterion is not available offline): warm
+//! timing loops, robust statistics, and paper-style table printing shared
+//! by every `rust/benches/*` target.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn p50_us(&self) -> f64 {
+        self.p50_ns / 1e3
+    }
+}
+
+/// Time `f` with warmup; auto-scales iterations to roughly `budget_ms`.
+pub fn measure<F: FnMut()>(budget_ms: f64, mut f: F) -> Stats {
+    // Warmup + calibration run.
+    let t0 = Instant::now();
+    f();
+    let once_ns = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((budget_ms * 1e6 / once_ns) as usize).clamp(3, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats {
+        mean_ns: samples.iter().sum::<f64>() / iters as f64,
+        p50_ns: samples[iters / 2],
+        min_ns: samples[0],
+        iters,
+    }
+}
+
+/// Human formatting for µs quantities spanning µs → s.
+pub fn fmt_us(us: f64) -> String {
+    if us < 1e3 {
+        format!("{us:.1} µs")
+    } else if us < 1e6 {
+        format!("{:.2} ms", us / 1e3)
+    } else {
+        format!("{:.3} s", us / 1e6)
+    }
+}
+
+/// Human formatting for queries/second.
+pub fn fmt_qps(qps: f64) -> String {
+    if qps >= 1e6 {
+        format!("{:.1} M q/s", qps / 1e6)
+    } else if qps >= 1e3 {
+        format!("{:.1} k q/s", qps / 1e3)
+    } else {
+        format!("{qps:.0} q/s")
+    }
+}
+
+/// Print a markdown-ish aligned table.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}\n");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(4)));
+        }
+        s
+    };
+    println!("{}", fmt_row(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>()));
+    println!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_sane_stats() {
+        let s = measure(5.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min_ns <= s.p50_ns);
+        assert!(s.p50_ns <= s.mean_ns * 3.0);
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_us(12.34), "12.3 µs");
+        assert_eq!(fmt_us(12_340.0), "12.34 ms");
+        assert_eq!(fmt_qps(32e6), "32.0 M q/s");
+    }
+}

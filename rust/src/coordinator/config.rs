@@ -1,0 +1,86 @@
+//! Topology configuration: the paper's `p/w/k/e` parallelism labels (§4.3).
+
+use crate::nfa::constraint_gen::{HardwareConfig, Shell};
+use crate::rules::standard::StandardVersion;
+
+/// Engines one FPGA board can host (§4.3: "the FPGA board is able to fit a
+/// total of 4 engines").
+pub const BOARD_ENGINE_CAPACITY: usize = 4;
+
+/// One deployment configuration of the integrated system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Topology {
+    /// Domain Explorer processes (`p`).
+    pub processes: usize,
+    /// MCT Wrapper workers (`w`).
+    pub workers: usize,
+    /// ERBIUM kernels on the board (`k`).
+    pub kernels: usize,
+    /// NFA Evaluation Engines per kernel (`e`).
+    pub engines_per_kernel: usize,
+}
+
+impl Topology {
+    pub fn new(p: usize, w: usize, k: usize, e: usize) -> Topology {
+        let t = Topology { processes: p, workers: w, kernels: k, engines_per_kernel: e };
+        assert!(t.fits_board(), "{t:?} exceeds board capacity");
+        assert!(p >= 1 && w >= 1 && k >= 1 && e >= 1);
+        t
+    }
+
+    /// Total engines synthesised on the board — what determines the clock
+    /// (§4.3: "the complexity of the FPGA circuit induces a slower
+    /// operating frequency" as kernels are added).
+    pub fn total_engines(&self) -> usize {
+        self.kernels * self.engines_per_kernel
+    }
+
+    pub fn fits_board(&self) -> bool {
+        self.total_engines() <= BOARD_ENGINE_CAPACITY
+    }
+
+    /// The paper's series label, e.g. `4p 4w 1k 4e`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}p {}w {}k {}e",
+            self.processes, self.workers, self.kernels, self.engines_per_kernel
+        )
+    }
+
+    /// Hardware config of one kernel under this topology (v2 cloud
+    /// deployment unless stated otherwise).
+    pub fn kernel_hw(&self, version: StandardVersion, shell: Shell) -> HardwareConfig {
+        HardwareConfig { version, shell, engines: self.engines_per_kernel, l: 28, s: 64 }
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_matches_paper_style() {
+        assert_eq!(Topology::new(4, 4, 1, 4).label(), "4p 4w 1k 4e");
+    }
+
+    #[test]
+    fn board_capacity_enforced() {
+        assert!(Topology { processes: 1, workers: 1, kernels: 2, engines_per_kernel: 4 }
+            .fits_board()
+            .eq(&false));
+        assert!(Topology::new(1, 1, 2, 2).fits_board());
+        assert_eq!(Topology::new(1, 1, 4, 1).total_engines(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversubscribed_board_panics() {
+        Topology::new(1, 1, 4, 2);
+    }
+}

@@ -1,0 +1,279 @@
+//! The Domain Explorer's MCT flow (§5.1): Travel-Solution iteration, the
+//! batch-size compromise, and connection-feasibility filtering.
+//!
+//! The §5.2 policy, verbatim: "To determine the batch size used for the
+//! FPGA call, we use the number of required qualified TS's provided by the
+//! user query. If the user query generates less potential TS's than the
+//! required qualified TS's number, all of the potential ones are batched
+//! together. In the other cases, we have multiple batches of the size of
+//! the required qualified TS's." The paper notes this is deliberately not
+//! optimal — it does not minimise the number of FPGA calls — and Fig 12
+//! plots the resulting call count staircase.
+
+use crate::rules::types::{MctDecision, MctQuery};
+use crate::workload::UserQuery;
+
+/// How the MCT module is invoked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MctStrategy {
+    /// CPU flow: evaluate each Travel Solution's queries as encountered
+    /// (no batching — "the notion of batch processing is not required",
+    /// §5.1).
+    CpuPerTs,
+    /// FPGA flow: aggregate TS's into required-qualified-TS-sized batches.
+    FpgaBatched,
+}
+
+/// Outcome of processing one user query through the Domain Explorer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UserQueryOutcome {
+    pub user_query: u32,
+    /// MCT queries actually checked.
+    pub checked_mct_queries: usize,
+    /// Engine invocations (per-TS calls for CPU, batch calls for FPGA).
+    pub engine_calls: usize,
+    /// Travel solutions that passed the MCT feasibility filter (direct
+    /// flights pass automatically).
+    pub valid_ts: usize,
+    /// Travel solutions examined before the required count was reached.
+    pub examined_ts: usize,
+}
+
+/// Minimum-connection-time feasibility: the scheduled ground time of the
+/// connection must cover the decided MCT.
+#[inline]
+pub fn connection_feasible(q: &MctQuery, d: &MctDecision) -> bool {
+    let gap = (q.dep_time + 1440 - q.arr_time) % 1440;
+    gap >= d.minutes as u32
+}
+
+/// The Domain Explorer MCT stage. Generic over the evaluator so the same
+/// policy drives the CPU baseline, the native simulator, the XLA engine or
+/// a remote worker (the pipeline's request-reply path).
+pub struct DomainExplorer {
+    pub strategy: MctStrategy,
+}
+
+impl DomainExplorer {
+    pub fn new(strategy: MctStrategy) -> Self {
+        DomainExplorer { strategy }
+    }
+
+    /// Process one user query. `evaluate` receives a batch of MCT queries
+    /// and must return one decision per query, in order.
+    pub fn process<F>(&self, uq: &UserQuery, mut evaluate: F) -> UserQueryOutcome
+    where
+        F: FnMut(&[MctQuery]) -> Vec<MctDecision>,
+    {
+        match self.strategy {
+            MctStrategy::CpuPerTs => self.process_cpu(uq, &mut evaluate),
+            MctStrategy::FpgaBatched => self.process_fpga(uq, &mut evaluate),
+        }
+    }
+
+    fn process_cpu<F>(&self, uq: &UserQuery, evaluate: &mut F) -> UserQueryOutcome
+    where
+        F: FnMut(&[MctQuery]) -> Vec<MctDecision>,
+    {
+        let mut out = UserQueryOutcome {
+            user_query: uq.id,
+            checked_mct_queries: 0,
+            engine_calls: 0,
+            valid_ts: 0,
+            examined_ts: 0,
+        };
+        for ts in &uq.solutions {
+            if out.valid_ts >= uq.required_ts {
+                break;
+            }
+            out.examined_ts += 1;
+            if ts.is_direct() {
+                out.valid_ts += 1;
+                continue;
+            }
+            out.engine_calls += 1;
+            out.checked_mct_queries += ts.mct_queries.len();
+            let ds = evaluate(&ts.mct_queries);
+            debug_assert_eq!(ds.len(), ts.mct_queries.len());
+            if ts.mct_queries.iter().zip(&ds).all(|(q, d)| connection_feasible(q, d)) {
+                out.valid_ts += 1;
+            }
+        }
+        out
+    }
+
+    fn process_fpga<F>(&self, uq: &UserQuery, evaluate: &mut F) -> UserQueryOutcome
+    where
+        F: FnMut(&[MctQuery]) -> Vec<MctDecision>,
+    {
+        let mut out = UserQueryOutcome {
+            user_query: uq.id,
+            checked_mct_queries: 0,
+            engine_calls: 0,
+            valid_ts: 0,
+            examined_ts: 0,
+        };
+        // Pending batch: TS index ranges into `batch_queries`.
+        let mut batch_ts: Vec<(usize, usize)> = Vec::new(); // (start, len) per TS
+        let mut batch_queries: Vec<MctQuery> = Vec::new();
+        let mut pending_ts = 0usize;
+
+        let mut flush = |batch_ts: &mut Vec<(usize, usize)>,
+                         batch_queries: &mut Vec<MctQuery>,
+                         out: &mut UserQueryOutcome| {
+            if batch_queries.is_empty() {
+                // A batch of only direct flights needs no engine call — but
+                // the direct TS's are still valid.
+                out.valid_ts += batch_ts.len();
+                batch_ts.clear();
+                return;
+            }
+            out.engine_calls += 1;
+            out.checked_mct_queries += batch_queries.len();
+            let ds = evaluate(batch_queries);
+            debug_assert_eq!(ds.len(), batch_queries.len());
+            for &(start, len) in batch_ts.iter() {
+                if len == 0 {
+                    out.valid_ts += 1; // direct flight
+                    continue;
+                }
+                let ok = (start..start + len)
+                    .all(|i| connection_feasible(&batch_queries[i], &ds[i]));
+                if ok {
+                    out.valid_ts += 1;
+                }
+            }
+            batch_ts.clear();
+            batch_queries.clear();
+        };
+
+        for ts in &uq.solutions {
+            if out.valid_ts >= uq.required_ts {
+                break;
+            }
+            out.examined_ts += 1;
+            if ts.is_direct() {
+                // Direct TS's are valid without an MCT call, but they count
+                // towards the batch's TS quota (the DE reads the list
+                // sequentially).
+                batch_ts.push((batch_queries.len(), 0));
+            } else {
+                batch_ts.push((batch_queries.len(), ts.mct_queries.len()));
+                batch_queries.extend_from_slice(&ts.mct_queries);
+            }
+            pending_ts += 1;
+            // §5.2 policy: one batch per `required_ts` travel solutions.
+            if pending_ts >= uq.required_ts {
+                flush(&mut batch_ts, &mut batch_queries, &mut out);
+                pending_ts = 0;
+            }
+        }
+        flush(&mut batch_ts, &mut batch_queries, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::types::MctDecision;
+    use crate::workload::{TravelSolution, UserQuery};
+
+    fn q(arr: u32, dep: u32) -> MctQuery {
+        let mut base = crate::workload::query_for_station(
+            &crate::rules::generator::generate_world(
+                &crate::rules::generator::GeneratorConfig::small(1, 1),
+            ),
+            0,
+            1,
+        );
+        base.arr_time = arr;
+        base.dep_time = dep;
+        base
+    }
+
+    fn always(minutes: u16) -> impl FnMut(&[MctQuery]) -> Vec<MctDecision> {
+        move |qs| {
+            qs.iter()
+                .map(|_| MctDecision { minutes, weight: 1.0, rule_id: 0 })
+                .collect()
+        }
+    }
+
+    fn uq_of(solutions: Vec<TravelSolution>, required: usize) -> UserQuery {
+        UserQuery { id: 0, required_ts: required, solutions }
+    }
+
+    #[test]
+    fn feasibility_gap_logic() {
+        let d = MctDecision { minutes: 45, weight: 1.0, rule_id: 0 };
+        assert!(connection_feasible(&q(600, 646), &d));
+        assert!(connection_feasible(&q(600, 645), &d));
+        assert!(!connection_feasible(&q(600, 630), &d));
+        // Overnight wrap.
+        assert!(connection_feasible(&q(1430, 40), &d));
+    }
+
+    #[test]
+    fn direct_ts_need_no_engine_call() {
+        let de = DomainExplorer::new(MctStrategy::FpgaBatched);
+        let uq = uq_of(vec![TravelSolution { mct_queries: vec![] }; 5], 10);
+        let out = de.process(&uq, always(30));
+        assert_eq!(out.engine_calls, 0);
+        assert_eq!(out.valid_ts, 5);
+        assert_eq!(out.checked_mct_queries, 0);
+    }
+
+    #[test]
+    fn fpga_batching_follows_required_ts_policy() {
+        // 10 non-direct TS's of 2 queries each, required_ts = 4:
+        // batches of 4 TS → calls at TS 4, 8, then the tail… but the DE
+        // stops once 4 valid TS's are found (first flush already yields 4).
+        let ts = TravelSolution { mct_queries: vec![q(600, 800), q(900, 1100)] };
+        let de = DomainExplorer::new(MctStrategy::FpgaBatched);
+        let uq = uq_of(vec![ts; 10], 4);
+        let out = de.process(&uq, always(30));
+        assert_eq!(out.engine_calls, 1, "one batch of required_ts TS's suffices");
+        assert_eq!(out.checked_mct_queries, 8);
+        assert_eq!(out.valid_ts, 4);
+        assert_eq!(out.examined_ts, 4);
+    }
+
+    #[test]
+    fn infeasible_ts_force_more_batches() {
+        // All connections too tight: DE must keep batching to the end.
+        let tight = TravelSolution { mct_queries: vec![q(600, 610)] };
+        let de = DomainExplorer::new(MctStrategy::FpgaBatched);
+        let uq = uq_of(vec![tight; 9], 4);
+        let out = de.process(&uq, always(45));
+        assert_eq!(out.valid_ts, 0);
+        assert_eq!(out.examined_ts, 9);
+        // 9 TS's in batches of 4 → 3 calls (4+4+1).
+        assert_eq!(out.engine_calls, 3);
+        assert_eq!(out.checked_mct_queries, 9);
+    }
+
+    #[test]
+    fn cpu_flow_calls_per_ts() {
+        let ts = TravelSolution { mct_queries: vec![q(600, 800)] };
+        let de = DomainExplorer::new(MctStrategy::CpuPerTs);
+        let uq = uq_of(vec![ts; 6], 3);
+        let out = de.process(&uq, always(30));
+        assert_eq!(out.engine_calls, 3, "stops at required_ts valid TS's");
+        assert_eq!(out.valid_ts, 3);
+    }
+
+    #[test]
+    fn cpu_and_fpga_agree_on_validity() {
+        // Same decisions ⇒ same valid set, independent of batching.
+        let mk = |arr, dep| TravelSolution { mct_queries: vec![q(arr, dep)] };
+        let sols = vec![mk(600, 640), mk(600, 615), mk(100, 300), mk(700, 701)];
+        let de_cpu = DomainExplorer::new(MctStrategy::CpuPerTs);
+        let de_fpga = DomainExplorer::new(MctStrategy::FpgaBatched);
+        let uq = uq_of(sols, 10);
+        let a = de_cpu.process(&uq, always(30));
+        let b = de_fpga.process(&uq, always(30));
+        assert_eq!(a.valid_ts, b.valid_ts);
+        assert_eq!(a.checked_mct_queries, b.checked_mct_queries);
+    }
+}

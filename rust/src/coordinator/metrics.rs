@@ -1,0 +1,97 @@
+//! Latency/throughput metrics. The paper reports the **90th percentile**
+//! ("as that matches the SLA of the search engine", §3.3) — p90 is the
+//! default everywhere here.
+
+/// A sample collector with percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in [0, 100] (nearest-rank).
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "no samples");
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        self.samples[rank.clamp(1, n) - 1]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    /// The paper's SLA percentile.
+    pub fn p90(&mut self) -> f64 {
+        self.percentile(90.0)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.samples.last().unwrap()
+    }
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_distribution() {
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            p.record(i as f64);
+        }
+        assert_eq!(p.p50(), 50.0);
+        assert_eq!(p.p90(), 90.0);
+        assert_eq!(p.p99(), 99.0);
+        assert_eq!(p.max(), 100.0);
+        assert!((p.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut p = Percentiles::new();
+        p.record(7.0);
+        assert_eq!(p.p90(), 7.0);
+        assert_eq!(p.p50(), 7.0);
+    }
+
+    #[test]
+    fn records_after_query_resort() {
+        let mut p = Percentiles::new();
+        p.record(10.0);
+        assert_eq!(p.p90(), 10.0);
+        p.record(1.0);
+        assert_eq!(p.p50(), 1.0);
+    }
+}

@@ -1,0 +1,31 @@
+//! The L3 coordinator: the System Integration of §4 (Fig 5).
+//!
+//! Two complementary realisations of the same architecture:
+//!
+//! * [`pipeline`] — the **real** threaded system: Injector → Domain
+//!   Explorer processes → router (ZeroMQ analogue over channels) → MCT
+//!   Wrapper workers (encode + batch) → XRT-serialised ERBIUM engine
+//!   (XLA or native backend). Used by the end-to-end example; reports both
+//!   wall-clock and hardware-model time.
+//! * [`sim`] — a deterministic **discrete-event simulation** of the same
+//!   topology with calibrated service-time models ([`overheads`]). Used by
+//!   the figure benches (Figs 6–11), where the paper measures saturation
+//!   and queueing effects of a hardware deployment we do not have.
+//!
+//! Shared vocabulary: [`config::Topology`] (the paper's `p/w/k/e` labels),
+//! [`metrics`] (p90-centric, matching the paper's SLA reporting), the
+//! [`domain_explorer`] Travel-Solution batching policy of §5.1–5.2.
+
+pub mod config;
+pub mod domain_explorer;
+pub mod metrics;
+pub mod overheads;
+pub mod pipeline;
+pub mod sim;
+
+pub use config::Topology;
+pub use domain_explorer::{DomainExplorer, UserQueryOutcome};
+pub use metrics::Percentiles;
+pub use overheads::Overheads;
+pub use pipeline::{Pipeline, PipelineReport};
+pub use sim::{simulate, SimConfig, SimReport};

@@ -1,0 +1,295 @@
+//! The **real** integrated system (Fig 5), running on threads and channels:
+//!
+//! ```text
+//! Injector ─▶ [p Domain-Explorer process threads]
+//!                  │  synchronous Request-Reply  (ZeroMQ analogue: mpsc
+//!                  ▼  channel + per-request reply channel)
+//!             [router queue] ─▶ [w MCT-Wrapper worker threads]
+//!                                   │ forward/batch
+//!                                   ▼
+//!                             [k engine-server threads = k kernels]
+//!                                   │
+//!                                   ▼
+//!                             ERBIUM engine (XLA artifact via PJRT,
+//!                             or the native functional simulator)
+//! ```
+//!
+//! Everything here is functional — MCT answers are computed for real. Two
+//! clocks are reported (DESIGN.md §Dual-clock): wall-clock of this CPU
+//! stand-in, and the hardware-model clock accumulated per kernel call.
+//!
+//! PJRT handles in the `xla` crate are `Rc`-based and not `Send`, exactly
+//! like an FPGA board handle is pinned to its XRT process: each kernel gets
+//! a dedicated engine-server thread that *builds* its engine locally via
+//! the supplied factory and serves requests over a channel — the software
+//! shape of the paper's "1-to-N relationship between the MCT Wrapper and
+//! the FPGA board" (§4.1).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::erbium::ErbiumEngine;
+use crate::rules::types::{MctDecision, MctQuery};
+use crate::workload::ProductionTrace;
+
+use super::config::Topology;
+use super::domain_explorer::{DomainExplorer, MctStrategy};
+use super::metrics::Percentiles;
+
+/// Builds one engine instance inside an engine-server thread. Called once
+/// per kernel (`k` times per run).
+pub type EngineFactory = Arc<dyn Fn() -> Result<ErbiumEngine> + Send + Sync>;
+
+/// One MCT request travelling process → worker (the ZeroMQ REQ frame).
+struct WorkRequest {
+    queries: Vec<MctQuery>,
+    reply: mpsc::Sender<Result<Vec<MctDecision>, String>>,
+}
+
+/// Aggregated report of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub topology_label: String,
+    pub user_queries: usize,
+    pub travel_solutions_examined: usize,
+    pub valid_travel_solutions: usize,
+    pub mct_queries: usize,
+    pub engine_calls: usize,
+    /// Wall-clock of the whole replay, ms.
+    pub wall_ms: f64,
+    /// Wall-clock MCT throughput, queries/s.
+    pub wall_qps: f64,
+    /// Hardware-model time accumulated across kernel calls, µs.
+    pub modeled_kernel_us: f64,
+    /// p50/p90 user-query latency, wall-clock ms.
+    pub uq_latency_p50_ms: f64,
+    pub uq_latency_p90_ms: f64,
+}
+
+/// The runnable pipeline.
+pub struct Pipeline {
+    pub topology: Topology,
+    factory: EngineFactory,
+}
+
+impl Pipeline {
+    pub fn new(topology: Topology, factory: EngineFactory) -> Pipeline {
+        Pipeline { topology, factory }
+    }
+
+    /// Replay a trace through the full system and report.
+    pub fn run(&self, trace: &ProductionTrace) -> Result<PipelineReport> {
+        let t0 = Instant::now();
+
+        // ---- Engine servers (k kernels) --------------------------------
+        let (etx, erx) = mpsc::channel::<WorkRequest>();
+        let erx = Arc::new(Mutex::new(erx));
+        let modeled_ns = Arc::new(AtomicU64::new(0));
+        let engine_calls = Arc::new(AtomicUsize::new(0));
+        let mut engine_handles = Vec::new();
+        for _ in 0..self.topology.kernels {
+            let erx = erx.clone();
+            let factory = self.factory.clone();
+            let modeled_ns = modeled_ns.clone();
+            let engine_calls = engine_calls.clone();
+            engine_handles.push(std::thread::spawn(move || {
+                let engine = match factory() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // Fail every request we can still see.
+                        while let Ok(req) = erx.lock().unwrap().recv() {
+                            let _ = req.reply.send(Err(format!("engine init: {e:#}")));
+                        }
+                        return;
+                    }
+                };
+                loop {
+                    let req = match erx.lock().unwrap().recv() {
+                        Ok(r) => r,
+                        Err(_) => break,
+                    };
+                    engine_calls.fetch_add(1, Ordering::Relaxed);
+                    let msg = match engine.evaluate_batch_timed(&req.queries) {
+                        Ok((ds, timing)) => {
+                            modeled_ns
+                                .fetch_add((timing.total_us * 1e3) as u64, Ordering::Relaxed);
+                            Ok(ds)
+                        }
+                        Err(e) => Err(format!("{e:#}")),
+                    };
+                    let _ = req.reply.send(msg);
+                }
+            }));
+        }
+
+        // ---- MCT Wrapper workers ---------------------------------------
+        let (wtx, wrx) = mpsc::channel::<WorkRequest>();
+        let wrx = Arc::new(Mutex::new(wrx));
+        let mut worker_handles = Vec::new();
+        for _ in 0..self.topology.workers {
+            let wrx = wrx.clone();
+            let etx = etx.clone();
+            worker_handles.push(std::thread::spawn(move || {
+                loop {
+                    // Round-robin dealer: whichever worker is free pulls the
+                    // next request (asynchronous dealer semantics, §4.1).
+                    let req = match wrx.lock().unwrap().recv() {
+                        Ok(r) => r,
+                        Err(_) => break,
+                    };
+                    // Forward to the board; XRT-style blocking submit.
+                    let (rtx, rrx) = mpsc::channel();
+                    if etx.send(WorkRequest { queries: req.queries, reply: rtx }).is_err() {
+                        let _ = req.reply.send(Err("board gone".into()));
+                        continue;
+                    }
+                    let res =
+                        rrx.recv().unwrap_or_else(|_| Err("engine server died".into()));
+                    let _ = req.reply.send(res);
+                }
+            }));
+        }
+        drop(etx);
+
+        // ---- Domain Explorer processes + Injector ----------------------
+        let queue: Arc<Mutex<VecDeque<&crate::workload::UserQuery>>> =
+            Arc::new(Mutex::new(trace.queries.iter().collect()));
+        let stats = Arc::new(Mutex::new((Percentiles::new(), 0usize, 0usize, 0usize, 0usize)));
+        let errors = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..self.topology.processes {
+                let queue = queue.clone();
+                let wtx = wtx.clone();
+                let stats = stats.clone();
+                let errors = errors.clone();
+                scope.spawn(move || {
+                    let de = DomainExplorer::new(MctStrategy::FpgaBatched);
+                    loop {
+                        let uq = match queue.lock().unwrap().pop_front() {
+                            Some(u) => u,
+                            None => break,
+                        };
+                        let q0 = Instant::now();
+                        let outcome = de.process(uq, |qs: &[MctQuery]| {
+                            let (rtx, rrx) = mpsc::channel();
+                            wtx.send(WorkRequest { queries: qs.to_vec(), reply: rtx })
+                                .expect("router closed");
+                            match rrx.recv().expect("worker died") {
+                                Ok(ds) => ds,
+                                Err(_) => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                    qs.iter().map(|_| MctDecision::no_match()).collect()
+                                }
+                            }
+                        });
+                        let ms = q0.elapsed().as_secs_f64() * 1e3;
+                        let mut s = stats.lock().unwrap();
+                        s.0.record(ms);
+                        s.1 += outcome.checked_mct_queries;
+                        s.2 += outcome.engine_calls;
+                        s.3 += outcome.valid_ts;
+                        s.4 += outcome.examined_ts;
+                    }
+                });
+            }
+        });
+        drop(wtx); // close the router; workers then engine servers drain
+        for h in worker_handles {
+            let _ = h.join();
+        }
+        for h in engine_handles {
+            let _ = h.join();
+        }
+        anyhow::ensure!(
+            errors.load(Ordering::Relaxed) == 0,
+            "{} engine calls failed",
+            errors.load(Ordering::Relaxed)
+        );
+
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut s = stats.lock().unwrap();
+        let mct_queries = s.1;
+        let de_calls = s.2;
+        let valid_ts = s.3;
+        let examined = s.4;
+        let lat = &mut s.0;
+        let _ = de_calls; // engine-side count is authoritative
+        Ok(PipelineReport {
+            topology_label: self.topology.label(),
+            user_queries: trace.queries.len(),
+            travel_solutions_examined: examined,
+            valid_travel_solutions: valid_ts,
+            mct_queries,
+            engine_calls: engine_calls.load(Ordering::Relaxed),
+            wall_ms,
+            wall_qps: mct_queries as f64 / (wall_ms / 1e3).max(1e-12),
+            modeled_kernel_us: modeled_ns.load(Ordering::Relaxed) as f64 / 1e3,
+            uq_latency_p50_ms: if lat.is_empty() { 0.0 } else { lat.p50() },
+            uq_latency_p90_ms: if lat.is_empty() { 0.0 } else { lat.p90() },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::erbium::{Backend, FpgaModel};
+    use crate::nfa::constraint_gen::HardwareConfig;
+    use crate::nfa::parser::{compile_rule_set, CompileOptions};
+    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+    use crate::rules::standard::{Schema, StandardVersion};
+    use crate::workload::{generate_trace, TraceConfig};
+
+    fn native_factory(seed: u64) -> (EngineFactory, crate::rules::types::World) {
+        let cfg = GeneratorConfig::small(seed, 400);
+        let world = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &world, StandardVersion::V2);
+        let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+        let factory: EngineFactory = Arc::new(move || {
+            ErbiumEngine::new(nfa.clone(), model, Backend::Native, 28, 64)
+        });
+        (factory, world)
+    }
+
+    #[test]
+    fn pipeline_replays_trace_completely() {
+        let (factory, world) = native_factory(301);
+        let trace = generate_trace(&TraceConfig::scaled(11, 30, 40.0), &world);
+        let p = Pipeline::new(Topology::new(4, 2, 1, 4), factory);
+        let r = p.run(&trace).unwrap();
+        assert_eq!(r.user_queries, 30);
+        assert!(r.mct_queries > 0);
+        assert!(r.engine_calls > 0);
+        assert!(r.valid_travel_solutions > 0);
+        assert!(r.modeled_kernel_us > 0.0);
+        assert!(r.uq_latency_p90_ms >= r.uq_latency_p50_ms);
+    }
+
+    #[test]
+    fn pipeline_results_match_single_threaded_de() {
+        // Threading must not change functional outcomes: compare aggregate
+        // validity counts with a single-threaded run of the same DE policy.
+        let (factory, world) = native_factory(303);
+        let trace = generate_trace(&TraceConfig::scaled(13, 12, 30.0), &world);
+        let p = Pipeline::new(Topology::new(3, 2, 2, 2), factory.clone());
+        let r = p.run(&trace).unwrap();
+
+        let engine = factory().unwrap();
+        let de = DomainExplorer::new(MctStrategy::FpgaBatched);
+        let mut valid = 0;
+        let mut checked = 0;
+        for uq in &trace.queries {
+            let o = de.process(uq, |qs| engine.evaluate_batch(qs).unwrap());
+            valid += o.valid_ts;
+            checked += o.checked_mct_queries;
+        }
+        assert_eq!(r.valid_travel_solutions, valid);
+        assert_eq!(r.mct_queries, checked);
+    }
+}

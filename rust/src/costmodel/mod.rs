@@ -1,0 +1,268 @@
+//! Deployment cost model (§6, Tables 2 and 3).
+//!
+//! Reproduces the paper's arithmetic exactly: a 400-server Domain Explorer
+//! baseline (48 vCPUs each), the MCT module consuming 40 % of it, an FPGA
+//! offload that frees 39 % of the servers (400 → 244), and the cloud
+//! imbalance problem — F1/NP instances pair a big FPGA with a small CPU, so
+//! matching the *CPU* capacity of the freed fleet needs `48/8 = 6` F1 (or
+//! `48/10` NP10s) instances per replaced server, which is what makes the
+//! cloud deployments 2.5–3× *more* expensive (§6.1).
+
+/// Hours billed per year (the paper quotes savings-plan hourly prices).
+pub const HOURS_PER_YEAR: f64 = 24.0 * 365.0;
+
+/// Share of Domain Explorer compute consumed by the MCT module (§1, §2.1).
+pub const MCT_SHARE: f64 = 0.40;
+
+/// Fraction of DE servers freed by offloading MCT (§6.1: 400 → 244).
+pub const FREED_FRACTION: f64 = 0.39;
+
+/// Baseline Domain Explorer fleet (§6.1).
+pub const DE_SERVERS: usize = 400;
+/// vCPUs per on-prem DE server / per c5.12xlarge / F48s v2.
+pub const DE_VCPUS: usize = 48;
+/// Route Scoring fleet added in Table 3 (§6.2).
+pub const RS_SERVERS: usize = 80;
+
+/// A purchasable element (server or cloud instance).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Element {
+    pub name: &'static str,
+    pub vcpus: usize,
+    /// On-prem: purchase price (USD). Cloud: hourly price (USD/h).
+    pub unit_cost: f64,
+    pub billing: Billing,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Billing {
+    /// One-off purchase (on-premises).
+    Purchase,
+    /// Hourly savings-plan price, reported per year.
+    Hourly,
+}
+
+/// Catalogue — prices as quoted in §6 (February 2021).
+pub mod catalog {
+    use super::{Billing, Element};
+
+    pub const ONPREM_CPU: Element =
+        Element { name: "CPU", vcpus: 48, unit_cost: 10_000.0, billing: Billing::Purchase };
+    pub const ONPREM_U200: Element = Element {
+        name: "CPU + Alveo U200",
+        vcpus: 48,
+        unit_cost: 20_000.0,
+        billing: Billing::Purchase,
+    };
+    pub const ONPREM_U50: Element = Element {
+        name: "CPU + Alveo U50",
+        vcpus: 48,
+        unit_cost: 13_000.0,
+        billing: Billing::Purchase,
+    };
+    pub const AWS_C5_12XL: Element =
+        Element { name: "c5.12xlarge", vcpus: 48, unit_cost: 1.452, billing: Billing::Hourly };
+    pub const AWS_F1_2XL: Element =
+        Element { name: "f1.2xlarge", vcpus: 8, unit_cost: 1.2266, billing: Billing::Hourly };
+    pub const AZURE_F48S: Element =
+        Element { name: "F48s v2", vcpus: 48, unit_cost: 1.2084, billing: Billing::Hourly };
+    pub const AZURE_NP10S: Element =
+        Element { name: "NP10s", vcpus: 10, unit_cost: 1.0411, billing: Billing::Hourly };
+}
+
+/// One row of Table 2 / Table 3.
+#[derive(Debug, Clone)]
+pub struct CostRow {
+    pub deployment: String,
+    pub element: Element,
+    pub units: usize,
+    /// Total USD (purchase) or USD/year (hourly).
+    pub total_usd: f64,
+}
+
+impl CostRow {
+    fn new(deployment: &str, element: Element, units: usize) -> CostRow {
+        let total = match element.billing {
+            Billing::Purchase => units as f64 * element.unit_cost,
+            Billing::Hourly => units as f64 * element.unit_cost * HOURS_PER_YEAR,
+        };
+        CostRow { deployment: deployment.to_string(), element, units, total_usd: total }
+    }
+
+    pub fn total_label(&self) -> String {
+        match self.element.billing {
+            Billing::Purchase => format!("{:.2} M", self.total_usd / 1e6),
+            Billing::Hourly => format!("{:.1} M/year", self.total_usd / 1e6),
+        }
+    }
+}
+
+/// Servers left after the FPGA takes over the MCT share (§6.1).
+pub fn freed_server_count(baseline: usize) -> usize {
+    (baseline as f64 * (1.0 - FREED_FRACTION)).round() as usize
+}
+
+/// Cloud units needed to preserve the *CPU* capacity of `servers` freed-
+/// fleet servers when each cloud instance only has `vcpus` vCPUs (§6.1:
+/// "we would need about 6 AWS F1 instances" per server).
+pub fn cloud_units_for_cpu_capacity(servers: usize, instance_vcpus: usize) -> usize {
+    (servers as f64 * DE_VCPUS as f64 / instance_vcpus as f64).floor() as usize
+}
+
+/// Table 2: Domain Explorer + ERBIUM (Fig 13 layout).
+pub fn table2() -> Vec<CostRow> {
+    use catalog::*;
+    let reduced = freed_server_count(DE_SERVERS); // 244
+    vec![
+        CostRow::new("On-Premises | Original Domain Explorer", ONPREM_CPU, DE_SERVERS),
+        CostRow::new("On-Premises | Domain Explorer + ERBIUM", ONPREM_U200, reduced),
+        CostRow::new("On-Premises | Domain Explorer + ERBIUM", ONPREM_U50, reduced),
+        CostRow::new("AWS | Original Domain Explorer", AWS_C5_12XL, DE_SERVERS),
+        CostRow::new(
+            "AWS | Domain Explorer + ERBIUM",
+            AWS_F1_2XL,
+            cloud_units_for_cpu_capacity(reduced, AWS_F1_2XL.vcpus),
+        ),
+        CostRow::new("Azure | Original Domain Explorer", AZURE_F48S, DE_SERVERS),
+        CostRow::new(
+            "Azure | Domain Explorer + ERBIUM",
+            AZURE_NP10S,
+            cloud_units_for_cpu_capacity(reduced, AZURE_NP10S.vcpus),
+        ),
+    ]
+}
+
+/// Table 3: Domain Explorer + ERBIUM + Route Scoring (Fig 14 layout).
+///
+/// The CPU-only fleets grow by the 80 Route Scoring servers; the FPGA
+/// fleets stay at the Table-2 sizes because both accelerated modules share
+/// the same boards (§6.2).
+pub fn table3() -> Vec<CostRow> {
+    use catalog::*;
+    let cpu_units = DE_SERVERS + RS_SERVERS; // 480
+    let reduced = freed_server_count(DE_SERVERS); // 244
+    vec![
+        CostRow::new("On-Premises | Original DE + Route Scoring", ONPREM_CPU, cpu_units),
+        CostRow::new("On-Premises | DE + ERBIUM + Route Scoring", ONPREM_U200, reduced),
+        CostRow::new("On-Premises | DE + ERBIUM + Route Scoring", ONPREM_U50, reduced),
+        CostRow::new("AWS | Original DE + Route Scoring", AWS_C5_12XL, cpu_units),
+        CostRow::new(
+            "AWS | DE + ERBIUM + Route Scoring",
+            AWS_F1_2XL,
+            cloud_units_for_cpu_capacity(reduced, AWS_F1_2XL.vcpus),
+        ),
+        CostRow::new("Azure | Original DE + Route Scoring", AZURE_F48S, cpu_units),
+        CostRow::new(
+            "Azure | DE + ERBIUM + Route Scoring",
+            AZURE_NP10S,
+            cloud_units_for_cpu_capacity(reduced, AZURE_NP10S.vcpus),
+        ),
+    ]
+}
+
+/// Cloud cost-efficiency headline from [15]: queries per US dollar when an
+/// engine saturating at `qps` runs on an instance priced `usd_per_hour`.
+pub fn queries_per_dollar(qps: f64, usd_per_hour: f64) -> f64 {
+    qps * 3600.0 / usd_per_hour
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn find<'a>(rows: &'a [CostRow], dep: &str, elem: &str) -> &'a CostRow {
+        rows.iter()
+            .find(|r| r.deployment == dep && r.element.name == elem)
+            .unwrap_or_else(|| panic!("row {dep} / {elem}"))
+    }
+
+    #[test]
+    fn table2_reproduces_paper_units() {
+        let rows = table2();
+        assert_eq!(find(&rows, "On-Premises | Original Domain Explorer", "CPU").units, 400);
+        assert_eq!(
+            find(&rows, "On-Premises | Domain Explorer + ERBIUM", "CPU + Alveo U200").units,
+            244
+        );
+        assert_eq!(find(&rows, "AWS | Domain Explorer + ERBIUM", "f1.2xlarge").units, 1464);
+        assert_eq!(find(&rows, "Azure | Domain Explorer + ERBIUM", "NP10s").units, 1171);
+    }
+
+    #[test]
+    fn table2_reproduces_paper_totals() {
+        let rows = table2();
+        let close = |got: f64, want_m: f64, tol: f64| {
+            let want = want_m * 1e6;
+            assert!((got - want).abs() / want < tol, "got {got}, want ≈{want}");
+        };
+        close(find(&rows, "On-Premises | Original Domain Explorer", "CPU").total_usd, 4.0, 0.01);
+        close(
+            find(&rows, "On-Premises | Domain Explorer + ERBIUM", "CPU + Alveo U200").total_usd,
+            4.88,
+            0.01,
+        );
+        close(
+            find(&rows, "On-Premises | Domain Explorer + ERBIUM", "CPU + Alveo U50").total_usd,
+            3.17,
+            0.01,
+        );
+        close(find(&rows, "AWS | Original Domain Explorer", "c5.12xlarge").total_usd, 5.0, 0.03);
+        close(find(&rows, "AWS | Domain Explorer + ERBIUM", "f1.2xlarge").total_usd, 15.7, 0.03);
+        close(find(&rows, "Azure | Original Domain Explorer", "F48s v2").total_usd, 4.2, 0.03);
+        close(find(&rows, "Azure | Domain Explorer + ERBIUM", "NP10s").total_usd, 10.6, 0.03);
+    }
+
+    #[test]
+    fn table3_reproduces_paper_totals() {
+        let rows = table3();
+        let close = |got: f64, want_m: f64, tol: f64| {
+            let want = want_m * 1e6;
+            assert!((got - want).abs() / want < tol, "got {got}, want ≈{want}");
+        };
+        close(
+            find(&rows, "On-Premises | Original DE + Route Scoring", "CPU").total_usd,
+            4.8,
+            0.01,
+        );
+        close(find(&rows, "AWS | Original DE + Route Scoring", "c5.12xlarge").total_usd, 6.1, 0.03);
+        close(find(&rows, "AWS | DE + ERBIUM + Route Scoring", "f1.2xlarge").total_usd, 15.7, 0.03);
+        close(find(&rows, "Azure | Original DE + Route Scoring", "F48s v2").total_usd, 5.0, 0.03);
+        close(find(&rows, "Azure | DE + ERBIUM + Route Scoring", "NP10s").total_usd, 10.6, 0.03);
+    }
+
+    #[test]
+    fn cloud_fpga_cost_blowup_matches_paper_discussion() {
+        // §6.1: "3x for AWS, and 2.5x for Azure" over the CPU-only design.
+        let rows = table2();
+        let aws_cpu = find(&rows, "AWS | Original Domain Explorer", "c5.12xlarge").total_usd;
+        let aws_fpga = find(&rows, "AWS | Domain Explorer + ERBIUM", "f1.2xlarge").total_usd;
+        let ratio = aws_fpga / aws_cpu;
+        assert!((2.8..3.4).contains(&ratio), "AWS blow-up {ratio}");
+        let az_cpu = find(&rows, "Azure | Original Domain Explorer", "F48s v2").total_usd;
+        let az_fpga = find(&rows, "Azure | Domain Explorer + ERBIUM", "NP10s").total_usd;
+        let ratio = az_fpga / az_cpu;
+        assert!((2.3..2.8).contains(&ratio), "Azure blow-up {ratio}");
+    }
+
+    #[test]
+    fn only_u50_beats_cpu_on_prem() {
+        // §6.1: "on-premises, the new design is only cost-effective when
+        // using a smaller FPGA".
+        let rows = table2();
+        let cpu = find(&rows, "On-Premises | Original Domain Explorer", "CPU").total_usd;
+        let u200 =
+            find(&rows, "On-Premises | Domain Explorer + ERBIUM", "CPU + Alveo U200").total_usd;
+        let u50 =
+            find(&rows, "On-Premises | Domain Explorer + ERBIUM", "CPU + Alveo U50").total_usd;
+        assert!(u200 > cpu);
+        assert!(u50 < cpu);
+    }
+
+    #[test]
+    fn queries_per_dollar_is_in_billions() {
+        // [15]: ~60 G queries/$ in the cloud; our v2 model at 32 M q/s on
+        // f1.2xlarge lands in the same order of magnitude.
+        let qpd = queries_per_dollar(32e6, catalog::AWS_F1_2XL.unit_cost);
+        assert!(qpd > 1e10 && qpd < 3e11, "qpd {qpd}");
+    }
+}

@@ -1,0 +1,379 @@
+//! The optimised CPU MCT implementation — the baseline of §5.2.
+//!
+//! The paper compares the FPGA flow against "a brand new, refactored and
+//! optimised version tailored for the MCT v2 use case", which introduces the
+//! CPU optimisations of [15] "as well as some cache mechanisms for selected
+//! airports". This module is that baseline:
+//!
+//! * the primary evaluation path is a **shared-prefix rule trie** — the
+//!   [15] CPU optimisation the refactored version inherits (the same
+//!   compiled NFA the accelerator uses, walked sparsely on the CPU);
+//! * a direct-mapped **result cache** serves the hottest airports (keyed
+//!   on the query's discriminating fields), modelling the paper's "cache
+//!   mechanisms for selected airports" — real schedules make hot
+//!   connections recur, so this is the dominant hit path;
+//! * a precision-sorted **linear scan with early termination** is kept as
+//!   [`CpuBaseline::evaluate_scan`], both as an independent correctness
+//!   cross-check and as the ablation baseline (pre-[15] CPU flow).
+
+use std::collections::HashMap;
+
+use crate::rules::standard::{
+    effective_exact, effective_range, query_exact, query_range_value, rule_weight, Schema,
+};
+use crate::rules::types::{ExactSlot, MctDecision, MctQuery, RangeSlot, Rule, RuleSet, WILDCARD};
+
+/// Number of hottest airports that get a result cache.
+const CACHED_AIRPORTS: usize = 64;
+/// Per-airport cache slots (direct-mapped).
+const CACHE_SLOTS: usize = 8192;
+
+/// A rule compiled to its effective non-wildcard checks — the fail-fast
+/// representation the production C++ implementation uses instead of
+/// re-inspecting every declared field per query.
+struct IndexedRule {
+    /// Effective exact checks (station excluded — the index covers it).
+    exact_checks: Vec<(ExactSlot, u32)>,
+    /// Effective non-full range checks.
+    range_checks: Vec<(RangeSlot, u32, u32)>,
+    id: u32,
+    decision_min: u16,
+    weight: f32,
+}
+
+impl IndexedRule {
+    fn compile(schema: &Schema, rule: &Rule) -> IndexedRule {
+        let mut exact_checks = Vec::new();
+        for (i, slot) in schema.exact_slots.iter().enumerate() {
+            if *slot == ExactSlot::Station {
+                continue;
+            }
+            let v = effective_exact(schema, rule, i);
+            if v != WILDCARD {
+                exact_checks.push((*slot, v));
+            }
+        }
+        let mut range_checks = Vec::new();
+        for (i, slot) in schema.range_slots.iter().enumerate() {
+            let (lo, hi) = effective_range(schema, rule, i);
+            if (lo, hi) != Schema::full_range(*slot) {
+                range_checks.push((*slot, lo, hi));
+            }
+        }
+        IndexedRule {
+            exact_checks,
+            range_checks,
+            id: rule.id,
+            decision_min: rule.decision_min,
+            weight: rule_weight(schema, rule),
+        }
+    }
+
+    #[inline]
+    fn matches(&self, q: &MctQuery) -> bool {
+        for &(slot, v) in &self.exact_checks {
+            if query_exact(slot, q) != v {
+                return false;
+            }
+        }
+        for &(slot, lo, hi) in &self.range_checks {
+            let x = query_range_value(slot, q);
+            if x < lo || x > hi {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+struct AirportCache {
+    /// slot → (key, decision); key 0 = empty.
+    slots: Vec<(u64, MctDecision)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl AirportCache {
+    fn new() -> Self {
+        AirportCache {
+            slots: vec![(0, MctDecision::no_match()); CACHE_SLOTS],
+            hits: 0,
+            misses: 0,
+        }
+    }
+}
+
+/// The optimised CPU rule engine.
+pub struct CpuBaseline {
+    #[allow(dead_code)] // kept: identifies the standard the index was built for
+    schema: Schema,
+    /// station → precision-sorted rules (scan path).
+    by_station: HashMap<u32, Vec<IndexedRule>>,
+    /// Wildcard-station rules (consulted by every query).
+    global: Vec<IndexedRule>,
+    /// station → cache (hottest airports only).
+    caches: std::sync::Mutex<HashMap<u32, AirportCache>>,
+    /// The [15]-style trie path: compiled rule set + sparse walker.
+    trie: crate::erbium::NativeEvaluator,
+    trie_encoder: crate::encoder::QueryEncoder,
+}
+
+/// Cache statistics (for EXPERIMENTS.md and the fig12 bench).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CpuBaseline {
+    pub fn new(schema: Schema, rs: &RuleSet) -> CpuBaseline {
+        assert_eq!(schema.version, rs.version);
+        let station_idx = schema
+            .exact_index(crate::rules::types::ExactSlot::Station)
+            .expect("station slot");
+        let mut by_station: HashMap<u32, Vec<IndexedRule>> = HashMap::new();
+        let mut global = Vec::new();
+        for rule in &rs.rules {
+            let ir = IndexedRule::compile(&schema, rule);
+            match rule.exact[station_idx] {
+                WILDCARD => global.push(ir),
+                st => by_station.entry(st).or_default().push(ir),
+            }
+        }
+        // Descending precision; ties ascending id — the first surviving
+        // match wins outright.
+        let sort = |v: &mut Vec<IndexedRule>| {
+            v.sort_by(|a, b| {
+                b.weight
+                    .partial_cmp(&a.weight)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.id.cmp(&b.id))
+            })
+        };
+        for v in by_station.values_mut() {
+            sort(v);
+        }
+        sort(&mut global);
+        // Hottest airports by rule count get caches.
+        let mut hottest: Vec<(u32, usize)> =
+            by_station.iter().map(|(k, v)| (*k, v.len())).collect();
+        hottest.sort_by_key(|(_, n)| std::cmp::Reverse(*n));
+        let caches = hottest
+            .into_iter()
+            .take(CACHED_AIRPORTS)
+            .map(|(st, _)| (st, AirportCache::new()))
+            .collect();
+        // The trie path reuses the NFA compiler (same shared-prefix
+        // structure [15] built for the CPU, S capped higher since there is
+        // no hardware width limit here).
+        let (nfa, _) = crate::nfa::parser::compile_rule_set(
+            &schema,
+            rs,
+            &crate::nfa::parser::CompileOptions {
+                // No hardware width bound on the CPU: one trie per station
+                // maximises prefix sharing and gives a single walk/query.
+                max_states_per_level: 1 << 20,
+                ..Default::default()
+            },
+        );
+        let trie_encoder = crate::encoder::QueryEncoder::new(&nfa.plan, nfa.plan.len());
+        let trie = crate::erbium::NativeEvaluator::new(nfa);
+        CpuBaseline {
+            schema,
+            by_station,
+            global,
+            caches: std::sync::Mutex::new(caches),
+            trie,
+            trie_encoder,
+        }
+    }
+
+    /// Key used by the airport caches: the discriminating query fields. Two
+    /// queries with equal keys are MCT-equivalent by construction (every
+    /// rule criterion value is derived from these fields).
+    fn cache_key(q: &MctQuery) -> u64 {
+        // FNV-1a over the full query struct fields.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        };
+        mix(q.arr_terminal as u64 | (q.dep_terminal as u64) << 8);
+        mix(q.arr_region as u64 | (q.dep_region as u64) << 8);
+        mix(q.day_of_week as u64 | (q.season as u64) << 8);
+        mix(q.arr_aircraft as u64 | (q.dep_aircraft as u64) << 16);
+        mix(q.conn_type as u64);
+        mix(q.prev_station as u64 | (q.next_station as u64) << 24);
+        mix(q.arr_service as u64 | (q.dep_service as u64) << 8);
+        mix(q.arr_carrier_mkt as u64 | (q.arr_carrier_op as u64) << 24);
+        mix(q.dep_carrier_mkt as u64 | (q.dep_carrier_op as u64) << 24);
+        mix(q.arr_flight_mkt as u64 | (q.arr_flight_op as u64) << 24);
+        mix(q.dep_flight_mkt as u64 | (q.dep_flight_op as u64) << 24);
+        mix(q.date as u64 | (q.arr_time as u64) << 16 | (q.dep_time as u64) << 32);
+        mix(q.capacity as u64 | (q.arr_codeshare as u64) << 16 | (q.dep_codeshare as u64) << 17);
+        h | 1 // never 0 (0 marks an empty slot)
+    }
+
+    fn scan(&self, rules: &[IndexedRule], q: &MctQuery, best: &mut MctDecision) {
+        for ir in rules {
+            // Early termination: precision-sorted, so once the best found
+            // weight can no longer be beaten, stop.
+            if best.matched() && ir.weight < best.weight {
+                break;
+            }
+            if best.matched() && ir.weight == best.weight && ir.id > best.rule_id {
+                continue;
+            }
+            if ir.matches(q) {
+                *best = MctDecision {
+                    minutes: ir.decision_min,
+                    weight: ir.weight,
+                    rule_id: ir.id,
+                };
+                break; // nothing later can beat a match at this weight order
+            }
+        }
+    }
+
+    fn evaluate_uncached(&self, q: &MctQuery) -> MctDecision {
+        let mut enc = [0i32; 32];
+        let l = self.trie_encoder.depth();
+        self.trie_encoder.encode_into(q, &mut enc[..l]);
+        self.trie.evaluate_encoded(q.station, &enc[..l])
+    }
+
+    /// The pre-[15] flow: precision-sorted linear scan with early
+    /// termination (ablation baseline; also an independent oracle).
+    pub fn evaluate_scan(&self, q: &MctQuery) -> MctDecision {
+        let mut best = MctDecision::no_match();
+        if let Some(rules) = self.by_station.get(&q.station) {
+            self.scan(rules, q, &mut best);
+        }
+        // The global pool may still contain a more precise rule.
+        let mut gbest = MctDecision::no_match();
+        self.scan(&self.global, q, &mut gbest);
+        if gbest.matched()
+            && (!best.matched()
+                || gbest.weight > best.weight
+                || (gbest.weight == best.weight && gbest.rule_id < best.rule_id))
+        {
+            best = gbest;
+        }
+        best
+    }
+
+    /// Evaluate one MCT query.
+    pub fn evaluate(&self, q: &MctQuery) -> MctDecision {
+        let key = Self::cache_key(q);
+        let mut caches = self.caches.lock().unwrap();
+        if let Some(cache) = caches.get_mut(&q.station) {
+            let slot = (key as usize) % CACHE_SLOTS;
+            let (k, d) = cache.slots[slot];
+            if k == key {
+                cache.hits += 1;
+                return d;
+            }
+            cache.misses += 1;
+            drop(caches);
+            let d = self.evaluate_uncached(q);
+            let mut caches = self.caches.lock().unwrap();
+            if let Some(cache) = caches.get_mut(&q.station) {
+                cache.slots[slot] = (key, d);
+            }
+            return d;
+        }
+        drop(caches);
+        self.evaluate_uncached(q)
+    }
+
+    /// Evaluate a batch (the CPU needs no batching — §5.1 — but the API
+    /// mirrors the engine's for the comparison harness).
+    pub fn evaluate_batch(&self, queries: &[MctQuery]) -> Vec<MctDecision> {
+        queries.iter().map(|q| self.evaluate(q)).collect()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        let caches = self.caches.lock().unwrap();
+        let mut s = CacheStats::default();
+        for c in caches.values() {
+            s.hits += c.hits;
+            s.misses += c.misses;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+    use crate::rules::standard::{evaluate_ruleset, StandardVersion};
+    use crate::workload::random_query;
+
+    fn setup(v: StandardVersion, seed: u64, n: usize) -> (Schema, RuleSet, CpuBaseline, GeneratorConfig) {
+        let cfg = GeneratorConfig::small(seed, n);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(v);
+        let rs = generate_rule_set(&cfg, &w, v);
+        let cpu = CpuBaseline::new(schema.clone(), &rs);
+        (schema, rs, cpu, cfg)
+    }
+
+    #[test]
+    fn baseline_agrees_with_oracle() {
+        for v in [StandardVersion::V1, StandardVersion::V2] {
+            let (schema, rs, cpu, cfg) = setup(v, 101, 500);
+            let w = generate_world(&cfg);
+            let mut rng = Rng::new(7);
+            for _ in 0..300 {
+                let st = rng.index(cfg.n_airports) as u32;
+                let q = random_query(&mut rng, &w, st);
+                let want = evaluate_ruleset(&schema, &rs, &q);
+                let got = cpu.evaluate(&q);
+                assert_eq!(got.rule_id, want.rule_id, "{v:?}");
+                assert_eq!(got.minutes, want.minutes);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_serves_repeats() {
+        let (_, _, cpu, cfg) = setup(StandardVersion::V2, 103, 300);
+        let w = generate_world(&cfg);
+        // Hottest airport is station 0 under zipf skew.
+        let q = crate::workload::query_for_station(&w, 0, 5);
+        let first = cpu.evaluate(&q);
+        let again = cpu.evaluate(&q);
+        assert_eq!(first, again);
+        let s = cpu.cache_stats();
+        assert!(s.hits >= 1, "repeat query must hit the cache: {s:?}");
+    }
+
+    #[test]
+    fn trie_path_agrees_with_scan_path() {
+        let (_, _, cpu, cfg) = setup(StandardVersion::V2, 109, 400);
+        let w = generate_world(&cfg);
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let st = rng.index(cfg.n_airports) as u32;
+            let q = random_query(&mut rng, &w, st);
+            let a = cpu.evaluate_uncached(&q);
+            let b = cpu.evaluate_scan(&q);
+            assert_eq!(a.rule_id, b.rule_id);
+            assert_eq!(a.minutes, b.minutes);
+        }
+    }
+
+    #[test]
+    fn batch_equals_pointwise() {
+        let (_, _, cpu, cfg) = setup(StandardVersion::V1, 107, 200);
+        let w = generate_world(&cfg);
+        let mut rng = Rng::new(9);
+        let queries: Vec<_> = (0..50).map(|_| random_query(&mut rng, &w, 1)).collect();
+        let batch = cpu.evaluate_batch(&queries);
+        for (q, b) in queries.iter().zip(&batch) {
+            assert_eq!(*b, cpu.evaluate(q));
+        }
+    }
+}

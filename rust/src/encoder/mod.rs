@@ -1,0 +1,230 @@
+//! The ERBIUM Encoder (§4.1): adapts the software data representation to
+//! the format the accelerator consumes.
+//!
+//! Two halves:
+//!
+//! * [`Dictionary`] / [`WorldDicts`] — dictionary encoding of symbolic
+//!   values (airport/carrier/… codes → dense ids), "to reduce both the
+//!   storage requirement and the online data movement";
+//! * [`QueryEncoder`] — the hot-path flattening of an [`MctQuery`] into the
+//!   `[i32; L]` level-ordered vector the NFA kernel expects. This runs once
+//!   per query inside the MCT Wrapper workers, pipelined with the previous
+//!   batch's kernel execution (§4.1), and is deliberately allocation-free in
+//!   its batch form — Fig 6 shows the encoder is a dominant cost at large
+//!   batch sizes, so it is also a §Perf optimisation target.
+
+use std::collections::HashMap;
+
+use crate::nfa::model::LevelPlan;
+use crate::rules::standard::{query_exact, query_range_value, Consolidated};
+use crate::rules::types::{MctQuery, World};
+
+/// One symbol table (string ⇄ dense id).
+#[derive(Debug, Clone, Default)]
+pub struct Dictionary {
+    map: HashMap<String, u32>,
+    rev: Vec<String>,
+}
+
+impl Dictionary {
+    pub fn from_values(values: &[String]) -> Dictionary {
+        let mut d = Dictionary::default();
+        for v in values {
+            d.intern(v);
+        }
+        d
+    }
+
+    /// Insert (or find) a symbol, returning its id.
+    pub fn intern(&mut self, v: &str) -> u32 {
+        if let Some(&id) = self.map.get(v) {
+            return id;
+        }
+        let id = self.rev.len() as u32;
+        self.map.insert(v.to_string(), id);
+        self.rev.push(v.to_string());
+        id
+    }
+
+    pub fn id(&self, v: &str) -> Option<u32> {
+        self.map.get(v).copied()
+    }
+
+    pub fn symbol(&self, id: u32) -> Option<&str> {
+        self.rev.get(id as usize).map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rev.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rev.is_empty()
+    }
+}
+
+/// All symbol tables of a [`World`] (the reference data the production
+/// encoder keeps warm per worker).
+#[derive(Debug, Clone)]
+pub struct WorldDicts {
+    pub airports: Dictionary,
+    pub carriers: Dictionary,
+    pub terminals: Dictionary,
+    pub regions: Dictionary,
+    pub aircraft: Dictionary,
+    pub services: Dictionary,
+    pub conn_types: Dictionary,
+    pub seasons: Dictionary,
+}
+
+impl WorldDicts {
+    pub fn from_world(w: &World) -> WorldDicts {
+        WorldDicts {
+            airports: Dictionary::from_values(&w.airports),
+            carriers: Dictionary::from_values(&w.carriers),
+            terminals: Dictionary::from_values(&w.terminals),
+            regions: Dictionary::from_values(&w.regions),
+            aircraft: Dictionary::from_values(&w.aircraft),
+            services: Dictionary::from_values(&w.services),
+            conn_types: Dictionary::from_values(&w.conn_types),
+            seasons: Dictionary::from_values(&w.seasons),
+        }
+    }
+}
+
+/// Hot-path query encoder for a fixed level plan.
+#[derive(Debug, Clone)]
+pub struct QueryEncoder {
+    /// Per padded level: how to extract the value (None = padding level).
+    extractors: Vec<Option<Consolidated>>,
+}
+
+impl QueryEncoder {
+    /// Build an encoder for a compiled plan, padded to artifact depth `l`.
+    pub fn new(plan: &[LevelPlan], l: usize) -> QueryEncoder {
+        assert!(plan.len() <= l, "plan deeper than artifact");
+        let mut extractors: Vec<Option<Consolidated>> =
+            plan.iter().map(|p| Some(p.criterion)).collect();
+        extractors.resize(l, None);
+        QueryEncoder { extractors }
+    }
+
+    /// Padded depth `L`.
+    pub fn depth(&self) -> usize {
+        self.extractors.len()
+    }
+
+    /// Encode one query into `out[..L]` (must be sized `L`).
+    #[inline]
+    pub fn encode_into(&self, q: &MctQuery, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), self.extractors.len());
+        for (o, ex) in out.iter_mut().zip(&self.extractors) {
+            *o = match ex {
+                None => 0,
+                Some(Consolidated::Exact(slot)) => query_exact(*slot, q) as i32,
+                Some(
+                    Consolidated::Range(slot)
+                    | Consolidated::RangeMin(slot)
+                    | Consolidated::RangeMax(slot),
+                ) => query_range_value(*slot, q) as i32,
+            };
+        }
+    }
+
+    /// Encode one query, allocating.
+    pub fn encode(&self, q: &MctQuery) -> Vec<i32> {
+        let mut out = vec![0i32; self.depth()];
+        self.encode_into(q, &mut out);
+        out
+    }
+
+    /// Encode a batch row-major into `out` (resized to `n × L`), padding the
+    /// tail with repeats of the last query (the kernel batch is fixed-size;
+    /// repeats are cheap and results beyond `queries.len()` are discarded).
+    pub fn encode_batch(&self, queries: &[MctQuery], batch: usize, out: &mut Vec<i32>) {
+        assert!(!queries.is_empty() && queries.len() <= batch);
+        let l = self.depth();
+        out.resize(batch * l, 0);
+        for (i, q) in queries.iter().enumerate() {
+            self.encode_into(q, &mut out[i * l..(i + 1) * l]);
+        }
+        // Pad with the last row.
+        let last = (queries.len() - 1) * l;
+        let (head, tail) = out.split_at_mut(queries.len() * l);
+        let src = &head[last..last + l];
+        for row in tail.chunks_mut(l) {
+            row.copy_from_slice(src);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nfa::optimiser::OrderStrategy;
+    use crate::nfa::parser::{compile_rule_set, CompileOptions};
+    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+    use crate::rules::standard::{Schema, StandardVersion};
+    use crate::workload::query_for_station;
+
+    #[test]
+    fn dictionary_roundtrip() {
+        let mut d = Dictionary::default();
+        let zrh = d.intern("ZRH");
+        let cdg = d.intern("CDG");
+        assert_ne!(zrh, cdg);
+        assert_eq!(d.intern("ZRH"), zrh);
+        assert_eq!(d.id("CDG"), Some(cdg));
+        assert_eq!(d.symbol(zrh), Some("ZRH"));
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn world_dicts_are_bijective() {
+        let w = generate_world(&GeneratorConfig::small(61, 10));
+        let d = WorldDicts::from_world(&w);
+        for (i, code) in w.airports.iter().enumerate() {
+            assert_eq!(d.airports.id(code), Some(i as u32));
+            assert_eq!(d.airports.symbol(i as u32), Some(code.as_str()));
+        }
+    }
+
+    #[test]
+    fn encode_respects_plan_order() {
+        let cfg = GeneratorConfig::small(63, 200);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let (p, _) = compile_rule_set(
+            &schema,
+            &rs,
+            &CompileOptions { strategy: OrderStrategy::Optimised, ..Default::default() },
+        );
+        let enc = QueryEncoder::new(&p.plan, 28);
+        let q = query_for_station(&w, 5, 7);
+        let v = enc.encode(&q);
+        assert_eq!(v.len(), 28);
+        // Level 0 is always Station.
+        assert_eq!(v[0], 5);
+        // Padding levels are zero.
+        assert_eq!(v[26], 0);
+        assert_eq!(v[27], 0);
+    }
+
+    #[test]
+    fn encode_batch_pads_with_last_row() {
+        let cfg = GeneratorConfig::small(65, 100);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V1);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V1);
+        let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let enc = QueryEncoder::new(&p.plan, 28);
+        let qs: Vec<_> = (0..3).map(|i| query_for_station(&w, i, i as u64)).collect();
+        let mut out = Vec::new();
+        enc.encode_batch(&qs, 8, &mut out);
+        assert_eq!(out.len(), 8 * 28);
+        let row = |i: usize| &out[i * 28..(i + 1) * 28];
+        assert_eq!(row(3), row(2));
+        assert_eq!(row(7), row(2));
+        assert_ne!(row(0), row(2));
+    }
+}

@@ -1,0 +1,282 @@
+//! The Host Executor (§3.1): owns the compiled NFA partitions, loads them
+//! into the accelerator, routes and batches MCT queries, and merges
+//! per-partition results into final decisions.
+//!
+//! Two interchangeable backends evaluate the same compiled images:
+//!
+//! * [`Backend::Xla`] — the real accelerator path: AOT artifact executed via
+//!   PJRT, partition images uploaded once and cached (the paper's "loading
+//!   the NFA into the FPGA internal memory").
+//! * [`Backend::Native`] — the sparse functional simulator, bit-exact with
+//!   the XLA path and much faster on CPU; used for bulk figure sweeps.
+//!
+//! Hardware-model timing ([`FpgaModel`]) is attached per *logical* batch —
+//! the modeled board holds the entire NFA (as the real FPGA does), so the
+//! partition-at-a-time execution strategy of the CPU stand-in does not leak
+//! into modeled time.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::encoder::QueryEncoder;
+use crate::nfa::memory::NfaImage;
+use crate::nfa::model::PartitionedNfa;
+use crate::runtime::{DeviceImage, NfaExecutable, Runtime};
+use crate::rules::types::{MctDecision, MctQuery};
+
+use super::hw_model::{BatchTiming, FpgaModel};
+use super::native::NativeEvaluator;
+
+/// Which implementation computes the answers.
+#[derive(Clone)]
+pub enum Backend {
+    /// Sparse functional simulator.
+    Native,
+    /// AOT XLA artifact through the PJRT runtime.
+    Xla { runtime: Arc<Runtime>, batch_hint: usize },
+}
+
+struct XlaState {
+    runtime: Arc<Runtime>,
+    /// Largest-batch variant (used for chunking bounds).
+    exe: Arc<NfaExecutable>,
+    /// partition index → uploaded device image.
+    images: Mutex<HashMap<usize, Arc<DeviceImage>>>,
+}
+
+/// The ERBIUM engine: compiled rule set + backend + datapath model.
+pub struct ErbiumEngine {
+    nfa: Arc<PartitionedNfa>,
+    encoder: QueryEncoder,
+    native: NativeEvaluator,
+    xla: Option<XlaState>,
+    model: FpgaModel,
+    /// Artifact depth (padded L).
+    l_pad: usize,
+    s_pad: usize,
+}
+
+impl ErbiumEngine {
+    /// Build an engine over a compiled rule set.
+    ///
+    /// `model` supplies the hardware-model clock; `(l_pad, s_pad)` must
+    /// match the artifact variant when the XLA backend is used.
+    pub fn new(
+        nfa: PartitionedNfa,
+        model: FpgaModel,
+        backend: Backend,
+        l_pad: usize,
+        s_pad: usize,
+    ) -> Result<ErbiumEngine> {
+        let nfa = Arc::new(nfa);
+        let encoder = QueryEncoder::new(&nfa.plan, l_pad);
+        let native = NativeEvaluator::new((*nfa).clone());
+        let xla = match backend {
+            Backend::Native => None,
+            Backend::Xla { runtime, batch_hint } => {
+                let spec = runtime
+                    .pick_variant(batch_hint, s_pad, l_pad)
+                    .ok_or_else(|| anyhow!("no artifact variant for s={s_pad} l={l_pad}"))?
+                    .clone();
+                let exe = runtime.load(&spec.name)?;
+                Some(XlaState { runtime, exe, images: Mutex::new(HashMap::new()) })
+            }
+        };
+        Ok(ErbiumEngine { nfa, encoder, native, xla, model, l_pad, s_pad })
+    }
+
+    pub fn nfa(&self) -> &PartitionedNfa {
+        &self.nfa
+    }
+    pub fn model(&self) -> &FpgaModel {
+        &self.model
+    }
+    pub fn encoder(&self) -> &QueryEncoder {
+        &self.encoder
+    }
+    pub fn is_xla(&self) -> bool {
+        self.xla.is_some()
+    }
+    /// Kernel batch capacity of the XLA backend (native: unbounded, returns
+    /// a conventional 1 Mi).
+    pub fn kernel_batch(&self) -> usize {
+        self.xla.as_ref().map(|x| x.exe.spec.batch).unwrap_or(1 << 20)
+    }
+
+    fn device_image(&self, xla: &XlaState, pi: usize) -> Result<Arc<DeviceImage>> {
+        if let Some(img) = xla.images.lock().unwrap().get(&pi) {
+            return Ok(img.clone());
+        }
+        let img = NfaImage::from_compiled(&self.nfa.partitions[pi], self.l_pad, self.s_pad)?;
+        let dev = Arc::new(xla.runtime.upload_image(&img)?);
+        xla.images.lock().unwrap().insert(pi, dev.clone());
+        Ok(dev)
+    }
+
+    /// Evaluate a batch of MCT queries, returning one decision per query
+    /// (same order). This is the *functional* call — wall-clock time here is
+    /// CPU stand-in time, not FPGA time; see [`Self::evaluate_batch_timed`].
+    pub fn evaluate_batch(&self, queries: &[MctQuery]) -> Result<Vec<MctDecision>> {
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        match &self.xla {
+            None => Ok(self.evaluate_native(queries)),
+            Some(x) => self.evaluate_xla(x, queries),
+        }
+    }
+
+    /// Evaluate and attach the hardware-model timing for the whole batch —
+    /// the board holds the full NFA, so one logical invocation covers all
+    /// queries regardless of how the stand-in partitions the work.
+    pub fn evaluate_batch_timed(
+        &self,
+        queries: &[MctQuery],
+    ) -> Result<(Vec<MctDecision>, BatchTiming)> {
+        let out = self.evaluate_batch(queries)?;
+        Ok((out, self.model.batch_timing(queries.len())))
+    }
+
+    fn evaluate_native(&self, queries: &[MctQuery]) -> Vec<MctDecision> {
+        let mut enc = vec![0i32; self.encoder.depth()];
+        queries
+            .iter()
+            .map(|q| {
+                self.encoder.encode_into(q, &mut enc);
+                self.native.evaluate_encoded(q.station, &enc)
+            })
+            .collect()
+    }
+
+    fn evaluate_xla(&self, xla: &XlaState, queries: &[MctQuery]) -> Result<Vec<MctDecision>> {
+        let mut out = vec![MctDecision::no_match(); queries.len()];
+        // Group query indices by partition (station partitions + global).
+        let mut by_partition: HashMap<usize, Vec<usize>> = HashMap::new();
+        for (qi, q) in queries.iter().enumerate() {
+            for pi in self.nfa.partitions_for(q.station) {
+                by_partition.entry(pi).or_default().push(qi);
+            }
+        }
+        let b = xla.exe.spec.batch;
+        let mut enc_buf: Vec<i32> = Vec::new();
+        let mut batch: Vec<MctQuery> = Vec::with_capacity(b);
+        let mut idxs: Vec<usize> = Vec::with_capacity(b);
+        let mut parts: Vec<usize> = by_partition.keys().copied().collect();
+        parts.sort_unstable();
+        for pi in parts {
+            let dev = self.device_image(xla, pi)?;
+            let qidx = &by_partition[&pi];
+            for chunk in qidx.chunks(b) {
+                batch.clear();
+                idxs.clear();
+                for &qi in chunk {
+                    batch.push(queries[qi]);
+                    idxs.push(qi);
+                }
+                // Small partition groups run on the smallest fitting
+                // artifact variant — the dense kernel's cost is linear in
+                // its static batch, so padding 7 queries to 1 024 rows
+                // would dominate the whole call.
+                let exe = match xla
+                    .runtime
+                    .pick_variant(chunk.len(), self.s_pad, self.l_pad)
+                {
+                    Some(spec) if spec.batch < b => xla.runtime.load(&spec.name)?,
+                    _ => xla.exe.clone(),
+                };
+                let vb = exe.spec.batch;
+                self.encoder.encode_batch(&batch, vb, &mut enc_buf);
+                let res = exe.execute(&enc_buf, &dev)?;
+                for (row, &qi) in idxs.iter().enumerate() {
+                    if res.matched[row] <= 0.0 {
+                        continue;
+                    }
+                    let state = res.best[row] as usize;
+                    let rid = dev.rule_ids.get(state).copied().unwrap_or(u32::MAX);
+                    if rid == u32::MAX {
+                        continue;
+                    }
+                    let w = res.weight[row];
+                    let cur = &mut out[qi];
+                    let better = !cur.matched()
+                        || w > cur.weight
+                        || (w == cur.weight && rid < cur.rule_id);
+                    if better {
+                        *cur = MctDecision {
+                            minutes: res.decision[row] as u16,
+                            weight: w,
+                            rule_id: rid,
+                        };
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nfa::constraint_gen::HardwareConfig;
+    use crate::nfa::parser::{compile_rule_set, CompileOptions};
+    use crate::prng::Rng;
+    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+    use crate::rules::standard::{evaluate_ruleset, Schema, StandardVersion};
+    use crate::workload::random_query;
+
+    #[test]
+    fn native_backend_agrees_with_oracle_via_engine() {
+        let cfg = GeneratorConfig::small(91, 400);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let (p, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+        let eng = ErbiumEngine::new(p, model, Backend::Native, 28, 64).unwrap();
+        let mut rng = Rng::new(17);
+        let queries: Vec<_> =
+            (0..200)
+            .map(|_| {
+                let st = rng.index(cfg.n_airports) as u32;
+                random_query(&mut rng, &w, st)
+            })
+            .collect();
+        let got = eng.evaluate_batch(&queries).unwrap();
+        for (q, g) in queries.iter().zip(&got) {
+            let want = evaluate_ruleset(&schema, &rs, q);
+            assert_eq!(g.rule_id, want.rule_id);
+            assert_eq!(g.minutes, want.minutes);
+        }
+    }
+
+    #[test]
+    fn timed_evaluation_reports_model_clock() {
+        let cfg = GeneratorConfig::small(93, 100);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V1);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V1);
+        let (p, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let model = FpgaModel::new(HardwareConfig::v1_onprem(4), stats.depth);
+        let eng = ErbiumEngine::new(p, model, Backend::Native, 28, 64).unwrap();
+        let mut rng = Rng::new(3);
+        let queries: Vec<_> = (0..64).map(|_| random_query(&mut rng, &w, 0)).collect();
+        let (out, t) = eng.evaluate_batch_timed(&queries).unwrap();
+        assert_eq!(out.len(), 64);
+        assert!(t.total_us > 0.0);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let cfg = GeneratorConfig::small(95, 50);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V1);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V1);
+        let (p, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let model = FpgaModel::new(HardwareConfig::v1_onprem(1), stats.depth);
+        let eng = ErbiumEngine::new(p, model, Backend::Native, 28, 64).unwrap();
+        assert!(eng.evaluate_batch(&[]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! The ERBIUM online engine (§3.1 second group): the Host Executor, the
+//! hardware kernel backends, and the FPGA datapath cost model.
+//!
+//! * [`native`] — sparse functional simulator of the NFA kernel (bit-set
+//!   active-state propagation). Bit-exact with the XLA path; used for bulk
+//!   sweeps and as the cross-check oracle.
+//! * [`engine`] — the Host Executor facade: owns the compiled images, routes
+//!   queries to partitions, batches, and dispatches to a backend
+//!   (XLA artifact via PJRT, or native).
+//! * [`hw_model`] — the calibrated FPGA datapath cost model (shell latency,
+//!   PCIe bandwidth, pipeline fill, clock) producing the *hardware-model
+//!   clock* of DESIGN.md §Dual-clock.
+
+pub mod engine;
+pub mod hw_model;
+pub mod native;
+
+pub use engine::{Backend, ErbiumEngine};
+pub use hw_model::{BatchTiming, FpgaModel};
+pub use native::NativeEvaluator;

@@ -1,0 +1,278 @@
+//! Native (sparse) NFA evaluator: the functional simulator of the hardware
+//! kernel.
+//!
+//! Semantically identical to the dense XLA path (`python/compile/model.py` /
+//! [`crate::nfa::memory::NfaImage::evaluate_scalar`]) but works on the sparse
+//! [`CompiledNfa`] with bit-set active states, which makes it fast enough to
+//! replay the full production trace (Fig 12) and to serve as the oracle in
+//! cross-layer tests.
+
+use crate::nfa::model::{CompiledNfa, PartitionedNfa};
+use crate::rules::types::MctDecision;
+
+/// Dynamically-sized bit set over NFA states (width decided per
+/// partition, so the CPU-side trie is not constrained by the hardware's
+/// `S` bound).
+#[derive(Clone)]
+struct BitSet {
+    w: Vec<u64>,
+}
+
+impl BitSet {
+    #[inline]
+    fn empty(width: usize) -> Self {
+        BitSet { w: vec![0; width.div_ceil(64).max(1)] }
+    }
+    #[inline]
+    fn clear(&mut self) {
+        self.w.iter_mut().for_each(|x| *x = 0);
+    }
+    #[inline]
+    fn set(&mut self, i: u32) {
+        self.w[(i >> 6) as usize] |= 1u64 << (i & 63);
+    }
+    #[inline]
+    #[cfg(test)]
+    fn get(&self, i: u32) -> bool {
+        self.w[(i >> 6) as usize] & (1u64 << (i & 63)) != 0
+    }
+    #[inline]
+    #[cfg(test)]
+    fn is_empty(&self) -> bool {
+        self.w.iter().all(|&x| x == 0)
+    }
+    /// Iterate set bits.
+    fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.w.iter().enumerate().flat_map(|(bi, &word)| {
+            let mut w = word;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros();
+                    w &= w - 1;
+                    Some((bi as u32) << 6 | b)
+                }
+            })
+        })
+    }
+}
+
+/// One state's outgoing edges, indexed for O(log E) matching: exact labels
+/// sorted for binary search, ranges and wildcards scanned separately (both
+/// are short lists in rule tries).
+#[derive(Debug, Clone, Default)]
+struct PreparedState {
+    /// Sorted by value; per-(state, label) uniqueness of the trie builder
+    /// guarantees at most one hit.
+    exact: Vec<(u32, u32)>,
+    ranges: Vec<(u32, u32, u32)>, // (lo, hi, to)
+    anys: Vec<u32>,
+}
+
+/// A partition preprocessed for fast sparse walking.
+#[derive(Debug, Clone)]
+struct PreparedPartition {
+    /// `[level][state]`.
+    levels: Vec<Vec<PreparedState>>,
+}
+
+impl PreparedPartition {
+    fn build(nfa: &CompiledNfa) -> PreparedPartition {
+        let levels = nfa
+            .states
+            .iter()
+            .map(|states| {
+                states
+                    .iter()
+                    .map(|edges| {
+                        let mut p = PreparedState::default();
+                        for e in edges {
+                            match e.label {
+                                super::super::nfa::model::EdgeLabel::Exact(v) => {
+                                    p.exact.push((v, e.to))
+                                }
+                                super::super::nfa::model::EdgeLabel::Range(lo, hi) => {
+                                    p.ranges.push((lo, hi, e.to))
+                                }
+                                super::super::nfa::model::EdgeLabel::Any => p.anys.push(e.to),
+                            }
+                        }
+                        p.exact.sort_unstable();
+                        p
+                    })
+                    .collect()
+            })
+            .collect();
+        PreparedPartition { levels }
+    }
+}
+
+/// Sparse evaluator over a partitioned NFA.
+#[derive(Debug, Clone)]
+pub struct NativeEvaluator {
+    nfa: PartitionedNfa,
+    prepared: Vec<PreparedPartition>,
+}
+
+impl NativeEvaluator {
+    pub fn new(nfa: PartitionedNfa) -> Self {
+        let prepared = nfa.partitions.iter().map(PreparedPartition::build).collect();
+        NativeEvaluator { nfa, prepared }
+    }
+
+    pub fn nfa(&self) -> &PartitionedNfa {
+        &self.nfa
+    }
+
+    /// Evaluate one *encoded* query (level-ordered values, length ≥ depth)
+    /// against one partition. Returns the best accept, if any.
+    fn eval_partition(
+        nfa: &CompiledNfa,
+        prep: &PreparedPartition,
+        q: &[i32],
+    ) -> Option<(u32, f32, u16)> {
+        let depth = nfa.depth();
+        debug_assert!(q.len() >= depth);
+        let width = nfa.max_width();
+        let mut active = BitSet::empty(width);
+        active.set(0);
+        let mut next = BitSet::empty(width);
+        for (lv, states) in prep.levels.iter().enumerate() {
+            // qv comes from the encoder and is always a small non-negative
+            // domain value, so the u32 cast below is lossless.
+            let qv = q[lv] as u32;
+            next.clear();
+            let mut any_hit = false;
+            for s in active.iter() {
+                let ps = &states[s as usize];
+                if let Ok(i) = ps.exact.binary_search_by_key(&qv, |&(v, _)| v) {
+                    next.set(ps.exact[i].1);
+                    any_hit = true;
+                }
+                for &(lo, hi, to) in &ps.ranges {
+                    if qv >= lo && qv <= hi {
+                        next.set(to);
+                        any_hit = true;
+                    }
+                }
+                for &to in &ps.anys {
+                    next.set(to);
+                    any_hit = true;
+                }
+            }
+            if !any_hit {
+                return None;
+            }
+            std::mem::swap(&mut active, &mut next);
+        }
+        // `active` now ranges over accepting states.
+        let mut best: Option<(u32, f32, u16)> = None;
+        for s in active.iter() {
+            let a = &nfa.accepts[s as usize];
+            let better = match best {
+                None => true,
+                // Strict > keeps the lowest accept index (= lowest rule id,
+                // parser builds in id order) on ties — same rule as the
+                // dense argmax.
+                Some((_, w, _)) => a.weight > w,
+            };
+            if better {
+                best = Some((a.rule_id, a.weight, a.decision_min));
+            }
+        }
+        best
+    }
+
+    /// Evaluate one encoded query routed to `station`: consult the station's
+    /// partitions plus the global ones and keep the most precise match.
+    pub fn evaluate_encoded(&self, station: u32, q: &[i32]) -> MctDecision {
+        let mut best = MctDecision::no_match();
+        for pi in self.nfa.partitions_for(station) {
+            if let Some((rid, w, min)) =
+                Self::eval_partition(&self.nfa.partitions[pi], &self.prepared[pi], q)
+            {
+                let better = !best.matched()
+                    || w > best.weight
+                    || (w == best.weight && rid < best.rule_id);
+                if better {
+                    best = MctDecision { minutes: min, weight: w, rule_id: rid };
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoder::QueryEncoder;
+    use crate::nfa::parser::{compile_rule_set, CompileOptions};
+    use crate::prng::Rng;
+    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+    use crate::rules::standard::{evaluate_ruleset, Schema, StandardVersion};
+    use crate::workload::random_query;
+
+    #[test]
+    fn bitset_roundtrip() {
+        let mut b = BitSet::empty(256);
+        assert!(b.is_empty());
+        for i in [0u32, 63, 64, 130, 255] {
+            b.set(i);
+        }
+        assert!(b.get(64) && b.get(255) && !b.get(1));
+        let got: Vec<u32> = b.iter().collect();
+        assert_eq!(got, vec![0, 63, 64, 130, 255]);
+    }
+
+    /// The decisive correctness test: native NFA evaluation must agree with
+    /// the semantic oracle (`evaluate_ruleset`) on random fleets of queries
+    /// for both standard versions.
+    #[test]
+    fn native_agrees_with_semantic_oracle() {
+        for (seed, version) in
+            [(71u64, StandardVersion::V1), (73, StandardVersion::V2)]
+        {
+            let cfg = GeneratorConfig::small(seed, 600);
+            let w = generate_world(&cfg);
+            let schema = Schema::for_version(version);
+            let rs = generate_rule_set(&cfg, &w, version);
+            let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+            let enc = QueryEncoder::new(&p.plan, p.plan.len());
+            let eval = NativeEvaluator::new(p);
+            let mut rng = Rng::new(seed ^ 0xFF);
+            let mut matched = 0;
+            for _ in 0..400 {
+                let station = rng.index(cfg.n_airports) as u32;
+                let q = random_query(&mut rng, &w, station);
+                let want = evaluate_ruleset(&schema, &rs, &q);
+                let got = eval.evaluate_encoded(station, &enc.encode(&q));
+                assert_eq!(got.rule_id, want.rule_id, "{version:?} q={q:?}");
+                assert_eq!(got.minutes, want.minutes);
+                if got.matched() {
+                    matched += 1;
+                }
+            }
+            assert!(matched > 50, "{version:?}: too few matches ({matched}) to be meaningful");
+        }
+    }
+
+    #[test]
+    fn unknown_station_falls_back_to_global_rules() {
+        let cfg = GeneratorConfig::small(79, 300);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let enc = QueryEncoder::new(&p.plan, p.plan.len());
+        let eval = NativeEvaluator::new(p);
+        // A station beyond the generated world: only wildcard-station rules
+        // could match; the evaluator must not panic and must agree with the
+        // oracle.
+        let q = crate::workload::query_for_station(&w, 10_000, 1);
+        let want = evaluate_ruleset(&schema, &rs, &q);
+        let got = eval.evaluate_encoded(10_000, &enc.encode(&q));
+        assert_eq!(got.rule_id, want.rule_id);
+    }
+}

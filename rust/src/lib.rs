@@ -1,0 +1,32 @@
+//! # erbium-search
+//!
+//! Reproduction of *"From Research to Proof-of-Concept: Analysis of a
+//! Deployment of FPGAs on a Commercial Search Engine"* (Maschi, Alonso,
+//! Hock-Koon, Bondoux, Roy, Boudia, Casalino — ETH Zurich / Amadeus, 2021)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time Python)** — the ERBIUM NFA evaluation engine as a
+//!   Pallas kernel inside a JAX model, AOT-lowered to HLO text
+//!   (`python/compile/`, artifacts in `artifacts/`).
+//! * **L3 (this crate)** — everything around the accelerator: the rule
+//!   standards and generator, the offline NFA compiler toolchain, the PJRT
+//!   runtime, the flight-search coordinator (injector → domain explorer →
+//!   router → MCT wrapper → XRT model), the optimised CPU baseline, the FPGA
+//!   datapath cost model, Route Scoring, and the deployment cost model.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod benchkit;
+pub mod coordinator;
+pub mod costmodel;
+pub mod cpu_baseline;
+pub mod encoder;
+pub mod erbium;
+pub mod nfa;
+pub mod prng;
+pub mod routescoring;
+pub mod rules;
+pub mod runtime;
+pub mod testing;
+pub mod workload;

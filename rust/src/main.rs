@@ -1,0 +1,194 @@
+//! `erbium-search` — leader entrypoint / CLI for the reproduction.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! ```text
+//! erbium-search gen-rules   [--rules N] [--seed S] [--version v1|v2] [--out FILE]
+//! erbium-search compile     [--rules N] [--seed S] [--version v1|v2] [--order declared|optimised]
+//! erbium-search query       [--rules N] [--seed S] [--station ID] [--n N] [--backend native|xla]
+//! erbium-search replay      [--uq N] [--rules N] [--p P] [--w W] [--k K] [--e E] [--backend native|xla]
+//! erbium-search costs
+//! ```
+
+use std::sync::Arc;
+
+use erbium_search::coordinator::pipeline::EngineFactory;
+use erbium_search::coordinator::{Pipeline, Topology};
+use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
+use erbium_search::nfa::constraint_gen::{estimate, HardwareConfig};
+use erbium_search::nfa::optimiser::OrderStrategy;
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::prng::Rng;
+use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{Schema, StandardVersion};
+use erbium_search::rules::serde_text;
+use erbium_search::runtime::Runtime;
+use erbium_search::workload::{generate_trace, random_query, TraceConfig};
+
+struct Args(Vec<String>);
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.iter().position(|a| a == key).and_then(|i| self.0.get(i + 1)).map(|s| s.as_str())
+    }
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn version(&self) -> StandardVersion {
+        match self.get("--version") {
+            Some("v1") => StandardVersion::V1,
+            _ => StandardVersion::V2,
+        }
+    }
+}
+
+fn setup(args: &Args) -> (GeneratorConfig, erbium_search::rules::types::World, Schema, erbium_search::rules::types::RuleSet) {
+    let cfg = GeneratorConfig {
+        n_rules: args.usize("--rules", 20_000),
+        seed: args.u64("--seed", 0xE2B1_00),
+        ..GeneratorConfig::default()
+    };
+    let world = generate_world(&cfg);
+    let version = args.version();
+    let schema = Schema::for_version(version);
+    let rs = generate_rule_set(&cfg, &world, version);
+    (cfg, world, schema, rs)
+}
+
+fn backend(args: &Args) -> anyhow::Result<Backend> {
+    Ok(match args.get("--backend") {
+        Some("xla") => Backend::Xla {
+            runtime: Arc::new(Runtime::cpu(Runtime::default_dir())?),
+            batch_hint: 1024,
+        },
+        _ => Backend::Native,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_default();
+    let args = Args(argv);
+    match cmd.as_str() {
+        "gen-rules" => {
+            let (_, _, schema, rs) = setup(&args);
+            let out = args.get("--out").unwrap_or("rules.mct").to_string();
+            serde_text::write_rule_set(&rs, &out)?;
+            println!("wrote {} {} rules to {out}", rs.rules.len(), schema.version.name());
+        }
+        "compile" => {
+            let (_, _, schema, rs) = setup(&args);
+            let strategy = match args.get("--order") {
+                Some("declared") => OrderStrategy::Declared,
+                _ => OrderStrategy::Optimised,
+            };
+            let (nfa, stats) =
+                compile_rule_set(&schema, &rs, &CompileOptions { strategy, ..Default::default() });
+            let hw = HardwareConfig::v2_aws(4);
+            let est = estimate(&hw, &nfa);
+            println!(
+                "{} rules → depth {}, {} partitions (max width {}), {} transitions (+{} split)",
+                stats.rules_in, stats.depth, stats.partitions, stats.max_width,
+                stats.total_transitions, stats.rules_added_by_split
+            );
+            println!(
+                "synthesis model: {:.0} resource units, {:.1} MiB, {:.1} MHz; artifact {}",
+                est.resource_units,
+                est.memory_bytes as f64 / (1 << 20) as f64,
+                est.frequency_mhz,
+                hw.artifact_name(1024)
+            );
+        }
+        "query" => {
+            let (cfg, world, schema, rs) = setup(&args);
+            let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+            let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+            let engine = ErbiumEngine::new(nfa, model, backend(&args)?, 28, 64)?;
+            let n = args.usize("--n", 8);
+            let mut rng = Rng::new(args.u64("--seed", 1));
+            let qs: Vec<_> = (0..n)
+                .map(|_| {
+                    let st = args
+                        .get("--station")
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or_else(|| rng.index(cfg.n_airports) as u32);
+                    random_query(&mut rng, &world, st)
+                })
+                .collect();
+            let (out, t) = engine.evaluate_batch_timed(&qs)?;
+            for (q, d) in qs.iter().zip(&out) {
+                println!("station {:>3} → {d}", q.station);
+            }
+            println!("hw-model time for the batch: {:.1} µs", t.total_us);
+        }
+        "replay" => {
+            let (_, world, schema, rs) = setup(&args);
+            let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+            let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+            let topo = Topology::new(
+                args.usize("--p", 4),
+                args.usize("--w", 2),
+                args.usize("--k", 1),
+                args.usize("--e", 4),
+            );
+            let trace = generate_trace(
+                &TraceConfig {
+                    n_user_queries: args.usize("--uq", 16),
+                    mean_ts_per_query: 150.0,
+                    ..TraceConfig::default()
+                },
+                &world,
+            );
+            let use_xla = matches!(args.get("--backend"), Some("xla"));
+            let nfa2 = nfa.clone();
+            let factory: EngineFactory = Arc::new(move || {
+                let b = if use_xla {
+                    Backend::Xla {
+                        runtime: Arc::new(Runtime::cpu(Runtime::default_dir())?),
+                        batch_hint: 1024,
+                    }
+                } else {
+                    Backend::Native
+                };
+                ErbiumEngine::new(nfa2.clone(), model, b, 28, 64)
+            });
+            let r = Pipeline::new(topo, factory).run(&trace)?;
+            println!("{} | {} uq, {} MCT q, {} calls", r.topology_label, r.user_queries, r.mct_queries, r.engine_calls);
+            println!(
+                "wall {:.2} s ({:.1} k q/s) | hw-model kernel {:.2} ms | p90 uq latency {:.1} ms",
+                r.wall_ms / 1e3,
+                r.wall_qps / 1e3,
+                r.modeled_kernel_us / 1e3,
+                r.uq_latency_p90_ms
+            );
+            let _ = schema;
+        }
+        "costs" => {
+            for (title, rows) in [
+                ("Table 2", erbium_search::costmodel::table2()),
+                ("Table 3", erbium_search::costmodel::table3()),
+            ] {
+                println!("\n{title}");
+                for r in rows {
+                    println!(
+                        "  {:<55} {:<18} ×{:<5} {}",
+                        r.deployment,
+                        r.element.name,
+                        r.units,
+                        r.total_label()
+                    );
+                }
+            }
+        }
+        _ => {
+            println!("erbium-search — see module docs; subcommands:");
+            println!("  gen-rules | compile | query | replay | costs");
+            println!("run `cargo bench` for the paper's figures/tables,");
+            println!("`cargo run --release --example e2e_search` for the end-to-end driver.");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Constraint Generator (§3.1): customises the hardware kernel according to
+//! the rule structure and NFA shape, and estimates the synthesis outcome
+//! (resources, memory, clock frequency).
+//!
+//! On the FPGA this module emitted HLS parameters and ran synthesis; here it
+//! selects the AOT artifact variant `(B, S, L)` a compiled rule set needs
+//! and evaluates the *synthesis model* — analytic formulas calibrated to the
+//! paper's reported outcomes:
+//!
+//! * v2 is **56 % more resource-intensive** than v1 (§3.3);
+//! * v2 clocks **11 % lower** than v1 (bigger NFA / deeper pipeline, §3.3);
+//! * growing 1 → 4 engines costs **30 %** of the operating frequency
+//!   (§4.3, Fig 7 discussion);
+//! * v2 uses ~**4 % less FPGA memory** despite more rules, thanks to the
+//!   more homogeneous per-level transition distribution (§3.3).
+
+use crate::rules::standard::StandardVersion;
+
+use super::model::PartitionedNfa;
+
+/// FPGA shell / data-movement interface available to the deployment (§3.3):
+/// on-premises Alveo boards expose the streaming QDMA shell; AWS F1 only has
+/// the blocking XDMA shell, which dominates small-batch latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Shell {
+    /// Streaming interface (on-prem Alveo U250 deployment of MCT v1).
+    Qdma,
+    /// Blocking memory-mapped interface (AWS F1), §3.3.
+    Xdma,
+}
+
+impl Shell {
+    pub fn name(self) -> &'static str {
+        match self {
+            Shell::Qdma => "QDMA",
+            Shell::Xdma => "XDMA",
+        }
+    }
+}
+
+/// Hardware kernel configuration: what the Constraint Generator fixes before
+/// "synthesis" and what the host must honour at runtime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HardwareConfig {
+    pub version: StandardVersion,
+    pub shell: Shell,
+    /// NFA Evaluation Engines inside one kernel (1, 2 or 4).
+    pub engines: usize,
+    /// Artifact depth (padded levels).
+    pub l: usize,
+    /// Artifact width (padded states per level).
+    pub s: usize,
+}
+
+impl HardwareConfig {
+    /// The deployments benchmarked in §3.3 / Fig 4.
+    pub fn v1_onprem(engines: usize) -> Self {
+        HardwareConfig { version: StandardVersion::V1, shell: Shell::Qdma, engines, l: 28, s: 64 }
+    }
+    pub fn v2_aws(engines: usize) -> Self {
+        HardwareConfig { version: StandardVersion::V2, shell: Shell::Xdma, engines, l: 28, s: 64 }
+    }
+
+    /// Artifact variant name — must match `python/compile/aot.py` output.
+    pub fn artifact_name(&self, batch: usize) -> String {
+        format!("nfa_b{}_s{}_l{}", batch, self.s, self.l)
+    }
+}
+
+/// Synthesis-model output for one (rule set, hardware config) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelEstimate {
+    /// Abstract resource units (LUT/FF-equivalent); only ratios matter.
+    pub resource_units: f64,
+    /// Accelerator memory footprint, bytes.
+    pub memory_bytes: usize,
+    /// Achievable clock, MHz.
+    pub frequency_mhz: f64,
+    /// Pipeline depth = consolidated criteria (§3.3: 26 vs 22).
+    pub pipeline_depth: usize,
+    /// Number of compiled partitions (tiles streamed through the kernel).
+    pub partitions: usize,
+}
+
+/// Base clock of the single-engine v1 design. ERBIUM [15] reports its Alveo
+/// U250 kernels in the 250–300 MHz band; the absolute value only scales the
+/// time axis — every figure depends on ratios and the PCIe bound.
+pub const BASE_FREQ_MHZ: f64 = 285.0;
+
+/// Clock model: the v1→v2 NFA growth costs 11 % (§3.3) and every doubling of
+/// engines costs a fixed complexity factor such that 1→4 engines loses 30 %
+/// (§4.3): per-doubling factor = sqrt(0.70) ≈ 0.8367.
+pub fn clock_frequency_mhz(version: StandardVersion, engines: usize) -> f64 {
+    let version_factor = match version {
+        StandardVersion::V1 => 1.0,
+        StandardVersion::V2 => 0.89,
+    };
+    let doublings = (engines as f64).log2();
+    BASE_FREQ_MHZ * version_factor * 0.70f64.powf(doublings / 2.0)
+}
+
+/// Per-level BRAM bank granularity of the transition memory. The FPGA
+/// allocates whole banks per pipeline stage; a skewed per-level transition
+/// distribution (v1) strands capacity in hot levels, which is why v2 —
+/// despite more rules — comes out slightly smaller (§3.3).
+const BANK_TRANSITIONS: usize = 512;
+const BYTES_PER_TRANSITION: usize = 16;
+
+/// Evaluate the synthesis model for a compiled rule set.
+pub fn estimate(cfg: &HardwareConfig, nfa: &PartitionedNfa) -> KernelEstimate {
+    let depth = nfa.plan.len();
+    // Resources: per engine, comparator+routing logic per level plus the
+    // range comparators (two per range level), scaled by width.
+    let range_levels = nfa
+        .plan
+        .iter()
+        .filter(|p| {
+            !matches!(p.criterion, crate::rules::standard::Consolidated::Exact(_))
+        })
+        .count();
+    let per_engine = 150.0
+        + 30.0 * depth as f64
+        + 60.0 * range_levels as f64
+        + 0.15 * cfg.s as f64 * depth as f64;
+    // Routing/steering logic grows with the stored transition population
+    // (wider per-level muxes and deeper priority encoders); this dominant
+    // term is what makes the v2 deployment — larger rule set, deeper
+    // pipeline — land near the paper's +56 % (§3.3).
+    let routing = 3.0 * nfa.total_transitions() as f64;
+    let resource_units = per_engine * cfg.engines as f64 + routing;
+
+    // Memory: per partition, per level, transitions rounded up to banks.
+    let mut memory_bytes = 0usize;
+    for p in &nfa.partitions {
+        for t in p.transitions_per_level() {
+            let banks = t.div_ceil(BANK_TRANSITIONS).max(1);
+            memory_bytes += banks * BANK_TRANSITIONS * BYTES_PER_TRANSITION;
+        }
+    }
+
+    KernelEstimate {
+        resource_units,
+        memory_bytes,
+        frequency_mhz: clock_frequency_mhz(cfg.version, cfg.engines),
+        pipeline_depth: depth,
+        partitions: nfa.partitions.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nfa::parser::{compile_rule_set, CompileOptions};
+    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+    use crate::rules::standard::Schema;
+
+    #[test]
+    fn frequency_anchors_match_paper() {
+        // §3.3: v2 clocks 11 % below v1 at equal engine count.
+        let f1 = clock_frequency_mhz(StandardVersion::V1, 4);
+        let f2 = clock_frequency_mhz(StandardVersion::V2, 4);
+        assert!((f2 / f1 - 0.89).abs() < 1e-9);
+        // §4.3: 4 engines clock 30 % below 1 engine.
+        let e1 = clock_frequency_mhz(StandardVersion::V2, 1);
+        let e4 = clock_frequency_mhz(StandardVersion::V2, 4);
+        assert!((e4 / e1 - 0.70).abs() < 1e-9);
+        // 2 engines sit strictly in between.
+        let e2 = clock_frequency_mhz(StandardVersion::V2, 2);
+        assert!(e4 < e2 && e2 < e1);
+    }
+
+    #[test]
+    fn v2_more_resource_intensive() {
+        let cfg = GeneratorConfig::small(51, 800);
+        let w = generate_world(&cfg);
+        let opts = CompileOptions::default();
+        let (n1, _) = compile_rule_set(
+            &Schema::for_version(StandardVersion::V1),
+            &generate_rule_set(&cfg, &w, StandardVersion::V1),
+            &opts,
+        );
+        let (n2, _) = compile_rule_set(
+            &Schema::for_version(StandardVersion::V2),
+            &generate_rule_set(&cfg, &w, StandardVersion::V2),
+            &opts,
+        );
+        let e1 = estimate(&HardwareConfig::v1_onprem(4), &n1);
+        let e2 = estimate(&HardwareConfig::v2_aws(4), &n2);
+        let ratio = e2.resource_units / e1.resource_units;
+        // §3.3 reports +56 %; the synthesis model must land in that band.
+        assert!((1.35..1.75).contains(&ratio), "resource ratio {ratio}");
+        assert_eq!(e1.pipeline_depth, 22);
+        assert_eq!(e2.pipeline_depth, 26);
+    }
+
+    #[test]
+    fn artifact_name_is_stable() {
+        let cfg = HardwareConfig::v2_aws(4);
+        assert_eq!(cfg.artifact_name(1024), "nfa_b1024_s64_l28");
+    }
+
+    #[test]
+    fn memory_scales_with_rules() {
+        let opts = CompileOptions::default();
+        let small_cfg = GeneratorConfig::small(53, 200);
+        let big_cfg = GeneratorConfig::small(53, 2000);
+        let w = generate_world(&big_cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let (ns, _) =
+            compile_rule_set(&schema, &generate_rule_set(&small_cfg, &w, StandardVersion::V2), &opts);
+        let (nb, _) =
+            compile_rule_set(&schema, &generate_rule_set(&big_cfg, &w, StandardVersion::V2), &opts);
+        let hw = HardwareConfig::v2_aws(1);
+        assert!(estimate(&hw, &nb).memory_bytes > estimate(&hw, &ns).memory_bytes);
+    }
+}

@@ -1,0 +1,259 @@
+//! NFA memory image: the dense tensor layout consumed by the hardware
+//! engine (the AOT-compiled XLA kernel) and by the dense reference
+//! evaluator.
+//!
+//! This is the TPU analogue of ERBIUM's BRAM memory file (§3.1 "the NFA
+//! Parser builds the NFA memory file based on the current hardware settings
+//! and on the rule set"): per level a dense `[S, S]` edge matrix with a
+//! *kind* plane and `lo`/`hi` label planes. Levels are padded to the
+//! artifact depth `L` with identity-`Any` diagonals, so one compiled
+//! artifact (fixed `(B, S, L)`) serves every rule set whose partitions fit.
+//!
+//! Edge kinds (shared constant across Rust, `kernels/nfa_eval.py` and
+//! `kernels/ref.py` — keep in sync):
+//! `0` = no edge, `1` = exact (`q == lo`), `2` = any, `3` = range
+//! (`lo <= q <= hi`).
+
+use anyhow::{bail, Result};
+
+use super::model::{CompiledNfa, EdgeLabel};
+
+pub const KIND_NONE: i32 = 0;
+pub const KIND_EXACT: i32 = 1;
+pub const KIND_ANY: i32 = 2;
+pub const KIND_RANGE: i32 = 3;
+
+/// Score assigned to inactive final states before the argmax (must match
+/// `model.py`).
+pub const NEG_INF_SCORE: f32 = -1.0e9;
+
+/// Dense NFA image for one partition.
+#[derive(Debug, Clone)]
+pub struct NfaImage {
+    /// Padded depth (levels) — the artifact's `L`.
+    pub l: usize,
+    /// Padded width (states per level) — the artifact's `S`.
+    pub s: usize,
+    /// Levels actually used by the partition (≤ `l`).
+    pub depth_used: usize,
+    /// `[L*S*S]` row-major `[level][from][to]` edge kinds.
+    pub kinds: Vec<i32>,
+    /// `[L*S*S]` label low values (exact value for `KIND_EXACT`).
+    pub lo: Vec<i32>,
+    /// `[L*S*S]` label high values.
+    pub hi: Vec<i32>,
+    /// `[S]` accepting weights (final-level states; padding = 0).
+    pub weights: Vec<f32>,
+    /// `[S]` decisions in minutes (padding = 0).
+    pub decisions: Vec<f32>,
+    /// `[S]` original rule ids (padding = `u32::MAX`); not shipped to the
+    /// accelerator, used host-side to resolve winners.
+    pub rule_ids: Vec<u32>,
+    /// Station this image serves (`None` = global partition).
+    pub station: Option<u32>,
+}
+
+#[inline]
+fn sat_i32(v: u32) -> i32 {
+    v.min(i32::MAX as u32) as i32
+}
+
+impl NfaImage {
+    /// Build the dense image of a compiled partition, padding to `(l, s)`.
+    pub fn from_compiled(nfa: &CompiledNfa, l: usize, s: usize) -> Result<NfaImage> {
+        let depth_used = nfa.depth();
+        if depth_used == 0 {
+            bail!("empty NFA");
+        }
+        if depth_used > l {
+            bail!("NFA depth {depth_used} exceeds artifact depth {l}");
+        }
+        let width = nfa.max_width();
+        if width > s {
+            bail!("NFA width {width} exceeds artifact width {s}");
+        }
+        let mut kinds = vec![KIND_NONE; l * s * s];
+        let mut lo = vec![0i32; l * s * s];
+        let mut hi = vec![0i32; l * s * s];
+        let idx = |lv: usize, f: usize, t: usize| (lv * s + f) * s + t;
+        for (lv, level_states) in nfa.states.iter().enumerate() {
+            for (from, edges) in level_states.iter().enumerate() {
+                for e in edges {
+                    let i = idx(lv, from, e.to as usize);
+                    match e.label {
+                        EdgeLabel::Any => kinds[i] = KIND_ANY,
+                        EdgeLabel::Exact(v) => {
+                            kinds[i] = KIND_EXACT;
+                            lo[i] = sat_i32(v);
+                        }
+                        EdgeLabel::Range(a, b) => {
+                            kinds[i] = KIND_RANGE;
+                            lo[i] = sat_i32(a);
+                            hi[i] = sat_i32(b);
+                        }
+                    }
+                }
+            }
+        }
+        // Padding levels: identity-Any diagonal keeps the active set fixed.
+        for lv in depth_used..l {
+            for st in 0..s {
+                kinds[idx(lv, st, st)] = KIND_ANY;
+            }
+        }
+        let mut weights = vec![0f32; s];
+        let mut decisions = vec![0f32; s];
+        let mut rule_ids = vec![u32::MAX; s];
+        for (i, a) in nfa.accepts.iter().enumerate() {
+            weights[i] = a.weight;
+            decisions[i] = a.decision_min as f32;
+            rule_ids[i] = a.rule_id;
+        }
+        Ok(NfaImage {
+            l,
+            s,
+            depth_used,
+            kinds,
+            lo,
+            hi,
+            weights,
+            decisions,
+            rule_ids,
+            station: nfa.station,
+        })
+    }
+
+    /// On-accelerator memory footprint of this image in bytes (three `[L,S,S]`
+    /// i32 planes + two `[S]` f32 vectors) — the quantity behind the paper's
+    /// "requires 4 % less FPGA memory" comparison (§3.3).
+    pub fn memory_bytes(&self) -> usize {
+        3 * self.l * self.s * self.s * 4 + 2 * self.s * 4
+    }
+
+    /// Dense *scalar* reference evaluation of one encoded query — the
+    /// semantics the XLA kernel implements, expressed in plain Rust. Used by
+    /// tests to pin image construction and by no hot path.
+    ///
+    /// Returns `(best_state, weight, decision)`; `best_state == usize::MAX`
+    /// when nothing matched.
+    pub fn evaluate_scalar(&self, q: &[i32]) -> (usize, f32, f32) {
+        assert_eq!(q.len(), self.l);
+        let mut active = vec![false; self.s];
+        active[0] = true;
+        let mut next = vec![false; self.s];
+        let idx = |lv: usize, f: usize, t: usize| (lv * self.s + f) * self.s + t;
+        for lv in 0..self.l {
+            next.iter_mut().for_each(|x| *x = false);
+            for from in 0..self.s {
+                if !active[from] {
+                    continue;
+                }
+                for to in 0..self.s {
+                    let i = idx(lv, from, to);
+                    let hit = match self.kinds[i] {
+                        KIND_NONE => false,
+                        KIND_EXACT => self.lo[i] == q[lv],
+                        KIND_ANY => true,
+                        KIND_RANGE => self.lo[i] <= q[lv] && q[lv] <= self.hi[i],
+                        k => unreachable!("bad kind {k}"),
+                    };
+                    if hit {
+                        next[to] = true;
+                    }
+                }
+            }
+            std::mem::swap(&mut active, &mut next);
+        }
+        let mut best = usize::MAX;
+        let mut best_w = NEG_INF_SCORE;
+        for st in 0..self.s {
+            if active[st] && self.rule_ids[st] != u32::MAX && self.weights[st] > best_w {
+                best = st;
+                best_w = self.weights[st];
+            }
+        }
+        if best == usize::MAX {
+            (usize::MAX, 0.0, 0.0)
+        } else {
+            (best, self.weights[best], self.decisions[best])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nfa::model::{Accept, Edge, LevelPlan};
+    use crate::rules::standard::Consolidated;
+    use crate::rules::types::ExactSlot;
+
+    /// Tiny hand-built 2-level NFA:
+    ///   level 0 (station): root --Exact(7)--> s0 ; root --Any--> s1
+    ///   level 1 (terminal): s0 --Exact(1)--> accept0(w=5, 25min)
+    ///                       s1 --Any-->      accept1(w=1, 90min)
+    fn tiny() -> CompiledNfa {
+        let plan = vec![
+            LevelPlan { criterion: Consolidated::Exact(ExactSlot::Station) },
+            LevelPlan { criterion: Consolidated::Exact(ExactSlot::ArrTerminal) },
+        ];
+        CompiledNfa {
+            plan,
+            states: vec![
+                vec![vec![
+                    Edge { label: EdgeLabel::Exact(7), to: 0 },
+                    Edge { label: EdgeLabel::Any, to: 1 },
+                ]],
+                vec![
+                    vec![Edge { label: EdgeLabel::Exact(1), to: 0 }],
+                    vec![Edge { label: EdgeLabel::Any, to: 1 }],
+                ],
+            ],
+            accepts: vec![
+                Accept { rule_id: 10, weight: 5.0, decision_min: 25 },
+                Accept { rule_id: 11, weight: 1.0, decision_min: 90 },
+            ],
+            station: Some(7),
+        }
+    }
+
+    #[test]
+    fn image_shape_and_padding() {
+        let img = NfaImage::from_compiled(&tiny(), 4, 8).unwrap();
+        assert_eq!(img.kinds.len(), 4 * 8 * 8);
+        // Padding level 2 has identity-Any.
+        let idx = |lv: usize, f: usize, t: usize| (lv * 8 + f) * 8 + t;
+        assert_eq!(img.kinds[idx(2, 3, 3)], KIND_ANY);
+        assert_eq!(img.kinds[idx(2, 3, 4)], KIND_NONE);
+    }
+
+    #[test]
+    fn scalar_eval_precise_beats_generic() {
+        let img = NfaImage::from_compiled(&tiny(), 4, 8).unwrap();
+        // station=7, terminal=1, padded zeros.
+        let (st, w, d) = img.evaluate_scalar(&[7, 1, 0, 0]);
+        assert_eq!(st, 0);
+        assert_eq!(w, 5.0);
+        assert_eq!(d, 25.0);
+        // station=9 → only the Any path.
+        let (st, _, d) = img.evaluate_scalar(&[9, 1, 0, 0]);
+        assert_eq!(st, 1);
+        assert_eq!(d, 90.0);
+        // station=7, terminal=2 → specific path dies at level 1, Any path
+        // (root --Any--> s1) still matches.
+        let (st, _, d) = img.evaluate_scalar(&[7, 2, 0, 0]);
+        assert_eq!(st, 1);
+        assert_eq!(d, 90.0);
+    }
+
+    #[test]
+    fn oversize_nfa_rejected() {
+        assert!(NfaImage::from_compiled(&tiny(), 1, 8).is_err());
+        assert!(NfaImage::from_compiled(&tiny(), 4, 1).is_err());
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let img = NfaImage::from_compiled(&tiny(), 4, 8).unwrap();
+        assert_eq!(img.memory_bytes(), 3 * 4 * 8 * 8 * 4 + 2 * 8 * 4);
+    }
+}

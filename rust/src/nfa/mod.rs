@@ -1,0 +1,21 @@
+//! The ERBIUM offline toolchain (§3.1, Fig 2): NFA Optimiser, Constraint
+//! Generator and NFA Parser, plus the NFA data model and the memory image
+//! handed to the hardware engine.
+//!
+//! These modules run *offline* ("centralised machines of the cluster") every
+//! time the rules change; the online engine only ever sees the compiled
+//! [`memory::NfaImage`]s. This split is the paper's central maintainability
+//! argument (§3.4): all four MCT v2 standard changes (§3.2) are absorbed
+//! here, in software, while the hardware kernel stays untouched.
+
+pub mod constraint_gen;
+pub mod memory;
+pub mod model;
+pub mod optimiser;
+pub mod parser;
+
+pub use constraint_gen::{HardwareConfig, KernelEstimate, Shell};
+pub use memory::NfaImage;
+pub use model::{CompiledNfa, EdgeLabel, LevelPlan, PartitionedNfa};
+pub use optimiser::{optimise_order, OrderStrategy};
+pub use parser::{compile_rule_set, CompileOptions, CompileStats};

@@ -1,0 +1,173 @@
+//! NFA data model: levels, labelled transitions, accepting decisions.
+//!
+//! The NFA is a levelled DAG — one level per *consolidated criterion*
+//! (§3.2.1) in the order chosen by the optimiser. Rules are paths from the
+//! single root to per-rule accepting states; shared prefixes are merged
+//! (that is what makes the structure compact, Fig 3a). Matching a query
+//! means advancing an *active state set* level by level, following every
+//! edge whose label matches the query's value for that level — wildcard
+//! (`Any`) edges are what make the automaton non-deterministic.
+
+use crate::rules::standard::Consolidated;
+
+/// Edge label of one NFA transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EdgeLabel {
+    /// Matches any query value (wildcard criterion).
+    Any,
+    /// Matches one dictionary value exactly.
+    Exact(u32),
+    /// Matches `lo <= q <= hi` (v1 whole ranges; v2 expanded bounds use
+    /// half-open sides: `(lo, u32::MAX)` / `(0, hi)`).
+    Range(u32, u32),
+}
+
+impl EdgeLabel {
+    #[inline]
+    pub fn matches(&self, q: u32) -> bool {
+        match *self {
+            EdgeLabel::Any => true,
+            EdgeLabel::Exact(v) => v == q,
+            EdgeLabel::Range(lo, hi) => q >= lo && q <= hi,
+        }
+    }
+}
+
+/// One transition out of a state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub label: EdgeLabel,
+    /// Target state index within the *next* level.
+    pub to: u32,
+}
+
+/// Evaluation plan for one level: which consolidated criterion it tests.
+/// The encoder uses this to lay a query out as a flat `[i32; L]` vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelPlan {
+    pub criterion: Consolidated,
+}
+
+/// Accepting-state payload (one per rule surviving compilation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Accept {
+    pub rule_id: u32,
+    pub weight: f32,
+    pub decision_min: u16,
+}
+
+/// One compiled NFA partition.
+///
+/// `states[l]` holds the edge lists of the states at level `l` (edges point
+/// into level `l+1`); level 0 has exactly one root state. `accepts[s]` is
+/// the payload of final-level state `s`.
+#[derive(Debug, Clone)]
+pub struct CompiledNfa {
+    /// Level order (identical across all partitions of a rule set).
+    pub plan: Vec<LevelPlan>,
+    /// `states[l][s]` = outgoing edges of state `s` at level `l`.
+    /// `states.len() == plan.len()`; targets of the last entry index into
+    /// `accepts`.
+    pub states: Vec<Vec<Vec<Edge>>>,
+    /// Accepting payloads, indexed by final-state id.
+    pub accepts: Vec<Accept>,
+    /// The station this partition serves, or `None` for the global
+    /// (wildcard-station) partition.
+    pub station: Option<u32>,
+}
+
+impl CompiledNfa {
+    /// Number of levels (NFA depth = hardware pipeline depth, §3.3).
+    pub fn depth(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// Widest level (states), the quantity bounded by the hardware `S`.
+    pub fn max_width(&self) -> usize {
+        self.states
+            .iter()
+            .map(|l| l.len())
+            .max()
+            .unwrap_or(0)
+            .max(self.accepts.len())
+    }
+
+    /// Total transitions — the paper's memory driver ("the cardinality at
+    /// each stage has a direct impact on the memory required to store the
+    /// NFA transitions", §3.2.1).
+    pub fn n_transitions(&self) -> usize {
+        self.states.iter().map(|l| l.iter().map(Vec::len).sum::<usize>()).sum()
+    }
+
+    /// Per-level transition counts (used by the constraint generator to
+    /// report the distribution the paper discusses in §3.3).
+    pub fn transitions_per_level(&self) -> Vec<usize> {
+        self.states.iter().map(|l| l.iter().map(Vec::len).sum()).collect()
+    }
+}
+
+/// A full compiled rule set: station-keyed partitions plus the global
+/// (wildcard-station) partitions every query must also consult.
+///
+/// Partitioning is the TPU adaptation of ERBIUM's single-BRAM NFA (see
+/// DESIGN.md §Hardware-Adaptation): each partition's dense image fits one
+/// VMEM-sized tile (`S` states/level).
+#[derive(Debug, Clone)]
+pub struct PartitionedNfa {
+    pub partitions: Vec<CompiledNfa>,
+    /// station id → indices into `partitions`.
+    pub by_station: std::collections::HashMap<u32, Vec<usize>>,
+    /// Indices of global partitions (consulted by every query).
+    pub global: Vec<usize>,
+    pub plan: Vec<LevelPlan>,
+}
+
+impl PartitionedNfa {
+    /// Partition indices relevant to a query at `station`.
+    pub fn partitions_for(&self, station: u32) -> impl Iterator<Item = usize> + '_ {
+        self.by_station
+            .get(&station)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+            .iter()
+            .chain(self.global.iter())
+            .copied()
+    }
+
+    pub fn total_transitions(&self) -> usize {
+        self.partitions.iter().map(|p| p.n_transitions()).sum()
+    }
+
+    pub fn total_accepts(&self) -> usize {
+        self.partitions.iter().map(|p| p.accepts.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_label_matching() {
+        assert!(EdgeLabel::Any.matches(123));
+        assert!(EdgeLabel::Exact(5).matches(5));
+        assert!(!EdgeLabel::Exact(5).matches(6));
+        assert!(EdgeLabel::Range(10, 20).matches(10));
+        assert!(EdgeLabel::Range(10, 20).matches(20));
+        assert!(!EdgeLabel::Range(10, 20).matches(21));
+        assert!(!EdgeLabel::Range(10, 20).matches(9));
+    }
+
+    #[test]
+    fn depth_and_width_of_trivial_nfa() {
+        let nfa = CompiledNfa {
+            plan: vec![],
+            states: vec![],
+            accepts: vec![],
+            station: None,
+        };
+        assert_eq!(nfa.depth(), 0);
+        assert_eq!(nfa.max_width(), 0);
+        assert_eq!(nfa.n_transitions(), 0);
+    }
+}

@@ -1,0 +1,480 @@
+//! NFA Parser (§3.1): builds the NFA memory structure from the rule set and
+//! the optimiser's level order, absorbing all four MCT v2 standard changes
+//! (§3.2) in software so the hardware kernel stays generic:
+//!
+//! 1. **Criteria merging / range expansion** (§3.2.1) — v2 numeric ranges
+//!    become two half-open levels; handled by the level plan + labelling.
+//! 2. **Precision weight for ranges** (§3.2.2) — overlapping flight-number
+//!    ranges are split offline into disjoint sub-rules so the most precise
+//!    range is unique as a match (Fig 3c); the dynamic range-size weight is
+//!    frozen into the sub-rule's static weight.
+//! 3. **Cross-matching criteria** (§3.2.3) — carrier duplication for
+//!    non-code-share rules via [`effective_exact`].
+//! 4. **Code-share flight numbers** (§3.2.4) — flight-range migration to
+//!    the CsFlightRange criterion via [`effective_range`].
+
+use std::collections::HashMap;
+
+use crate::rules::standard::{
+    effective_exact, effective_range, rule_weight, Consolidated, Schema,
+};
+use crate::rules::types::{RangeSlot, Rule, RuleSet, WILDCARD};
+
+use super::model::{Accept, CompiledNfa, Edge, EdgeLabel, LevelPlan, PartitionedNfa};
+use super::optimiser::{optimise_order, OrderStrategy};
+
+/// Compilation knobs.
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    pub strategy: OrderStrategy,
+    /// Hardware bound on states per level (`S` of the kernel image). One
+    /// partition never exceeds this width; larger per-station rule
+    /// populations are chunked across several partitions.
+    pub max_states_per_level: usize,
+    /// §3.2.2 offline range splitting (default on for v2; ablation toggle).
+    pub split_overlaps: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            strategy: OrderStrategy::Optimised,
+            max_states_per_level: 64,
+            split_overlaps: true,
+        }
+    }
+}
+
+/// Compiler report — feeds the §3.3 resource/memory comparison.
+#[derive(Debug, Clone)]
+pub struct CompileStats {
+    pub rules_in: usize,
+    /// Additional rules produced by §3.2.2 splitting ("zero to a few
+    /// hundred among an average of 160k rules").
+    pub rules_added_by_split: usize,
+    pub partitions: usize,
+    pub depth: usize,
+    pub max_width: usize,
+    pub total_transitions: usize,
+    pub total_accepts: usize,
+}
+
+/// A declared rule plus its (possibly overridden) frozen precision weight.
+#[derive(Debug, Clone)]
+struct WeightedRule {
+    rule: Rule,
+    weight: f32,
+}
+
+/// Compile a rule set into station-partitioned NFAs.
+pub fn compile_rule_set(
+    schema: &Schema,
+    rs: &RuleSet,
+    opts: &CompileOptions,
+) -> (PartitionedNfa, CompileStats) {
+    assert_eq!(schema.version, rs.version, "schema/rule-set version mismatch");
+    let order = optimise_order(schema, rs, opts.strategy);
+    let plan: Vec<LevelPlan> = order.iter().map(|c| LevelPlan { criterion: *c }).collect();
+
+    // §3.2.2 offline splitting.
+    let mut weighted: Vec<WeightedRule> = rs
+        .rules
+        .iter()
+        .map(|r| WeightedRule { rule: r.clone(), weight: rule_weight(schema, r) })
+        .collect();
+    let rules_in = weighted.len();
+    // §3.2.2 splitting realises the *v2* dynamic precision layer. v1 has no
+    // range-size priority — overlapping equal-weight v1 rules tie-break by
+    // id, which splitting-by-tightness would violate — so it must stay off.
+    if opts.split_overlaps && schema.version == crate::rules::standard::StandardVersion::V2 {
+        weighted = split_overlapping_ranges(schema, weighted);
+    }
+    let rules_after = weighted.len();
+    // Deterministic build order: ascending rule id (ties by sub-rule range)
+    // so that accepting-state order — and therefore argmax tie-breaking on
+    // every backend — prefers the lowest rule id.
+    weighted.sort_by(|a, b| {
+        a.rule.id.cmp(&b.rule.id).then_with(|| a.rule.ranges.cmp(&b.rule.ranges))
+    });
+
+    // Label every rule per level, then bucket by the level-0 (station) label.
+    let mut buckets: HashMap<Option<u32>, Vec<(Vec<EdgeLabel>, Accept)>> = HashMap::new();
+    for wr in &weighted {
+        let labels = label_rule(schema, &order, &wr.rule);
+        let key = match labels[0] {
+            EdgeLabel::Exact(st) => Some(st),
+            EdgeLabel::Any => None,
+            EdgeLabel::Range(..) => unreachable!("station level cannot be a range"),
+        };
+        let accept =
+            Accept { rule_id: wr.rule.id, weight: wr.weight, decision_min: wr.rule.decision_min };
+        buckets.entry(key).or_default().push((labels, accept));
+    }
+
+    // Chunk buckets to the hardware width and build tries.
+    let mut partitions = Vec::new();
+    let mut by_station: HashMap<u32, Vec<usize>> = HashMap::new();
+    let mut global = Vec::new();
+    let mut keys: Vec<Option<u32>> = buckets.keys().copied().collect();
+    keys.sort();
+    for key in keys {
+        let rules = &buckets[&key];
+        for chunk in rules.chunks(opts.max_states_per_level) {
+            let nfa = build_trie(&plan, chunk, key);
+            debug_assert!(nfa.max_width() <= opts.max_states_per_level);
+            let idx = partitions.len();
+            partitions.push(nfa);
+            match key {
+                Some(st) => by_station.entry(st).or_default().push(idx),
+                None => global.push(idx),
+            }
+        }
+    }
+
+    let stats = CompileStats {
+        rules_in,
+        rules_added_by_split: rules_after - rules_in,
+        partitions: partitions.len(),
+        depth: plan.len(),
+        max_width: partitions.iter().map(|p| p.max_width()).max().unwrap_or(0),
+        total_transitions: partitions.iter().map(|p| p.n_transitions()).sum(),
+        total_accepts: partitions.iter().map(|p| p.accepts.len()).sum(),
+    };
+    (PartitionedNfa { partitions, by_station, global, plan }, stats)
+}
+
+/// Produce the per-level edge labels of one rule under the chosen order,
+/// applying the §3.2.3/§3.2.4 effective-value rewrites.
+fn label_rule(schema: &Schema, order: &[Consolidated], rule: &Rule) -> Vec<EdgeLabel> {
+    order
+        .iter()
+        .map(|c| match *c {
+            Consolidated::Exact(slot) => {
+                let idx = schema.exact_index(slot).expect("slot");
+                match effective_exact(schema, rule, idx) {
+                    WILDCARD => EdgeLabel::Any,
+                    v => EdgeLabel::Exact(v),
+                }
+            }
+            Consolidated::Range(slot) => {
+                let idx = schema.range_index(slot).expect("slot");
+                let (lo, hi) = effective_range(schema, rule, idx);
+                if (lo, hi) == Schema::full_range(slot) {
+                    EdgeLabel::Any
+                } else {
+                    EdgeLabel::Range(lo, hi)
+                }
+            }
+            Consolidated::RangeMin(slot) => {
+                let idx = schema.range_index(slot).expect("slot");
+                let (lo, hi) = effective_range(schema, rule, idx);
+                if (lo, hi) == Schema::full_range(slot) || lo == 0 {
+                    EdgeLabel::Any
+                } else {
+                    EdgeLabel::Range(lo, u32::MAX)
+                }
+            }
+            Consolidated::RangeMax(slot) => {
+                let idx = schema.range_index(slot).expect("slot");
+                let (lo, hi) = effective_range(schema, rule, idx);
+                if (lo, hi) == Schema::full_range(slot) || hi >= Schema::domain_max(slot) {
+                    EdgeLabel::Any
+                } else {
+                    EdgeLabel::Range(0, hi)
+                }
+            }
+        })
+        .collect()
+}
+
+/// §3.2.2: split overlapping flight-number ranges into disjoint sub-rules.
+///
+/// Rules are grouped by their *conflict signature* (every field except the
+/// arrival flight range). Within a group, elementary intervals are assigned
+/// to the tightest covering original range (ties → lowest rule id); each
+/// original rule is re-emitted as one sub-rule per maximal owned run, with
+/// the **original** rule's dynamic weight frozen in. Queries therefore match
+/// exactly one sub-rule per group — "the most precise range is unique as a
+/// match" (Fig 3c) — while reported winners and weights are unchanged.
+fn split_overlapping_ranges(schema: &Schema, rules: Vec<WeightedRule>) -> Vec<WeightedRule> {
+    let Some(fr) = schema.range_index(RangeSlot::ArrFlightRange) else {
+        return rules;
+    };
+    let full = Schema::full_range(RangeSlot::ArrFlightRange);
+
+    // Conflict signature: the whole rule minus the arrival flight range.
+    let sig = |r: &Rule| -> String {
+        let mut s = String::new();
+        for v in &r.exact {
+            s.push_str(&format!("{v},"));
+        }
+        for (i, rg) in r.ranges.iter().enumerate() {
+            if i != fr {
+                s.push_str(&format!("{}-{},", rg.0, rg.1));
+            }
+        }
+        // NOTE: the decision is *not* part of the signature — two rules that
+        // match the same traffic but prescribe different connection times
+        // are precisely the conflicts §3.2.2 resolves by range precision.
+        s.push_str(&format!("cs{:?}", r.cs_ind));
+        s
+    };
+
+    let mut groups: HashMap<String, Vec<WeightedRule>> = HashMap::new();
+    for wr in rules {
+        groups.entry(sig(&wr.rule)).or_default().push(wr);
+    }
+
+    let mut out = Vec::new();
+    for (_, group) in groups {
+        let ranged: Vec<&WeightedRule> =
+            group.iter().filter(|wr| wr.rule.ranges[fr] != full).collect();
+        let has_overlap = ranged.len() >= 2 && {
+            let mut iv: Vec<(u32, u32)> = ranged.iter().map(|wr| wr.rule.ranges[fr]).collect();
+            iv.sort();
+            iv.windows(2).any(|w| w[0].1 >= w[1].0)
+        };
+        if !has_overlap {
+            out.extend(group);
+            continue;
+        }
+        // Elementary-interval decomposition over the group's boundaries.
+        let mut bounds: Vec<u32> = Vec::new();
+        for wr in &ranged {
+            let (lo, hi) = wr.rule.ranges[fr];
+            bounds.push(lo);
+            bounds.push(hi + 1);
+        }
+        bounds.sort_unstable();
+        bounds.dedup();
+        // For each elementary interval [bounds[i], bounds[i+1]-1], find the
+        // owner: tightest covering original range, ties to lowest id.
+        let mut owned_runs: HashMap<usize, Vec<(u32, u32)>> = HashMap::new(); // ranged idx → runs
+        for win in bounds.windows(2) {
+            let (ilo, ihi) = (win[0], win[1] - 1);
+            let mut owner: Option<usize> = None;
+            for (k, wr) in ranged.iter().enumerate() {
+                let (lo, hi) = wr.rule.ranges[fr];
+                if lo <= ilo && ihi <= hi {
+                    let better = match owner {
+                        None => true,
+                        Some(o) => {
+                            let (olo, ohi) = ranged[o].rule.ranges[fr];
+                            let (sz, osz) = (hi - lo, ohi - olo);
+                            sz < osz || (sz == osz && wr.rule.id < ranged[o].rule.id)
+                        }
+                    };
+                    if better {
+                        owner = Some(k);
+                    }
+                }
+            }
+            if let Some(o) = owner {
+                let runs = owned_runs.entry(o).or_default();
+                match runs.last_mut() {
+                    Some(last) if last.1 + 1 == ilo => last.1 = ihi,
+                    _ => runs.push((ilo, ihi)),
+                }
+            }
+        }
+        // Emit sub-rules; non-ranged rules of the group pass through.
+        for wr in &group {
+            if wr.rule.ranges[fr] == full {
+                out.push(wr.clone());
+            }
+        }
+        for (k, runs) in owned_runs {
+            let original = ranged[k];
+            for (lo, hi) in runs {
+                let mut sub = original.rule.clone();
+                sub.ranges[fr] = (lo, hi);
+                out.push(WeightedRule { rule: sub, weight: original.weight });
+            }
+        }
+    }
+    out
+}
+
+/// Build one prefix-merged trie ("NFA") over a chunk of labelled rules.
+fn build_trie(
+    plan: &[LevelPlan],
+    chunk: &[(Vec<EdgeLabel>, Accept)],
+    station: Option<u32>,
+) -> CompiledNfa {
+    let depth = plan.len();
+    let mut states: Vec<Vec<Vec<Edge>>> = vec![Vec::new(); depth];
+    states[0].push(Vec::new()); // root
+    let mut accepts: Vec<Accept> = Vec::new();
+    // (level, from-state, label) → next-state id at level+1
+    let mut node_index: Vec<HashMap<(u32, EdgeLabel), u32>> =
+        vec![HashMap::new(); depth.saturating_sub(1)];
+
+    for (labels, accept) in chunk {
+        debug_assert_eq!(labels.len(), depth);
+        let mut cur = 0u32;
+        for l in 0..depth - 1 {
+            let key = (cur, labels[l]);
+            if let Some(&next) = node_index[l].get(&key) {
+                cur = next;
+            } else {
+                let next = states[l + 1].len() as u32;
+                states[l + 1].push(Vec::new());
+                states[l][cur as usize].push(Edge { label: labels[l], to: next });
+                node_index[l].insert(key, next);
+                cur = next;
+            }
+        }
+        // Final level: a fresh accepting state per (sub-)rule.
+        let aid = accepts.len() as u32;
+        accepts.push(*accept);
+        states[depth - 1][cur as usize].push(Edge { label: labels[depth - 1], to: aid });
+    }
+
+    CompiledNfa { plan: plan.to_vec(), states, accepts, station }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+    use crate::rules::standard::StandardVersion;
+
+    fn compile_small(
+        v: StandardVersion,
+        n: usize,
+        opts: &CompileOptions,
+    ) -> (Schema, RuleSet, PartitionedNfa, CompileStats) {
+        let cfg = GeneratorConfig::small(41, n);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(v);
+        let rs = generate_rule_set(&cfg, &w, v);
+        let (p, s) = compile_rule_set(&schema, &rs, opts);
+        (schema, rs, p, s)
+    }
+
+    #[test]
+    fn depth_matches_consolidated_criteria() {
+        let (_, _, p1, s1) = compile_small(StandardVersion::V1, 200, &CompileOptions::default());
+        assert_eq!(s1.depth, 22);
+        assert_eq!(p1.plan.len(), 22);
+        let (_, _, _, s2) = compile_small(StandardVersion::V2, 200, &CompileOptions::default());
+        assert_eq!(s2.depth, 26);
+    }
+
+    #[test]
+    fn widths_respect_hardware_bound() {
+        let opts = CompileOptions { max_states_per_level: 32, ..Default::default() };
+        let (_, _, p, s) = compile_small(StandardVersion::V2, 500, &opts);
+        assert!(s.max_width <= 32);
+        for part in &p.partitions {
+            assert!(part.max_width() <= 32);
+        }
+    }
+
+    #[test]
+    fn every_rule_reaches_an_accept() {
+        // v1: no splitting — every rule id must survive verbatim.
+        let (_, rs1, p1, _) = compile_small(StandardVersion::V1, 300, &CompileOptions::default());
+        let mut seen = vec![false; rs1.rules.len() + 1000];
+        for part in &p1.partitions {
+            for a in &part.accepts {
+                seen[a.rule_id as usize] = true;
+            }
+        }
+        for r in &rs1.rules {
+            assert!(seen[r.id as usize], "v1 rule {} lost in compilation", r.id);
+        }
+        // v2: §3.2.2 splitting may *legitimately* drop rules whose range is
+        // fully shadowed by strictly tighter overlapping ranges (they can
+        // never win), but that must stay rare.
+        let (_, rs2, p2, _) = compile_small(StandardVersion::V2, 300, &CompileOptions::default());
+        let mut seen = vec![false; rs2.rules.len() + 4000];
+        for part in &p2.partitions {
+            for a in &part.accepts {
+                seen[a.rule_id as usize] = true;
+            }
+        }
+        let lost = rs2.rules.iter().filter(|r| !seen[r.id as usize]).count();
+        assert!(
+            lost <= rs2.rules.len() / 100,
+            "v2 lost {lost} of {} rules (only fully-shadowed ranges may drop)",
+            rs2.rules.len()
+        );
+    }
+
+    #[test]
+    fn split_produces_disjoint_covers() {
+        // Two identical rules with nested flight ranges must be split so no
+        // flight number matches both.
+        let schema = Schema::for_version(StandardVersion::V2);
+        let fr = schema.range_index(RangeSlot::ArrFlightRange).unwrap();
+        let mk = |id: u32, lo: u32, hi: u32| {
+            let mut r = Rule {
+                id,
+                exact: vec![WILDCARD; schema.exact_slots.len()],
+                ranges: schema.range_slots.iter().map(|s| Schema::full_range(*s)).collect(),
+                cs_ind: Some(false),
+                decision_min: 30,
+            };
+            r.exact[0] = 7; // station
+            r.ranges[fr] = (lo, hi);
+            r
+        };
+        // NOTE: decision_min equal so they share a conflict signature.
+        let rules = vec![
+            WeightedRule { rule: mk(0, 700, 1000), weight: 1.0 },
+            WeightedRule { rule: mk(1, 700, 800), weight: 2.0 },
+        ];
+        let out = split_overlapping_ranges(&schema, rules);
+        // Fig 3c: [700,800]→rule1, [801,1000]→rule0.
+        assert_eq!(out.len(), 2);
+        let mut ranges: Vec<(u32, u32, u32, f32)> =
+            out.iter().map(|wr| {
+                let (lo, hi) = wr.rule.ranges[fr];
+                (wr.rule.id, lo, hi, wr.weight)
+            }).collect();
+        ranges.sort_by_key(|r| r.1);
+        assert_eq!(ranges[0], (1, 700, 800, 2.0));
+        assert_eq!(ranges[1], (0, 801, 1000, 1.0));
+    }
+
+    #[test]
+    fn split_overlap_count_is_moderate() {
+        // §3.2.2: "zero to a few hundred among an average of 160k rules".
+        let mut cfg = GeneratorConfig::small(43, 2000);
+        cfg.overlap_conflicts = 25;
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let (_, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        assert!(stats.rules_added_by_split > 0, "injected overlaps must split");
+        assert!(
+            stats.rules_added_by_split < rs.rules.len() / 5,
+            "splitting must stay moderate: {}",
+            stats.rules_added_by_split
+        );
+    }
+
+    #[test]
+    fn prefix_merging_compresses() {
+        // Many rules at one station share wildcard prefixes: the trie must
+        // be much smaller than rules × depth states.
+        let (_, rs, p, s) = compile_small(StandardVersion::V1, 400, &CompileOptions::default());
+        let naive_states = rs.rules.len() * s.depth;
+        let actual: usize = p.partitions.iter().map(|n| {
+            n.states.iter().map(Vec::len).sum::<usize>()
+        }).sum();
+        assert!(
+            actual < naive_states / 2,
+            "prefix sharing too weak: {actual} vs naive {naive_states}"
+        );
+    }
+
+    #[test]
+    fn station_routing_covers_all_partitions() {
+        let (_, _, p, _) = compile_small(StandardVersion::V2, 300, &CompileOptions::default());
+        let routed: usize =
+            p.by_station.values().map(Vec::len).sum::<usize>() + p.global.len();
+        assert_eq!(routed, p.partitions.len());
+    }
+}

@@ -1,0 +1,218 @@
+//! The Route Scoring module ([17], §6.2): a gradient-boosted decision-tree
+//! ensemble that scores candidate routes, previously accelerated on FPGAs
+//! in its own right and — in the paper's Fig 14 proposal — co-located with
+//! MCT on the same board to keep the FPGA busy.
+//!
+//! We implement (a) the functional scorer (a real GBT-ensemble inference
+//! engine over route features), (b) its datapath occupancy model for the
+//! combined-deployment scenario of Table 3, and (c) the "move scoring
+//! earlier" capacity argument: inside the Domain Explorer the module must
+//! score tens of thousands of routes per user query instead of the few
+//! hundred the Route Selection stage sees (§6.2).
+
+use crate::prng::Rng;
+use crate::workload::TravelSolution;
+
+/// Features extracted from a candidate route (a Travel Solution).
+pub const N_FEATURES: usize = 12;
+
+/// One internal node / leaf of a decision tree (array-encoded full binary
+/// tree: children of `i` at `2i+1` / `2i+2`).
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    /// Feature index; `u8::MAX` marks a leaf.
+    feature: u8,
+    threshold: f32,
+    /// Leaf payload (ignored for internal nodes).
+    value: f32,
+}
+
+/// A fixed-depth decision tree.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+    /// Depth the tree was built with (exposed for occupancy estimates).
+    pub depth: usize,
+}
+
+impl Tree {
+    /// Inference: root-to-leaf walk.
+    #[inline]
+    pub fn predict(&self, x: &[f32; N_FEATURES]) -> f32 {
+        let mut i = 0usize;
+        loop {
+            let n = self.nodes[i];
+            if n.feature == u8::MAX {
+                return n.value;
+            }
+            i = if x[n.feature as usize] <= n.threshold { 2 * i + 1 } else { 2 * i + 2 };
+        }
+    }
+}
+
+/// The boosted ensemble.
+#[derive(Debug, Clone)]
+pub struct RouteScorer {
+    pub trees: Vec<Tree>,
+}
+
+impl RouteScorer {
+    /// Deterministic synthetic ensemble (the production model of [17] is
+    /// proprietary; shape matters: ~100 trees of depth ~6).
+    pub fn synthetic(seed: u64, n_trees: usize, depth: usize) -> RouteScorer {
+        let mut rng = Rng::new(seed ^ 0x5C04E5);
+        let trees = (0..n_trees)
+            .map(|_| {
+                let n_nodes = (1usize << (depth + 1)) - 1;
+                let first_leaf = (1usize << depth) - 1;
+                let nodes = (0..n_nodes)
+                    .map(|i| {
+                        if i >= first_leaf {
+                            Node {
+                                feature: u8::MAX,
+                                threshold: 0.0,
+                                value: (rng.f64() as f32 - 0.5) * 0.2,
+                            }
+                        } else {
+                            Node {
+                                feature: rng.index(N_FEATURES) as u8,
+                                threshold: rng.f64() as f32,
+                                value: 0.0,
+                            }
+                        }
+                    })
+                    .collect();
+                Tree { nodes, depth }
+            })
+            .collect();
+        RouteScorer { trees }
+    }
+
+    /// Score one route: sum of tree outputs, squashed to (0, 1).
+    pub fn score(&self, x: &[f32; N_FEATURES]) -> f32 {
+        let raw: f32 = self.trees.iter().map(|t| t.predict(x)).sum();
+        1.0 / (1.0 + (-raw).exp())
+    }
+
+    /// Score a batch of routes.
+    pub fn score_batch(&self, xs: &[[f32; N_FEATURES]]) -> Vec<f32> {
+        xs.iter().map(|x| self.score(x)).collect()
+    }
+}
+
+/// Route features from a Travel Solution (normalised to ~[0, 1]).
+pub fn features_of(ts: &TravelSolution) -> [f32; N_FEATURES] {
+    let mut f = [0f32; N_FEATURES];
+    let n = ts.mct_queries.len() as f32;
+    f[0] = n / 4.0; // number of connections
+    if let Some(q0) = ts.mct_queries.first() {
+        f[1] = q0.arr_time as f32 / 1440.0;
+        f[2] = q0.dep_time as f32 / 1440.0;
+        f[3] = q0.station as f32 / 512.0;
+        f[4] = q0.arr_carrier_mkt as f32 / 128.0;
+        f[5] = q0.conn_type as f32 / 4.0;
+        f[6] = if q0.arr_codeshare { 1.0 } else { 0.0 };
+        f[7] = q0.capacity as f32 / 600.0;
+        f[8] = q0.day_of_week as f32 / 7.0;
+    }
+    if let Some(ql) = ts.mct_queries.last() {
+        f[9] = ql.dep_time as f32 / 1440.0;
+        f[10] = ql.next_station as f32 / 512.0;
+    }
+    f[11] = 1.0 - n / 5.0; // directness preference
+    f
+}
+
+/// Datapath model of the FPGA Route Scoring kernel (from [17]: a tree
+/// ensemble evaluated as a pipelined forest, one route per cycle once
+/// full). Used by Table 3's combined-occupancy estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct RsHwModel {
+    pub clock_mhz: f64,
+    /// Routes retired per cycle (forest replication factor).
+    pub routes_per_cycle: f64,
+}
+
+impl Default for RsHwModel {
+    fn default() -> Self {
+        RsHwModel { clock_mhz: 220.0, routes_per_cycle: 1.0 }
+    }
+}
+
+impl RsHwModel {
+    pub fn routes_per_second(&self) -> f64 {
+        self.clock_mhz * 1e6 * self.routes_per_cycle
+    }
+
+    /// §6.2: scoring moves inside the Domain Explorer, which must score all
+    /// potential routes (tens of thousands) instead of Route Selection's
+    /// few hundred. Time to score one user query's candidate set:
+    pub fn time_to_score_us(&self, routes: usize) -> f64 {
+        routes as f64 / self.routes_per_second() * 1e6
+    }
+
+    /// Fraction of board time consumed by scoring when co-located with MCT
+    /// (Fig 14), given per-user-query route volume and query rate.
+    pub fn occupancy(&self, routes_per_uq: usize, uq_per_second: f64) -> f64 {
+        (routes_per_uq as f64 * uq_per_second / self.routes_per_second()).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::generator::{generate_world, GeneratorConfig};
+    use crate::workload::{generate_trace, TraceConfig};
+
+    #[test]
+    fn scorer_is_deterministic_and_bounded() {
+        let s1 = RouteScorer::synthetic(1, 100, 6);
+        let s2 = RouteScorer::synthetic(1, 100, 6);
+        let x = [0.3f32; N_FEATURES];
+        assert_eq!(s1.score(&x), s2.score(&x));
+        for t in 0..50 {
+            let x = [(t as f32) / 50.0; N_FEATURES];
+            let y = s1.score(&x);
+            assert!((0.0..1.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn different_routes_get_different_scores() {
+        let s = RouteScorer::synthetic(2, 100, 6);
+        let w = generate_world(&GeneratorConfig::small(5, 10));
+        let trace = generate_trace(&TraceConfig::scaled(3, 5, 50.0), &w);
+        let mut scores: Vec<f32> = trace.queries[0]
+            .solutions
+            .iter()
+            .filter(|ts| !ts.is_direct())
+            .take(20)
+            .map(|ts| s.score(&features_of(ts)))
+            .collect();
+        scores.dedup();
+        assert!(scores.len() > 5, "ensemble must discriminate: {scores:?}");
+    }
+
+    #[test]
+    fn hw_model_scales_with_route_volume() {
+        let m = RsHwModel::default();
+        // §6.2: tens of thousands of routes inside the DE, still sub-ms.
+        let t = m.time_to_score_us(50_000);
+        assert!(t < 1_000.0, "50k routes must score in sub-ms: {t}µs");
+        assert!(m.occupancy(50_000, 1000.0) < 0.5);
+        assert_eq!(m.occupancy(1_000_000, 1e6), 1.0);
+    }
+
+    #[test]
+    fn features_are_normalised() {
+        let w = generate_world(&GeneratorConfig::small(7, 10));
+        let trace = generate_trace(&TraceConfig::scaled(9, 3, 30.0), &w);
+        for uq in &trace.queries {
+            for ts in &uq.solutions {
+                for f in features_of(ts) {
+                    assert!((-0.1..=1.5).contains(&f), "feature {f}");
+                }
+            }
+        }
+    }
+}

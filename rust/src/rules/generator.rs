@@ -1,0 +1,343 @@
+//! Synthetic IATA-like rule-set and world generation.
+//!
+//! The production MCT rule set (160k rules, daily airline feeds) is
+//! proprietary; per DESIGN.md §1 we regenerate rule sets with the
+//! distributional facts the paper relies on:
+//!
+//! * rules are filed **per airport** by every airline operating there, with
+//!   heavy skew towards hub airports (§2.3 "every airline contributes a long
+//!   list of rules for every airport where they operate");
+//! * most criteria are wildcards; precision varies from airport-wide generic
+//!   rules to terminal/carrier/flight-range specific ones (Table 1);
+//! * overlapping flight-number ranges exist but are rare — "zero to a few
+//!   hundred among an average of 160k rules" (§3.2.2);
+//! * a small fraction of v2 rules are code-share rules (§3.2.3–4).
+
+use super::standard::{Schema, StandardVersion};
+use super::types::{ExactSlot, RangeSlot, Rule, RuleSet, World, WILDCARD};
+use crate::prng::Rng;
+
+/// Knobs for the synthetic world + rule set.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    pub seed: u64,
+    pub n_airports: usize,
+    pub n_carriers: usize,
+    pub n_rules: usize,
+    /// Zipf exponent for airport popularity (rules and traffic).
+    pub airport_skew: f64,
+    /// Probability that a given non-structural criterion is a wildcard.
+    pub wildcard_p: f64,
+    /// Fraction of v2 rules that are code-share rules.
+    pub codeshare_p: f64,
+    /// Fraction of rules that carry a (non-wildcard) flight-number range.
+    pub flight_range_p: f64,
+    /// Expected number of *overlapping* flight-range conflicts to inject
+    /// (§3.2.2: zero to a few hundred per 160k rules).
+    pub overlap_conflicts: usize,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            seed: 0xE2B1_00,
+            n_airports: 500,
+            n_carriers: 120,
+            n_rules: 160_000,
+            airport_skew: 1.05,
+            wildcard_p: 0.72,
+            codeshare_p: 0.06,
+            flight_range_p: 0.35,
+            overlap_conflicts: 120,
+        }
+    }
+}
+
+impl GeneratorConfig {
+    /// A small configuration for unit tests and quick examples.
+    pub fn small(seed: u64, n_rules: usize) -> Self {
+        GeneratorConfig {
+            seed,
+            n_airports: 40,
+            n_carriers: 20,
+            n_rules,
+            ..GeneratorConfig::default()
+        }
+    }
+}
+
+/// Generate the value world (reference data).
+pub fn generate_world(cfg: &GeneratorConfig) -> World {
+    let code = |i: usize, len: usize, base: u8| -> String {
+        // Deterministic pseudo-codes: AAA, AAB, ... (skipping ambiguity with
+        // real codes is irrelevant — these are synthetic ids with labels).
+        let mut s = String::new();
+        let mut x = i;
+        for _ in 0..len {
+            s.push((base + (x % 26) as u8) as char);
+            x /= 26;
+        }
+        s.chars().rev().collect()
+    };
+    World {
+        airports: (0..cfg.n_airports).map(|i| code(i, 3, b'A')).collect(),
+        carriers: (0..cfg.n_carriers).map(|i| code(i, 2, b'A')).collect(),
+        terminals: (1..=6).map(|i| format!("T{i}")).collect(),
+        regions: vec!["Schengen".into(), "International".into(), "Domestic".into()],
+        aircraft: (0..20).map(|i| format!("AC{i:02}")).collect(),
+        services: vec!["J".into(), "C".into(), "G".into(), "P".into()],
+        conn_types: vec!["D/D".into(), "D/I".into(), "I/D".into(), "I/I".into()],
+        seasons: vec!["W20".into(), "S21".into(), "W21".into(), "S22".into()],
+    }
+}
+
+/// Precision tiers, as in Table 1's "Precision" column: airlines file a few
+/// broad airport-wide defaults (almost everything wildcard) alongside
+/// terminal/carrier/flight-specific rules. The tier scales the per-slot
+/// wildcard probability.
+fn tier_wildcard_p(rng: &mut Rng, base: f64) -> f64 {
+    let t = rng.f64();
+    if t < 0.25 {
+        0.97 // Low precision: airport-wide default
+    } else if t < 0.65 {
+        (base + 0.16).min(0.95) // Middle
+    } else {
+        base - 0.10 // High
+    }
+}
+
+fn gen_exact(
+    rng: &mut Rng,
+    world: &World,
+    wildcard_p: f64,
+    slot: ExactSlot,
+    station: u32,
+) -> u32 {
+    use ExactSlot::*;
+    // Station is structural: always set (rules are filed per airport).
+    if slot == Station {
+        return station;
+    }
+    if rng.chance(wildcard_p) {
+        return WILDCARD;
+    }
+    let n = match slot {
+        Station => world.airports.len(),
+        PrevStation | NextStation => world.airports.len(),
+        ArrTerminal | DepTerminal => world.terminals.len(),
+        ArrRegion | DepRegion => world.regions.len(),
+        DayOfWeek => World::DOW_MAX as usize,
+        Season => world.seasons.len(),
+        ArrAircraft | DepAircraft => world.aircraft.len(),
+        ConnType => world.conn_types.len(),
+        ArrService | DepService => world.services.len(),
+        ArrCarrier | DepCarrier | ArrCarrierMkt | ArrCarrierOp | DepCarrierMkt
+        | DepCarrierOp => world.carriers.len(),
+    };
+    match slot {
+        // carriers follow the traffic skew
+        ArrCarrier | DepCarrier | ArrCarrierMkt | ArrCarrierOp | DepCarrierMkt
+        | DepCarrierOp => rng.zipf(n, 0.9) as u32,
+        PrevStation | NextStation => rng.zipf(n, 0.9) as u32,
+        _ => rng.index(n) as u32,
+    }
+}
+
+fn gen_range(
+    rng: &mut Rng,
+    cfg: &GeneratorConfig,
+    slot: RangeSlot,
+    wildcard_p: f64,
+) -> (u32, u32) {
+    use RangeSlot::*;
+    let full = Schema::full_range(slot);
+    // Precision tier modulates range filing the same way it does wildcards.
+    let tier_scale = ((1.0 - wildcard_p) / (1.0 - cfg.wildcard_p)).clamp(0.05, 1.6);
+    let set_p = tier_scale
+        * match slot {
+            ArrFlightRange | DepFlightRange => cfg.flight_range_p,
+            CsFlightRange => 0.0, // populated by the code-share rewrite only
+            EffDateRange => 0.35,
+            ArrTimeRange | DepTimeRange => 0.20,
+            CapacityRange => 0.10,
+        };
+    if !rng.chance(set_p) {
+        return full;
+    }
+    let max = full.1;
+    // Flight ranges: airlines file block ranges like [100, 499] or single
+    // flights. Mix of tight and broad.
+    let width = match slot {
+        ArrFlightRange | DepFlightRange | CsFlightRange => {
+            *rng.pick(&[0u32, 9, 49, 99, 399, 999, 2999])
+        }
+        EffDateRange => *rng.pick(&[29, 89, 179, 364]),
+        ArrTimeRange | DepTimeRange => *rng.pick(&[119, 239, 479]),
+        CapacityRange => *rng.pick(&[49, 99, 199]),
+    };
+    let lo = rng.range_u32(0, max - width);
+    (lo, lo + width)
+}
+
+/// Generate a seeded rule set under the given standard version.
+///
+/// Rules are assigned ids in generation order; the distribution over
+/// airports is Zipf-skewed so hub airports carry thousands of rules while
+/// the tail carries a handful — this is what makes the NFA partitioning and
+/// the per-airport CPU caches (§5.2) interesting.
+pub fn generate_rule_set(
+    cfg: &GeneratorConfig,
+    world: &World,
+    version: StandardVersion,
+) -> RuleSet {
+    let schema = Schema::for_version(version);
+    let mut rng = Rng::new(cfg.seed ^ (version as u64 + 1).wrapping_mul(0xA5A5_5A5A));
+    // §3.3: the v2 standard arrives with a "larger set of rules" — airlines
+    // file additional code-share and split-criteria rules. We model the
+    // production observation as +25 % filings under v2.
+    let n_rules = match version {
+        StandardVersion::V1 => cfg.n_rules,
+        StandardVersion::V2 => cfg.n_rules + cfg.n_rules / 4,
+    };
+    let mut rules = Vec::with_capacity(n_rules);
+    for id in 0..n_rules {
+        let station = rng.zipf(cfg.n_airports, cfg.airport_skew) as u32;
+        let wildcard_p = tier_wildcard_p(&mut rng, cfg.wildcard_p);
+        let exact = schema
+            .exact_slots
+            .iter()
+            .map(|s| gen_exact(&mut rng, world, wildcard_p, *s, station))
+            .collect();
+        let ranges = schema
+            .range_slots
+            .iter()
+            .map(|s| gen_range(&mut rng, cfg, *s, wildcard_p))
+            .collect();
+        let cs_ind = match version {
+            StandardVersion::V1 => None,
+            StandardVersion::V2 => Some(rng.chance(cfg.codeshare_p)),
+        };
+        // Decisions: 10..=180 minutes, biased to the common 25–90 band.
+        let decision_min = *rng.pick(&[20u16, 25, 30, 35, 40, 45, 50, 60, 75, 90, 120, 180]);
+        rules.push(Rule { id: id as u32, exact, ranges, cs_ind, decision_min });
+    }
+    inject_overlaps(&mut rng, &schema, cfg, &mut rules);
+    RuleSet { version, rules }
+}
+
+/// Inject the §3.2.2 pathology: pairs of rules at the same airport that are
+/// identical except for *overlapping* flight-number ranges of different
+/// widths, forcing the NFA parser's offline range-splitting to fire.
+fn inject_overlaps(rng: &mut Rng, schema: &Schema, cfg: &GeneratorConfig, rules: &mut Vec<Rule>) {
+    let Some(fr) = schema.range_index(RangeSlot::ArrFlightRange) else { return };
+    let n = cfg.overlap_conflicts.min(rules.len() / 2);
+    for _ in 0..n {
+        let i = rng.index(rules.len());
+        let mut outer = rules[i].clone();
+        let mut inner = rules[i].clone();
+        let lo = rng.range_u32(0, World::FLIGHT_NO_MAX - 1000);
+        outer.ranges[fr] = (lo, lo + 999);
+        inner.ranges[fr] = (lo + 200, lo + 399);
+        outer.id = rules.len() as u32;
+        inner.id = rules.len() as u32 + 1;
+        inner.decision_min = outer.decision_min.saturating_sub(10).max(10);
+        rules.push(outer);
+        rules.push(inner);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::standard::{evaluate_ruleset, match_rule};
+
+    #[test]
+    fn world_codes_are_unique() {
+        let w = generate_world(&GeneratorConfig::default());
+        let mut a = w.airports.clone();
+        a.sort();
+        a.dedup();
+        assert_eq!(a.len(), w.airports.len());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = GeneratorConfig::small(7, 500);
+        let w = generate_world(&cfg);
+        let a = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let b = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        assert_eq!(a.rules, b.rules);
+    }
+
+    #[test]
+    fn versions_produce_schema_shaped_rules() {
+        let cfg = GeneratorConfig::small(11, 200);
+        let w = generate_world(&cfg);
+        for v in [StandardVersion::V1, StandardVersion::V2] {
+            let schema = Schema::for_version(v);
+            let rs = generate_rule_set(&cfg, &w, v);
+            for r in &rs.rules {
+                assert_eq!(r.exact.len(), schema.exact_slots.len());
+                assert_eq!(r.ranges.len(), schema.range_slots.len());
+                assert_eq!(r.cs_ind.is_some(), v == StandardVersion::V2);
+            }
+        }
+    }
+
+    #[test]
+    fn station_is_always_set() {
+        let cfg = GeneratorConfig::small(13, 300);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let si = schema.exact_index(ExactSlot::Station).unwrap();
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        assert!(rs.rules.iter().all(|r| r.exact[si] != WILDCARD));
+    }
+
+    #[test]
+    fn airport_distribution_is_skewed() {
+        let cfg = GeneratorConfig::small(17, 2000);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V1);
+        let si = schema.exact_index(ExactSlot::Station).unwrap();
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V1);
+        let mut counts = vec![0usize; cfg.n_airports];
+        for r in &rs.rules {
+            counts[r.exact[si] as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let avg = rs.rules.len() / cfg.n_airports;
+        assert!(max > 4 * avg, "hub airports must dominate: max={max} avg={avg}");
+    }
+
+    #[test]
+    fn overlap_injection_creates_conflicting_pairs() {
+        let mut cfg = GeneratorConfig::small(19, 400);
+        cfg.overlap_conflicts = 10;
+        let w = generate_world(&cfg);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        // v2 files +25 % rules (§3.3 "larger set of rules") plus the 2×10
+        // injected overlap pairs.
+        assert_eq!(rs.rules.len(), 500 + 20);
+    }
+
+    #[test]
+    fn generated_rules_do_match_generated_like_queries() {
+        // Smoke: at least some rules fire for station-targeted queries.
+        let cfg = GeneratorConfig::small(23, 1000);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let mut hit = 0;
+        for st in 0..10u32 {
+            let q = crate::workload::query_for_station(&w, st, 42 + st as u64);
+            let d = evaluate_ruleset(&schema, &rs, &q);
+            if d.matched() {
+                hit += 1;
+                let r = rs.rules.iter().find(|r| r.id == d.rule_id).unwrap();
+                assert!(match_rule(&schema, r, &q));
+            }
+        }
+        assert!(hit > 0, "no rule matched any of 10 station queries");
+    }
+}

@@ -1,0 +1,19 @@
+//! MCT business-rule domain: the IATA-like rule standards (v1 / v2), the
+//! value world (airports, carriers, …), rule sets, and the synthetic
+//! rule-set generator.
+//!
+//! The real IATA Minimum-Connect-Time standards (v1.1 [10], v2.1 [11]) are
+//! proprietary; per DESIGN.md §1 we re-model their *structure* from what the
+//! paper states: 34 declared fields, 22 consolidated criteria in v1 vs 26 in
+//! v2, numeric ranges expanded min/max in v2 (§3.2.1), range-size-dependent
+//! precision weights (§3.2.2), and code-share cross-matching for carriers and
+//! flight numbers (§3.2.3–4).
+
+pub mod generator;
+pub mod serde_text;
+pub mod standard;
+pub mod types;
+
+pub use generator::{GeneratorConfig, generate_rule_set, generate_world};
+pub use standard::{Schema, StandardVersion, match_rule, rule_weight};
+pub use types::{MctQuery, Rule, RuleSet, World, WILDCARD};

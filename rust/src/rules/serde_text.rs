@@ -1,0 +1,187 @@
+//! Line-oriented text serialisation of rule sets (the `.mct` format of
+//! DESIGN.md §4) — the stand-in for the daily airline feed files the
+//! production NFA toolchain consumes (§3.1 "Rule set … updated once a day").
+//!
+//! Format (one rule per line, `#`-comments, header fixes the version):
+//!
+//! ```text
+//! mct-version v2
+//! rule <id> <decision_min> cs=<0|1|-> e=<v|*>,...  r=<lo>-<hi>|*,...
+//! ```
+//!
+//! Deterministic round-trip: `read(write(rs)) == rs`.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::standard::{Schema, StandardVersion};
+use super::types::{Rule, RuleSet, WILDCARD};
+
+/// Serialise a rule set to `.mct` text.
+pub fn to_string(rs: &RuleSet) -> String {
+    let schema = Schema::for_version(rs.version);
+    let mut out = String::with_capacity(rs.rules.len() * 64);
+    out.push_str(&format!(
+        "# erbium-search rule feed ({} exact slots, {} range slots)\n",
+        schema.exact_slots.len(),
+        schema.range_slots.len()
+    ));
+    out.push_str(&format!("mct-version {}\n", rs.version.name()));
+    for r in &rs.rules {
+        let exacts: Vec<String> = r
+            .exact
+            .iter()
+            .map(|v| if *v == WILDCARD { "*".into() } else { v.to_string() })
+            .collect();
+        let ranges: Vec<String> = r
+            .ranges
+            .iter()
+            .zip(&schema.range_slots)
+            .map(|((lo, hi), slot)| {
+                if (*lo, *hi) == Schema::full_range(*slot) {
+                    "*".into()
+                } else {
+                    format!("{lo}-{hi}")
+                }
+            })
+            .collect();
+        let cs = match r.cs_ind {
+            None => "-".into(),
+            Some(b) => (b as u8).to_string(),
+        };
+        out.push_str(&format!(
+            "rule {} {} cs={} e={} r={}\n",
+            r.id,
+            r.decision_min,
+            cs,
+            exacts.join(","),
+            ranges.join(",")
+        ));
+    }
+    out
+}
+
+/// Parse `.mct` text.
+pub fn from_str(text: &str) -> Result<RuleSet> {
+    let mut version: Option<StandardVersion> = None;
+    let mut rules = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(v) = line.strip_prefix("mct-version ") {
+            version = Some(match v.trim() {
+                "v1" => StandardVersion::V1,
+                "v2" => StandardVersion::V2,
+                other => bail!("line {}: unknown version {other:?}", ln + 1),
+            });
+            continue;
+        }
+        let Some(body) = line.strip_prefix("rule ") else {
+            bail!("line {}: unexpected {line:?}", ln + 1);
+        };
+        let version = version.context("rule before mct-version header")?;
+        let schema = Schema::for_version(version);
+        let fields: Vec<&str> = body.split_whitespace().collect();
+        if fields.len() != 5 {
+            bail!("line {}: malformed rule", ln + 1);
+        }
+        let id: u32 = fields[0].parse()?;
+        let decision_min: u16 = fields[1].parse()?;
+        let cs = fields[2].strip_prefix("cs=").context("cs field")?;
+        let cs_ind = match cs {
+            "-" => None,
+            "0" => Some(false),
+            "1" => Some(true),
+            _ => bail!("line {}: bad cs {cs:?}", ln + 1),
+        };
+        let exact: Vec<u32> = fields[3]
+            .strip_prefix("e=")
+            .context("e field")?
+            .split(',')
+            .map(|v| if v == "*" { Ok(WILDCARD) } else { v.parse().map_err(anyhow::Error::from) })
+            .collect::<Result<_>>()?;
+        let ranges: Vec<(u32, u32)> = fields[4]
+            .strip_prefix("r=")
+            .context("r field")?
+            .split(',')
+            .enumerate()
+            .map(|(i, v)| {
+                if v == "*" {
+                    Ok(Schema::full_range(schema.range_slots[i]))
+                } else {
+                    let (lo, hi) = v.split_once('-').context("range")?;
+                    Ok((lo.parse()?, hi.parse()?))
+                }
+            })
+            .collect::<Result<_>>()?;
+        if exact.len() != schema.exact_slots.len() || ranges.len() != schema.range_slots.len() {
+            bail!("line {}: slot count mismatch for {}", ln + 1, version.name());
+        }
+        rules.push(Rule { id, exact, ranges, cs_ind, decision_min });
+    }
+    Ok(RuleSet { version: version.context("missing mct-version header")?, rules })
+}
+
+/// Write a rule set to a file.
+pub fn write_rule_set(rs: &RuleSet, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(to_string(rs).as_bytes())?;
+    Ok(())
+}
+
+/// Read a rule set from a file.
+pub fn read_rule_set(path: impl AsRef<Path>) -> Result<RuleSet> {
+    from_str(&std::fs::read_to_string(path.as_ref())?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+
+    #[test]
+    fn roundtrip_both_versions() {
+        for v in [StandardVersion::V1, StandardVersion::V2] {
+            let cfg = GeneratorConfig::small(777, 150);
+            let w = generate_world(&cfg);
+            let rs = generate_rule_set(&cfg, &w, v);
+            let text = to_string(&rs);
+            let back = from_str(&text).unwrap();
+            assert_eq!(back.version, rs.version);
+            assert_eq!(back.rules, rs.rules, "{v:?} roundtrip");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(from_str("rule 0 30 cs=- e=* r=*").is_err(), "missing header");
+        assert!(from_str("mct-version v3").is_err(), "unknown version");
+        let bad = "mct-version v2\nrule 0 30 cs=2 e=* r=*";
+        assert!(from_str(bad).is_err(), "bad cs flag");
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let text = "# hello\n\nmct-version v1\n";
+        let rs = from_str(text).unwrap();
+        assert_eq!(rs.version, StandardVersion::V1);
+        assert!(rs.rules.is_empty());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = GeneratorConfig::small(778, 40);
+        let w = generate_world(&cfg);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let path = std::env::temp_dir().join("erbium_test_rules.mct");
+        write_rule_set(&rs, &path).unwrap();
+        let back = read_rule_set(&path).unwrap();
+        assert_eq!(back.rules, rs.rules);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,502 @@
+//! The two MCT standard versions: schemas, ground-truth match semantics and
+//! precision weights.
+//!
+//! This module is the *specification*: everything else (CPU baseline, NFA
+//! compiler + native interpreter, the XLA/Pallas path) must agree with
+//! [`match_rule`] / [`evaluate_ruleset`] — the cross-layer integration tests
+//! enforce this.
+//!
+//! Declared-field accounting (the paper's "actual rules have 34 criteria",
+//! Table 1): 20 distinct exact slots + 7 distinct range slots + code-share
+//! indicator + airline owner + effective flag + precision class + decision +
+//! remark = 34 declared fields. Consolidated (= NFA levels, §3.3): **22 in
+//! v1** (16 exact + 6 single-step ranges) and **26 in v2** (18 exact + 4
+//! ranges expanded to min/max steps, §3.2.1).
+
+use super::types::{ExactSlot, MctDecision, MctQuery, RangeSlot, Rule, RuleSet, World, WILDCARD};
+
+/// IATA MCT standard version (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StandardVersion {
+    V1,
+    V2,
+}
+
+impl StandardVersion {
+    pub fn name(self) -> &'static str {
+        match self {
+            StandardVersion::V1 => "v1",
+            StandardVersion::V2 => "v2",
+        }
+    }
+}
+
+/// A consolidated criterion = one NFA level (§3.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Consolidated {
+    /// Exact-or-wildcard match on a dictionary value.
+    Exact(ExactSlot),
+    /// v1: whole range in a single step (`lo <= q <= hi`).
+    Range(RangeSlot),
+    /// v2: expanded minimum bound step (`q >= lo`).
+    RangeMin(RangeSlot),
+    /// v2: expanded maximum bound step (`q <= hi`).
+    RangeMax(RangeSlot),
+}
+
+/// Version-specific rule layout + criterion metadata.
+#[derive(Debug, Clone)]
+pub struct Schema {
+    pub version: StandardVersion,
+    /// Declared exact slots, in rule-layout order (`Rule::exact[i]`).
+    pub exact_slots: Vec<ExactSlot>,
+    /// Declared range slots (`Rule::ranges[i]`).
+    pub range_slots: Vec<RangeSlot>,
+}
+
+impl Schema {
+    pub fn for_version(version: StandardVersion) -> Schema {
+        use ExactSlot::*;
+        use RangeSlot::*;
+        let shared_exact = [
+            Station, ArrTerminal, DepTerminal, ArrRegion, DepRegion, DayOfWeek, Season,
+            ArrAircraft, DepAircraft, ConnType, PrevStation, NextStation, ArrService, DepService,
+        ];
+        match version {
+            StandardVersion::V1 => Schema {
+                version,
+                exact_slots: shared_exact.iter().copied().chain([ArrCarrier, DepCarrier]).collect(),
+                range_slots: vec![
+                    EffDateRange, ArrFlightRange, DepFlightRange, ArrTimeRange, DepTimeRange,
+                    CapacityRange,
+                ],
+            },
+            StandardVersion::V2 => Schema {
+                version,
+                exact_slots: shared_exact
+                    .iter()
+                    .copied()
+                    .chain([ArrCarrierMkt, ArrCarrierOp, DepCarrierMkt, DepCarrierOp])
+                    .collect(),
+                range_slots: vec![EffDateRange, ArrFlightRange, DepFlightRange, CsFlightRange],
+            },
+        }
+    }
+
+    /// Index of an exact slot in the rule layout.
+    pub fn exact_index(&self, slot: ExactSlot) -> Option<usize> {
+        self.exact_slots.iter().position(|s| *s == slot)
+    }
+
+    /// Index of a range slot in the rule layout.
+    pub fn range_index(&self, slot: RangeSlot) -> Option<usize> {
+        self.range_slots.iter().position(|s| *s == slot)
+    }
+
+    /// The consolidated criteria = NFA levels, in declared order (the NFA
+    /// optimiser may reorder them later).
+    pub fn consolidated(&self) -> Vec<Consolidated> {
+        let mut out: Vec<Consolidated> =
+            self.exact_slots.iter().map(|s| Consolidated::Exact(*s)).collect();
+        match self.version {
+            StandardVersion::V1 => {
+                out.extend(self.range_slots.iter().map(|s| Consolidated::Range(*s)));
+            }
+            StandardVersion::V2 => {
+                for s in &self.range_slots {
+                    out.push(Consolidated::RangeMin(*s));
+                    out.push(Consolidated::RangeMax(*s));
+                }
+            }
+        }
+        out
+    }
+
+    /// Intrinsic precision weight of a criterion (§3.2.2: "every criterion
+    /// has its intrinsic and unique weight value").
+    pub fn intrinsic_weight(slot_weight: SlotRef) -> f32 {
+        use ExactSlot::*;
+        use RangeSlot::*;
+        match slot_weight {
+            SlotRef::Exact(s) => match s {
+                Station => 16.0,
+                PrevStation | NextStation => 6.0,
+                ArrTerminal | DepTerminal => 3.0,
+                ArrRegion | DepRegion => 2.0,
+                ArrCarrier | DepCarrier => 5.0,
+                ArrCarrierMkt | DepCarrierMkt => 5.0,
+                ArrCarrierOp | DepCarrierOp => 5.5,
+                DayOfWeek => 1.5,
+                Season => 1.0,
+                ArrAircraft | DepAircraft => 2.5,
+                ConnType => 4.0,
+                ArrService | DepService => 1.25,
+            },
+            SlotRef::Range(s) => match s {
+                ArrFlightRange | DepFlightRange => 8.0,
+                CsFlightRange => 8.5,
+                EffDateRange => 1.75,
+                ArrTimeRange | DepTimeRange => 2.25,
+                CapacityRange => 0.75,
+            },
+        }
+    }
+
+    /// Full (wildcard) range for a range slot's domain.
+    pub fn full_range(slot: RangeSlot) -> (u32, u32) {
+        (0, Self::domain_max(slot))
+    }
+
+    /// Inclusive domain maximum of a range slot.
+    pub fn domain_max(slot: RangeSlot) -> u32 {
+        use RangeSlot::*;
+        match slot {
+            ArrFlightRange | DepFlightRange | CsFlightRange => World::FLIGHT_NO_MAX - 1,
+            EffDateRange => World::DATE_MAX - 1,
+            ArrTimeRange | DepTimeRange => World::TIME_MAX - 1,
+            CapacityRange => World::CAPACITY_MAX - 1,
+        }
+    }
+}
+
+/// A reference to either kind of slot, for weight lookups.
+#[derive(Debug, Clone, Copy)]
+pub enum SlotRef {
+    Exact(ExactSlot),
+    Range(RangeSlot),
+}
+
+/// Extract the query value for an exact slot, applying v2 cross-matching
+/// semantics (§3.2.3): the *rule-side* effective value is computed in
+/// [`effective_exact`], the query side is fixed.
+pub fn query_exact(slot: ExactSlot, q: &MctQuery) -> u32 {
+    use ExactSlot::*;
+    match slot {
+        Station => q.station,
+        ArrTerminal => q.arr_terminal,
+        DepTerminal => q.dep_terminal,
+        ArrRegion => q.arr_region,
+        DepRegion => q.dep_region,
+        DayOfWeek => q.day_of_week,
+        Season => q.season,
+        ArrAircraft => q.arr_aircraft,
+        DepAircraft => q.dep_aircraft,
+        ConnType => q.conn_type,
+        PrevStation => q.prev_station,
+        NextStation => q.next_station,
+        ArrService => q.arr_service,
+        DepService => q.dep_service,
+        // v1 has a single carrier per direction; conventionally the
+        // marketing carrier is what v1 systems filed and matched.
+        ArrCarrier => q.arr_carrier_mkt,
+        DepCarrier => q.dep_carrier_mkt,
+        ArrCarrierMkt => q.arr_carrier_mkt,
+        ArrCarrierOp => q.arr_carrier_op,
+        DepCarrierMkt => q.dep_carrier_mkt,
+        DepCarrierOp => q.dep_carrier_op,
+    }
+}
+
+/// Extract the query value for a range slot. §3.2.4: the code-share flight
+/// range is checked against the *operating* flight number; the plain flight
+/// ranges are checked against the marketing flight number.
+pub fn query_range_value(slot: RangeSlot, q: &MctQuery) -> u32 {
+    use RangeSlot::*;
+    match slot {
+        EffDateRange => q.date,
+        ArrFlightRange => q.arr_flight_mkt,
+        DepFlightRange => q.dep_flight_mkt,
+        ArrTimeRange => q.arr_time,
+        DepTimeRange => q.dep_time,
+        CapacityRange => q.capacity,
+        CsFlightRange => q.arr_flight_op,
+    }
+}
+
+/// Rule-side effective exact value after the §3.2.3 code-share rewrite:
+/// when a v2 rule is *not* a code-share rule, its operating-carrier slots
+/// take the marketing values (the NFA parser performs the same duplication).
+pub fn effective_exact(schema: &Schema, rule: &Rule, idx: usize) -> u32 {
+    use ExactSlot::*;
+    let slot = schema.exact_slots[idx];
+    let declared = rule.exact[idx];
+    if schema.version == StandardVersion::V2 && !rule.cs_ind.unwrap_or(false) {
+        match slot {
+            ArrCarrierOp => {
+                let mkt = rule.exact[schema.exact_index(ArrCarrierMkt).unwrap()];
+                if declared == WILDCARD { mkt } else { declared }
+            }
+            DepCarrierOp => {
+                let mkt = rule.exact[schema.exact_index(DepCarrierMkt).unwrap()];
+                if declared == WILDCARD { mkt } else { declared }
+            }
+            _ => declared,
+        }
+    } else {
+        declared
+    }
+}
+
+/// Rule-side effective range after the §3.2.4 code-share rewrite: for a
+/// code-share rule the declared arrival flight range migrates to the
+/// CsFlightRange criterion (matched against the operating flight number) and
+/// the plain ArrFlightRange becomes a wildcard.
+pub fn effective_range(schema: &Schema, rule: &Rule, idx: usize) -> (u32, u32) {
+    use RangeSlot::*;
+    let slot = schema.range_slots[idx];
+    if schema.version != StandardVersion::V2 {
+        return rule.ranges[idx];
+    }
+    let cs = rule.cs_ind.unwrap_or(false);
+    match slot {
+        ArrFlightRange if cs => Schema::full_range(ArrFlightRange),
+        CsFlightRange => {
+            if cs {
+                rule.ranges[schema.range_index(ArrFlightRange).unwrap()]
+            } else {
+                Schema::full_range(CsFlightRange)
+            }
+        }
+        _ => rule.ranges[idx],
+    }
+}
+
+/// Ground-truth predicate: does `rule` match `q` under `schema`?
+pub fn match_rule(schema: &Schema, rule: &Rule, q: &MctQuery) -> bool {
+    for (i, slot) in schema.exact_slots.iter().enumerate() {
+        let rv = effective_exact(schema, rule, i);
+        if rv != WILDCARD && rv != query_exact(*slot, q) {
+            return false;
+        }
+    }
+    for (i, slot) in schema.range_slots.iter().enumerate() {
+        let (lo, hi) = effective_range(schema, rule, i);
+        let v = query_range_value(*slot, q);
+        if v < lo || v > hi {
+            return false;
+        }
+    }
+    true
+}
+
+/// Precision weight of a rule (§3.2.2).
+///
+/// v1: sum of intrinsic weights of all non-wildcard criteria. v2 adds the
+/// dynamic layer for flight-number ranges: larger ranges are less precise —
+/// the intrinsic weight is scaled by `1 - ln(size)/ln(domain)`.
+pub fn rule_weight(schema: &Schema, rule: &Rule) -> f32 {
+    let mut w = 0.0f32;
+    for (i, slot) in schema.exact_slots.iter().enumerate() {
+        if effective_exact(schema, rule, i) != WILDCARD {
+            w += Schema::intrinsic_weight(SlotRef::Exact(*slot));
+        }
+    }
+    for (i, slot) in schema.range_slots.iter().enumerate() {
+        let (lo, hi) = effective_range(schema, rule, i);
+        let full = Schema::full_range(*slot);
+        if (lo, hi) == full {
+            continue; // wildcard range carries no weight
+        }
+        let intrinsic = Schema::intrinsic_weight(SlotRef::Range(*slot));
+        let dynamic = if schema.version == StandardVersion::V2 && is_flight_slot(*slot) {
+            // Strictly monotonic in the range size so that "tighter range ⇒
+            // more precise" holds without ties (the §3.2.2 offline splitting
+            // relies on this to commute with the argmax).
+            let size = (hi - lo + 1) as f32;
+            let domain = (Schema::domain_max(*slot) + 1) as f32;
+            (1.0 - size.ln() / domain.ln()).max(0.0) + 0.01 * (domain - size) / domain
+        } else {
+            1.0
+        };
+        w += intrinsic * dynamic;
+    }
+    w
+}
+
+fn is_flight_slot(slot: RangeSlot) -> bool {
+    matches!(
+        slot,
+        RangeSlot::ArrFlightRange | RangeSlot::DepFlightRange | RangeSlot::CsFlightRange
+    )
+}
+
+/// Reference evaluation of a whole rule set for one query: scan every rule,
+/// keep the most precise match (ties broken towards the lowest rule id).
+/// This is the *semantic oracle* — O(rules) and deliberately unoptimised.
+pub fn evaluate_ruleset(schema: &Schema, rs: &RuleSet, q: &MctQuery) -> MctDecision {
+    let mut best = MctDecision::no_match();
+    for rule in &rs.rules {
+        if match_rule(schema, rule, q) {
+            let w = rule_weight(schema, rule);
+            if !best.matched() || w > best.weight || (w == best.weight && rule.id < best.rule_id) {
+                best = MctDecision { minutes: rule.decision_min, weight: w, rule_id: rule.id };
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wild_rule(schema: &Schema, id: u32, minutes: u16) -> Rule {
+        Rule {
+            id,
+            exact: vec![WILDCARD; schema.exact_slots.len()],
+            ranges: schema.range_slots.iter().map(|s| Schema::full_range(*s)).collect(),
+            cs_ind: if schema.version == StandardVersion::V2 { Some(false) } else { None },
+            decision_min: minutes,
+        }
+    }
+
+    fn any_query() -> MctQuery {
+        MctQuery {
+            station: 0,
+            arr_terminal: 0,
+            dep_terminal: 1,
+            arr_region: 0,
+            dep_region: 1,
+            day_of_week: 3,
+            season: 1,
+            arr_aircraft: 2,
+            dep_aircraft: 2,
+            conn_type: 0,
+            prev_station: 5,
+            next_station: 9,
+            arr_service: 0,
+            dep_service: 0,
+            arr_carrier_mkt: 4,
+            arr_carrier_op: 4,
+            arr_codeshare: false,
+            dep_carrier_mkt: 6,
+            dep_carrier_op: 6,
+            dep_codeshare: false,
+            arr_flight_mkt: 1234,
+            arr_flight_op: 1234,
+            dep_flight_mkt: 777,
+            dep_flight_op: 777,
+            date: 100,
+            arr_time: 600,
+            dep_time: 720,
+            capacity: 180,
+        }
+    }
+
+    #[test]
+    fn consolidated_counts_match_paper() {
+        // §3.3: 22 consolidated criteria in v1, 26 in v2.
+        assert_eq!(Schema::for_version(StandardVersion::V1).consolidated().len(), 22);
+        assert_eq!(Schema::for_version(StandardVersion::V2).consolidated().len(), 26);
+    }
+
+    #[test]
+    fn all_wildcard_rule_matches_everything() {
+        for v in [StandardVersion::V1, StandardVersion::V2] {
+            let schema = Schema::for_version(v);
+            let r = wild_rule(&schema, 0, 45);
+            assert!(match_rule(&schema, &r, &any_query()));
+            assert_eq!(rule_weight(&schema, &r), 0.0);
+        }
+    }
+
+    #[test]
+    fn station_mismatch_rejects() {
+        let schema = Schema::for_version(StandardVersion::V2);
+        let mut r = wild_rule(&schema, 0, 45);
+        let i = schema.exact_index(ExactSlot::Station).unwrap();
+        r.exact[i] = 99;
+        assert!(!match_rule(&schema, &r, &any_query()));
+        r.exact[i] = 0; // query.station
+        assert!(match_rule(&schema, &r, &any_query()));
+    }
+
+    #[test]
+    fn range_containment() {
+        let schema = Schema::for_version(StandardVersion::V1);
+        let mut r = wild_rule(&schema, 0, 45);
+        let i = schema.range_index(RangeSlot::ArrFlightRange).unwrap();
+        r.ranges[i] = (1000, 1500);
+        assert!(match_rule(&schema, &r, &any_query())); // 1234 ∈ [1000,1500]
+        r.ranges[i] = (1300, 1500);
+        assert!(!match_rule(&schema, &r, &any_query()));
+    }
+
+    #[test]
+    fn more_precise_rule_wins() {
+        let schema = Schema::for_version(StandardVersion::V2);
+        let generic = wild_rule(&schema, 0, 90);
+        let mut specific = wild_rule(&schema, 1, 25);
+        specific.exact[schema.exact_index(ExactSlot::Station).unwrap()] = 0;
+        let rs = RuleSet { version: StandardVersion::V2, rules: vec![generic, specific] };
+        let d = evaluate_ruleset(&schema, &rs, &any_query());
+        assert_eq!(d.rule_id, 1);
+        assert_eq!(d.minutes, 25);
+    }
+
+    #[test]
+    fn tighter_flight_range_more_precise_in_v2() {
+        let schema = Schema::for_version(StandardVersion::V2);
+        let i = schema.range_index(RangeSlot::ArrFlightRange).unwrap();
+        let mut wide = wild_rule(&schema, 0, 40);
+        wide.ranges[i] = (0, 5000);
+        let mut tight = wild_rule(&schema, 1, 20);
+        tight.ranges[i] = (1200, 1300);
+        assert!(
+            rule_weight(&schema, &tight) > rule_weight(&schema, &wide),
+            "dynamic precision layer must favour tighter ranges"
+        );
+        // In v1 both would weigh the same.
+        let schema1 = Schema::for_version(StandardVersion::V1);
+        let mut wide1 = wild_rule(&schema1, 0, 40);
+        let mut tight1 = wild_rule(&schema1, 1, 20);
+        let j = schema1.range_index(RangeSlot::ArrFlightRange).unwrap();
+        wide1.ranges[j] = (0, 5000);
+        tight1.ranges[j] = (1200, 1300);
+        assert_eq!(rule_weight(&schema1, &wide1), rule_weight(&schema1, &tight1));
+    }
+
+    #[test]
+    fn codeshare_rule_matches_operating_flight_number() {
+        // §3.2.4: a code-share rule's flight range applies to the operating
+        // flight number.
+        let schema = Schema::for_version(StandardVersion::V2);
+        let mut r = wild_rule(&schema, 0, 30);
+        r.cs_ind = Some(true);
+        r.ranges[schema.range_index(RangeSlot::ArrFlightRange).unwrap()] = (100, 200);
+        let mut q = any_query();
+        q.arr_codeshare = true;
+        q.arr_flight_mkt = 9999; // outside the range
+        q.arr_flight_op = 150; // inside
+        assert!(match_rule(&schema, &r, &q));
+        q.arr_flight_op = 9000;
+        assert!(!match_rule(&schema, &r, &q));
+    }
+
+    #[test]
+    fn non_codeshare_rule_duplicates_marketing_carrier() {
+        // §3.2.3: no code-share indicator ⇒ operating carrier value of the
+        // query must match the rule's *marketing* carrier value.
+        let schema = Schema::for_version(StandardVersion::V2);
+        let mut r = wild_rule(&schema, 0, 30);
+        r.cs_ind = Some(false);
+        r.exact[schema.exact_index(ExactSlot::ArrCarrierMkt).unwrap()] = 4;
+        let mut q = any_query(); // mkt=op=4
+        assert!(match_rule(&schema, &r, &q));
+        q.arr_carrier_op = 8; // operated by someone else → duplicated value rejects
+        assert!(!match_rule(&schema, &r, &q));
+    }
+
+    #[test]
+    fn tie_breaks_to_lowest_id() {
+        let schema = Schema::for_version(StandardVersion::V1);
+        let mut a = wild_rule(&schema, 3, 10);
+        let mut b = wild_rule(&schema, 7, 99);
+        let i = schema.exact_index(ExactSlot::Station).unwrap();
+        a.exact[i] = 0;
+        b.exact[i] = 0;
+        let rs = RuleSet { version: StandardVersion::V1, rules: vec![b, a] };
+        let d = evaluate_ruleset(&schema, &rs, &any_query());
+        assert_eq!(d.rule_id, 3, "equal weights must break ties towards the lowest id");
+    }
+}

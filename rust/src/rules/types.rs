@@ -1,0 +1,234 @@
+//! Value world, rules and queries for the MCT module.
+//!
+//! All criterion values are dictionary ids (`u32`) into the [`World`]; the
+//! sentinel [`WILDCARD`] denotes "any value" in a rule slot. This mirrors the
+//! production system, where the ERBIUM *Encoder* (§4.1) dictionary-encodes
+//! every value before it reaches the accelerator — we simply adopt the
+//! encoded representation as the canonical one and keep the symbol tables in
+//! the `World`.
+
+use std::fmt;
+
+/// Wildcard sentinel for exact-match rule slots ("any value matches").
+pub const WILDCARD: u32 = u32::MAX;
+
+/// The static value universe rules and queries draw from.
+///
+/// Generated once per experiment (seeded); plays the role of the reference
+/// data (airport/carrier tables) that Amadeus loads from industry feeds.
+#[derive(Debug, Clone)]
+pub struct World {
+    /// IATA-like 3-letter airport codes, index = airport id.
+    pub airports: Vec<String>,
+    /// 2-letter carrier codes, index = carrier id.
+    pub carriers: Vec<String>,
+    /// Terminal labels (T1..Tn).
+    pub terminals: Vec<String>,
+    /// Regions (Schengen / International / Domestic).
+    pub regions: Vec<String>,
+    /// Aircraft types.
+    pub aircraft: Vec<String>,
+    /// Service classes.
+    pub services: Vec<String>,
+    /// Connection types (D/D, D/I, I/D, I/I).
+    pub conn_types: Vec<String>,
+    /// Seasons (IATA scheduling seasons).
+    pub seasons: Vec<String>,
+}
+
+impl World {
+    /// Upper bound (exclusive) of the flight-number domain.
+    pub const FLIGHT_NO_MAX: u32 = 10_000;
+    /// Day-number domain: two scheduling years.
+    pub const DATE_MAX: u32 = 730;
+    /// Minutes-of-day domain.
+    pub const TIME_MAX: u32 = 1_440;
+    /// Aircraft-capacity domain upper bound.
+    pub const CAPACITY_MAX: u32 = 600;
+    /// Days of week.
+    pub const DOW_MAX: u32 = 7;
+}
+
+/// Exact-match criterion slots shared by both standard versions.
+///
+/// Order is the *declared* order; the NFA optimiser is free to reorder
+/// levels (§3.1 "NFA shape").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ExactSlot {
+    Station,
+    ArrTerminal,
+    DepTerminal,
+    ArrRegion,
+    DepRegion,
+    DayOfWeek,
+    Season,
+    ArrAircraft,
+    DepAircraft,
+    ConnType,
+    PrevStation,
+    NextStation,
+    ArrService,
+    DepService,
+    // v1 only:
+    ArrCarrier,
+    DepCarrier,
+    // v2 only (code-share split, §3.2.3):
+    ArrCarrierMkt,
+    ArrCarrierOp,
+    DepCarrierMkt,
+    DepCarrierOp,
+}
+
+/// Range criterion slots (inclusive `[lo, hi]` over a numeric domain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RangeSlot {
+    EffDateRange,
+    ArrFlightRange,
+    DepFlightRange,
+    // v1 only:
+    ArrTimeRange,
+    DepTimeRange,
+    CapacityRange,
+    // v2 only (§3.2.4): single code-share flight-number range, matched
+    // against the marketing or operating flight number according to the
+    // code-share indicator.
+    CsFlightRange,
+}
+
+/// One MCT rule, in the *declared* (airline-provided) form.
+///
+/// Slot layout is version-specific and defined by [`super::standard::Schema`];
+/// `exact[i]` / `ranges[i]` line up with `schema.exact_slots[i]` /
+/// `schema.range_slots[i]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    /// Stable id within the rule set (used for deterministic tie-breaks).
+    pub id: u32,
+    /// Exact-match slots; `WILDCARD` = any.
+    pub exact: Vec<u32>,
+    /// Range slots; full-domain range = wildcard.
+    pub ranges: Vec<(u32, u32)>,
+    /// v2 code-share indicator; `None` in v1 rules. Per §3.2.3/§3.2.4 it
+    /// governs the arrival leg: when false/absent, marketing and operating
+    /// carrier are the same and the NFA parser duplicates values; when true,
+    /// the declared flight range must be matched against the *operating*
+    /// flight number (via the added CsFlightRange criterion).
+    pub cs_ind: Option<bool>,
+    /// The decision: minimum connection time, minutes.
+    pub decision_min: u16,
+}
+
+/// A full rule set under one standard version.
+#[derive(Debug, Clone)]
+pub struct RuleSet {
+    pub version: super::standard::StandardVersion,
+    pub rules: Vec<Rule>,
+}
+
+impl RuleSet {
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+/// One MCT query: "what is the minimum connection time for this arrival /
+/// departure pair at this station?" — issued by the Domain Explorer for every
+/// non-direct leg pair of a Travel Solution (§2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MctQuery {
+    pub station: u32,
+    pub arr_terminal: u32,
+    pub dep_terminal: u32,
+    pub arr_region: u32,
+    pub dep_region: u32,
+    pub day_of_week: u32,
+    pub season: u32,
+    pub arr_aircraft: u32,
+    pub dep_aircraft: u32,
+    pub conn_type: u32,
+    pub prev_station: u32,
+    pub next_station: u32,
+    pub arr_service: u32,
+    pub dep_service: u32,
+    /// Marketing / operating arrival carrier (equal when not code-share).
+    pub arr_carrier_mkt: u32,
+    pub arr_carrier_op: u32,
+    /// True if the arriving flight is a code-share flight.
+    pub arr_codeshare: bool,
+    pub dep_carrier_mkt: u32,
+    pub dep_carrier_op: u32,
+    pub dep_codeshare: bool,
+    /// Marketing / operating flight numbers.
+    pub arr_flight_mkt: u32,
+    pub arr_flight_op: u32,
+    pub dep_flight_mkt: u32,
+    pub dep_flight_op: u32,
+    /// Day number of the connection.
+    pub date: u32,
+    /// Arrival / departure times, minutes of day.
+    pub arr_time: u32,
+    pub dep_time: u32,
+    /// Aircraft capacity (v1 criterion).
+    pub capacity: u32,
+}
+
+/// Outcome of an MCT evaluation for one query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MctDecision {
+    /// Minimum connection time, minutes. [`MctDecision::DEFAULT_MIN`] when no
+    /// rule matched.
+    pub minutes: u16,
+    /// Precision weight of the winning rule (0 when none matched).
+    pub weight: f32,
+    /// Id of the winning rule, `u32::MAX` when none matched.
+    pub rule_id: u32,
+}
+
+impl MctDecision {
+    /// Industry-style conservative default when no rule matches.
+    pub const DEFAULT_MIN: u16 = 60;
+
+    pub fn no_match() -> Self {
+        MctDecision { minutes: Self::DEFAULT_MIN, weight: 0.0, rule_id: u32::MAX }
+    }
+    pub fn matched(&self) -> bool {
+        self.rule_id != u32::MAX
+    }
+}
+
+impl fmt::Display for MctDecision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.matched() {
+            write!(f, "{} min (rule {}, w={:.2})", self.minutes, self.rule_id, self.weight)
+        } else {
+            write!(f, "{} min (default)", self.minutes)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wildcard_is_max() {
+        assert_eq!(WILDCARD, u32::MAX);
+    }
+
+    #[test]
+    fn no_match_decision_is_default() {
+        let d = MctDecision::no_match();
+        assert!(!d.matched());
+        assert_eq!(d.minutes, MctDecision::DEFAULT_MIN);
+    }
+
+    #[test]
+    fn decision_display_forms() {
+        let d = MctDecision { minutes: 35, weight: 4.5, rule_id: 7 };
+        assert!(format!("{d}").contains("rule 7"));
+        assert!(format!("{}", MctDecision::no_match()).contains("default"));
+    }
+}

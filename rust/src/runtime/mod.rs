@@ -1,0 +1,252 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`), compile
+//! them on the PJRT CPU client, and execute batches from the L3 hot path.
+//!
+//! Python never runs here — the HLO text produced once by
+//! `python/compile/aot.py` is the entire interface (see that module and
+//! `/opt/xla-example/README.md` for why text, not serialized protos).
+//!
+//! The runtime plays the role of the paper's vendor runtime (XRT) at the
+//! *functional* level: move a batch in, run the kernel, move results out.
+//! Scheduling behaviour (§4.1 "XRT") is modelled separately in
+//! [`crate::coordinator::overheads::XrtModel`].
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::nfa::memory::NfaImage;
+
+/// One artifact variant as listed in `artifacts/manifest.txt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub batch: usize,
+    pub s: usize,
+    pub l: usize,
+    pub file: String,
+}
+
+/// Parse `artifacts/manifest.txt` (lines: `name B S L file`).
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+    let mut specs = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 5 {
+            bail!("malformed manifest line: {line:?}");
+        }
+        specs.push(ArtifactSpec {
+            name: f[0].to_string(),
+            batch: f[1].parse()?,
+            s: f[2].parse()?,
+            l: f[3].parse()?,
+            file: f[4].to_string(),
+        });
+    }
+    Ok(specs)
+}
+
+/// Results of one kernel execution over a batch.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Winning accept-state index per query (meaningful where matched).
+    pub best: Vec<i32>,
+    /// Winning precision weight (0 where unmatched).
+    pub weight: Vec<f32>,
+    /// Winning decision in minutes (0 where unmatched).
+    pub decision: Vec<f32>,
+    /// 1.0 where any accept state is active.
+    pub matched: Vec<f32>,
+}
+
+/// An NFA image uploaded to the device once and reused across batches —
+/// the analogue of ERBIUM's "loading the NFA data into the FPGA internal
+/// memory" (§3.1 Host Executor).
+pub struct DeviceImage {
+    kinds: xla::PjRtBuffer,
+    lo: xla::PjRtBuffer,
+    hi: xla::PjRtBuffer,
+    weights: xla::PjRtBuffer,
+    decisions: xla::PjRtBuffer,
+    /// Host-side accept metadata for winner resolution.
+    pub rule_ids: Vec<u32>,
+    pub station: Option<u32>,
+    pub l: usize,
+    pub s: usize,
+}
+
+fn upload_to(client: &xla::PjRtClient, img: &NfaImage) -> Result<DeviceImage> {
+    let (l, s) = (img.l, img.s);
+    let cube = [l, s, s];
+    Ok(DeviceImage {
+        kinds: client.buffer_from_host_buffer(&img.kinds, &cube, None)?,
+        lo: client.buffer_from_host_buffer(&img.lo, &cube, None)?,
+        hi: client.buffer_from_host_buffer(&img.hi, &cube, None)?,
+        weights: client.buffer_from_host_buffer(&img.weights, &[s], None)?,
+        decisions: client.buffer_from_host_buffer(&img.decisions, &[s], None)?,
+        rule_ids: img.rule_ids.clone(),
+        station: img.station,
+        l,
+        s,
+    })
+}
+
+/// A compiled artifact variant ready to execute.
+pub struct NfaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+    client: xla::PjRtClient,
+}
+
+impl NfaExecutable {
+    /// Upload an NFA image to the device (the image is client-scoped: it
+    /// can be executed by any artifact variant of the same runtime).
+    pub fn upload(&self, img: &NfaImage) -> Result<DeviceImage> {
+        upload_to(&self.client, img)
+    }
+
+    /// Execute one batch of encoded queries (`queries.len() == B × L`,
+    /// row-major) against an uploaded image.
+    pub fn execute(&self, queries: &[i32], image: &DeviceImage) -> Result<BatchOutput> {
+        let (b, l) = (self.spec.batch, self.spec.l);
+        if queries.len() != b * l {
+            bail!("query buffer {} != B×L = {}", queries.len(), b * l);
+        }
+        if image.l != l || image.s != self.spec.s {
+            bail!("image ({}, {}) does not fit artifact {}", image.l, image.s, self.spec.name);
+        }
+        let qbuf = self.client.buffer_from_host_buffer(queries, &[b, l], None)?;
+        let outs = self.exe.execute_b(&[
+            &qbuf,
+            &image.kinds,
+            &image.lo,
+            &image.hi,
+            &image.weights,
+            &image.decisions,
+        ])?;
+        let result = outs
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → a 4-tuple literal.
+        let (best, weight, decision, matched) = result.to_tuple4()?;
+        Ok(BatchOutput {
+            best: best.to_vec::<i32>()?,
+            weight: weight.to_vec::<f32>()?,
+            decision: decision.to_vec::<f32>()?,
+            matched: matched.to_vec::<f32>()?,
+        })
+    }
+}
+
+/// The PJRT runtime: one client, a cache of compiled artifact variants.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+    compiled: std::sync::Mutex<HashMap<String, Arc<NfaExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let specs = read_manifest(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, dir, specs, compiled: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact directory relative to the crate root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Pick the smallest variant whose batch ≥ `batch_hint` (or the largest
+    /// available), with matching `(s, l)`.
+    pub fn pick_variant(&self, batch_hint: usize, s: usize, l: usize) -> Option<&ArtifactSpec> {
+        let mut fitting: Vec<&ArtifactSpec> =
+            self.specs.iter().filter(|v| v.s == s && v.l == l).collect();
+        fitting.sort_by_key(|v| v.batch);
+        fitting
+            .iter()
+            .find(|v| v.batch >= batch_hint)
+            .copied()
+            .or_else(|| fitting.last().copied())
+    }
+
+    /// Upload an NFA image once; reusable across all variants.
+    pub fn upload_image(&self, img: &NfaImage) -> Result<DeviceImage> {
+        upload_to(&self.client, img)
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<NfaExecutable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .specs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let wrapped = Arc::new(NfaExecutable { exe, spec, client: self.client.clone() });
+        self.compiled.lock().unwrap().insert(name.to_string(), wrapped.clone());
+        Ok(wrapped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Runtime::default_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let specs = read_manifest(&Runtime::default_dir()).unwrap();
+        assert!(!specs.is_empty());
+        assert!(specs.iter().any(|s| s.batch == 256 && s.s == 64 && s.l == 28));
+    }
+
+    #[test]
+    fn pick_variant_prefers_smallest_fitting() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+        let v = rt.pick_variant(100, 64, 28).unwrap();
+        assert_eq!(v.batch, 256);
+        let v = rt.pick_variant(300, 64, 28).unwrap();
+        assert_eq!(v.batch, 1024);
+        // Over the largest: take the largest (the engine chunks).
+        let v = rt.pick_variant(1_000_000, 64, 28).unwrap();
+        assert_eq!(v.batch, 1024);
+    }
+}

@@ -1,0 +1,125 @@
+//! Mini property-testing framework (proptest is not available offline):
+//! seeded random-case generation with failure reporting and greedy input
+//! shrinking for sequence-shaped cases.
+
+use crate::prng::Rng;
+
+/// Run `prop` over `cases` inputs drawn from `gen`. Panics on the first
+/// failure, reporting the case index, the seed and the failing input.
+pub fn check<T, G, P>(name: &str, cases: usize, seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut crng = rng.fork(case as u64);
+        let input = gen(&mut crng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (seed {seed}):\n  {msg}\n  \
+                 input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`], but for `Vec`-shaped inputs: on failure, greedily shrink
+/// the vector (drop halves, then single elements) and report the smallest
+/// still-failing input.
+pub fn check_vec<T, G, P>(name: &str, cases: usize, seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> Vec<T>,
+    P: Fn(&[T]) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut crng = rng.fork(case as u64);
+        let input = gen(&mut crng);
+        if let Err(first_msg) = prop(&input) {
+            let (small, msg) = shrink(&input, &prop, first_msg);
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (seed {seed}):\n  {msg}\n  \
+                 shrunk input ({} of {} elems): {small:#?}",
+                small.len(),
+                input.len()
+            );
+        }
+    }
+}
+
+fn shrink<T: Clone + std::fmt::Debug, P: Fn(&[T]) -> Result<(), String>>(
+    input: &[T],
+    prop: &P,
+    mut msg: String,
+) -> (Vec<T>, String) {
+    let mut cur: Vec<T> = input.to_vec();
+    loop {
+        let mut improved = false;
+        // Try dropping halves, then quarters, then single elements.
+        let mut chunk = (cur.len() / 2).max(1);
+        'outer: while chunk >= 1 {
+            let mut start = 0;
+            while start < cur.len() {
+                let mut candidate = Vec::with_capacity(cur.len());
+                candidate.extend_from_slice(&cur[..start]);
+                candidate.extend_from_slice(&cur[(start + chunk).min(cur.len())..]);
+                if candidate.len() < cur.len() {
+                    if let Err(m) = prop(&candidate) {
+                        cur = candidate;
+                        msg = m;
+                        improved = true;
+                        continue 'outer; // restart at this chunk size
+                    }
+                }
+                start += chunk;
+            }
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+        if !improved {
+            return (cur, msg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        check("sum-commutes", 50, 1, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 10, 2, |r| r.below(5), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_finds_minimal_case() {
+        // Property: no element equals 7. Shrinker should isolate a single 7.
+        let input: Vec<u64> = vec![1, 2, 7, 3, 4, 5];
+        let prop = |xs: &[u64]| {
+            if xs.contains(&7) {
+                Err("contains 7".into())
+            } else {
+                Ok(())
+            }
+        };
+        let (small, _) = shrink(&input, &prop, "contains 7".into());
+        assert_eq!(small, vec![7]);
+    }
+}

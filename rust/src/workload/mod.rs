@@ -1,0 +1,239 @@
+//! Workload generation: flight domain, Travel Solutions, user queries and
+//! the production-trace replica.
+//!
+//! §5.2 gives the production-snapshot marginals this generator reproduces:
+//! 6 301 user queries → 5.8 M potential Travel Solutions → 4.8 M MCT
+//! queries; ~17 % of TS's are direct flights (no MCT call); non-direct TS's
+//! spawn **1.24** MCT queries on average; at most five connecting airports
+//! per TS (§2.2); the engine explores up to **1 500** TS's per user query.
+
+mod trace;
+
+pub use trace::{
+    generate_trace, ProductionTrace, TraceConfig, TraceStats, TravelSolution, UserQuery,
+};
+
+use crate::prng::Rng;
+use crate::rules::types::{MctQuery, World};
+
+/// Build one plausible MCT query targeting `station` (used by tests and
+/// micro-benchmarks that need station-routed load).
+pub fn query_for_station(world: &World, station: u32, seed: u64) -> MctQuery {
+    let mut rng = Rng::new(seed);
+    random_query(&mut rng, world, station)
+}
+
+/// One scheduled flight leg at a station — the unit real MCT queries are
+/// built from. Production queries draw from the *finite* published
+/// schedule, which is what makes the §5.2 "cache mechanisms for selected
+/// airports" pay off: hot connections repeat.
+#[derive(Debug, Clone, Copy)]
+pub struct FlightLeg {
+    pub carrier_mkt: u32,
+    pub carrier_op: u32,
+    pub codeshare: bool,
+    pub flight_mkt: u32,
+    pub flight_op: u32,
+    pub terminal: u32,
+    pub region: u32,
+    pub aircraft: u32,
+    pub service: u32,
+    pub time: u32,
+    pub other_station: u32,
+}
+
+/// Per-station schedules: queries are (arriving leg, departing leg) pairs
+/// drawn zipf-skewed, so popular connections recur.
+#[derive(Debug, Clone)]
+pub struct QueryFactory {
+    /// `legs[station]` — scheduled legs at that station.
+    legs: Vec<Vec<FlightLeg>>,
+}
+
+impl QueryFactory {
+    /// Build schedules: leg count per station follows the traffic skew.
+    pub fn new(world: &World, seed: u64, mean_legs_per_station: usize) -> QueryFactory {
+        let mut rng = Rng::new(seed ^ 0x1E65);
+        let n_air = world.airports.len();
+        let n_car = world.carriers.len();
+        let legs = (0..n_air)
+            .map(|st| {
+                // Hubs get many legs; tail airports get a handful.
+                let weight = 1.0 / (1.0 + st as f64).powf(0.7);
+                let n = ((mean_legs_per_station as f64 * weight * 3.0) as usize).max(4);
+                (0..n)
+                    .map(|_| {
+                        let carrier_mkt = rng.zipf(n_car, 0.9) as u32;
+                        let codeshare = rng.chance(0.08);
+                        let flight_mkt = rng.range_u32(1, World::FLIGHT_NO_MAX - 1);
+                        FlightLeg {
+                            carrier_mkt,
+                            carrier_op: if codeshare {
+                                rng.zipf(n_car, 0.9) as u32
+                            } else {
+                                carrier_mkt
+                            },
+                            codeshare,
+                            flight_mkt,
+                            flight_op: if codeshare {
+                                rng.range_u32(1, World::FLIGHT_NO_MAX - 1)
+                            } else {
+                                flight_mkt
+                            },
+                            terminal: rng.index(world.terminals.len()) as u32,
+                            region: rng.index(world.regions.len()) as u32,
+                            aircraft: rng.index(world.aircraft.len()) as u32,
+                            service: rng.index(world.services.len()) as u32,
+                            time: rng.range_u32(0, World::TIME_MAX - 1),
+                            other_station: rng.zipf(n_air, 0.9) as u32,
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        QueryFactory { legs }
+    }
+
+    /// Draw one MCT query at `station`: a zipf-skewed (arrival, departure)
+    /// leg pair from the station's schedule plus a near-term date.
+    pub fn query(&self, rng: &mut Rng, world: &World, station: u32) -> MctQuery {
+        let Some(legs) = self.legs.get(station as usize).filter(|l| !l.is_empty()) else {
+            return random_query(rng, world, station);
+        };
+        let arr = legs[rng.zipf(legs.len(), 1.05)];
+        let dep = legs[rng.zipf(legs.len(), 1.05)];
+        // Searches concentrate on a near-term date window.
+        let date = 100 + rng.zipf(10, 1.0) as u32;
+        MctQuery {
+            station,
+            arr_terminal: arr.terminal,
+            dep_terminal: dep.terminal,
+            arr_region: arr.region,
+            dep_region: dep.region,
+            day_of_week: date % World::DOW_MAX,
+            season: ((date / 182) as usize % world.seasons.len()) as u32,
+            arr_aircraft: arr.aircraft,
+            dep_aircraft: dep.aircraft,
+            conn_type: ((arr.region.min(1)) * 2 + dep.region.min(1)) % 4,
+            prev_station: arr.other_station,
+            next_station: dep.other_station,
+            arr_service: arr.service,
+            dep_service: dep.service,
+            arr_carrier_mkt: arr.carrier_mkt,
+            arr_carrier_op: arr.carrier_op,
+            arr_codeshare: arr.codeshare,
+            dep_carrier_mkt: dep.carrier_mkt,
+            dep_carrier_op: dep.carrier_op,
+            dep_codeshare: dep.codeshare,
+            arr_flight_mkt: arr.flight_mkt,
+            arr_flight_op: arr.flight_op,
+            dep_flight_mkt: dep.flight_mkt,
+            dep_flight_op: dep.flight_op,
+            date,
+            arr_time: arr.time,
+            // The departing leg's own scheduled time: the query is fully
+            // determined by (arr leg, dep leg, date), so hot connections
+            // produce *identical* queries — the cache-friendly structure
+            // real schedules have.
+            dep_time: dep.time,
+            capacity: 40 + (arr.aircraft * 27) % (World::CAPACITY_MAX - 40),
+        }
+    }
+}
+
+/// Draw a random MCT query at a given connection station.
+pub fn random_query(rng: &mut Rng, world: &World, station: u32) -> MctQuery {
+    let n_air = world.airports.len();
+    let n_car = world.carriers.len();
+    let arr_carrier_mkt = rng.zipf(n_car, 0.9) as u32;
+    let dep_carrier_mkt = rng.zipf(n_car, 0.9) as u32;
+    // ~8 % of legs are code-share operated (industry-plausible; exercises
+    // the §3.2.3–4 cross-matching paths).
+    let arr_codeshare = rng.chance(0.08);
+    let dep_codeshare = rng.chance(0.08);
+    let arr_carrier_op =
+        if arr_codeshare { rng.zipf(n_car, 0.9) as u32 } else { arr_carrier_mkt };
+    let dep_carrier_op =
+        if dep_codeshare { rng.zipf(n_car, 0.9) as u32 } else { dep_carrier_mkt };
+    let arr_flight_mkt = rng.range_u32(1, World::FLIGHT_NO_MAX - 1);
+    let dep_flight_mkt = rng.range_u32(1, World::FLIGHT_NO_MAX - 1);
+    let arr_flight_op =
+        if arr_codeshare { rng.range_u32(1, World::FLIGHT_NO_MAX - 1) } else { arr_flight_mkt };
+    let dep_flight_op =
+        if dep_codeshare { rng.range_u32(1, World::FLIGHT_NO_MAX - 1) } else { dep_flight_mkt };
+    let arr_time = rng.range_u32(0, World::TIME_MAX - 1);
+    MctQuery {
+        station,
+        arr_terminal: rng.index(world.terminals.len()) as u32,
+        dep_terminal: rng.index(world.terminals.len()) as u32,
+        arr_region: rng.index(world.regions.len()) as u32,
+        dep_region: rng.index(world.regions.len()) as u32,
+        day_of_week: rng.range_u32(0, World::DOW_MAX - 1),
+        season: rng.index(world.seasons.len()) as u32,
+        arr_aircraft: rng.index(world.aircraft.len()) as u32,
+        dep_aircraft: rng.index(world.aircraft.len()) as u32,
+        conn_type: rng.index(world.conn_types.len()) as u32,
+        prev_station: rng.zipf(n_air, 0.9) as u32,
+        next_station: rng.zipf(n_air, 0.9) as u32,
+        arr_service: rng.index(world.services.len()) as u32,
+        dep_service: rng.index(world.services.len()) as u32,
+        arr_carrier_mkt,
+        arr_carrier_op,
+        arr_codeshare,
+        dep_carrier_mkt,
+        dep_carrier_op,
+        dep_codeshare,
+        arr_flight_mkt,
+        arr_flight_op,
+        dep_flight_mkt,
+        dep_flight_op,
+        date: rng.range_u32(0, World::DATE_MAX - 1),
+        arr_time,
+        // Departures cluster after arrivals (it's a connection).
+        dep_time: (arr_time + rng.range_u32(30, 360)) % World::TIME_MAX,
+        capacity: rng.range_u32(40, World::CAPACITY_MAX - 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::generator::{generate_world, GeneratorConfig};
+
+    #[test]
+    fn random_query_respects_station() {
+        let w = generate_world(&GeneratorConfig::small(1, 10));
+        let q = query_for_station(&w, 7, 99);
+        assert_eq!(q.station, 7);
+    }
+
+    #[test]
+    fn non_codeshare_queries_have_equal_carriers() {
+        let w = generate_world(&GeneratorConfig::small(1, 10));
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let q = random_query(&mut rng, &w, 0);
+            if !q.arr_codeshare {
+                assert_eq!(q.arr_carrier_mkt, q.arr_carrier_op);
+                assert_eq!(q.arr_flight_mkt, q.arr_flight_op);
+            }
+            if !q.dep_codeshare {
+                assert_eq!(q.dep_carrier_mkt, q.dep_carrier_op);
+            }
+        }
+    }
+
+    #[test]
+    fn query_values_in_domain() {
+        let w = generate_world(&GeneratorConfig::small(2, 10));
+        let mut rng = Rng::new(6);
+        for _ in 0..500 {
+            let q = random_query(&mut rng, &w, 3);
+            assert!(q.arr_flight_mkt < World::FLIGHT_NO_MAX);
+            assert!(q.date < World::DATE_MAX);
+            assert!(q.arr_time < World::TIME_MAX);
+            assert!(q.day_of_week < World::DOW_MAX);
+            assert!((q.arr_terminal as usize) < w.terminals.len());
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Production-trace replica: user queries → Travel Solutions → MCT queries.
+//!
+//! Reproduces the §5.2 snapshot marginals (see module docs in
+//! [`super`]). A [`UserQuery`] carries the list of Travel Solutions the
+//! Domain Explorer's connection builder would emit for it, each TS being
+//! either a direct flight (no MCT calls) or a chain of 1–4 connections
+//! (= MCT queries). The `required_ts` field models the "number of required
+//! qualified TS's provided by the user query" that §5.2 uses to choose the
+//! FPGA batch size.
+
+use crate::prng::Rng;
+use crate::rules::types::{MctQuery, World};
+
+/// One Travel Solution: a combination of routes/carriers/flights (§2.2).
+#[derive(Debug, Clone)]
+pub struct TravelSolution {
+    /// MCT queries spawned by this TS — empty ⇔ direct flight.
+    pub mct_queries: Vec<MctQuery>,
+}
+
+impl TravelSolution {
+    pub fn is_direct(&self) -> bool {
+        self.mct_queries.is_empty()
+    }
+}
+
+/// One user query (origin/destination/date search) with its pre-computed
+/// potential Travel Solutions.
+#[derive(Debug, Clone)]
+pub struct UserQuery {
+    pub id: u32,
+    /// "Required qualified TS's" — how many valid TS's the engine must
+    /// return for this query (caps at the engine-wide 1 500, §2.2).
+    pub required_ts: usize,
+    pub solutions: Vec<TravelSolution>,
+}
+
+impl UserQuery {
+    /// Total MCT queries across all TS's.
+    pub fn mct_query_count(&self) -> usize {
+        self.solutions.iter().map(|ts| ts.mct_queries.len()).sum()
+    }
+}
+
+/// A replayable workload trace.
+#[derive(Debug, Clone)]
+pub struct ProductionTrace {
+    pub queries: Vec<UserQuery>,
+}
+
+/// Generation knobs. Defaults reproduce §5.2 at 1:1 scale; `scale` shrinks
+/// the trace proportionally for cheap CI runs.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub seed: u64,
+    /// Number of user queries (paper snapshot: 6 301).
+    pub n_user_queries: usize,
+    /// Mean potential TS's per user query (paper: 5.8 M / 6 301 ≈ 920).
+    pub mean_ts_per_query: f64,
+    /// Fraction of TS's that are direct flights (paper: ~17 %).
+    pub direct_fraction: f64,
+    /// Target mean MCT queries per non-direct TS (paper: 1.24).
+    pub mean_mct_per_ts: f64,
+    /// Engine-wide TS cap per user query (§2.2: 1 500).
+    pub ts_cap: usize,
+    /// Zipf exponent for connection-airport popularity.
+    pub airport_skew: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0x72ACE,
+            n_user_queries: 6_301,
+            mean_ts_per_query: 920.0,
+            direct_fraction: 0.17,
+            mean_mct_per_ts: 1.24,
+            ts_cap: 1_500,
+            airport_skew: 1.05,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Scaled-down trace (same shape, fewer user queries / TS's).
+    pub fn scaled(seed: u64, n_user_queries: usize, mean_ts: f64) -> Self {
+        TraceConfig {
+            seed,
+            n_user_queries,
+            mean_ts_per_query: mean_ts,
+            ..TraceConfig::default()
+        }
+    }
+}
+
+/// Aggregate statistics of a trace (the §5.2 headline numbers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceStats {
+    pub user_queries: usize,
+    pub travel_solutions: usize,
+    pub mct_queries: usize,
+    pub direct_ts: usize,
+}
+
+impl TraceStats {
+    pub fn direct_fraction(&self) -> f64 {
+        self.direct_ts as f64 / self.travel_solutions.max(1) as f64
+    }
+    pub fn mean_mct_per_nondirect_ts(&self) -> f64 {
+        self.mct_queries as f64 / (self.travel_solutions - self.direct_ts).max(1) as f64
+    }
+}
+
+/// Number of connections (= MCT queries) for one non-direct TS, matching the
+/// paper's constraints: 1..=4 connections (≤5 airports, §2.2) with mean
+/// ≈ `mean_mct_per_ts`.
+fn connections_for_ts(rng: &mut Rng, mean: f64) -> usize {
+    // Geometric-ish mixture over {1,2,3,4}: p(k+1 | ≥k+1 possible) = r,
+    // solved so that E[k] ≈ mean. For mean 1.24, r ≈ 0.205.
+    let r = ((mean - 1.0) / (mean * 0.94)).clamp(0.01, 0.9);
+    let mut k = 1;
+    while k < 4 && rng.chance(r) {
+        k += 1;
+    }
+    k
+}
+
+/// Generate a production-trace replica. Queries are drawn from a finite
+/// flight schedule ([`super::QueryFactory`]) so hot connections recur — the
+/// property the §5.2 airport caches exploit.
+pub fn generate_trace(cfg: &TraceConfig, world: &World) -> ProductionTrace {
+    let factory = super::QueryFactory::new(world, cfg.seed, 160);
+    let mut rng = Rng::new(cfg.seed);
+    let n_air = world.airports.len();
+    let mut queries = Vec::with_capacity(cfg.n_user_queries);
+    for id in 0..cfg.n_user_queries {
+        let mut qrng = rng.fork(id as u64);
+        // Per-query TS volume: log-normal-ish spread around the mean —
+        // real queries range from a handful of TS's (rare city pair) to the
+        // cap (flexible-dates hub pair). Mixture keeps it simple + seeded.
+        let burst = qrng.f64();
+        let n_ts = if burst < 0.10 {
+            1 + qrng.index(30) // thin queries: almost no alternatives
+        } else if burst < 0.85 {
+            let base = cfg.mean_ts_per_query * (0.4 + 1.1 * qrng.f64());
+            base as usize
+        } else {
+            cfg.ts_cap + qrng.index(cfg.ts_cap) // overflowing queries, capped
+        };
+        let n_ts = n_ts.clamp(1, cfg.ts_cap * 2);
+        let required_ts = cfg.ts_cap.min(n_ts.max(1));
+        let mut solutions = Vec::with_capacity(n_ts);
+        for _ in 0..n_ts {
+            if qrng.chance(cfg.direct_fraction) {
+                solutions.push(TravelSolution { mct_queries: Vec::new() });
+            } else {
+                let k = connections_for_ts(&mut qrng, cfg.mean_mct_per_ts);
+                let mct_queries = (0..k)
+                    .map(|_| {
+                        let station = qrng.zipf(n_air, cfg.airport_skew) as u32;
+                        factory.query(&mut qrng, world, station)
+                    })
+                    .collect();
+                solutions.push(TravelSolution { mct_queries });
+            }
+        }
+        queries.push(UserQuery { id: id as u32, required_ts, solutions });
+    }
+    ProductionTrace { queries }
+}
+
+impl ProductionTrace {
+    pub fn stats(&self) -> TraceStats {
+        let mut ts = 0;
+        let mut mct = 0;
+        let mut direct = 0;
+        for uq in &self.queries {
+            ts += uq.solutions.len();
+            for s in &uq.solutions {
+                if s.is_direct() {
+                    direct += 1;
+                } else {
+                    mct += s.mct_queries.len();
+                }
+            }
+        }
+        TraceStats {
+            user_queries: self.queries.len(),
+            travel_solutions: ts,
+            mct_queries: mct,
+            direct_ts: direct,
+        }
+    }
+
+    /// Flatten all MCT queries (for stand-alone engine benchmarks).
+    pub fn all_mct_queries(&self) -> Vec<MctQuery> {
+        self.queries
+            .iter()
+            .flat_map(|uq| uq.solutions.iter().flat_map(|s| s.mct_queries.iter().copied()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::generator::{generate_world, GeneratorConfig};
+
+    fn small_world() -> World {
+        generate_world(&GeneratorConfig::small(3, 10))
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let w = small_world();
+        let cfg = TraceConfig::scaled(9, 20, 50.0);
+        let a = generate_trace(&cfg, &w);
+        let b = generate_trace(&cfg, &w);
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(
+            a.queries[5].solutions.len(),
+            b.queries[5].solutions.len()
+        );
+    }
+
+    #[test]
+    fn marginals_match_paper_shape() {
+        // Scaled-down trace must still reproduce the §5.2 ratios.
+        let w = small_world();
+        let cfg = TraceConfig::scaled(1, 300, 920.0);
+        let t = generate_trace(&cfg, &w);
+        let s = t.stats();
+        assert_eq!(s.user_queries, 300);
+        let direct = s.direct_fraction();
+        assert!((0.14..0.20).contains(&direct), "direct fraction {direct}");
+        let mean_mct = s.mean_mct_per_nondirect_ts();
+        assert!((1.15..1.35).contains(&mean_mct), "mean mct/ts {mean_mct}");
+        // ≈920 TS per user query on average (wide tolerance: mixture tails)
+        let ts_per_uq = s.travel_solutions as f64 / s.user_queries as f64;
+        assert!((600.0..1300.0).contains(&ts_per_uq), "ts/uq {ts_per_uq}");
+    }
+
+    #[test]
+    fn connections_respect_cap() {
+        let w = small_world();
+        let t = generate_trace(&TraceConfig::scaled(2, 50, 100.0), &w);
+        for uq in &t.queries {
+            assert!(uq.required_ts <= 1_500);
+            for s in &uq.solutions {
+                assert!(s.mct_queries.len() <= 4, "≤5 airports ⇒ ≤4 connections");
+            }
+        }
+    }
+
+    #[test]
+    fn mean_connections_close_to_target() {
+        let mut rng = Rng::new(4);
+        let n = 100_000;
+        let total: usize = (0..n).map(|_| connections_for_ts(&mut rng, 1.24)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((1.15..1.33).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn all_mct_queries_flattens_consistently() {
+        let w = small_world();
+        let t = generate_trace(&TraceConfig::scaled(5, 30, 40.0), &w);
+        assert_eq!(t.all_mct_queries().len(), t.stats().mct_queries);
+    }
+}

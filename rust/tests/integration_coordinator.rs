@@ -1,0 +1,73 @@
+//! Coordinator integration: the simulated and the real pipeline agree on
+//! conservation invariants; topologies behave per the paper's qualitative
+//! laws across a configuration sweep.
+
+use std::sync::Arc;
+
+use erbium_search::coordinator::pipeline::EngineFactory;
+use erbium_search::coordinator::{simulate, Pipeline, SimConfig, Topology};
+use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{Schema, StandardVersion};
+use erbium_search::workload::{generate_trace, TraceConfig};
+
+#[test]
+fn sim_monotonicity_laws_across_sweep() {
+    // Across the whole (p,w,k,e) lattice: every run drains, throughput is
+    // positive, and adding a kernel at fixed (p,w,e) never hurts throughput
+    // by more than noise (deterministic sim ⇒ exact comparisons).
+    for p in [1usize, 2, 4] {
+        for w in [1usize, 2] {
+            for (k, e) in [(1usize, 1usize), (1, 2), (1, 4), (2, 1), (2, 2), (4, 1)] {
+                let r = simulate(&SimConfig::v2_cloud(Topology::new(p, w, k, e), 4096));
+                assert_eq!(r.total_requests, p * 64, "{p}p{w}w{k}k{e}e must drain");
+                assert!(r.throughput_qps > 0.0);
+                assert!(r.exec_p90_us >= r.exec_p50_us);
+            }
+        }
+    }
+    let one = simulate(&SimConfig::v2_cloud(Topology::new(4, 2, 1, 1), 4096));
+    let two = simulate(&SimConfig::v2_cloud(Topology::new(4, 2, 2, 1), 4096));
+    assert!(two.throughput_qps > one.throughput_qps * 0.95);
+}
+
+#[test]
+fn pipeline_and_direct_de_agree_on_every_user_query() {
+    let cfg = GeneratorConfig::small(881, 300);
+    let world = generate_world(&cfg);
+    let schema = Schema::for_version(StandardVersion::V2);
+    let rs = generate_rule_set(&cfg, &world, StandardVersion::V2);
+    let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+    let trace = generate_trace(&TraceConfig::scaled(7, 10, 25.0), &world);
+
+    let nfa2 = nfa.clone();
+    let factory: EngineFactory =
+        Arc::new(move || ErbiumEngine::new(nfa2.clone(), model, Backend::Native, 28, 64));
+    // Two different topologies must produce identical functional outcomes.
+    let a = Pipeline::new(Topology::new(1, 1, 1, 4), factory.clone()).run(&trace).unwrap();
+    let b = Pipeline::new(Topology::new(4, 3, 2, 2), factory).run(&trace).unwrap();
+    assert_eq!(a.valid_travel_solutions, b.valid_travel_solutions);
+    assert_eq!(a.mct_queries, b.mct_queries);
+    assert_eq!(a.user_queries, b.user_queries);
+}
+
+#[test]
+fn hardware_clock_accumulates_per_engine_call() {
+    let cfg = GeneratorConfig::small(883, 200);
+    let world = generate_world(&cfg);
+    let schema = Schema::for_version(StandardVersion::V1);
+    let rs = generate_rule_set(&cfg, &world, StandardVersion::V1);
+    let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    let model = FpgaModel::new(HardwareConfig::v1_onprem(4), stats.depth);
+    let trace = generate_trace(&TraceConfig::scaled(9, 6, 20.0), &world);
+    let nfa2 = nfa.clone();
+    let factory: EngineFactory =
+        Arc::new(move || ErbiumEngine::new(nfa2.clone(), model, Backend::Native, 28, 64));
+    let r = Pipeline::new(Topology::new(2, 1, 1, 4), factory).run(&trace).unwrap();
+    // Every engine call contributes at least the QDMA setup to the modeled
+    // clock.
+    assert!(r.modeled_kernel_us >= r.engine_calls as f64 * 8.0);
+}

@@ -1,0 +1,115 @@
+//! Cross-layer integration: the AOT XLA artifact (L1 Pallas kernel lowered
+//! through the L2 JAX model, executed via PJRT) must agree with the native
+//! sparse evaluator and with the semantic rule oracle on the same compiled
+//! rule set.
+//!
+//! Requires `artifacts/` (run `make artifacts` first); tests self-skip with
+//! a message otherwise so `cargo test` stays green on a fresh checkout.
+
+use std::sync::Arc;
+
+use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::nfa::memory::NfaImage;
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::prng::Rng;
+use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{evaluate_ruleset, Schema, StandardVersion};
+use erbium_search::runtime::Runtime;
+use erbium_search::workload::random_query;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    if !Runtime::default_dir().join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Runtime::cpu(Runtime::default_dir()).expect("runtime")))
+}
+
+#[test]
+fn xla_engine_agrees_with_native_and_oracle() {
+    let Some(rt) = runtime() else { return };
+    for (seed, version) in [(201u64, StandardVersion::V1), (203, StandardVersion::V2)] {
+        let cfg = GeneratorConfig::small(seed, 400);
+        let world = generate_world(&cfg);
+        let schema = Schema::for_version(version);
+        let rs = generate_rule_set(&cfg, &world, version);
+        let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+
+        let xla_engine = ErbiumEngine::new(
+            nfa.clone(),
+            model,
+            Backend::Xla { runtime: rt.clone(), batch_hint: 256 },
+            28,
+            64,
+        )
+        .expect("xla engine");
+        let native_engine =
+            ErbiumEngine::new(nfa, model, Backend::Native, 28, 64).expect("native engine");
+
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let queries: Vec<_> = (0..300)
+            .map(|_| {
+                let st = rng.index(cfg.n_airports) as u32;
+                random_query(&mut rng, &world, st)
+            })
+            .collect();
+
+        let got_xla = xla_engine.evaluate_batch(&queries).expect("xla eval");
+        let got_native = native_engine.evaluate_batch(&queries).expect("native eval");
+        let mut matched = 0;
+        for ((q, x), n) in queries.iter().zip(&got_xla).zip(&got_native) {
+            assert_eq!(x.rule_id, n.rule_id, "{version:?} xla vs native: {q:?}");
+            assert_eq!(x.minutes, n.minutes, "{version:?}");
+            let want = evaluate_ruleset(&schema, &rs, q);
+            assert_eq!(x.rule_id, want.rule_id, "{version:?} xla vs oracle");
+            assert_eq!(x.minutes, want.minutes);
+            if x.matched() {
+                matched += 1;
+            }
+        }
+        assert!(matched > 60, "{version:?}: only {matched}/300 queries matched");
+    }
+}
+
+#[test]
+fn dense_scalar_reference_agrees_with_xla_on_one_partition() {
+    // Pin the image semantics themselves: the dense scalar evaluator in
+    // rust (nfa::memory) and the XLA kernel must agree state-for-state.
+    let Some(rt) = runtime() else { return };
+    let cfg = GeneratorConfig::small(207, 300);
+    let world = generate_world(&cfg);
+    let schema = Schema::for_version(StandardVersion::V2);
+    let rs = generate_rule_set(&cfg, &world, StandardVersion::V2);
+    let (nfa, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    let exe = rt.load("nfa_b256_s64_l28").expect("artifact");
+    let enc = erbium_search::encoder::QueryEncoder::new(&nfa.plan, 28);
+
+    // Pick the largest station partition.
+    let pi = (0..nfa.partitions.len())
+        .max_by_key(|&i| nfa.partitions[i].accepts.len())
+        .unwrap();
+    let part = &nfa.partitions[pi];
+    let station = part.station.expect("station partition");
+    let img = NfaImage::from_compiled(part, 28, 64).unwrap();
+    let dev = exe.upload(&img).unwrap();
+
+    let mut rng = Rng::new(777);
+    let queries: Vec<_> = (0..256).map(|_| random_query(&mut rng, &world, station)).collect();
+    let mut buf = Vec::new();
+    enc.encode_batch(&queries, 256, &mut buf);
+    let out = exe.execute(&buf, &dev).unwrap();
+
+    for (i, q) in queries.iter().enumerate() {
+        let (st, w, d) = img.evaluate_scalar(&enc.encode(q));
+        if st == usize::MAX {
+            assert_eq!(out.matched[i], 0.0, "row {i}");
+        } else {
+            assert_eq!(out.matched[i], 1.0, "row {i}");
+            assert_eq!(out.best[i] as usize, st, "row {i}");
+            assert_eq!(out.weight[i], w, "row {i}");
+            assert_eq!(out.decision[i], d, "row {i}");
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! Property-based invariants (via the in-tree `testing::prop` framework —
+//! proptest is unavailable offline, see DESIGN.md §1).
+//!
+//! These pin the system-level invariants DESIGN.md §5 calls out: compiler
+//! semantics preservation, §3.2.2 disjointness, encoder/evaluator
+//! agreement across random rule sets, batcher conservation, metrics sanity.
+
+use erbium_search::coordinator::domain_explorer::{connection_feasible, DomainExplorer, MctStrategy};
+use erbium_search::coordinator::metrics::Percentiles;
+use erbium_search::encoder::QueryEncoder;
+use erbium_search::erbium::NativeEvaluator;
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::prng::Rng;
+use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{evaluate_ruleset, Schema, StandardVersion};
+use erbium_search::rules::types::{MctDecision, MctQuery};
+use erbium_search::testing::{check, check_vec};
+use erbium_search::workload::{generate_trace, random_query, TraceConfig};
+
+/// Random (rule set, queries) pair under a random standard version.
+#[derive(Debug)]
+struct Scenario {
+    seed: u64,
+    version: StandardVersion,
+    n_rules: usize,
+}
+
+fn scenario(rng: &mut Rng) -> Scenario {
+    Scenario {
+        seed: rng.next_u64(),
+        version: if rng.chance(0.5) { StandardVersion::V1 } else { StandardVersion::V2 },
+        n_rules: 50 + rng.index(400),
+    }
+}
+
+#[test]
+fn prop_compiled_nfa_preserves_rule_semantics() {
+    check("nfa≡oracle", 12, 0xA11CE, scenario, |sc| {
+        let cfg = GeneratorConfig::small(sc.seed, sc.n_rules);
+        let world = generate_world(&cfg);
+        let schema = Schema::for_version(sc.version);
+        let rs = generate_rule_set(&cfg, &world, sc.version);
+        let (nfa, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let enc = QueryEncoder::new(&nfa.plan, nfa.plan.len());
+        let eval = NativeEvaluator::new(nfa);
+        let mut rng = Rng::new(sc.seed ^ 1);
+        for _ in 0..60 {
+            let st = rng.index(cfg.n_airports) as u32;
+            let q = random_query(&mut rng, &world, st);
+            let want = evaluate_ruleset(&schema, &rs, &q);
+            let got = eval.evaluate_encoded(st, &enc.encode(&q));
+            if got.rule_id != want.rule_id || got.minutes != want.minutes {
+                return Err(format!("mismatch: got {got:?}, want {want:?} for {q:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compile_width_bound_holds() {
+    check("width≤S", 10, 0xB0B, scenario, |sc| {
+        let cfg = GeneratorConfig::small(sc.seed, sc.n_rules);
+        let world = generate_world(&cfg);
+        let schema = Schema::for_version(sc.version);
+        let rs = generate_rule_set(&cfg, &world, sc.version);
+        for s_max in [16usize, 64] {
+            let (nfa, stats) = compile_rule_set(
+                &schema,
+                &rs,
+                &CompileOptions { max_states_per_level: s_max, ..Default::default() },
+            );
+            if stats.max_width > s_max {
+                return Err(format!("width {} > bound {s_max}", stats.max_width));
+            }
+            let routed: usize =
+                nfa.by_station.values().map(Vec::len).sum::<usize>() + nfa.global.len();
+            if routed != nfa.partitions.len() {
+                return Err("routing does not cover all partitions".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decision_merge_is_order_independent() {
+    // Merging per-partition winners must commute: max-weight (tie → lowest
+    // id) over any permutation gives the same result.
+    check_vec(
+        "merge-commutes",
+        40,
+        0xC0DE,
+        |rng| {
+            (0..1 + rng.index(8))
+                .map(|_| MctDecision {
+                    minutes: 10 + rng.below(100) as u16,
+                    weight: (rng.below(50) as f32) / 2.0,
+                    rule_id: rng.below(1000) as u32,
+                })
+                .collect::<Vec<_>>()
+        },
+        |ds| {
+            let merge = |list: &[MctDecision]| {
+                let mut best = MctDecision::no_match();
+                for d in list {
+                    if !best.matched()
+                        || d.weight > best.weight
+                        || (d.weight == best.weight && d.rule_id < best.rule_id)
+                    {
+                        best = *d;
+                    }
+                }
+                best
+            };
+            let a = merge(ds);
+            let mut rev: Vec<MctDecision> = ds.to_vec();
+            rev.reverse();
+            let b = merge(&rev);
+            if a.rule_id != b.rule_id {
+                return Err(format!("order-dependent merge: {a:?} vs {b:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_domain_explorer_conserves_queries() {
+    // The FPGA batching policy must check every examined non-direct TS's
+    // queries exactly once, never dropping or duplicating.
+    check("de-conservation", 15, 0xDE, |rng| rng.next_u64(), |&seed| {
+        let cfg = GeneratorConfig::small(seed, 100);
+        let world = generate_world(&cfg);
+        let trace = generate_trace(&TraceConfig::scaled(seed, 4, 60.0), &world);
+        let de = DomainExplorer::new(MctStrategy::FpgaBatched);
+        for uq in &trace.queries {
+            let mut seen = 0usize;
+            let out = de.process(uq, |qs: &[MctQuery]| {
+                seen += qs.len();
+                qs.iter()
+                    .map(|_| MctDecision { minutes: 10, weight: 1.0, rule_id: 0 })
+                    .collect()
+            });
+            if seen != out.checked_mct_queries {
+                return Err(format!("evaluator saw {seen}, outcome says {}", out.checked_mct_queries));
+            }
+            let expected: usize = uq
+                .solutions
+                .iter()
+                .take(out.examined_ts)
+                .map(|ts| ts.mct_queries.len())
+                .sum();
+            if seen != expected {
+                return Err(format!("checked {seen} != examined TS queries {expected}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feasibility_monotone_in_mct() {
+    // A stricter MCT can only invalidate more connections.
+    check("feasibility-monotone", 200, 0xFEA5, |rng| {
+        (rng.below(1440) as u32, rng.below(1440) as u32, 10 + rng.below(170) as u16)
+    }, |&(arr, dep, minutes)| {
+        let mut q = MctQuery {
+            arr_time: arr,
+            dep_time: dep,
+            ..erbium_search::workload::query_for_station(
+                &generate_world(&GeneratorConfig::small(1, 1)),
+                0,
+                1,
+            )
+        };
+        q.arr_time = arr;
+        q.dep_time = dep;
+        let d1 = MctDecision { minutes, weight: 1.0, rule_id: 0 };
+        let d2 = MctDecision { minutes: minutes + 10, weight: 1.0, rule_id: 0 };
+        if connection_feasible(&q, &d2) && !connection_feasible(&q, &d1) {
+            return Err(format!("stricter MCT became feasible: {arr} {dep} {minutes}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_percentiles_bounded_by_extremes() {
+    check_vec(
+        "percentile-bounds",
+        50,
+        0xBEE,
+        |rng| (0..1 + rng.index(200)).map(|_| rng.f64() * 1e4).collect::<Vec<f64>>(),
+        |xs| {
+            let mut p = Percentiles::new();
+            for &x in xs {
+                p.record(x);
+            }
+            let (min, max) = xs.iter().fold((f64::MAX, f64::MIN), |(a, b), &x| {
+                (a.min(x), b.max(x))
+            });
+            for q in [1.0, 50.0, 90.0, 99.0, 100.0] {
+                let v = p.percentile(q);
+                if v < min || v > max {
+                    return Err(format!("p{q} = {v} outside [{min}, {max}]"));
+                }
+            }
+            if p.p50() > p.p90() || p.p90() > p.p99() {
+                return Err("percentiles not monotone".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_encoder_is_stable_and_in_plan_order() {
+    check("encoder-stable", 10, 0xE2C, scenario, |sc| {
+        let cfg = GeneratorConfig::small(sc.seed, sc.n_rules.max(60));
+        let world = generate_world(&cfg);
+        let schema = Schema::for_version(sc.version);
+        let rs = generate_rule_set(&cfg, &world, sc.version);
+        let (nfa, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let enc = QueryEncoder::new(&nfa.plan, 28);
+        let mut rng = Rng::new(sc.seed);
+        for _ in 0..50 {
+            let st = rng.below(40) as u32;
+            let q = random_query(&mut rng, &world, st);
+            let a = enc.encode(&q);
+            let b = enc.encode(&q);
+            if a != b {
+                return Err("encoding not deterministic".into());
+            }
+            if a[0] != q.station as i32 {
+                return Err("level 0 must be the station (partition key)".into());
+            }
+            if a.len() != 28 {
+                return Err("padded depth violated".into());
+            }
+        }
+        Ok(())
+    });
+}
