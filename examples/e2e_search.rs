@@ -14,13 +14,13 @@
 //! Scale knobs: E2E_UQ (user queries, default 24), E2E_RULES (default 20000),
 //! E2E_BACKEND=native to skip the XLA path.
 
-use std::sync::Arc;
 use std::time::Instant;
 
+use erbium_search::backend::{native_backend_factory, xla_backend_factory, BackendFactory};
 use erbium_search::coordinator::domain_explorer::{DomainExplorer, MctStrategy};
-use erbium_search::coordinator::{Pipeline, Topology};
+use erbium_search::coordinator::{AggregationPolicy, Pipeline, PipelineConfig, Topology};
 use erbium_search::cpu_baseline::CpuBaseline;
-use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
+use erbium_search::erbium::FpgaModel;
 use erbium_search::nfa::constraint_gen::{estimate, HardwareConfig};
 use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
 use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let n_uq = env_usize("E2E_UQ", 12);
     let n_rules = env_usize("E2E_RULES", 2_000);
     let use_xla = std::env::var("E2E_BACKEND").map(|b| b != "native").unwrap_or(true)
-        && Runtime::default_dir().join("manifest.txt").exists();
+        && Runtime::artifacts_available();
 
     println!("== erbium-search end-to-end driver ==");
     let gen_cfg = GeneratorConfig { n_rules, ..GeneratorConfig::default() };
@@ -84,28 +84,25 @@ fn main() -> anyhow::Result<()> {
     let backend_label = if use_xla { "XLA artifact via PJRT" } else { "native simulator" };
     println!("pipeline: {} | backend: {backend_label}", topology.label());
 
-    let nfa_for_factory = nfa.clone();
-    let factory: erbium_search::coordinator::pipeline::EngineFactory =
-        Arc::new(move || {
-            let backend = if use_xla {
-                Backend::Xla {
-                    runtime: Arc::new(Runtime::cpu(Runtime::default_dir())?),
-                    batch_hint: 1024,
-                }
-            } else {
-                Backend::Native
-            };
-            ErbiumEngine::new(nfa_for_factory.clone(), model, backend, 28, 64)
-        });
+    let factory: BackendFactory = if use_xla {
+        xla_backend_factory(nfa.clone(), model, 1024, 28, 64)
+    } else {
+        native_backend_factory(nfa.clone(), model, 28, 64)
+    };
 
+    // Worker-side aggregation on (§4.3): the wrapper folds queued requests
+    // into single engine calls, exactly as the deployment did.
+    let cfg = PipelineConfig::new(topology).with_aggregation(AggregationPolicy::DrainQueue);
     let run0 = Instant::now();
-    let report = Pipeline::new(topology, factory).run(&trace)?;
+    let report = Pipeline::new(cfg, factory).run(&trace)?;
     let wall_s = run0.elapsed().as_secs_f64();
     println!("\n== pipeline report ==");
     println!("  user queries           : {}", report.user_queries);
     println!("  TS examined / valid    : {} / {}", report.travel_solutions_examined, report.valid_travel_solutions);
     println!("  MCT queries            : {}", report.mct_queries);
-    println!("  engine calls           : {}", report.engine_calls);
+    println!("  MCT requests / calls   : {} / {} (aggregation {:.2} req/call)",
+        report.mct_requests, report.engine_calls, report.mean_aggregation);
+    println!("  router queue mean/max  : {:.2} / {}", report.mean_router_queue, report.max_router_queue);
     println!("  wall time              : {:.2} s", wall_s);
     println!("  wall MCT throughput    : {:.1} k q/s (CPU stand-in)", report.wall_qps / 1e3);
     println!(

@@ -1,7 +1,14 @@
-//! Topology configuration: the paper's `p/w/k/e` parallelism labels (§4.3).
+//! Run configuration for the integrated system: the paper's `p/w/k/e`
+//! parallelism labels (§4.3) plus the policy knobs of one pipeline run —
+//! the Domain-Explorer batching strategy (§5.1–5.2), the worker-side
+//! aggregation policy (§4.3 "the worker is responsible for scheduling
+//! different MCT requests and batching them into a single ERBIUM call"),
+//! and the failure policy of the engine path.
 
 use crate::nfa::constraint_gen::{HardwareConfig, Shell};
 use crate::rules::standard::StandardVersion;
+
+use super::domain_explorer::MctStrategy;
 
 /// Engines one FPGA board can host (§4.3: "the FPGA board is able to fit a
 /// total of 4 engines").
@@ -60,6 +67,107 @@ impl std::fmt::Display for Topology {
     }
 }
 
+/// How an MCT-Wrapper worker turns its queued requests into engine calls —
+/// the real-system mirror of the simulator's wrapper batching (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregationPolicy {
+    /// One engine call per request (the pre-refactor behaviour; what the
+    /// paper shows *loses* the FPGA gains when processes under-batch).
+    Forward,
+    /// Aggregate every request waiting in the worker's queue into one
+    /// engine call — the §4.3 wrapper policy the simulator models.
+    DrainQueue,
+    /// Drain, but cap the aggregate at `n` requests per call.
+    MaxBatch(usize),
+}
+
+impl AggregationPolicy {
+    /// Requests one engine call may aggregate under this policy.
+    pub fn cap(&self) -> usize {
+        match *self {
+            AggregationPolicy::Forward => 1,
+            AggregationPolicy::DrainQueue => usize::MAX,
+            AggregationPolicy::MaxBatch(n) => n.max(1),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            AggregationPolicy::Forward => "forward".into(),
+            AggregationPolicy::DrainQueue => "drain".into(),
+            AggregationPolicy::MaxBatch(n) => format!("max:{n}"),
+        }
+    }
+
+    /// Parse a CLI spelling: `forward`, `drain`, or `max:N`.
+    pub fn parse(s: &str) -> Option<AggregationPolicy> {
+        match s {
+            "forward" => Some(AggregationPolicy::Forward),
+            "drain" => Some(AggregationPolicy::DrainQueue),
+            _ => s
+                .strip_prefix("max:")
+                .and_then(|n| n.parse().ok())
+                .map(AggregationPolicy::MaxBatch),
+        }
+    }
+}
+
+/// What a failed engine call does to the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailurePolicy {
+    /// Any failed call aborts the whole replay with an error.
+    FailFast,
+    /// Failed calls degrade to conservative [`no-match`] decisions
+    /// (industry default MCT) and are counted in the report.
+    ///
+    /// [`no-match`]: crate::rules::types::MctDecision::no_match
+    Degrade,
+}
+
+/// Full configuration of one real-pipeline run: topology + policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineConfig {
+    pub topology: Topology,
+    /// Domain-Explorer MCT invocation strategy (§5.1–5.2).
+    pub strategy: MctStrategy,
+    /// Worker-side request aggregation (§4.3).
+    pub aggregation: AggregationPolicy,
+    pub failure: FailurePolicy,
+}
+
+impl PipelineConfig {
+    /// The paper's FPGA-flow defaults: batched DE, no worker aggregation
+    /// (requests forwarded as-is), fail-fast.
+    pub fn new(topology: Topology) -> PipelineConfig {
+        PipelineConfig {
+            topology,
+            strategy: MctStrategy::FpgaBatched,
+            aggregation: AggregationPolicy::Forward,
+            failure: FailurePolicy::FailFast,
+        }
+    }
+
+    pub fn with_strategy(mut self, strategy: MctStrategy) -> PipelineConfig {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn with_aggregation(mut self, aggregation: AggregationPolicy) -> PipelineConfig {
+        self.aggregation = aggregation;
+        self
+    }
+
+    pub fn with_failure(mut self, failure: FailurePolicy) -> PipelineConfig {
+        self.failure = failure;
+        self
+    }
+
+    /// Report label, e.g. `16p 1w 1k 4e · agg=drain`.
+    pub fn label(&self) -> String {
+        format!("{} · agg={}", self.topology.label(), self.aggregation.label())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +190,29 @@ mod tests {
     #[should_panic]
     fn oversubscribed_board_panics() {
         Topology::new(1, 1, 4, 2);
+    }
+
+    #[test]
+    fn aggregation_policy_parse_roundtrip() {
+        for p in [
+            AggregationPolicy::Forward,
+            AggregationPolicy::DrainQueue,
+            AggregationPolicy::MaxBatch(6),
+        ] {
+            assert_eq!(AggregationPolicy::parse(&p.label()), Some(p));
+        }
+        assert_eq!(AggregationPolicy::parse("max:x"), None);
+        assert_eq!(AggregationPolicy::Forward.cap(), 1);
+        assert_eq!(AggregationPolicy::MaxBatch(0).cap(), 1, "cap is never zero");
+    }
+
+    #[test]
+    fn pipeline_config_builders() {
+        let c = PipelineConfig::new(Topology::new(16, 1, 1, 4))
+            .with_aggregation(AggregationPolicy::DrainQueue)
+            .with_failure(FailurePolicy::Degrade);
+        assert_eq!(c.aggregation, AggregationPolicy::DrainQueue);
+        assert_eq!(c.failure, FailurePolicy::Degrade);
+        assert_eq!(c.label(), "16p 1w 1k 4e · agg=drain");
     }
 }

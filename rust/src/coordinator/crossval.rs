@@ -1,0 +1,72 @@
+//! Cross-validation of the discrete-event simulator against the real
+//! threaded pipeline: **same topology, same regime, comparable report
+//! fields**.
+//!
+//! The paper's end-to-end findings hinge on worker-side aggregation
+//! (§4.3, Fig 10): with many processes per worker, the wrapper batches
+//! queued requests into single ERBIUM calls. The simulator models that
+//! regime; since the pipeline refactor the real system exercises it too
+//! ([`AggregationPolicy::DrainQueue`]). This module runs both over the
+//! same topology and checks they land in the same aggregation regime —
+//! the cheap-but-meaningful invariant a service-time simulator and a
+//! wall-clock thread system can share.
+
+use anyhow::Result;
+
+use crate::backend::BackendFactory;
+use crate::workload::ProductionTrace;
+
+use super::config::{AggregationPolicy, PipelineConfig, Topology};
+use super::pipeline::{Pipeline, PipelineReport};
+use super::sim::{simulate, SimConfig, SimReport};
+
+/// Threshold above which a run counts as "aggregating": mean requests per
+/// engine call noticeably above one.
+pub const AGGREGATION_REGIME_THRESHOLD: f64 = 1.05;
+
+/// Paired reports of the two realisations of the same topology.
+#[derive(Debug, Clone)]
+pub struct CrossValidation {
+    pub sim: SimReport,
+    pub real: PipelineReport,
+}
+
+impl CrossValidation {
+    /// True when the simulator and the real pipeline agree on whether the
+    /// topology forces worker-side aggregation (both above or both below
+    /// [`AGGREGATION_REGIME_THRESHOLD`]).
+    pub fn same_aggregation_regime(&self) -> bool {
+        (self.sim.mean_aggregation > AGGREGATION_REGIME_THRESHOLD)
+            == (self.real.mean_aggregation > AGGREGATION_REGIME_THRESHOLD)
+    }
+
+    /// One-line summary for benches and the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} | sim agg {:.2} vs real agg {:.2} → {}",
+            self.real.topology_label,
+            self.sim.mean_aggregation,
+            self.real.mean_aggregation,
+            if self.same_aggregation_regime() { "same regime" } else { "REGIME MISMATCH" }
+        )
+    }
+}
+
+/// Run the simulator and the real pipeline over the same topology.
+///
+/// The simulator is driven by its closed-loop synthetic request stream
+/// (`batch_per_request` queries per MCT request); the real pipeline
+/// replays `trace` through `factory`-built backends with the DrainQueue
+/// wrapper policy — the §4.3 behaviour the simulator models.
+pub fn cross_validate(
+    topology: Topology,
+    batch_per_request: usize,
+    factory: BackendFactory,
+    trace: &ProductionTrace,
+) -> Result<CrossValidation> {
+    let sim = simulate(&SimConfig::v2_cloud(topology, batch_per_request));
+    let cfg =
+        PipelineConfig::new(topology).with_aggregation(AggregationPolicy::DrainQueue);
+    let real = Pipeline::new(cfg, factory).run(trace)?;
+    Ok(CrossValidation { sim, real })
+}

@@ -4,27 +4,35 @@
 //!
 //! * [`pipeline`] — the **real** threaded system: Injector → Domain
 //!   Explorer processes → router (ZeroMQ analogue over channels) → MCT
-//!   Wrapper workers (encode + batch) → XRT-serialised ERBIUM engine
-//!   (XLA or native backend). Used by the end-to-end example; reports both
-//!   wall-clock and hardware-model time.
+//!   Wrapper workers (aggregation per [`config::AggregationPolicy`]) →
+//!   XRT-serialised [`crate::backend::MatchBackend`] (ERBIUM engine, XLA or
+//!   native, or the §5.2 CPU baseline). Used by the end-to-end example;
+//!   reports both wall-clock and backend-model time.
 //! * [`sim`] — a deterministic **discrete-event simulation** of the same
 //!   topology with calibrated service-time models ([`overheads`]). Used by
 //!   the figure benches (Figs 6–11), where the paper measures saturation
 //!   and queueing effects of a hardware deployment we do not have.
 //!
-//! Shared vocabulary: [`config::Topology`] (the paper's `p/w/k/e` labels),
+//! [`crossval`] runs both over the same topology and checks they agree on
+//! the worker-aggregation regime (the Fig 10 behaviour, reproduced in the
+//! real system since the `MatchBackend` refactor).
+//!
+//! Shared vocabulary: [`config::Topology`] (the paper's `p/w/k/e` labels)
+//! and [`config::PipelineConfig`] (strategy/aggregation/failure policies),
 //! [`metrics`] (p90-centric, matching the paper's SLA reporting), the
 //! [`domain_explorer`] Travel-Solution batching policy of §5.1–5.2.
 
 pub mod config;
+pub mod crossval;
 pub mod domain_explorer;
 pub mod metrics;
 pub mod overheads;
 pub mod pipeline;
 pub mod sim;
 
-pub use config::Topology;
-pub use domain_explorer::{DomainExplorer, UserQueryOutcome};
+pub use config::{AggregationPolicy, FailurePolicy, PipelineConfig, Topology};
+pub use crossval::{cross_validate, CrossValidation};
+pub use domain_explorer::{DomainExplorer, MctStrategy, UserQueryOutcome};
 pub use metrics::Percentiles;
 pub use overheads::Overheads;
 pub use pipeline::{Pipeline, PipelineReport};

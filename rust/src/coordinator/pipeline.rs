@@ -5,25 +5,34 @@
 //!                  │  synchronous Request-Reply  (ZeroMQ analogue: mpsc
 //!                  ▼  channel + per-request reply channel)
 //!             [router queue] ─▶ [w MCT-Wrapper worker threads]
-//!                                   │ forward/batch
+//!                                   │ aggregation (AggregationPolicy)
 //!                                   ▼
 //!                             [k engine-server threads = k kernels]
 //!                                   │
 //!                                   ▼
-//!                             ERBIUM engine (XLA artifact via PJRT,
-//!                             or the native functional simulator)
+//!                             MatchBackend (ERBIUM engine via XLA/PJRT or
+//!                             native simulator, or the §5.2 CPU baseline)
 //! ```
 //!
 //! Everything here is functional — MCT answers are computed for real. Two
 //! clocks are reported (DESIGN.md §Dual-clock): wall-clock of this CPU
-//! stand-in, and the hardware-model clock accumulated per kernel call.
+//! stand-in, and the backend-model clock accumulated per kernel call.
+//!
+//! The MCT-Wrapper workers implement the paper's §4.3 worker-side
+//! aggregation for real: under the `DrainQueue` policy
+//! ([`super::config::AggregationPolicy`]) a worker folds every request
+//! waiting in the router queue into one backend call
+//! and splits the replies — the mechanism whose absence makes "FPGA gains
+//! evaporate unless the application submits requests optimally". The same
+//! regime is modeled by [`super::sim`]; [`super::crossval`] checks the two
+//! agree.
 //!
 //! PJRT handles in the `xla` crate are `Rc`-based and not `Send`, exactly
 //! like an FPGA board handle is pinned to its XRT process: each kernel gets
-//! a dedicated engine-server thread that *builds* its engine locally via
-//! the supplied factory and serves requests over a channel — the software
-//! shape of the paper's "1-to-N relationship between the MCT Wrapper and
-//! the FPGA board" (§4.1).
+//! a dedicated engine-server thread that *builds* its backend locally via
+//! the supplied [`BackendFactory`] and serves requests over a channel — the
+//! software shape of the paper's "1-to-N relationship between the MCT
+//! Wrapper and the FPGA board" (§4.1).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -32,17 +41,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::erbium::ErbiumEngine;
+use crate::backend::{BackendFactory, MatchBackend};
 use crate::rules::types::{MctDecision, MctQuery};
 use crate::workload::ProductionTrace;
 
-use super::config::Topology;
-use super::domain_explorer::{DomainExplorer, MctStrategy};
+use super::config::{FailurePolicy, PipelineConfig, Topology};
+use super::domain_explorer::DomainExplorer;
 use super::metrics::Percentiles;
-
-/// Builds one engine instance inside an engine-server thread. Called once
-/// per kernel (`k` times per run).
-pub type EngineFactory = Arc<dyn Fn() -> Result<ErbiumEngine> + Send + Sync>;
 
 /// One MCT request travelling process → worker (the ZeroMQ REQ frame).
 struct WorkRequest {
@@ -50,106 +55,236 @@ struct WorkRequest {
     reply: mpsc::Sender<Result<Vec<MctDecision>, String>>,
 }
 
-/// Aggregated report of one pipeline run.
+/// Counters shared across the pipeline stages.
+#[derive(Default)]
+struct StageCounters {
+    /// Backend-model time, ns (hardware clock for FPGA backends, CPU
+    /// service model for the baseline).
+    modeled_ns: AtomicU64,
+    engine_calls: AtomicUsize,
+    failed_calls: AtomicUsize,
+    /// Worker-side aggregation: engine-bound calls and the requests they
+    /// carried.
+    agg_calls: AtomicUsize,
+    agg_requests: AtomicUsize,
+    /// Router queue occupancy, sampled at request arrival.
+    router_depth: AtomicUsize,
+    depth_sum: AtomicU64,
+    depth_samples: AtomicU64,
+    depth_max: AtomicUsize,
+    /// Busy time per stage, ns.
+    worker_busy_ns: AtomicU64,
+    kernel_busy_ns: AtomicU64,
+}
+
+/// Aggregated report of one pipeline run. Field names are deliberately
+/// comparable with [`super::sim::SimReport`] (mean aggregation, per-request
+/// execution percentiles) so the real system and the simulator can be
+/// cross-validated in the same regime.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
     pub topology_label: String,
+    /// Label of the backend that served the run (e.g. `fpga-native`, `cpu`).
+    pub backend: String,
+    /// Aggregation policy label (e.g. `forward`, `drain`, `max:8`).
+    pub aggregation: String,
     pub user_queries: usize,
     pub travel_solutions_examined: usize,
     pub valid_travel_solutions: usize,
     pub mct_queries: usize,
+    /// MCT requests issued by the Domain Explorers (router frames).
+    pub mct_requests: usize,
     pub engine_calls: usize,
+    /// Engine calls that returned an error (non-zero only under
+    /// [`FailurePolicy::Degrade`]; fail-fast aborts the run instead).
+    pub failed_calls: usize,
+    /// Mean requests aggregated per engine call (the Fig 10 quantity).
+    pub mean_aggregation: f64,
     /// Wall-clock of the whole replay, ms.
     pub wall_ms: f64,
     /// Wall-clock MCT throughput, queries/s.
     pub wall_qps: f64,
-    /// Hardware-model time accumulated across kernel calls, µs.
+    /// Backend-model time accumulated across kernel calls, µs.
     pub modeled_kernel_us: f64,
     /// p50/p90 user-query latency, wall-clock ms.
     pub uq_latency_p50_ms: f64,
     pub uq_latency_p90_ms: f64,
+    /// Execution time of a single MCT request as seen by the process
+    /// (queueing + aggregation + engine), wall-clock µs — the counterpart
+    /// of the simulator's `exec_*_us`.
+    pub mct_req_p50_us: f64,
+    pub mct_req_p90_us: f64,
+    pub mct_req_mean_us: f64,
+    /// Router queue occupancy sampled at request arrival.
+    pub mean_router_queue: f64,
+    pub max_router_queue: usize,
+    /// Fraction of the run each stage spent busy (aggregate across the
+    /// stage's threads).
+    pub worker_busy_frac: f64,
+    pub kernel_busy_frac: f64,
 }
 
-/// The runnable pipeline.
+/// The runnable pipeline, generic over the backend that answers MCT
+/// queries.
 pub struct Pipeline {
-    pub topology: Topology,
-    factory: EngineFactory,
+    pub config: PipelineConfig,
+    factory: BackendFactory,
 }
 
 impl Pipeline {
-    pub fn new(topology: Topology, factory: EngineFactory) -> Pipeline {
-        Pipeline { topology, factory }
+    pub fn new(config: PipelineConfig, factory: BackendFactory) -> Pipeline {
+        Pipeline { config, factory }
+    }
+
+    /// Paper-default policies (batched DE, forward aggregation, fail-fast).
+    pub fn with_topology(topology: Topology, factory: BackendFactory) -> Pipeline {
+        Pipeline::new(PipelineConfig::new(topology), factory)
     }
 
     /// Replay a trace through the full system and report.
     pub fn run(&self, trace: &ProductionTrace) -> Result<PipelineReport> {
         let t0 = Instant::now();
+        let topology = self.config.topology;
+        let counters = Arc::new(StageCounters::default());
+        let backend_label = Arc::new(Mutex::new(String::new()));
 
         // ---- Engine servers (k kernels) --------------------------------
         let (etx, erx) = mpsc::channel::<WorkRequest>();
         let erx = Arc::new(Mutex::new(erx));
-        let modeled_ns = Arc::new(AtomicU64::new(0));
-        let engine_calls = Arc::new(AtomicUsize::new(0));
         let mut engine_handles = Vec::new();
-        for _ in 0..self.topology.kernels {
+        for _ in 0..topology.kernels {
             let erx = erx.clone();
             let factory = self.factory.clone();
-            let modeled_ns = modeled_ns.clone();
-            let engine_calls = engine_calls.clone();
+            let counters = counters.clone();
+            let backend_label = backend_label.clone();
             engine_handles.push(std::thread::spawn(move || {
-                let engine = match factory() {
-                    Ok(e) => e,
+                let backend = match factory() {
+                    Ok(b) => b,
                     Err(e) => {
                         // Fail every request we can still see.
                         while let Ok(req) = erx.lock().unwrap().recv() {
-                            let _ = req.reply.send(Err(format!("engine init: {e:#}")));
+                            counters.engine_calls.fetch_add(1, Ordering::Relaxed);
+                            counters.failed_calls.fetch_add(1, Ordering::Relaxed);
+                            let _ = req.reply.send(Err(format!("backend init: {e:#}")));
                         }
                         return;
                     }
                 };
+                {
+                    let mut label = backend_label.lock().unwrap();
+                    if label.is_empty() {
+                        *label = backend.label();
+                    }
+                }
                 loop {
                     let req = match erx.lock().unwrap().recv() {
                         Ok(r) => r,
                         Err(_) => break,
                     };
-                    engine_calls.fetch_add(1, Ordering::Relaxed);
-                    let msg = match engine.evaluate_batch_timed(&req.queries) {
+                    let b0 = Instant::now();
+                    counters.engine_calls.fetch_add(1, Ordering::Relaxed);
+                    let msg = match backend.evaluate_batch_timed(&req.queries) {
                         Ok((ds, timing)) => {
-                            modeled_ns
+                            counters
+                                .modeled_ns
                                 .fetch_add((timing.total_us * 1e3) as u64, Ordering::Relaxed);
                             Ok(ds)
                         }
-                        Err(e) => Err(format!("{e:#}")),
+                        Err(e) => {
+                            counters.failed_calls.fetch_add(1, Ordering::Relaxed);
+                            Err(format!("{e:#}"))
+                        }
                     };
+                    counters
+                        .kernel_busy_ns
+                        .fetch_add(b0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     let _ = req.reply.send(msg);
                 }
             }));
         }
 
-        // ---- MCT Wrapper workers ---------------------------------------
+        // ---- MCT Wrapper workers (aggregation stage) -------------------
         let (wtx, wrx) = mpsc::channel::<WorkRequest>();
         let wrx = Arc::new(Mutex::new(wrx));
+        let agg_cap = self.config.aggregation.cap();
         let mut worker_handles = Vec::new();
-        for _ in 0..self.topology.workers {
+        for _ in 0..topology.workers {
             let wrx = wrx.clone();
             let etx = etx.clone();
+            let counters = counters.clone();
             worker_handles.push(std::thread::spawn(move || {
                 loop {
                     // Round-robin dealer: whichever worker is free pulls the
                     // next request (asynchronous dealer semantics, §4.1).
-                    let req = match wrx.lock().unwrap().recv() {
-                        Ok(r) => r,
-                        Err(_) => break,
-                    };
-                    // Forward to the board; XRT-style blocking submit.
-                    let (rtx, rrx) = mpsc::channel();
-                    if etx.send(WorkRequest { queries: req.queries, reply: rtx }).is_err() {
-                        let _ = req.reply.send(Err("board gone".into()));
-                        continue;
+                    let mut pending: Vec<WorkRequest> = Vec::new();
+                    {
+                        let guard = wrx.lock().unwrap();
+                        match guard.recv() {
+                            Ok(r) => pending.push(r),
+                            Err(_) => break,
+                        }
+                        // §4.3 wrapper scheduling: fold every request
+                        // already waiting into the same engine call.
+                        while pending.len() < agg_cap {
+                            match guard.try_recv() {
+                                Ok(r) => pending.push(r),
+                                Err(_) => break,
+                            }
+                        }
                     }
-                    let res =
-                        rrx.recv().unwrap_or_else(|_| Err("engine server died".into()));
-                    let _ = req.reply.send(res);
+                    let b0 = Instant::now();
+                    counters.router_depth.fetch_sub(pending.len(), Ordering::Relaxed);
+                    counters.agg_calls.fetch_add(1, Ordering::Relaxed);
+                    counters.agg_requests.fetch_add(pending.len(), Ordering::Relaxed);
+
+                    // One combined submit to the board; XRT-style blocking.
+                    let mut combined: Vec<MctQuery> = Vec::new();
+                    let mut spans: Vec<usize> = Vec::with_capacity(pending.len());
+                    for req in &pending {
+                        spans.push(req.queries.len());
+                        combined.extend_from_slice(&req.queries);
+                    }
+                    let combined_len = combined.len();
+                    let (rtx, rrx) = mpsc::channel();
+                    // Worker busy time covers its own work (combine +
+                    // scatter), not the blocked wait on the engine — the
+                    // stages must not double-count each other's service.
+                    let combine_ns = b0.elapsed().as_nanos() as u64;
+                    let res = if etx.send(WorkRequest { queries: combined, reply: rtx }).is_err()
+                    {
+                        Err("board gone".to_string())
+                    } else {
+                        rrx.recv().unwrap_or_else(|_| Err("engine server died".into()))
+                    };
+                    let res = match res {
+                        Ok(ds) if ds.len() != combined_len => Err(format!(
+                            "backend returned {} decisions for {combined_len} queries",
+                            ds.len()
+                        )),
+                        other => other,
+                    };
+
+                    // Scatter the aggregate reply back per request.
+                    let s0 = Instant::now();
+                    match res {
+                        Ok(ds) => {
+                            let mut off = 0;
+                            for (req, n) in pending.iter().zip(&spans) {
+                                let slice = ds[off..off + n].to_vec();
+                                off += n;
+                                let _ = req.reply.send(Ok(slice));
+                            }
+                        }
+                        Err(e) => {
+                            for req in &pending {
+                                let _ = req.reply.send(Err(e.clone()));
+                            }
+                        }
+                    }
+                    counters.worker_busy_ns.fetch_add(
+                        combine_ns + s0.elapsed().as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
                 }
             }));
         }
@@ -159,15 +294,19 @@ impl Pipeline {
         let queue: Arc<Mutex<VecDeque<&crate::workload::UserQuery>>> =
             Arc::new(Mutex::new(trace.queries.iter().collect()));
         let stats = Arc::new(Mutex::new((Percentiles::new(), 0usize, 0usize, 0usize, 0usize)));
-        let errors = Arc::new(AtomicUsize::new(0));
+        let req_lat = Arc::new(Mutex::new(Percentiles::new()));
+        let degraded = Arc::new(AtomicUsize::new(0));
+        let strategy = self.config.strategy;
         std::thread::scope(|scope| {
-            for _ in 0..self.topology.processes {
+            for _ in 0..topology.processes {
                 let queue = queue.clone();
                 let wtx = wtx.clone();
                 let stats = stats.clone();
-                let errors = errors.clone();
+                let req_lat = req_lat.clone();
+                let degraded = degraded.clone();
+                let counters = counters.clone();
                 scope.spawn(move || {
-                    let de = DomainExplorer::new(MctStrategy::FpgaBatched);
+                    let de = DomainExplorer::new(strategy);
                     loop {
                         let uq = match queue.lock().unwrap().pop_front() {
                             Some(u) => u,
@@ -175,16 +314,28 @@ impl Pipeline {
                         };
                         let q0 = Instant::now();
                         let outcome = de.process(uq, |qs: &[MctQuery]| {
+                            let r0 = Instant::now();
+                            let depth = counters.router_depth.fetch_add(1, Ordering::Relaxed) + 1;
+                            counters.depth_sum.fetch_add(depth as u64, Ordering::Relaxed);
+                            counters.depth_samples.fetch_add(1, Ordering::Relaxed);
+                            counters.depth_max.fetch_max(depth, Ordering::Relaxed);
                             let (rtx, rrx) = mpsc::channel();
                             wtx.send(WorkRequest { queries: qs.to_vec(), reply: rtx })
                                 .expect("router closed");
-                            match rrx.recv().expect("worker died") {
+                            let ds = match rrx.recv().expect("worker died") {
                                 Ok(ds) => ds,
                                 Err(_) => {
-                                    errors.fetch_add(1, Ordering::Relaxed);
+                                    // Conservative industry default while the
+                                    // failure policy decides the run's fate.
+                                    degraded.fetch_add(1, Ordering::Relaxed);
                                     qs.iter().map(|_| MctDecision::no_match()).collect()
                                 }
-                            }
+                            };
+                            req_lat
+                                .lock()
+                                .unwrap()
+                                .record(r0.elapsed().as_secs_f64() * 1e6);
+                            ds
                         });
                         let ms = q0.elapsed().as_secs_f64() * 1e3;
                         let mut s = stats.lock().unwrap();
@@ -204,13 +355,26 @@ impl Pipeline {
         for h in engine_handles {
             let _ = h.join();
         }
-        anyhow::ensure!(
-            errors.load(Ordering::Relaxed) == 0,
-            "{} engine calls failed",
-            errors.load(Ordering::Relaxed)
-        );
+
+        let failed = counters.failed_calls.load(Ordering::Relaxed);
+        let degraded_reqs = degraded.load(Ordering::Relaxed);
+        if self.config.failure == FailurePolicy::FailFast {
+            // `degraded_reqs` also catches failures the engine-side counter
+            // cannot see (a dead engine-server or worker thread): any
+            // substituted decision means the replay was not clean.
+            anyhow::ensure!(
+                failed == 0 && degraded_reqs == 0,
+                "{failed} engine calls failed, {degraded_reqs} requests degraded to \
+                 no-match; rerun with FailurePolicy::Degrade to tolerate"
+            );
+        }
 
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let wall_ns = (wall_ms * 1e6).max(1.0);
+        let agg_calls = counters.agg_calls.load(Ordering::Relaxed);
+        let agg_requests = counters.agg_requests.load(Ordering::Relaxed);
+        let depth_samples = counters.depth_samples.load(Ordering::Relaxed);
+        let mut req_lat = req_lat.lock().unwrap();
         let mut s = stats.lock().unwrap();
         let mct_queries = s.1;
         let de_calls = s.2;
@@ -219,17 +383,32 @@ impl Pipeline {
         let lat = &mut s.0;
         let _ = de_calls; // engine-side count is authoritative
         Ok(PipelineReport {
-            topology_label: self.topology.label(),
+            topology_label: topology.label(),
+            backend: backend_label.lock().unwrap().clone(),
+            aggregation: self.config.aggregation.label(),
             user_queries: trace.queries.len(),
             travel_solutions_examined: examined,
             valid_travel_solutions: valid_ts,
             mct_queries,
-            engine_calls: engine_calls.load(Ordering::Relaxed),
+            mct_requests: agg_requests,
+            engine_calls: counters.engine_calls.load(Ordering::Relaxed),
+            failed_calls: failed,
+            mean_aggregation: agg_requests as f64 / agg_calls.max(1) as f64,
             wall_ms,
             wall_qps: mct_queries as f64 / (wall_ms / 1e3).max(1e-12),
-            modeled_kernel_us: modeled_ns.load(Ordering::Relaxed) as f64 / 1e3,
+            modeled_kernel_us: counters.modeled_ns.load(Ordering::Relaxed) as f64 / 1e3,
             uq_latency_p50_ms: if lat.is_empty() { 0.0 } else { lat.p50() },
             uq_latency_p90_ms: if lat.is_empty() { 0.0 } else { lat.p90() },
+            mct_req_p50_us: if req_lat.is_empty() { 0.0 } else { req_lat.p50() },
+            mct_req_p90_us: if req_lat.is_empty() { 0.0 } else { req_lat.p90() },
+            mct_req_mean_us: if req_lat.is_empty() { 0.0 } else { req_lat.mean() },
+            mean_router_queue: counters.depth_sum.load(Ordering::Relaxed) as f64
+                / depth_samples.max(1) as f64,
+            max_router_queue: counters.depth_max.load(Ordering::Relaxed),
+            worker_busy_frac: counters.worker_busy_ns.load(Ordering::Relaxed) as f64
+                / (wall_ns * topology.workers as f64),
+            kernel_busy_frac: counters.kernel_busy_ns.load(Ordering::Relaxed) as f64
+                / (wall_ns * topology.kernels as f64),
         })
     }
 }
@@ -237,59 +416,85 @@ impl Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::erbium::{Backend, FpgaModel};
+    use crate::backend::BackendFactory;
+    use crate::coordinator::config::AggregationPolicy;
+    use crate::coordinator::domain_explorer::MctStrategy;
+    use crate::erbium::ErbiumEngine;
     use crate::nfa::constraint_gen::HardwareConfig;
-    use crate::nfa::parser::{compile_rule_set, CompileOptions};
-    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
-    use crate::rules::standard::{Schema, StandardVersion};
+    use crate::rules::standard::StandardVersion;
+    use crate::testing::fixture::compile_fixture;
     use crate::workload::{generate_trace, TraceConfig};
 
-    fn native_factory(seed: u64) -> (EngineFactory, crate::rules::types::World) {
-        let cfg = GeneratorConfig::small(seed, 400);
-        let world = generate_world(&cfg);
-        let schema = Schema::for_version(StandardVersion::V2);
-        let rs = generate_rule_set(&cfg, &world, StandardVersion::V2);
-        let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
-        let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
-        let factory: EngineFactory = Arc::new(move || {
-            ErbiumEngine::new(nfa.clone(), model, Backend::Native, 28, 64)
-        });
-        (factory, world)
+    fn native_factory(seed: u64) -> (BackendFactory, crate::rules::types::World) {
+        let f = compile_fixture(seed, 400, StandardVersion::V2, HardwareConfig::v2_aws(4));
+        (f.native_factory(), f.world)
     }
 
     #[test]
     fn pipeline_replays_trace_completely() {
         let (factory, world) = native_factory(301);
         let trace = generate_trace(&TraceConfig::scaled(11, 30, 40.0), &world);
-        let p = Pipeline::new(Topology::new(4, 2, 1, 4), factory);
+        let p = Pipeline::with_topology(Topology::new(4, 2, 1, 4), factory);
         let r = p.run(&trace).unwrap();
         assert_eq!(r.user_queries, 30);
         assert!(r.mct_queries > 0);
         assert!(r.engine_calls > 0);
+        assert_eq!(r.failed_calls, 0);
         assert!(r.valid_travel_solutions > 0);
         assert!(r.modeled_kernel_us > 0.0);
         assert!(r.uq_latency_p90_ms >= r.uq_latency_p50_ms);
+        assert!(r.mct_req_p90_us >= r.mct_req_p50_us);
+        assert_eq!(r.backend, "fpga-native");
+        // Forward policy: one engine call per request, exactly.
+        assert_eq!(r.aggregation, "forward");
+        assert!((r.mean_aggregation - 1.0).abs() < 1e-9);
+        assert_eq!(r.mct_requests, r.engine_calls);
+        assert!(r.mean_router_queue >= 1.0, "arrival-sampled depth counts self");
+        assert!(r.max_router_queue >= 1);
+        assert!(r.worker_busy_frac > 0.0 && r.kernel_busy_frac > 0.0);
     }
 
     #[test]
     fn pipeline_results_match_single_threaded_de() {
-        // Threading must not change functional outcomes: compare aggregate
-        // validity counts with a single-threaded run of the same DE policy.
+        // Threading and aggregation must not change functional outcomes:
+        // compare aggregate validity counts with a single-threaded run of
+        // the same DE policy.
         let (factory, world) = native_factory(303);
         let trace = generate_trace(&TraceConfig::scaled(13, 12, 30.0), &world);
-        let p = Pipeline::new(Topology::new(3, 2, 2, 2), factory.clone());
-        let r = p.run(&trace).unwrap();
+        let cfg = PipelineConfig::new(Topology::new(3, 2, 2, 2))
+            .with_aggregation(AggregationPolicy::DrainQueue);
+        let r = Pipeline::new(cfg, factory.clone()).run(&trace).unwrap();
 
-        let engine = factory().unwrap();
+        let backend = factory().unwrap();
         let de = DomainExplorer::new(MctStrategy::FpgaBatched);
         let mut valid = 0;
         let mut checked = 0;
         for uq in &trace.queries {
-            let o = de.process(uq, |qs| engine.evaluate_batch(qs).unwrap());
+            let o = de.process(uq, |qs| backend.evaluate_batch(qs).unwrap());
             valid += o.valid_ts;
             checked += o.checked_mct_queries;
         }
         assert_eq!(r.valid_travel_solutions, valid);
         assert_eq!(r.mct_queries, checked);
+    }
+
+    #[test]
+    fn max_batch_policy_caps_aggregation() {
+        let (factory, world) = native_factory(307);
+        let trace = generate_trace(&TraceConfig::scaled(17, 24, 30.0), &world);
+        let cfg = PipelineConfig::new(Topology::new(8, 1, 1, 4))
+            .with_aggregation(AggregationPolicy::MaxBatch(2));
+        let r = Pipeline::new(cfg, factory).run(&trace).unwrap();
+        assert!(r.mean_aggregation <= 2.0 + 1e-9, "cap violated: {}", r.mean_aggregation);
+        assert!(r.mct_requests >= r.engine_calls);
+    }
+
+    #[test]
+    fn backends_are_interchangeable() {
+        // Compile-time statement of the refactor: the pipeline is generic
+        // over MatchBackend; ErbiumEngine is just one implementor.
+        fn assert_backend<T: crate::backend::MatchBackend>() {}
+        assert_backend::<ErbiumEngine>();
+        assert_backend::<crate::backend::CpuBackend>();
     }
 }

@@ -17,7 +17,7 @@
 //! [`crate::erbium::hw_model`] (the accelerator datapath).
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::erbium::FpgaModel;
 use crate::nfa::constraint_gen::{HardwareConfig, Shell};
@@ -74,7 +74,10 @@ pub struct SimReport {
     pub total_requests: usize,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// `Ord` so events can live *inside* the heap entries (keyed by time then
+/// sequence number; the derived event order never decides priority because
+/// `seq` is unique).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum Event {
     /// Request `req` arrives at its worker's queue.
     Arrive { req: usize },
@@ -84,6 +87,18 @@ enum Event {
     KernelDone { kernel: usize, worker: usize },
     /// Reply delivered to the process.
     Complete { req: usize },
+}
+
+/// Event-heap entry: (time in ns, tie-break sequence, the event itself).
+/// Storing the event in the entry keeps memory proportional to *pending*
+/// events — the old side `Vec<Event>` log grew with every event ever
+/// pushed, which dominated memory on hot sweeps.
+type EventHeap = BinaryHeap<Reverse<(u64, u64, Event)>>;
+
+fn push_event(heap: &mut EventHeap, seq: &mut u64, t_us: f64, ev: Event) {
+    let key = (t_us * 1000.0).round() as u64; // ns resolution
+    heap.push(Reverse((key, *seq, ev)));
+    *seq += 1;
 }
 
 #[derive(Debug, Clone)]
@@ -101,8 +116,9 @@ struct WorkerState {
 
 struct KernelState {
     busy: bool,
-    /// Pending encoded aggregates: (worker, n_queries).
-    queue: Vec<(usize, usize)>,
+    /// Pending encoded aggregates: (worker, n_queries). `VecDeque` — the
+    /// hot sweeps pop from the front, which was O(n) with `Vec::remove(0)`.
+    queue: VecDeque<(usize, usize)>,
 }
 
 /// Run the simulation; deterministic for a given config.
@@ -128,23 +144,12 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
         .map(|_| WorkerState { queue: Vec::new(), in_flight: Vec::new(), busy: false })
         .collect();
     let mut kernels: Vec<KernelState> =
-        (0..t.kernels).map(|_| KernelState { busy: false, queue: Vec::new() }).collect();
+        (0..t.kernels).map(|_| KernelState { busy: false, queue: VecDeque::new() }).collect();
     // Feeders per kernel: workers statically mapped worker→kernel.
     let feeders = |k: usize| (0..t.workers).filter(|w| w % t.kernels == k).count();
 
-    let mut heap: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
-    let mut events: Vec<Event> = Vec::new();
+    let mut heap: EventHeap = BinaryHeap::new();
     let mut seq: u64 = 0;
-    let mut push = |heap: &mut BinaryHeap<Reverse<(u64, u64, usize)>>,
-                    events: &mut Vec<Event>,
-                    seq: &mut u64,
-                    t_us: f64,
-                    ev: Event| {
-        let key = (t_us * 1000.0).round() as u64; // ns resolution
-        events.push(ev);
-        heap.push(Reverse((key, *seq, events.len() - 1)));
-        *seq += 1;
-    };
 
     // Initial submissions (staggered 1 µs apart to break symmetry).
     for pidx in 0..t.processes {
@@ -152,9 +157,8 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
         let t0 = pidx as f64 * 1.0;
         reqs.push(ReqState { process: pidx, t_submit: t0 });
         issued_per_process[pidx] += 1;
-        push(
+        push_event(
             &mut heap,
-            &mut events,
             &mut seq,
             t0 + o.zmq.request_us(cfg.batch_per_request),
             Event::Arrive { req: rid },
@@ -167,17 +171,16 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
     let mut makespan = 0.0f64;
     let mut aggregates = 0usize;
     let mut aggregated_reqs = 0usize;
-    while let Some(Reverse((key, _, eidx))) = heap.pop() {
+    while let Some(Reverse((key, _, ev))) = heap.pop() {
         let now = key as f64 / 1000.0;
-        let ev = events[eidx];
         match ev {
             Event::Arrive { req } => {
                 let widx = reqs[req].process % t.workers;
                 workers[widx].queue.push(req);
                 if !workers[widx].busy {
                     start_worker(
-                        widx, &mut workers, cfg, o, now, &mut heap, &mut events, &mut seq,
-                        &mut push, &mut aggregates, &mut aggregated_reqs,
+                        widx, &mut workers, cfg, o, now, &mut heap, &mut seq,
+                        &mut aggregates, &mut aggregated_reqs,
                     );
                 }
             }
@@ -185,14 +188,13 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
                 let kidx = worker % t.kernels;
                 let n_q = workers[worker].in_flight.len() * cfg.batch_per_request;
                 if kernels[kidx].busy {
-                    kernels[kidx].queue.push((worker, n_q));
+                    kernels[kidx].queue.push_back((worker, n_q));
                 } else {
                     kernels[kidx].busy = true;
                     let service =
                         o.xrt.submission_us(feeders(kidx)) + model.batch_timing(n_q).total_us;
-                    push(
+                    push_event(
                         &mut heap,
-                        &mut events,
                         &mut seq,
                         now + service,
                         Event::KernelDone { kernel: kidx, worker },
@@ -205,37 +207,33 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
                 let n_q = in_flight.len() * cfg.batch_per_request;
                 let partition_us = o.sched.us(n_q);
                 for rid in in_flight {
-                    push(
+                    push_event(
                         &mut heap,
-                        &mut events,
                         &mut seq,
                         now + partition_us + o.zmq.reply_us(cfg.batch_per_request),
                         Event::Complete { req: rid },
                     );
                 }
                 // Kernel: next pending aggregate.
-                if let Some((w2, q2)) = if kernels[kernel].queue.is_empty() {
-                    kernels[kernel].busy = false;
-                    None
-                } else {
-                    Some(kernels[kernel].queue.remove(0))
-                } {
-                    let service =
-                        o.xrt.submission_us(feeders(kernel)) + model.batch_timing(q2).total_us;
-                    push(
-                        &mut heap,
-                        &mut events,
-                        &mut seq,
-                        now + service,
-                        Event::KernelDone { kernel, worker: w2 },
-                    );
+                match kernels[kernel].queue.pop_front() {
+                    None => kernels[kernel].busy = false,
+                    Some((w2, q2)) => {
+                        let service = o.xrt.submission_us(feeders(kernel))
+                            + model.batch_timing(q2).total_us;
+                        push_event(
+                            &mut heap,
+                            &mut seq,
+                            now + service,
+                            Event::KernelDone { kernel, worker: w2 },
+                        );
+                    }
                 }
                 // Worker free again.
                 workers[worker].busy = false;
                 if !workers[worker].queue.is_empty() {
                     start_worker(
-                        worker, &mut workers, cfg, o, now, &mut heap, &mut events, &mut seq,
-                        &mut push, &mut aggregates, &mut aggregated_reqs,
+                        worker, &mut workers, cfg, o, now, &mut heap, &mut seq,
+                        &mut aggregates, &mut aggregated_reqs,
                     );
                 }
             }
@@ -251,9 +249,8 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
                     issued_per_process[pidx] += 1;
                     let rid = reqs.len();
                     reqs.push(ReqState { process: pidx, t_submit: now });
-                    push(
+                    push_event(
                         &mut heap,
-                        &mut events,
                         &mut seq,
                         now + o.zmq.request_us(cfg.batch_per_request),
                         Event::Arrive { req: rid },
@@ -283,16 +280,8 @@ fn start_worker(
     cfg: &SimConfig,
     o: &Overheads,
     now: f64,
-    heap: &mut BinaryHeap<Reverse<(u64, u64, usize)>>,
-    events: &mut Vec<Event>,
+    heap: &mut EventHeap,
     seq: &mut u64,
-    push: &mut impl FnMut(
-        &mut BinaryHeap<Reverse<(u64, u64, usize)>>,
-        &mut Vec<Event>,
-        &mut u64,
-        f64,
-        Event,
-    ),
     aggregates: &mut usize,
     aggregated_reqs: &mut usize,
 ) {
@@ -304,7 +293,7 @@ fn start_worker(
     *aggregated_reqs += w.in_flight.len();
     let n_q = w.in_flight.len() * cfg.batch_per_request;
     let service = o.sched.us(n_q) + o.encode.us(n_q);
-    push(heap, events, seq, now + service, Event::WorkerEncoded { worker: widx });
+    push_event(heap, seq, now + service, Event::WorkerEncoded { worker: widx });
 }
 
 #[cfg(test)]

@@ -105,7 +105,6 @@ impl AirportCache {
 
 /// The optimised CPU rule engine.
 pub struct CpuBaseline {
-    #[allow(dead_code)] // kept: identifies the standard the index was built for
     schema: Schema,
     /// station → precision-sorted rules (scan path).
     by_station: HashMap<u32, Vec<IndexedRule>>,
@@ -113,6 +112,10 @@ pub struct CpuBaseline {
     global: Vec<IndexedRule>,
     /// station → cache (hottest airports only).
     caches: std::sync::Mutex<HashMap<u32, AirportCache>>,
+    /// Running hit total — O(1) to read, unlike [`Self::cache_stats`]
+    /// which scans every per-station cache (service-time models read
+    /// this per call, on the hot path).
+    total_hits: std::sync::atomic::AtomicU64,
     /// The [15]-style trie path: compiled rule set + sparse walker.
     trie: crate::erbium::NativeEvaluator,
     trie_encoder: crate::encoder::QueryEncoder,
@@ -183,6 +186,7 @@ impl CpuBaseline {
             by_station,
             global,
             caches: std::sync::Mutex::new(caches),
+            total_hits: std::sync::atomic::AtomicU64::new(0),
             trie,
             trie_encoder,
         }
@@ -271,6 +275,7 @@ impl CpuBaseline {
             let (k, d) = cache.slots[slot];
             if k == key {
                 cache.hits += 1;
+                self.total_hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 return d;
             }
             cache.misses += 1;
@@ -290,6 +295,18 @@ impl CpuBaseline {
     /// mirrors the engine's for the comparison harness).
     pub fn evaluate_batch(&self, queries: &[MctQuery]) -> Vec<MctDecision> {
         queries.iter().map(|q| self.evaluate(q)).collect()
+    }
+
+    /// The standard version this index was built for (label surface for
+    /// the `MatchBackend` layer).
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Total airport-cache hits so far — O(1), unlike the full
+    /// [`Self::cache_stats`] scan; service-time models call this per batch.
+    pub fn total_cache_hits(&self) -> u64 {
+        self.total_hits.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn cache_stats(&self) -> CacheStats {

@@ -10,13 +10,16 @@
 //!   (`python/compile/`, artifacts in `artifacts/`).
 //! * **L3 (this crate)** — everything around the accelerator: the rule
 //!   standards and generator, the offline NFA compiler toolchain, the PJRT
-//!   runtime, the flight-search coordinator (injector → domain explorer →
-//!   router → MCT wrapper → XRT model), the optimised CPU baseline, the FPGA
-//!   datapath cost model, Route Scoring, and the deployment cost model.
+//!   runtime, the [`backend`] match-backend layer (one evaluation surface
+//!   over the ERBIUM engine and the optimised CPU baseline), the
+//!   flight-search coordinator (injector → domain explorer → router → MCT
+//!   wrapper → XRT model), the FPGA datapath cost model, Route Scoring, and
+//!   the deployment cost model.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the system inventory, the
+//! backend/aggregation architecture and the dual-clock convention.
 
+pub mod backend;
 pub mod benchkit;
 pub mod coordinator;
 pub mod costmodel;

@@ -6,14 +6,20 @@
 //! erbium-search gen-rules   [--rules N] [--seed S] [--version v1|v2] [--out FILE]
 //! erbium-search compile     [--rules N] [--seed S] [--version v1|v2] [--order declared|optimised]
 //! erbium-search query       [--rules N] [--seed S] [--station ID] [--n N] [--backend native|xla]
-//! erbium-search replay      [--uq N] [--rules N] [--p P] [--w W] [--k K] [--e E] [--backend native|xla]
+//! erbium-search replay      [--uq N] [--rules N] [--p P] [--w W] [--k K] [--e E]
+//!                           [--backend cpu|native|xla] [--agg forward|drain|max:N]
+//!                           [--strategy cpu|fpga] [--fail fast|degrade]
 //! erbium-search costs
 //! ```
 
 use std::sync::Arc;
 
-use erbium_search::coordinator::pipeline::EngineFactory;
-use erbium_search::coordinator::{Pipeline, Topology};
+use erbium_search::backend::{
+    cpu_backend_factory, native_backend_factory, xla_backend_factory, BackendFactory,
+};
+use erbium_search::coordinator::{
+    AggregationPolicy, FailurePolicy, MctStrategy, Pipeline, PipelineConfig, Topology,
+};
 use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
 use erbium_search::nfa::constraint_gen::{estimate, HardwareConfig};
 use erbium_search::nfa::optimiser::OrderStrategy;
@@ -142,29 +148,68 @@ fn main() -> anyhow::Result<()> {
                 },
                 &world,
             );
-            let use_xla = matches!(args.get("--backend"), Some("xla"));
-            let nfa2 = nfa.clone();
-            let factory: EngineFactory = Arc::new(move || {
-                let b = if use_xla {
-                    Backend::Xla {
-                        runtime: Arc::new(Runtime::cpu(Runtime::default_dir())?),
-                        batch_hint: 1024,
-                    }
-                } else {
-                    Backend::Native
-                };
-                ErbiumEngine::new(nfa2.clone(), model, b, 28, 64)
-            });
-            let r = Pipeline::new(topo, factory).run(&trace)?;
-            println!("{} | {} uq, {} MCT q, {} calls", r.topology_label, r.user_queries, r.mct_queries, r.engine_calls);
+            // The whole point of the MatchBackend layer: CPU and FPGA flows
+            // replay end-to-end through the same threaded pipeline.
+            let factory: BackendFactory = match args.get("--backend") {
+                Some("cpu") => cpu_backend_factory(schema.clone(), rs.clone()),
+                Some("xla") => {
+                    anyhow::ensure!(
+                        Runtime::artifacts_available(),
+                        "--backend xla needs the AOT artifacts; run `make artifacts` first"
+                    );
+                    xla_backend_factory(nfa.clone(), model, 1024, 28, 64)
+                }
+                _ => native_backend_factory(nfa.clone(), model, 28, 64),
+            };
+            let strategy = match args.get("--strategy") {
+                Some("cpu") => MctStrategy::CpuPerTs,
+                _ => MctStrategy::FpgaBatched,
+            };
+            let agg = args
+                .get("--agg")
+                .map(|s| {
+                    AggregationPolicy::parse(s)
+                        .ok_or_else(|| anyhow::anyhow!("bad --agg {s:?} (forward|drain|max:N)"))
+                })
+                .transpose()?
+                .unwrap_or(AggregationPolicy::Forward);
+            let failure = match args.get("--fail") {
+                Some("degrade") => FailurePolicy::Degrade,
+                _ => FailurePolicy::FailFast,
+            };
+            let cfg = PipelineConfig::new(topo)
+                .with_strategy(strategy)
+                .with_aggregation(agg)
+                .with_failure(failure);
+            let r = Pipeline::new(cfg, factory).run(&trace)?;
             println!(
-                "wall {:.2} s ({:.1} k q/s) | hw-model kernel {:.2} ms | p90 uq latency {:.1} ms",
+                "{} | backend {} | agg {} | {} uq, {} MCT q, {} requests, {} calls ({} failed)",
+                r.topology_label,
+                r.backend,
+                r.aggregation,
+                r.user_queries,
+                r.mct_queries,
+                r.mct_requests,
+                r.engine_calls,
+                r.failed_calls,
+            );
+            println!(
+                "wall {:.2} s ({:.1} k q/s) | model kernel {:.2} ms | p90 uq latency {:.1} ms",
                 r.wall_ms / 1e3,
                 r.wall_qps / 1e3,
                 r.modeled_kernel_us / 1e3,
                 r.uq_latency_p90_ms
             );
-            let _ = schema;
+            println!(
+                "aggregation {:.2} req/call | mct request p50/p90 {:.0}/{:.0} µs | router queue mean {:.2} max {} | busy worker {:.0} % kernel {:.0} %",
+                r.mean_aggregation,
+                r.mct_req_p50_us,
+                r.mct_req_p90_us,
+                r.mean_router_queue,
+                r.max_router_queue,
+                r.worker_busy_frac * 100.0,
+                r.kernel_busy_frac * 100.0,
+            );
         }
         "costs" => {
             for (title, rows) in [

@@ -170,6 +170,24 @@ impl Runtime {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// Whether the AOT XLA artifacts are present. The single gate every
+    /// XLA-dependent test, bench and example checks before touching PJRT,
+    /// so `cargo test -q` stays green on a fresh checkout (no `artifacts/`).
+    pub fn artifacts_available() -> bool {
+        Runtime::default_dir().join("manifest.txt").exists()
+    }
+
+    /// [`Self::artifacts_available`], with the canonical skip message on
+    /// stderr when artifacts are missing. Use as the guard in tests:
+    /// `if !Runtime::require_artifacts("test_name") { return; }`.
+    pub fn require_artifacts(what: &str) -> bool {
+        if Runtime::artifacts_available() {
+            return true;
+        }
+        eprintln!("SKIP {what}: XLA artifacts missing; run `make artifacts` to enable");
+        false
+    }
+
     pub fn specs(&self) -> &[ArtifactSpec] {
         &self.specs
     }
@@ -221,13 +239,12 @@ mod tests {
     use super::*;
 
     fn have_artifacts() -> bool {
-        Runtime::default_dir().join("manifest.txt").exists()
+        Runtime::require_artifacts("runtime test")
     }
 
     #[test]
     fn manifest_parses() {
         if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
             return;
         }
         let specs = read_manifest(&Runtime::default_dir()).unwrap();

@@ -1,0 +1,51 @@
+//! Shared compile-everything fixture for tests and benches: seeded small
+//! world → rule set → partitioned NFA → datapath model, plus backend
+//! factories over the result. One definition instead of a copy in every
+//! integration test and figure bench.
+
+use crate::backend::{cpu_backend_factory, native_backend_factory, BackendFactory};
+use crate::erbium::FpgaModel;
+use crate::nfa::constraint_gen::HardwareConfig;
+use crate::nfa::model::PartitionedNfa;
+use crate::nfa::parser::{compile_rule_set, CompileOptions};
+use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use crate::rules::standard::{Schema, StandardVersion};
+use crate::rules::types::{RuleSet, World};
+
+/// Everything a coordinator/backend test needs, compiled once.
+pub struct MctFixture {
+    pub world: World,
+    pub schema: Schema,
+    pub rules: RuleSet,
+    pub nfa: PartitionedNfa,
+    pub model: FpgaModel,
+}
+
+/// Build a [`GeneratorConfig::small`] world under `version`, compile its
+/// rule set and attach the datapath model for `hw`.
+pub fn compile_fixture(
+    seed: u64,
+    n_rules: usize,
+    version: StandardVersion,
+    hw: HardwareConfig,
+) -> MctFixture {
+    let cfg = GeneratorConfig::small(seed, n_rules);
+    let world = generate_world(&cfg);
+    let schema = Schema::for_version(version);
+    let rules = generate_rule_set(&cfg, &world, version);
+    let (nfa, stats) = compile_rule_set(&schema, &rules, &CompileOptions::default());
+    let model = FpgaModel::new(hw, stats.depth);
+    MctFixture { world, schema, rules, nfa, model }
+}
+
+impl MctFixture {
+    /// Factory for the native ERBIUM engine over this fixture.
+    pub fn native_factory(&self) -> BackendFactory {
+        native_backend_factory(self.nfa.clone(), self.model, 28, 64)
+    }
+
+    /// Factory for the §5.2 CPU baseline over this fixture.
+    pub fn cpu_factory(&self) -> BackendFactory {
+        cpu_backend_factory(self.schema.clone(), self.rules.clone())
+    }
+}

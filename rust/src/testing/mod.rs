@@ -1,6 +1,9 @@
 //! Mini property-testing framework (proptest is not available offline):
 //! seeded random-case generation with failure reporting and greedy input
-//! shrinking for sequence-shaped cases.
+//! shrinking for sequence-shaped cases. [`fixture`] holds the shared
+//! world/rules/NFA setup used by integration tests and benches.
+
+pub mod fixture;
 
 use crate::prng::Rng;
 

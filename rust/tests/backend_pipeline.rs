@@ -1,0 +1,184 @@
+//! The MatchBackend layer, end to end: the CPU baseline and the native
+//! ERBIUM engine are interchangeable behind the full threaded pipeline
+//! (identical decisions on a shared trace), worker-side aggregation
+//! reproduces the paper's §4.3 behaviour in the real system (Fig 10
+//! regime), and the failure policy is explicit (fail-fast vs degrade).
+
+use erbium_search::backend::{BackendFactory, BackendKind, MatchBackend};
+use erbium_search::coordinator::{
+    AggregationPolicy, FailurePolicy, Pipeline, PipelineConfig, Topology,
+};
+use erbium_search::erbium::BatchTiming;
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::rules::standard::StandardVersion;
+use erbium_search::rules::types::{MctDecision, MctQuery};
+use erbium_search::testing::fixture::compile_fixture;
+use erbium_search::workload::{generate_trace, ProductionTrace, TraceConfig};
+
+struct Setup {
+    cpu: BackendFactory,
+    native: BackendFactory,
+    trace: ProductionTrace,
+}
+
+fn setup(seed: u64, n_rules: usize, n_uq: usize) -> Setup {
+    let f = compile_fixture(seed, n_rules, StandardVersion::V2, HardwareConfig::v2_aws(4));
+    let trace = generate_trace(&TraceConfig::scaled(seed ^ 0x7A0E, n_uq, 30.0), &f.world);
+    Setup { cpu: f.cpu_factory(), native: f.native_factory(), trace }
+}
+
+/// Property (several seeded worlds): the CPU baseline and the native
+/// ERBIUM engine produce identical decisions — per query, directly, and
+/// through the full threaded pipeline on a shared trace.
+#[test]
+fn cpu_and_native_backends_identical_through_pipeline() {
+    erbium_search::testing::check(
+        "cpu≡native through pipeline",
+        3,
+        0xBAC8E0D,
+        |rng| 1 + rng.below(1_000_000),
+        |&seed| {
+            let s = setup(seed, 250, 8);
+
+            // Per-decision equality on every MCT query of the trace.
+            let cpu = (s.cpu)().map_err(|e| format!("cpu factory: {e:#}"))?;
+            let native = (s.native)().map_err(|e| format!("native factory: {e:#}"))?;
+            for uq in &s.trace.queries {
+                for ts in &uq.solutions {
+                    if ts.mct_queries.is_empty() {
+                        continue;
+                    }
+                    let a = cpu
+                        .evaluate_batch(&ts.mct_queries)
+                        .map_err(|e| format!("cpu eval: {e:#}"))?;
+                    let b = native
+                        .evaluate_batch(&ts.mct_queries)
+                        .map_err(|e| format!("native eval: {e:#}"))?;
+                    if a != b {
+                        return Err(format!("decisions diverge: {a:?} vs {b:?}"));
+                    }
+                }
+            }
+
+            // Aggregate functional equality through the full pipeline.
+            let cfg = PipelineConfig::new(Topology::new(4, 2, 1, 4))
+                .with_aggregation(AggregationPolicy::DrainQueue);
+            let rc = Pipeline::new(cfg, s.cpu.clone())
+                .run(&s.trace)
+                .map_err(|e| format!("cpu pipeline: {e:#}"))?;
+            let rn = Pipeline::new(cfg, s.native.clone())
+                .run(&s.trace)
+                .map_err(|e| format!("native pipeline: {e:#}"))?;
+            if rc.valid_travel_solutions != rn.valid_travel_solutions
+                || rc.mct_queries != rn.mct_queries
+            {
+                return Err(format!(
+                    "pipeline outcomes diverge: cpu {}v/{}q vs native {}v/{}q",
+                    rc.valid_travel_solutions,
+                    rc.mct_queries,
+                    rn.valid_travel_solutions,
+                    rn.mct_queries
+                ));
+            }
+            if rc.backend != "cpu" || rn.backend != "fpga-native" {
+                return Err(format!("labels: {} / {}", rc.backend, rn.backend));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Acceptance criterion: under the Fig 10 regime (16p 1w 1k) the *real*
+/// pipeline aggregates — mean requests per engine call noticeably above
+/// one with DrainQueue, exactly one with Forward.
+#[test]
+fn drain_queue_aggregates_in_fig10_regime() {
+    let s = setup(0xF160A11, 400, 48);
+    let topo = Topology::new(16, 1, 1, 4);
+
+    // Whether two requests coexist in the router queue depends on real OS
+    // scheduling; on a starved single-core runner a run can in principle
+    // serialize. 16 blocked producers against 1 worker make that vanishingly
+    // rare — a bounded retry removes the residual flake without weakening
+    // the assertion.
+    let mut drain = None;
+    for attempt in 0..3 {
+        let r = Pipeline::new(
+            PipelineConfig::new(topo).with_aggregation(AggregationPolicy::DrainQueue),
+            s.native.clone(),
+        )
+        .run(&s.trace)
+        .unwrap();
+        if r.mean_aggregation > 1.0 || attempt == 2 {
+            drain = Some(r);
+            break;
+        }
+    }
+    let drain = drain.unwrap();
+    assert!(
+        drain.mean_aggregation > 1.0,
+        "16p/1w/1k with DrainQueue must aggregate: {:.3}",
+        drain.mean_aggregation
+    );
+    assert!(drain.engine_calls < drain.mct_requests);
+
+    let forward = Pipeline::new(
+        PipelineConfig::new(topo).with_aggregation(AggregationPolicy::Forward),
+        s.native,
+    )
+    .run(&s.trace)
+    .unwrap();
+    assert!((forward.mean_aggregation - 1.0).abs() < 1e-9);
+    assert_eq!(forward.engine_calls, forward.mct_requests);
+
+    // Same functional outcome either way.
+    assert_eq!(drain.valid_travel_solutions, forward.valid_travel_solutions);
+}
+
+/// A backend whose calls always fail — exercises the failure policy.
+struct BrokenBackend;
+
+impl MatchBackend for BrokenBackend {
+    fn evaluate_batch_timed(
+        &self,
+        _queries: &[MctQuery],
+    ) -> anyhow::Result<(Vec<MctDecision>, BatchTiming)> {
+        anyhow::bail!("board fell off the bus")
+    }
+    fn kind(&self) -> BackendKind {
+        BackendKind::FpgaNative
+    }
+    fn label(&self) -> String {
+        "broken".into()
+    }
+}
+
+#[test]
+fn failure_policy_is_explicit() {
+    let s = setup(0xDEAD11, 150, 6);
+    let broken: BackendFactory =
+        std::sync::Arc::new(|| Ok(Box::new(BrokenBackend) as Box<dyn MatchBackend>));
+    let topo = Topology::new(2, 1, 1, 4);
+
+    // Fail-fast: the run aborts with an error naming the failed calls.
+    let err = Pipeline::new(
+        PipelineConfig::new(topo).with_failure(FailurePolicy::FailFast),
+        broken.clone(),
+    )
+    .run(&s.trace)
+    .unwrap_err();
+    assert!(err.to_string().contains("engine calls failed"), "{err:#}");
+
+    // Degrade: the run completes, failures are counted, and every query
+    // falls back to the conservative industry-default decision.
+    let r = Pipeline::new(
+        PipelineConfig::new(topo).with_failure(FailurePolicy::Degrade),
+        broken,
+    )
+    .run(&s.trace)
+    .unwrap();
+    assert!(r.failed_calls > 0);
+    assert_eq!(r.failed_calls, r.engine_calls);
+    assert_eq!(r.backend, "broken");
+    assert_eq!(r.user_queries, s.trace.queries.len());
+}

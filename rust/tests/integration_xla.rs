@@ -19,8 +19,7 @@ use erbium_search::runtime::Runtime;
 use erbium_search::workload::random_query;
 
 fn runtime() -> Option<Arc<Runtime>> {
-    if !Runtime::default_dir().join("manifest.txt").exists() {
-        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+    if !Runtime::require_artifacts("integration_xla") {
         return None;
     }
     Some(Arc::new(Runtime::cpu(Runtime::default_dir()).expect("runtime")))
