@@ -1,0 +1,429 @@
+//! Hot-connection result cache — the §5.2 "cache mechanisms for selected
+//! airports", generalised to an LRU in front of any [`MatchBackend`].
+//!
+//! Production MCT queries are built from a *finite* published flight
+//! schedule, so hot connections repeat exactly ([`crate::workload`] module
+//! docs); the optimised CPU flow exploits that with per-airport caches.
+//! [`CachedBackend`] gives the same lever to every backend: queries are
+//! canonicalised (code-share-redundant fields collapsed), keyed, and
+//! answered from a bounded LRU when the identical connection was decided
+//! before. Only misses reach the wrapped backend, so on the accelerator
+//! flows a hit also saves the modeled shell/PCIe round trip.
+//!
+//! The cache is per backend instance — one per engine-server thread, the
+//! software analogue of a board-local cache — while hit counters aggregate
+//! per node through a shared [`CacheCounters`]. The cluster router's
+//! station-sharded policy exists to make these caches effective: pinning a
+//! station to a replica keeps its hot connections in that replica's LRU
+//! (measured by the routing-policy tests and the `fleet_imbalance` bench).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::erbium::BatchTiming;
+use crate::rules::types::{MctDecision, MctQuery};
+
+use super::{BackendFactory, BackendKind, MatchBackend};
+
+/// Canonical form of a query for caching: on non-code-share legs the
+/// operating carrier/flight duplicate the marketing values by construction
+/// (§3.2.3), so the canonical form collapses them — two spellings of the
+/// same physical connection share one cache slot.
+pub fn canonicalise(q: &MctQuery) -> MctQuery {
+    let mut c = *q;
+    if !c.arr_codeshare {
+        c.arr_carrier_op = c.arr_carrier_mkt;
+        c.arr_flight_op = c.arr_flight_mkt;
+    }
+    if !c.dep_codeshare {
+        c.dep_carrier_op = c.dep_carrier_mkt;
+        c.dep_flight_op = c.dep_flight_mkt;
+    }
+    c
+}
+
+/// Stable 64-bit key of the canonicalised query. `DefaultHasher::new()`
+/// is fixed-key SipHash, so keys are deterministic across runs — the
+/// cluster simulator relies on that to replay identical cache behaviour.
+pub fn query_key(q: &MctQuery) -> u64 {
+    key_of_canonical(&canonicalise(q))
+}
+
+/// Key of an already-canonicalised query (avoids re-canonicalising on the
+/// hot engine-server path).
+fn key_of_canonical(canon: &MctQuery) -> u64 {
+    let mut h = DefaultHasher::new();
+    canon.hash(&mut h);
+    h.finish()
+}
+
+const NIL: usize = usize::MAX;
+
+struct LruEntry<V> {
+    key: u64,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// Exact LRU keyed by `u64`, backed by an index-linked list over a slab —
+/// O(1) get/insert/evict, no allocation after the slab fills. Shared by
+/// the real [`CachedBackend`] (values = cached decisions) and the cluster
+/// simulator (values = `()`, only hit/miss behaviour matters).
+pub struct LruCache<V> {
+    map: HashMap<u64, usize>,
+    entries: Vec<LruEntry<V>>,
+    head: usize,
+    tail: usize,
+    capacity: usize,
+}
+
+impl<V> LruCache<V> {
+    pub fn new(capacity: usize) -> LruCache<V> {
+        let capacity = capacity.max(1);
+        LruCache {
+            map: HashMap::with_capacity(capacity),
+            entries: Vec::with_capacity(capacity),
+            head: NIL,
+            tail: NIL,
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Unlink `idx` from the recency list (entry stays in the slab).
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.entries[idx].prev, self.entries[idx].next);
+        match prev {
+            NIL => self.head = next,
+            p => self.entries[p].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.entries[n].prev = prev,
+        }
+    }
+
+    /// Link `idx` at the head (most recently used).
+    fn push_front(&mut self, idx: usize) {
+        self.entries[idx].prev = NIL;
+        self.entries[idx].next = self.head;
+        match self.head {
+            NIL => self.tail = idx,
+            h => self.entries[h].prev = idx,
+        }
+        self.head = idx;
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: u64) -> Option<&V> {
+        let idx = *self.map.get(&key)?;
+        if self.head != idx {
+            self.unlink(idx);
+            self.push_front(idx);
+        }
+        Some(&self.entries[idx].value)
+    }
+
+    /// Insert or refresh `key`, evicting the least recently used entry
+    /// when at capacity.
+    pub fn insert(&mut self, key: u64, value: V) {
+        if let Some(&idx) = self.map.get(&key) {
+            self.entries[idx].value = value;
+            if self.head != idx {
+                self.unlink(idx);
+                self.push_front(idx);
+            }
+            return;
+        }
+        let idx = if self.entries.len() < self.capacity {
+            self.entries.push(LruEntry { key, value, prev: NIL, next: NIL });
+            self.entries.len() - 1
+        } else {
+            // Reuse the LRU slot.
+            let idx = self.tail;
+            self.unlink(idx);
+            self.map.remove(&self.entries[idx].key);
+            self.entries[idx].key = key;
+            self.entries[idx].value = value;
+            idx
+        };
+        self.map.insert(key, idx);
+        self.push_front(idx);
+    }
+}
+
+/// Lookup/hit counters, shared across the engine-server threads of one
+/// node so the per-node hit rate can be reported.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    pub lookups: AtomicU64,
+    pub hits: AtomicU64,
+}
+
+impl CacheCounters {
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.lookups.load(Ordering::Relaxed);
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits.load(Ordering::Relaxed) as f64 / lookups as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.lookups.load(Ordering::Relaxed), self.hits.load(Ordering::Relaxed))
+    }
+}
+
+/// Modeled cost of a cache hit, ns (hash + probe; same order as the CPU
+/// baseline's airport-cache hit in [`super::CpuServiceModel`]).
+pub const CACHE_HIT_NS: f64 = 45.0;
+
+/// An LRU result cache in front of any [`MatchBackend`]: hits answer from
+/// the cache, misses pass through as one (smaller) batch.
+pub struct CachedBackend {
+    inner: Box<dyn MatchBackend>,
+    cache: Mutex<LruCache<(MctQuery, MctDecision)>>,
+    counters: Arc<CacheCounters>,
+}
+
+impl CachedBackend {
+    pub fn new(
+        inner: Box<dyn MatchBackend>,
+        capacity: usize,
+        counters: Arc<CacheCounters>,
+    ) -> CachedBackend {
+        CachedBackend { inner, cache: Mutex::new(LruCache::new(capacity)), counters }
+    }
+}
+
+impl MatchBackend for CachedBackend {
+    fn evaluate_batch_timed(
+        &self,
+        queries: &[MctQuery],
+    ) -> Result<(Vec<MctDecision>, BatchTiming)> {
+        let mut cache = self.cache.lock().unwrap();
+        self.counters.lookups.fetch_add(queries.len() as u64, Ordering::Relaxed);
+        let mut out: Vec<Option<MctDecision>> = Vec::with_capacity(queries.len());
+        // Misses keep their (index, key, canonical form) so the fill loop
+        // never re-canonicalises or re-hashes.
+        let mut misses: Vec<(usize, u64, MctQuery)> = Vec::new();
+        for (i, q) in queries.iter().enumerate() {
+            let canon = canonicalise(q);
+            let key = key_of_canonical(&canon);
+            // Guard against 64-bit key collisions: a slot only answers for
+            // the exact canonical query it stores.
+            match cache.get(key) {
+                Some((stored, d)) if *stored == canon => out.push(Some(*d)),
+                _ => {
+                    out.push(None);
+                    misses.push((i, key, canon));
+                }
+            }
+        }
+        let hits = (queries.len() - misses.len()) as u64;
+        self.counters.hits.fetch_add(hits, Ordering::Relaxed);
+        let hit_us = hits as f64 * CACHE_HIT_NS / 1e3;
+        let mut timing = BatchTiming {
+            setup_us: 0.0,
+            transfer_in_us: 0.0,
+            compute_us: hit_us,
+            transfer_out_us: 0.0,
+            total_us: hit_us,
+        };
+        if !misses.is_empty() {
+            // Evaluate the *original* spellings (decisions are identical
+            // either way; it keeps the inner backend's view untouched).
+            let miss_queries: Vec<MctQuery> =
+                misses.iter().map(|&(i, _, _)| queries[i]).collect();
+            let (ds, inner_t) = self.inner.evaluate_batch_timed(&miss_queries)?;
+            anyhow::ensure!(
+                ds.len() == misses.len(),
+                "inner backend returned {} decisions for {} misses",
+                ds.len(),
+                misses.len()
+            );
+            for (&(i, key, canon), d) in misses.iter().zip(&ds) {
+                cache.insert(key, (canon, *d));
+                out[i] = Some(*d);
+            }
+            timing = BatchTiming {
+                setup_us: inner_t.setup_us,
+                transfer_in_us: inner_t.transfer_in_us,
+                compute_us: inner_t.compute_us + hit_us,
+                transfer_out_us: inner_t.transfer_out_us,
+                total_us: inner_t.total_us + hit_us,
+            };
+        }
+        Ok((out.into_iter().map(|d| d.expect("every query decided")).collect(), timing))
+    }
+
+    fn kind(&self) -> BackendKind {
+        self.inner.kind()
+    }
+
+    fn label(&self) -> String {
+        format!("{}+cache", self.inner.label())
+    }
+
+    fn benefits_from_batching(&self) -> bool {
+        self.inner.benefits_from_batching()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn evaluate_batch(&self, queries: &[MctQuery]) -> Result<Vec<MctDecision>> {
+        self.evaluate_batch_timed(queries).map(|(ds, _)| ds)
+    }
+}
+
+/// Wrap a factory so every backend it builds sits behind its own LRU
+/// (per engine-server thread), all reporting into the shared `counters`.
+pub fn cached_factory(
+    inner: BackendFactory,
+    capacity: usize,
+    counters: Arc<CacheCounters>,
+) -> BackendFactory {
+    Arc::new(move || {
+        let backend = inner()?;
+        Ok(Box::new(CachedBackend::new(backend, capacity, counters.clone()))
+            as Box<dyn MatchBackend>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::CpuBackend;
+    use crate::prng::Rng;
+    use crate::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+    use crate::rules::standard::{Schema, StandardVersion};
+    use crate::workload::QueryFactory;
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c: LruCache<u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(1), Some(&10)); // 1 refreshed; 2 is now LRU
+        c.insert(3, 30);
+        assert_eq!(c.get(2), None, "2 must be evicted");
+        assert_eq!(c.get(1), Some(&10));
+        assert_eq!(c.get(3), Some(&30));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn lru_reinsert_refreshes_and_updates() {
+        let mut c: LruCache<u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11); // refresh: 2 becomes LRU
+        c.insert(3, 30);
+        assert_eq!(c.get(1), Some(&11));
+        assert_eq!(c.get(2), None);
+    }
+
+    #[test]
+    fn lru_capacity_floor_is_one() {
+        let mut c: LruCache<u32> = LruCache::new(0);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(2), Some(&20));
+    }
+
+    #[test]
+    fn canonicalisation_collapses_non_codeshare_spellings() {
+        let cfg = GeneratorConfig::small(3, 20);
+        let world = generate_world(&cfg);
+        let mut q = crate::workload::query_for_station(&world, 2, 7);
+        q.arr_codeshare = false;
+        q.dep_codeshare = false;
+        let mut alias = q;
+        alias.arr_carrier_op = q.arr_carrier_mkt + 1; // redundant field differs
+        alias.dep_flight_op = q.dep_flight_mkt + 1;
+        assert_eq!(canonicalise(&q), canonicalise(&alias));
+        assert_eq!(query_key(&q), query_key(&alias));
+        // ...but code-share operating values are load-bearing.
+        let mut cs = q;
+        cs.arr_codeshare = true;
+        cs.arr_carrier_op = q.arr_carrier_mkt + 1;
+        assert_ne!(query_key(&q), query_key(&cs));
+    }
+
+    #[test]
+    fn cached_backend_is_functionally_transparent_and_hits() {
+        let cfg = GeneratorConfig::small(11, 300);
+        let world = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &world, StandardVersion::V2);
+        let plain = CpuBackend::new(schema.clone(), &rs);
+        let counters = Arc::new(CacheCounters::default());
+        let cached = CachedBackend::new(
+            Box::new(CpuBackend::new(schema, &rs)),
+            4096,
+            counters.clone(),
+        );
+
+        // Schedule-drawn queries repeat (hot connections); decisions must be
+        // identical with and without the cache, and the warm pass must hit.
+        let factory = QueryFactory::new(&world, 5, 40);
+        let mut rng = Rng::new(9);
+        let queries: Vec<_> = (0..400)
+            .map(|_| {
+                let st = rng.zipf(world.airports.len(), 1.1) as u32;
+                factory.query(&mut rng, &world, st)
+            })
+            .collect();
+        let want = plain.evaluate_batch(&queries).unwrap();
+        let cold = cached.evaluate_batch(&queries).unwrap();
+        let warm = cached.evaluate_batch(&queries).unwrap();
+        for ((a, b), c) in want.iter().zip(&cold).zip(&warm) {
+            assert_eq!(a.minutes, b.minutes);
+            assert_eq!(a.rule_id, b.rule_id);
+            assert_eq!(a.minutes, c.minutes);
+        }
+        let (lookups, hits) = counters.snapshot();
+        assert_eq!(lookups, 800);
+        // The warm pass alone hits on everything that stayed resident.
+        assert!(hits >= 400, "expected the warm pass to hit, got {hits}");
+        assert!(counters.hit_rate() >= 0.5);
+        assert_eq!(cached.label(), "cpu+cache");
+    }
+
+    #[test]
+    fn cache_hit_skips_the_modeled_backend_time() {
+        let cfg = GeneratorConfig::small(13, 150);
+        let world = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &world, StandardVersion::V2);
+        let counters = Arc::new(CacheCounters::default());
+        let cached =
+            CachedBackend::new(Box::new(CpuBackend::new(schema, &rs)), 1024, counters);
+        let q = crate::workload::query_for_station(&world, 0, 3);
+        let qs = vec![q; 32];
+        let (_, cold) = cached.evaluate_batch_timed(&qs).unwrap();
+        let (_, warm) = cached.evaluate_batch_timed(&qs).unwrap();
+        assert!(warm.total_us < cold.total_us, "warm {} !< cold {}", warm.total_us, cold.total_us);
+    }
+}

@@ -26,6 +26,12 @@
 //! [`BackendFactory`]: PJRT handles are `Rc`-based and not `Send`, exactly
 //! like an FPGA board handle is pinned to its XRT process.
 
+pub mod cache;
+
+pub use cache::{
+    cached_factory, canonicalise, query_key, CacheCounters, CachedBackend, LruCache,
+};
+
 use std::sync::Arc;
 
 use anyhow::Result;

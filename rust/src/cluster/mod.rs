@@ -1,0 +1,374 @@
+//! The fleet layer: a sharded cluster of feeder-node replicas behind a
+//! router — the deployment the paper's §6 costs out, built over the
+//! single-node machinery of [`crate::coordinator`].
+//!
+//! One *node* is a full Fig-5 serving replica (router queue → MCT-Wrapper
+//! workers → engine servers → [`crate::backend::MatchBackend`], optional
+//! hot-connection LRU). The cluster front-end takes an open-loop
+//! [`ArrivalSource`](crate::workload::ArrivalSource), applies
+//! [`AdmissionPolicy`] (drop rather than bust the p90 SLA — §3.3 "the 90th
+//! percentile … matches the SLA of the search engine"), and routes every
+//! admitted request to a replica per [`RoutePolicy`].
+//!
+//! Two realisations, cross-validated like the single-node pair:
+//!
+//! * [`real::Cluster`] — N threaded [`NodeCore`](crate::coordinator)
+//!   replicas serving queries for real, wall-clock;
+//! * [`sim::simulate_cluster`] — a deterministic discrete-event model of
+//!   the same fleet (feeder service + kernel datapath + per-node LRU),
+//!   which is what the `fleet_imbalance` bench sweeps to reproduce the
+//!   §6.1 "FPGA starves behind a weak feeder" knee.
+//!
+//! Reports carry **offered vs achieved** load, SLA drops, per-node and
+//! fleet-merged latency quantiles ([`Percentiles::merge`]) and cache hit
+//! rates — the measured inputs that
+//! [`crate::costmodel::provision_for_throughput`] turns into fleet plans.
+
+pub mod real;
+pub mod sim;
+
+pub use real::Cluster;
+pub use sim::{poisson_sim_arrivals, simulate_cluster, ClusterSimConfig, SimArrival};
+
+use crate::coordinator::{Percentiles, PipelineConfig};
+
+/// How the front-end router picks a replica for an admitted request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through replicas regardless of state (the ZeroMQ dealer
+    /// default).
+    RoundRobin,
+    /// Send to the replica with the fewest outstanding requests.
+    JoinShortestQueue,
+    /// Pin each connection station to one replica (`station mod n`), so a
+    /// station's hot connections stay in that replica's LRU — cache
+    /// affinity at the price of zipf-skewed load.
+    StationSharded,
+}
+
+impl RoutePolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::JoinShortestQueue => "jsq",
+            RoutePolicy::StationSharded => "shard",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
+            "jsq" => Some(RoutePolicy::JoinShortestQueue),
+            "shard" | "station" => Some(RoutePolicy::StationSharded),
+            _ => None,
+        }
+    }
+}
+
+/// Stateful router: one instance per cluster run.
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub policy: RoutePolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Router {
+        Router { policy, rr_next: 0 }
+    }
+
+    /// Pick the target replica for a request at `station`, given each
+    /// replica's outstanding-request depth.
+    pub fn route(&mut self, station: u32, depths: &[usize]) -> usize {
+        let n = depths.len();
+        debug_assert!(n > 0);
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next % n;
+                self.rr_next = self.rr_next.wrapping_add(1);
+                i
+            }
+            RoutePolicy::JoinShortestQueue => depths
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, d)| (*d, i))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+            RoutePolicy::StationSharded => station as usize % n,
+        }
+    }
+}
+
+/// When the router refuses an arrival instead of queueing it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Queue everything (offered load is absorbed as latency).
+    Open,
+    /// Drop when the target replica already has this many requests
+    /// outstanding (a fixed back-pressure valve).
+    QueueCap(usize),
+    /// Drop when the target replica's estimated wait — outstanding
+    /// requests × its running mean service time — would exceed the SLA:
+    /// the request would land beyond the p90 objective, so shedding it
+    /// protects the percentile (§3.3).
+    SlaP90 { sla_us: f64 },
+}
+
+impl AdmissionPolicy {
+    /// Admit into a replica with `outstanding` requests whose running
+    /// mean service estimate is `est_service_us` (0 until first
+    /// completion — the controller never drops blind).
+    pub fn admits(&self, outstanding: usize, est_service_us: f64) -> bool {
+        match *self {
+            AdmissionPolicy::Open => true,
+            AdmissionPolicy::QueueCap(cap) => outstanding < cap.max(1),
+            AdmissionPolicy::SlaP90 { sla_us } => {
+                est_service_us <= 0.0 || (outstanding as f64 + 1.0) * est_service_us <= sla_us
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            AdmissionPolicy::Open => "open".into(),
+            AdmissionPolicy::QueueCap(cap) => format!("cap:{cap}"),
+            AdmissionPolicy::SlaP90 { sla_us } => format!("sla:{sla_us:.0}us"),
+        }
+    }
+}
+
+/// One cluster deployment: N identical replicas behind a router.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    /// Per-replica topology and policies (including the result cache).
+    pub node: PipelineConfig,
+    pub route: RoutePolicy,
+    pub admission: AdmissionPolicy,
+}
+
+impl ClusterConfig {
+    pub fn new(nodes: usize, node: PipelineConfig) -> ClusterConfig {
+        assert!(nodes >= 1);
+        ClusterConfig {
+            nodes,
+            node,
+            route: RoutePolicy::RoundRobin,
+            admission: AdmissionPolicy::Open,
+        }
+    }
+
+    pub fn with_route(mut self, route: RoutePolicy) -> ClusterConfig {
+        self.route = route;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> ClusterConfig {
+        self.admission = admission;
+        self
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}×[{}] route={} adm={}",
+            self.nodes,
+            self.node.topology.label(),
+            self.route.label(),
+            self.admission.label()
+        )
+    }
+}
+
+/// Per-replica slice of a cluster run.
+#[derive(Debug, Clone, Default)]
+pub struct NodeReport {
+    pub completed_requests: usize,
+    pub completed_queries: usize,
+    pub req_p90_us: f64,
+    pub cache_hit_rate: f64,
+    pub mean_aggregation: f64,
+}
+
+/// Outcome of one cluster run (real or simulated).
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub label: String,
+    pub route: String,
+    /// Offered load of the arrival stream, queries/s.
+    pub offered_qps: f64,
+    /// Completed queries over the run span, queries/s.
+    pub achieved_qps: f64,
+    /// Requests offered / completed / dropped at admission.
+    pub requests: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub completed_queries: usize,
+    pub dropped_queries: usize,
+    /// Requests whose engine path failed (degraded replies).
+    pub failed: usize,
+    /// Fleet-level request latency (per-node samples merged).
+    pub req_p50_us: f64,
+    pub req_p90_us: f64,
+    pub req_p99_us: f64,
+    /// Fleet-aggregate hot-connection cache hit rate (0 without a cache).
+    pub cache_hit_rate: f64,
+    pub per_node: Vec<NodeReport>,
+}
+
+impl ClusterReport {
+    /// The router-policy conservation invariant: every offered request is
+    /// either completed or visibly dropped — the fleet loses nothing.
+    pub fn conserves_requests(&self) -> bool {
+        self.requests == self.completed + self.dropped
+    }
+
+    /// A run "saturates" when it sheds load or visibly falls behind the
+    /// offered clock.
+    pub fn saturated(&self) -> bool {
+        self.dropped > 0 || self.achieved_qps < 0.95 * self.offered_qps
+    }
+
+    /// Largest per-node completion share (1/n = perfectly balanced).
+    pub fn max_node_share(&self) -> f64 {
+        let total: usize = self.per_node.iter().map(|n| n.completed_requests).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.per_node
+            .iter()
+            .map(|n| n.completed_requests as f64 / total as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// One-line summary for benches and the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} | offered {:.2} Mq/s → achieved {:.2} Mq/s | {}/{} completed, {} dropped | \
+             p90 {:.0} µs | cache {:.0} %",
+            self.label,
+            self.offered_qps / 1e6,
+            self.achieved_qps / 1e6,
+            self.completed,
+            self.requests,
+            self.dropped,
+            self.req_p90_us,
+            self.cache_hit_rate * 100.0,
+        )
+    }
+}
+
+/// EWMA weight of the per-replica service estimate behind
+/// [`AdmissionPolicy::SlaP90`].
+pub(crate) const SERVICE_EWMA_ALPHA: f64 = 0.2;
+
+/// Update a replica's running per-request *service* estimate from an
+/// observed completion. The observed latency includes the wait behind the
+/// requests still outstanding at completion time, so it is normalised by
+/// the queue depth before entering the EWMA — `outstanding × estimate`
+/// must predict the wait, not double-count it. Shared by the real cluster
+/// and the simulator so both realisations run the identical controller.
+pub(crate) fn update_service_estimate(
+    prev_us: f64,
+    latency_us: f64,
+    outstanding_after: usize,
+) -> f64 {
+    let observed = latency_us / (outstanding_after as f64 + 1.0);
+    if prev_us <= 0.0 {
+        observed
+    } else {
+        prev_us + SERVICE_EWMA_ALPHA * (observed - prev_us)
+    }
+}
+
+/// Merge per-node latency collectors into fleet-level percentiles.
+pub(crate) fn merged_quantiles(per_node: &[Percentiles]) -> (f64, f64, f64) {
+    let mut fleet = Percentiles::new();
+    for p in per_node {
+        fleet.merge(p);
+    }
+    if fleet.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (fleet.p50(), fleet.p90(), fleet.p99())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Topology;
+
+    #[test]
+    fn router_round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let depths = [0usize; 3];
+        let picks: Vec<usize> = (0..6).map(|_| r.route(9, &depths)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn router_jsq_picks_shortest_with_stable_ties() {
+        let mut r = Router::new(RoutePolicy::JoinShortestQueue);
+        assert_eq!(r.route(0, &[3, 1, 2]), 1);
+        assert_eq!(r.route(0, &[2, 2, 2]), 0, "ties break to the lowest index");
+        assert_eq!(r.route(0, &[5, 4, 0]), 2);
+    }
+
+    #[test]
+    fn router_station_sharded_is_stable_per_station() {
+        let mut r = Router::new(RoutePolicy::StationSharded);
+        let depths = [100usize, 0, 0, 0]; // ignores load entirely
+        assert_eq!(r.route(8, &depths), 0);
+        assert_eq!(r.route(8, &depths), 0);
+        assert_eq!(r.route(9, &depths), 1);
+        assert_eq!(r.route(11, &depths), 3);
+    }
+
+    #[test]
+    fn admission_policies() {
+        assert!(AdmissionPolicy::Open.admits(10_000, 1e9));
+        let cap = AdmissionPolicy::QueueCap(4);
+        assert!(cap.admits(3, 0.0));
+        assert!(!cap.admits(4, 0.0));
+        let sla = AdmissionPolicy::SlaP90 { sla_us: 1_000.0 };
+        assert!(sla.admits(100, 0.0), "no service estimate yet ⇒ never drop blind");
+        assert!(sla.admits(4, 200.0), "5 × 200 µs = SLA boundary");
+        assert!(!sla.admits(5, 200.0), "6 × 200 µs busts the SLA");
+    }
+
+    #[test]
+    fn route_policy_parse_roundtrip() {
+        for p in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::JoinShortestQueue,
+            RoutePolicy::StationSharded,
+        ] {
+            assert_eq!(RoutePolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn service_estimate_normalises_queueing() {
+        // A completion that waited behind 9 still-outstanding requests
+        // contributes latency/10 — otherwise `outstanding × estimate`
+        // would double-count the queue.
+        let first = update_service_estimate(0.0, 1_000.0, 9);
+        assert_eq!(first, 100.0);
+        assert_eq!(
+            update_service_estimate(first, 100.0, 0),
+            100.0,
+            "stationary on consistent observations"
+        );
+        let drift = update_service_estimate(100.0, 200.0, 0);
+        assert!((drift - 120.0).abs() < 1e-9, "EWMA drifts at α=0.2: {drift}");
+    }
+
+    #[test]
+    fn cluster_config_labels() {
+        let cfg = ClusterConfig::new(4, PipelineConfig::new(Topology::new(2, 1, 1, 4)))
+            .with_route(RoutePolicy::StationSharded)
+            .with_admission(AdmissionPolicy::QueueCap(16));
+        assert_eq!(cfg.label(), "4×[2p 1w 1k 4e] route=shard adm=cap:16");
+    }
+}

@@ -1,0 +1,250 @@
+//! The real sharded cluster: N threaded serving replicas
+//! ([`NodeCore`]) behind an admission-controlled router, driven open-loop
+//! from an [`ArrivalSource`].
+//!
+//! The injector paces arrivals on the wall clock (best effort — once the
+//! fleet lags the schedule, the backlog itself is the measurement), routes
+//! per [`RoutePolicy`] using live per-replica outstanding counts, and
+//! applies [`AdmissionPolicy`] with a running per-replica mean-service
+//! estimate fed back from completions. A collector thread folds tagged
+//! completions into per-node latency collectors, merged into fleet
+//! quantiles at the end ([`Percentiles::merge`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::backend::BackendFactory;
+use crate::coordinator::pipeline::{Completion, NodeCore};
+use crate::coordinator::Percentiles;
+use crate::workload::ArrivalSource;
+
+use super::{
+    merged_quantiles, update_service_estimate, ClusterConfig, ClusterReport, NodeReport, Router,
+};
+
+/// A runnable cluster: every replica is built from the same factory (the
+/// backends themselves are constructed inside each replica's engine
+/// threads).
+pub struct Cluster {
+    pub config: ClusterConfig,
+    factory: BackendFactory,
+}
+
+impl Cluster {
+    pub fn new(config: ClusterConfig, factory: BackendFactory) -> Cluster {
+        Cluster { config, factory }
+    }
+
+    /// Serve the arrival stream and report. Conservation is structural:
+    /// every arrival is either dropped at admission or submitted, and
+    /// every submission produces exactly one completion.
+    pub fn run(&self, source: &mut dyn ArrivalSource) -> Result<ClusterReport> {
+        let n = self.config.nodes;
+        let nodes: Vec<NodeCore> =
+            (0..n).map(|_| NodeCore::spawn(&self.config.node, &self.factory)).collect();
+        let (ctx, crx) = mpsc::channel::<Completion>();
+        // Per-replica mean-service estimate, f64 bits in atomics so the
+        // injector reads what the collector writes.
+        let est_service: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+
+        let t0 = Instant::now();
+        let mut router = Router::new(self.config.route);
+        let mut requests = 0usize;
+        let mut dropped = 0usize;
+        let mut dropped_queries = 0usize;
+        let mut submitted = 0u64;
+
+        let collected = std::thread::scope(|scope| {
+            let est = &est_service;
+            let nodes_ref = &nodes;
+            let collector = scope.spawn(move || {
+                let mut lat: Vec<Percentiles> = (0..n).map(|_| Percentiles::new()).collect();
+                let mut completed = vec![0usize; n];
+                let mut completed_q = vec![0usize; n];
+                let mut failed = 0usize;
+                while let Ok(c) = crx.recv() {
+                    lat[c.node].record(c.latency_us);
+                    completed[c.node] += 1;
+                    completed_q[c.node] += c.n_queries;
+                    if !c.ok {
+                        failed += 1;
+                    }
+                    let prev = f64::from_bits(est[c.node].load(Ordering::Relaxed));
+                    let next = update_service_estimate(
+                        prev,
+                        c.latency_us,
+                        nodes_ref[c.node].outstanding(),
+                    );
+                    est[c.node].store(next.to_bits(), Ordering::Relaxed);
+                }
+                (lat, completed, completed_q, failed)
+            });
+
+            // ---- Injector (this thread) --------------------------------
+            while let Some(a) = source.next_arrival() {
+                requests += 1;
+                crate::coordinator::pipeline::pace_until(t0, a.at_us);
+                let depths: Vec<usize> = nodes.iter().map(|nd| nd.outstanding()).collect();
+                let target = router.route(a.station(), &depths);
+                let est_us = f64::from_bits(est_service[target].load(Ordering::Relaxed));
+                if !self.config.admission.admits(depths[target], est_us) {
+                    dropped += 1;
+                    dropped_queries += a.queries.len();
+                    continue;
+                }
+                nodes[target].submit_tagged(a.queries, submitted, target, &ctx);
+                submitted += 1;
+            }
+            drop(ctx);
+            collector.join().expect("collector panicked")
+        });
+        let (lat, completed, completed_q, failed) = collected;
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let stats: Vec<_> = nodes.into_iter().map(NodeCore::shutdown).collect();
+
+        let completed_total: usize = completed.iter().sum();
+        let completed_queries: usize = completed_q.iter().sum();
+        anyhow::ensure!(
+            completed_total == submitted as usize,
+            "cluster lost requests: {submitted} submitted, {completed_total} completed"
+        );
+
+        let (p50, p90, p99) = merged_quantiles(&lat);
+        let mut lat = lat;
+        let per_node: Vec<NodeReport> = (0..n)
+            .map(|i| NodeReport {
+                completed_requests: completed[i],
+                completed_queries: completed_q[i],
+                req_p90_us: if lat[i].is_empty() { 0.0 } else { lat[i].p90() },
+                cache_hit_rate: stats[i].cache_hit_rate(),
+                mean_aggregation: stats[i].mean_aggregation(),
+            })
+            .collect();
+        let (lookups, hits) = stats
+            .iter()
+            .fold((0u64, 0u64), |(l, h), s| (l + s.cache_lookups, h + s.cache_hits));
+
+        Ok(ClusterReport {
+            label: self.config.label(),
+            route: self.config.route.label().to_string(),
+            offered_qps: source.offered_qps(),
+            achieved_qps: completed_queries as f64 / wall_s,
+            requests,
+            completed: completed_total,
+            dropped,
+            completed_queries,
+            dropped_queries,
+            failed,
+            req_p50_us: p50,
+            req_p90_us: p90,
+            req_p99_us: p99,
+            cache_hit_rate: if lookups == 0 { 0.0 } else { hits as f64 / lookups as f64 },
+            per_node,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AdmissionPolicy, RoutePolicy};
+    use crate::coordinator::{AggregationPolicy, PipelineConfig, Topology};
+    use crate::nfa::constraint_gen::HardwareConfig;
+    use crate::rules::standard::StandardVersion;
+    use crate::testing::fixture::compile_fixture;
+    use crate::workload::PoissonSource;
+
+    fn fixture() -> (BackendFactory, crate::rules::types::World) {
+        let f = compile_fixture(909, 300, StandardVersion::V2, HardwareConfig::v2_aws(4));
+        (f.native_factory(), f.world)
+    }
+
+    fn node_cfg() -> PipelineConfig {
+        PipelineConfig::new(Topology::new(2, 1, 1, 4))
+            .with_aggregation(AggregationPolicy::DrainQueue)
+    }
+
+    #[test]
+    fn cluster_serves_everything_when_open() {
+        let (factory, world) = fixture();
+        let cfg = ClusterConfig::new(3, node_cfg()).with_route(RoutePolicy::RoundRobin);
+        let mut src = PoissonSource::new(&world, 4, 1e6, 16, 150);
+        let r = Cluster::new(cfg, factory).run(&mut src).unwrap();
+        assert!(r.conserves_requests());
+        assert_eq!(r.requests, 150);
+        assert_eq!(r.completed, 150);
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.completed_queries, 150 * 16);
+        assert_eq!(r.failed, 0);
+        assert!(r.req_p90_us >= r.req_p50_us);
+        assert!(r.achieved_qps > 0.0);
+        // Round-robin spreads a burst evenly.
+        assert!(r.max_node_share() < 0.5, "share {}", r.max_node_share());
+    }
+
+    #[test]
+    fn jsq_conserves_and_balances() {
+        let (factory, world) = fixture();
+        let cfg = ClusterConfig::new(3, node_cfg()).with_route(RoutePolicy::JoinShortestQueue);
+        let mut src = PoissonSource::new(&world, 8, 1e6, 16, 120);
+        let r = Cluster::new(cfg, factory).run(&mut src).unwrap();
+        assert!(r.conserves_requests());
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.completed, 120);
+    }
+
+    #[test]
+    fn queue_cap_drops_are_accounted_not_lost() {
+        let (factory, world) = fixture();
+        // A burst (effectively simultaneous arrivals) against a tiny queue
+        // cap must shed load — and account for every shed request.
+        let cfg = ClusterConfig::new(2, node_cfg())
+            .with_route(RoutePolicy::RoundRobin)
+            .with_admission(AdmissionPolicy::QueueCap(8));
+        let mut src = PoissonSource::new(&world, 12, 1e8, 16, 400);
+        let r = Cluster::new(cfg, factory).run(&mut src).unwrap();
+        assert!(
+            r.conserves_requests(),
+            "in {} = done {} + drop {}",
+            r.requests,
+            r.completed,
+            r.dropped
+        );
+        assert!(r.dropped > 0, "burst over cap 8 must drop");
+        assert!(r.saturated());
+        assert_eq!(r.completed_queries + r.dropped_queries, 400 * 16);
+    }
+
+    #[test]
+    fn station_sharding_raises_cache_hit_rate_over_round_robin() {
+        // §5.2 cache affinity: pinning stations to replicas keeps each
+        // station's hot connections in one LRU. Same seed ⇒ identical
+        // arrival stream, so the comparison is deterministic.
+        let (factory, world) = fixture();
+        let node = node_cfg().with_cache(512);
+        let run = |route| {
+            let cfg = ClusterConfig::new(4, node).with_route(route);
+            // A thin schedule (6 mean legs/station) makes hot connections
+            // recur densely, so the cache has something to win.
+            let mut src = PoissonSource::new(&world, 77, 1e6, 32, 300)
+                .with_airport_skew(1.2)
+                .with_mean_legs(6);
+            Cluster::new(cfg, factory.clone()).run(&mut src).unwrap()
+        };
+        let rr = run(RoutePolicy::RoundRobin);
+        let sh = run(RoutePolicy::StationSharded);
+        assert!(rr.conserves_requests() && sh.conserves_requests());
+        assert!(sh.cache_hit_rate > 0.0);
+        assert!(
+            sh.cache_hit_rate > rr.cache_hit_rate,
+            "sharded affinity must beat round-robin: {} !> {}",
+            sh.cache_hit_rate,
+            rr.cache_hit_rate
+        );
+        // The price of affinity: zipf skew concentrates load.
+        assert!(sh.max_node_share() > rr.max_node_share());
+    }
+}

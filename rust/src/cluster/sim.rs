@@ -1,0 +1,528 @@
+//! Deterministic discrete-event simulation of the fleet: N replica nodes,
+//! each a *feeder stage* (CPU-side scheduling + encoding, `feeders_per_node`
+//! parallel servers) in front of one accelerator kernel (the
+//! [`FpgaModel`] datapath) — the §6.1 shape where "a powerful FPGA
+//! [starves] behind a weak CPU feeder".
+//!
+//! The feeder:FPGA ratio is the experiment variable: with one feeder the
+//! encode rate caps achieved throughput at a small fraction of the kernel
+//! ceiling; adding feeders climbs to the kernel (XRT-contended) ceiling —
+//! the knee the `fleet_imbalance` bench sweeps, and the measured
+//! `node_qps` that [`crate::costmodel::provision_for_throughput`] turns
+//! into fleet sizes.
+//!
+//! Routing/admission mirror the real cluster ([`super::real`]): the same
+//! [`Router`] and [`AdmissionPolicy`] code runs inside the event loop, and
+//! per-node LRU caches (same [`LruCache`] as the real
+//! [`CachedBackend`](crate::backend::CachedBackend), over the same
+//! canonical keys) model the §5.2 hot-connection hit rates — cache hits
+//! skip both the encode share and the kernel pass.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::backend::{query_key, LruCache};
+use crate::coordinator::{Overheads, Percentiles};
+use crate::erbium::FpgaModel;
+use crate::nfa::constraint_gen::HardwareConfig;
+use crate::prng::Rng;
+use crate::workload::{Arrival, ArrivalSource};
+
+use super::{
+    merged_quantiles, update_service_estimate, AdmissionPolicy, ClusterReport, NodeReport,
+    RoutePolicy, Router,
+};
+
+/// Payload-free arrival for the simulator: timings, the routing station,
+/// and (when cache behaviour matters) the canonical query keys.
+#[derive(Debug, Clone)]
+pub struct SimArrival {
+    pub at_us: f64,
+    pub station: u32,
+    pub n_queries: usize,
+    /// Canonical query keys; empty ⇒ model every query as a cache miss
+    /// (cheap mode for cache-less sweeps).
+    pub keys: Vec<u64>,
+}
+
+impl SimArrival {
+    /// Project a real [`Arrival`] down to its simulator shape.
+    pub fn of(a: &Arrival, with_keys: bool) -> SimArrival {
+        SimArrival {
+            at_us: a.at_us,
+            station: a.station(),
+            n_queries: a.queries.len(),
+            keys: if with_keys { a.queries.iter().map(query_key).collect() } else { Vec::new() },
+        }
+    }
+}
+
+/// Drain an [`ArrivalSource`] into simulator arrivals.
+pub fn sim_arrivals(source: &mut dyn ArrivalSource, with_keys: bool) -> Vec<SimArrival> {
+    let mut out = Vec::with_capacity(source.total_requests());
+    while let Some(a) = source.next_arrival() {
+        out.push(SimArrival::of(&a, with_keys));
+    }
+    out
+}
+
+/// Synthetic Poisson arrivals without a `World`: zipf-skewed stations and
+/// (optionally) zipf-repeating synthetic keys per station, so cache and
+/// routing behaviour can be swept cheaply at any scale.
+#[allow(clippy::too_many_arguments)]
+pub fn poisson_sim_arrivals(
+    seed: u64,
+    rate_rps: f64,
+    batch_per_request: usize,
+    n_requests: usize,
+    n_stations: usize,
+    station_skew: f64,
+    keys_per_station: usize,
+) -> Vec<SimArrival> {
+    assert!(rate_rps > 0.0 && n_stations > 0);
+    let mut rng = Rng::new(seed ^ 0x51A7);
+    let mut clock_us = 0.0;
+    (0..n_requests)
+        .map(|_| {
+            clock_us += -(1.0 - rng.f64()).ln() / rate_rps * 1e6;
+            let station = rng.zipf(n_stations, station_skew) as u32;
+            let keys = if keys_per_station > 0 {
+                (0..batch_per_request)
+                    .map(|_| {
+                        ((station as u64) << 32)
+                            | rng.zipf(keys_per_station, 1.05) as u64
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            SimArrival { at_us: clock_us, station, n_queries: batch_per_request, keys }
+        })
+        .collect()
+}
+
+/// Fleet-simulation parameters.
+#[derive(Debug, Clone)]
+pub struct ClusterSimConfig {
+    pub nodes: usize,
+    /// Parallel feeder servers per node (the vCPU-shaped knob: each runs
+    /// the per-request scheduling + encoding serially).
+    pub feeders_per_node: usize,
+    pub route: RoutePolicy,
+    pub admission: AdmissionPolicy,
+    /// Per-node hot-connection LRU capacity (needs keyed arrivals).
+    pub cache_capacity: Option<usize>,
+    /// Kernel hardware of each node's accelerator.
+    pub hw: HardwareConfig,
+    /// NFA depth (22 v1 / 26 v2).
+    pub depth: usize,
+    pub overheads: Overheads,
+}
+
+impl ClusterSimConfig {
+    /// The paper's cloud node (MCT v2 on AWS F1, 4 engines, XDMA).
+    pub fn v2_cloud(nodes: usize, feeders_per_node: usize) -> ClusterSimConfig {
+        assert!(nodes >= 1 && feeders_per_node >= 1);
+        ClusterSimConfig {
+            nodes,
+            feeders_per_node,
+            route: RoutePolicy::RoundRobin,
+            admission: AdmissionPolicy::Open,
+            cache_capacity: None,
+            hw: HardwareConfig::v2_aws(4),
+            depth: 26,
+            overheads: Overheads::default(),
+        }
+    }
+
+    pub fn with_route(mut self, route: RoutePolicy) -> ClusterSimConfig {
+        self.route = route;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> ClusterSimConfig {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_cache(mut self, capacity: usize) -> ClusterSimConfig {
+        self.cache_capacity = Some(capacity);
+        self
+    }
+
+    /// The datapath model of one node's kernel.
+    pub fn kernel_model(&self) -> FpgaModel {
+        FpgaModel::new(self.hw, self.depth)
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "sim {}×[{}f 1k {}e] route={} adm={}",
+            self.nodes,
+            self.feeders_per_node,
+            self.hw.engines,
+            self.route.label(),
+            self.admission.label()
+        )
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    /// Request reaches the router (post transport).
+    Arrive { req: usize },
+    /// A feeder finished scheduling + encoding the request's misses.
+    FeederDone { req: usize },
+    /// The node's kernel finished the request's misses.
+    KernelDone { node: usize, req: usize },
+}
+
+type EventHeap = BinaryHeap<Reverse<(u64, u64, Event)>>;
+
+fn push_event(heap: &mut EventHeap, seq: &mut u64, t_us: f64, ev: Event) {
+    let key = (t_us * 1000.0).round() as u64; // ns resolution
+    heap.push(Reverse((key, *seq, ev)));
+    *seq += 1;
+}
+
+struct ReqSim {
+    node: usize,
+    at_us: f64,
+    n: usize,
+    /// Queries that must pass through encode + kernel (set at feed time;
+    /// `n` until the cache has spoken).
+    misses: usize,
+}
+
+struct NodeSim {
+    queue: VecDeque<usize>,
+    free_feeders: usize,
+    kernel_busy: bool,
+    kernel_queue: VecDeque<usize>,
+    cache: Option<LruCache<()>>,
+    outstanding: usize,
+    est_service_us: f64,
+    completed: usize,
+    completed_q: usize,
+    lookups: u64,
+    hits: u64,
+    lat: Percentiles,
+}
+
+/// Run the fleet simulation; deterministic for a given config + arrivals.
+pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> ClusterReport {
+    let o = &cfg.overheads;
+    let model = cfg.kernel_model();
+    let n_nodes = cfg.nodes;
+    let mut router = Router::new(cfg.route);
+    let mut nodes: Vec<NodeSim> = (0..n_nodes)
+        .map(|_| NodeSim {
+            queue: VecDeque::new(),
+            free_feeders: cfg.feeders_per_node,
+            kernel_busy: false,
+            kernel_queue: VecDeque::new(),
+            cache: cfg.cache_capacity.map(LruCache::new),
+            outstanding: 0,
+            // 0 until the first completion: like the real cluster, the
+            // SLA controller never drops blind.
+            est_service_us: 0.0,
+            completed: 0,
+            completed_q: 0,
+            lookups: 0,
+            hits: 0,
+            lat: Percentiles::new(),
+        })
+        .collect();
+
+    let mut reqs: Vec<ReqSim> = Vec::with_capacity(arrivals.len());
+    let mut heap: EventHeap = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut offered_q = 0usize;
+    let mut window_us = 0.0f64;
+    for a in arrivals {
+        offered_q += a.n_queries;
+        window_us = window_us.max(a.at_us);
+        let rid = reqs.len();
+        reqs.push(ReqSim { node: usize::MAX, at_us: a.at_us, n: a.n_queries, misses: a.n_queries });
+        push_event(
+            &mut heap,
+            &mut seq,
+            a.at_us + o.zmq.request_us(a.n_queries),
+            Event::Arrive { req: rid },
+        );
+    }
+
+    let mut dropped = 0usize;
+    let mut dropped_q = 0usize;
+    let mut makespan = 0.0f64;
+
+    // Start the next queued request on a free feeder: the cache speaks at
+    // feed time (hits skip encode and the kernel), then the feeder spends
+    // the scheduling + encode service.
+    #[allow(clippy::too_many_arguments)]
+    fn try_start_feeder(
+        node_idx: usize,
+        nodes: &mut [NodeSim],
+        reqs: &mut [ReqSim],
+        arrivals: &[SimArrival],
+        o: &Overheads,
+        now: f64,
+        heap: &mut EventHeap,
+        seq: &mut u64,
+    ) {
+        while nodes[node_idx].free_feeders > 0 {
+            let Some(rid) = nodes[node_idx].queue.pop_front() else { break };
+            let node = &mut nodes[node_idx];
+            let keys = &arrivals[rid].keys;
+            let mut misses = reqs[rid].n;
+            if let Some(cache) = node.cache.as_mut() {
+                if !keys.is_empty() {
+                    node.lookups += keys.len() as u64;
+                    let mut hit = 0usize;
+                    for &k in keys {
+                        if cache.get(k).is_some() {
+                            hit += 1;
+                        } else {
+                            cache.insert(k, ());
+                        }
+                    }
+                    node.hits += hit as u64;
+                    misses = reqs[rid].n - hit;
+                }
+            }
+            reqs[rid].misses = misses;
+            node.free_feeders -= 1;
+            let service = o.sched.us(reqs[rid].n) + o.encode.us(misses);
+            push_event(heap, seq, now + service, Event::FeederDone { req: rid });
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn try_start_kernel(
+        node_idx: usize,
+        nodes: &mut [NodeSim],
+        reqs: &[ReqSim],
+        feeders: usize,
+        o: &Overheads,
+        model: &FpgaModel,
+        now: f64,
+        heap: &mut EventHeap,
+        seq: &mut u64,
+    ) {
+        let node = &mut nodes[node_idx];
+        if node.kernel_busy {
+            return;
+        }
+        let Some(rid) = node.kernel_queue.pop_front() else { return };
+        node.kernel_busy = true;
+        let service =
+            o.xrt.submission_us(feeders) + model.batch_timing(reqs[rid].misses).total_us;
+        push_event(heap, seq, now + service, Event::KernelDone { node: node_idx, req: rid });
+    }
+
+    let complete = |node: &mut NodeSim, rid: usize, reqs: &[ReqSim], now: f64| -> f64 {
+        let done = now + o.zmq.reply_us(reqs[rid].n);
+        let latency = done - reqs[rid].at_us;
+        node.lat.record(latency);
+        node.outstanding -= 1;
+        node.completed += 1;
+        node.completed_q += reqs[rid].n;
+        node.est_service_us =
+            update_service_estimate(node.est_service_us, latency, node.outstanding);
+        done
+    };
+
+    while let Some(Reverse((key, _, ev))) = heap.pop() {
+        let now = key as f64 / 1000.0;
+        match ev {
+            Event::Arrive { req } => {
+                let depths: Vec<usize> = nodes.iter().map(|n| n.outstanding).collect();
+                let target = router.route(arrivals[req].station, &depths);
+                if !cfg.admission.admits(depths[target], nodes[target].est_service_us) {
+                    dropped += 1;
+                    dropped_q += reqs[req].n;
+                    continue;
+                }
+                reqs[req].node = target;
+                nodes[target].outstanding += 1;
+                nodes[target].queue.push_back(req);
+                try_start_feeder(
+                    target, &mut nodes, &mut reqs, arrivals, o, now, &mut heap, &mut seq,
+                );
+            }
+            Event::FeederDone { req } => {
+                let node_idx = reqs[req].node;
+                nodes[node_idx].free_feeders += 1;
+                if reqs[req].misses == 0 {
+                    // Pure cache hit: no kernel pass needed.
+                    let done = complete(&mut nodes[node_idx], req, &reqs, now);
+                    makespan = makespan.max(done);
+                } else {
+                    nodes[node_idx].kernel_queue.push_back(req);
+                    try_start_kernel(
+                        node_idx, &mut nodes, &reqs, cfg.feeders_per_node, o, &model, now,
+                        &mut heap, &mut seq,
+                    );
+                }
+                try_start_feeder(
+                    node_idx, &mut nodes, &mut reqs, arrivals, o, now, &mut heap, &mut seq,
+                );
+            }
+            Event::KernelDone { node, req } => {
+                nodes[node].kernel_busy = false;
+                let done = complete(&mut nodes[node], req, &reqs, now);
+                makespan = makespan.max(done);
+                try_start_kernel(
+                    node, &mut nodes, &reqs, cfg.feeders_per_node, o, &model, now, &mut heap,
+                    &mut seq,
+                );
+            }
+        }
+    }
+
+    let completed: usize = nodes.iter().map(|n| n.completed).sum();
+    let completed_queries: usize = nodes.iter().map(|n| n.completed_q).sum();
+    assert_eq!(
+        completed + dropped,
+        arrivals.len(),
+        "cluster sim must conserve requests"
+    );
+
+    let lats: Vec<Percentiles> = nodes.iter().map(|n| n.lat.clone()).collect();
+    let (p50, p90, p99) = merged_quantiles(&lats);
+    let (lookups, hits) =
+        nodes.iter().fold((0u64, 0u64), |(l, h), n| (l + n.lookups, h + n.hits));
+    let per_node: Vec<NodeReport> = nodes
+        .iter_mut()
+        .map(|n| NodeReport {
+            completed_requests: n.completed,
+            completed_queries: n.completed_q,
+            req_p90_us: if n.lat.is_empty() { 0.0 } else { n.lat.p90() },
+            cache_hit_rate: if n.lookups == 0 { 0.0 } else { n.hits as f64 / n.lookups as f64 },
+            mean_aggregation: 1.0,
+        })
+        .collect();
+
+    ClusterReport {
+        label: cfg.label(),
+        route: cfg.route.label().to_string(),
+        offered_qps: offered_q as f64 / (window_us.max(1.0) * 1e-6),
+        achieved_qps: completed_queries as f64 / (makespan.max(1e-9) * 1e-6),
+        requests: arrivals.len(),
+        completed,
+        dropped,
+        completed_queries,
+        dropped_queries: dropped_q,
+        failed: 0,
+        req_p50_us: p50,
+        req_p90_us: p90,
+        req_p99_us: p99,
+        cache_hit_rate: if lookups == 0 { 0.0 } else { hits as f64 / lookups as f64 },
+        per_node,
+    }
+}
+
+/// Measured saturation throughput of one node with `feeders` feeder
+/// servers: offer far more load than any configuration can serve and read
+/// the achieved rate (the cluster-level analogue of
+/// [`FpgaModel::sustained_qps`], now including the CPU feeder path).
+pub fn measure_node_saturation_qps(feeders: usize, batch: usize, requests: usize) -> f64 {
+    let arrivals = poisson_sim_arrivals(0xFEED, 1e7, batch, requests, 16, 0.8, 0);
+    let cfg = ClusterSimConfig::v2_cloud(1, feeders);
+    simulate_cluster(&cfg, &arrivals).achieved_qps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_is_deterministic_and_conserves() {
+        let arrivals = poisson_sim_arrivals(9, 50_000.0, 1024, 400, 16, 1.1, 256);
+        for route in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::JoinShortestQueue,
+            RoutePolicy::StationSharded,
+        ] {
+            let cfg = ClusterSimConfig::v2_cloud(4, 2)
+                .with_route(route)
+                .with_admission(AdmissionPolicy::QueueCap(32))
+                .with_cache(512);
+            let a = simulate_cluster(&cfg, &arrivals);
+            let b = simulate_cluster(&cfg, &arrivals);
+            assert!(a.conserves_requests(), "{route:?}");
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.achieved_qps, b.achieved_qps);
+            assert_eq!(a.req_p90_us, b.req_p90_us);
+            assert_eq!(a.cache_hit_rate, b.cache_hit_rate);
+        }
+    }
+
+    #[test]
+    fn weak_feeder_starves_the_kernel() {
+        // §6.1: one weak feeder in front of an FPGA-class backend leaves
+        // the accelerator mostly idle — achieved is a small fraction of
+        // the kernel's nominal saturation.
+        let sat = ClusterSimConfig::v2_cloud(1, 1).kernel_model().saturation_qps();
+        let one = measure_node_saturation_qps(1, 16_384, 300);
+        assert!(
+            one < 0.35 * sat,
+            "1 feeder must starve the kernel: {:.1} M vs {:.1} M q/s",
+            one / 1e6,
+            sat / 1e6
+        );
+        // Adding feeders climbs towards the kernel ceiling, then flattens
+        // (the knee): the last doubling buys almost nothing.
+        let four = measure_node_saturation_qps(4, 16_384, 300);
+        let eight = measure_node_saturation_qps(8, 16_384, 300);
+        assert!(four > 1.5 * one, "feeders must relieve the bottleneck");
+        assert!(eight < 1.3 * four, "kernel ceiling must flatten the curve");
+        assert!(eight < sat, "nothing exceeds the nominal kernel rate");
+    }
+
+    #[test]
+    fn sla_admission_protects_latency_at_the_cost_of_drops() {
+        // Sustained ~2× overload (not an instantaneous burst): the SLA
+        // controller never drops blind, so completions must interleave
+        // with arrivals for its service estimate to engage. Fleet
+        // capacity here is kernel-bound at ≈5.5 k req/s; offer 12 k.
+        let arrivals = poisson_sim_arrivals(3, 12_000.0, 4_096, 600, 16, 0.8, 0);
+        let open = simulate_cluster(&ClusterSimConfig::v2_cloud(2, 2), &arrivals);
+        let sla_us = 20_000.0;
+        let shed = simulate_cluster(
+            &ClusterSimConfig::v2_cloud(2, 2)
+                .with_admission(AdmissionPolicy::SlaP90 { sla_us }),
+            &arrivals,
+        );
+        assert!(open.conserves_requests() && shed.conserves_requests());
+        assert_eq!(open.dropped, 0);
+        assert!(shed.dropped > 0, "overload must shed under an SLA");
+        assert!(
+            shed.req_p90_us < open.req_p90_us,
+            "shedding must protect p90: {} !< {}",
+            shed.req_p90_us,
+            open.req_p90_us
+        );
+    }
+
+    #[test]
+    fn sharded_routing_wins_cache_hits_loses_balance() {
+        let arrivals = poisson_sim_arrivals(21, 100_000.0, 512, 800, 32, 1.2, 128);
+        let run = |route| {
+            simulate_cluster(
+                &ClusterSimConfig::v2_cloud(4, 2).with_route(route).with_cache(1024),
+                &arrivals,
+            )
+        };
+        let rr = run(RoutePolicy::RoundRobin);
+        let sh = run(RoutePolicy::StationSharded);
+        assert!(
+            sh.cache_hit_rate > rr.cache_hit_rate,
+            "sharded affinity must raise hit rate: {} !> {}",
+            sh.cache_hit_rate,
+            rr.cache_hit_rate
+        );
+        assert!(sh.max_node_share() > rr.max_node_share(), "affinity skews load");
+    }
+}

@@ -133,18 +133,28 @@ pub struct PipelineConfig {
     /// Worker-side request aggregation (§4.3).
     pub aggregation: AggregationPolicy,
     pub failure: FailurePolicy,
+    /// Hot-connection result cache in front of each engine server, entries
+    /// per LRU (`None` = no cache) — the §5.2 "cache mechanisms for
+    /// selected airports".
+    pub cache_capacity: Option<usize>,
 }
 
 impl PipelineConfig {
     /// The paper's FPGA-flow defaults: batched DE, no worker aggregation
-    /// (requests forwarded as-is), fail-fast.
+    /// (requests forwarded as-is), fail-fast, no result cache.
     pub fn new(topology: Topology) -> PipelineConfig {
         PipelineConfig {
             topology,
             strategy: MctStrategy::FpgaBatched,
             aggregation: AggregationPolicy::Forward,
             failure: FailurePolicy::FailFast,
+            cache_capacity: None,
         }
+    }
+
+    pub fn with_cache(mut self, capacity: usize) -> PipelineConfig {
+        self.cache_capacity = Some(capacity);
+        self
     }
 
     pub fn with_strategy(mut self, strategy: MctStrategy) -> PipelineConfig {

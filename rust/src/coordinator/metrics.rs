@@ -33,13 +33,30 @@ impl Percentiles {
         }
     }
 
-    /// Percentile in [0, 100] (nearest-rank).
+    /// Percentile in [0, 100] (nearest-rank). `p` is clamped into the
+    /// valid range, so `percentile(0.0)` is the minimum and
+    /// `percentile(100.0)` the maximum; a single sample answers every
+    /// quantile with itself. Panics on an empty collector — callers that
+    /// may be empty should check [`Percentiles::is_empty`] first.
     pub fn percentile(&mut self, p: f64) -> f64 {
         assert!(!self.samples.is_empty(), "no samples");
         self.ensure_sorted();
         let n = self.samples.len();
-        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * n as f64).ceil() as usize;
         self.samples[rank.clamp(1, n) - 1]
+    }
+
+    /// Fold another collector's samples into this one, so per-shard
+    /// latency samples combine into fleet-level quantiles without
+    /// re-collecting. Exact (sample-preserving), not an approximation:
+    /// `a.merge(&b)` answers every quantile as if all samples had been
+    /// recorded on `a` directly.
+    pub fn merge(&mut self, other: &Percentiles) {
+        if other.samples.is_empty() {
+            return;
+        }
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
     }
 
     pub fn p50(&mut self) -> f64 {
@@ -93,5 +110,63 @@ mod tests {
         assert_eq!(p.p90(), 10.0);
         p.record(1.0);
         assert_eq!(p.p50(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn empty_percentile_panics() {
+        Percentiles::new().p50();
+    }
+
+    #[test]
+    fn quantile_extremes_and_clamping() {
+        let mut p = Percentiles::new();
+        for i in 1..=10 {
+            p.record(i as f64);
+        }
+        assert_eq!(p.percentile(0.0), 1.0, "q=0 is the minimum");
+        assert_eq!(p.percentile(100.0), 10.0, "q=1 is the maximum");
+        // Out-of-range quantiles clamp instead of indexing out of bounds.
+        assert_eq!(p.percentile(-5.0), 1.0);
+        assert_eq!(p.percentile(250.0), 10.0);
+        // A single sample answers every quantile with itself.
+        let mut one = Percentiles::new();
+        one.record(3.5);
+        for q in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(one.percentile(q), 3.5);
+        }
+    }
+
+    #[test]
+    fn merge_matches_direct_collection() {
+        // Per-shard collectors merged == one fleet-level collector.
+        let mut direct = Percentiles::new();
+        let mut shards = vec![Percentiles::new(), Percentiles::new(), Percentiles::new()];
+        for i in 0..300 {
+            let v = ((i * 37) % 100) as f64;
+            direct.record(v);
+            shards[i % 3].record(v);
+        }
+        let mut merged = Percentiles::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.len(), direct.len());
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(merged.percentile(q), direct.percentile(q), "q={q}");
+        }
+        assert!((merged.mean() - direct.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty_is_noop_both_ways() {
+        let mut a = Percentiles::new();
+        a.record(2.0);
+        let empty = Percentiles::new();
+        a.merge(&empty);
+        assert_eq!(a.len(), 1);
+        let mut b = Percentiles::new();
+        b.merge(&a);
+        assert_eq!(b.p50(), 2.0);
     }
 }

@@ -31,9 +31,12 @@ pub mod pipeline;
 pub mod sim;
 
 pub use config::{AggregationPolicy, FailurePolicy, PipelineConfig, Topology};
-pub use crossval::{cross_validate, CrossValidation};
+pub use crossval::{
+    cross_validate, cross_validate_cluster_policies, ClusterPolicyCrossValidation,
+    CrossValidation,
+};
 pub use domain_explorer::{DomainExplorer, MctStrategy, UserQueryOutcome};
 pub use metrics::Percentiles;
 pub use overheads::Overheads;
 pub use pipeline::{Pipeline, PipelineReport};
-pub use sim::{simulate, SimConfig, SimReport};
+pub use sim::{simulate, LoadMode, SimConfig, SimReport};

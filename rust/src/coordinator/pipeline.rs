@@ -11,12 +11,20 @@
 //!                                   │
 //!                                   ▼
 //!                             MatchBackend (ERBIUM engine via XLA/PJRT or
-//!                             native simulator, or the §5.2 CPU baseline)
+//!                             native simulator, or the §5.2 CPU baseline,
+//!                             optionally behind a hot-connection LRU)
 //! ```
 //!
 //! Everything here is functional — MCT answers are computed for real. Two
 //! clocks are reported (DESIGN.md §Dual-clock): wall-clock of this CPU
 //! stand-in, and the backend-model clock accumulated per kernel call.
+//!
+//! The serving machinery (router queue → workers → engine servers) is
+//! factored into [`NodeCore`] so one node can be driven three ways: the
+//! closed-loop trace replay of [`Pipeline::run`], the open-loop
+//! arrival-timed replay of [`Pipeline::run_open`] (reporting offered vs
+//! achieved load), and as one replica among many behind the
+//! [`crate::cluster`] router.
 //!
 //! The MCT-Wrapper workers implement the paper's §4.3 worker-side
 //! aggregation for real: under the `DrainQueue` policy
@@ -37,20 +45,49 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::backend::{BackendFactory, MatchBackend};
+use crate::backend::{cached_factory, BackendFactory, CacheCounters};
 use crate::rules::types::{MctDecision, MctQuery};
-use crate::workload::ProductionTrace;
+use crate::workload::{ArrivalSource, ProductionTrace};
 
 use super::config::{FailurePolicy, PipelineConfig, Topology};
 use super::domain_explorer::DomainExplorer;
 use super::metrics::Percentiles;
 
+/// Where a request's reply goes.
+pub(crate) enum ReplySlot {
+    /// Synchronous request-reply: the submitting thread blocks on the
+    /// paired receiver (closed-loop Domain Explorers).
+    Oneshot(mpsc::Sender<Result<Vec<MctDecision>, String>>),
+    /// Fire-and-collect: a tagged completion lands on a shared channel
+    /// (open-loop injectors and the cluster router), decisions dropped
+    /// after validation.
+    Tagged { tx: mpsc::Sender<Completion>, id: u64, node: usize, t_submit: Instant },
+}
+
+/// Completion record for [`ReplySlot::Tagged`] submissions.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Completion {
+    pub id: u64,
+    pub node: usize,
+    pub n_queries: usize,
+    /// Queue + aggregation + engine time as seen from submission, µs.
+    pub latency_us: f64,
+    pub ok: bool,
+}
+
 /// One MCT request travelling process → worker (the ZeroMQ REQ frame).
-struct WorkRequest {
+pub(crate) struct WorkRequest {
+    queries: Vec<MctQuery>,
+    reply: ReplySlot,
+}
+
+/// One combined request travelling worker → engine server.
+struct EngineRequest {
     queries: Vec<MctQuery>,
     reply: mpsc::Sender<Result<Vec<MctDecision>, String>>,
 }
@@ -72,89 +109,76 @@ struct StageCounters {
     depth_sum: AtomicU64,
     depth_samples: AtomicU64,
     depth_max: AtomicUsize,
+    /// Requests submitted but not yet completed (queue + in service) —
+    /// the join-shortest-queue / admission-control signal.
+    inflight: AtomicUsize,
     /// Busy time per stage, ns.
     worker_busy_ns: AtomicU64,
     kernel_busy_ns: AtomicU64,
 }
 
-/// Aggregated report of one pipeline run. Field names are deliberately
-/// comparable with [`super::sim::SimReport`] (mean aggregation, per-request
-/// execution percentiles) so the real system and the simulator can be
-/// cross-validated in the same regime.
-#[derive(Debug, Clone)]
-pub struct PipelineReport {
-    pub topology_label: String,
-    /// Label of the backend that served the run (e.g. `fpga-native`, `cpu`).
+/// Final counter snapshot of one drained node.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct NodeStats {
     pub backend: String,
-    /// Aggregation policy label (e.g. `forward`, `drain`, `max:8`).
-    pub aggregation: String,
-    pub user_queries: usize,
-    pub travel_solutions_examined: usize,
-    pub valid_travel_solutions: usize,
-    pub mct_queries: usize,
-    /// MCT requests issued by the Domain Explorers (router frames).
-    pub mct_requests: usize,
     pub engine_calls: usize,
-    /// Engine calls that returned an error (non-zero only under
-    /// [`FailurePolicy::Degrade`]; fail-fast aborts the run instead).
     pub failed_calls: usize,
-    /// Mean requests aggregated per engine call (the Fig 10 quantity).
-    pub mean_aggregation: f64,
-    /// Wall-clock of the whole replay, ms.
-    pub wall_ms: f64,
-    /// Wall-clock MCT throughput, queries/s.
-    pub wall_qps: f64,
-    /// Backend-model time accumulated across kernel calls, µs.
-    pub modeled_kernel_us: f64,
-    /// p50/p90 user-query latency, wall-clock ms.
-    pub uq_latency_p50_ms: f64,
-    pub uq_latency_p90_ms: f64,
-    /// Execution time of a single MCT request as seen by the process
-    /// (queueing + aggregation + engine), wall-clock µs — the counterpart
-    /// of the simulator's `exec_*_us`.
-    pub mct_req_p50_us: f64,
-    pub mct_req_p90_us: f64,
-    pub mct_req_mean_us: f64,
-    /// Router queue occupancy sampled at request arrival.
-    pub mean_router_queue: f64,
-    pub max_router_queue: usize,
-    /// Fraction of the run each stage spent busy (aggregate across the
-    /// stage's threads).
-    pub worker_busy_frac: f64,
-    pub kernel_busy_frac: f64,
+    pub agg_calls: usize,
+    pub agg_requests: usize,
+    pub modeled_ns: u64,
+    pub depth_sum: u64,
+    pub depth_samples: u64,
+    pub depth_max: usize,
+    pub worker_busy_ns: u64,
+    pub kernel_busy_ns: u64,
+    pub cache_lookups: u64,
+    pub cache_hits: u64,
 }
 
-/// The runnable pipeline, generic over the backend that answers MCT
-/// queries.
-pub struct Pipeline {
-    pub config: PipelineConfig,
-    factory: BackendFactory,
+impl NodeStats {
+    pub fn mean_aggregation(&self) -> f64 {
+        self.agg_requests as f64 / self.agg_calls.max(1) as f64
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.cache_lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.cache_lookups as f64
+        }
+    }
 }
 
-impl Pipeline {
-    pub fn new(config: PipelineConfig, factory: BackendFactory) -> Pipeline {
-        Pipeline { config, factory }
-    }
+/// One serving replica: router queue, `w` MCT-Wrapper workers, `k` engine
+/// servers, optional per-engine LRU result cache. Spawning starts the
+/// threads; [`NodeCore::shutdown`] drains and joins them.
+pub(crate) struct NodeCore {
+    tx: mpsc::Sender<WorkRequest>,
+    counters: Arc<StageCounters>,
+    backend_label: Arc<Mutex<String>>,
+    cache_counters: Arc<CacheCounters>,
+    worker_handles: Vec<JoinHandle<()>>,
+    engine_handles: Vec<JoinHandle<()>>,
+}
 
-    /// Paper-default policies (batched DE, forward aggregation, fail-fast).
-    pub fn with_topology(topology: Topology, factory: BackendFactory) -> Pipeline {
-        Pipeline::new(PipelineConfig::new(topology), factory)
-    }
-
-    /// Replay a trace through the full system and report.
-    pub fn run(&self, trace: &ProductionTrace) -> Result<PipelineReport> {
-        let t0 = Instant::now();
-        let topology = self.config.topology;
+impl NodeCore {
+    pub(crate) fn spawn(config: &PipelineConfig, factory: &BackendFactory) -> NodeCore {
+        let topology = config.topology;
         let counters = Arc::new(StageCounters::default());
         let backend_label = Arc::new(Mutex::new(String::new()));
+        let cache_counters = Arc::new(CacheCounters::default());
+        let factory = match config.cache_capacity {
+            Some(cap) => cached_factory(factory.clone(), cap, cache_counters.clone()),
+            None => factory.clone(),
+        };
 
         // ---- Engine servers (k kernels) --------------------------------
-        let (etx, erx) = mpsc::channel::<WorkRequest>();
+        let (etx, erx) = mpsc::channel::<EngineRequest>();
         let erx = Arc::new(Mutex::new(erx));
         let mut engine_handles = Vec::new();
         for _ in 0..topology.kernels {
             let erx = erx.clone();
-            let factory = self.factory.clone();
+            let factory = factory.clone();
             let counters = counters.clone();
             let backend_label = backend_label.clone();
             engine_handles.push(std::thread::spawn(move || {
@@ -206,7 +230,7 @@ impl Pipeline {
         // ---- MCT Wrapper workers (aggregation stage) -------------------
         let (wtx, wrx) = mpsc::channel::<WorkRequest>();
         let wrx = Arc::new(Mutex::new(wrx));
-        let agg_cap = self.config.aggregation.cap();
+        let agg_cap = config.aggregation.cap();
         let mut worker_handles = Vec::new();
         for _ in 0..topology.workers {
             let wrx = wrx.clone();
@@ -250,7 +274,9 @@ impl Pipeline {
                     // scatter), not the blocked wait on the engine — the
                     // stages must not double-count each other's service.
                     let combine_ns = b0.elapsed().as_nanos() as u64;
-                    let res = if etx.send(WorkRequest { queries: combined, reply: rtx }).is_err()
+                    let res = if etx
+                        .send(EngineRequest { queries: combined, reply: rtx })
+                        .is_err()
                     {
                         Err("board gone".to_string())
                     } else {
@@ -266,20 +292,31 @@ impl Pipeline {
 
                     // Scatter the aggregate reply back per request.
                     let s0 = Instant::now();
-                    match res {
-                        Ok(ds) => {
-                            let mut off = 0;
-                            for (req, n) in pending.iter().zip(&spans) {
-                                let slice = ds[off..off + n].to_vec();
+                    let mut off = 0;
+                    for (req, n) in pending.into_iter().zip(&spans) {
+                        let slice = match &res {
+                            Ok(ds) => {
+                                let s = Ok(ds[off..off + n].to_vec());
                                 off += n;
-                                let _ = req.reply.send(Ok(slice));
+                                s
+                            }
+                            Err(e) => Err(e.clone()),
+                        };
+                        match req.reply {
+                            ReplySlot::Oneshot(tx) => {
+                                let _ = tx.send(slice);
+                            }
+                            ReplySlot::Tagged { tx, id, node, t_submit } => {
+                                let _ = tx.send(Completion {
+                                    id,
+                                    node,
+                                    n_queries: *n,
+                                    latency_us: t_submit.elapsed().as_secs_f64() * 1e6,
+                                    ok: slice.is_ok(),
+                                });
                             }
                         }
-                        Err(e) => {
-                            for req in &pending {
-                                let _ = req.reply.send(Err(e.clone()));
-                            }
-                        }
+                        counters.inflight.fetch_sub(1, Ordering::Relaxed);
                     }
                     counters.worker_busy_ns.fetch_add(
                         combine_ns + s0.elapsed().as_nanos() as u64,
@@ -290,6 +327,176 @@ impl Pipeline {
         }
         drop(etx);
 
+        NodeCore {
+            tx: wtx,
+            counters,
+            backend_label,
+            cache_counters,
+            worker_handles,
+            engine_handles,
+        }
+    }
+
+    /// Record submission-side queue statistics and hand the request to the
+    /// router queue.
+    fn send(&self, req: WorkRequest) {
+        let depth = self.counters.router_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.counters.depth_sum.fetch_add(depth as u64, Ordering::Relaxed);
+        self.counters.depth_samples.fetch_add(1, Ordering::Relaxed);
+        self.counters.depth_max.fetch_max(depth, Ordering::Relaxed);
+        self.counters.inflight.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(req).expect("router closed");
+    }
+
+    /// Synchronous request-reply (closed-loop Domain Explorer path).
+    pub(crate) fn request_blocking(
+        &self,
+        queries: Vec<MctQuery>,
+    ) -> Result<Vec<MctDecision>, String> {
+        let (rtx, rrx) = mpsc::channel();
+        self.send(WorkRequest { queries, reply: ReplySlot::Oneshot(rtx) });
+        rrx.recv().unwrap_or_else(|_| Err("worker died".into()))
+    }
+
+    /// Asynchronous tagged submission (open-loop / cluster path); the
+    /// completion lands on `tx`.
+    pub(crate) fn submit_tagged(
+        &self,
+        queries: Vec<MctQuery>,
+        id: u64,
+        node: usize,
+        tx: &mpsc::Sender<Completion>,
+    ) {
+        self.send(WorkRequest {
+            queries,
+            reply: ReplySlot::Tagged { tx: tx.clone(), id, node, t_submit: Instant::now() },
+        });
+    }
+
+    /// Requests submitted and not yet completed.
+    pub(crate) fn outstanding(&self) -> usize {
+        self.counters.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Close the router queue, drain the workers and engine servers, and
+    /// return the final counter snapshot.
+    pub(crate) fn shutdown(self) -> NodeStats {
+        drop(self.tx); // workers then engine servers drain
+        for h in self.worker_handles {
+            let _ = h.join();
+        }
+        for h in self.engine_handles {
+            let _ = h.join();
+        }
+        let c = &self.counters;
+        let (cache_lookups, cache_hits) = self.cache_counters.snapshot();
+        NodeStats {
+            backend: self.backend_label.lock().unwrap().clone(),
+            engine_calls: c.engine_calls.load(Ordering::Relaxed),
+            failed_calls: c.failed_calls.load(Ordering::Relaxed),
+            agg_calls: c.agg_calls.load(Ordering::Relaxed),
+            agg_requests: c.agg_requests.load(Ordering::Relaxed),
+            modeled_ns: c.modeled_ns.load(Ordering::Relaxed),
+            depth_sum: c.depth_sum.load(Ordering::Relaxed),
+            depth_samples: c.depth_samples.load(Ordering::Relaxed),
+            depth_max: c.depth_max.load(Ordering::Relaxed),
+            worker_busy_ns: c.worker_busy_ns.load(Ordering::Relaxed),
+            kernel_busy_ns: c.kernel_busy_ns.load(Ordering::Relaxed),
+            cache_lookups,
+            cache_hits,
+        }
+    }
+}
+
+/// Aggregated report of one pipeline run. Field names are deliberately
+/// comparable with [`super::sim::SimReport`] (mean aggregation, per-request
+/// execution percentiles, offered vs achieved) so the real system and the
+/// simulator can be cross-validated in the same regime.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub topology_label: String,
+    /// Label of the backend that served the run (e.g. `fpga-native`,
+    /// `cpu`, `fpga-native+cache`).
+    pub backend: String,
+    /// Aggregation policy label (e.g. `forward`, `drain`, `max:8`).
+    pub aggregation: String,
+    pub user_queries: usize,
+    pub travel_solutions_examined: usize,
+    pub valid_travel_solutions: usize,
+    pub mct_queries: usize,
+    /// MCT requests issued by the Domain Explorers (router frames).
+    pub mct_requests: usize,
+    pub engine_calls: usize,
+    /// Engine calls that returned an error (non-zero only under
+    /// [`FailurePolicy::Degrade`]; fail-fast aborts the run instead).
+    pub failed_calls: usize,
+    /// Mean requests aggregated per engine call (the Fig 10 quantity).
+    pub mean_aggregation: f64,
+    /// Wall-clock of the whole replay, ms.
+    pub wall_ms: f64,
+    /// Wall-clock MCT throughput, queries/s (the *achieved* side of the
+    /// open-loop report).
+    pub wall_qps: f64,
+    /// Offered load of the arrival stream, queries/s (0 for closed-loop
+    /// trace replays, which have no exogenous arrival clock).
+    pub offered_qps: f64,
+    /// Backend-model time accumulated across kernel calls, µs.
+    pub modeled_kernel_us: f64,
+    /// p50/p90 user-query latency, wall-clock ms (closed-loop runs only).
+    pub uq_latency_p50_ms: f64,
+    pub uq_latency_p90_ms: f64,
+    /// Execution time of a single MCT request as seen by the process
+    /// (queueing + aggregation + engine), wall-clock µs — the counterpart
+    /// of the simulator's `exec_*_us`.
+    pub mct_req_p50_us: f64,
+    pub mct_req_p90_us: f64,
+    pub mct_req_mean_us: f64,
+    /// Router queue occupancy sampled at request arrival.
+    pub mean_router_queue: f64,
+    pub max_router_queue: usize,
+    /// Fraction of the run each stage spent busy (aggregate across the
+    /// stage's threads).
+    pub worker_busy_frac: f64,
+    pub kernel_busy_frac: f64,
+    /// Hot-connection cache lookups/hits (0 when no cache is configured).
+    pub cache_lookups: u64,
+    pub cache_hits: u64,
+}
+
+impl PipelineReport {
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.cache_lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.cache_lookups as f64
+        }
+    }
+}
+
+/// The runnable pipeline, generic over the backend that answers MCT
+/// queries.
+pub struct Pipeline {
+    pub config: PipelineConfig,
+    factory: BackendFactory,
+}
+
+impl Pipeline {
+    pub fn new(config: PipelineConfig, factory: BackendFactory) -> Pipeline {
+        Pipeline { config, factory }
+    }
+
+    /// Paper-default policies (batched DE, forward aggregation, fail-fast).
+    pub fn with_topology(topology: Topology, factory: BackendFactory) -> Pipeline {
+        Pipeline::new(PipelineConfig::new(topology), factory)
+    }
+
+    /// Replay a trace through the full system, closed-loop (each Domain
+    /// Explorer process keeps one request outstanding), and report.
+    pub fn run(&self, trace: &ProductionTrace) -> Result<PipelineReport> {
+        let t0 = Instant::now();
+        let topology = self.config.topology;
+        let node = NodeCore::spawn(&self.config, &self.factory);
+
         // ---- Domain Explorer processes + Injector ----------------------
         let queue: Arc<Mutex<VecDeque<&crate::workload::UserQuery>>> =
             Arc::new(Mutex::new(trace.queries.iter().collect()));
@@ -297,14 +504,13 @@ impl Pipeline {
         let req_lat = Arc::new(Mutex::new(Percentiles::new()));
         let degraded = Arc::new(AtomicUsize::new(0));
         let strategy = self.config.strategy;
+        let node_ref = &node;
         std::thread::scope(|scope| {
             for _ in 0..topology.processes {
                 let queue = queue.clone();
-                let wtx = wtx.clone();
                 let stats = stats.clone();
                 let req_lat = req_lat.clone();
                 let degraded = degraded.clone();
-                let counters = counters.clone();
                 scope.spawn(move || {
                     let de = DomainExplorer::new(strategy);
                     loop {
@@ -315,14 +521,7 @@ impl Pipeline {
                         let q0 = Instant::now();
                         let outcome = de.process(uq, |qs: &[MctQuery]| {
                             let r0 = Instant::now();
-                            let depth = counters.router_depth.fetch_add(1, Ordering::Relaxed) + 1;
-                            counters.depth_sum.fetch_add(depth as u64, Ordering::Relaxed);
-                            counters.depth_samples.fetch_add(1, Ordering::Relaxed);
-                            counters.depth_max.fetch_max(depth, Ordering::Relaxed);
-                            let (rtx, rrx) = mpsc::channel();
-                            wtx.send(WorkRequest { queries: qs.to_vec(), reply: rtx })
-                                .expect("router closed");
-                            let ds = match rrx.recv().expect("worker died") {
+                            let ds = match node_ref.request_blocking(qs.to_vec()) {
                                 Ok(ds) => ds,
                                 Err(_) => {
                                     // Conservative industry default while the
@@ -348,33 +547,14 @@ impl Pipeline {
                 });
             }
         });
-        drop(wtx); // close the router; workers then engine servers drain
-        for h in worker_handles {
-            let _ = h.join();
-        }
-        for h in engine_handles {
-            let _ = h.join();
-        }
+        let ns = node.shutdown();
 
-        let failed = counters.failed_calls.load(Ordering::Relaxed);
         let degraded_reqs = degraded.load(Ordering::Relaxed);
-        if self.config.failure == FailurePolicy::FailFast {
-            // `degraded_reqs` also catches failures the engine-side counter
-            // cannot see (a dead engine-server or worker thread): any
-            // substituted decision means the replay was not clean.
-            anyhow::ensure!(
-                failed == 0 && degraded_reqs == 0,
-                "{failed} engine calls failed, {degraded_reqs} requests degraded to \
-                 no-match; rerun with FailurePolicy::Degrade to tolerate"
-            );
-        }
+        self.enforce_failure_policy(&ns, degraded_reqs)?;
 
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let wall_ns = (wall_ms * 1e6).max(1.0);
-        let agg_calls = counters.agg_calls.load(Ordering::Relaxed);
-        let agg_requests = counters.agg_requests.load(Ordering::Relaxed);
-        let depth_samples = counters.depth_samples.load(Ordering::Relaxed);
-        let mut req_lat = req_lat.lock().unwrap();
+        let mut req_lat_guard = req_lat.lock().unwrap();
+        let req_lat: &mut Percentiles = &mut req_lat_guard;
         let mut s = stats.lock().unwrap();
         let mct_queries = s.1;
         let de_calls = s.2;
@@ -382,35 +562,160 @@ impl Pipeline {
         let examined = s.4;
         let lat = &mut s.0;
         let _ = de_calls; // engine-side count is authoritative
-        Ok(PipelineReport {
-            topology_label: topology.label(),
-            backend: backend_label.lock().unwrap().clone(),
-            aggregation: self.config.aggregation.label(),
-            user_queries: trace.queries.len(),
-            travel_solutions_examined: examined,
-            valid_travel_solutions: valid_ts,
-            mct_queries,
-            mct_requests: agg_requests,
-            engine_calls: counters.engine_calls.load(Ordering::Relaxed),
-            failed_calls: failed,
-            mean_aggregation: agg_requests as f64 / agg_calls.max(1) as f64,
+        Ok(self.report(
+            &ns,
             wall_ms,
-            wall_qps: mct_queries as f64 / (wall_ms / 1e3).max(1e-12),
-            modeled_kernel_us: counters.modeled_ns.load(Ordering::Relaxed) as f64 / 1e3,
-            uq_latency_p50_ms: if lat.is_empty() { 0.0 } else { lat.p50() },
-            uq_latency_p90_ms: if lat.is_empty() { 0.0 } else { lat.p90() },
+            ReportShape {
+                user_queries: trace.queries.len(),
+                travel_solutions_examined: examined,
+                valid_travel_solutions: valid_ts,
+                mct_queries,
+                offered_qps: 0.0,
+                uq_latency: Some(lat),
+                req_lat,
+            },
+        ))
+    }
+
+    /// Drive the node open-loop from an [`ArrivalSource`]: requests enter
+    /// on the source's clock regardless of system state, and the report
+    /// carries offered vs achieved throughput. The Domain-Explorer stage
+    /// is bypassed — the source already materialised the MCT requests.
+    pub fn run_open(&self, source: &mut dyn ArrivalSource) -> Result<PipelineReport> {
+        let t0 = Instant::now();
+        let node = NodeCore::spawn(&self.config, &self.factory);
+        let (ctx, crx) = mpsc::channel::<Completion>();
+
+        let mut submitted = 0u64;
+        while let Some(a) = source.next_arrival() {
+            // Pace the injector to the arrival clock (best effort: if the
+            // wall lags the schedule the backlog itself is the measurement).
+            pace_until(t0, a.at_us);
+            node.submit_tagged(a.queries, submitted, 0, &ctx);
+            submitted += 1;
+        }
+        drop(ctx);
+
+        let mut req_lat = Percentiles::new();
+        let mut mct_queries = 0usize;
+        let mut completed = 0u64;
+        let mut degraded_reqs = 0usize;
+        while let Ok(c) = crx.recv() {
+            req_lat.record(c.latency_us);
+            mct_queries += c.n_queries;
+            completed += 1;
+            if !c.ok {
+                degraded_reqs += 1;
+            }
+        }
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let ns = node.shutdown();
+        anyhow::ensure!(
+            completed == submitted,
+            "open-loop conservation violated: {submitted} submitted, {completed} completed"
+        );
+        self.enforce_failure_policy(&ns, degraded_reqs)?;
+
+        Ok(self.report(
+            &ns,
+            wall_ms,
+            ReportShape {
+                user_queries: 0,
+                travel_solutions_examined: 0,
+                valid_travel_solutions: 0,
+                mct_queries,
+                offered_qps: source.offered_qps(),
+                uq_latency: None,
+                req_lat: &mut req_lat,
+            },
+        ))
+    }
+
+    fn enforce_failure_policy(&self, ns: &NodeStats, degraded_reqs: usize) -> Result<()> {
+        if self.config.failure == FailurePolicy::FailFast {
+            // `degraded_reqs` also catches failures the engine-side counter
+            // cannot see (a dead engine-server or worker thread): any
+            // substituted decision means the replay was not clean.
+            anyhow::ensure!(
+                ns.failed_calls == 0 && degraded_reqs == 0,
+                "{} engine calls failed, {degraded_reqs} requests degraded to \
+                 no-match; rerun with FailurePolicy::Degrade to tolerate",
+                ns.failed_calls
+            );
+        }
+        Ok(())
+    }
+
+    fn report(&self, ns: &NodeStats, wall_ms: f64, shape: ReportShape<'_>) -> PipelineReport {
+        let wall_ns = (wall_ms * 1e6).max(1.0);
+        let topology = self.config.topology;
+        let req_lat = shape.req_lat;
+        let (uq_p50, uq_p90) = match shape.uq_latency {
+            Some(lat) if !lat.is_empty() => (lat.p50(), lat.p90()),
+            _ => (0.0, 0.0),
+        };
+        PipelineReport {
+            topology_label: topology.label(),
+            backend: ns.backend.clone(),
+            aggregation: self.config.aggregation.label(),
+            user_queries: shape.user_queries,
+            travel_solutions_examined: shape.travel_solutions_examined,
+            valid_travel_solutions: shape.valid_travel_solutions,
+            mct_queries: shape.mct_queries,
+            mct_requests: ns.agg_requests,
+            engine_calls: ns.engine_calls,
+            failed_calls: ns.failed_calls,
+            mean_aggregation: ns.mean_aggregation(),
+            wall_ms,
+            wall_qps: shape.mct_queries as f64 / (wall_ms / 1e3).max(1e-12),
+            offered_qps: shape.offered_qps,
+            modeled_kernel_us: ns.modeled_ns as f64 / 1e3,
+            uq_latency_p50_ms: uq_p50,
+            uq_latency_p90_ms: uq_p90,
             mct_req_p50_us: if req_lat.is_empty() { 0.0 } else { req_lat.p50() },
             mct_req_p90_us: if req_lat.is_empty() { 0.0 } else { req_lat.p90() },
             mct_req_mean_us: if req_lat.is_empty() { 0.0 } else { req_lat.mean() },
-            mean_router_queue: counters.depth_sum.load(Ordering::Relaxed) as f64
-                / depth_samples.max(1) as f64,
-            max_router_queue: counters.depth_max.load(Ordering::Relaxed),
-            worker_busy_frac: counters.worker_busy_ns.load(Ordering::Relaxed) as f64
+            mean_router_queue: ns.depth_sum as f64 / ns.depth_samples.max(1) as f64,
+            max_router_queue: ns.depth_max,
+            worker_busy_frac: ns.worker_busy_ns as f64
                 / (wall_ns * topology.workers as f64),
-            kernel_busy_frac: counters.kernel_busy_ns.load(Ordering::Relaxed) as f64
+            kernel_busy_frac: ns.kernel_busy_ns as f64
                 / (wall_ns * topology.kernels as f64),
-        })
+            cache_lookups: ns.cache_lookups,
+            cache_hits: ns.cache_hits,
+        }
     }
+}
+
+/// Hold the injector until `target_us` past `start`: coarse sleep for the
+/// bulk, spin for the tail — OS sleep granularity (tens of µs) is far
+/// coarser than open-loop arrival gaps.
+pub(crate) fn pace_until(start: Instant, target_us: f64) {
+    let target = std::time::Duration::from_nanos((target_us * 1e3) as u64);
+    loop {
+        let elapsed = start.elapsed();
+        if elapsed >= target {
+            return;
+        }
+        let remain = target - elapsed;
+        if remain > std::time::Duration::from_micros(300) {
+            std::thread::sleep(remain - std::time::Duration::from_micros(200));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Run-mode-specific report inputs (closed-loop trace replay vs open-loop
+/// arrival stream).
+struct ReportShape<'a> {
+    user_queries: usize,
+    travel_solutions_examined: usize,
+    valid_travel_solutions: usize,
+    mct_queries: usize,
+    offered_qps: f64,
+    uq_latency: Option<&'a mut Percentiles>,
+    req_lat: &'a mut Percentiles,
 }
 
 #[cfg(test)]
@@ -423,7 +728,7 @@ mod tests {
     use crate::nfa::constraint_gen::HardwareConfig;
     use crate::rules::standard::StandardVersion;
     use crate::testing::fixture::compile_fixture;
-    use crate::workload::{generate_trace, TraceConfig};
+    use crate::workload::{generate_trace, PoissonSource, TraceConfig};
 
     fn native_factory(seed: u64) -> (BackendFactory, crate::rules::types::World) {
         let f = compile_fixture(seed, 400, StandardVersion::V2, HardwareConfig::v2_aws(4));
@@ -452,6 +757,10 @@ mod tests {
         assert!(r.mean_router_queue >= 1.0, "arrival-sampled depth counts self");
         assert!(r.max_router_queue >= 1);
         assert!(r.worker_busy_frac > 0.0 && r.kernel_busy_frac > 0.0);
+        // No cache configured, no arrival clock.
+        assert_eq!(r.cache_lookups, 0);
+        assert_eq!(r.cache_hit_rate(), 0.0);
+        assert_eq!(r.offered_qps, 0.0);
     }
 
     #[test]
@@ -479,6 +788,37 @@ mod tests {
     }
 
     #[test]
+    fn cached_pipeline_is_functionally_transparent() {
+        // The hot-connection LRU must not change any functional outcome,
+        // only shortcut repeated connections — and it must report hits.
+        // Replaying the trace twice in one run guarantees the repeats: the
+        // second pass is all hot connections.
+        let (factory, world) = native_factory(311);
+        let once = generate_trace(&TraceConfig::scaled(19, 15, 30.0), &world);
+        let mut doubled = once.queries.clone();
+        doubled.extend(once.queries.iter().cloned());
+        let trace = crate::workload::ProductionTrace { queries: doubled };
+        let plain = Pipeline::new(PipelineConfig::new(Topology::new(2, 1, 1, 4)), factory.clone())
+            .run(&trace)
+            .unwrap();
+        let cached = Pipeline::new(
+            PipelineConfig::new(Topology::new(2, 1, 1, 4)).with_cache(1 << 15),
+            factory,
+        )
+        .run(&trace)
+        .unwrap();
+        assert_eq!(plain.valid_travel_solutions, cached.valid_travel_solutions);
+        assert_eq!(plain.mct_queries, cached.mct_queries);
+        assert_eq!(cached.backend, "fpga-native+cache");
+        assert_eq!(cached.cache_lookups as usize, cached.mct_queries);
+        assert!(
+            cached.cache_hit_rate() > 0.3,
+            "the second pass must hit: rate {}",
+            cached.cache_hit_rate()
+        );
+    }
+
+    #[test]
     fn max_batch_policy_caps_aggregation() {
         let (factory, world) = native_factory(307);
         let trace = generate_trace(&TraceConfig::scaled(17, 24, 30.0), &world);
@@ -490,11 +830,30 @@ mod tests {
     }
 
     #[test]
+    fn open_loop_run_conserves_and_reports_offered_load() {
+        let (factory, world) = native_factory(313);
+        // Burst rate: arrivals are effectively simultaneous, so the run
+        // measures the node's own drain rate against the offered clock.
+        let mut src = PoissonSource::new(&world, 21, 1e6, 32, 120);
+        let cfg = PipelineConfig::new(Topology::new(4, 2, 1, 4))
+            .with_aggregation(AggregationPolicy::DrainQueue);
+        let r = Pipeline::new(cfg, factory).run_open(&mut src).unwrap();
+        assert_eq!(r.mct_requests, 120);
+        assert_eq!(r.mct_queries, 120 * 32);
+        assert_eq!(r.failed_calls, 0);
+        assert!(r.offered_qps > 0.0);
+        assert!(r.wall_qps > 0.0);
+        assert!(r.mct_req_p90_us >= r.mct_req_p50_us);
+        assert_eq!(r.user_queries, 0, "open loop bypasses the DE stage");
+    }
+
+    #[test]
     fn backends_are_interchangeable() {
         // Compile-time statement of the refactor: the pipeline is generic
         // over MatchBackend; ErbiumEngine is just one implementor.
         fn assert_backend<T: crate::backend::MatchBackend>() {}
         assert_backend::<ErbiumEngine>();
         assert_backend::<crate::backend::CpuBackend>();
+        assert_backend::<crate::backend::CachedBackend>();
     }
 }

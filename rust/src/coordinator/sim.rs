@@ -15,6 +15,13 @@
 //!
 //! All service times come from [`super::overheads`] (software layers) and
 //! [`crate::erbium::hw_model`] (the accelerator datapath).
+//!
+//! Two load regimes drive the same event machinery ([`LoadMode`]):
+//! **closed-loop** (each process keeps one request outstanding — the
+//! paper's measurement harness, saturating by construction) and
+//! **open-loop** (requests arrive on their own clock from an
+//! [`ArrivalSource`] schedule; the report then carries *offered vs
+//! achieved* load, the quantity deployments are provisioned against).
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -22,19 +29,31 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::erbium::FpgaModel;
 use crate::nfa::constraint_gen::{HardwareConfig, Shell};
 use crate::rules::standard::StandardVersion;
+use crate::workload::ArrivalSource;
 
 use super::config::Topology;
 use super::metrics::Percentiles;
 use super::overheads::Overheads;
 
+/// How requests enter the simulated system.
+#[derive(Debug, Clone)]
+pub enum LoadMode {
+    /// Each process keeps one synchronous request outstanding and issues
+    /// `requests_per_process` in total (the §4 measurement harness).
+    Closed { requests_per_process: usize },
+    /// Trace-driven open loop: requests arrive at `(µs, batch)` schedule
+    /// points regardless of system state (no back-pressure on the source).
+    Open { schedule: Vec<(f64, usize)> },
+}
+
 /// Simulation parameters.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     pub topology: Topology,
-    /// Queries per MCT request (the per-request batch size `B`).
+    /// Queries per MCT request in closed-loop mode (open-loop requests
+    /// carry their own batch sizes in the schedule).
     pub batch_per_request: usize,
-    /// Total requests each process issues.
-    pub requests_per_process: usize,
+    pub load: LoadMode,
     pub version: StandardVersion,
     pub shell: Shell,
     /// NFA depth (22 v1 / 26 v2).
@@ -43,17 +62,36 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
-    /// The paper's cloud deployment defaults (MCT v2 on AWS F1, XDMA).
+    /// The paper's cloud deployment defaults (MCT v2 on AWS F1, XDMA),
+    /// closed-loop with 64 requests per process.
     pub fn v2_cloud(topology: Topology, batch: usize) -> SimConfig {
         SimConfig {
             topology,
             batch_per_request: batch,
-            requests_per_process: 64,
+            load: LoadMode::Closed { requests_per_process: 64 },
             version: StandardVersion::V2,
             shell: Shell::Xdma,
             depth: 26,
             overheads: Overheads::default(),
         }
+    }
+
+    /// Open-loop v2 cloud config over an explicit arrival schedule.
+    pub fn v2_open(topology: Topology, schedule: Vec<(f64, usize)>) -> SimConfig {
+        SimConfig {
+            topology,
+            batch_per_request: 0,
+            load: LoadMode::Open { schedule },
+            version: StandardVersion::V2,
+            shell: Shell::Xdma,
+            depth: 26,
+            overheads: Overheads::default(),
+        }
+    }
+
+    /// Open-loop v2 cloud config draining an [`ArrivalSource`].
+    pub fn v2_open_from(topology: Topology, source: &mut dyn ArrivalSource) -> SimConfig {
+        SimConfig::v2_open(topology, source.schedule())
     }
 }
 
@@ -62,16 +100,31 @@ impl SimConfig {
 pub struct SimReport {
     pub config_label: String,
     pub batch_per_request: usize,
-    /// Global throughput over the steady run, MCT queries / second.
+    /// Global *achieved* throughput over the run, MCT queries / second.
     pub throughput_qps: f64,
+    /// Offered load over the arrival window, queries / second (0 for
+    /// closed-loop runs, which have no exogenous arrival clock).
+    pub offered_qps: f64,
     /// Request execution time percentiles, µs (as seen by the process —
-    /// the paper's "execution time of a single MCT request").
+    /// the paper's "execution time of a single MCT request"; in open-loop
+    /// mode this includes time queued behind earlier arrivals).
     pub exec_p50_us: f64,
     pub exec_p90_us: f64,
     pub exec_mean_us: f64,
     /// Mean number of requests aggregated per kernel call.
     pub mean_aggregation: f64,
     pub total_requests: usize,
+}
+
+impl SimReport {
+    /// Fraction of the offered load actually served (1.0 for closed loop).
+    pub fn goodput_fraction(&self) -> f64 {
+        if self.offered_qps <= 0.0 {
+            1.0
+        } else {
+            (self.throughput_qps / self.offered_qps).min(1.0)
+        }
+    }
 }
 
 /// `Ord` so events can live *inside* the heap entries (keyed by time then
@@ -105,6 +158,14 @@ fn push_event(heap: &mut EventHeap, seq: &mut u64, t_us: f64, ev: Event) {
 struct ReqState {
     process: usize,
     t_submit: f64,
+    /// Queries carried by this request (uniform in closed loop, per-arrival
+    /// in open loop).
+    batch: usize,
+}
+
+/// Total queries across the requests a worker aggregated.
+fn queries_of(ids: &[usize], reqs: &[ReqState]) -> usize {
+    ids.iter().map(|&r| reqs[r].batch).sum()
 }
 
 struct WorkerState {
@@ -137,7 +198,10 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
     // uses its own e engines.
     let model = FpgaModel::with_total(hw, cfg.depth, t.total_engines());
 
-    let n_req_total = t.processes * cfg.requests_per_process;
+    let n_req_total = match &cfg.load {
+        LoadMode::Closed { requests_per_process } => t.processes * requests_per_process,
+        LoadMode::Open { schedule } => schedule.len(),
+    };
     let mut reqs: Vec<ReqState> = Vec::with_capacity(n_req_total);
     let mut issued_per_process = vec![0usize; t.processes];
     let mut workers: Vec<WorkerState> = (0..t.workers)
@@ -150,19 +214,50 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
 
     let mut heap: EventHeap = BinaryHeap::new();
     let mut seq: u64 = 0;
+    let mut offered_qps = 0.0;
 
-    // Initial submissions (staggered 1 µs apart to break symmetry).
-    for pidx in 0..t.processes {
-        let rid = reqs.len();
-        let t0 = pidx as f64 * 1.0;
-        reqs.push(ReqState { process: pidx, t_submit: t0 });
-        issued_per_process[pidx] += 1;
-        push_event(
-            &mut heap,
-            &mut seq,
-            t0 + o.zmq.request_us(cfg.batch_per_request),
-            Event::Arrive { req: rid },
-        );
+    match &cfg.load {
+        // Initial closed-loop submissions (staggered 1 µs apart to break
+        // symmetry); each completion re-submits until the per-process
+        // budget is spent.
+        LoadMode::Closed { .. } => {
+            for pidx in 0..t.processes {
+                let rid = reqs.len();
+                let t0 = pidx as f64 * 1.0;
+                reqs.push(ReqState {
+                    process: pidx,
+                    t_submit: t0,
+                    batch: cfg.batch_per_request,
+                });
+                issued_per_process[pidx] += 1;
+                push_event(
+                    &mut heap,
+                    &mut seq,
+                    t0 + o.zmq.request_us(cfg.batch_per_request),
+                    Event::Arrive { req: rid },
+                );
+            }
+        }
+        // Open loop: the whole schedule is exogenous — arrivals ignore
+        // system state. Requests fan over processes round-robin (the
+        // dealer socket of §4.1).
+        LoadMode::Open { schedule } => {
+            let mut total_q = 0usize;
+            let mut window_us = 0.0f64;
+            for (i, &(at_us, batch)) in schedule.iter().enumerate() {
+                let rid = reqs.len();
+                reqs.push(ReqState { process: i % t.processes, t_submit: at_us, batch });
+                total_q += batch;
+                window_us = window_us.max(at_us);
+                push_event(
+                    &mut heap,
+                    &mut seq,
+                    at_us + o.zmq.request_us(batch),
+                    Event::Arrive { req: rid },
+                );
+            }
+            offered_qps = total_q as f64 / (window_us.max(1.0) * 1e-6);
+        }
     }
 
     let mut latencies = Percentiles::new();
@@ -179,14 +274,14 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
                 workers[widx].queue.push(req);
                 if !workers[widx].busy {
                     start_worker(
-                        widx, &mut workers, cfg, o, now, &mut heap, &mut seq,
+                        widx, &mut workers, &reqs, o, now, &mut heap, &mut seq,
                         &mut aggregates, &mut aggregated_reqs,
                     );
                 }
             }
             Event::WorkerEncoded { worker } => {
                 let kidx = worker % t.kernels;
-                let n_q = workers[worker].in_flight.len() * cfg.batch_per_request;
+                let n_q = queries_of(&workers[worker].in_flight, &reqs);
                 if kernels[kidx].busy {
                     kernels[kidx].queue.push_back((worker, n_q));
                 } else {
@@ -204,13 +299,13 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
             Event::KernelDone { kernel, worker } => {
                 // Reply to every aggregated request.
                 let in_flight = std::mem::take(&mut workers[worker].in_flight);
-                let n_q = in_flight.len() * cfg.batch_per_request;
+                let n_q = queries_of(&in_flight, &reqs);
                 let partition_us = o.sched.us(n_q);
                 for rid in in_flight {
                     push_event(
                         &mut heap,
                         &mut seq,
-                        now + partition_us + o.zmq.reply_us(cfg.batch_per_request),
+                        now + partition_us + o.zmq.reply_us(reqs[rid].batch),
                         Event::Complete { req: rid },
                     );
                 }
@@ -232,7 +327,7 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
                 workers[worker].busy = false;
                 if !workers[worker].queue.is_empty() {
                     start_worker(
-                        worker, &mut workers, cfg, o, now, &mut heap, &mut seq,
+                        worker, &mut workers, &reqs, o, now, &mut heap, &mut seq,
                         &mut aggregates, &mut aggregated_reqs,
                     );
                 }
@@ -241,20 +336,27 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
                 let r = &reqs[req];
                 latencies.record(now - r.t_submit);
                 completed += 1;
-                queries_done += cfg.batch_per_request;
+                queries_done += r.batch;
                 makespan = now;
-                // Closed loop: the process immediately submits the next one.
+                // Closed loop: the process immediately submits the next
+                // one. Open-loop arrivals are all pre-scheduled.
                 let pidx = r.process;
-                if issued_per_process[pidx] < cfg.requests_per_process {
-                    issued_per_process[pidx] += 1;
-                    let rid = reqs.len();
-                    reqs.push(ReqState { process: pidx, t_submit: now });
-                    push_event(
-                        &mut heap,
-                        &mut seq,
-                        now + o.zmq.request_us(cfg.batch_per_request),
-                        Event::Arrive { req: rid },
-                    );
+                if let LoadMode::Closed { requests_per_process } = &cfg.load {
+                    if issued_per_process[pidx] < *requests_per_process {
+                        issued_per_process[pidx] += 1;
+                        let rid = reqs.len();
+                        reqs.push(ReqState {
+                            process: pidx,
+                            t_submit: now,
+                            batch: cfg.batch_per_request,
+                        });
+                        push_event(
+                            &mut heap,
+                            &mut seq,
+                            now + o.zmq.request_us(cfg.batch_per_request),
+                            Event::Arrive { req: rid },
+                        );
+                    }
                 }
             }
         }
@@ -265,6 +367,7 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
         config_label: t.label(),
         batch_per_request: cfg.batch_per_request,
         throughput_qps: queries_done as f64 / (makespan.max(1e-9) * 1e-6),
+        offered_qps,
         exec_p50_us: latencies.p50(),
         exec_p90_us: latencies.p90(),
         exec_mean_us: latencies.mean(),
@@ -277,7 +380,7 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
 fn start_worker(
     widx: usize,
     workers: &mut [WorkerState],
-    cfg: &SimConfig,
+    reqs: &[ReqState],
     o: &Overheads,
     now: f64,
     heap: &mut EventHeap,
@@ -291,7 +394,7 @@ fn start_worker(
     w.in_flight = std::mem::take(&mut w.queue);
     *aggregates += 1;
     *aggregated_reqs += w.in_flight.len();
-    let n_q = w.in_flight.len() * cfg.batch_per_request;
+    let n_q = queries_of(&w.in_flight, reqs);
     let service = o.sched.us(n_q) + o.encode.us(n_q);
     push_event(heap, seq, now + service, Event::WorkerEncoded { worker: widx });
 }
@@ -370,5 +473,64 @@ mod tests {
         let r = run(3, 2, 2, 2, 512);
         assert_eq!(r.total_requests, 3 * 64);
         assert!(r.exec_p50_us > 0.0);
+        assert_eq!(r.offered_qps, 0.0, "closed loop has no offered clock");
+        assert_eq!(r.goodput_fraction(), 1.0);
+    }
+
+    #[test]
+    fn open_loop_light_load_achieves_offered() {
+        // 1 024-query requests every 500 µs ≈ 2 M q/s offered — far below
+        // the 4-engine kernel ceiling, so the system keeps up.
+        let schedule: Vec<(f64, usize)> = (0..200).map(|i| (i as f64 * 500.0, 1024)).collect();
+        let r = simulate(&SimConfig::v2_open(Topology::new(4, 2, 1, 4), schedule));
+        assert_eq!(r.total_requests, 200);
+        assert!((1.8e6..2.3e6).contains(&r.offered_qps), "offered {}", r.offered_qps);
+        assert!(r.goodput_fraction() > 0.9, "goodput {}", r.goodput_fraction());
+    }
+
+    #[test]
+    fn open_loop_overload_reports_offered_vs_achieved_gap() {
+        // The same requests crammed into a 100× shorter window: offered
+        // far exceeds capacity, achieved saturates, queueing delay blows
+        // up the per-request execution time.
+        let light: Vec<(f64, usize)> = (0..200).map(|i| (i as f64 * 2_000.0, 16_384)).collect();
+        let heavy: Vec<(f64, usize)> = (0..200).map(|i| (i as f64 * 20.0, 16_384)).collect();
+        let rl = simulate(&SimConfig::v2_open(Topology::new(4, 2, 1, 4), light));
+        let rh = simulate(&SimConfig::v2_open(Topology::new(4, 2, 1, 4), heavy));
+        assert!(rh.offered_qps > 50.0 * rl.offered_qps);
+        assert!(
+            rh.throughput_qps < 0.5 * rh.offered_qps,
+            "overload must show a gap: achieved {} vs offered {}",
+            rh.throughput_qps,
+            rh.offered_qps
+        );
+        assert!(rh.goodput_fraction() < 0.5);
+        assert!(rh.exec_p90_us > 3.0 * rl.exec_p90_us, "queueing must inflate latency");
+    }
+
+    #[test]
+    fn open_loop_arrivals_are_seed_deterministic() {
+        // Same seed ⇒ bit-identical SimReport (the open-loop counterpart
+        // of the closed-loop determinism test).
+        use crate::rules::generator::{generate_world, GeneratorConfig};
+        use crate::workload::PoissonSource;
+        let world = generate_world(&GeneratorConfig::small(5, 10));
+        let report = |seed: u64| {
+            let mut src = PoissonSource::new(&world, seed, 20_000.0, 512, 300);
+            simulate(&SimConfig::v2_open_from(Topology::new(4, 2, 1, 4), &mut src))
+        };
+        let a = report(77);
+        let b = report(77);
+        assert_eq!(a.throughput_qps, b.throughput_qps);
+        assert_eq!(a.offered_qps, b.offered_qps);
+        assert_eq!(a.exec_p50_us, b.exec_p50_us);
+        assert_eq!(a.exec_p90_us, b.exec_p90_us);
+        assert_eq!(a.mean_aggregation, b.mean_aggregation);
+        let c = report(78);
+        assert_ne!(
+            (a.throughput_qps, a.exec_p90_us),
+            (c.throughput_qps, c.exec_p90_us),
+            "different seeds must differ"
+        );
     }
 }

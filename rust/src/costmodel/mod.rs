@@ -1,4 +1,4 @@
-//! Deployment cost model (§6, Tables 2 and 3).
+//! Deployment cost model (§6, Tables 2 and 3) and fleet provisioning.
 //!
 //! Reproduces the paper's arithmetic exactly: a 400-server Domain Explorer
 //! baseline (48 vCPUs each), the MCT module consuming 40 % of it, an FPGA
@@ -7,6 +7,16 @@
 //! matching the *CPU* capacity of the freed fleet needs `48/8 = 6` F1 (or
 //! `48/10` NP10s) instances per replaced server, which is what makes the
 //! cloud deployments 2.5–3× *more* expensive (§6.1).
+//!
+//! Since the fleet layer landed, those unit counts are no longer
+//! transcribed constants: [`plan_fleet`] sizes a deployment from **two
+//! measured inputs** — the MCT throughput one node actually sustains
+//! ([`crate::cluster::sim::measure_node_saturation_qps`] or a real
+//! [`crate::cluster::Cluster`] run) and the CPU capacity the Domain
+//! Explorer still needs — and reports which constraint binds. On every
+//! cloud FPGA instance in the catalogue the CPU side binds at ≈6× the
+//! replaced servers while the throughput side needs a handful of nodes:
+//! the §6.1 imbalance, derived rather than asserted.
 
 /// Hours billed per year (the paper quotes savings-plan hourly prices).
 pub const HOURS_PER_YEAR: f64 = 24.0 * 365.0;
@@ -82,11 +92,12 @@ pub struct CostRow {
 
 impl CostRow {
     fn new(deployment: &str, element: Element, units: usize) -> CostRow {
-        let total = match element.billing {
-            Billing::Purchase => units as f64 * element.unit_cost,
-            Billing::Hourly => units as f64 * element.unit_cost * HOURS_PER_YEAR,
-        };
-        CostRow { deployment: deployment.to_string(), element, units, total_usd: total }
+        CostRow {
+            deployment: deployment.to_string(),
+            element,
+            units,
+            total_usd: fleet_cost_usd(element, units),
+        }
     }
 
     pub fn total_label(&self) -> String {
@@ -109,7 +120,33 @@ pub fn cloud_units_for_cpu_capacity(servers: usize, instance_vcpus: usize) -> us
     (servers as f64 * DE_VCPUS as f64 / instance_vcpus as f64).floor() as usize
 }
 
-/// Table 2: Domain Explorer + ERBIUM (Fig 13 layout).
+/// Default measured-node throughput when no cluster measurement is
+/// supplied: the modeled v2 cloud kernel saturation (Fig 4's 32 M q/s
+/// anchor). Benches and tests pass their own measured rates instead.
+pub fn modeled_v2_node_qps() -> f64 {
+    use crate::nfa::constraint_gen::HardwareConfig;
+    crate::erbium::FpgaModel::new(HardwareConfig::v2_aws(4), 26).saturation_qps()
+}
+
+/// Default fleet-wide user-query rate the tables assume (search-engine
+/// scale; ~7.6 M MCT q/s of demand via [`MCT_QUERIES_PER_USER_QUERY`]).
+pub const DEFAULT_UQ_PER_S: f64 = 10_000.0;
+
+/// Cloud FPGA fleet of Table 2/3, *derived*: sized by [`plan_fleet`] from
+/// the node throughput and the freed fleet's vCPU requirement. On every
+/// catalogued FPGA instance the CPU side binds — the §6.1 imbalance.
+fn cloud_fpga_plan(element: Element) -> FleetPlan {
+    let reduced = freed_server_count(DE_SERVERS); // 244
+    plan_fleet(
+        element,
+        fleet_mct_demand_qps(DEFAULT_UQ_PER_S),
+        modeled_v2_node_qps(),
+        reduced * DE_VCPUS,
+    )
+}
+
+/// Table 2: Domain Explorer + ERBIUM (Fig 13 layout). Cloud FPGA unit
+/// counts come from [`plan_fleet`], not transcription.
 pub fn table2() -> Vec<CostRow> {
     use catalog::*;
     let reduced = freed_server_count(DE_SERVERS); // 244
@@ -121,13 +158,13 @@ pub fn table2() -> Vec<CostRow> {
         CostRow::new(
             "AWS | Domain Explorer + ERBIUM",
             AWS_F1_2XL,
-            cloud_units_for_cpu_capacity(reduced, AWS_F1_2XL.vcpus),
+            cloud_fpga_plan(AWS_F1_2XL).units,
         ),
         CostRow::new("Azure | Original Domain Explorer", AZURE_F48S, DE_SERVERS),
         CostRow::new(
             "Azure | Domain Explorer + ERBIUM",
             AZURE_NP10S,
-            cloud_units_for_cpu_capacity(reduced, AZURE_NP10S.vcpus),
+            cloud_fpga_plan(AZURE_NP10S).units,
         ),
     ]
 }
@@ -149,13 +186,13 @@ pub fn table3() -> Vec<CostRow> {
         CostRow::new(
             "AWS | DE + ERBIUM + Route Scoring",
             AWS_F1_2XL,
-            cloud_units_for_cpu_capacity(reduced, AWS_F1_2XL.vcpus),
+            cloud_fpga_plan(AWS_F1_2XL).units,
         ),
         CostRow::new("Azure | Original DE + Route Scoring", AZURE_F48S, cpu_units),
         CostRow::new(
             "Azure | DE + ERBIUM + Route Scoring",
             AZURE_NP10S,
-            cloud_units_for_cpu_capacity(reduced, AZURE_NP10S.vcpus),
+            cloud_fpga_plan(AZURE_NP10S).units,
         ),
     ]
 }
@@ -164,6 +201,112 @@ pub fn table3() -> Vec<CostRow> {
 /// engine saturating at `qps` runs on an instance priced `usd_per_hour`.
 pub fn queries_per_dollar(qps: f64, usd_per_hour: f64) -> f64 {
     qps * 3600.0 / usd_per_hour
+}
+
+/// §5.2 production marginal: MCT queries per user query
+/// (4.8 M MCT queries / 6 301 user queries in the snapshot).
+pub const MCT_QUERIES_PER_USER_QUERY: f64 = 4.8e6 / 6_301.0;
+
+/// Fleet-wide MCT demand at a given user-query rate, queries/second.
+pub fn fleet_mct_demand_qps(user_queries_per_s: f64) -> f64 {
+    user_queries_per_s * MCT_QUERIES_PER_USER_QUERY
+}
+
+/// Total cost of `units` of `element` (USD for purchases, USD/year for
+/// hourly billing) — the single place the Table 2/3 arithmetic lives.
+pub fn fleet_cost_usd(element: Element, units: usize) -> f64 {
+    match element.billing {
+        Billing::Purchase => units as f64 * element.unit_cost,
+        Billing::Hourly => units as f64 * element.unit_cost * HOURS_PER_YEAR,
+    }
+}
+
+/// Nodes needed to serve `target_qps` when one node measurably sustains
+/// `measured_node_qps` — the throughput side of fleet sizing, fed by the
+/// cluster layer's saturation measurements.
+pub fn provision_for_throughput(target_qps: f64, measured_node_qps: f64) -> usize {
+    assert!(measured_node_qps > 0.0, "need a positive measured node rate");
+    ((target_qps / measured_node_qps).ceil() as usize).max(1)
+}
+
+/// Which provisioning constraint fixes the fleet size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetBottleneck {
+    /// The fleet is sized by MCT throughput (accelerators are the scarce
+    /// resource — the balanced case).
+    MctThroughput,
+    /// The fleet is sized by Domain-Explorer CPU capacity (§6.1: the big
+    /// FPGA starves behind the instance's small CPU, so you buy FPGAs you
+    /// cannot feed).
+    CpuCapacity,
+}
+
+/// A provisioned deployment of one instance type, sized from measured
+/// node saturation plus the CPU capacity the fleet must preserve.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub element: Element,
+    pub target_qps: f64,
+    pub measured_node_qps: f64,
+    /// Nodes required to serve the MCT demand.
+    pub units_for_throughput: usize,
+    /// Instances required to preserve the Domain Explorer's vCPU capacity.
+    pub units_for_cpu: usize,
+    /// Purchased units: the binding constraint.
+    pub units: usize,
+    pub bottleneck: FleetBottleneck,
+    /// USD (purchase) or USD/year (hourly) for the whole fleet.
+    pub total_usd: f64,
+}
+
+impl FleetPlan {
+    /// Instances per replaced server — the §6.1 "about 6 AWS F1 instances"
+    /// multiplier when called with the 244-server freed fleet.
+    pub fn multiplier_vs(&self, replaced_servers: usize) -> f64 {
+        self.units as f64 / replaced_servers.max(1) as f64
+    }
+
+    /// How overprovisioned the accelerator side is: purchased units per
+    /// unit actually needed for throughput (≫1 ⇔ the imbalance).
+    pub fn accelerator_overprovision(&self) -> f64 {
+        self.units as f64 / self.units_for_throughput.max(1) as f64
+    }
+
+    /// Dollars (per year for hourly billing) per achieved M queries/s of
+    /// fleet MCT capacity — the bench's $/Mqps axis.
+    pub fn dollars_per_mqps(&self) -> f64 {
+        let capacity_mqps = self.units as f64 * self.measured_node_qps / 1e6;
+        self.total_usd / capacity_mqps.max(1e-12)
+    }
+}
+
+/// Size a fleet of `element` instances against both constraints: serving
+/// `target_qps` of MCT demand at `measured_node_qps` per node, and
+/// preserving `required_vcpus` of Domain-Explorer CPU capacity.
+pub fn plan_fleet(
+    element: Element,
+    target_qps: f64,
+    measured_node_qps: f64,
+    required_vcpus: usize,
+) -> FleetPlan {
+    let units_for_throughput = provision_for_throughput(target_qps, measured_node_qps);
+    // Capacity-equivalent rounding, as the paper's Table 2 does.
+    let units_for_cpu = required_vcpus / element.vcpus;
+    let (units, bottleneck) = if units_for_cpu > units_for_throughput {
+        (units_for_cpu, FleetBottleneck::CpuCapacity)
+    } else {
+        (units_for_throughput, FleetBottleneck::MctThroughput)
+    };
+    FleetPlan {
+        element,
+        target_qps,
+        measured_node_qps,
+        units_for_throughput,
+        units_for_cpu,
+        units,
+        bottleneck,
+        total_usd: fleet_cost_usd(element, units),
+    }
 }
 
 #[cfg(test)]
@@ -256,6 +399,62 @@ mod tests {
             find(&rows, "On-Premises | Domain Explorer + ERBIUM", "CPU + Alveo U50").total_usd;
         assert!(u200 > cpu);
         assert!(u50 < cpu);
+    }
+
+    #[test]
+    fn provision_for_throughput_ceils() {
+        assert_eq!(provision_for_throughput(1.0, 10.0), 1);
+        assert_eq!(provision_for_throughput(10.0, 10.0), 1);
+        assert_eq!(provision_for_throughput(10.1, 10.0), 2);
+        assert_eq!(provision_for_throughput(0.0, 10.0), 1, "never provision zero nodes");
+    }
+
+    #[test]
+    fn fleet_plan_derives_the_61_imbalance() {
+        // §6.1 end-to-end: the freed 244-server fleet needs 244×48 vCPUs;
+        // an f1.2xlarge brings 8. Sizing from a measured ~26 M q/s node
+        // rate, the throughput side wants a single-digit fleet while the
+        // CPU side wants 1 464 — a 6× multiplier per replaced server and
+        // the 3× cost blow-up, all derived.
+        let reduced = freed_server_count(DE_SERVERS);
+        let plan = plan_fleet(
+            catalog::AWS_F1_2XL,
+            fleet_mct_demand_qps(DEFAULT_UQ_PER_S),
+            26e6,
+            reduced * DE_VCPUS,
+        );
+        assert_eq!(plan.bottleneck, FleetBottleneck::CpuCapacity);
+        assert_eq!(plan.units, 1464);
+        assert!(plan.units_for_throughput <= 2, "one node nearly serves the demand");
+        assert!((5.9..6.1).contains(&plan.multiplier_vs(reduced)));
+        assert!(plan.accelerator_overprovision() > 500.0, "FPGAs bought but starved");
+        let cpu_only = fleet_cost_usd(catalog::AWS_C5_12XL, DE_SERVERS);
+        let ratio = plan.total_usd / cpu_only;
+        assert!((2.8..3.4).contains(&ratio), "cloud blow-up {ratio}");
+    }
+
+    #[test]
+    fn fleet_plan_balanced_case_is_throughput_bound() {
+        // A hypothetical beefy-CPU instance: CPU capacity stops binding
+        // and the fleet is sized by measured throughput again.
+        let plan = plan_fleet(catalog::AWS_C5_12XL, 100e6, 20e6, 96);
+        assert_eq!(plan.units_for_cpu, 2);
+        assert_eq!(plan.bottleneck, FleetBottleneck::MctThroughput);
+        assert_eq!(plan.units_for_throughput, 5);
+        assert_eq!(plan.units, 5);
+        assert!(plan.dollars_per_mqps() > 0.0);
+    }
+
+    #[test]
+    fn derived_tables_match_legacy_arithmetic() {
+        // plan_fleet must reproduce the paper's capacity-conversion counts
+        // exactly (the tables changed producer, not values).
+        let reduced = freed_server_count(DE_SERVERS);
+        for elem in [catalog::AWS_F1_2XL, catalog::AZURE_NP10S] {
+            let plan = cloud_fpga_plan(elem);
+            assert_eq!(plan.units, cloud_units_for_cpu_capacity(reduced, elem.vcpus));
+            assert_eq!(plan.bottleneck, FleetBottleneck::CpuCapacity);
+        }
     }
 
     #[test]

@@ -9,13 +9,20 @@
 //! erbium-search replay      [--uq N] [--rules N] [--p P] [--w W] [--k K] [--e E]
 //!                           [--backend cpu|native|xla] [--agg forward|drain|max:N]
 //!                           [--strategy cpu|fpga] [--fail fast|degrade]
-//! erbium-search costs
+//!                           [--open RATE_RPS] [--requests N] [--batch B] [--cache CAP]
+//! erbium-search fleet       [--nodes N] [--route rr|jsq|shard] [--rate RPS] [--requests N]
+//!                           [--batch B] [--cache CAP] [--cap Q | --sla US]
+//!                           [--rules N] [--seed S] [--p P] [--w W] [--k K] [--e E]
+//! erbium-search costs       [--uqps UQ_PER_S] [--node-qps QPS]
 //! ```
 
 use std::sync::Arc;
 
 use erbium_search::backend::{
     cpu_backend_factory, native_backend_factory, xla_backend_factory, BackendFactory,
+};
+use erbium_search::cluster::{
+    simulate_cluster, AdmissionPolicy, Cluster, ClusterConfig, ClusterSimConfig, RoutePolicy,
 };
 use erbium_search::coordinator::{
     AggregationPolicy, FailurePolicy, MctStrategy, Pipeline, PipelineConfig, Topology,
@@ -29,7 +36,7 @@ use erbium_search::rules::generator::{generate_rule_set, generate_world, Generat
 use erbium_search::rules::standard::{Schema, StandardVersion};
 use erbium_search::rules::serde_text;
 use erbium_search::runtime::Runtime;
-use erbium_search::workload::{generate_trace, random_query, TraceConfig};
+use erbium_search::workload::{generate_trace, random_query, PoissonSource, TraceConfig};
 
 struct Args(Vec<String>);
 
@@ -41,6 +48,9 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
     fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
     fn version(&self) -> StandardVersion {
@@ -177,11 +187,28 @@ fn main() -> anyhow::Result<()> {
                 Some("degrade") => FailurePolicy::Degrade,
                 _ => FailurePolicy::FailFast,
             };
-            let cfg = PipelineConfig::new(topo)
+            let mut cfg = PipelineConfig::new(topo)
                 .with_strategy(strategy)
                 .with_aggregation(agg)
                 .with_failure(failure);
-            let r = Pipeline::new(cfg, factory).run(&trace)?;
+            if let Some(cap) = args.get("--cache").and_then(|v| v.parse().ok()) {
+                cfg = cfg.with_cache(cap);
+            }
+            // --open RATE: bypass the closed-loop trace replay and drive the
+            // node from a Poisson arrival stream at RATE requests/s.
+            let r = match args.get("--open").and_then(|v| v.parse::<f64>().ok()) {
+                Some(rate) => {
+                    let mut src = PoissonSource::new(
+                        &world,
+                        args.u64("--seed", 1),
+                        rate,
+                        args.usize("--batch", 256),
+                        args.usize("--requests", 512),
+                    );
+                    Pipeline::new(cfg, factory).run_open(&mut src)?
+                }
+                None => Pipeline::new(cfg, factory).run(&trace)?,
+            };
             println!(
                 "{} | backend {} | agg {} | {} uq, {} MCT q, {} requests, {} calls ({} failed)",
                 r.topology_label,
@@ -210,12 +237,89 @@ fn main() -> anyhow::Result<()> {
                 r.worker_busy_frac * 100.0,
                 r.kernel_busy_frac * 100.0,
             );
+            if r.offered_qps > 0.0 {
+                println!(
+                    "open loop: offered {:.1} k q/s vs achieved {:.1} k q/s",
+                    r.offered_qps / 1e3,
+                    r.wall_qps / 1e3
+                );
+            }
+            if r.cache_lookups > 0 {
+                println!(
+                    "hot-connection cache: {}/{} hits ({:.1} %)",
+                    r.cache_hits,
+                    r.cache_lookups,
+                    r.cache_hit_rate() * 100.0
+                );
+            }
+        }
+        "fleet" => {
+            let (_, world, schema, rs) = setup(&args);
+            let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+            let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+            let factory: BackendFactory = match args.get("--backend") {
+                Some("cpu") => cpu_backend_factory(schema.clone(), rs.clone()),
+                _ => native_backend_factory(nfa.clone(), model, 28, 64),
+            };
+            let mut node = PipelineConfig::new(Topology::new(
+                args.usize("--p", 2),
+                args.usize("--w", 1),
+                args.usize("--k", 1),
+                args.usize("--e", 4),
+            ))
+            .with_aggregation(AggregationPolicy::DrainQueue);
+            if let Some(cap) = args.get("--cache").and_then(|v| v.parse().ok()) {
+                node = node.with_cache(cap);
+            }
+            let route = args
+                .get("--route")
+                .map(|s| {
+                    RoutePolicy::parse(s)
+                        .ok_or_else(|| anyhow::anyhow!("bad --route {s:?} (rr|jsq|shard)"))
+                })
+                .transpose()?
+                .unwrap_or(RoutePolicy::RoundRobin);
+            let admission = if let Some(cap) = args.get("--cap").and_then(|v| v.parse().ok()) {
+                AdmissionPolicy::QueueCap(cap)
+            } else if let Some(sla) = args.get("--sla").and_then(|v| v.parse().ok()) {
+                AdmissionPolicy::SlaP90 { sla_us: sla }
+            } else {
+                AdmissionPolicy::Open
+            };
+            let cluster_cfg = ClusterConfig::new(args.usize("--nodes", 4), node)
+                .with_route(route)
+                .with_admission(admission);
+            let seed = args.u64("--seed", 1);
+            let rate = args.f64("--rate", 50_000.0);
+            let batch = args.usize("--batch", 256);
+            let requests = args.usize("--requests", 1_000);
+            // The same seeded stream through both realisations.
+            let mut src = PoissonSource::new(&world, seed, rate, batch, requests);
+            let real = Cluster::new(cluster_cfg, factory).run(&mut src)?;
+            println!("real: {}", real.summary());
+            let sim_cfg = ClusterSimConfig::v2_cloud(
+                cluster_cfg.nodes,
+                cluster_cfg.node.topology.workers.max(1),
+            )
+            .with_route(route)
+            .with_admission(admission);
+            let mut src = PoissonSource::new(&world, seed, rate, batch, requests);
+            let arrivals = erbium_search::cluster::sim::sim_arrivals(&mut src, false);
+            let sim = simulate_cluster(&sim_cfg, &arrivals);
+            println!("sim : {}", sim.summary());
+            for (i, nr) in real.per_node.iter().enumerate() {
+                println!(
+                    "  node {i}: {} req, p90 {:.0} µs, agg {:.2}, cache {:.1} %",
+                    nr.completed_requests,
+                    nr.req_p90_us,
+                    nr.mean_aggregation,
+                    nr.cache_hit_rate * 100.0
+                );
+            }
         }
         "costs" => {
-            for (title, rows) in [
-                ("Table 2", erbium_search::costmodel::table2()),
-                ("Table 3", erbium_search::costmodel::table3()),
-            ] {
+            use erbium_search::costmodel as cm;
+            for (title, rows) in [("Table 2", cm::table2()), ("Table 3", cm::table3())] {
                 println!("\n{title}");
                 for r in rows {
                     println!(
@@ -227,10 +331,35 @@ fn main() -> anyhow::Result<()> {
                     );
                 }
             }
+            // Fleet provisioning, derived from (measured or modeled) node
+            // saturation rather than transcribed §6.1 constants.
+            let node_qps = args.f64("--node-qps", cm::modeled_v2_node_qps());
+            let target = cm::fleet_mct_demand_qps(args.f64("--uqps", cm::DEFAULT_UQ_PER_S));
+            let reduced = cm::freed_server_count(cm::DE_SERVERS);
+            println!(
+                "\nfleet plans (target {:.1} M q/s, node {:.1} M q/s, {} freed servers):",
+                target / 1e6,
+                node_qps / 1e6,
+                reduced
+            );
+            for elem in [cm::catalog::AWS_F1_2XL, cm::catalog::AZURE_NP10S] {
+                let plan =
+                    cm::plan_fleet(elem, target, node_qps, reduced * cm::DE_VCPUS);
+                println!(
+                    "  {:<12} ×{:<5} ({:?}-bound; {} for qps, {} for vCPUs; {:.1}×/server, {:.0} $/Mqps·yr)",
+                    plan.element.name,
+                    plan.units,
+                    plan.bottleneck,
+                    plan.units_for_throughput,
+                    plan.units_for_cpu,
+                    plan.multiplier_vs(reduced),
+                    plan.dollars_per_mqps()
+                );
+            }
         }
         _ => {
             println!("erbium-search — see module docs; subcommands:");
-            println!("  gen-rules | compile | query | replay | costs");
+            println!("  gen-rules | compile | query | replay | fleet | costs");
             println!("run `cargo bench` for the paper's figures/tables,");
             println!("`cargo run --release --example e2e_search` for the end-to-end driver.");
         }

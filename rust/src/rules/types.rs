@@ -137,7 +137,7 @@ impl RuleSet {
 /// One MCT query: "what is the minimum connection time for this arrival /
 /// departure pair at this station?" — issued by the Domain Explorer for every
 /// non-direct leg pair of a Travel Solution (§2.2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MctQuery {
     pub station: u32,
     pub arr_terminal: u32,

@@ -1,0 +1,333 @@
+//! Open-loop arrival generation — how load *enters* the system.
+//!
+//! The closed-loop drivers (each Domain Explorer process keeps exactly one
+//! request outstanding) measure saturation ceilings, but a deployment is
+//! sized against *offered* load: users do not wait for the fleet to drain
+//! before searching. An [`ArrivalSource`] decouples the request stream
+//! from the serving system: requests carry their own arrival timestamps,
+//! and the coordinator/cluster layers report **offered vs achieved**
+//! throughput — the gap (plus SLA drops) is what provisioning must close
+//! (§6.1's imbalance discussion; the provisioning-for-throughput framing
+//! of Jiang et al.).
+//!
+//! Two deterministic sources:
+//!
+//! * [`PoissonSource`] — a seeded Poisson process of MCT requests, each a
+//!   single-station batch drawn from the finite flight schedule
+//!   ([`QueryFactory`]), station popularity zipf-skewed. The workhorse for
+//!   saturation sweeps and router-policy experiments.
+//! * [`TraceSource`] — replay of a [`ProductionTrace`]: user queries
+//!   arrive as a Poisson stream, each expanding into its §5.2
+//!   required-TS-sized MCT requests separated by a per-user-query think
+//!   time (the Domain Explorer digesting the previous reply).
+
+use crate::prng::Rng;
+use crate::rules::types::{MctQuery, World};
+
+use super::{ProductionTrace, QueryFactory};
+
+/// One MCT request entering the system at `at_us` (µs since stream start).
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub at_us: f64,
+    /// Originating user query (0 for synthetic sources without one).
+    pub user_query: u32,
+    pub queries: Vec<MctQuery>,
+}
+
+impl Arrival {
+    /// Routing key for station-sharded policies: the first query's
+    /// station. [`PoissonSource`] requests are single-station by
+    /// construction, so the key is exact there; [`TraceSource`] batches
+    /// can span the stations of several travel solutions, for which this
+    /// is the lead-connection approximation (cache affinity degrades
+    /// gracefully toward round-robin as batches get more mixed).
+    pub fn station(&self) -> u32 {
+        self.queries.first().map(|q| q.station).unwrap_or(0)
+    }
+}
+
+/// A finite, deterministic, time-stamped stream of MCT requests.
+pub trait ArrivalSource: Send {
+    /// Next arrival in non-decreasing `at_us` order; `None` when drained.
+    fn next_arrival(&mut self) -> Option<Arrival>;
+
+    /// Offered load over the arrival window, MCT queries / second.
+    fn offered_qps(&self) -> f64;
+
+    /// Total requests this source emits over its lifetime.
+    fn total_requests(&self) -> usize;
+
+    fn label(&self) -> String;
+
+    /// Drain into a service-time schedule `(arrival µs, batch size)` for
+    /// the discrete-event simulator, which needs timings and sizes but no
+    /// payloads.
+    fn schedule(&mut self) -> Vec<(f64, usize)> {
+        let mut out = Vec::with_capacity(self.total_requests());
+        while let Some(a) = self.next_arrival() {
+            out.push((a.at_us, a.queries.len()));
+        }
+        out
+    }
+}
+
+/// Seeded open-loop Poisson request stream over the flight schedule.
+pub struct PoissonSource {
+    rng: Rng,
+    factory: QueryFactory,
+    world: World,
+    seed: u64,
+    rate_rps: f64,
+    batch_per_request: usize,
+    airport_skew: f64,
+    total: usize,
+    emitted: usize,
+    clock_us: f64,
+}
+
+impl PoissonSource {
+    /// `rate_rps` requests/second, each carrying `batch_per_request`
+    /// queries at one zipf-chosen station, `n_requests` total.
+    pub fn new(
+        world: &World,
+        seed: u64,
+        rate_rps: f64,
+        batch_per_request: usize,
+        n_requests: usize,
+    ) -> PoissonSource {
+        assert!(rate_rps > 0.0, "arrival rate must be positive");
+        PoissonSource {
+            rng: Rng::new(seed ^ 0x0A55_0A55),
+            factory: QueryFactory::new(world, seed, 160),
+            world: world.clone(),
+            seed,
+            rate_rps,
+            batch_per_request: batch_per_request.max(1),
+            airport_skew: 1.05,
+            total: n_requests,
+            emitted: 0,
+            clock_us: 0.0,
+        }
+    }
+
+    /// Override the station-popularity skew (higher ⇒ hotter hubs; the
+    /// router-policy experiments use this to stress sharded routing).
+    pub fn with_airport_skew(mut self, skew: f64) -> PoissonSource {
+        self.airport_skew = skew;
+        self
+    }
+
+    /// Rebuild the flight schedule with `mean` legs per station. Fewer
+    /// legs ⇒ a denser repeat structure (the same connections recur far
+    /// more often) — the knob the cache-affinity experiments turn.
+    pub fn with_mean_legs(mut self, mean: usize) -> PoissonSource {
+        self.factory = QueryFactory::new(&self.world, self.seed, mean);
+        self
+    }
+}
+
+impl ArrivalSource for PoissonSource {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        if self.emitted >= self.total {
+            return None;
+        }
+        // Inverse-CDF exponential inter-arrival, seeded ⇒ reproducible.
+        let u = self.rng.f64();
+        self.clock_us += -(1.0 - u).ln() / self.rate_rps * 1e6;
+        let station = self.rng.zipf(self.world.airports.len(), self.airport_skew) as u32;
+        let queries = (0..self.batch_per_request)
+            .map(|_| self.factory.query(&mut self.rng, &self.world, station))
+            .collect();
+        let id = self.emitted as u32;
+        self.emitted += 1;
+        Some(Arrival { at_us: self.clock_us, user_query: id, queries })
+    }
+
+    fn offered_qps(&self) -> f64 {
+        self.rate_rps * self.batch_per_request as f64
+    }
+
+    fn total_requests(&self) -> usize {
+        self.total
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "poisson λ={:.0}/s ×{}q ({} req)",
+            self.rate_rps, self.batch_per_request, self.total
+        )
+    }
+}
+
+/// Replay of a production trace: user queries arrive Poisson at
+/// `uq_per_s`; within one user query, consecutive MCT requests (the §5.2
+/// required-TS-sized batches) are separated by `think_us` of Domain
+/// Explorer work.
+pub struct TraceSource {
+    arrivals: std::vec::IntoIter<Arrival>,
+    total: usize,
+    offered_qps: f64,
+    label: String,
+}
+
+impl TraceSource {
+    pub fn new(trace: &ProductionTrace, seed: u64, uq_per_s: f64, think_us: f64) -> TraceSource {
+        assert!(uq_per_s > 0.0, "user-query rate must be positive");
+        let mut rng = Rng::new(seed ^ 0x7_2ACE);
+        let mut arrivals: Vec<Arrival> = Vec::new();
+        let mut clock_us = 0.0f64;
+        let mut total_queries = 0usize;
+        for uq in &trace.queries {
+            let u = rng.f64();
+            clock_us += -(1.0 - u).ln() / uq_per_s * 1e6;
+            // §5.2 batching: one request per `required_ts` travel
+            // solutions; direct TS's consume quota but add no queries.
+            // Open-loop replay offers every batch (validity is not known
+            // until the replies return).
+            let mut offset = 0usize;
+            let mut batch: Vec<MctQuery> = Vec::new();
+            let mut ts_in_batch = 0usize;
+            let mut flush =
+                |batch: &mut Vec<MctQuery>, offset: &mut usize, arrivals: &mut Vec<Arrival>| {
+                    if batch.is_empty() {
+                        return;
+                    }
+                    total_queries += batch.len();
+                    arrivals.push(Arrival {
+                        at_us: clock_us + *offset as f64 * think_us,
+                        user_query: uq.id,
+                        queries: std::mem::take(batch),
+                    });
+                    *offset += 1;
+                };
+            for ts in &uq.solutions {
+                batch.extend_from_slice(&ts.mct_queries);
+                ts_in_batch += 1;
+                if ts_in_batch >= uq.required_ts {
+                    flush(&mut batch, &mut offset, &mut arrivals);
+                    ts_in_batch = 0;
+                }
+            }
+            flush(&mut batch, &mut offset, &mut arrivals);
+        }
+        // Think-time offsets can leapfrog later user queries: restore
+        // global time order (stable tie-break on the original position).
+        arrivals.sort_by(|a, b| a.at_us.partial_cmp(&b.at_us).unwrap());
+        let window_s = (arrivals.last().map(|a| a.at_us).unwrap_or(0.0) / 1e6).max(1e-9);
+        let total = arrivals.len();
+        TraceSource {
+            arrivals: arrivals.into_iter(),
+            total,
+            offered_qps: total_queries as f64 / window_s,
+            label: format!("trace λ={uq_per_s:.0} uq/s think={think_us:.0}µs ({total} req)"),
+        }
+    }
+}
+
+impl ArrivalSource for TraceSource {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        self.arrivals.next()
+    }
+
+    fn offered_qps(&self) -> f64 {
+        self.offered_qps
+    }
+
+    fn total_requests(&self) -> usize {
+        self.total
+    }
+
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::generator::{generate_world, GeneratorConfig};
+    use crate::workload::{generate_trace, TraceConfig};
+
+    fn world() -> World {
+        generate_world(&GeneratorConfig::small(3, 10))
+    }
+
+    #[test]
+    fn poisson_is_seeded_deterministic() {
+        let w = world();
+        let mut a = PoissonSource::new(&w, 42, 10_000.0, 16, 200);
+        let mut b = PoissonSource::new(&w, 42, 10_000.0, 16, 200);
+        loop {
+            match (a.next_arrival(), b.next_arrival()) {
+                (None, None) => break,
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.at_us, y.at_us);
+                    assert_eq!(x.queries, y.queries);
+                }
+                _ => panic!("streams diverged in length"),
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_rate_and_ordering() {
+        let w = world();
+        let mut s = PoissonSource::new(&w, 7, 1_000.0, 4, 2_000);
+        let mut last = 0.0;
+        let mut last_at = 0.0;
+        let mut n = 0;
+        while let Some(a) = s.next_arrival() {
+            assert!(a.at_us >= last, "arrivals must be time-ordered");
+            assert_eq!(a.queries.len(), 4);
+            assert!(a.queries.iter().all(|q| q.station == a.station()));
+            last = a.at_us;
+            last_at = a.at_us;
+            n += 1;
+        }
+        assert_eq!(n, 2_000);
+        // Mean inter-arrival ≈ 1/λ = 1 000 µs (loose statistical bound).
+        let mean_gap = last_at / 2_000.0;
+        assert!((800.0..1200.0).contains(&mean_gap), "mean gap {mean_gap}");
+        assert_eq!(s.offered_qps(), 4_000.0);
+    }
+
+    #[test]
+    fn schedule_matches_stream() {
+        let w = world();
+        let sched = PoissonSource::new(&w, 9, 5_000.0, 8, 100).schedule();
+        assert_eq!(sched.len(), 100);
+        assert!(sched.iter().all(|&(_, n)| n == 8));
+        assert!(sched.windows(2).all(|pair| pair[0].0 <= pair[1].0));
+    }
+
+    #[test]
+    fn trace_source_offers_every_mct_query() {
+        let w = world();
+        let trace = generate_trace(&TraceConfig::scaled(5, 40, 60.0), &w);
+        let mut s = TraceSource::new(&trace, 11, 500.0, 50.0);
+        let total_req = s.total_requests();
+        let mut queries = 0;
+        let mut reqs = 0;
+        let mut last = 0.0;
+        while let Some(a) = s.next_arrival() {
+            assert!(a.at_us >= last);
+            last = a.at_us;
+            queries += a.queries.len();
+            reqs += 1;
+        }
+        assert_eq!(reqs, total_req);
+        // Open-loop replay offers the full trace, nothing lost or invented.
+        assert_eq!(queries, trace.stats().mct_queries);
+        assert!(s.offered_qps() > 0.0);
+    }
+
+    #[test]
+    fn trace_source_is_deterministic() {
+        let w = world();
+        let trace = generate_trace(&TraceConfig::scaled(6, 20, 40.0), &w);
+        let a = TraceSource::new(&trace, 3, 800.0, 25.0).schedule();
+        let b = TraceSource::new(&trace, 3, 800.0, 25.0).schedule();
+        assert_eq!(a, b);
+    }
+}

@@ -7,8 +7,10 @@
 //! spawn **1.24** MCT queries on average; at most five connecting airports
 //! per TS (§2.2); the engine explores up to **1 500** TS's per user query.
 
+mod arrivals;
 mod trace;
 
+pub use arrivals::{Arrival, ArrivalSource, PoissonSource, TraceSource};
 pub use trace::{
     generate_trace, ProductionTrace, TraceConfig, TraceStats, TravelSolution, UserQuery,
 };

@@ -1,0 +1,129 @@
+//! Fleet-layer integration: the §6.1 deployment result end-to-end —
+//! measured per-node saturation → fleet plan → the ≈6× cloud-instance
+//! multiplier and 2.5–3× cost blow-up — plus the router-policy
+//! conservation invariant and the sim-vs-real cluster cross-validation.
+
+use erbium_search::backend::BackendFactory;
+use erbium_search::cluster::sim::{measure_node_saturation_qps, sim_arrivals};
+use erbium_search::cluster::{
+    simulate_cluster, AdmissionPolicy, Cluster, ClusterConfig, ClusterSimConfig, RoutePolicy,
+};
+use erbium_search::coordinator::{
+    cross_validate_cluster_policies, AggregationPolicy, PipelineConfig, Topology,
+};
+use erbium_search::costmodel::{
+    catalog, fleet_cost_usd, fleet_mct_demand_qps, freed_server_count, plan_fleet,
+    FleetBottleneck, DEFAULT_UQ_PER_S, DE_SERVERS, DE_VCPUS,
+};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::rules::standard::StandardVersion;
+use erbium_search::testing::fixture::compile_fixture;
+use erbium_search::workload::PoissonSource;
+
+fn fixture() -> (BackendFactory, erbium_search::rules::types::World) {
+    let f = compile_fixture(2211, 300, StandardVersion::V2, HardwareConfig::v2_aws(4));
+    (f.native_factory(), f.world)
+}
+
+#[test]
+fn sec61_imbalance_derived_from_measured_saturation() {
+    // 1. Measure: one weak feeder starves the FPGA-class backend.
+    let nominal = ClusterSimConfig::v2_cloud(1, 1).kernel_model().saturation_qps();
+    let weak = measure_node_saturation_qps(1, 16_384, 300);
+    assert!(
+        weak < 0.35 * nominal,
+        "1 weak feeder must starve the kernel: {:.1} M of {:.1} M q/s",
+        weak / 1e6,
+        nominal / 1e6
+    );
+
+    // 2. Measure an f1.2xlarge-shaped node (8 vCPUs of feeder).
+    let f1_node = measure_node_saturation_qps(8, 16_384, 300);
+    assert!(f1_node > weak, "more feeders must not serve less");
+    assert!(f1_node <= nominal, "nothing exceeds the nominal kernel rate");
+
+    // 3. Provision the freed Domain-Explorer fleet from those measurements.
+    let reduced = freed_server_count(DE_SERVERS); // 244
+    let target = fleet_mct_demand_qps(DEFAULT_UQ_PER_S);
+    let plan = plan_fleet(catalog::AWS_F1_2XL, target, f1_node, reduced * DE_VCPUS);
+
+    // Throughput-wise a handful of nodes would do; CPU capacity binds.
+    assert!(plan.units_for_throughput <= 3, "got {}", plan.units_for_throughput);
+    assert_eq!(plan.bottleneck, FleetBottleneck::CpuCapacity);
+    assert_eq!(plan.units, 1464, "Table 2's f1.2xlarge count, now derived");
+
+    // 4. The §6.1 headlines fall out: ≈6 instances per replaced server,
+    //    2.5–3× more expensive than the CPU-only cloud fleet.
+    let multiplier = plan.multiplier_vs(reduced);
+    assert!((5.9..6.1).contains(&multiplier), "multiplier {multiplier}");
+    let ratio = plan.total_usd / fleet_cost_usd(catalog::AWS_C5_12XL, DE_SERVERS);
+    assert!((2.8..3.4).contains(&ratio), "AWS blow-up {ratio}");
+    let np = plan_fleet(catalog::AZURE_NP10S, target, f1_node, reduced * DE_VCPUS);
+    let np_ratio = np.total_usd / fleet_cost_usd(catalog::AZURE_F48S, DE_SERVERS);
+    assert!((2.3..2.8).contains(&np_ratio), "Azure blow-up {np_ratio}");
+}
+
+#[test]
+fn router_policies_conserve_requests_in_both_realisations() {
+    let (factory, world) = fixture();
+    let node = PipelineConfig::new(Topology::new(2, 1, 1, 4))
+        .with_aggregation(AggregationPolicy::DrainQueue);
+    for route in [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::JoinShortestQueue,
+        RoutePolicy::StationSharded,
+    ] {
+        // Real threaded cluster under a capped burst.
+        let cfg = ClusterConfig::new(3, node)
+            .with_route(route)
+            .with_admission(AdmissionPolicy::QueueCap(16));
+        let mut src = PoissonSource::new(&world, 31, 1e7, 24, 300);
+        let real = Cluster::new(cfg, factory.clone()).run(&mut src).unwrap();
+        assert!(
+            real.conserves_requests(),
+            "real {route:?}: {} != {} + {}",
+            real.requests,
+            real.completed,
+            real.dropped
+        );
+        assert_eq!(real.completed_queries + real.dropped_queries, 300 * 24);
+
+        // Simulated cluster over the same stream.
+        let mut src = PoissonSource::new(&world, 31, 1e7, 24, 300);
+        let arrivals = sim_arrivals(&mut src, false);
+        let sim_cfg = ClusterSimConfig::v2_cloud(3, 1)
+            .with_route(route)
+            .with_admission(AdmissionPolicy::QueueCap(16));
+        let sim = simulate_cluster(&sim_cfg, &arrivals);
+        assert!(sim.conserves_requests(), "sim {route:?}");
+        assert_eq!(sim.completed_queries + sim.dropped_queries, 300 * 24);
+    }
+}
+
+#[test]
+fn sim_and_real_cluster_agree_on_first_saturating_policy() {
+    // Station-sharded routing concentrates the zipf station mass, so at a
+    // load round-robin absorbs comfortably the sharded hot replica is over
+    // capacity and sheds first — in both realisations. Forward aggregation
+    // keeps one engine call per request, so queueing (and the cap) bite.
+    let (factory, world) = fixture();
+    let node = PipelineConfig::new(Topology::new(2, 1, 1, 4));
+    let cluster = ClusterConfig::new(4, node).with_admission(AdmissionPolicy::QueueCap(12));
+    let cv = cross_validate_cluster_policies(cluster, factory, &world, 47, 24, 600).unwrap();
+    assert!(
+        cv.sim_sharded.dropped > cv.sim_rr.dropped,
+        "sim: sharded must saturate first ({} !> {})",
+        cv.sim_sharded.dropped,
+        cv.sim_rr.dropped
+    );
+    assert!(
+        cv.real_sharded.dropped > cv.real_rr.dropped,
+        "real: sharded must saturate first ({} !> {})",
+        cv.real_sharded.dropped,
+        cv.real_rr.dropped
+    );
+    assert!(cv.agree_on_first_saturating(), "{}", cv.summary());
+    for r in [&cv.sim_rr, &cv.sim_sharded, &cv.real_rr, &cv.real_sharded] {
+        assert!(r.conserves_requests());
+    }
+}
