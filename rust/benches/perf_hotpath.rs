@@ -1,15 +1,28 @@
-//! §Perf — hot-path microbenchmarks feeding EXPERIMENTS.md §Perf:
+//! §Perf — the match-hot-path throughput harness.
 //!
-//! * L3: native NFA evaluation rate (the bulk-sweep engine), the real
-//!   encoder, and the CPU baseline;
-//! * L1/L2 via PJRT: XLA artifact execution per batch (requires
-//!   `artifacts/`; skipped otherwise).
+//! Measures the CPU *feeder* (encoder + sparse NFA walk) three ways on the
+//! Fig 12 replay workload — scalar (per-query, allocating), batch
+//! (CSR arena + reused scratch), and sharded (multi-core batch split) —
+//! plus the CPU baseline and the `MatchBackend` dispatch surface, and
+//! re-derives the §6.1 feeder-saturation point from the measured numbers:
+//! how many feeder cores it takes to saturate the modeled FPGA node under
+//! each feeder implementation.
+//!
+//! Emits machine-readable `BENCH_hotpath.json` (override the path with
+//! `BENCH_OUT`) — the repo's perf-trajectory baseline, uploaded as a CI
+//! artifact by the bench-smoke step. `BENCH_SMOKE=1` shrinks the rule set
+//! and budgets for CI.
+//!
+//! The harness *asserts* the batch feeder is no slower than the scalar one
+//! (ratio ≥ 1): the batch path strictly removes work (two bit-set
+//! allocations and one encode `Vec` per query), so a regression here means
+//! the hot path picked up a real cost.
 
 use erbium_search::backend::{CpuBackend, MatchBackend};
-use erbium_search::benchkit::{fmt_qps, measure, print_table};
-use erbium_search::encoder::QueryEncoder;
-use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
+use erbium_search::benchkit::{fmt_qps, measure, print_table, write_json, Json};
 use erbium_search::cpu_baseline::CpuBaseline;
+use erbium_search::encoder::{EncodedBatch, QueryEncoder};
+use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel, NativeEvaluator};
 use erbium_search::nfa::constraint_gen::HardwareConfig;
 use erbium_search::nfa::memory::NfaImage;
 use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
@@ -17,87 +30,112 @@ use erbium_search::prng::Rng;
 use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
 use erbium_search::rules::standard::{Schema, StandardVersion};
 use erbium_search::runtime::Runtime;
-use erbium_search::workload::random_query;
+use erbium_search::workload::QueryFactory;
 
 fn main() {
-    let gen_cfg = GeneratorConfig { n_rules: 20_000, ..GeneratorConfig::default() };
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (n_rules, n_queries, budget_scale) =
+        if smoke { (2_000, 2_048, 0.1) } else { (20_000, 8_192, 1.0) };
+    let budget = |ms: f64| ms * budget_scale;
+
+    let gen_cfg = GeneratorConfig { n_rules, ..GeneratorConfig::default() };
     let world = generate_world(&gen_cfg);
     let schema = Schema::for_version(StandardVersion::V2);
     let rs = generate_rule_set(&gen_cfg, &world, StandardVersion::V2);
     let (nfa, cstats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
     let model = FpgaModel::new(HardwareConfig::v2_aws(4), cstats.depth);
-    let engine =
-        ErbiumEngine::new(nfa.clone(), model, Backend::Native, 28, 64).expect("engine");
+    let native = NativeEvaluator::new(nfa.clone());
     let cpu = CpuBaseline::new(schema.clone(), &rs);
     let enc = QueryEncoder::new(&nfa.plan, 28);
+    let shards = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 8);
 
+    // Fig 12 replay workload: schedule-drawn queries under zipf station
+    // skew — hot connections recur, exactly what the production trace
+    // replays against the two flows.
+    let factory = QueryFactory::new(&world, 5, 40);
     let mut rng = Rng::new(0xBEEF);
-    let queries: Vec<_> = (0..8192)
+    let queries: Vec<_> = (0..n_queries)
         .map(|_| {
-            let st = rng.index(gen_cfg.n_airports) as u32;
-            random_query(&mut rng, &world, st)
+            let st = rng.zipf(world.airports.len(), 1.1) as u32;
+            factory.query(&mut rng, &world, st)
         })
         .collect();
+    let nq = n_queries as f64;
+    let qps = |p50_ns: f64| nq / (p50_ns * 1e-9);
 
     let mut rows = Vec::new();
+    let mut row = |name: &str, st_p50_ns: f64| {
+        let r = qps(st_p50_ns);
+        rows.push(vec![
+            name.into(),
+            format!("{:.0} ns/query", st_p50_ns / nq),
+            fmt_qps(r),
+        ]);
+        r
+    };
 
-    // Encoder.
-    let mut buf = Vec::new();
-    let st = measure(200.0, || {
-        enc.encode_batch(&queries, 8192, &mut buf);
-        std::hint::black_box(&buf);
+    // Encoder alone: the struct-of-arrays in-place batch fill.
+    let mut ebatch = EncodedBatch::default();
+    let st = measure(budget(200.0), || {
+        enc.encode_batch_into(&queries, &mut ebatch);
+        std::hint::black_box(&ebatch);
     });
-    rows.push(vec![
-        "L3 encoder (encode_batch)".into(),
-        format!("{:.1} ns/query", st.p50_ns / 8192.0),
-        fmt_qps(8192.0 / (st.p50_ns * 1e-9)),
-    ]);
+    let encoder_qps = row("encoder encode_batch_into", st.p50_ns);
 
-    // Native NFA evaluation (bulk sweep engine).
-    let st = measure(400.0, || {
-        std::hint::black_box(engine.evaluate_batch(&queries).unwrap());
+    // Scalar feeder: per-query encode (fresh Vec) + per-query walk (fresh
+    // bit-sets) — the pre-optimisation hot path, kept as the baseline the
+    // speedup is measured against.
+    let st = measure(budget(400.0), || {
+        for q in &queries {
+            let v = enc.encode(q);
+            std::hint::black_box(native.evaluate_encoded(q.station, &v));
+        }
     });
-    rows.push(vec![
-        "native NFA evaluate_batch (8k)".into(),
-        format!("{:.0} ns/query", st.p50_ns / 8192.0),
-        fmt_qps(8192.0 / (st.p50_ns * 1e-9)),
-    ]);
+    let scalar_qps = row("native scalar (alloc per query)", st.p50_ns);
+    let scalar_min_ns = st.min_ns;
 
-    // CPU baseline.
-    let st = measure(400.0, || {
-        std::hint::black_box(cpu.evaluate_batch(&queries));
+    // Batch feeder: one in-place encode + one walk with reused scratch.
+    let mut scratch = native.scratch();
+    let mut out = Vec::new();
+    let st = measure(budget(400.0), || {
+        enc.encode_batch_into(&queries, &mut ebatch);
+        native.evaluate_batch(&ebatch, &mut scratch, &mut out);
+        std::hint::black_box(&out);
     });
-    rows.push(vec![
-        "CPU baseline evaluate_batch (8k)".into(),
-        format!("{:.0} ns/query", st.p50_ns / 8192.0),
-        fmt_qps(8192.0 / (st.p50_ns * 1e-9)),
-    ]);
+    let batch_qps = row("native evaluate_batch (reused scratch)", st.p50_ns);
+    let batch_min_ns = st.min_ns;
+
+    // Sharded feeder: same batch split across cores.
+    let st = measure(budget(400.0), || {
+        enc.encode_batch_into(&queries, &mut ebatch);
+        native.evaluate_batch_sharded(&ebatch, shards, &mut out);
+        std::hint::black_box(&out);
+    });
+    let sharded_qps = row(&format!("native evaluate_batch_sharded (×{shards})"), st.p50_ns);
+
+    // CPU baseline (§5.2), batch-into path with sharded airport caches.
+    let st = measure(budget(400.0), || {
+        cpu.evaluate_batch_into(&queries, &mut out);
+        std::hint::black_box(&out);
+    });
+    let cpu_qps = row("CPU baseline evaluate_batch_into", st.p50_ns);
 
     // The MatchBackend surface the pipeline actually calls through: same
-    // work as above plus dynamic dispatch and the service-time model —
-    // the cost of the abstraction must stay in the noise.
+    // work plus dynamic dispatch and the service-time model — the cost of
+    // the abstraction must stay in the noise.
+    let engine =
+        ErbiumEngine::new(nfa.clone(), model, Backend::Native, 28, 64).expect("engine");
     let backends: Vec<(&str, Box<dyn MatchBackend>)> = vec![
-        (
-            "dyn MatchBackend / fpga-native (8k)",
-            Box::new(
-                ErbiumEngine::new(nfa.clone(), model, Backend::Native, 28, 64)
-                    .expect("engine"),
-            ),
-        ),
-        (
-            "dyn MatchBackend / cpu (8k)",
-            Box::new(CpuBackend::new(schema.clone(), &rs)),
-        ),
+        ("dyn MatchBackend / fpga-native", Box::new(engine)),
+        ("dyn MatchBackend / cpu", Box::new(CpuBackend::new(schema.clone(), &rs))),
     ];
+    let mut dyn_qps = Vec::new();
     for (name, b) in &backends {
-        let st = measure(400.0, || {
-            std::hint::black_box(b.evaluate_batch_timed(&queries).unwrap());
+        let st = measure(budget(400.0), || {
+            b.evaluate_batch_timed_into(&queries, &mut out).unwrap();
+            std::hint::black_box(&out);
         });
-        rows.push(vec![
-            (*name).into(),
-            format!("{:.0} ns/query", st.p50_ns / 8192.0),
-            fmt_qps(8192.0 / (st.p50_ns * 1e-9)),
-        ]);
+        dyn_qps.push((*name, row(*name, st.p50_ns)));
     }
 
     // XLA path, if artifacts exist.
@@ -111,10 +149,10 @@ fn main() {
         let img = NfaImage::from_compiled(&nfa.partitions[pi], 28, 64).unwrap();
         let dev = exe.upload(&img).unwrap();
         let station = nfa.partitions[pi].station.unwrap();
-        let qs: Vec<_> = (0..1024).map(|_| random_query(&mut rng, &world, station)).collect();
+        let qs: Vec<_> = (0..1024).map(|_| factory.query(&mut rng, &world, station)).collect();
         let mut ebuf = Vec::new();
         enc.encode_batch(&qs, 1024, &mut ebuf);
-        let st = measure(1_500.0, || {
+        let st = measure(budget(1_500.0), || {
             std::hint::black_box(exe.execute(&ebuf, &dev).unwrap());
         });
         rows.push(vec![
@@ -122,28 +160,77 @@ fn main() {
             format!("{:.2} ms/batch", st.p50_ns / 1e6),
             fmt_qps(1024.0 / (st.p50_ns * 1e-9)),
         ]);
-
-        // Full engine path through partition routing.
-        let xeng = ErbiumEngine::new(
-            nfa.clone(),
-            model,
-            Backend::Xla { runtime: rt, batch_hint: 1024 },
-            28,
-            64,
-        )
-        .unwrap();
-        let sample: Vec<_> = queries.iter().take(2048).copied().collect();
-        let st = measure(2_000.0, || {
-            std::hint::black_box(xeng.evaluate_batch(&sample).unwrap());
-        });
-        rows.push(vec![
-            "XLA engine evaluate_batch (2k mixed)".into(),
-            format!("{:.2} ms", st.p50_ns / 1e6),
-            fmt_qps(2048.0 / (st.p50_ns * 1e-9)),
-        ]);
     } else {
         println!("artifacts missing — XLA rows skipped (run `make artifacts`)");
     }
 
-    print_table("§Perf — hot-path microbenchmarks", &["path", "unit cost", "rate"], &rows);
+    print_table(
+        "§Perf — match hot path (Fig 12 replay workload)",
+        &["path", "unit cost", "rate"],
+        &rows,
+    );
+
+    // ---- §6.1 feeder-saturation knee, re-derived from measurements -----
+    // The modeled v2 cloud node saturates at `node_sat` q/s; a feeder core
+    // supplying `f` q/s starves it unless ceil(node_sat / f) cores feed it.
+    // This is the paper's observation that the accelerator's gains hinge on
+    // the software side submitting requests optimally.
+    let node_sat = model.saturation_qps();
+    let feeders = |f: f64| (node_sat / f).ceil() as i64;
+    println!("\n§6.1 feeder saturation (modeled node saturates at {}):", fmt_qps(node_sat));
+    println!(
+        "  scalar feeder: {} q/s → {} cores to saturate",
+        fmt_qps(scalar_qps),
+        feeders(scalar_qps)
+    );
+    println!(
+        "  batch feeder:  {} q/s → {} cores to saturate ({:.2}× speedup)",
+        fmt_qps(batch_qps),
+        feeders(batch_qps),
+        batch_qps / scalar_qps
+    );
+    println!(
+        "  sharded ×{shards}:    {} q/s → {} feeder units to saturate",
+        fmt_qps(sharded_qps),
+        feeders(sharded_qps)
+    );
+
+    let json = Json::obj([
+        ("bench", Json::Str("hotpath".into())),
+        ("mode", Json::Str(if smoke { "smoke" } else { "full" }.into())),
+        ("n_rules", Json::Int(n_rules as i64)),
+        ("n_queries", Json::Int(n_queries as i64)),
+        ("shards", Json::Int(shards as i64)),
+        ("encoder_qps", Json::Num(encoder_qps)),
+        ("scalar_qps", Json::Num(scalar_qps)),
+        ("batch_qps", Json::Num(batch_qps)),
+        ("sharded_qps", Json::Num(sharded_qps)),
+        ("batch_speedup", Json::Num(batch_qps / scalar_qps)),
+        ("sharded_speedup", Json::Num(sharded_qps / scalar_qps)),
+        ("cpu_baseline_qps", Json::Num(cpu_qps)),
+        (
+            "dyn_backend_qps",
+            Json::Obj(
+                dyn_qps.iter().map(|(n, q)| (n.to_string(), Json::Num(*q))).collect(),
+            ),
+        ),
+        ("modeled_node_saturation_qps", Json::Num(node_sat)),
+        ("feeder_cores_to_saturate_scalar", Json::Int(feeders(scalar_qps))),
+        ("feeder_cores_to_saturate_batch", Json::Int(feeders(batch_qps))),
+        ("feeder_units_to_saturate_sharded", Json::Int(feeders(sharded_qps))),
+    ]);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    write_json(&out_path, &json).expect("write bench artifact");
+
+    // Sanity bound, not a tuned threshold: batching strictly removes
+    // per-query work, so the ratio must not dip below 1. The assert
+    // compares *minimum* iteration times — noise (frequency scaling,
+    // neighbors on a shared runner) only ever adds time, so mins are the
+    // stable comparator; the p50-based q/s stay in the report and JSON.
+    assert!(
+        batch_min_ns <= scalar_min_ns,
+        "batch path slower than scalar even at best-case timing: \
+         {batch_min_ns:.0} ns > {scalar_min_ns:.0} ns per pass — hot-path regression"
+    );
 }

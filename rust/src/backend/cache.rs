@@ -47,11 +47,21 @@ pub fn canonicalise(q: &MctQuery) -> MctQuery {
     c
 }
 
+/// Canonicalise **and** hash in one pass — the `(canonical form, key)`
+/// pair every cache lookup needs, computed once and reused verbatim on
+/// both the probe and the insert path (the canonical form doubles as the
+/// 64-bit-collision guard stored next to the decision).
+pub fn canonical_key(q: &MctQuery) -> (MctQuery, u64) {
+    let canon = canonicalise(q);
+    let key = key_of_canonical(&canon);
+    (canon, key)
+}
+
 /// Stable 64-bit key of the canonicalised query. `DefaultHasher::new()`
 /// is fixed-key SipHash, so keys are deterministic across runs — the
 /// cluster simulator relies on that to replay identical cache behaviour.
 pub fn query_key(q: &MctQuery) -> u64 {
-    key_of_canonical(&canonicalise(q))
+    canonical_key(q).1
 }
 
 /// Key of an already-canonicalised query (avoids re-canonicalising on the
@@ -219,23 +229,32 @@ impl MatchBackend for CachedBackend {
         &self,
         queries: &[MctQuery],
     ) -> Result<(Vec<MctDecision>, BatchTiming)> {
+        let mut out = Vec::with_capacity(queries.len());
+        let timing = self.evaluate_batch_timed_into(queries, &mut out)?;
+        Ok((out, timing))
+    }
+
+    fn evaluate_batch_timed_into(
+        &self,
+        queries: &[MctQuery],
+        out: &mut Vec<MctDecision>,
+    ) -> Result<BatchTiming> {
         let mut cache = self.cache.lock().unwrap();
         self.counters.lookups.fetch_add(queries.len() as u64, Ordering::Relaxed);
-        let mut out: Vec<Option<MctDecision>> = Vec::with_capacity(queries.len());
+        // Every row starts as a placeholder; hits overwrite now, misses are
+        // overwritten from the inner batch below — so no `Option` lane.
+        out.clear();
+        out.resize(queries.len(), MctDecision::no_match());
         // Misses keep their (index, key, canonical form) so the fill loop
         // never re-canonicalises or re-hashes.
         let mut misses: Vec<(usize, u64, MctQuery)> = Vec::new();
         for (i, q) in queries.iter().enumerate() {
-            let canon = canonicalise(q);
-            let key = key_of_canonical(&canon);
+            let (canon, key) = canonical_key(q);
             // Guard against 64-bit key collisions: a slot only answers for
             // the exact canonical query it stores.
             match cache.get(key) {
-                Some((stored, d)) if *stored == canon => out.push(Some(*d)),
-                _ => {
-                    out.push(None);
-                    misses.push((i, key, canon));
-                }
+                Some((stored, d)) if *stored == canon => out[i] = *d,
+                _ => misses.push((i, key, canon)),
             }
         }
         let hits = (queries.len() - misses.len()) as u64;
@@ -253,16 +272,27 @@ impl MatchBackend for CachedBackend {
             // either way; it keeps the inner backend's view untouched).
             let miss_queries: Vec<MctQuery> =
                 misses.iter().map(|&(i, _, _)| queries[i]).collect();
-            let (ds, inner_t) = self.inner.evaluate_batch_timed(&miss_queries)?;
-            anyhow::ensure!(
-                ds.len() == misses.len(),
-                "inner backend returned {} decisions for {} misses",
-                ds.len(),
-                misses.len()
-            );
+            // Trait error contract: a failed call leaves `out` empty, never
+            // part-hit part-placeholder.
+            let inner = self.inner.evaluate_batch_timed(&miss_queries);
+            let (ds, inner_t) = match inner {
+                Ok(r) if r.0.len() == misses.len() => r,
+                Ok(r) => {
+                    out.clear();
+                    anyhow::bail!(
+                        "inner backend returned {} decisions for {} misses",
+                        r.0.len(),
+                        misses.len()
+                    );
+                }
+                Err(e) => {
+                    out.clear();
+                    return Err(e);
+                }
+            };
             for (&(i, key, canon), d) in misses.iter().zip(&ds) {
                 cache.insert(key, (canon, *d));
-                out[i] = Some(*d);
+                out[i] = *d;
             }
             timing = BatchTiming {
                 setup_us: inner_t.setup_us,
@@ -272,7 +302,7 @@ impl MatchBackend for CachedBackend {
                 total_us: inner_t.total_us + hit_us,
             };
         }
-        Ok((out.into_iter().map(|d| d.expect("every query decided")).collect(), timing))
+        Ok(timing)
     }
 
     fn kind(&self) -> BackendKind {
@@ -409,6 +439,31 @@ mod tests {
         assert!(hits >= 400, "expected the warm pass to hit, got {hits}");
         assert!(counters.hit_rate() >= 0.5);
         assert_eq!(cached.label(), "cpu+cache");
+    }
+
+    #[test]
+    fn failed_inner_call_leaves_output_empty() {
+        // The `_into` error contract: callers reusing one decisions buffer
+        // must never observe stale or placeholder rows after an Err.
+        struct Broken;
+        impl MatchBackend for Broken {
+            fn evaluate_batch_timed(
+                &self,
+                _queries: &[MctQuery],
+            ) -> Result<(Vec<MctDecision>, BatchTiming)> {
+                anyhow::bail!("board fell off the bus")
+            }
+            fn kind(&self) -> BackendKind {
+                BackendKind::FpgaNative
+            }
+        }
+        let cached =
+            CachedBackend::new(Box::new(Broken), 16, Arc::new(CacheCounters::default()));
+        let world = generate_world(&GeneratorConfig::small(5, 20));
+        let q = crate::workload::query_for_station(&world, 1, 2);
+        let mut out = vec![MctDecision::no_match(); 7];
+        assert!(cached.evaluate_batch_timed_into(&[q], &mut out).is_err());
+        assert!(out.is_empty(), "error contract: buffer left empty");
     }
 
     #[test]

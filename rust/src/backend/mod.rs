@@ -29,7 +29,8 @@
 pub mod cache;
 
 pub use cache::{
-    cached_factory, canonicalise, query_key, CacheCounters, CachedBackend, LruCache,
+    cached_factory, canonical_key, canonicalise, query_key, CacheCounters, CachedBackend,
+    LruCache,
 };
 
 use std::sync::Arc;
@@ -85,6 +86,27 @@ pub trait MatchBackend {
     fn evaluate_batch_timed(&self, queries: &[MctQuery])
         -> Result<(Vec<MctDecision>, BatchTiming)>;
 
+    /// Batch-first entry point: evaluate into a caller-owned buffer
+    /// (cleared first) and return only the timing. Engine servers call this
+    /// so whole aggregated batches flow through without re-encoding or
+    /// per-query allocation; backends with an allocation-free internal
+    /// path override it (the default delegates to
+    /// [`Self::evaluate_batch_timed`]).
+    ///
+    /// Error contract: on `Err` the buffer is left **empty** — callers
+    /// reusing one buffer across calls must never read stale (or partial)
+    /// decisions after a failure.
+    fn evaluate_batch_timed_into(
+        &self,
+        queries: &[MctQuery],
+        out: &mut Vec<MctDecision>,
+    ) -> Result<BatchTiming> {
+        out.clear();
+        let (ds, timing) = self.evaluate_batch_timed(queries)?;
+        out.extend_from_slice(&ds);
+        Ok(timing)
+    }
+
     /// Capability/label surface.
     fn kind(&self) -> BackendKind;
 
@@ -115,6 +137,15 @@ impl MatchBackend for ErbiumEngine {
         queries: &[MctQuery],
     ) -> Result<(Vec<MctDecision>, BatchTiming)> {
         ErbiumEngine::evaluate_batch_timed(self, queries)
+    }
+
+    fn evaluate_batch_timed_into(
+        &self,
+        queries: &[MctQuery],
+        out: &mut Vec<MctDecision>,
+    ) -> Result<BatchTiming> {
+        self.evaluate_batch_into(queries, out)?;
+        Ok(self.model().batch_timing(queries.len()))
     }
 
     fn kind(&self) -> BackendKind {
@@ -192,20 +223,29 @@ impl MatchBackend for CpuBackend {
         &self,
         queries: &[MctQuery],
     ) -> Result<(Vec<MctDecision>, BatchTiming)> {
+        let mut out = Vec::with_capacity(queries.len());
+        let timing = self.evaluate_batch_timed_into(queries, &mut out)?;
+        Ok((out, timing))
+    }
+
+    fn evaluate_batch_timed_into(
+        &self,
+        queries: &[MctQuery],
+        out: &mut Vec<MctDecision>,
+    ) -> Result<BatchTiming> {
         let before = self.baseline.total_cache_hits();
-        let out = self.baseline.evaluate_batch(queries);
+        self.baseline.evaluate_batch_into(queries, out);
         let hits = self.baseline.total_cache_hits() - before;
         let walks = (queries.len() as u64).saturating_sub(hits);
         let compute_us = self.model.call_us(hits, walks);
         // No shell, no PCIe: the CPU answers in place.
-        let timing = BatchTiming {
+        Ok(BatchTiming {
             setup_us: 0.0,
             transfer_in_us: 0.0,
             compute_us,
             transfer_out_us: 0.0,
             total_us: compute_us,
-        };
-        Ok((out, timing))
+        })
     }
 
     fn kind(&self) -> BackendKind {
@@ -225,8 +265,22 @@ pub fn native_backend_factory(
     l_pad: usize,
     s_pad: usize,
 ) -> BackendFactory {
+    native_backend_factory_sharded(nfa, model, l_pad, s_pad, 1)
+}
+
+/// Like [`native_backend_factory`], but each built engine splits large
+/// batches across `shards` cores — the feeder-side parallelism knob of the
+/// §6.1 analysis (`replay --shards`).
+pub fn native_backend_factory_sharded(
+    nfa: PartitionedNfa,
+    model: FpgaModel,
+    l_pad: usize,
+    s_pad: usize,
+    shards: usize,
+) -> BackendFactory {
     Arc::new(move || {
-        let engine = ErbiumEngine::new(nfa.clone(), model, Backend::Native, l_pad, s_pad)?;
+        let engine = ErbiumEngine::new(nfa.clone(), model, Backend::Native, l_pad, s_pad)?
+            .with_shards(shards);
         Ok(Box::new(engine) as Box<dyn MatchBackend>)
     })
 }

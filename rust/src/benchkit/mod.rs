@@ -1,6 +1,8 @@
 //! Minimal benchmarking toolkit (criterion is not available offline): warm
-//! timing loops, robust statistics, and paper-style table printing shared
-//! by every `rust/benches/*` target.
+//! timing loops, robust statistics, paper-style table printing, and a tiny
+//! JSON emitter (serde is likewise unavailable) shared by every
+//! `rust/benches/*` target — machine-readable `BENCH_*.json` files are how
+//! the CI tracks the perf trajectory across PRs.
 
 use std::time::Instant;
 
@@ -94,6 +96,88 @@ pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
     }
 }
 
+/// Minimal JSON value for `BENCH_*.json` emission (no serde offline).
+#[derive(Debug, Clone)]
+pub enum Json {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<Json>),
+    /// Insertion-ordered object (stable output for diffable artifacts).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Convenience constructor for object literals.
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    fn escape(s: &str, out: &mut String) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            // JSON has no NaN/inf; emit null rather than an invalid token.
+            Json::Num(x) if !x.is_finite() => out.push_str("null"),
+            Json::Num(x) => out.push_str(&format!("{x}")),
+            Json::Int(x) => out.push_str(&format!("{x}")),
+            Json::Str(s) => Self::escape(s, out),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Self::escape(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.render_into(&mut s);
+        s
+    }
+}
+
+/// Write a JSON value to `path` (with a trailing newline) and echo the
+/// path, so bench logs say where the artifact landed.
+pub fn write_json(path: &str, value: &Json) -> std::io::Result<()> {
+    std::fs::write(path, value.render() + "\n")?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +197,27 @@ mod tests {
         assert_eq!(fmt_us(12.34), "12.3 µs");
         assert_eq!(fmt_us(12_340.0), "12.34 ms");
         assert_eq!(fmt_qps(32e6), "32.0 M q/s");
+    }
+
+    #[test]
+    fn json_renders_stably() {
+        let j = Json::obj([
+            ("bench", Json::Str("hotpath".into())),
+            ("qps", Json::Num(1234.5)),
+            ("n", Json::Int(8192)),
+            ("ok", Json::Bool(true)),
+            ("bad", Json::Num(f64::NAN)),
+            ("rows", Json::Arr(vec![Json::Int(1), Json::Int(2)])),
+        ]);
+        assert_eq!(
+            j.render(),
+            r#"{"bench":"hotpath","qps":1234.5,"n":8192,"ok":true,"bad":null,"rows":[1,2]}"#
+        );
+    }
+
+    #[test]
+    fn json_escapes_strings() {
+        let j = Json::Str("a\"b\\c\nd".into());
+        assert_eq!(j.render(), r#""a\"b\\c\nd""#);
     }
 }

@@ -1,0 +1,117 @@
+//! Shared bit-set helper for the match hot path.
+//!
+//! One dynamically-sized bit set over NFA states, used by the sparse
+//! evaluator ([`crate::erbium::NativeEvaluator`]) for active-state
+//! propagation and by tests as a plain set. Lives in its own module so the
+//! evaluator, the batch scratch ([`crate::erbium::EvalScratch`]) and the
+//! test suite share one definition instead of `#[cfg(test)]`-gated
+//! duplicates.
+
+/// Dynamically-sized bit set (width decided by the caller, so the CPU-side
+/// trie is not constrained by the hardware's `S` bound).
+#[derive(Debug, Clone, Default)]
+pub struct BitSet {
+    w: Vec<u64>,
+}
+
+impl BitSet {
+    /// An all-zero set able to hold bits `0..width`.
+    #[inline]
+    pub fn empty(width: usize) -> Self {
+        BitSet { w: vec![0; Self::words_for(width)] }
+    }
+
+    /// Zero every bit, keeping the allocation.
+    #[inline]
+    pub fn clear(&mut self) {
+        self.w.iter_mut().for_each(|x| *x = 0);
+    }
+
+    /// Zero only the first `n` words (bits `0..64n`). Hot-path variant for
+    /// callers that track how much of an over-sized scratch set is dirty —
+    /// clearing a shared max-width set in full per level would tax every
+    /// small partition.
+    #[inline]
+    pub fn clear_first_words(&mut self, n: usize) {
+        let n = n.min(self.w.len());
+        self.w[..n].iter_mut().for_each(|x| *x = 0);
+    }
+
+    /// Words needed to hold bits `0..width`.
+    #[inline]
+    pub fn words_for(width: usize) -> usize {
+        width.div_ceil(64).max(1)
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: u32) {
+        self.w[(i >> 6) as usize] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn get(&self, i: u32) -> bool {
+        self.w[(i >> 6) as usize] & (1u64 << (i & 63)) != 0
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.w.iter().all(|&x| x == 0)
+    }
+
+    /// Iterate set bits in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.w.iter().enumerate().flat_map(|(bi, &word)| {
+            let mut w = word;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros();
+                    w &= w - 1;
+                    Some((bi as u32) << 6 | b)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut b = BitSet::empty(256);
+        assert!(b.is_empty());
+        for i in [0u32, 63, 64, 130, 255] {
+            b.set(i);
+        }
+        assert!(b.get(64) && b.get(255) && !b.get(1));
+        let got: Vec<u32> = b.iter().collect();
+        assert_eq!(got, vec![0, 63, 64, 130, 255]);
+        b.clear();
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn clear_first_words_is_partial() {
+        let mut b = BitSet::empty(256);
+        b.set(3);
+        b.set(200);
+        b.clear_first_words(1);
+        assert!(!b.get(3) && b.get(200));
+        // Out-of-range word counts are clamped.
+        b.clear_first_words(1000);
+        assert!(b.is_empty());
+        assert_eq!(BitSet::words_for(0), 1);
+        assert_eq!(BitSet::words_for(64), 1);
+        assert_eq!(BitSet::words_for(65), 2);
+    }
+
+    #[test]
+    fn zero_width_still_holds_one_word() {
+        let b = BitSet::empty(0);
+        assert!(b.is_empty());
+        assert_eq!(b.iter().count(), 0);
+    }
+}

@@ -205,14 +205,22 @@ impl NodeCore {
                         Ok(r) => r,
                         Err(_) => break,
                     };
+                    // Per-call decisions buffer: it is moved into the reply
+                    // (the worker owns the decisions from then on), so its
+                    // capacity cannot persist here. What stays warm across
+                    // calls is the backend-internal scratch (encoded batch +
+                    // walker bit-sets) behind `evaluate_batch_timed_into`.
+                    let mut decisions: Vec<MctDecision> = Vec::new();
                     let b0 = Instant::now();
                     counters.engine_calls.fetch_add(1, Ordering::Relaxed);
-                    let msg = match backend.evaluate_batch_timed(&req.queries) {
-                        Ok((ds, timing)) => {
+                    let outcome =
+                        backend.evaluate_batch_timed_into(&req.queries, &mut decisions);
+                    let msg = match outcome {
+                        Ok(timing) => {
                             counters
                                 .modeled_ns
                                 .fetch_add((timing.total_us * 1e3) as u64, Ordering::Relaxed);
-                            Ok(ds)
+                            Ok(decisions)
                         }
                         Err(e) => {
                             counters.failed_calls.fetch_add(1, Ordering::Relaxed);
@@ -237,6 +245,10 @@ impl NodeCore {
             let etx = etx.clone();
             let counters = counters.clone();
             worker_handles.push(std::thread::spawn(move || {
+                // Per-request span lengths of the combined batch, reused
+                // across calls (the combined query vec itself moves into the
+                // engine request, so only the span bookkeeping can persist).
+                let mut spans: Vec<usize> = Vec::new();
                 loop {
                     // Round-robin dealer: whichever worker is free pulls the
                     // next request (asynchronous dealer semantics, §4.1).
@@ -262,10 +274,11 @@ impl NodeCore {
                     counters.agg_requests.fetch_add(pending.len(), Ordering::Relaxed);
 
                     // One combined submit to the board; XRT-style blocking.
-                    let mut combined: Vec<MctQuery> = Vec::new();
-                    let mut spans: Vec<usize> = Vec::with_capacity(pending.len());
+                    spans.clear();
+                    spans.extend(pending.iter().map(|req| req.queries.len()));
+                    let mut combined: Vec<MctQuery> =
+                        Vec::with_capacity(spans.iter().sum());
                     for req in &pending {
-                        spans.push(req.queries.len());
                         combined.extend_from_slice(&req.queries);
                     }
                     let combined_len = combined.len();

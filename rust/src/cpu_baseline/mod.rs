@@ -110,8 +110,12 @@ pub struct CpuBaseline {
     by_station: HashMap<u32, Vec<IndexedRule>>,
     /// Wildcard-station rules (consulted by every query).
     global: Vec<IndexedRule>,
-    /// station → cache (hottest airports only).
-    caches: std::sync::Mutex<HashMap<u32, AirportCache>>,
+    /// station → independently-locked cache (hottest airports only). The
+    /// map itself is fixed at construction, so a probe takes only its own
+    /// airport's lock — concurrent workers on different airports never
+    /// serialise (the global `Mutex<HashMap>` of the original version
+    /// funnelled every probe through one lock).
+    caches: HashMap<u32, std::sync::Mutex<AirportCache>>,
     /// Running hit total — O(1) to read, unlike [`Self::cache_stats`]
     /// which scans every per-station cache (service-time models read
     /// this per call, on the hot path).
@@ -164,7 +168,7 @@ impl CpuBaseline {
         let caches = hottest
             .into_iter()
             .take(CACHED_AIRPORTS)
-            .map(|(st, _)| (st, AirportCache::new()))
+            .map(|(st, _)| (st, std::sync::Mutex::new(AirportCache::new())))
             .collect();
         // The trie path reuses the NFA compiler (same shared-prefix
         // structure [15] built for the CPU, S capped higher since there is
@@ -185,7 +189,7 @@ impl CpuBaseline {
             schema,
             by_station,
             global,
-            caches: std::sync::Mutex::new(caches),
+            caches,
             total_hits: std::sync::atomic::AtomicU64::new(0),
             trie,
             trie_encoder,
@@ -239,11 +243,22 @@ impl CpuBaseline {
         }
     }
 
-    fn evaluate_uncached(&self, q: &MctQuery) -> MctDecision {
+    fn evaluate_uncached_with(
+        &self,
+        q: &MctQuery,
+        scratch: &mut crate::erbium::EvalScratch,
+    ) -> MctDecision {
         let mut enc = [0i32; 32];
         let l = self.trie_encoder.depth();
         self.trie_encoder.encode_into(q, &mut enc[..l]);
-        self.trie.evaluate_encoded(q.station, &enc[..l])
+        self.trie.evaluate_encoded_with(q.station, &enc[..l], scratch)
+    }
+
+    /// Fresh walker scratch for this baseline's trie; keep one per thread
+    /// and pass it to [`Self::evaluate_with`] /
+    /// [`Self::evaluate_batch_into`].
+    pub fn scratch(&self) -> crate::erbium::EvalScratch {
+        self.trie.scratch()
     }
 
     /// The pre-[15] flow: precision-sorted linear scan with early
@@ -266,35 +281,55 @@ impl CpuBaseline {
         best
     }
 
-    /// Evaluate one MCT query.
-    pub fn evaluate(&self, q: &MctQuery) -> MctDecision {
-        let key = Self::cache_key(q);
-        let mut caches = self.caches.lock().unwrap();
-        if let Some(cache) = caches.get_mut(&q.station) {
+    /// Evaluate one MCT query with caller-owned walker scratch. Probes
+    /// touch only the query's own airport lock (briefly — the trie walk
+    /// runs outside it), so concurrent workers scale across airports.
+    pub fn evaluate_with(
+        &self,
+        q: &MctQuery,
+        scratch: &mut crate::erbium::EvalScratch,
+    ) -> MctDecision {
+        if let Some(cell) = self.caches.get(&q.station) {
+            let key = Self::cache_key(q);
             let slot = (key as usize) % CACHE_SLOTS;
-            let (k, d) = cache.slots[slot];
-            if k == key {
-                cache.hits += 1;
-                self.total_hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                return d;
+            {
+                let mut cache = cell.lock().unwrap();
+                let (k, d) = cache.slots[slot];
+                if k == key {
+                    cache.hits += 1;
+                    self.total_hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    return d;
+                }
+                cache.misses += 1;
             }
-            cache.misses += 1;
-            drop(caches);
-            let d = self.evaluate_uncached(q);
-            let mut caches = self.caches.lock().unwrap();
-            if let Some(cache) = caches.get_mut(&q.station) {
-                cache.slots[slot] = (key, d);
-            }
+            let d = self.evaluate_uncached_with(q, scratch);
+            cell.lock().unwrap().slots[slot] = (key, d);
             return d;
         }
-        drop(caches);
-        self.evaluate_uncached(q)
+        self.evaluate_uncached_with(q, scratch)
+    }
+
+    /// Evaluate one MCT query (fresh scratch per call; hot callers use
+    /// [`Self::evaluate_with`] or [`Self::evaluate_batch_into`]).
+    pub fn evaluate(&self, q: &MctQuery) -> MctDecision {
+        self.evaluate_with(q, &mut self.scratch())
+    }
+
+    /// Evaluate a batch into a caller-owned buffer (cleared first), one
+    /// walker scratch reused across the whole batch.
+    pub fn evaluate_batch_into(&self, queries: &[MctQuery], out: &mut Vec<MctDecision>) {
+        out.clear();
+        out.reserve(queries.len());
+        let mut scratch = self.scratch();
+        out.extend(queries.iter().map(|q| self.evaluate_with(q, &mut scratch)));
     }
 
     /// Evaluate a batch (the CPU needs no batching — §5.1 — but the API
     /// mirrors the engine's for the comparison harness).
     pub fn evaluate_batch(&self, queries: &[MctQuery]) -> Vec<MctDecision> {
-        queries.iter().map(|q| self.evaluate(q)).collect()
+        let mut out = Vec::with_capacity(queries.len());
+        self.evaluate_batch_into(queries, &mut out);
+        out
     }
 
     /// The standard version this index was built for (label surface for
@@ -310,9 +345,9 @@ impl CpuBaseline {
     }
 
     pub fn cache_stats(&self) -> CacheStats {
-        let caches = self.caches.lock().unwrap();
         let mut s = CacheStats::default();
-        for c in caches.values() {
+        for cell in self.caches.values() {
+            let c = cell.lock().unwrap();
             s.hits += c.hits;
             s.misses += c.misses;
         }
@@ -372,14 +407,51 @@ mod tests {
         let (_, _, cpu, cfg) = setup(StandardVersion::V2, 109, 400);
         let w = generate_world(&cfg);
         let mut rng = Rng::new(11);
+        let mut scratch = cpu.scratch();
         for _ in 0..200 {
             let st = rng.index(cfg.n_airports) as u32;
             let q = random_query(&mut rng, &w, st);
-            let a = cpu.evaluate_uncached(&q);
+            let a = cpu.evaluate_uncached_with(&q, &mut scratch);
             let b = cpu.evaluate_scan(&q);
             assert_eq!(a.rule_id, b.rule_id);
             assert_eq!(a.minutes, b.minutes);
         }
+    }
+
+    #[test]
+    fn concurrent_probes_stay_correct_across_sharded_caches() {
+        // The per-airport cache locks must not serialise or corrupt
+        // concurrent evaluation: 8 threads hammer the same query stream
+        // (hot cached airports + uncached ones + repeats) and every answer
+        // must equal the single-threaded oracle.
+        let (schema, rs, cpu, cfg) = setup(StandardVersion::V2, 113, 400);
+        let w = generate_world(&cfg);
+        let mut rng = Rng::new(23);
+        let queries: Vec<_> = (0..300)
+            .map(|i| {
+                // Repeats every 3rd query guarantee cache hits under
+                // contention; zipf skew keeps hot airports hot.
+                let st = if i % 3 == 0 { 0 } else { rng.zipf(cfg.n_airports, 1.1) as u32 };
+                random_query(&mut rng, &w, st)
+            })
+            .collect();
+        let want: Vec<_> =
+            queries.iter().map(|q| evaluate_ruleset(&schema, &rs, q)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    let mut scratch = cpu.scratch();
+                    for (q, want) in queries.iter().zip(&want) {
+                        let got = cpu.evaluate_with(q, &mut scratch);
+                        assert_eq!(got.rule_id, want.rule_id);
+                        assert_eq!(got.minutes, want.minutes);
+                    }
+                });
+            }
+        });
+        let s = cpu.cache_stats();
+        assert!(s.hits > 0, "repeats under contention must hit: {s:?}");
+        assert_eq!(cpu.total_cache_hits(), s.hits, "O(1) counter agrees with scan");
     }
 
     #[test]

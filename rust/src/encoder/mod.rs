@@ -91,6 +91,65 @@ impl WorldDicts {
     }
 }
 
+/// A batch of encoded queries in struct-of-arrays form: one contiguous
+/// row-major `i32` value buffer (`n × L`) plus a parallel station array —
+/// no per-query `Vec`, no pointer chasing.
+///
+/// Ownership contract (DESIGN.md §Hot path): the **caller** owns the
+/// buffer and reuses it across batches; [`QueryEncoder::encode_batch_into`]
+/// fills it in place, growing capacity only on the first batches. The
+/// evaluator ([`crate::erbium::NativeEvaluator::evaluate_batch`]) borrows
+/// it read-only, so one buffer can feed several sharded walkers at once.
+#[derive(Debug, Clone, Default)]
+pub struct EncodedBatch {
+    /// Row-major encoded values, `len = n × depth`.
+    values: Vec<i32>,
+    /// Routing station of each row, `len = n`.
+    stations: Vec<u32>,
+    /// Padded level count `L` of the rows.
+    depth: usize,
+}
+
+impl EncodedBatch {
+    /// Number of encoded queries.
+    pub fn len(&self) -> usize {
+        self.stations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stations.is_empty()
+    }
+
+    /// Padded level count of each row.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Encoded values of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.values[i * self.depth..(i + 1) * self.depth]
+    }
+
+    /// Routing station of row `i`.
+    #[inline]
+    pub fn station(&self, i: usize) -> u32 {
+        self.stations[i]
+    }
+
+    /// The whole row-major value buffer (e.g. for handing to a dense
+    /// kernel).
+    pub fn values(&self) -> &[i32] {
+        &self.values
+    }
+
+    /// Drop all rows, keeping capacity.
+    pub fn clear(&mut self) {
+        self.values.clear();
+        self.stations.clear();
+    }
+}
+
 /// Hot-path query encoder for a fixed level plan.
 #[derive(Debug, Clone)]
 pub struct QueryEncoder {
@@ -135,6 +194,21 @@ impl QueryEncoder {
         let mut out = vec![0i32; self.depth()];
         self.encode_into(q, &mut out);
         out
+    }
+
+    /// Encode a batch into a reusable [`EncodedBatch`], in place: no
+    /// per-query allocation, and once the buffers' capacity is warm no
+    /// allocation at all. This is the feeder hot path the MCT-Wrapper
+    /// workers run per aggregated engine call (DESIGN.md §Hot path).
+    pub fn encode_batch_into(&self, queries: &[MctQuery], batch: &mut EncodedBatch) {
+        let l = self.depth();
+        batch.depth = l;
+        batch.stations.clear();
+        batch.stations.extend(queries.iter().map(|q| q.station));
+        batch.values.resize(queries.len() * l, 0);
+        for (q, row) in queries.iter().zip(batch.values.chunks_mut(l.max(1))) {
+            self.encode_into(q, row);
+        }
     }
 
     /// Encode a batch row-major into `out` (resized to `n × L`), padding the
@@ -208,6 +282,34 @@ mod tests {
         // Padding levels are zero.
         assert_eq!(v[26], 0);
         assert_eq!(v[27], 0);
+    }
+
+    #[test]
+    fn encode_batch_into_matches_scalar_and_reuses_buffers() {
+        let cfg = GeneratorConfig::small(67, 150);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let enc = QueryEncoder::new(&p.plan, p.plan.len());
+        let qs: Vec<_> = (0..5).map(|i| query_for_station(&w, i, 100 + i as u64)).collect();
+        let mut batch = EncodedBatch::default();
+        enc.encode_batch_into(&qs, &mut batch);
+        assert_eq!(batch.len(), 5);
+        assert_eq!(batch.depth(), enc.depth());
+        assert_eq!(batch.values().len(), 5 * enc.depth());
+        for (i, q) in qs.iter().enumerate() {
+            assert_eq!(batch.row(i), enc.encode(q).as_slice(), "row {i}");
+            assert_eq!(batch.station(i), q.station);
+        }
+        // Refill with a smaller batch: rows shrink, stale content is gone.
+        enc.encode_batch_into(&qs[..2], &mut batch);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.row(1), enc.encode(&qs[1]).as_slice());
+        // Empty batch is legal.
+        enc.encode_batch_into(&[], &mut batch);
+        assert!(batch.is_empty());
+        assert_eq!(batch.values().len(), 0);
     }
 
     #[test]

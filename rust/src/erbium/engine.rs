@@ -20,14 +20,14 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::encoder::QueryEncoder;
+use crate::encoder::{EncodedBatch, QueryEncoder};
 use crate::nfa::memory::NfaImage;
 use crate::nfa::model::PartitionedNfa;
 use crate::runtime::{DeviceImage, NfaExecutable, Runtime};
 use crate::rules::types::{MctDecision, MctQuery};
 
 use super::hw_model::{BatchTiming, FpgaModel};
-use super::native::NativeEvaluator;
+use super::native::{EvalScratch, NativeEvaluator};
 
 /// Which implementation computes the answers.
 #[derive(Clone)]
@@ -46,6 +46,15 @@ struct XlaState {
     images: Mutex<HashMap<usize, Arc<DeviceImage>>>,
 }
 
+/// Reusable native-path buffers: the encoded batch and the walker scratch,
+/// kept across calls so a steady-state engine call allocates nothing
+/// (DESIGN.md §Hot path). One lock per *batch*, not per query — the engine
+/// stays `Sync` without contending the hot loop.
+struct NativeScratch {
+    batch: EncodedBatch,
+    scratch: EvalScratch,
+}
+
 /// The ERBIUM engine: compiled rule set + backend + datapath model.
 pub struct ErbiumEngine {
     nfa: Arc<PartitionedNfa>,
@@ -56,6 +65,9 @@ pub struct ErbiumEngine {
     /// Artifact depth (padded L).
     l_pad: usize,
     s_pad: usize,
+    /// Multi-core split of large native batches (1 = single core).
+    shards: usize,
+    scratch: Mutex<NativeScratch>,
 }
 
 impl ErbiumEngine {
@@ -84,7 +96,23 @@ impl ErbiumEngine {
                 Some(XlaState { runtime, exe, images: Mutex::new(HashMap::new()) })
             }
         };
-        Ok(ErbiumEngine { nfa, encoder, native, xla, model, l_pad, s_pad })
+        let scratch = Mutex::new(NativeScratch {
+            batch: EncodedBatch::default(),
+            scratch: native.scratch(),
+        });
+        Ok(ErbiumEngine { nfa, encoder, native, xla, model, l_pad, s_pad, shards: 1, scratch })
+    }
+
+    /// Split native batches of [`crate::erbium::native::SHARD_MIN_ROWS`]+
+    /// rows across `shards` cores. No effect on the XLA path.
+    pub fn with_shards(mut self, shards: usize) -> ErbiumEngine {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Configured multi-core split of the native path.
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     pub fn nfa(&self) -> &PartitionedNfa {
@@ -119,12 +147,32 @@ impl ErbiumEngine {
     /// (same order). This is the *functional* call — wall-clock time here is
     /// CPU stand-in time, not FPGA time; see [`Self::evaluate_batch_timed`].
     pub fn evaluate_batch(&self, queries: &[MctQuery]) -> Result<Vec<MctDecision>> {
+        let mut out = Vec::with_capacity(queries.len());
+        self.evaluate_batch_into(queries, &mut out)?;
+        Ok(out)
+    }
+
+    /// Batch-first entry point: evaluate into a caller-owned buffer
+    /// (cleared first), so steady-state engine servers allocate nothing on
+    /// the native path — encode and walk both run on reused scratch.
+    pub fn evaluate_batch_into(
+        &self,
+        queries: &[MctQuery],
+        out: &mut Vec<MctDecision>,
+    ) -> Result<()> {
+        out.clear();
         if queries.is_empty() {
-            return Ok(Vec::new());
+            return Ok(());
         }
         match &self.xla {
-            None => Ok(self.evaluate_native(queries)),
-            Some(x) => self.evaluate_xla(x, queries),
+            None => {
+                self.evaluate_native_into(queries, out);
+                Ok(())
+            }
+            Some(x) => {
+                *out = self.evaluate_xla(x, queries)?;
+                Ok(())
+            }
         }
     }
 
@@ -139,15 +187,17 @@ impl ErbiumEngine {
         Ok((out, self.model.batch_timing(queries.len())))
     }
 
-    fn evaluate_native(&self, queries: &[MctQuery]) -> Vec<MctDecision> {
-        let mut enc = vec![0i32; self.encoder.depth()];
-        queries
-            .iter()
-            .map(|q| {
-                self.encoder.encode_into(q, &mut enc);
-                self.native.evaluate_encoded(q.station, &enc)
-            })
-            .collect()
+    fn evaluate_native_into(&self, queries: &[MctQuery], out: &mut Vec<MctDecision>) {
+        let mut g = self.scratch.lock().unwrap();
+        let NativeScratch { batch, scratch } = &mut *g;
+        self.encoder.encode_batch_into(queries, batch);
+        if NativeEvaluator::sharding_pays(queries.len(), self.shards) {
+            self.native.evaluate_batch_sharded(batch, self.shards, out);
+        } else {
+            // Below the shard floor (or unsharded): single-core walk on the
+            // engine's warm scratch, not freshly allocated sets.
+            self.native.evaluate_batch(batch, scratch, out);
+        }
     }
 
     fn evaluate_xla(&self, xla: &XlaState, queries: &[MctQuery]) -> Result<Vec<MctDecision>> {
@@ -266,6 +316,39 @@ mod tests {
         let (out, t) = eng.evaluate_batch_timed(&queries).unwrap();
         assert_eq!(out.len(), 64);
         assert!(t.total_us > 0.0);
+    }
+
+    #[test]
+    fn sharded_engine_matches_single_core() {
+        let cfg = GeneratorConfig::small(97, 300);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let (p, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+        let single = ErbiumEngine::new(p.clone(), model, Backend::Native, 28, 64).unwrap();
+        let sharded =
+            ErbiumEngine::new(p, model, Backend::Native, 28, 64).unwrap().with_shards(4);
+        assert_eq!(sharded.shards(), 4);
+        let mut rng = Rng::new(29);
+        // Large enough to clear the shard floor, with a ragged tail.
+        let queries: Vec<_> = (0..301)
+            .map(|_| {
+                let st = rng.index(cfg.n_airports) as u32;
+                random_query(&mut rng, &w, st)
+            })
+            .collect();
+        let a = single.evaluate_batch(&queries).unwrap();
+        let b = sharded.evaluate_batch(&queries).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.rule_id, y.rule_id, "row {i}");
+            assert_eq!(x.minutes, y.minutes, "row {i}");
+        }
+        // Reused engine scratch must not leak state between calls.
+        let again = single.evaluate_batch(&queries).unwrap();
+        assert_eq!(a.len(), again.len());
+        assert!(a.iter().zip(&again).all(|(x, y)| x.rule_id == y.rule_id));
     }
 
     #[test]

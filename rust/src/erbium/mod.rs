@@ -17,4 +17,4 @@ pub mod native;
 
 pub use engine::{Backend, ErbiumEngine};
 pub use hw_model::{BatchTiming, FpgaModel};
-pub use native::NativeEvaluator;
+pub use native::{EvalScratch, NativeEvaluator};

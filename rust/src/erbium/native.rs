@@ -3,108 +3,134 @@
 //!
 //! Semantically identical to the dense XLA path (`python/compile/model.py` /
 //! [`crate::nfa::memory::NfaImage::evaluate_scalar`]) but works on the sparse
-//! [`CompiledNfa`] with bit-set active states, which makes it fast enough to
+//! compiled NFA with bit-set active states, which makes it fast enough to
 //! replay the full production trace (Fig 12) and to serve as the oracle in
 //! cross-layer tests.
+//!
+//! This module is the CPU *feeder* hot path of the §6.1 analysis: the
+//! accelerator starves behind a slow software matcher, so every per-query
+//! allocation here directly erodes the fleet-level numbers. The layout is
+//! therefore batch-first and allocation-free (DESIGN.md §Hot path):
+//!
+//! * each partition is flattened into a contiguous CSR-style arena
+//!   ([`CsrPartition`]) — per-level state offsets plus one packed edge
+//!   array each for exact / range / wildcard edges, exact edges
+//!   binary-searchable in place — replacing the pointer-chasing
+//!   `Vec<Vec<PreparedState>>` of the original evaluator;
+//! * scratch bit-sets live in a caller-owned [`EvalScratch`], reused
+//!   across a whole [`EncodedBatch`] ([`NativeEvaluator::evaluate_batch`])
+//!   instead of being allocated twice per query;
+//! * large batches optionally split across cores
+//!   ([`NativeEvaluator::evaluate_batch_sharded`]): the evaluator is
+//!   immutable after construction, so shards share it without locks.
 
-use crate::nfa::model::{CompiledNfa, PartitionedNfa};
+use crate::bits::BitSet;
+use crate::encoder::EncodedBatch;
+use crate::nfa::model::{CompiledNfa, EdgeLabel, PartitionedNfa};
 use crate::rules::types::MctDecision;
 
-/// Dynamically-sized bit set over NFA states (width decided per
-/// partition, so the CPU-side trie is not constrained by the hardware's
-/// `S` bound).
-#[derive(Clone)]
-struct BitSet {
-    w: Vec<u64>,
-}
-
-impl BitSet {
-    #[inline]
-    fn empty(width: usize) -> Self {
-        BitSet { w: vec![0; width.div_ceil(64).max(1)] }
-    }
-    #[inline]
-    fn clear(&mut self) {
-        self.w.iter_mut().for_each(|x| *x = 0);
-    }
-    #[inline]
-    fn set(&mut self, i: u32) {
-        self.w[(i >> 6) as usize] |= 1u64 << (i & 63);
-    }
-    #[inline]
-    #[cfg(test)]
-    fn get(&self, i: u32) -> bool {
-        self.w[(i >> 6) as usize] & (1u64 << (i & 63)) != 0
-    }
-    #[inline]
-    #[cfg(test)]
-    fn is_empty(&self) -> bool {
-        self.w.iter().all(|&x| x == 0)
-    }
-    /// Iterate set bits.
-    fn iter(&self) -> impl Iterator<Item = u32> + '_ {
-        self.w.iter().enumerate().flat_map(|(bi, &word)| {
-            let mut w = word;
-            std::iter::from_fn(move || {
-                if w == 0 {
-                    None
-                } else {
-                    let b = w.trailing_zeros();
-                    w &= w - 1;
-                    Some((bi as u32) << 6 | b)
-                }
-            })
-        })
-    }
-}
-
-/// One state's outgoing edges, indexed for O(log E) matching: exact labels
-/// sorted for binary search, ranges and wildcards scanned separately (both
-/// are short lists in rule tries).
-#[derive(Debug, Clone, Default)]
-struct PreparedState {
-    /// Sorted by value; per-(state, label) uniqueness of the trie builder
-    /// guarantees at most one hit.
-    exact: Vec<(u32, u32)>,
-    ranges: Vec<(u32, u32, u32)>, // (lo, hi, to)
-    anys: Vec<u32>,
-}
-
-/// A partition preprocessed for fast sparse walking.
+/// A partition flattened into a contiguous CSR-style arena.
+///
+/// States of all levels are numbered consecutively (`level_base[lv] + s`),
+/// and each packed edge array is indexed by a per-state offset table of
+/// length `n_states + 1` — the classic CSR layout. A state's exact edges
+/// are sorted by value so the walker binary-searches the packed slice in
+/// place; ranges and wildcards are short lists in rule tries and are
+/// scanned.
 #[derive(Debug, Clone)]
-struct PreparedPartition {
-    /// `[level][state]`.
-    levels: Vec<Vec<PreparedState>>,
+struct CsrPartition {
+    /// First flattened-state index of each level; `len = depth + 1`.
+    level_base: Vec<u32>,
+    /// Per flattened state: offsets into the packed arrays
+    /// (`len = n_states + 1` each).
+    exact_off: Vec<u32>,
+    range_off: Vec<u32>,
+    any_off: Vec<u32>,
+    /// Packed exact edges, per state sorted by value (parallel arrays so
+    /// the binary search touches only the value lane).
+    exact_vals: Vec<u32>,
+    exact_tos: Vec<u32>,
+    /// Packed range edges `(lo, hi, to)`.
+    ranges: Vec<(u32, u32, u32)>,
+    /// Packed wildcard targets.
+    any_tos: Vec<u32>,
+    /// Bit-set words this partition's walk touches
+    /// (`words_for(max_width)`), so the shared scratch clears only what
+    /// this partition can dirty.
+    words: usize,
 }
 
-impl PreparedPartition {
-    fn build(nfa: &CompiledNfa) -> PreparedPartition {
-        let levels = nfa
-            .states
-            .iter()
-            .map(|states| {
-                states
-                    .iter()
-                    .map(|edges| {
-                        let mut p = PreparedState::default();
-                        for e in edges {
-                            match e.label {
-                                super::super::nfa::model::EdgeLabel::Exact(v) => {
-                                    p.exact.push((v, e.to))
-                                }
-                                super::super::nfa::model::EdgeLabel::Range(lo, hi) => {
-                                    p.ranges.push((lo, hi, e.to))
-                                }
-                                super::super::nfa::model::EdgeLabel::Any => p.anys.push(e.to),
-                            }
-                        }
-                        p.exact.sort_unstable();
-                        p
-                    })
-                    .collect()
-            })
-            .collect();
-        PreparedPartition { levels }
+impl CsrPartition {
+    fn build(nfa: &CompiledNfa) -> CsrPartition {
+        let n_states: usize = nfa.states.iter().map(Vec::len).sum();
+        let mut c = CsrPartition {
+            level_base: Vec::with_capacity(nfa.states.len() + 1),
+            exact_off: Vec::with_capacity(n_states + 1),
+            range_off: Vec::with_capacity(n_states + 1),
+            any_off: Vec::with_capacity(n_states + 1),
+            exact_vals: Vec::new(),
+            exact_tos: Vec::new(),
+            ranges: Vec::new(),
+            any_tos: Vec::new(),
+            words: BitSet::words_for(nfa.max_width()),
+        };
+        c.exact_off.push(0);
+        c.range_off.push(0);
+        c.any_off.push(0);
+        let mut base = 0u32;
+        // Per-state staging buffer for the sort; reused across states.
+        let mut exact: Vec<(u32, u32)> = Vec::new();
+        for states in &nfa.states {
+            c.level_base.push(base);
+            base += states.len() as u32;
+            for edges in states {
+                exact.clear();
+                for e in edges {
+                    match e.label {
+                        EdgeLabel::Exact(v) => exact.push((v, e.to)),
+                        EdgeLabel::Range(lo, hi) => c.ranges.push((lo, hi, e.to)),
+                        EdgeLabel::Any => c.any_tos.push(e.to),
+                    }
+                }
+                // Per-(state, label) uniqueness of the trie builder
+                // guarantees at most one hit per sorted slice.
+                exact.sort_unstable();
+                for &(v, to) in &exact {
+                    c.exact_vals.push(v);
+                    c.exact_tos.push(to);
+                }
+                c.exact_off.push(c.exact_vals.len() as u32);
+                c.range_off.push(c.ranges.len() as u32);
+                c.any_off.push(c.any_tos.len() as u32);
+            }
+        }
+        c.level_base.push(base);
+        c
+    }
+}
+
+/// Reusable per-thread scratch state of the sparse walk: the two
+/// active-state bit-sets, sized once to the evaluator's widest level and
+/// reused across every query of a batch (the whole point — the original
+/// evaluator allocated both per query).
+#[derive(Debug, Clone)]
+pub struct EvalScratch {
+    active: BitSet,
+    next: BitSet,
+    /// Words of the sets a previous walk may have dirtied: narrow
+    /// partitions only pay to clear what was actually used, not the full
+    /// max-width allocation.
+    dirty_words: usize,
+}
+
+impl EvalScratch {
+    /// Scratch able to walk partitions up to `width` states per level.
+    pub fn with_width(width: usize) -> EvalScratch {
+        EvalScratch {
+            active: BitSet::empty(width),
+            next: BitSet::empty(width),
+            dirty_words: 0,
+        }
     }
 }
 
@@ -112,51 +138,86 @@ impl PreparedPartition {
 #[derive(Debug, Clone)]
 pub struct NativeEvaluator {
     nfa: PartitionedNfa,
-    prepared: Vec<PreparedPartition>,
+    csr: Vec<CsrPartition>,
+    /// Widest level across all partitions (scratch sizing).
+    max_width: usize,
 }
 
+/// Below this many rows a sharded call falls back to the single-core walk:
+/// thread spawn/join costs more than the evaluation itself.
+pub const SHARD_MIN_ROWS: usize = 64;
+
 impl NativeEvaluator {
+    /// Whether a sharded walk pays for `rows` over `shards` cores — below
+    /// the floor, thread spawn/join costs more than the evaluation.
+    /// [`Self::evaluate_batch_sharded`] applies this internally; callers
+    /// holding warm scratch (the engine) check it first so the fallback
+    /// runs on their scratch instead of allocating fresh sets.
+    pub fn sharding_pays(rows: usize, shards: usize) -> bool {
+        shards > 1 && rows >= SHARD_MIN_ROWS.max(2 * shards)
+    }
+
     pub fn new(nfa: PartitionedNfa) -> Self {
-        let prepared = nfa.partitions.iter().map(PreparedPartition::build).collect();
-        NativeEvaluator { nfa, prepared }
+        let csr = nfa.partitions.iter().map(CsrPartition::build).collect();
+        let max_width =
+            nfa.partitions.iter().map(CompiledNfa::max_width).max().unwrap_or(0);
+        NativeEvaluator { nfa, csr, max_width }
     }
 
     pub fn nfa(&self) -> &PartitionedNfa {
         &self.nfa
     }
 
+    /// Fresh scratch sized for this evaluator. Callers keep one per thread
+    /// and pass it to every batch (DESIGN.md §Hot path batch contract).
+    pub fn scratch(&self) -> EvalScratch {
+        EvalScratch::with_width(self.max_width)
+    }
+
     /// Evaluate one *encoded* query (level-ordered values, length ≥ depth)
     /// against one partition. Returns the best accept, if any.
     fn eval_partition(
         nfa: &CompiledNfa,
-        prep: &PreparedPartition,
+        csr: &CsrPartition,
         q: &[i32],
+        scratch: &mut EvalScratch,
     ) -> Option<(u32, f32, u16)> {
         let depth = nfa.depth();
         debug_assert!(q.len() >= depth);
-        let width = nfa.max_width();
-        let mut active = BitSet::empty(width);
+        // Scrub whatever the previous walk dirtied, then only this
+        // partition's span for the rest of the walk.
+        let words = csr.words;
+        let scrub = words.max(scratch.dirty_words);
+        scratch.active.clear_first_words(scrub);
+        scratch.next.clear_first_words(scrub);
+        scratch.dirty_words = words;
+        let EvalScratch { active, next, .. } = scratch;
         active.set(0);
-        let mut next = BitSet::empty(width);
-        for (lv, states) in prep.levels.iter().enumerate() {
+        for lv in 0..depth {
             // qv comes from the encoder and is always a small non-negative
             // domain value, so the u32 cast below is lossless.
             let qv = q[lv] as u32;
-            next.clear();
+            next.clear_first_words(words);
             let mut any_hit = false;
+            let base = csr.level_base[lv];
             for s in active.iter() {
-                let ps = &states[s as usize];
-                if let Ok(i) = ps.exact.binary_search_by_key(&qv, |&(v, _)| v) {
-                    next.set(ps.exact[i].1);
+                let g = (base + s) as usize;
+                let (lo, hi) = (csr.exact_off[g] as usize, csr.exact_off[g + 1] as usize);
+                if let Ok(i) = csr.exact_vals[lo..hi].binary_search(&qv) {
+                    next.set(csr.exact_tos[lo + i]);
                     any_hit = true;
                 }
-                for &(lo, hi, to) in &ps.ranges {
-                    if qv >= lo && qv <= hi {
+                for &(rlo, rhi, to) in
+                    &csr.ranges[csr.range_off[g] as usize..csr.range_off[g + 1] as usize]
+                {
+                    if qv >= rlo && qv <= rhi {
                         next.set(to);
                         any_hit = true;
                     }
                 }
-                for &to in &ps.anys {
+                for &to in
+                    &csr.any_tos[csr.any_off[g] as usize..csr.any_off[g + 1] as usize]
+                {
                     next.set(to);
                     any_hit = true;
                 }
@@ -164,7 +225,7 @@ impl NativeEvaluator {
             if !any_hit {
                 return None;
             }
-            std::mem::swap(&mut active, &mut next);
+            std::mem::swap(active, next);
         }
         // `active` now ranges over accepting states.
         let mut best: Option<(u32, f32, u16)> = None;
@@ -184,13 +245,19 @@ impl NativeEvaluator {
         best
     }
 
-    /// Evaluate one encoded query routed to `station`: consult the station's
-    /// partitions plus the global ones and keep the most precise match.
-    pub fn evaluate_encoded(&self, station: u32, q: &[i32]) -> MctDecision {
+    /// Evaluate one encoded query routed to `station` using caller-owned
+    /// scratch: consult the station's partitions plus the global ones and
+    /// keep the most precise match. Allocation-free.
+    pub fn evaluate_encoded_with(
+        &self,
+        station: u32,
+        q: &[i32],
+        scratch: &mut EvalScratch,
+    ) -> MctDecision {
         let mut best = MctDecision::no_match();
         for pi in self.nfa.partitions_for(station) {
             if let Some((rid, w, min)) =
-                Self::eval_partition(&self.nfa.partitions[pi], &self.prepared[pi], q)
+                Self::eval_partition(&self.nfa.partitions[pi], &self.csr[pi], q, scratch)
             {
                 let better = !best.matched()
                     || w > best.weight
@@ -201,6 +268,68 @@ impl NativeEvaluator {
             }
         }
         best
+    }
+
+    /// Scalar convenience path: allocates fresh scratch per call. Kept as
+    /// the pre-batch baseline the perf harness measures against; hot
+    /// callers use [`Self::evaluate_encoded_with`] or
+    /// [`Self::evaluate_batch`].
+    pub fn evaluate_encoded(&self, station: u32, q: &[i32]) -> MctDecision {
+        let mut scratch = self.scratch();
+        self.evaluate_encoded_with(station, q, &mut scratch)
+    }
+
+    /// Evaluate a whole encoded batch, reusing `scratch` across every row
+    /// and appending one decision per row into `out` (cleared first). This
+    /// is the feeder hot path: no allocation once `out`'s capacity is warm.
+    pub fn evaluate_batch(
+        &self,
+        batch: &EncodedBatch,
+        scratch: &mut EvalScratch,
+        out: &mut Vec<MctDecision>,
+    ) {
+        out.clear();
+        out.reserve(batch.len());
+        for i in 0..batch.len() {
+            out.push(self.evaluate_encoded_with(batch.station(i), batch.row(i), scratch));
+        }
+    }
+
+    /// Split a large batch across `shards` cores (scoped threads; the
+    /// evaluator is immutable so shards share it without locks), each shard
+    /// walking with its own scratch. Falls back to the single-core walk for
+    /// small batches or `shards <= 1`. Output order matches the batch.
+    pub fn evaluate_batch_sharded(
+        &self,
+        batch: &EncodedBatch,
+        shards: usize,
+        out: &mut Vec<MctDecision>,
+    ) {
+        let n = batch.len();
+        if !Self::sharding_pays(n, shards) {
+            let mut scratch = self.scratch();
+            self.evaluate_batch(batch, &mut scratch, out);
+            return;
+        }
+        out.clear();
+        out.resize(n, MctDecision::no_match());
+        let rows_per_shard = n.div_ceil(shards);
+        std::thread::scope(|scope| {
+            for (si, chunk) in out.chunks_mut(rows_per_shard).enumerate() {
+                let start = si * rows_per_shard;
+                scope.spawn(move || {
+                    let mut scratch = self.scratch();
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        let i = start + j;
+                        *slot = self.evaluate_encoded_with(
+                            batch.station(i),
+                            batch.row(i),
+                            &mut scratch,
+                        );
+                    }
+                });
+            }
+        });
     }
 }
 
@@ -214,21 +343,10 @@ mod tests {
     use crate::rules::standard::{evaluate_ruleset, Schema, StandardVersion};
     use crate::workload::random_query;
 
-    #[test]
-    fn bitset_roundtrip() {
-        let mut b = BitSet::empty(256);
-        assert!(b.is_empty());
-        for i in [0u32, 63, 64, 130, 255] {
-            b.set(i);
-        }
-        assert!(b.get(64) && b.get(255) && !b.get(1));
-        let got: Vec<u32> = b.iter().collect();
-        assert_eq!(got, vec![0, 63, 64, 130, 255]);
-    }
-
     /// The decisive correctness test: native NFA evaluation must agree with
     /// the semantic oracle (`evaluate_ruleset`) on random fleets of queries
-    /// for both standard versions.
+    /// for both standard versions — through the scalar, the batch and the
+    /// sharded entry points.
     #[test]
     fn native_agrees_with_semantic_oracle() {
         for (seed, version) in
@@ -242,14 +360,27 @@ mod tests {
             let enc = QueryEncoder::new(&p.plan, p.plan.len());
             let eval = NativeEvaluator::new(p);
             let mut rng = Rng::new(seed ^ 0xFF);
+            let queries: Vec<_> = (0..400)
+                .map(|_| {
+                    let station = rng.index(cfg.n_airports) as u32;
+                    random_query(&mut rng, &w, station)
+                })
+                .collect();
+            let mut batch = EncodedBatch::default();
+            enc.encode_batch_into(&queries, &mut batch);
+            let mut scratch = eval.scratch();
+            let mut got_batch = Vec::new();
+            eval.evaluate_batch(&batch, &mut scratch, &mut got_batch);
+            let mut got_sharded = Vec::new();
+            eval.evaluate_batch_sharded(&batch, 3, &mut got_sharded);
             let mut matched = 0;
-            for _ in 0..400 {
-                let station = rng.index(cfg.n_airports) as u32;
-                let q = random_query(&mut rng, &w, station);
-                let want = evaluate_ruleset(&schema, &rs, &q);
-                let got = eval.evaluate_encoded(station, &enc.encode(&q));
+            for (i, q) in queries.iter().enumerate() {
+                let want = evaluate_ruleset(&schema, &rs, q);
+                let got = eval.evaluate_encoded(q.station, &enc.encode(q));
                 assert_eq!(got.rule_id, want.rule_id, "{version:?} q={q:?}");
                 assert_eq!(got.minutes, want.minutes);
+                assert_eq!(got_batch[i], got, "batch row {i} diverges");
+                assert_eq!(got_sharded[i], got, "sharded row {i} diverges");
                 if got.matched() {
                     matched += 1;
                 }
@@ -274,5 +405,76 @@ mod tests {
         let want = evaluate_ruleset(&schema, &rs, &q);
         let got = eval.evaluate_encoded(10_000, &enc.encode(&q));
         assert_eq!(got.rule_id, want.rule_id);
+    }
+
+    #[test]
+    fn csr_arena_matches_nested_edge_lists() {
+        // The flattened arena must index exactly the edges of the compiled
+        // NFA: per state, the packed slices reproduce the edge lists.
+        let cfg = GeneratorConfig::small(83, 250);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        for nfa in &p.partitions {
+            let csr = CsrPartition::build(nfa);
+            assert_eq!(csr.level_base.len(), nfa.states.len() + 1);
+            for (lv, states) in nfa.states.iter().enumerate() {
+                for (s, edges) in states.iter().enumerate() {
+                    let g = (csr.level_base[lv] as usize) + s;
+                    let exact: Vec<(u32, u32)> = {
+                        let (lo, hi) =
+                            (csr.exact_off[g] as usize, csr.exact_off[g + 1] as usize);
+                        csr.exact_vals[lo..hi]
+                            .iter()
+                            .copied()
+                            .zip(csr.exact_tos[lo..hi].iter().copied())
+                            .collect()
+                    };
+                    let mut want_exact: Vec<(u32, u32)> = edges
+                        .iter()
+                        .filter_map(|e| match e.label {
+                            EdgeLabel::Exact(v) => Some((v, e.to)),
+                            _ => None,
+                        })
+                        .collect();
+                    want_exact.sort_unstable();
+                    assert_eq!(exact, want_exact);
+                    assert!(
+                        exact.windows(2).all(|p| p[0].0 < p[1].0),
+                        "exact values must be strictly sorted for binary search"
+                    );
+                    let n_ranges = (csr.range_off[g + 1] - csr.range_off[g]) as usize;
+                    let n_any = (csr.any_off[g + 1] - csr.any_off[g]) as usize;
+                    let want_ranges = edges
+                        .iter()
+                        .filter(|e| matches!(e.label, EdgeLabel::Range(..)))
+                        .count();
+                    let want_any = edges
+                        .iter()
+                        .filter(|e| matches!(e.label, EdgeLabel::Any))
+                        .count();
+                    assert_eq!(n_ranges, want_ranges);
+                    assert_eq!(n_any, want_any);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_produces_empty_output() {
+        let cfg = GeneratorConfig::small(89, 100);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V1);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V1);
+        let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let eval = NativeEvaluator::new(p);
+        let batch = EncodedBatch::default();
+        let mut out = vec![MctDecision::no_match(); 3]; // stale content must be cleared
+        eval.evaluate_batch(&batch, &mut eval.scratch(), &mut out);
+        assert!(out.is_empty());
+        out.push(MctDecision::no_match());
+        eval.evaluate_batch_sharded(&batch, 4, &mut out);
+        assert!(out.is_empty());
     }
 }

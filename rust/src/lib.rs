@@ -21,6 +21,7 @@
 
 pub mod backend;
 pub mod benchkit;
+pub mod bits;
 pub mod cluster;
 pub mod coordinator;
 pub mod costmodel;

@@ -10,6 +10,7 @@
 //!                           [--backend cpu|native|xla] [--agg forward|drain|max:N]
 //!                           [--strategy cpu|fpga] [--fail fast|degrade]
 //!                           [--open RATE_RPS] [--requests N] [--batch B] [--cache CAP]
+//!                           [--shards N]  (native backend: split large batches over N cores)
 //! erbium-search fleet       [--nodes N] [--route rr|jsq|shard] [--rate RPS] [--requests N]
 //!                           [--batch B] [--cache CAP] [--cap Q | --sla US]
 //!                           [--rules N] [--seed S] [--p P] [--w W] [--k K] [--e E]
@@ -19,7 +20,8 @@
 use std::sync::Arc;
 
 use erbium_search::backend::{
-    cpu_backend_factory, native_backend_factory, xla_backend_factory, BackendFactory,
+    cpu_backend_factory, native_backend_factory, native_backend_factory_sharded,
+    xla_backend_factory, BackendFactory,
 };
 use erbium_search::cluster::{
     simulate_cluster, AdmissionPolicy, Cluster, ClusterConfig, ClusterSimConfig, RoutePolicy,
@@ -169,7 +171,13 @@ fn main() -> anyhow::Result<()> {
                     );
                     xla_backend_factory(nfa.clone(), model, 1024, 28, 64)
                 }
-                _ => native_backend_factory(nfa.clone(), model, 28, 64),
+                _ => native_backend_factory_sharded(
+                    nfa.clone(),
+                    model,
+                    28,
+                    64,
+                    args.usize("--shards", 1),
+                ),
             };
             let strategy = match args.get("--strategy") {
                 Some("cpu") => MctStrategy::CpuPerTs,

@@ -1,0 +1,151 @@
+//! Hot-path batch equivalence: the seeded property that
+//! `evaluate_batch` ≡ per-query `evaluate_encoded` ≡ the semantic oracle
+//! across both standard versions, including the unknown-station fallback
+//! and the empty-batch edge case — the contract that lets the feeder
+//! switch to the allocation-free batch path without a semantic risk.
+
+use erbium_search::backend::{CpuBackend, MatchBackend};
+use erbium_search::encoder::{EncodedBatch, QueryEncoder};
+use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel, NativeEvaluator};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
+use erbium_search::prng::Rng;
+use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
+use erbium_search::rules::standard::{evaluate_ruleset, Schema, StandardVersion};
+use erbium_search::rules::types::{MctQuery, RuleSet, World};
+use erbium_search::workload::{query_for_station, random_query};
+
+fn setup(
+    seed: u64,
+    n_rules: usize,
+    version: StandardVersion,
+) -> (GeneratorConfig, World, Schema, RuleSet) {
+    let cfg = GeneratorConfig::small(seed, n_rules);
+    let world = generate_world(&cfg);
+    let schema = Schema::for_version(version);
+    let rs = generate_rule_set(&cfg, &world, version);
+    (cfg, world, schema, rs)
+}
+
+/// Seeded query mix: mostly in-world stations, every 20th an unknown
+/// station (only wildcard-station rules can answer those).
+fn query_mix(cfg: &GeneratorConfig, world: &World, seed: u64, n: usize) -> Vec<MctQuery> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            if i % 20 == 7 {
+                query_for_station(world, 10_000 + i as u32, seed ^ i as u64)
+            } else {
+                let st = rng.index(cfg.n_airports) as u32;
+                random_query(&mut rng, world, st)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn batch_equals_scalar_equals_oracle_both_versions() {
+    for (seed, version) in [(211u64, StandardVersion::V1), (223, StandardVersion::V2)] {
+        let (cfg, world, schema, rs) = setup(seed, 500, version);
+        let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let enc = QueryEncoder::new(&p.plan, p.plan.len());
+        let eval = NativeEvaluator::new(p);
+        let queries = query_mix(&cfg, &world, seed ^ 0xA5, 400);
+
+        let mut batch = EncodedBatch::default();
+        enc.encode_batch_into(&queries, &mut batch);
+        assert_eq!(batch.len(), queries.len());
+
+        let mut scratch = eval.scratch();
+        let mut got_batch = Vec::new();
+        eval.evaluate_batch(&batch, &mut scratch, &mut got_batch);
+        let mut got_sharded = Vec::new();
+        eval.evaluate_batch_sharded(&batch, 3, &mut got_sharded);
+
+        let mut matched = 0;
+        for (i, q) in queries.iter().enumerate() {
+            let oracle = evaluate_ruleset(&schema, &rs, q);
+            let scalar = eval.evaluate_encoded(q.station, &enc.encode(q));
+            assert_eq!(scalar.rule_id, oracle.rule_id, "{version:?} scalar≠oracle q={q:?}");
+            assert_eq!(scalar.minutes, oracle.minutes, "{version:?}");
+            assert_eq!(got_batch[i], scalar, "{version:?} batch row {i} ≠ scalar");
+            assert_eq!(got_sharded[i], scalar, "{version:?} sharded row {i} ≠ scalar");
+            if scalar.matched() {
+                matched += 1;
+            }
+        }
+        assert!(matched > 40, "{version:?}: only {matched} matches — mix too thin");
+    }
+}
+
+#[test]
+fn unknown_station_answers_from_global_rules_in_batch() {
+    let (_, world, schema, rs) = setup(227, 300, StandardVersion::V2);
+    let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    let enc = QueryEncoder::new(&p.plan, p.plan.len());
+    let eval = NativeEvaluator::new(p);
+    let queries: Vec<_> =
+        (0..8).map(|i| query_for_station(&world, 50_000 + i, i as u64)).collect();
+    let mut batch = EncodedBatch::default();
+    enc.encode_batch_into(&queries, &mut batch);
+    let mut out = Vec::new();
+    eval.evaluate_batch(&batch, &mut eval.scratch(), &mut out);
+    for (q, got) in queries.iter().zip(&out) {
+        let want = evaluate_ruleset(&schema, &rs, q);
+        assert_eq!(got.rule_id, want.rule_id);
+        assert_eq!(got.minutes, want.minutes);
+    }
+}
+
+#[test]
+fn empty_batch_is_empty_through_every_surface() {
+    let (_, _, schema, rs) = setup(229, 200, StandardVersion::V1);
+    let (p, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    let enc = QueryEncoder::new(&p.plan, p.plan.len());
+    let eval = NativeEvaluator::new(p.clone());
+    let mut batch = EncodedBatch::default();
+    enc.encode_batch_into(&[], &mut batch);
+    assert!(batch.is_empty());
+    let mut out = vec![];
+    eval.evaluate_batch(&batch, &mut eval.scratch(), &mut out);
+    assert!(out.is_empty());
+    eval.evaluate_batch_sharded(&batch, 4, &mut out);
+    assert!(out.is_empty());
+
+    let model = FpgaModel::new(HardwareConfig::v1_onprem(1), stats.depth);
+    let engine = ErbiumEngine::new(p, model, Backend::Native, 28, 64).unwrap();
+    assert!(engine.evaluate_batch(&[]).unwrap().is_empty());
+    let timing = MatchBackend::evaluate_batch_timed_into(&engine, &[], &mut out).unwrap();
+    assert!(out.is_empty());
+    assert!(timing.total_us >= 0.0);
+
+    let cpu = CpuBackend::new(schema, &rs);
+    let timing = cpu.evaluate_batch_timed_into(&[], &mut out).unwrap();
+    assert!(out.is_empty());
+    assert!(timing.total_us >= 0.0);
+}
+
+#[test]
+fn backend_into_path_matches_allocating_path() {
+    // The `_into` trait surface (what the engine servers call) and the
+    // Vec-returning surface must be byte-identical, across the engine, the
+    // CPU backend and a stale reused output buffer.
+    let (cfg, world, schema, rs) = setup(233, 400, StandardVersion::V2);
+    let (p, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+    let engine: Box<dyn MatchBackend> =
+        Box::new(ErbiumEngine::new(p, model, Backend::Native, 28, 64).unwrap());
+    let cpu: Box<dyn MatchBackend> = Box::new(CpuBackend::new(schema, &rs));
+    let queries = query_mix(&cfg, &world, 0xC0FFEE, 250);
+    for backend in [&engine, &cpu] {
+        let (want, _) = backend.evaluate_batch_timed(&queries).unwrap();
+        // Pre-poison the buffer: `_into` must clear stale rows.
+        let mut got = vec![erbium_search::rules::types::MctDecision::no_match(); 999];
+        backend.evaluate_batch_timed_into(&queries, &mut got).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.rule_id, b.rule_id);
+            assert_eq!(a.minutes, b.minutes);
+        }
+    }
+}
