@@ -10,6 +10,15 @@
 //! percentile … matches the SLA of the search engine"), and routes every
 //! admitted request to a replica per [`RoutePolicy`].
 //!
+//! Since the control-plane refactor the fleet is **heterogeneous**: every
+//! replica carries a [`NodeSpec`] whose [`NodeClass`] ties it to a
+//! [`costmodel::Element`](crate::costmodel::Element) (what the node costs)
+//! and a capacity estimate (what it serves) — CPU-only and FPGA-backed
+//! nodes mix behind one router, and the JSQ-family policies normalise
+//! queue depth by capacity so a strong node is offered proportionally more
+//! load. [`crate::controlplane`] builds on this to autoscale the fleet and
+//! inject failures.
+//!
 //! Two realisations, cross-validated like the single-node pair:
 //!
 //! * [`real::Cluster`] — N threaded [`NodeCore`](crate::coordinator)
@@ -19,18 +28,24 @@
 //!   which is what the `fleet_imbalance` bench sweeps to reproduce the
 //!   §6.1 "FPGA starves behind a weak feeder" knee.
 //!
-//! Reports carry **offered vs achieved** load, SLA drops, per-node and
-//! fleet-merged latency quantiles ([`Percentiles::merge`]) and cache hit
-//! rates — the measured inputs that
+//! Reports carry **offered vs achieved** load, SLA drops, requests lost to
+//! node failures, per-node and fleet-merged latency quantiles
+//! ([`Percentiles::merge`]), per-class aggregates and cache hit rates —
+//! the measured inputs that
 //! [`crate::costmodel::provision_for_throughput`] turns into fleet plans.
 
 pub mod real;
 pub mod sim;
 
 pub use real::Cluster;
-pub use sim::{poisson_sim_arrivals, simulate_cluster, ClusterSimConfig, SimArrival};
+pub use sim::{
+    poisson_sim_arrivals, scheduled_sim_arrivals, simulate_cluster, ClusterSimConfig,
+    SimArrival, SimEngine, SimNodeSpec,
+};
 
 use crate::coordinator::{Percentiles, PipelineConfig};
+use crate::costmodel::{catalog, Element};
+use crate::prng::Rng;
 
 /// How the front-end router picks a replica for an admitted request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,8 +53,14 @@ pub enum RoutePolicy {
     /// Cycle through replicas regardless of state (the ZeroMQ dealer
     /// default).
     RoundRobin,
-    /// Send to the replica with the fewest outstanding requests.
+    /// Send to the replica with the fewest outstanding requests,
+    /// normalised by capacity on heterogeneous fleets.
     JoinShortestQueue,
+    /// Power-of-d-choices: sample `d` distinct replicas and join the
+    /// shortest (capacity-normalised) of those — JSQ's balance at O(d)
+    /// state probes instead of O(n). `JsqD(2)` is the classic
+    /// two-choices router.
+    JsqD(usize),
     /// Pin each connection station to one replica (`station mod n`), so a
     /// station's hot connections stay in that replica's LRU — cache
     /// affinity at the price of zipf-skewed load.
@@ -47,11 +68,13 @@ pub enum RoutePolicy {
 }
 
 impl RoutePolicy {
-    pub fn label(&self) -> &'static str {
-        match self {
-            RoutePolicy::RoundRobin => "rr",
-            RoutePolicy::JoinShortestQueue => "jsq",
-            RoutePolicy::StationSharded => "shard",
+    pub fn label(&self) -> String {
+        match *self {
+            RoutePolicy::RoundRobin => "rr".into(),
+            RoutePolicy::JoinShortestQueue => "jsq".into(),
+            RoutePolicy::JsqD(2) => "jsq2".into(),
+            RoutePolicy::JsqD(d) => format!("jsqd:{d}"),
+            RoutePolicy::StationSharded => "shard".into(),
         }
     }
 
@@ -59,43 +82,147 @@ impl RoutePolicy {
         match s {
             "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
             "jsq" => Some(RoutePolicy::JoinShortestQueue),
+            "jsq2" => Some(RoutePolicy::JsqD(2)),
             "shard" | "station" => Some(RoutePolicy::StationSharded),
-            _ => None,
+            _ => s
+                .strip_prefix("jsqd:")
+                .and_then(|d| d.parse().ok())
+                .filter(|&d| d >= 1)
+                .map(RoutePolicy::JsqD),
         }
     }
 }
 
-/// Stateful router: one instance per cluster run.
+/// Stateful router: one instance per cluster run. On heterogeneous fleets
+/// the JSQ-family policies compare *relative* queue depth
+/// (`outstanding / capacity weight`), so a node with twice the capacity is
+/// considered half as loaded at equal depth.
 #[derive(Debug, Clone)]
 pub struct Router {
     pub policy: RoutePolicy,
     rr_next: usize,
+    /// Sampling stream for [`RoutePolicy::JsqD`]; seeded ⇒ reproducible.
+    rng: Rng,
+    /// Per-node capacity weights; empty ⇒ every node weighs 1.
+    weights: Vec<f64>,
 }
 
 impl Router {
     pub fn new(policy: RoutePolicy) -> Router {
-        Router { policy, rr_next: 0 }
+        Router { policy, rr_next: 0, rng: Rng::new(0x2070_D2), weights: Vec::new() }
+    }
+
+    /// Reseed the JSQ(d) sampling stream.
+    pub fn with_seed(mut self, seed: u64) -> Router {
+        self.rng = Rng::new(seed ^ 0x2070_D2);
+        self
+    }
+
+    /// Attach per-node capacity weights (queries/s or any consistent
+    /// relative unit).
+    pub fn with_weights(mut self, weights: Vec<f64>) -> Router {
+        self.weights = weights;
+        self
+    }
+
+    /// Replace the capacity weights mid-run (the control plane calls this
+    /// when it grows the node set; routing state is otherwise preserved).
+    pub fn set_weights(&mut self, weights: Vec<f64>) {
+        self.weights = weights;
+    }
+
+    fn weight(&self, i: usize) -> f64 {
+        self.weights.get(i).copied().filter(|w| *w > 0.0).unwrap_or(1.0)
+    }
+
+    /// Capacity-normalised depth the JSQ-family policies minimise.
+    fn rel_depth(&self, i: usize, depth: usize) -> f64 {
+        depth as f64 / self.weight(i)
+    }
+
+    fn argmin_rel(&self, depths: &[usize], up: Option<&[bool]>) -> usize {
+        let mut best = usize::MAX;
+        let mut best_d = f64::INFINITY;
+        for (i, &d) in depths.iter().enumerate() {
+            if let Some(u) = up {
+                if !u[i] {
+                    continue;
+                }
+            }
+            let rd = self.rel_depth(i, d);
+            if rd < best_d {
+                best_d = rd;
+                best = i;
+            }
+        }
+        best
     }
 
     /// Pick the target replica for a request at `station`, given each
-    /// replica's outstanding-request depth.
+    /// replica's outstanding-request depth. Every replica is assumed live.
     pub fn route(&mut self, station: u32, depths: &[usize]) -> usize {
+        self.route_up(station, depths, None).expect("route() needs ≥1 replica")
+    }
+
+    /// Liveness-aware routing: `up[i] == false` replicas are never picked
+    /// (down, draining, or still provisioning). Returns `None` when no
+    /// replica is live.
+    pub fn route_up(
+        &mut self,
+        station: u32,
+        depths: &[usize],
+        up: Option<&[bool]>,
+    ) -> Option<usize> {
         let n = depths.len();
-        debug_assert!(n > 0);
-        match self.policy {
+        if n == 0 {
+            return None;
+        }
+        let is_up = |i: usize| up.map(|u| u[i]).unwrap_or(true);
+        if !(0..n).any(is_up) {
+            return None;
+        }
+        Some(match self.policy {
             RoutePolicy::RoundRobin => {
-                let i = self.rr_next % n;
-                self.rr_next = self.rr_next.wrapping_add(1);
+                let mut i = self.rr_next % n;
+                while !is_up(i) {
+                    i = (i + 1) % n;
+                }
+                self.rr_next = i + 1;
                 i
             }
-            RoutePolicy::JoinShortestQueue => depths
-                .iter()
-                .enumerate()
-                .min_by_key(|&(i, d)| (*d, i))
-                .map(|(i, _)| i)
-                .unwrap_or(0),
-            RoutePolicy::StationSharded => station as usize % n,
-        }
+            RoutePolicy::JoinShortestQueue => self.argmin_rel(depths, up),
+            RoutePolicy::JsqD(d) => {
+                let d = d.max(1);
+                let live: Vec<usize> = (0..n).filter(|&i| is_up(i)).collect();
+                if live.len() <= d {
+                    self.argmin_rel(depths, up)
+                } else {
+                    // Partial Fisher–Yates: the first d entries are a
+                    // uniform distinct sample of the live replicas.
+                    let mut pool = live;
+                    let mut best = usize::MAX;
+                    let mut best_d = f64::INFINITY;
+                    for k in 0..d {
+                        let j = k + self.rng.index(pool.len() - k);
+                        pool.swap(k, j);
+                        let cand = pool[k];
+                        let rd = self.rel_depth(cand, depths[cand]);
+                        if rd < best_d {
+                            best_d = rd;
+                            best = cand;
+                        }
+                    }
+                    best
+                }
+            }
+            RoutePolicy::StationSharded => {
+                let mut i = station as usize % n;
+                while !is_up(i) {
+                    i = (i + 1) % n;
+                }
+                i
+            }
+        })
     }
 }
 
@@ -137,25 +264,89 @@ impl AdmissionPolicy {
     }
 }
 
-/// One cluster deployment: N identical replicas behind a router.
-#[derive(Debug, Clone, Copy)]
-pub struct ClusterConfig {
-    pub nodes: usize,
-    /// Per-replica topology and policies (including the result cache).
+/// What a replica *is*, economically: the purchasable element behind it
+/// and the throughput it is provisioned to sustain. This is the metadata
+/// path from [`crate::costmodel`] into the router (capacity weights) and
+/// the control plane (cost-aware scaling, per-class node-hours).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeClass {
+    /// Report/CLI label, e.g. `fpga-f1`, `cpu-c5`.
+    pub name: &'static str,
+    /// The catalogue element this node is billed as.
+    pub element: Element,
+    /// Modeled or measured single-node MCT saturation, queries/s — the
+    /// router weight and the autoscaler's capacity-planning input.
+    pub capacity_qps: f64,
+}
+
+impl NodeClass {
+    /// An f1.2xlarge-shaped FPGA node.
+    pub fn fpga_f1(capacity_qps: f64) -> NodeClass {
+        NodeClass { name: "fpga-f1", element: catalog::AWS_F1_2XL, capacity_qps }
+    }
+
+    /// A c5.12xlarge-shaped CPU-only node.
+    pub fn cpu_c5(capacity_qps: f64) -> NodeClass {
+        NodeClass { name: "cpu-c5", element: catalog::AWS_C5_12XL, capacity_qps }
+    }
+
+    /// Effective hourly price (purchases amortised; see
+    /// [`Element::hourly_usd`]).
+    pub fn hourly_usd(&self) -> f64 {
+        self.element.hourly_usd()
+    }
+
+    /// Marginal cost of capacity, $/h per query/s — what the cost-aware
+    /// autoscaler minimises when it picks a class to add.
+    pub fn cost_per_qps(&self) -> f64 {
+        self.hourly_usd() / self.capacity_qps.max(1e-9)
+    }
+}
+
+/// One replica of the (possibly heterogeneous) fleet: its economic class
+/// plus the Fig-5 topology and policies it runs.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub class: NodeClass,
     pub node: PipelineConfig,
+}
+
+/// One cluster deployment: N replicas behind a router. Homogeneous
+/// clusters come from [`ClusterConfig::new`]; mixed CPU/FPGA fleets from
+/// [`ClusterConfig::heterogeneous`].
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Per-replica class + topology.
+    pub specs: Vec<NodeSpec>,
     pub route: RoutePolicy,
     pub admission: AdmissionPolicy,
+    /// Seed of the router's JSQ(d) sampling stream.
+    pub route_seed: u64,
 }
 
 impl ClusterConfig {
+    /// N identical replicas of the default FPGA class.
     pub fn new(nodes: usize, node: PipelineConfig) -> ClusterConfig {
         assert!(nodes >= 1);
+        let class = NodeClass::fpga_f1(crate::costmodel::modeled_v2_node_qps());
+        ClusterConfig::heterogeneous(
+            (0..nodes).map(|_| NodeSpec { class: class.clone(), node }).collect(),
+        )
+    }
+
+    /// Mixed fleet from explicit per-node specs.
+    pub fn heterogeneous(specs: Vec<NodeSpec>) -> ClusterConfig {
+        assert!(!specs.is_empty());
         ClusterConfig {
-            nodes,
-            node,
+            specs,
             route: RoutePolicy::RoundRobin,
             admission: AdmissionPolicy::Open,
+            route_seed: 0,
         }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.specs.len()
     }
 
     pub fn with_route(mut self, route: RoutePolicy) -> ClusterConfig {
@@ -168,25 +359,66 @@ impl ClusterConfig {
         self
     }
 
+    pub fn with_route_seed(mut self, seed: u64) -> ClusterConfig {
+        self.route_seed = seed;
+        self
+    }
+
+    /// The run's router: policy + capacity weights from the node classes.
+    pub fn router(&self) -> Router {
+        Router::new(self.route)
+            .with_seed(self.route_seed)
+            .with_weights(self.specs.iter().map(|s| s.class.capacity_qps).collect())
+    }
+
+    /// True when every replica shares one class and topology (what
+    /// [`Cluster::new`] builds; the calibration-based cross-validations
+    /// require it).
+    pub fn is_homogeneous(&self) -> bool {
+        self.specs
+            .windows(2)
+            .all(|w| w[0].class.name == w[1].class.name && w[0].node == w[1].node)
+    }
+
     pub fn label(&self) -> String {
-        format!(
-            "{}×[{}] route={} adm={}",
-            self.nodes,
-            self.node.topology.label(),
-            self.route.label(),
-            self.admission.label()
-        )
+        let body = if self.is_homogeneous() {
+            format!("{}×[{}]", self.specs.len(), self.specs[0].node.topology.label())
+        } else {
+            group_label(
+                &self.specs,
+                |a, b| a.class.name == b.class.name && a.node == b.node,
+                |s| format!("{}[{}]", s.class.name, s.node.topology.label()),
+            )
+        };
+        format!("{} route={} adm={}", body, self.route.label(), self.admission.label())
     }
 }
 
 /// Per-replica slice of a cluster run.
 #[derive(Debug, Clone, Default)]
 pub struct NodeReport {
+    /// The replica's [`NodeClass`] name (`fpga-f1`, `cpu-c5`, …).
+    pub class: String,
+    /// Backend label the replica actually served with (real runs; the DES
+    /// copies the class name).
+    pub backend: String,
     pub completed_requests: usize,
     pub completed_queries: usize,
     pub req_p90_us: f64,
     pub cache_hit_rate: f64,
     pub mean_aggregation: f64,
+}
+
+/// Per-class rollup of a heterogeneous run — what makes a mixed fleet's
+/// report legible (which class served what share of the load).
+#[derive(Debug, Clone)]
+pub struct ClassAggregate {
+    pub class: String,
+    pub nodes: usize,
+    pub completed_requests: usize,
+    pub completed_queries: usize,
+    /// Worst per-node p90 inside the class (the class's SLA exposure).
+    pub max_p90_us: f64,
 }
 
 /// Outcome of one cluster run (real or simulated).
@@ -198,12 +430,18 @@ pub struct ClusterReport {
     pub offered_qps: f64,
     /// Completed queries over the run span, queries/s.
     pub achieved_qps: f64,
-    /// Requests offered / completed / dropped at admission.
+    /// Requests offered / completed / dropped at admission / lost to node
+    /// failure.
     pub requests: usize,
     pub completed: usize,
     pub dropped: usize,
+    /// Admitted requests that died with a failed node (only non-zero when
+    /// a failure leaves no live replica to reroute to; the drain/reroute
+    /// policy otherwise preserves every admitted request).
+    pub lost: usize,
     pub completed_queries: usize,
     pub dropped_queries: usize,
+    pub lost_queries: usize,
     /// Requests whose engine path failed (degraded replies).
     pub failed: usize,
     /// Fleet-level request latency (per-node samples merged).
@@ -217,9 +455,10 @@ pub struct ClusterReport {
 
 impl ClusterReport {
     /// The router-policy conservation invariant: every offered request is
-    /// either completed or visibly dropped — the fleet loses nothing.
+    /// exactly one of completed, visibly dropped at admission, or visibly
+    /// lost to a node failure — the fleet loses nothing silently.
     pub fn conserves_requests(&self) -> bool {
-        self.requests == self.completed + self.dropped
+        self.requests == self.completed + self.dropped + self.lost
     }
 
     /// A run "saturates" when it sheds load or visibly falls behind the
@@ -240,20 +479,56 @@ impl ClusterReport {
             .fold(0.0, f64::max)
     }
 
-    /// One-line summary for benches and the CLI.
+    /// Roll the per-node slices up by class, in first-seen order.
+    pub fn per_class(&self) -> Vec<ClassAggregate> {
+        let mut out: Vec<ClassAggregate> = Vec::new();
+        for n in &self.per_node {
+            let agg = match out.iter_mut().find(|a| a.class == n.class) {
+                Some(a) => a,
+                None => {
+                    out.push(ClassAggregate {
+                        class: n.class.clone(),
+                        nodes: 0,
+                        completed_requests: 0,
+                        completed_queries: 0,
+                        max_p90_us: 0.0,
+                    });
+                    out.last_mut().unwrap()
+                }
+            };
+            agg.nodes += 1;
+            agg.completed_requests += n.completed_requests;
+            agg.completed_queries += n.completed_queries;
+            agg.max_p90_us = agg.max_p90_us.max(n.req_p90_us);
+        }
+        out
+    }
+
+    /// One-line summary for benches and the CLI; heterogeneous runs append
+    /// the per-class completion split.
     pub fn summary(&self) -> String {
-        format!(
-            "{} | offered {:.2} Mq/s → achieved {:.2} Mq/s | {}/{} completed, {} dropped | \
-             p90 {:.0} µs | cache {:.0} %",
+        let mut s = format!(
+            "{} | offered {:.2} Mq/s → achieved {:.2} Mq/s | {}/{} completed, {} dropped, \
+             {} lost | p90 {:.0} µs | cache {:.0} %",
             self.label,
             self.offered_qps / 1e6,
             self.achieved_qps / 1e6,
             self.completed,
             self.requests,
             self.dropped,
+            self.lost,
             self.req_p90_us,
             self.cache_hit_rate * 100.0,
-        )
+        );
+        let classes = self.per_class();
+        if classes.len() > 1 {
+            let split: Vec<String> = classes
+                .iter()
+                .map(|c| format!("{}×{} {} req", c.nodes, c.class, c.completed_requests))
+                .collect();
+            s.push_str(&format!(" | by class: {}", split.join(", ")));
+        }
+        s
     }
 }
 
@@ -278,6 +553,26 @@ pub(crate) fn update_service_estimate(
     } else {
         prev_us + SERVICE_EWMA_ALPHA * (observed - prev_us)
     }
+}
+
+/// Group consecutive equal items into `N×label` parts joined by `+` —
+/// the shared grammar of the heterogeneous fleet labels (real and sim).
+pub(crate) fn group_label<T>(
+    items: &[T],
+    eq: impl Fn(&T, &T) -> bool,
+    fmt: impl Fn(&T) -> String,
+) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < items.len() {
+        let mut j = i + 1;
+        while j < items.len() && eq(&items[i], &items[j]) {
+            j += 1;
+        }
+        parts.push(format!("{}×{}", j - i, fmt(&items[i])));
+        i = j;
+    }
+    parts.join("+")
 }
 
 /// Merge per-node latency collectors into fleet-level percentiles.
@@ -315,6 +610,43 @@ mod tests {
     }
 
     #[test]
+    fn router_jsq_normalises_by_capacity_weights() {
+        // Node 1 has 4× the capacity: at depths 3 vs 8 its *relative* load
+        // (8/4 = 2) is still lighter than node 0's (3/1 = 3).
+        let mut r = Router::new(RoutePolicy::JoinShortestQueue)
+            .with_weights(vec![1.0, 4.0]);
+        assert_eq!(r.route(0, &[3, 8]), 1);
+        assert_eq!(r.route(0, &[1, 8]), 0, "past 4×, the big node is busier");
+    }
+
+    #[test]
+    fn router_jsqd_samples_d_and_never_picks_the_worst() {
+        // With d = 2 of 4 and one empty queue, JSQ(2) must always pick a
+        // queue no deeper than the second-shortest of its sample — in
+        // particular never the unique deepest one.
+        let mut r = Router::new(RoutePolicy::JsqD(2)).with_seed(7);
+        let depths = [9usize, 3, 0, 4];
+        for _ in 0..64 {
+            let pick = r.route_up(0, &depths, None).unwrap();
+            assert_ne!(pick, 0, "two distinct samples always beat the deepest queue");
+        }
+        // d ≥ n degrades to exact JSQ.
+        let mut full = Router::new(RoutePolicy::JsqD(8)).with_seed(7);
+        assert_eq!(full.route(0, &depths), 2);
+    }
+
+    #[test]
+    fn router_jsqd_is_seeded_deterministic() {
+        let depths = [5usize, 1, 3, 2, 4];
+        let run = |seed| {
+            let mut r = Router::new(RoutePolicy::JsqD(2)).with_seed(seed);
+            (0..32).map(|_| r.route(0, &depths)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12), "different seeds sample differently");
+    }
+
+    #[test]
     fn router_station_sharded_is_stable_per_station() {
         let mut r = Router::new(RoutePolicy::StationSharded);
         let depths = [100usize, 0, 0, 0]; // ignores load entirely
@@ -322,6 +654,28 @@ mod tests {
         assert_eq!(r.route(8, &depths), 0);
         assert_eq!(r.route(9, &depths), 1);
         assert_eq!(r.route(11, &depths), 3);
+    }
+
+    #[test]
+    fn router_skips_down_nodes_and_reports_dead_fleet() {
+        let depths = [0usize, 0, 0];
+        let up = [false, true, false];
+        for policy in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::JoinShortestQueue,
+            RoutePolicy::JsqD(2),
+            RoutePolicy::StationSharded,
+        ] {
+            let mut r = Router::new(policy);
+            for station in 0..6u32 {
+                assert_eq!(
+                    r.route_up(station, &depths, Some(&up)),
+                    Some(1),
+                    "{policy:?} must land on the only live node"
+                );
+            }
+            assert_eq!(r.route_up(0, &depths, Some(&[false; 3])), None);
+        }
     }
 
     #[test]
@@ -341,10 +695,13 @@ mod tests {
         for p in [
             RoutePolicy::RoundRobin,
             RoutePolicy::JoinShortestQueue,
+            RoutePolicy::JsqD(2),
+            RoutePolicy::JsqD(3),
             RoutePolicy::StationSharded,
         ] {
-            assert_eq!(RoutePolicy::parse(p.label()), Some(p));
+            assert_eq!(RoutePolicy::parse(&p.label()), Some(p));
         }
+        assert_eq!(RoutePolicy::parse("jsqd:0"), None, "d must be ≥ 1");
         assert_eq!(RoutePolicy::parse("nope"), None);
     }
 
@@ -370,5 +727,79 @@ mod tests {
             .with_route(RoutePolicy::StationSharded)
             .with_admission(AdmissionPolicy::QueueCap(16));
         assert_eq!(cfg.label(), "4×[2p 1w 1k 4e] route=shard adm=cap:16");
+    }
+
+    #[test]
+    fn heterogeneous_config_labels_and_weights() {
+        let fpga = NodeSpec {
+            class: NodeClass::fpga_f1(30e6),
+            node: PipelineConfig::new(Topology::new(2, 1, 1, 4)),
+        };
+        let cpu = NodeSpec {
+            class: NodeClass::cpu_c5(2e6),
+            node: PipelineConfig::new(Topology::new(2, 1, 1, 1)),
+        };
+        let cfg = ClusterConfig::heterogeneous(vec![fpga.clone(), fpga, cpu])
+            .with_route(RoutePolicy::JsqD(2));
+        assert_eq!(cfg.nodes(), 3);
+        assert_eq!(
+            cfg.label(),
+            "2×fpga-f1[2p 1w 1k 4e]+1×cpu-c5[2p 1w 1k 1e] route=jsq2 adm=open"
+        );
+        // The router inherits the classes' capacities as weights: at equal
+        // depth, relative load on the FPGA node is 15× lighter.
+        let mut router = cfg.router();
+        assert_eq!(router.route(0, &[4, 4, 1]), 0);
+    }
+
+    #[test]
+    fn node_class_cost_metadata_flows_from_costmodel() {
+        let f1 = NodeClass::fpga_f1(30e6);
+        assert_eq!(f1.element.name, "f1.2xlarge");
+        assert!(f1.hourly_usd() > 0.0);
+        let cheap = NodeClass::cpu_c5(30e6);
+        // Same capacity, different price ⇒ cost_per_qps orders the classes.
+        assert!(cheap.cost_per_qps() != f1.cost_per_qps());
+    }
+
+    #[test]
+    fn per_class_aggregates_roll_up_mixed_fleets() {
+        let node = |class: &str, req: usize, p90: f64| NodeReport {
+            class: class.into(),
+            backend: class.into(),
+            completed_requests: req,
+            completed_queries: req * 10,
+            req_p90_us: p90,
+            cache_hit_rate: 0.0,
+            mean_aggregation: 1.0,
+        };
+        let r = ClusterReport {
+            label: "t".into(),
+            route: "rr".into(),
+            offered_qps: 0.0,
+            achieved_qps: 0.0,
+            requests: 70,
+            completed: 60,
+            dropped: 6,
+            lost: 4,
+            completed_queries: 600,
+            dropped_queries: 60,
+            lost_queries: 40,
+            failed: 0,
+            req_p50_us: 0.0,
+            req_p90_us: 0.0,
+            req_p99_us: 0.0,
+            cache_hit_rate: 0.0,
+            per_node: vec![node("fpga-f1", 25, 900.0), node("cpu-c5", 10, 1500.0), node("fpga-f1", 25, 700.0)],
+        };
+        assert!(r.conserves_requests(), "completed + dropped + lost");
+        let by_class = r.per_class();
+        assert_eq!(by_class.len(), 2);
+        assert_eq!(by_class[0].class, "fpga-f1");
+        assert_eq!(by_class[0].nodes, 2);
+        assert_eq!(by_class[0].completed_requests, 50);
+        assert_eq!(by_class[0].max_p90_us, 900.0);
+        assert_eq!(by_class[1].nodes, 1);
+        assert!(r.summary().contains("by class"), "{}", r.summary());
     }
 }

@@ -4,11 +4,18 @@
 //!
 //! The injector paces arrivals on the wall clock (best effort — once the
 //! fleet lags the schedule, the backlog itself is the measurement), routes
-//! per [`RoutePolicy`] using live per-replica outstanding counts, and
-//! applies [`AdmissionPolicy`] with a running per-replica mean-service
-//! estimate fed back from completions. A collector thread folds tagged
-//! completions into per-node latency collectors, merged into fleet
-//! quantiles at the end ([`Percentiles::merge`]).
+//! per [`RoutePolicy`](super::RoutePolicy) using live per-replica
+//! outstanding counts (capacity-weighted on heterogeneous fleets), and
+//! applies [`AdmissionPolicy`](super::AdmissionPolicy) with a running
+//! per-replica mean-service estimate fed back from completions. A
+//! collector thread folds tagged completions into per-node latency
+//! collectors, merged into fleet quantiles at the end
+//! ([`Percentiles::merge`]).
+//!
+//! Heterogeneity: each replica is built from its own
+//! [`NodeSpec`](super::NodeSpec)'s factory ([`Cluster::heterogeneous`]),
+//! so CPU-baseline and FPGA-engine replicas serve side by side and the
+//! report's per-class aggregates show who carried what.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -22,36 +29,50 @@ use crate::coordinator::Percentiles;
 use crate::workload::ArrivalSource;
 
 use super::{
-    merged_quantiles, update_service_estimate, ClusterConfig, ClusterReport, NodeReport, Router,
+    merged_quantiles, update_service_estimate, ClusterConfig, ClusterReport, NodeReport,
 };
 
-/// A runnable cluster: every replica is built from the same factory (the
+/// A runnable cluster: every replica is built from its spec's factory (the
 /// backends themselves are constructed inside each replica's engine
 /// threads).
 pub struct Cluster {
     pub config: ClusterConfig,
-    factory: BackendFactory,
+    factories: Vec<BackendFactory>,
 }
 
 impl Cluster {
+    /// Homogeneous cluster: every replica built from the same factory.
     pub fn new(config: ClusterConfig, factory: BackendFactory) -> Cluster {
-        Cluster { config, factory }
+        let factories = vec![factory; config.nodes()];
+        Cluster { config, factories }
+    }
+
+    /// Heterogeneous cluster: one factory per [`NodeSpec`](super::NodeSpec)
+    /// in `config.specs`, in order.
+    pub fn heterogeneous(config: ClusterConfig, factories: Vec<BackendFactory>) -> Cluster {
+        assert_eq!(
+            factories.len(),
+            config.nodes(),
+            "one backend factory per node spec"
+        );
+        Cluster { config, factories }
     }
 
     /// Serve the arrival stream and report. Conservation is structural:
     /// every arrival is either dropped at admission or submitted, and
     /// every submission produces exactly one completion.
     pub fn run(&self, source: &mut dyn ArrivalSource) -> Result<ClusterReport> {
-        let n = self.config.nodes;
-        let nodes: Vec<NodeCore> =
-            (0..n).map(|_| NodeCore::spawn(&self.config.node, &self.factory)).collect();
+        let n = self.config.nodes();
+        let nodes: Vec<NodeCore> = (0..n)
+            .map(|i| NodeCore::spawn(&self.config.specs[i].node, &self.factories[i]))
+            .collect();
         let (ctx, crx) = mpsc::channel::<Completion>();
         // Per-replica mean-service estimate, f64 bits in atomics so the
         // injector reads what the collector writes.
         let est_service: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
 
         let t0 = Instant::now();
-        let mut router = Router::new(self.config.route);
+        let mut router = self.config.router();
         let mut requests = 0usize;
         let mut dropped = 0usize;
         let mut dropped_queries = 0usize;
@@ -116,6 +137,8 @@ impl Cluster {
         let mut lat = lat;
         let per_node: Vec<NodeReport> = (0..n)
             .map(|i| NodeReport {
+                class: self.config.specs[i].class.name.to_string(),
+                backend: stats[i].backend.clone(),
                 completed_requests: completed[i],
                 completed_queries: completed_q[i],
                 req_p90_us: if lat[i].is_empty() { 0.0 } else { lat[i].p90() },
@@ -129,14 +152,19 @@ impl Cluster {
 
         Ok(ClusterReport {
             label: self.config.label(),
-            route: self.config.route.label().to_string(),
+            route: self.config.route.label(),
             offered_qps: source.offered_qps(),
             achieved_qps: completed_queries as f64 / wall_s,
             requests,
             completed: completed_total,
             dropped,
+            // The real cluster's failure story is drain-based (see
+            // `controlplane::real`): a submitted request always completes,
+            // so nothing is ever lost here.
+            lost: 0,
             completed_queries,
             dropped_queries,
+            lost_queries: 0,
             failed,
             req_p50_us: p50,
             req_p90_us: p90,
@@ -150,7 +178,7 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{AdmissionPolicy, RoutePolicy};
+    use crate::cluster::{AdmissionPolicy, NodeClass, NodeSpec, RoutePolicy};
     use crate::coordinator::{AggregationPolicy, PipelineConfig, Topology};
     use crate::nfa::constraint_gen::HardwareConfig;
     use crate::rules::standard::StandardVersion;
@@ -177,6 +205,7 @@ mod tests {
         assert_eq!(r.requests, 150);
         assert_eq!(r.completed, 150);
         assert_eq!(r.dropped, 0);
+        assert_eq!(r.lost, 0);
         assert_eq!(r.completed_queries, 150 * 16);
         assert_eq!(r.failed, 0);
         assert!(r.req_p90_us >= r.req_p50_us);
@@ -246,5 +275,46 @@ mod tests {
         );
         // The price of affinity: zipf skew concentrates load.
         assert!(sh.max_node_share() > rr.max_node_share());
+    }
+
+    #[test]
+    fn heterogeneous_cluster_serves_with_mixed_backends() {
+        // A real mixed fleet: two native-FPGA replicas plus one CPU-baseline
+        // replica behind one weighted-JSQ router. Everything completes, and
+        // the per-class rollup shows both classes serving.
+        let f = compile_fixture(911, 250, StandardVersion::V2, HardwareConfig::v2_aws(4));
+        let fpga_spec = NodeSpec { class: NodeClass::fpga_f1(20e6), node: node_cfg() };
+        let cpu_spec = NodeSpec { class: NodeClass::cpu_c5(2e6), node: node_cfg() };
+        let cfg = ClusterConfig::heterogeneous(vec![
+            fpga_spec.clone(),
+            fpga_spec,
+            cpu_spec,
+        ])
+        .with_route(RoutePolicy::JoinShortestQueue);
+        let factories = vec![f.native_factory(), f.native_factory(), f.cpu_factory()];
+        let mut src = PoissonSource::new(&f.world, 5, 1e6, 16, 180);
+        let r = Cluster::heterogeneous(cfg, factories).run(&mut src).unwrap();
+        assert!(r.conserves_requests());
+        assert_eq!(r.completed, 180);
+        assert_eq!(r.failed, 0);
+        let classes = r.per_class();
+        assert_eq!(classes.len(), 2, "{classes:?}");
+        // The CPU replica's report row is labelled with its real backend.
+        let cpu_row = r.per_node.iter().find(|n| n.class == "cpu-c5").unwrap();
+        assert_eq!(cpu_row.backend, "cpu");
+        assert!(r.summary().contains("by class"), "{}", r.summary());
+    }
+
+    #[test]
+    fn jsq2_conserves_on_the_real_cluster() {
+        let (factory, world) = fixture();
+        let cfg = ClusterConfig::new(3, node_cfg())
+            .with_route(RoutePolicy::JsqD(2))
+            .with_route_seed(99);
+        let mut src = PoissonSource::new(&world, 17, 1e6, 16, 120);
+        let r = Cluster::new(cfg, factory).run(&mut src).unwrap();
+        assert!(r.conserves_requests());
+        assert_eq!(r.completed, 120);
+        assert_eq!(r.route, "jsq2");
     }
 }

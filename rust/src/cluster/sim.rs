@@ -1,8 +1,11 @@
 //! Deterministic discrete-event simulation of the fleet: N replica nodes,
-//! each a *feeder stage* (CPU-side scheduling + encoding, `feeders_per_node`
-//! parallel servers) in front of one accelerator kernel (the
-//! [`FpgaModel`] datapath) — the §6.1 shape where "a powerful FPGA
-//! [starves] behind a weak CPU feeder".
+//! each a *feeder stage* (CPU-side scheduling + encoding, per-node
+//! parallel servers) in front of the node's engine — either one
+//! accelerator kernel (the [`FpgaModel`] datapath: the §6.1 shape where "a
+//! powerful FPGA [starves] behind a weak CPU feeder") or, since the
+//! control-plane refactor, a CPU-only match path whose feeders answer in
+//! place ([`SimEngine::Cpu`]), so heterogeneous CPU/FPGA fleets simulate
+//! behind one router.
 //!
 //! The feeder:FPGA ratio is the experiment variable: with one feeder the
 //! encode rate caps achieved throughput at a small fraction of the kernel
@@ -12,11 +15,11 @@
 //! into fleet sizes.
 //!
 //! Routing/admission mirror the real cluster ([`super::real`]): the same
-//! [`Router`] and [`AdmissionPolicy`] code runs inside the event loop, and
-//! per-node LRU caches (same [`LruCache`] as the real
-//! [`CachedBackend`](crate::backend::CachedBackend), over the same
-//! canonical keys) model the §5.2 hot-connection hit rates — cache hits
-//! skip both the encode share and the kernel pass.
+//! [`Router`] and [`AdmissionPolicy`] code runs inside the event loop
+//! (capacity weights included), and per-node LRU caches (same [`LruCache`]
+//! as the real [`CachedBackend`](crate::backend::CachedBackend), over the
+//! same canonical keys) model the §5.2 hot-connection hit rates — cache
+//! hits skip both the encode share and the kernel pass.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -26,12 +29,16 @@ use crate::coordinator::{Overheads, Percentiles};
 use crate::erbium::FpgaModel;
 use crate::nfa::constraint_gen::HardwareConfig;
 use crate::prng::Rng;
-use crate::workload::{Arrival, ArrivalSource};
+use crate::workload::{Arrival, ArrivalSource, RateSchedule};
 
 use super::{
     merged_quantiles, update_service_estimate, AdmissionPolicy, ClusterReport, NodeReport,
     RoutePolicy, Router,
 };
+
+/// Reference batch size for relative capacity weights (router bias on
+/// heterogeneous fleets; only ratios matter).
+pub const ROUTER_WEIGHT_BATCH: usize = 1024;
 
 /// Payload-free arrival for the simulator: timings, the routing station,
 /// and (when cache behaviour matters) the canonical query keys.
@@ -66,6 +73,25 @@ pub fn sim_arrivals(source: &mut dyn ArrivalSource, with_keys: bool) -> Vec<SimA
     out
 }
 
+fn synth_arrival(
+    rng: &mut Rng,
+    clock_us: f64,
+    batch_per_request: usize,
+    n_stations: usize,
+    station_skew: f64,
+    keys_per_station: usize,
+) -> SimArrival {
+    let station = rng.zipf(n_stations, station_skew) as u32;
+    let keys = if keys_per_station > 0 {
+        (0..batch_per_request)
+            .map(|_| ((station as u64) << 32) | rng.zipf(keys_per_station, 1.05) as u64)
+            .collect()
+    } else {
+        Vec::new()
+    };
+    SimArrival { at_us: clock_us, station, n_queries: batch_per_request, keys }
+}
+
 /// Synthetic Poisson arrivals without a `World`: zipf-skewed stations and
 /// (optionally) zipf-repeating synthetic keys per station, so cache and
 /// routing behaviour can be swept cheaply at any scale.
@@ -85,54 +111,173 @@ pub fn poisson_sim_arrivals(
     (0..n_requests)
         .map(|_| {
             clock_us += -(1.0 - rng.f64()).ln() / rate_rps * 1e6;
-            let station = rng.zipf(n_stations, station_skew) as u32;
-            let keys = if keys_per_station > 0 {
-                (0..batch_per_request)
-                    .map(|_| {
-                        ((station as u64) << 32)
-                            | rng.zipf(keys_per_station, 1.05) as u64
-                    })
-                    .collect()
-            } else {
-                Vec::new()
-            };
-            SimArrival { at_us: clock_us, station, n_queries: batch_per_request, keys }
+            synth_arrival(
+                &mut rng,
+                clock_us,
+                batch_per_request,
+                n_stations,
+                station_skew,
+                keys_per_station,
+            )
         })
         .collect()
+}
+
+/// Like [`poisson_sim_arrivals`], but the request rate follows a
+/// [`RateSchedule`] (diurnal sinusoid or piecewise steps): the
+/// inter-arrival gap is drawn against the instantaneous rate, so offered
+/// load breathes over the run — the input the autoscaling experiments
+/// drive their fleets with.
+#[allow(clippy::too_many_arguments)]
+pub fn scheduled_sim_arrivals(
+    seed: u64,
+    schedule: &RateSchedule,
+    batch_per_request: usize,
+    n_requests: usize,
+    n_stations: usize,
+    station_skew: f64,
+    keys_per_station: usize,
+) -> Vec<SimArrival> {
+    assert!(n_stations > 0);
+    let mut rng = Rng::new(seed ^ 0xD1_42A1);
+    let mut clock_us = 0.0;
+    (0..n_requests)
+        .map(|_| {
+            clock_us += schedule.poisson_gap_us(clock_us, rng.f64());
+            synth_arrival(
+                &mut rng,
+                clock_us,
+                batch_per_request,
+                n_stations,
+                station_skew,
+                keys_per_station,
+            )
+        })
+        .collect()
+}
+
+/// What answers the queries on one simulated node.
+#[derive(Debug, Clone, Copy)]
+pub enum SimEngine {
+    /// Feeders encode, one accelerator kernel evaluates the batch.
+    Fpga { hw: HardwareConfig, depth: usize },
+    /// CPU-only node: each feeder answers its request in place at
+    /// `per_query_us` per (uncached) query — no kernel stage, the §5.2
+    /// baseline as a fleet citizen.
+    Cpu { per_query_us: f64 },
+}
+
+/// One simulated replica: its class label, feeder parallelism and engine.
+#[derive(Debug, Clone, Copy)]
+pub struct SimNodeSpec {
+    /// Class label matching the control plane's
+    /// [`NodeClass`](super::NodeClass) name.
+    pub class_name: &'static str,
+    /// Parallel feeder servers (the vCPU-shaped knob: each runs the
+    /// per-request scheduling + encoding serially).
+    pub feeders: usize,
+    pub engine: SimEngine,
+}
+
+impl SimNodeSpec {
+    /// The paper's cloud FPGA node (MCT v2 on AWS F1, 4 engines, XDMA).
+    pub fn v2_cloud(feeders: usize) -> SimNodeSpec {
+        assert!(feeders >= 1);
+        SimNodeSpec {
+            class_name: "fpga-f1",
+            feeders,
+            engine: SimEngine::Fpga { hw: HardwareConfig::v2_aws(4), depth: 26 },
+        }
+    }
+
+    /// A CPU-only node with `feeders` cores of the §5.2 baseline.
+    pub fn cpu(feeders: usize, per_query_us: f64) -> SimNodeSpec {
+        assert!(feeders >= 1 && per_query_us > 0.0);
+        SimNodeSpec { class_name: "cpu-c5", feeders, engine: SimEngine::Cpu { per_query_us } }
+    }
+
+    pub fn with_class(mut self, name: &'static str) -> SimNodeSpec {
+        self.class_name = name;
+        self
+    }
+
+    /// The datapath model of this node's kernel (FPGA nodes only).
+    pub fn kernel_model(&self) -> Option<FpgaModel> {
+        match self.engine {
+            SimEngine::Fpga { hw, depth } => Some(FpgaModel::new(hw, depth)),
+            SimEngine::Cpu { .. } => None,
+        }
+    }
+
+    /// Nominal sustained capacity at `batch`-sized requests, queries/s:
+    /// the min of what the feeders encode and what the engine evaluates.
+    /// Feeds router weights and the autoscaler's utilisation estimate.
+    pub fn capacity_qps(&self, o: &Overheads, batch: usize) -> f64 {
+        let b = batch.max(1) as f64;
+        match self.engine {
+            SimEngine::Fpga { hw, depth } => {
+                let model = FpgaModel::new(hw, depth);
+                let feeder_us = o.sched.us(batch) + o.encode.us(batch);
+                let feeder_qps = self.feeders as f64 * b / feeder_us.max(1e-9) * 1e6;
+                let kernel_us =
+                    o.xrt.submission_us(self.feeders) + model.batch_timing(batch).total_us;
+                let kernel_qps = b / kernel_us.max(1e-9) * 1e6;
+                feeder_qps.min(kernel_qps)
+            }
+            SimEngine::Cpu { per_query_us } => {
+                let svc_us = o.sched.us(batch) + b * per_query_us;
+                self.feeders as f64 * b / svc_us.max(1e-9) * 1e6
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        match self.engine {
+            SimEngine::Fpga { hw, .. } => {
+                format!("{}[{}f 1k {}e]", self.class_name, self.feeders, hw.engines)
+            }
+            SimEngine::Cpu { .. } => format!("{}[{}f]", self.class_name, self.feeders),
+        }
+    }
 }
 
 /// Fleet-simulation parameters.
 #[derive(Debug, Clone)]
 pub struct ClusterSimConfig {
-    pub nodes: usize,
-    /// Parallel feeder servers per node (the vCPU-shaped knob: each runs
-    /// the per-request scheduling + encoding serially).
-    pub feeders_per_node: usize,
+    /// Per-replica spec — heterogeneous fleets mix entries.
+    pub specs: Vec<SimNodeSpec>,
     pub route: RoutePolicy,
     pub admission: AdmissionPolicy,
     /// Per-node hot-connection LRU capacity (needs keyed arrivals).
     pub cache_capacity: Option<usize>,
-    /// Kernel hardware of each node's accelerator.
-    pub hw: HardwareConfig,
-    /// NFA depth (22 v1 / 26 v2).
-    pub depth: usize,
     pub overheads: Overheads,
+    /// Seed of the router's JSQ(d) sampling stream.
+    pub route_seed: u64,
 }
 
 impl ClusterSimConfig {
-    /// The paper's cloud node (MCT v2 on AWS F1, 4 engines, XDMA).
+    /// `nodes` identical copies of the paper's cloud node
+    /// ([`SimNodeSpec::v2_cloud`]).
     pub fn v2_cloud(nodes: usize, feeders_per_node: usize) -> ClusterSimConfig {
-        assert!(nodes >= 1 && feeders_per_node >= 1);
+        assert!(nodes >= 1);
+        ClusterSimConfig::heterogeneous(vec![SimNodeSpec::v2_cloud(feeders_per_node); nodes])
+    }
+
+    /// Mixed fleet from explicit per-node specs.
+    pub fn heterogeneous(specs: Vec<SimNodeSpec>) -> ClusterSimConfig {
+        assert!(!specs.is_empty());
         ClusterSimConfig {
-            nodes,
-            feeders_per_node,
+            specs,
             route: RoutePolicy::RoundRobin,
             admission: AdmissionPolicy::Open,
             cache_capacity: None,
-            hw: HardwareConfig::v2_aws(4),
-            depth: 26,
             overheads: Overheads::default(),
+            route_seed: 0,
         }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.specs.len()
     }
 
     pub fn with_route(mut self, route: RoutePolicy) -> ClusterSimConfig {
@@ -150,17 +295,40 @@ impl ClusterSimConfig {
         self
     }
 
-    /// The datapath model of one node's kernel.
+    pub fn with_route_seed(mut self, seed: u64) -> ClusterSimConfig {
+        self.route_seed = seed;
+        self
+    }
+
+    /// The datapath model of the first FPGA node's kernel (the nominal
+    /// ceiling the §6.1 sweeps compare against); the v2 cloud default when
+    /// the fleet is CPU-only.
     pub fn kernel_model(&self) -> FpgaModel {
-        FpgaModel::new(self.hw, self.depth)
+        self.specs
+            .iter()
+            .find_map(SimNodeSpec::kernel_model)
+            .unwrap_or_else(|| FpgaModel::new(HardwareConfig::v2_aws(4), 26))
+    }
+
+    /// The run's router: policy + capacity weights from the specs.
+    pub fn router(&self) -> Router {
+        Router::new(self.route).with_seed(self.route_seed).with_weights(
+            self.specs
+                .iter()
+                .map(|s| s.capacity_qps(&self.overheads, ROUTER_WEIGHT_BATCH))
+                .collect(),
+        )
     }
 
     pub fn label(&self) -> String {
+        let body = super::group_label(
+            &self.specs,
+            |a, b| a.class_name == b.class_name && a.feeders == b.feeders,
+            SimNodeSpec::label,
+        );
         format!(
-            "sim {}×[{}f 1k {}e] route={} adm={}",
-            self.nodes,
-            self.feeders_per_node,
-            self.hw.engines,
+            "sim {} route={} adm={}",
+            body,
             self.route.label(),
             self.admission.label()
         )
@@ -171,7 +339,8 @@ impl ClusterSimConfig {
 enum Event {
     /// Request reaches the router (post transport).
     Arrive { req: usize },
-    /// A feeder finished scheduling + encoding the request's misses.
+    /// A feeder finished scheduling + encoding the request's misses (CPU
+    /// nodes: finished answering them outright).
     FeederDone { req: usize },
     /// The node's kernel finished the request's misses.
     KernelDone { node: usize, req: usize },
@@ -195,6 +364,8 @@ struct ReqSim {
 }
 
 struct NodeSim {
+    spec: SimNodeSpec,
+    model: Option<FpgaModel>,
     queue: VecDeque<usize>,
     free_feeders: usize,
     kernel_busy: bool,
@@ -209,19 +380,16 @@ struct NodeSim {
     lat: Percentiles,
 }
 
-/// Run the fleet simulation; deterministic for a given config + arrivals.
-pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> ClusterReport {
-    let o = &cfg.overheads;
-    let model = cfg.kernel_model();
-    let n_nodes = cfg.nodes;
-    let mut router = Router::new(cfg.route);
-    let mut nodes: Vec<NodeSim> = (0..n_nodes)
-        .map(|_| NodeSim {
+impl NodeSim {
+    fn of(spec: SimNodeSpec, cache_capacity: Option<usize>) -> NodeSim {
+        NodeSim {
+            spec,
+            model: spec.kernel_model(),
             queue: VecDeque::new(),
-            free_feeders: cfg.feeders_per_node,
+            free_feeders: spec.feeders,
             kernel_busy: false,
             kernel_queue: VecDeque::new(),
-            cache: cfg.cache_capacity.map(LruCache::new),
+            cache: cache_capacity.map(LruCache::new),
             outstanding: 0,
             // 0 until the first completion: like the real cluster, the
             // SLA controller never drops blind.
@@ -231,8 +399,16 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
             lookups: 0,
             hits: 0,
             lat: Percentiles::new(),
-        })
-        .collect();
+        }
+    }
+}
+
+/// Run the fleet simulation; deterministic for a given config + arrivals.
+pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> ClusterReport {
+    let o = &cfg.overheads;
+    let mut router = cfg.router();
+    let mut nodes: Vec<NodeSim> =
+        cfg.specs.iter().map(|s| NodeSim::of(*s, cfg.cache_capacity)).collect();
 
     let mut reqs: Vec<ReqSim> = Vec::with_capacity(arrivals.len());
     let mut heap: EventHeap = BinaryHeap::new();
@@ -258,7 +434,8 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
 
     // Start the next queued request on a free feeder: the cache speaks at
     // feed time (hits skip encode and the kernel), then the feeder spends
-    // the scheduling + encode service.
+    // the scheduling + service share — encode for FPGA nodes, the whole
+    // match for CPU nodes.
     #[allow(clippy::too_many_arguments)]
     fn try_start_feeder(
         node_idx: usize,
@@ -292,19 +469,21 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
             }
             reqs[rid].misses = misses;
             node.free_feeders -= 1;
-            let service = o.sched.us(reqs[rid].n) + o.encode.us(misses);
+            let service = match node.spec.engine {
+                SimEngine::Fpga { .. } => o.sched.us(reqs[rid].n) + o.encode.us(misses),
+                SimEngine::Cpu { per_query_us } => {
+                    o.sched.us(reqs[rid].n) + misses as f64 * per_query_us
+                }
+            };
             push_event(heap, seq, now + service, Event::FeederDone { req: rid });
         }
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn try_start_kernel(
         node_idx: usize,
         nodes: &mut [NodeSim],
         reqs: &[ReqSim],
-        feeders: usize,
         o: &Overheads,
-        model: &FpgaModel,
         now: f64,
         heap: &mut EventHeap,
         seq: &mut u64,
@@ -314,9 +493,10 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
             return;
         }
         let Some(rid) = node.kernel_queue.pop_front() else { return };
+        let model = node.model.as_ref().expect("kernel queue on a CPU node");
         node.kernel_busy = true;
-        let service =
-            o.xrt.submission_us(feeders) + model.batch_timing(reqs[rid].misses).total_us;
+        let service = o.xrt.submission_us(node.spec.feeders)
+            + model.batch_timing(reqs[rid].misses).total_us;
         push_event(heap, seq, now + service, Event::KernelDone { node: node_idx, req: rid });
     }
 
@@ -353,16 +533,15 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
             Event::FeederDone { req } => {
                 let node_idx = reqs[req].node;
                 nodes[node_idx].free_feeders += 1;
-                if reqs[req].misses == 0 {
-                    // Pure cache hit: no kernel pass needed.
+                let cpu_node = matches!(nodes[node_idx].spec.engine, SimEngine::Cpu { .. });
+                if cpu_node || reqs[req].misses == 0 {
+                    // CPU nodes answer in the feeder; pure cache hits need
+                    // no kernel pass on any node.
                     let done = complete(&mut nodes[node_idx], req, &reqs, now);
                     makespan = makespan.max(done);
                 } else {
                     nodes[node_idx].kernel_queue.push_back(req);
-                    try_start_kernel(
-                        node_idx, &mut nodes, &reqs, cfg.feeders_per_node, o, &model, now,
-                        &mut heap, &mut seq,
-                    );
+                    try_start_kernel(node_idx, &mut nodes, &reqs, o, now, &mut heap, &mut seq);
                 }
                 try_start_feeder(
                     node_idx, &mut nodes, &mut reqs, arrivals, o, now, &mut heap, &mut seq,
@@ -372,10 +551,7 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
                 nodes[node].kernel_busy = false;
                 let done = complete(&mut nodes[node], req, &reqs, now);
                 makespan = makespan.max(done);
-                try_start_kernel(
-                    node, &mut nodes, &reqs, cfg.feeders_per_node, o, &model, now, &mut heap,
-                    &mut seq,
-                );
+                try_start_kernel(node, &mut nodes, &reqs, o, now, &mut heap, &mut seq);
             }
         }
     }
@@ -395,6 +571,8 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
     let per_node: Vec<NodeReport> = nodes
         .iter_mut()
         .map(|n| NodeReport {
+            class: n.spec.class_name.to_string(),
+            backend: n.spec.class_name.to_string(),
             completed_requests: n.completed,
             completed_queries: n.completed_q,
             req_p90_us: if n.lat.is_empty() { 0.0 } else { n.lat.p90() },
@@ -405,14 +583,16 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
 
     ClusterReport {
         label: cfg.label(),
-        route: cfg.route.label().to_string(),
+        route: cfg.route.label(),
         offered_qps: offered_q as f64 / (window_us.max(1.0) * 1e-6),
         achieved_qps: completed_queries as f64 / (makespan.max(1e-9) * 1e-6),
         requests: arrivals.len(),
         completed,
         dropped,
+        lost: 0,
         completed_queries,
         dropped_queries: dropped_q,
+        lost_queries: 0,
         failed: 0,
         req_p50_us: p50,
         req_p90_us: p90,
@@ -432,6 +612,16 @@ pub fn measure_node_saturation_qps(feeders: usize, batch: usize, requests: usize
     simulate_cluster(&cfg, &arrivals).achieved_qps
 }
 
+/// Measured saturation of one node of an arbitrary spec (the heterogeneous
+/// analogue of [`measure_node_saturation_qps`], used to calibrate
+/// [`NodeClass::capacity_qps`](super::NodeClass) before a control-plane
+/// run).
+pub fn measure_spec_saturation_qps(spec: SimNodeSpec, batch: usize, requests: usize) -> f64 {
+    let arrivals = poisson_sim_arrivals(0xFEED, 1e7, batch, requests, 16, 0.8, 0);
+    let cfg = ClusterSimConfig::heterogeneous(vec![spec]);
+    simulate_cluster(&cfg, &arrivals).achieved_qps
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -442,6 +632,7 @@ mod tests {
         for route in [
             RoutePolicy::RoundRobin,
             RoutePolicy::JoinShortestQueue,
+            RoutePolicy::JsqD(2),
             RoutePolicy::StationSharded,
         ] {
             let cfg = ClusterSimConfig::v2_cloud(4, 2)
@@ -524,5 +715,72 @@ mod tests {
             rr.cache_hit_rate
         );
         assert!(sh.max_node_share() > rr.max_node_share(), "affinity skews load");
+    }
+
+    #[test]
+    fn cpu_nodes_serve_without_a_kernel_stage() {
+        // A CPU-only fleet completes everything (no kernel events at all)
+        // and a same-size FPGA fleet with generous feeders beats it on
+        // achieved throughput at a large batch — the §5 comparison as a
+        // fleet property.
+        let arrivals = poisson_sim_arrivals(5, 2_000.0, 4_096, 200, 16, 0.8, 0);
+        let cpu = simulate_cluster(
+            &ClusterSimConfig::heterogeneous(vec![SimNodeSpec::cpu(2, 2.0); 2]),
+            &arrivals,
+        );
+        assert!(cpu.conserves_requests());
+        assert_eq!(cpu.completed, 200);
+        assert_eq!(cpu.per_node[0].class, "cpu-c5");
+        let fpga = simulate_cluster(&ClusterSimConfig::v2_cloud(2, 8), &arrivals);
+        assert!(
+            fpga.achieved_qps > cpu.achieved_qps,
+            "accelerated nodes must outserve the CPU baseline: {} !> {}",
+            fpga.achieved_qps,
+            cpu.achieved_qps
+        );
+    }
+
+    #[test]
+    fn heterogeneous_fleet_mixes_classes_in_one_report() {
+        let arrivals = poisson_sim_arrivals(13, 30_000.0, 1_024, 400, 16, 0.9, 0);
+        let cfg = ClusterSimConfig::heterogeneous(vec![
+            SimNodeSpec::v2_cloud(4),
+            SimNodeSpec::v2_cloud(4),
+            SimNodeSpec::cpu(2, 2.0),
+        ])
+        .with_route(RoutePolicy::JoinShortestQueue);
+        let r = simulate_cluster(&cfg, &arrivals);
+        assert!(r.conserves_requests());
+        let classes = r.per_class();
+        assert_eq!(classes.len(), 2, "{:?}", classes);
+        assert_eq!(classes[0].nodes + classes[1].nodes, 3);
+        // Capacity-weighted JSQ keeps the weak CPU node from hoarding: the
+        // two FPGA nodes absorb the clear majority of the load.
+        let fpga_req =
+            classes.iter().find(|c| c.class == "fpga-f1").unwrap().completed_requests;
+        assert!(
+            fpga_req * 2 > r.completed,
+            "FPGA class must carry most of the load: {fpga_req}/{}",
+            r.completed
+        );
+        assert!(r.summary().contains("by class"));
+    }
+
+    #[test]
+    fn capacity_estimate_tracks_measured_saturation() {
+        // The closed-form capacity estimate used for router weights must
+        // agree with the measured DES saturation within a factor of two —
+        // it is a weight, not a promise.
+        let o = Overheads::default();
+        for spec in [SimNodeSpec::v2_cloud(2), SimNodeSpec::cpu(4, 0.5)] {
+            let est = spec.capacity_qps(&o, 16_384);
+            let measured = measure_spec_saturation_qps(spec, 16_384, 200);
+            let ratio = est / measured;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{}: estimate {est:.0} vs measured {measured:.0} ({ratio:.2})",
+                spec.label()
+            );
+        }
     }
 }

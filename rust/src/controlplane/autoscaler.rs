@@ -1,0 +1,381 @@
+//! Autoscaling policies: one decision per control tick, shared verbatim by
+//! the fleet DES and the real threaded fleet (the policy code never knows
+//! which realisation is driving it).
+//!
+//! The [`FleetObservation`] deliberately leads with **offered load vs
+//! provisioned capacity** — both are defined on the arrival clock, so the
+//! utilisation-driven policies make *identical* decisions in the simulator
+//! and the real cluster once each realisation's node capacity is
+//! calibrated. Latency (window p90 vs SLA) is realisation-coloured and
+//! drives the [`SlaLatency`] policy. [`CostAware`] is the §6.1 lesson as a
+//! controller: it sizes the needed capacity with
+//! [`costmodel::plan_fleet`](crate::costmodel::plan_fleet) against every
+//! class in the catalogue and adds the class with the cheapest marginal
+//! $/query·s — or removes the most expensive node the fleet can spare.
+
+use crate::cluster::NodeClass;
+use crate::costmodel::plan_fleet;
+
+/// What the control loop sees at one tick. Rates are MCT queries/s over
+/// the elapsed control window; `utilisation` is offered/capacity (large
+/// when no capacity is live).
+#[derive(Debug, Clone)]
+pub struct FleetObservation {
+    /// Arrival-clock time of the tick, µs.
+    pub t_us: f64,
+    /// Offered load over the last window, queries/s.
+    pub offered_qps: f64,
+    /// Σ capacity of live (routable) nodes, queries/s.
+    pub capacity_qps: f64,
+    /// offered / capacity.
+    pub utilisation: f64,
+    /// Requests admitted and not yet completed, fleet-wide.
+    pub outstanding: usize,
+    /// p90 of request latencies completed during the window, µs (0 when
+    /// the window saw no completion).
+    pub window_p90_us: f64,
+    /// The run's latency objective, µs.
+    pub sla_us: f64,
+    /// Live (routable) nodes.
+    pub nodes_up: usize,
+    /// Live nodes per class index (parallel to the `classes` slice handed
+    /// to [`Autoscaler::decide`]).
+    pub up_by_class: Vec<usize>,
+}
+
+/// One scaling decision; class values index the `classes` slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingAction {
+    Hold,
+    /// Provision one node of this class.
+    Add(usize),
+    /// Drain and retire one node of this class.
+    Remove(usize),
+}
+
+/// A scaling policy: one [`ScalingAction`] per control tick. The driver
+/// is the authority on fleet-level bounds (it enforces `min_nodes`/
+/// `max_nodes` whatever the policy says); the built-in policies
+/// additionally decline to *propose* removing the last live node, purely
+/// so their intent stream stays sensible in isolation.
+pub trait Autoscaler {
+    fn name(&self) -> &'static str;
+    fn decide(&mut self, obs: &FleetObservation, classes: &[NodeClass]) -> ScalingAction;
+}
+
+/// The Table 2/3 baseline: a fixed fleet, whatever happens.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticFleet;
+
+impl Autoscaler for StaticFleet {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(&mut self, _obs: &FleetObservation, _classes: &[NodeClass]) -> ScalingAction {
+        ScalingAction::Hold
+    }
+}
+
+/// Cooldown bookkeeping shared by the reactive policies: after any scaling
+/// action, hold for `cooldown` ticks so the fleet settles before the next
+/// decision (provisioned capacity needs a window to show up in the
+/// utilisation signal).
+#[derive(Debug, Clone, Copy)]
+struct Cooldown {
+    ticks: usize,
+    remaining: usize,
+}
+
+impl Cooldown {
+    fn new(ticks: usize) -> Cooldown {
+        Cooldown { ticks, remaining: 0 }
+    }
+
+    /// True when a decision is allowed this tick (counts the tick down
+    /// otherwise).
+    fn ready(&mut self) -> bool {
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            false
+        } else {
+            true
+        }
+    }
+
+    fn fire(&mut self) {
+        self.remaining = self.ticks;
+    }
+}
+
+/// Queue-depth/utilisation-driven scaling of one class: add when offered
+/// load exceeds `scale_up_above` of capacity, remove when it falls under
+/// `scale_down_below`. The workhorse reactive policy.
+#[derive(Debug, Clone, Copy)]
+pub struct ReactiveUtilisation {
+    /// Class this policy scales.
+    pub class: usize,
+    pub scale_up_above: f64,
+    pub scale_down_below: f64,
+    cool: Cooldown,
+}
+
+impl ReactiveUtilisation {
+    pub fn new(class: usize) -> ReactiveUtilisation {
+        ReactiveUtilisation::with_band(class, 0.85, 0.30)
+    }
+
+    pub fn with_band(class: usize, up: f64, down: f64) -> ReactiveUtilisation {
+        assert!(0.0 < down && down < up);
+        ReactiveUtilisation {
+            class,
+            scale_up_above: up,
+            scale_down_below: down,
+            cool: Cooldown::new(1),
+        }
+    }
+}
+
+impl Autoscaler for ReactiveUtilisation {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+
+    fn decide(&mut self, obs: &FleetObservation, _classes: &[NodeClass]) -> ScalingAction {
+        if !self.cool.ready() {
+            return ScalingAction::Hold;
+        }
+        if obs.utilisation > self.scale_up_above {
+            self.cool.fire();
+            ScalingAction::Add(self.class)
+        } else if obs.utilisation < self.scale_down_below
+            && obs.up_by_class.get(self.class).copied().unwrap_or(0) > 0
+            && obs.nodes_up > 1
+        {
+            self.cool.fire();
+            ScalingAction::Remove(self.class)
+        } else {
+            ScalingAction::Hold
+        }
+    }
+}
+
+/// SLA-attainment-driven scaling of one class: add capacity while the
+/// window p90 crowds the SLA, shed it when latency is comfortably inside
+/// *and* the fleet is lightly loaded (so a quiet window alone never
+/// triggers a flap).
+#[derive(Debug, Clone, Copy)]
+pub struct SlaLatency {
+    pub class: usize,
+    /// Add when window p90 > this fraction of the SLA.
+    pub upscale_frac: f64,
+    /// Remove when window p90 < this fraction and utilisation < 0.5.
+    pub downscale_frac: f64,
+    cool: Cooldown,
+}
+
+impl SlaLatency {
+    pub fn new(class: usize) -> SlaLatency {
+        SlaLatency { class, upscale_frac: 0.9, downscale_frac: 0.3, cool: Cooldown::new(1) }
+    }
+}
+
+impl Autoscaler for SlaLatency {
+    fn name(&self) -> &'static str {
+        "sla-p90"
+    }
+
+    fn decide(&mut self, obs: &FleetObservation, _classes: &[NodeClass]) -> ScalingAction {
+        if !self.cool.ready() || obs.window_p90_us <= 0.0 {
+            return ScalingAction::Hold;
+        }
+        if obs.window_p90_us > self.upscale_frac * obs.sla_us {
+            self.cool.fire();
+            ScalingAction::Add(self.class)
+        } else if obs.window_p90_us < self.downscale_frac * obs.sla_us
+            && obs.utilisation < 0.5
+            && obs.up_by_class.get(self.class).copied().unwrap_or(0) > 0
+            && obs.nodes_up > 1
+        {
+            self.cool.fire();
+            ScalingAction::Remove(self.class)
+        } else {
+            ScalingAction::Hold
+        }
+    }
+}
+
+/// Cost-aware scaling over the whole class catalogue: size the fleet for
+/// `offered / target_utilisation` queries/s with
+/// [`costmodel::plan_fleet`](crate::costmodel::plan_fleet) per class, add
+/// the class whose plan is cheapest per hour when capacity is short, and
+/// retire the most expensive live node when the fleet can spare it — the
+/// §6.1 "balance the deployment" lesson as a feedback controller.
+#[derive(Debug, Clone, Copy)]
+pub struct CostAware {
+    /// Capacity headroom target: provision for offered/target.
+    pub target_utilisation: f64,
+    cool: Cooldown,
+}
+
+impl CostAware {
+    pub fn new() -> CostAware {
+        CostAware::with_target(0.70)
+    }
+
+    pub fn with_target(target_utilisation: f64) -> CostAware {
+        assert!(0.0 < target_utilisation && target_utilisation < 1.0);
+        CostAware { target_utilisation, cool: Cooldown::new(1) }
+    }
+
+    /// The class whose [`plan_fleet`] sizing for `needed_qps` costs the
+    /// least per hour.
+    pub fn cheapest_class(classes: &[NodeClass], needed_qps: f64) -> usize {
+        let mut best = 0usize;
+        let mut best_usd = f64::INFINITY;
+        for (i, c) in classes.iter().enumerate() {
+            let plan = plan_fleet(c.element, needed_qps, c.capacity_qps.max(1.0), 0);
+            let usd_per_hour = plan.units as f64 * c.hourly_usd();
+            if usd_per_hour < best_usd {
+                best_usd = usd_per_hour;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+impl Default for CostAware {
+    fn default() -> Self {
+        CostAware::new()
+    }
+}
+
+impl Autoscaler for CostAware {
+    fn name(&self) -> &'static str {
+        "cost-aware"
+    }
+
+    fn decide(&mut self, obs: &FleetObservation, classes: &[NodeClass]) -> ScalingAction {
+        if !self.cool.ready() || classes.is_empty() {
+            return ScalingAction::Hold;
+        }
+        let needed_qps = obs.offered_qps / self.target_utilisation;
+        if obs.capacity_qps < needed_qps {
+            self.cool.fire();
+            return ScalingAction::Add(Self::cheapest_class(classes, needed_qps));
+        }
+        // Can the fleet retire its priciest live node and still hold the
+        // headroom target?
+        let costliest = obs
+            .up_by_class
+            .iter()
+            .enumerate()
+            .filter(|&(_, &n)| n > 0)
+            .max_by(|&(a, _), &(b, _)| {
+                classes[a]
+                    .cost_per_qps()
+                    .partial_cmp(&classes[b].cost_per_qps())
+                    .unwrap()
+            })
+            .map(|(i, _)| i);
+        if let Some(i) = costliest {
+            if obs.nodes_up > 1 && obs.capacity_qps - classes[i].capacity_qps >= needed_qps {
+                self.cool.fire();
+                return ScalingAction::Remove(i);
+            }
+        }
+        ScalingAction::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn classes() -> Vec<NodeClass> {
+        vec![NodeClass::fpga_f1(20e6), NodeClass::cpu_c5(2e6)]
+    }
+
+    fn obs(offered: f64, capacity: f64, p90: f64, up: Vec<usize>) -> FleetObservation {
+        FleetObservation {
+            t_us: 0.0,
+            offered_qps: offered,
+            capacity_qps: capacity,
+            utilisation: if capacity > 0.0 { offered / capacity } else { f64::INFINITY },
+            outstanding: 0,
+            window_p90_us: p90,
+            sla_us: 10_000.0,
+            nodes_up: up.iter().sum(),
+            up_by_class: up,
+        }
+    }
+
+    #[test]
+    fn static_policy_never_scales() {
+        let mut s = StaticFleet;
+        assert_eq!(s.decide(&obs(1e9, 1.0, 1e9, vec![1, 0]), &classes()), ScalingAction::Hold);
+    }
+
+    #[test]
+    fn reactive_scales_on_utilisation_band_with_cooldown() {
+        let mut r = ReactiveUtilisation::new(0);
+        let hot = obs(18e6, 20e6, 0.0, vec![1, 0]);
+        assert_eq!(r.decide(&hot, &classes()), ScalingAction::Add(0));
+        // Cooldown: the immediate next tick holds even under overload.
+        assert_eq!(r.decide(&hot, &classes()), ScalingAction::Hold);
+        let cold = obs(2e6, 40e6, 0.0, vec![2, 0]);
+        assert_eq!(r.decide(&cold, &classes()), ScalingAction::Remove(0));
+        // Never removes the last live node.
+        let mut r2 = ReactiveUtilisation::new(0);
+        assert_eq!(r2.decide(&obs(1e5, 20e6, 0.0, vec![1, 0]), &classes()), ScalingAction::Hold);
+    }
+
+    #[test]
+    fn sla_policy_follows_the_latency_signal() {
+        let mut s = SlaLatency::new(0);
+        // p90 crowding the 10 ms SLA ⇒ add.
+        assert_eq!(
+            s.decide(&obs(5e6, 20e6, 9_500.0, vec![1, 0]), &classes()),
+            ScalingAction::Add(0)
+        );
+        let mut s2 = SlaLatency::new(0);
+        // Comfortable p90 at light load ⇒ remove.
+        assert_eq!(
+            s2.decide(&obs(2e6, 40e6, 1_000.0, vec![2, 0]), &classes()),
+            ScalingAction::Remove(0)
+        );
+        // No completions this window ⇒ no blind decision.
+        let mut s3 = SlaLatency::new(0);
+        assert_eq!(
+            s3.decide(&obs(5e6, 20e6, 0.0, vec![2, 0]), &classes()),
+            ScalingAction::Hold
+        );
+    }
+
+    #[test]
+    fn cost_aware_adds_the_cheapest_class_per_marginal_qps() {
+        // fpga-f1: 20 M q/s at $1.2266/h ⇒ ~0.06 $/Mqps·h.
+        // cpu-c5: 2 M q/s at $1.452/h ⇒ ~0.73 $/Mqps·h. FPGA is cheaper.
+        let cs = classes();
+        assert_eq!(CostAware::cheapest_class(&cs, 30e6), 0);
+        let mut c = CostAware::new();
+        assert_eq!(c.decide(&obs(18e6, 20e6, 0.0, vec![1, 0]), &cs), ScalingAction::Add(0));
+        // Flip the economics: a CPU class with great capacity per dollar.
+        let flipped = vec![NodeClass::fpga_f1(2e6), NodeClass::cpu_c5(20e6)];
+        assert_eq!(CostAware::cheapest_class(&flipped, 30e6), 1);
+    }
+
+    #[test]
+    fn cost_aware_retires_the_priciest_spare_node() {
+        let cs = classes();
+        let mut c = CostAware::new();
+        // Capacity 42 M vs needed 10/0.7 ≈ 14.3 M: even dropping the
+        // costly-per-qps CPU node leaves plenty ⇒ remove class 1.
+        let o = obs(10e6, 42e6, 0.0, vec![2, 1]);
+        assert_eq!(c.decide(&o, &cs), ScalingAction::Remove(1));
+        // Tight capacity ⇒ hold.
+        let mut c2 = CostAware::new();
+        assert_eq!(c2.decide(&obs(14e6, 21e6, 0.0, vec![1, 1]), &cs), ScalingAction::Hold);
+    }
+}

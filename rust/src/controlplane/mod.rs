@@ -1,0 +1,55 @@
+//! The control plane: what turns the static [`cluster`](crate::cluster)
+//! into a **managed, heterogeneous, elastic fleet** — the deployment layer
+//! the paper's §6.1 economics implicitly assume and never build.
+//!
+//! Table 2/3 price a *statically sized* fleet against peak demand, and the
+//! §6.1 discussion shows how badly that goes in the cloud (a big FPGA
+//! starved behind a small CPU, 2.5–3× the cost). The control plane attacks
+//! both halves of that conclusion dynamically:
+//!
+//! * **Heterogeneity** — CPU-only and FPGA-backed node classes
+//!   ([`NodeClass`], carrying [`costmodel::Element`](crate::costmodel::Element)
+//!   price/capacity metadata) serve behind one capacity-weighted router,
+//!   so the fleet mix is a *policy decision*, not a deployment constant.
+//! * **Elasticity** — an [`Autoscaler`] watches offered load (diurnal
+//!   [`RateSchedule`](crate::workload::RateSchedule) profiles), queue
+//!   state and SLA attainment, and adds/removes nodes mid-run; the
+//!   cost-aware policy sizes with
+//!   [`costmodel::plan_fleet`](crate::costmodel::plan_fleet) and picks the
+//!   cheapest class per marginal query/s.
+//! * **Failure** — a seeded [`FaultPlan`] kills and revives nodes mid-run;
+//!   the fleet drains/reroutes in-flight work and the report separates
+//!   *rerouted* from *lost* requests (lost only when no replica is live).
+//!
+//! Like every layer of this reproduction, the control plane has **two
+//! realisations** over the same policy code: a deterministic dynamic DES
+//! ([`sim::simulate_fleet`]) and a real threaded fleet of
+//! [`NodeCore`](crate::coordinator) replicas ([`real::ManagedCluster`])
+//! that spawns, drains and joins nodes live.
+//! [`crate::coordinator::crossval`] checks both rank scaling policies
+//! identically by fleet cost.
+//!
+//! [`report::FleetDynamicsReport`] closes the loop back to §6.1: a
+//! scaling-event timeline, per-class node-hours, and modeled **$/Mquery**
+//! under the diurnal profile — the number `benches/fleet_dynamics.rs`
+//! shows dropping when an autoscaled heterogeneous fleet replaces a
+//! static peak-provisioned one at the same SLA attainment.
+
+pub mod autoscaler;
+pub mod faults;
+pub mod real;
+pub mod report;
+pub mod sim;
+
+pub use autoscaler::{
+    Autoscaler, CostAware, FleetObservation, ReactiveUtilisation, ScalingAction, SlaLatency,
+    StaticFleet,
+};
+pub use faults::{Fault, FaultPlan};
+pub use real::{ManagedCluster, ManagedClusterConfig, RealClass};
+pub use report::{ClassUsage, FleetDynamicsReport, ScalingEvent, ScalingEventKind};
+pub use sim::{simulate_fleet, FleetSimConfig, SimClass};
+
+// Re-exported so control-plane users get the class vocabulary from one
+// place.
+pub use crate::cluster::NodeClass;

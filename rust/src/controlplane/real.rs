@@ -1,0 +1,685 @@
+//! The real managed fleet: threaded [`NodeCore`] replicas spawned,
+//! drained and joined **live**, under the same [`Autoscaler`] policies and
+//! [`FaultPlan`] scripts as the DES ([`super::sim`]).
+//!
+//! The injector (this thread) owns the control loop: between arrivals it
+//! executes every control event whose arrival-clock time has come — fault
+//! kills, revivals, autoscaler ticks — then routes the arrival over the
+//! live slots. Billing, observations and the event timeline all run on
+//! the **arrival clock** (`at_us`), so a calibrated real run and a DES
+//! run of the same scenario make comparable (and for the clock-free
+//! utilisation policies, identical) scaling decisions.
+//!
+//! Failure semantics differ from the DES in one honest way: a real node
+//! cannot be vaporised mid-batch, so a kill *drains* — the node stops
+//! being routable instantly, its in-flight work completes on the dying
+//! threads ([`NodeCore::shutdown`] joins them), and those requests are
+//! counted `rerouted` (moved off the routable fleet). Either way the
+//! guarantee under test is the same: **no admitted request is lost while
+//! the fleet has a live replica** — `lost` can only tick when every slot
+//! is down. Scale-ups spawn instantly (thread creation stands in for
+//! cloud provisioning; the DES models the boot delay explicitly).
+//!
+//! Two further bounded asymmetries vs the DES: control events timed
+//! *after* the last arrival are not executed (nothing can be observed of
+//! them — no new work arrives, and a drain-based kill completes the
+//! backlog either way), and a retiring node's drain tail is not billed
+//! (it happens in wall time, off the arrival clock the billing runs on).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::backend::BackendFactory;
+use crate::cluster::{
+    merged_quantiles, update_service_estimate, AdmissionPolicy, ClusterReport, NodeClass,
+    NodeReport, RoutePolicy, Router,
+};
+use crate::coordinator::pipeline::{pace_until, Completion, NodeCore};
+use crate::coordinator::{Percentiles, PipelineConfig};
+use crate::workload::ArrivalSource;
+
+use super::autoscaler::{Autoscaler, FleetObservation, ScalingAction};
+use super::faults::FaultPlan;
+use super::report::{ClassUsage, FleetDynamicsReport, ScalingEvent, ScalingEventKind};
+
+/// One provisionable node class of the real fleet: economic identity,
+/// replica topology, and the backend factory its engine threads build
+/// from.
+#[derive(Clone)]
+pub struct RealClass {
+    pub class: NodeClass,
+    pub node: PipelineConfig,
+    pub factory: BackendFactory,
+}
+
+/// Configuration of one managed real-fleet run.
+#[derive(Clone)]
+pub struct ManagedClusterConfig {
+    pub classes: Vec<RealClass>,
+    /// Class index of each initial node.
+    pub initial: Vec<usize>,
+    pub route: RoutePolicy,
+    pub admission: AdmissionPolicy,
+    pub route_seed: u64,
+    /// Control-loop period on the arrival clock, µs.
+    pub tick_us: f64,
+    pub sla_us: f64,
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    pub faults: FaultPlan,
+    pub profile_label: String,
+}
+
+impl ManagedClusterConfig {
+    pub fn new(classes: Vec<RealClass>, initial: Vec<usize>) -> ManagedClusterConfig {
+        assert!(!classes.is_empty() && !initial.is_empty());
+        assert!(initial.iter().all(|&c| c < classes.len()));
+        ManagedClusterConfig {
+            classes,
+            initial,
+            route: RoutePolicy::JoinShortestQueue,
+            admission: AdmissionPolicy::Open,
+            route_seed: 0,
+            tick_us: 100_000.0,
+            sla_us: 20_000.0,
+            min_nodes: 1,
+            max_nodes: 8,
+            faults: FaultPlan::none(),
+            profile_label: "unlabelled".into(),
+        }
+    }
+
+    pub fn with_route(mut self, route: RoutePolicy) -> ManagedClusterConfig {
+        self.route = route;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> ManagedClusterConfig {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_control(mut self, tick_us: f64) -> ManagedClusterConfig {
+        assert!(tick_us > 0.0);
+        self.tick_us = tick_us;
+        self
+    }
+
+    pub fn with_sla(mut self, sla_us: f64) -> ManagedClusterConfig {
+        self.sla_us = sla_us;
+        self
+    }
+
+    pub fn with_bounds(mut self, min_nodes: usize, max_nodes: usize) -> ManagedClusterConfig {
+        assert!(min_nodes >= 1 && max_nodes >= min_nodes);
+        self.min_nodes = min_nodes;
+        self.max_nodes = max_nodes;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> ManagedClusterConfig {
+        self.faults = faults;
+        self
+    }
+
+    pub fn with_profile_label(mut self, label: impl Into<String>) -> ManagedClusterConfig {
+        self.profile_label = label.into();
+        self
+    }
+
+    fn label(&self) -> String {
+        let init: Vec<String> =
+            self.initial.iter().map(|&c| self.classes[c].class.name.to_string()).collect();
+        format!(
+            "managed [{}] route={} adm={} {}",
+            init.join("+"),
+            self.route.label(),
+            self.admission.label(),
+            self.faults.label()
+        )
+    }
+}
+
+/// One fleet slot: a class binding plus (while up) a live [`NodeCore`].
+struct Slot {
+    class_idx: usize,
+    core: Option<NodeCore>,
+    up: bool,
+    billed_since_us: f64,
+    billed_us: f64,
+    backend: String,
+    cache_lookups: u64,
+    cache_hits: u64,
+    agg_calls: usize,
+    agg_requests: usize,
+}
+
+impl Slot {
+    fn spawn(class_idx: usize, classes: &[RealClass], now_us: f64) -> Slot {
+        let c = &classes[class_idx];
+        Slot {
+            class_idx,
+            core: Some(NodeCore::spawn(&c.node, &c.factory)),
+            up: true,
+            billed_since_us: now_us,
+            billed_us: 0.0,
+            backend: String::new(),
+            cache_lookups: 0,
+            cache_hits: 0,
+            agg_calls: 0,
+            agg_requests: 0,
+        }
+    }
+
+    fn outstanding(&self) -> usize {
+        self.core.as_ref().map(|c| c.outstanding()).unwrap_or(0)
+    }
+
+    /// Stop routing, drain to completion, join the threads, and fold the
+    /// node's counters into the slot. Returns the in-flight count drained.
+    fn take_down(&mut self, now_us: f64) -> usize {
+        debug_assert!(self.up);
+        self.up = false;
+        self.billed_us += now_us - self.billed_since_us;
+        let core = self.core.take().expect("up slot has a core");
+        let in_flight = core.outstanding();
+        let stats = core.shutdown();
+        if self.backend.is_empty() {
+            self.backend = stats.backend.clone();
+        }
+        self.cache_lookups += stats.cache_lookups;
+        self.cache_hits += stats.cache_hits;
+        self.agg_calls += stats.agg_calls;
+        self.agg_requests += stats.agg_requests;
+        in_flight
+    }
+}
+
+/// A managed, elastic, failure-injected real fleet.
+pub struct ManagedCluster {
+    pub config: ManagedClusterConfig,
+}
+
+impl ManagedCluster {
+    pub fn new(config: ManagedClusterConfig) -> ManagedCluster {
+        ManagedCluster { config }
+    }
+
+    /// Serve the arrival stream under `scaler` and report fleet dynamics.
+    pub fn run(
+        &self,
+        scaler: &mut dyn Autoscaler,
+        source: &mut dyn ArrivalSource,
+    ) -> Result<FleetDynamicsReport> {
+        let cfg = &self.config;
+        let n_classes = cfg.classes.len();
+        let class_list: Vec<NodeClass> =
+            cfg.classes.iter().map(|c| c.class.clone()).collect();
+
+        let mut slots: Vec<Slot> =
+            cfg.initial.iter().map(|&c| Slot::spawn(c, &cfg.classes, 0.0)).collect();
+        let mut router = Router::new(cfg.route).with_seed(cfg.route_seed).with_weights(
+            slots.iter().map(|s| cfg.classes[s.class_idx].class.capacity_qps).collect(),
+        );
+        let (ctx, crx) = mpsc::channel::<Completion>();
+        let t0 = Instant::now();
+
+        // Per-slot completion stats (the injector is also the collector:
+        // it drains the completion channel opportunistically, so a single
+        // thread owns every counter and the run needs no locks).
+        let mut lat: Vec<Percentiles> = slots.iter().map(|_| Percentiles::new()).collect();
+        let mut completed: Vec<usize> = vec![0; slots.len()];
+        let mut completed_q: Vec<usize> = vec![0; slots.len()];
+        let mut est_service: Vec<f64> = vec![0.0; slots.len()];
+        let mut failed = 0usize;
+        let mut within_sla = 0usize;
+        let mut win_queries = 0usize;
+        let mut win_lat = Percentiles::new();
+        let mut last_tick_us = 0.0f64;
+        let mut next_tick_us = cfg.tick_us;
+        let mut requests = 0usize;
+        let mut dropped = 0usize;
+        let mut dropped_q = 0usize;
+        let mut lost = 0usize;
+        let mut lost_q = 0usize;
+        let mut rerouted = 0usize;
+        let mut submitted = 0u64;
+        let mut end_us = 0.0f64;
+        let mut events: Vec<ScalingEvent> = Vec::new();
+        let mut billable_by_class = vec![0usize; n_classes];
+        for s in &slots {
+            billable_by_class[s.class_idx] += 1;
+        }
+        let mut peak_by_class = billable_by_class.clone();
+        let mut peak_total = slots.len();
+        let faults = cfg.faults.faults().to_vec();
+        let mut next_fault = 0usize;
+        // (revive time µs, slot) — kept sorted by construction order of
+        // faults, merged into the control-event stream below.
+        let mut revives: Vec<(f64, usize)> = Vec::new();
+
+        macro_rules! record_completion {
+            ($c:expr) => {{
+                let c: Completion = $c;
+                lat[c.node].record(c.latency_us);
+                completed[c.node] += 1;
+                completed_q[c.node] += c.n_queries;
+                if !c.ok {
+                    failed += 1;
+                }
+                if c.latency_us <= cfg.sla_us {
+                    within_sla += 1;
+                }
+                win_lat.record(c.latency_us);
+                est_service[c.node] = update_service_estimate(
+                    est_service[c.node],
+                    c.latency_us,
+                    slots[c.node].outstanding(),
+                );
+            }};
+        }
+        macro_rules! drain_completions {
+            () => {
+                while let Ok(c) = crx.try_recv() {
+                    record_completion!(c);
+                }
+            };
+        }
+        macro_rules! up_count {
+            () => {
+                slots.iter().filter(|s| s.up).count()
+            };
+        }
+
+        // ---- Injector + control loop (this thread) ---------------------
+        while let Some(a) = source.next_arrival() {
+            requests += 1;
+            end_us = end_us.max(a.at_us);
+
+            // Execute every control event due before this arrival, in
+            // arrival-clock order: fault kills, revivals, scaling ticks.
+            loop {
+                let fault_at =
+                    faults.get(next_fault).map(|f| f.at_us).unwrap_or(f64::INFINITY);
+                let revive_at = revives
+                    .iter()
+                    .map(|&(t, _)| t)
+                    .fold(f64::INFINITY, f64::min);
+                let tick_at = next_tick_us;
+                let soonest = fault_at.min(revive_at).min(tick_at);
+                if soonest > a.at_us {
+                    break;
+                }
+                pace_until(t0, soonest);
+                drain_completions!();
+                if soonest == fault_at {
+                    let f = faults[next_fault];
+                    next_fault += 1;
+                    if f.node < slots.len() && slots[f.node].up {
+                        rerouted += slots[f.node].take_down(f.at_us);
+                        billable_by_class[slots[f.node].class_idx] -= 1;
+                        revives.push((f.at_us + f.down_us, f.node));
+                        events.push(ScalingEvent {
+                            t_us: f.at_us,
+                            kind: ScalingEventKind::Fail,
+                            class: cfg.classes[slots[f.node].class_idx]
+                                .class
+                                .name
+                                .into(),
+                            node: f.node,
+                            up_after: up_count!(),
+                        });
+                    }
+                } else if soonest == revive_at {
+                    let pos = revives
+                        .iter()
+                        .position(|&(t, _)| t == revive_at)
+                        .expect("revive entry");
+                    let (at, slot_idx) = revives.swap_remove(pos);
+                    let ci = slots[slot_idx].class_idx;
+                    slots[slot_idx].core =
+                        Some(NodeCore::spawn(&cfg.classes[ci].node, &cfg.classes[ci].factory));
+                    slots[slot_idx].up = true;
+                    slots[slot_idx].billed_since_us = at;
+                    // Cold revive: the dead incarnation's (backlog-inflated)
+                    // service estimate must not pre-bias SlaP90 admission —
+                    // mirrors the DES reset.
+                    est_service[slot_idx] = 0.0;
+                    billable_by_class[ci] += 1;
+                    peak_by_class[ci] = peak_by_class[ci].max(billable_by_class[ci]);
+                    peak_total = peak_total.max(billable_by_class.iter().sum::<usize>());
+                    events.push(ScalingEvent {
+                        t_us: at,
+                        kind: ScalingEventKind::Recover,
+                        class: cfg.classes[ci].class.name.into(),
+                        node: slot_idx,
+                        up_after: up_count!(),
+                    });
+                } else {
+                    // Scaling tick.
+                    let now = tick_at;
+                    next_tick_us += cfg.tick_us;
+                    let window_s = ((now - last_tick_us) * 1e-6).max(1e-9);
+                    let capacity_qps: f64 = slots
+                        .iter()
+                        .filter(|s| s.up)
+                        .map(|s| cfg.classes[s.class_idx].class.capacity_qps)
+                        .sum();
+                    let offered_qps = win_queries as f64 / window_s;
+                    let mut up_by_class = vec![0usize; n_classes];
+                    for s in &slots {
+                        if s.up {
+                            up_by_class[s.class_idx] += 1;
+                        }
+                    }
+                    let obs = FleetObservation {
+                        t_us: now,
+                        offered_qps,
+                        capacity_qps,
+                        utilisation: if capacity_qps > 0.0 {
+                            offered_qps / capacity_qps
+                        } else {
+                            f64::INFINITY
+                        },
+                        outstanding: slots.iter().map(Slot::outstanding).sum(),
+                        window_p90_us: if win_lat.is_empty() { 0.0 } else { win_lat.p90() },
+                        sla_us: cfg.sla_us,
+                        nodes_up: up_by_class.iter().sum(),
+                        up_by_class,
+                    };
+                    match scaler.decide(&obs, &class_list) {
+                        ScalingAction::Hold => {}
+                        ScalingAction::Add(ci) if ci < n_classes => {
+                            let billable: usize = billable_by_class.iter().sum();
+                            if billable < cfg.max_nodes {
+                                let idx = slots.len();
+                                slots.push(Slot::spawn(ci, &cfg.classes, now));
+                                lat.push(Percentiles::new());
+                                completed.push(0);
+                                completed_q.push(0);
+                                est_service.push(0.0);
+                                billable_by_class[ci] += 1;
+                                peak_by_class[ci] =
+                                    peak_by_class[ci].max(billable_by_class[ci]);
+                                peak_total = peak_total
+                                    .max(billable_by_class.iter().sum::<usize>());
+                                router.set_weights(
+                                    slots
+                                        .iter()
+                                        .map(|s| {
+                                            cfg.classes[s.class_idx].class.capacity_qps
+                                        })
+                                        .collect(),
+                                );
+                                events.push(ScalingEvent {
+                                    t_us: now,
+                                    kind: ScalingEventKind::Add,
+                                    class: cfg.classes[ci].class.name.into(),
+                                    node: idx,
+                                    up_after: up_count!(),
+                                });
+                            }
+                        }
+                        ScalingAction::Remove(ci) if ci < n_classes => {
+                            if up_count!() > cfg.min_nodes {
+                                let pick = slots
+                                    .iter()
+                                    .enumerate()
+                                    .filter(|(_, s)| s.up && s.class_idx == ci)
+                                    .min_by_key(|(i, s)| (s.outstanding(), *i))
+                                    .map(|(i, _)| i);
+                                if let Some(i) = pick {
+                                    // Draining retirement: in-flight work
+                                    // completes on the retiring threads.
+                                    slots[i].take_down(now);
+                                    billable_by_class[ci] -= 1;
+                                    events.push(ScalingEvent {
+                                        t_us: now,
+                                        kind: ScalingEventKind::Drain,
+                                        class: cfg.classes[ci].class.name.into(),
+                                        node: i,
+                                        up_after: up_count!(),
+                                    });
+                                }
+                            }
+                        }
+                        _ => {}
+                    }
+                    win_queries = 0;
+                    win_lat = Percentiles::new();
+                    last_tick_us = now;
+                }
+            }
+
+            pace_until(t0, a.at_us);
+            drain_completions!();
+            win_queries += a.queries.len();
+            let depths: Vec<usize> = slots.iter().map(Slot::outstanding).collect();
+            let up: Vec<bool> = slots.iter().map(|s| s.up).collect();
+            match router.route_up(a.station(), &depths, Some(&up)) {
+                None => {
+                    lost += 1;
+                    lost_q += a.queries.len();
+                }
+                Some(target) => {
+                    if !cfg.admission.admits(depths[target], est_service[target]) {
+                        dropped += 1;
+                        dropped_q += a.queries.len();
+                        continue;
+                    }
+                    slots[target].core.as_ref().expect("routable slot").submit_tagged(
+                        a.queries,
+                        submitted,
+                        target,
+                        &ctx,
+                    );
+                    submitted += 1;
+                }
+            }
+        }
+
+        // ---- Drain: every submitted request completes ------------------
+        drop(ctx);
+        while let Ok(c) = crx.recv() {
+            record_completion!(c);
+        }
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        for s in slots.iter_mut() {
+            if s.up {
+                s.take_down(end_us);
+            }
+        }
+
+        let completed_total: usize = completed.iter().sum();
+        let completed_queries: usize = completed_q.iter().sum();
+        anyhow::ensure!(
+            completed_total == submitted as usize,
+            "managed cluster lost requests: {submitted} submitted, {completed_total} completed"
+        );
+        anyhow::ensure!(
+            requests == completed_total + dropped + lost,
+            "conservation: {requests} != {completed_total} + {dropped} + {lost}"
+        );
+
+        let (p50, p90, p99) = merged_quantiles(&lat);
+        let mut lat = lat;
+        let per_node: Vec<NodeReport> = slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| NodeReport {
+                class: cfg.classes[s.class_idx].class.name.to_string(),
+                backend: s.backend.clone(),
+                completed_requests: completed[i],
+                completed_queries: completed_q[i],
+                req_p90_us: if lat[i].is_empty() { 0.0 } else { lat[i].p90() },
+                cache_hit_rate: if s.cache_lookups == 0 {
+                    0.0
+                } else {
+                    s.cache_hits as f64 / s.cache_lookups as f64
+                },
+                mean_aggregation: s.agg_requests as f64 / s.agg_calls.max(1) as f64,
+            })
+            .collect();
+        let (lookups, hits) = slots
+            .iter()
+            .fold((0u64, 0u64), |(l, h), s| (l + s.cache_lookups, h + s.cache_hits));
+
+        let cluster = ClusterReport {
+            label: cfg.label(),
+            route: cfg.route.label(),
+            offered_qps: source.offered_qps(),
+            achieved_qps: completed_queries as f64 / wall_s,
+            requests,
+            completed: completed_total,
+            dropped,
+            lost,
+            completed_queries,
+            dropped_queries: dropped_q,
+            lost_queries: lost_q,
+            failed,
+            req_p50_us: p50,
+            req_p90_us: p90,
+            req_p99_us: p99,
+            cache_hit_rate: if lookups == 0 { 0.0 } else { hits as f64 / lookups as f64 },
+            per_node,
+        };
+
+        let mut usage: Vec<ClassUsage> = cfg
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| ClassUsage {
+                class: c.class.name.into(),
+                node_hours: 0.0,
+                hourly_usd: c.class.hourly_usd(),
+                cost_usd: 0.0,
+                peak_nodes: peak_by_class[ci],
+            })
+            .collect();
+        for s in &slots {
+            usage[s.class_idx].node_hours += s.billed_us / 3.6e9;
+        }
+        for u in usage.iter_mut() {
+            u.cost_usd = u.node_hours * u.hourly_usd;
+        }
+        let node_hours: f64 = usage.iter().map(|u| u.node_hours).sum();
+        let cost_usd: f64 = usage.iter().map(|u| u.cost_usd).sum();
+
+        Ok(FleetDynamicsReport {
+            policy: scaler.name().into(),
+            profile: cfg.profile_label.clone(),
+            cluster,
+            events,
+            usage,
+            node_hours,
+            cost_usd,
+            sla_us: cfg.sla_us,
+            sla_attainment: if requests == 0 {
+                1.0
+            } else {
+                within_sla as f64 / requests as f64
+            },
+            rerouted,
+            peak_nodes: peak_total,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controlplane::autoscaler::{ReactiveUtilisation, StaticFleet};
+    use crate::coordinator::{AggregationPolicy, Topology};
+    use crate::nfa::constraint_gen::HardwareConfig;
+    use crate::rules::standard::StandardVersion;
+    use crate::testing::fixture::compile_fixture;
+    use crate::workload::{PoissonSource, RateSchedule, ScheduledSource};
+
+    fn fixture() -> crate::testing::fixture::MctFixture {
+        compile_fixture(4411, 300, StandardVersion::V2, HardwareConfig::v2_aws(4))
+    }
+
+    fn node_cfg() -> PipelineConfig {
+        PipelineConfig::new(Topology::new(2, 1, 1, 4))
+            .with_aggregation(AggregationPolicy::DrainQueue)
+    }
+
+    /// Probe one real node's drain rate so the scenario's rates are set
+    /// relative to measured capacity (the crossval calibration step).
+    fn probe_rps(f: &crate::testing::fixture::MctFixture, batch: usize) -> f64 {
+        let cfg = crate::cluster::ClusterConfig::new(1, node_cfg());
+        let mut burst = PoissonSource::new(&f.world, 3, 1e8, batch, 120);
+        let r = crate::cluster::Cluster::new(cfg, f.native_factory())
+            .run(&mut burst)
+            .unwrap();
+        r.achieved_qps / batch as f64
+    }
+
+    #[test]
+    fn managed_real_fleet_scales_up_and_down_with_the_wave() {
+        let f = fixture();
+        let batch = 16;
+        let mu_rps = probe_rps(&f, batch);
+        let classes = vec![RealClass {
+            class: NodeClass::fpga_f1(mu_rps * batch as f64),
+            node: node_cfg(),
+            factory: f.native_factory(),
+        }];
+        // One diurnal period spanning 400 requests around the measured
+        // single-node rate: trough 0.2×, peak 1.8×.
+        let n = 400usize;
+        let period_s = n as f64 / mu_rps;
+        let schedule = RateSchedule::diurnal(mu_rps, 0.8 * mu_rps, period_s);
+        let mut src = ScheduledSource::new(
+            Box::new(PoissonSource::new(&f.world, 7, 1e3, batch, n)),
+            11,
+            &schedule,
+        );
+        let cfg = ManagedClusterConfig::new(classes, vec![0])
+            .with_control(period_s * 1e6 / 25.0)
+            .with_sla(1e9) // latency not under test here
+            .with_bounds(1, 3)
+            .with_profile_label(schedule.label());
+        let mut scaler = ReactiveUtilisation::new(0);
+        let r = ManagedCluster::new(cfg).run(&mut scaler, &mut src).unwrap();
+        assert!(r.cluster.conserves_requests());
+        assert_eq!(r.cluster.lost, 0);
+        assert!(r.peak_nodes > 1, "peak must trigger a real scale-up: {}", r.summary());
+        assert!(r.events.iter().any(|e| e.kind == ScalingEventKind::Add));
+        assert!(r.node_hours > 0.0 && r.cost_usd > 0.0);
+    }
+
+    #[test]
+    fn real_kill_mid_run_drains_without_losing_admitted_work() {
+        let f = fixture();
+        let batch = 16;
+        let n = 300usize;
+        let rate = 1.5 * probe_rps(&f, batch); // mild overload keeps queues non-empty
+        let classes = vec![RealClass {
+            class: NodeClass::fpga_f1(rate * batch as f64),
+            node: node_cfg(),
+            factory: f.native_factory(),
+        }];
+        let span_us = n as f64 / rate * 1e6;
+        let cfg = ManagedClusterConfig::new(classes, vec![0, 0])
+            .with_control(span_us / 10.0)
+            .with_sla(1e9)
+            .with_bounds(1, 2)
+            .with_faults(FaultPlan::kill(0, span_us * 0.4, span_us * 0.3));
+        let mut src = PoissonSource::new(&f.world, 13, rate, batch, n);
+        let mut stat = StaticFleet;
+        let r = ManagedCluster::new(cfg).run(&mut stat, &mut src).unwrap();
+        assert!(r.cluster.conserves_requests());
+        assert_eq!(r.cluster.lost, 0, "a live peer means zero loss: {}", r.summary());
+        assert_eq!(r.cluster.dropped, 0);
+        assert_eq!(r.cluster.completed, n);
+        assert!(r.events.iter().any(|e| e.kind == ScalingEventKind::Fail));
+        assert!(
+            r.events.iter().any(|e| e.kind == ScalingEventKind::Recover),
+            "the node must revive: {}",
+            r.timeline()
+        );
+    }
+}

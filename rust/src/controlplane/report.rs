@@ -1,0 +1,192 @@
+//! Control-plane run reports: the scaling-event timeline, per-class
+//! node-hours, and the §6.1 headline re-derived dynamically — modeled
+//! **$/Mquery** of the fleet that actually ran, not of a statically sized
+//! one.
+
+use crate::cluster::ClusterReport;
+
+/// What happened to the fleet at one point of the timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingEventKind {
+    /// Autoscaler provisioned a node (serving after the provision delay).
+    Add,
+    /// Autoscaler started draining a node for retirement.
+    Drain,
+    /// Fault plan killed a node.
+    Fail,
+    /// A killed node revived.
+    Recover,
+}
+
+impl ScalingEventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScalingEventKind::Add => "add",
+            ScalingEventKind::Drain => "drain",
+            ScalingEventKind::Fail => "fail",
+            ScalingEventKind::Recover => "recover",
+        }
+    }
+}
+
+/// One timeline entry.
+#[derive(Debug, Clone)]
+pub struct ScalingEvent {
+    pub t_us: f64,
+    pub kind: ScalingEventKind,
+    pub class: String,
+    pub node: usize,
+    /// Live (routable) nodes after the event took effect.
+    pub up_after: usize,
+}
+
+/// Billed usage of one node class over the run.
+#[derive(Debug, Clone)]
+pub struct ClassUsage {
+    pub class: String,
+    /// Σ billed node time, hours, on the arrival clock — so identical
+    /// scaling decisions bill comparably across realisations. One known
+    /// asymmetry: the DES bills a retiring/failed node's drain tail
+    /// (sim time is observable), while the real fleet stops billing at
+    /// the decision — its drain happens in wall time, which has no
+    /// arrival-clock coordinate.
+    pub node_hours: f64,
+    /// Effective hourly price of the class's element.
+    pub hourly_usd: f64,
+    /// `node_hours × hourly_usd`.
+    pub cost_usd: f64,
+    /// Most nodes of this class simultaneously billed.
+    pub peak_nodes: usize,
+}
+
+/// Outcome of one managed-fleet run (DES or real).
+#[derive(Debug, Clone)]
+pub struct FleetDynamicsReport {
+    /// Autoscaler name (`static`, `reactive`, `sla-p90`, `cost-aware`).
+    pub policy: String,
+    /// Offered-load profile label.
+    pub profile: String,
+    /// The serving outcome, cluster vocabulary (offered vs achieved,
+    /// completed/dropped/lost, quantiles, per-node + per-class slices).
+    pub cluster: ClusterReport,
+    pub events: Vec<ScalingEvent>,
+    pub usage: Vec<ClassUsage>,
+    /// Σ usage node-hours.
+    pub node_hours: f64,
+    /// Σ usage cost.
+    pub cost_usd: f64,
+    pub sla_us: f64,
+    /// Completions within the SLA / offered requests — drops and losses
+    /// count against attainment, so shedding cannot fake compliance.
+    pub sla_attainment: f64,
+    /// In-flight requests moved off a failed node (drained or re-queued;
+    /// all of them completed elsewhere or later).
+    pub rerouted: usize,
+    /// Most nodes simultaneously billed.
+    pub peak_nodes: usize,
+}
+
+impl FleetDynamicsReport {
+    /// Modeled dollars per million completed queries — the cost axis the
+    /// `fleet_dynamics` bench compares static vs autoscaled fleets on.
+    pub fn dollars_per_mquery(&self) -> f64 {
+        let mq = self.cluster.completed_queries as f64 / 1e6;
+        self.cost_usd / mq.max(1e-12)
+    }
+
+    /// SLA attainment at or above `target` (e.g. 0.90 for "p90 within
+    /// SLA").
+    pub fn meets_sla(&self, target: f64) -> bool {
+        self.sla_attainment >= target
+    }
+
+    /// One-line summary for benches and the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} @ {} | {} | {:.1} node-h = {:.2} $ → {:.3} $/Mq | SLA({:.0} µs) {:.1} % | \
+             peak {} nodes, {} scale events, {} rerouted",
+            self.policy,
+            self.profile,
+            self.cluster.summary(),
+            self.node_hours,
+            self.cost_usd,
+            self.dollars_per_mquery(),
+            self.sla_us,
+            self.sla_attainment * 100.0,
+            self.peak_nodes,
+            self.events.len(),
+            self.rerouted,
+        )
+    }
+
+    /// Multi-line scaling-event timeline.
+    pub fn timeline(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&format!(
+                "  t={:>10.0} µs  {:<7}  {:<8} node {:>2}  ({} up)\n",
+                e.t_us,
+                e.kind.label(),
+                e.class,
+                e.node,
+                e.up_after
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster_stub(completed_queries: usize) -> ClusterReport {
+        ClusterReport {
+            label: "t".into(),
+            route: "rr".into(),
+            offered_qps: 0.0,
+            achieved_qps: 0.0,
+            requests: 10,
+            completed: 10,
+            dropped: 0,
+            lost: 0,
+            completed_queries,
+            dropped_queries: 0,
+            lost_queries: 0,
+            failed: 0,
+            req_p50_us: 0.0,
+            req_p90_us: 0.0,
+            req_p99_us: 0.0,
+            cache_hit_rate: 0.0,
+            per_node: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn dollars_per_mquery_and_sla_gate() {
+        let r = FleetDynamicsReport {
+            policy: "static".into(),
+            profile: "const".into(),
+            cluster: cluster_stub(2_000_000),
+            events: vec![ScalingEvent {
+                t_us: 5.0,
+                kind: ScalingEventKind::Add,
+                class: "fpga-f1".into(),
+                node: 1,
+                up_after: 2,
+            }],
+            usage: Vec::new(),
+            node_hours: 2.0,
+            cost_usd: 3.0,
+            sla_us: 10_000.0,
+            sla_attainment: 0.93,
+            rerouted: 0,
+            peak_nodes: 2,
+        };
+        assert!((r.dollars_per_mquery() - 1.5).abs() < 1e-12);
+        assert!(r.meets_sla(0.9));
+        assert!(!r.meets_sla(0.95));
+        assert!(r.summary().contains("$/Mq"));
+        assert!(r.timeline().contains("add"));
+    }
+}

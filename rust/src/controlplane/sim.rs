@@ -1,0 +1,913 @@
+//! The dynamic fleet DES: the static cluster simulator of
+//! [`crate::cluster::sim`] grown a node lifecycle — nodes provision,
+//! serve, drain, die and revive mid-run, driven by an [`Autoscaler`] tick
+//! loop and a [`FaultPlan`], all deterministic for a given config +
+//! arrival stream.
+//!
+//! Per-node service semantics (feeder stage, optional kernel datapath,
+//! per-node LRU) are identical to the static simulator; what this module
+//! adds is *time-varying fleet membership*:
+//!
+//! * **provisioning** — an `Add` decision creates a node that starts
+//!   serving `provision_us` later (cloud boot time), billed from the
+//!   decision;
+//! * **draining** — a `Remove` decision stops routing to the node; it
+//!   finishes its outstanding work, then retires (billing stops);
+//! * **failure** — a fault kills a node abruptly: its queued and
+//!   in-service requests are *rerouted* through the router to live nodes
+//!   (counted, never silently discarded; they re-enter the feeder on the
+//!   new node). Only when **no** node is live does work count as `lost` —
+//!   the drain/reroute guarantee the acceptance tests pin.
+//!
+//! Stale-event hygiene: every feeder/kernel event carries the node's
+//! epoch at scheduling time; a kill bumps the epoch, so in-flight events
+//! of the dead incarnation are ignored when they fire.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::backend::LruCache;
+use crate::cluster::{
+    merged_quantiles, update_service_estimate, AdmissionPolicy, ClusterReport, NodeClass,
+    NodeReport, RoutePolicy, Router, SimArrival, SimEngine, SimNodeSpec,
+};
+use crate::coordinator::{Overheads, Percentiles};
+use crate::erbium::FpgaModel;
+
+use super::autoscaler::{Autoscaler, FleetObservation, ScalingAction};
+use super::faults::FaultPlan;
+use super::report::{
+    ClassUsage, FleetDynamicsReport, ScalingEvent, ScalingEventKind,
+};
+
+/// One provisionable node class: the economic identity
+/// ([`NodeClass`]) plus its DES realisation ([`SimNodeSpec`]).
+#[derive(Debug, Clone)]
+pub struct SimClass {
+    pub class: NodeClass,
+    pub spec: SimNodeSpec,
+}
+
+impl SimClass {
+    pub fn new(class: NodeClass, spec: SimNodeSpec) -> SimClass {
+        SimClass { class, spec }
+    }
+
+    /// Build with `class.capacity_qps` calibrated from the spec's
+    /// closed-form estimate at `batch`-sized requests, so router weights
+    /// and autoscaler capacity planning agree with the simulated node.
+    pub fn calibrated(
+        mut class: NodeClass,
+        spec: SimNodeSpec,
+        o: &Overheads,
+        batch: usize,
+    ) -> SimClass {
+        class.capacity_qps = spec.capacity_qps(o, batch);
+        SimClass { class, spec }
+    }
+}
+
+/// Configuration of one managed-fleet simulation.
+#[derive(Debug, Clone)]
+pub struct FleetSimConfig {
+    /// Class catalogue the autoscaler provisions from.
+    pub classes: Vec<SimClass>,
+    /// Class index of each initial node.
+    pub initial: Vec<usize>,
+    pub route: RoutePolicy,
+    pub admission: AdmissionPolicy,
+    pub cache_capacity: Option<usize>,
+    pub overheads: Overheads,
+    pub route_seed: u64,
+    /// Control-loop period, µs.
+    pub tick_us: f64,
+    /// Add-decision → serving delay, µs (cloud instance boot).
+    pub provision_us: f64,
+    /// Latency objective, µs (drives [`FleetObservation::sla_us`] and the
+    /// report's attainment).
+    pub sla_us: f64,
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    pub faults: FaultPlan,
+    /// Offered-load profile label for the report.
+    pub profile_label: String,
+}
+
+impl FleetSimConfig {
+    pub fn new(classes: Vec<SimClass>, initial: Vec<usize>) -> FleetSimConfig {
+        assert!(!classes.is_empty() && !initial.is_empty());
+        assert!(initial.iter().all(|&c| c < classes.len()));
+        FleetSimConfig {
+            classes,
+            initial,
+            route: RoutePolicy::JoinShortestQueue,
+            admission: AdmissionPolicy::Open,
+            cache_capacity: None,
+            overheads: Overheads::default(),
+            route_seed: 0,
+            tick_us: 100_000.0,
+            provision_us: 50_000.0,
+            sla_us: 20_000.0,
+            min_nodes: 1,
+            max_nodes: 8,
+            faults: FaultPlan::none(),
+            profile_label: "unlabelled".into(),
+        }
+    }
+
+    pub fn with_route(mut self, route: RoutePolicy) -> FleetSimConfig {
+        self.route = route;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> FleetSimConfig {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_cache(mut self, capacity: usize) -> FleetSimConfig {
+        self.cache_capacity = Some(capacity);
+        self
+    }
+
+    pub fn with_control(mut self, tick_us: f64, provision_us: f64) -> FleetSimConfig {
+        assert!(tick_us > 0.0 && provision_us >= 0.0);
+        self.tick_us = tick_us;
+        self.provision_us = provision_us;
+        self
+    }
+
+    pub fn with_sla(mut self, sla_us: f64) -> FleetSimConfig {
+        self.sla_us = sla_us;
+        self
+    }
+
+    pub fn with_bounds(mut self, min_nodes: usize, max_nodes: usize) -> FleetSimConfig {
+        assert!(min_nodes >= 1 && max_nodes >= min_nodes);
+        self.min_nodes = min_nodes;
+        self.max_nodes = max_nodes;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> FleetSimConfig {
+        self.faults = faults;
+        self
+    }
+
+    pub fn with_profile_label(mut self, label: impl Into<String>) -> FleetSimConfig {
+        self.profile_label = label.into();
+        self
+    }
+
+    fn label(&self) -> String {
+        let init: Vec<String> =
+            self.initial.iter().map(|&c| self.classes[c].class.name.to_string()).collect();
+        format!(
+            "fleet [{}] route={} adm={} {}",
+            init.join("+"),
+            self.route.label(),
+            self.admission.label(),
+            self.faults.label()
+        )
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum NodeState {
+    /// Billed, not yet serving (boot).
+    Provisioning,
+    /// Billed and routable.
+    Up,
+    /// Billed, no longer routable; retires when its queue empties.
+    Draining,
+    /// Killed by a fault; not billed, revives later.
+    Down,
+    /// Gone for good (scale-down completed).
+    Retired,
+}
+
+struct DReq {
+    node: usize,
+    at_us: f64,
+    n: usize,
+    misses: usize,
+}
+
+struct DNode {
+    class_idx: usize,
+    spec: SimNodeSpec,
+    model: Option<FpgaModel>,
+    state: NodeState,
+    epoch: u32,
+    queue: VecDeque<usize>,
+    /// Requests currently in feeder service (needed for fault reroute).
+    feeding: Vec<usize>,
+    kernel_queue: VecDeque<usize>,
+    in_kernel: Option<usize>,
+    free_feeders: usize,
+    cache: Option<LruCache<()>>,
+    outstanding: usize,
+    est_service_us: f64,
+    completed: usize,
+    completed_q: usize,
+    lookups: u64,
+    hits: u64,
+    lat: Percentiles,
+    billed_since_us: f64,
+    billed_us: f64,
+}
+
+impl DNode {
+    fn of(class_idx: usize, cfg: &FleetSimConfig, state: NodeState, now_us: f64) -> DNode {
+        let spec = cfg.classes[class_idx].spec;
+        DNode {
+            class_idx,
+            spec,
+            model: spec.kernel_model(),
+            state,
+            epoch: 0,
+            queue: VecDeque::new(),
+            feeding: Vec::new(),
+            kernel_queue: VecDeque::new(),
+            in_kernel: None,
+            free_feeders: spec.feeders,
+            cache: cfg.cache_capacity.map(LruCache::new),
+            outstanding: 0,
+            est_service_us: 0.0,
+            completed: 0,
+            completed_q: 0,
+            lookups: 0,
+            hits: 0,
+            lat: Percentiles::new(),
+            billed_since_us: now_us,
+            billed_us: 0.0,
+        }
+    }
+
+    fn billed(&self) -> bool {
+        matches!(self.state, NodeState::Provisioning | NodeState::Up | NodeState::Draining)
+    }
+
+    fn bill_stop(&mut self, now_us: f64) {
+        self.billed_us += now_us - self.billed_since_us;
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    Arrive { req: usize },
+    FeederDone { node: usize, epoch: u32, req: usize },
+    KernelDone { node: usize, epoch: u32, req: usize },
+    FaultDown { fault: usize },
+    NodeUp { node: usize, epoch: u32 },
+    /// Control tick. Note: ties on the ns-rounded timestamp break by
+    /// insertion order (`seq`), not by variant — a tick scheduled a full
+    /// period ahead fires *before* same-instant completions, which then
+    /// count toward the next window.
+    Tick,
+}
+
+type EvHeap = BinaryHeap<Reverse<(u64, u64, Ev)>>;
+
+fn push_ev(heap: &mut EvHeap, seq: &mut u64, t_us: f64, ev: Ev) {
+    let key = (t_us.max(0.0) * 1000.0).round() as u64; // ns resolution
+    heap.push(Reverse((key, *seq, ev)));
+    *seq += 1;
+}
+
+fn router_weights(nodes: &[DNode], classes: &[SimClass]) -> Vec<f64> {
+    nodes.iter().map(|n| classes[n.class_idx].class.capacity_qps).collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn try_start_feeder(
+    node_idx: usize,
+    nodes: &mut [DNode],
+    reqs: &mut [DReq],
+    arrivals: &[SimArrival],
+    o: &Overheads,
+    now: f64,
+    heap: &mut EvHeap,
+    seq: &mut u64,
+) {
+    while nodes[node_idx].free_feeders > 0 {
+        let Some(rid) = nodes[node_idx].queue.pop_front() else { break };
+        let node = &mut nodes[node_idx];
+        let keys = &arrivals[rid].keys;
+        let mut misses = reqs[rid].n;
+        if let Some(cache) = node.cache.as_mut() {
+            if !keys.is_empty() {
+                node.lookups += keys.len() as u64;
+                let mut hit = 0usize;
+                for &k in keys {
+                    if cache.get(k).is_some() {
+                        hit += 1;
+                    } else {
+                        cache.insert(k, ());
+                    }
+                }
+                node.hits += hit as u64;
+                misses = reqs[rid].n - hit;
+            }
+        }
+        reqs[rid].misses = misses;
+        node.free_feeders -= 1;
+        node.feeding.push(rid);
+        let service = match node.spec.engine {
+            SimEngine::Fpga { .. } => o.sched.us(reqs[rid].n) + o.encode.us(misses),
+            SimEngine::Cpu { per_query_us } => {
+                o.sched.us(reqs[rid].n) + misses as f64 * per_query_us
+            }
+        };
+        push_ev(
+            heap,
+            seq,
+            now + service,
+            Ev::FeederDone { node: node_idx, epoch: node.epoch, req: rid },
+        );
+    }
+}
+
+fn try_start_kernel(
+    node_idx: usize,
+    nodes: &mut [DNode],
+    reqs: &[DReq],
+    o: &Overheads,
+    now: f64,
+    heap: &mut EvHeap,
+    seq: &mut u64,
+) {
+    let node = &mut nodes[node_idx];
+    if node.in_kernel.is_some() {
+        return;
+    }
+    let Some(rid) = node.kernel_queue.pop_front() else { return };
+    let model = node.model.as_ref().expect("kernel queue on a CPU node");
+    node.in_kernel = Some(rid);
+    let service =
+        o.xrt.submission_us(node.spec.feeders) + model.batch_timing(reqs[rid].misses).total_us;
+    push_ev(
+        heap,
+        seq,
+        now + service,
+        Ev::KernelDone { node: node_idx, epoch: node.epoch, req: rid },
+    );
+}
+
+/// Run the managed-fleet simulation under `scaler`; deterministic for a
+/// given config + arrivals.
+pub fn simulate_fleet(
+    cfg: &FleetSimConfig,
+    scaler: &mut dyn Autoscaler,
+    arrivals: &[SimArrival],
+) -> FleetDynamicsReport {
+    assert!(!arrivals.is_empty(), "a fleet run needs arrivals");
+    assert!(cfg.initial.len() <= cfg.max_nodes);
+    let o = &cfg.overheads;
+    let class_list: Vec<NodeClass> = cfg.classes.iter().map(|c| c.class.clone()).collect();
+    let n_classes = cfg.classes.len();
+
+    let mut nodes: Vec<DNode> =
+        cfg.initial.iter().map(|&c| DNode::of(c, cfg, NodeState::Up, 0.0)).collect();
+    let mut router = Router::new(cfg.route)
+        .with_seed(cfg.route_seed)
+        .with_weights(router_weights(&nodes, &cfg.classes));
+
+    let mut reqs: Vec<DReq> = Vec::with_capacity(arrivals.len());
+    let mut heap: EvHeap = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut offered_q = 0usize;
+    let mut end_us = 0.0f64;
+    for a in arrivals {
+        offered_q += a.n_queries;
+        end_us = end_us.max(a.at_us);
+        let rid = reqs.len();
+        reqs.push(DReq { node: usize::MAX, at_us: a.at_us, n: a.n_queries, misses: a.n_queries });
+        push_ev(&mut heap, &mut seq, a.at_us + o.zmq.request_us(a.n_queries), Ev::Arrive {
+            req: rid,
+        });
+    }
+    for (i, _f) in cfg.faults.faults().iter().enumerate() {
+        push_ev(&mut heap, &mut seq, cfg.faults.faults()[i].at_us, Ev::FaultDown { fault: i });
+    }
+    if cfg.tick_us <= end_us {
+        push_ev(&mut heap, &mut seq, cfg.tick_us, Ev::Tick);
+    }
+
+    // ---- Run counters --------------------------------------------------
+    let mut dropped = 0usize;
+    let mut dropped_q = 0usize;
+    let mut lost = 0usize;
+    let mut lost_q = 0usize;
+    let mut rerouted = 0usize;
+    let mut within_sla = 0usize;
+    let mut makespan = 0.0f64;
+    let mut events: Vec<ScalingEvent> = Vec::new();
+    // Billing/peak tracking.
+    let mut billable_by_class = vec![0usize; n_classes];
+    for n in &nodes {
+        billable_by_class[n.class_idx] += 1;
+    }
+    let mut peak_by_class = billable_by_class.clone();
+    let mut peak_total = nodes.len();
+    // Control window accumulators.
+    let mut win_queries = 0usize;
+    let mut win_lat = Percentiles::new();
+    let mut last_tick_us = 0.0f64;
+
+    macro_rules! up_count {
+        () => {
+            nodes.iter().filter(|n| n.state == NodeState::Up).count()
+        };
+    }
+
+    while let Some(Reverse((key, _, ev))) = heap.pop() {
+        let now = key as f64 / 1000.0;
+        match ev {
+            Ev::Arrive { req } => {
+                win_queries += reqs[req].n;
+                let depths: Vec<usize> = nodes.iter().map(|n| n.outstanding).collect();
+                let up: Vec<bool> =
+                    nodes.iter().map(|n| n.state == NodeState::Up).collect();
+                match router.route_up(arrivals[req].station, &depths, Some(&up)) {
+                    None => {
+                        // No live replica: lost to failure, visibly.
+                        lost += 1;
+                        lost_q += reqs[req].n;
+                    }
+                    Some(target) => {
+                        if !cfg
+                            .admission
+                            .admits(depths[target], nodes[target].est_service_us)
+                        {
+                            dropped += 1;
+                            dropped_q += reqs[req].n;
+                            continue;
+                        }
+                        reqs[req].node = target;
+                        nodes[target].outstanding += 1;
+                        nodes[target].queue.push_back(req);
+                        try_start_feeder(
+                            target, &mut nodes, &mut reqs, arrivals, o, now, &mut heap,
+                            &mut seq,
+                        );
+                    }
+                }
+            }
+            Ev::FeederDone { node, epoch, req } => {
+                if nodes[node].epoch != epoch {
+                    continue; // stale: the node died and rerouted this work
+                }
+                nodes[node].free_feeders += 1;
+                if let Some(pos) = nodes[node].feeding.iter().position(|&r| r == req) {
+                    nodes[node].feeding.swap_remove(pos);
+                }
+                let cpu_node = matches!(nodes[node].spec.engine, SimEngine::Cpu { .. });
+                if cpu_node || reqs[req].misses == 0 {
+                    let done = now + o.zmq.reply_us(reqs[req].n);
+                    let latency = done - reqs[req].at_us;
+                    complete_on(&mut nodes[node], req, &reqs, latency);
+                    if latency <= cfg.sla_us {
+                        within_sla += 1;
+                    }
+                    win_lat.record(latency);
+                    makespan = makespan.max(done);
+                    maybe_retire(&mut nodes[node], now, &mut billable_by_class);
+                } else {
+                    nodes[node].kernel_queue.push_back(req);
+                    try_start_kernel(node, &mut nodes, &reqs, o, now, &mut heap, &mut seq);
+                }
+                try_start_feeder(
+                    node, &mut nodes, &mut reqs, arrivals, o, now, &mut heap, &mut seq,
+                );
+            }
+            Ev::KernelDone { node, epoch, req } => {
+                if nodes[node].epoch != epoch {
+                    continue;
+                }
+                nodes[node].in_kernel = None;
+                let done = now + o.zmq.reply_us(reqs[req].n);
+                let latency = done - reqs[req].at_us;
+                complete_on(&mut nodes[node], req, &reqs, latency);
+                if latency <= cfg.sla_us {
+                    within_sla += 1;
+                }
+                win_lat.record(latency);
+                makespan = makespan.max(done);
+                maybe_retire(&mut nodes[node], now, &mut billable_by_class);
+                try_start_kernel(node, &mut nodes, &reqs, o, now, &mut heap, &mut seq);
+            }
+            Ev::FaultDown { fault } => {
+                let f = cfg.faults.faults()[fault];
+                if f.node >= nodes.len()
+                    || matches!(nodes[f.node].state, NodeState::Down | NodeState::Retired)
+                {
+                    continue; // nothing (left) to kill
+                }
+                let node = f.node;
+                if nodes[node].billed() {
+                    nodes[node].bill_stop(now);
+                    billable_by_class[nodes[node].class_idx] -= 1;
+                }
+                // Gather every admitted request the dead node still holds.
+                let mut victims: Vec<usize> = nodes[node].queue.drain(..).collect();
+                victims.extend(nodes[node].feeding.drain(..));
+                victims.extend(nodes[node].kernel_queue.drain(..));
+                victims.extend(nodes[node].in_kernel.take());
+                nodes[node].outstanding = 0;
+                nodes[node].free_feeders = nodes[node].spec.feeders;
+                nodes[node].est_service_us = 0.0;
+                nodes[node].cache = cfg.cache_capacity.map(LruCache::new); // cold revive
+                nodes[node].epoch += 1;
+                nodes[node].state = NodeState::Down;
+                push_ev(&mut heap, &mut seq, now + f.down_us, Ev::NodeUp {
+                    node,
+                    epoch: nodes[node].epoch,
+                });
+                events.push(ScalingEvent {
+                    t_us: now,
+                    kind: ScalingEventKind::Fail,
+                    class: cfg.classes[nodes[node].class_idx].class.name.into(),
+                    node,
+                    up_after: up_count!(),
+                });
+                // Drain/reroute: every victim re-enters the router; only a
+                // fully dead fleet loses work.
+                for rid in victims {
+                    let depths: Vec<usize> =
+                        nodes.iter().map(|n| n.outstanding).collect();
+                    let up: Vec<bool> =
+                        nodes.iter().map(|n| n.state == NodeState::Up).collect();
+                    match router.route_up(arrivals[rid].station, &depths, Some(&up)) {
+                        None => {
+                            lost += 1;
+                            lost_q += reqs[rid].n;
+                        }
+                        Some(target) => {
+                            rerouted += 1;
+                            reqs[rid].node = target;
+                            reqs[rid].misses = reqs[rid].n;
+                            nodes[target].outstanding += 1;
+                            nodes[target].queue.push_back(rid);
+                            try_start_feeder(
+                                target, &mut nodes, &mut reqs, arrivals, o, now,
+                                &mut heap, &mut seq,
+                            );
+                        }
+                    }
+                }
+            }
+            Ev::NodeUp { node, epoch } => {
+                if nodes[node].epoch != epoch {
+                    continue;
+                }
+                match nodes[node].state {
+                    NodeState::Down => {
+                        nodes[node].state = NodeState::Up;
+                        nodes[node].billed_since_us = now;
+                        billable_by_class[nodes[node].class_idx] += 1;
+                        peak_by_class[nodes[node].class_idx] = peak_by_class
+                            [nodes[node].class_idx]
+                            .max(billable_by_class[nodes[node].class_idx]);
+                        peak_total =
+                            peak_total.max(billable_by_class.iter().sum::<usize>());
+                        events.push(ScalingEvent {
+                            t_us: now,
+                            kind: ScalingEventKind::Recover,
+                            class: cfg.classes[nodes[node].class_idx].class.name.into(),
+                            node,
+                            up_after: up_count!(),
+                        });
+                    }
+                    NodeState::Provisioning => {
+                        nodes[node].state = NodeState::Up;
+                    }
+                    _ => {}
+                }
+            }
+            Ev::Tick => {
+                let window_s = ((now - last_tick_us) * 1e-6).max(1e-9);
+                let capacity_qps: f64 = nodes
+                    .iter()
+                    .filter(|n| n.state == NodeState::Up)
+                    .map(|n| cfg.classes[n.class_idx].class.capacity_qps)
+                    .sum();
+                let offered_qps = win_queries as f64 / window_s;
+                let mut up_by_class = vec![0usize; n_classes];
+                for n in &nodes {
+                    if n.state == NodeState::Up {
+                        up_by_class[n.class_idx] += 1;
+                    }
+                }
+                let obs = FleetObservation {
+                    t_us: now,
+                    offered_qps,
+                    capacity_qps,
+                    utilisation: if capacity_qps > 0.0 {
+                        offered_qps / capacity_qps
+                    } else {
+                        f64::INFINITY
+                    },
+                    outstanding: nodes.iter().map(|n| n.outstanding).sum(),
+                    window_p90_us: if win_lat.is_empty() { 0.0 } else { win_lat.p90() },
+                    sla_us: cfg.sla_us,
+                    nodes_up: up_by_class.iter().sum(),
+                    up_by_class,
+                };
+                match scaler.decide(&obs, &class_list) {
+                    ScalingAction::Hold => {}
+                    ScalingAction::Add(ci) if ci < n_classes => {
+                        let billable_total: usize = billable_by_class.iter().sum();
+                        if billable_total < cfg.max_nodes {
+                            let idx = nodes.len();
+                            nodes.push(DNode::of(ci, cfg, NodeState::Provisioning, now));
+                            billable_by_class[ci] += 1;
+                            peak_by_class[ci] = peak_by_class[ci].max(billable_by_class[ci]);
+                            peak_total =
+                                peak_total.max(billable_by_class.iter().sum::<usize>());
+                            router.set_weights(router_weights(&nodes, &cfg.classes));
+                            push_ev(&mut heap, &mut seq, now + cfg.provision_us, Ev::NodeUp {
+                                node: idx,
+                                epoch: 0,
+                            });
+                            events.push(ScalingEvent {
+                                t_us: now,
+                                kind: ScalingEventKind::Add,
+                                class: cfg.classes[ci].class.name.into(),
+                                node: idx,
+                                up_after: up_count!(),
+                            });
+                        }
+                    }
+                    ScalingAction::Remove(ci) if ci < n_classes => {
+                        let up_total = up_count!();
+                        if up_total > cfg.min_nodes {
+                            // The emptiest Up node of the class drains.
+                            let pick = nodes
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, n)| {
+                                    n.state == NodeState::Up && n.class_idx == ci
+                                })
+                                .min_by_key(|(i, n)| (n.outstanding, *i))
+                                .map(|(i, _)| i);
+                            if let Some(i) = pick {
+                                nodes[i].state = NodeState::Draining;
+                                events.push(ScalingEvent {
+                                    t_us: now,
+                                    kind: ScalingEventKind::Drain,
+                                    class: cfg.classes[ci].class.name.into(),
+                                    node: i,
+                                    up_after: up_count!(),
+                                });
+                                maybe_retire(&mut nodes[i], now, &mut billable_by_class);
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+                win_queries = 0;
+                win_lat = Percentiles::new();
+                last_tick_us = now;
+                let next = now + cfg.tick_us;
+                if next <= end_us {
+                    push_ev(&mut heap, &mut seq, next, Ev::Tick);
+                }
+            }
+        }
+    }
+
+    // ---- Final billing and report --------------------------------------
+    let run_end_us = makespan.max(end_us);
+    for n in nodes.iter_mut() {
+        // A fault revive can fire *after* the run window (its NodeUp event
+        // still drains from the heap); clamp so such a node bills zero
+        // tail time instead of a negative interval.
+        if n.billed() && n.billed_since_us < run_end_us {
+            n.bill_stop(run_end_us);
+        }
+    }
+
+    let completed: usize = nodes.iter().map(|n| n.completed).sum();
+    let completed_queries: usize = nodes.iter().map(|n| n.completed_q).sum();
+    assert_eq!(
+        completed + dropped + lost,
+        arrivals.len(),
+        "managed fleet must conserve requests"
+    );
+
+    let lats: Vec<Percentiles> = nodes.iter().map(|n| n.lat.clone()).collect();
+    let (p50, p90, p99) = merged_quantiles(&lats);
+    let (lookups, hits) =
+        nodes.iter().fold((0u64, 0u64), |(l, h), n| (l + n.lookups, h + n.hits));
+    let per_node: Vec<NodeReport> = nodes
+        .iter_mut()
+        .map(|n| NodeReport {
+            class: n.spec.class_name.to_string(),
+            backend: n.spec.class_name.to_string(),
+            completed_requests: n.completed,
+            completed_queries: n.completed_q,
+            req_p90_us: if n.lat.is_empty() { 0.0 } else { n.lat.p90() },
+            cache_hit_rate: if n.lookups == 0 { 0.0 } else { n.hits as f64 / n.lookups as f64 },
+            mean_aggregation: 1.0,
+        })
+        .collect();
+
+    let cluster = ClusterReport {
+        label: cfg.label(),
+        route: cfg.route.label(),
+        offered_qps: offered_q as f64 / (end_us.max(1.0) * 1e-6),
+        achieved_qps: completed_queries as f64 / (makespan.max(1e-9) * 1e-6),
+        requests: arrivals.len(),
+        completed,
+        dropped,
+        lost,
+        completed_queries,
+        dropped_queries: dropped_q,
+        lost_queries: lost_q,
+        failed: 0,
+        req_p50_us: p50,
+        req_p90_us: p90,
+        req_p99_us: p99,
+        cache_hit_rate: if lookups == 0 { 0.0 } else { hits as f64 / lookups as f64 },
+        per_node,
+    };
+
+    // Per-class usage rollup.
+    let mut usage: Vec<ClassUsage> = cfg
+        .classes
+        .iter()
+        .enumerate()
+        .map(|(ci, c)| ClassUsage {
+            class: c.class.name.into(),
+            node_hours: 0.0,
+            hourly_usd: c.class.hourly_usd(),
+            cost_usd: 0.0,
+            peak_nodes: peak_by_class[ci],
+        })
+        .collect();
+    for n in &nodes {
+        usage[n.class_idx].node_hours += n.billed_us / 3.6e9;
+    }
+    for u in usage.iter_mut() {
+        u.cost_usd = u.node_hours * u.hourly_usd;
+    }
+    let node_hours: f64 = usage.iter().map(|u| u.node_hours).sum();
+    let cost_usd: f64 = usage.iter().map(|u| u.cost_usd).sum();
+
+    FleetDynamicsReport {
+        policy: scaler.name().into(),
+        profile: cfg.profile_label.clone(),
+        cluster,
+        events,
+        usage,
+        node_hours,
+        cost_usd,
+        sla_us: cfg.sla_us,
+        sla_attainment: within_sla as f64 / arrivals.len() as f64,
+        rerouted,
+        peak_nodes: peak_total,
+    }
+}
+
+fn complete_on(node: &mut DNode, rid: usize, reqs: &[DReq], latency: f64) {
+    node.lat.record(latency);
+    node.outstanding -= 1;
+    node.completed += 1;
+    node.completed_q += reqs[rid].n;
+    node.est_service_us = update_service_estimate(node.est_service_us, latency, node.outstanding);
+}
+
+fn maybe_retire(node: &mut DNode, now: f64, billable_by_class: &mut [usize]) {
+    if node.state == NodeState::Draining && node.outstanding == 0 {
+        node.bill_stop(now);
+        node.state = NodeState::Retired;
+        billable_by_class[node.class_idx] -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::scheduled_sim_arrivals;
+    use crate::controlplane::autoscaler::{ReactiveUtilisation, StaticFleet};
+    use crate::workload::RateSchedule;
+
+    const BATCH: usize = 2_048;
+
+    fn fpga_class() -> SimClass {
+        SimClass::calibrated(
+            NodeClass::fpga_f1(0.0),
+            SimNodeSpec::v2_cloud(2),
+            &Overheads::default(),
+            BATCH,
+        )
+    }
+
+    /// One full diurnal period scaled to the single-node capacity (trough
+    /// well under one node, peak well over it), plus a config whose
+    /// control tick resolves that period into ~25 windows.
+    fn scenario(seed: u64, n: usize, initial: usize) -> (FleetSimConfig, Vec<SimArrival>) {
+        let cap_rps = fpga_class().class.capacity_qps / BATCH as f64;
+        // Mean of the sinusoid over one period is its base, so n requests
+        // at base rate span ≈ one period.
+        let period_s = n as f64 / cap_rps;
+        let schedule = RateSchedule::diurnal(cap_rps, 0.8 * cap_rps, period_s);
+        let arrivals = scheduled_sim_arrivals(seed, &schedule, BATCH, n, 16, 0.9, 0);
+        let tick_us = period_s * 1e6 / 25.0;
+        let cfg = FleetSimConfig::new(vec![fpga_class()], vec![0; initial])
+            .with_control(tick_us, tick_us / 2.0)
+            .with_sla(60_000.0)
+            .with_bounds(1, 4)
+            .with_profile_label(schedule.label());
+        (cfg, arrivals)
+    }
+
+    #[test]
+    fn managed_fleet_is_deterministic_and_conserves() {
+        let (cfg, arrivals) = scenario(11, 600, 1);
+        let run = || {
+            let mut scaler = ReactiveUtilisation::new(0);
+            simulate_fleet(&cfg, &mut scaler, &arrivals)
+        };
+        let a = run();
+        let b = run();
+        assert!(a.cluster.conserves_requests());
+        assert_eq!(a.cluster.completed, b.cluster.completed);
+        assert_eq!(a.cost_usd, b.cost_usd);
+        assert_eq!(a.events.len(), b.events.len());
+        assert_eq!(a.sla_attainment, b.sla_attainment);
+    }
+
+    #[test]
+    fn reactive_scaler_follows_the_diurnal_wave() {
+        let (cfg, arrivals) = scenario(13, 800, 1);
+        let mut scaler = ReactiveUtilisation::new(0);
+        let r = simulate_fleet(&cfg, &mut scaler, &arrivals);
+        assert!(r.cluster.conserves_requests());
+        assert!(r.peak_nodes > 1, "the midday peak must force a scale-up");
+        assert!(
+            r.events.iter().any(|e| e.kind == ScalingEventKind::Add),
+            "timeline must record the adds: {}",
+            r.timeline()
+        );
+        assert!(r.node_hours > 0.0);
+        assert!(r.cost_usd > 0.0);
+        assert!(r.dollars_per_mquery() > 0.0);
+    }
+
+    #[test]
+    fn static_peak_fleet_costs_more_than_autoscaled() {
+        let (auto_cfg, arrivals) = scenario(17, 800, 1);
+        // Static: peak-provisioned (3 nodes) for the whole window.
+        let (static_cfg, _) = scenario(17, 800, 3);
+        let mut stat = StaticFleet;
+        let static_run = simulate_fleet(&static_cfg, &mut stat, &arrivals);
+        // Autoscaled: start at 1, breathe with the wave.
+        let mut scaler = ReactiveUtilisation::new(0);
+        let auto_run = simulate_fleet(&auto_cfg, &mut scaler, &arrivals);
+        assert!(static_run.cluster.conserves_requests());
+        assert!(auto_run.cluster.conserves_requests());
+        assert!(
+            auto_run.cost_usd < static_run.cost_usd,
+            "autoscaling must bill fewer node-hours: {} !< {}",
+            auto_run.cost_usd,
+            static_run.cost_usd
+        );
+    }
+
+    #[test]
+    fn killing_a_replica_loses_nothing_while_a_peer_lives() {
+        // Sustained 1.15× fleet overload on 2 nodes: the backlog grows
+        // monotonically, so the killed node certainly holds in-flight
+        // work and the reroute path is exercised.
+        let (cfg, _) = scenario(19, 500, 2);
+        let cap_rps = fpga_class().class.capacity_qps / BATCH as f64;
+        let schedule = RateSchedule::constant(2.3 * cap_rps);
+        let arrivals = scheduled_sim_arrivals(19, &schedule, BATCH, 500, 16, 0.9, 0);
+        let mid = arrivals[arrivals.len() / 2].at_us;
+        let span = arrivals.last().unwrap().at_us;
+        let cfg = cfg.with_faults(FaultPlan::kill(0, mid, 0.2 * span));
+        let mut stat = StaticFleet;
+        let r = simulate_fleet(&cfg, &mut stat, &arrivals);
+        assert!(r.cluster.conserves_requests());
+        assert_eq!(r.cluster.lost, 0, "drain/reroute must preserve admitted work");
+        assert!(r.rerouted > 0, "the dead node's in-flight work must move");
+        assert!(r.events.iter().any(|e| e.kind == ScalingEventKind::Fail));
+        assert!(r.events.iter().any(|e| e.kind == ScalingEventKind::Recover));
+        assert_eq!(r.cluster.completed, r.cluster.requests - r.cluster.dropped);
+    }
+
+    #[test]
+    fn killing_the_only_replica_counts_losses_visibly() {
+        let (cfg, arrivals) = scenario(23, 400, 1);
+        let mid = arrivals[arrivals.len() / 2].at_us;
+        let span = arrivals.last().unwrap().at_us;
+        let cfg = cfg.with_faults(FaultPlan::kill(0, mid, 0.3 * span));
+        let mut stat = StaticFleet;
+        let r = simulate_fleet(&cfg, &mut stat, &arrivals);
+        assert!(r.cluster.conserves_requests());
+        assert!(r.cluster.lost > 0, "a dead fleet must lose visibly, not silently");
+        assert_eq!(r.cluster.lost_queries, r.cluster.lost * BATCH);
+    }
+}

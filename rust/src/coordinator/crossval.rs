@@ -10,16 +10,28 @@
 //! same topology and checks they land in the same aggregation regime —
 //! the cheap-but-meaningful invariant a service-time simulator and a
 //! wall-clock thread system can share.
+//!
+//! Two fleet-level cross-validations extend the idea upward:
+//! [`cross_validate_cluster_policies`] (do both realisations rank
+//! *routing* policies identically by shed load?) and
+//! [`cross_validate_scaling_policies`] (do both realisations rank
+//! *autoscaling* policies identically by fleet cost under the same
+//! diurnal profile?).
 
 use anyhow::Result;
 
 use crate::backend::BackendFactory;
 use crate::cluster::{
     simulate_cluster, sim::sim_arrivals, Cluster, ClusterConfig, ClusterReport,
-    ClusterSimConfig,
+    ClusterSimConfig, NodeClass, SimNodeSpec,
+};
+use crate::controlplane::{
+    simulate_fleet, Autoscaler, CostAware, FleetDynamicsReport, FleetSimConfig,
+    ManagedCluster, ManagedClusterConfig, ReactiveUtilisation, RealClass, SimClass,
+    StaticFleet,
 };
 use crate::rules::types::World;
-use crate::workload::{PoissonSource, ProductionTrace};
+use crate::workload::{PoissonSource, ProductionTrace, RateSchedule, ScheduledSource};
 
 use super::config::{AggregationPolicy, PipelineConfig, Topology};
 use super::pipeline::{Pipeline, PipelineReport};
@@ -137,11 +149,18 @@ pub fn cross_validate_cluster_policies(
     n_requests: usize,
 ) -> Result<ClusterPolicyCrossValidation> {
     use crate::cluster::{AdmissionPolicy, RoutePolicy};
-    let feeders = cluster.node.topology.workers.max(1);
+    // The calibration below measures *one* node shape and models the whole
+    // fleet with it — a mixed fleet would be silently misrepresented.
+    anyhow::ensure!(
+        cluster.is_homogeneous(),
+        "cross_validate_cluster_policies requires a homogeneous ClusterConfig"
+    );
+    let node = cluster.specs[0].node;
+    let feeders = node.topology.workers.max(1);
     let skew = 1.3;
     // The sim must model the same node the real cluster runs — including
     // its result cache (and then it needs the query keys in its arrivals).
-    let cache = cluster.node.cache_capacity;
+    let cache = node.cache_capacity;
     let with_keys = cache.is_some();
     let sim_node_cfg = |nodes: usize| {
         let cfg = ClusterSimConfig::v2_cloud(nodes, feeders);
@@ -156,7 +175,7 @@ pub fn cross_validate_cluster_policies(
     // The real probe runs twice and keeps the faster measurement: both
     // include thread-spawn/warm-up overhead, so each *under*-estimates the
     // drain rate and the max is the better (still conservative) estimate.
-    let probe_cfg = ClusterConfig::new(1, cluster.node)
+    let probe_cfg = ClusterConfig::new(1, node)
         .with_admission(AdmissionPolicy::Open);
     let probe = Cluster::new(probe_cfg, factory.clone());
     let mu_real_rps = (0..2u64)
@@ -177,19 +196,162 @@ pub fn cross_validate_cluster_policies(
         PoissonSource::new(world, seed, rate_rps, batch_per_request, n_requests)
             .with_airport_skew(skew)
     };
-    let real_rate = CROSSVAL_RR_UTILISATION * cluster.nodes as f64 * mu_real_rps;
-    let sim_rate = CROSSVAL_RR_UTILISATION * cluster.nodes as f64 * mu_sim_rps;
+    let real_rate = CROSSVAL_RR_UTILISATION * cluster.nodes() as f64 * mu_real_rps;
+    let sim_rate = CROSSVAL_RR_UTILISATION * cluster.nodes() as f64 * mu_sim_rps;
     let run_pair = |route: RoutePolicy| -> Result<(ClusterReport, ClusterReport)> {
-        let sim_cfg = sim_node_cfg(cluster.nodes)
+        let sim_cfg = sim_node_cfg(cluster.nodes())
             .with_route(route)
             .with_admission(cluster.admission);
         let arrivals = sim_arrivals(&mut source(seed, sim_rate), with_keys);
         let sim = simulate_cluster(&sim_cfg, &arrivals);
-        let real = Cluster::new(cluster.with_route(route), factory.clone())
+        let real = Cluster::new(cluster.clone().with_route(route), factory.clone())
             .run(&mut source(seed, real_rate))?;
         Ok((sim, real))
     };
     let (sim_rr, real_rr) = run_pair(RoutePolicy::RoundRobin)?;
     let (sim_sharded, real_sharded) = run_pair(RoutePolicy::StationSharded)?;
     Ok(ClusterPolicyCrossValidation { sim_rr, sim_sharded, real_rr, real_sharded })
+}
+
+/// Autoscaling-policy cross-validation: the fleet DES and the real
+/// managed cluster, each calibrated to its own node speed and driven by
+/// the *same relative* diurnal profile, must **rank the scaling policies
+/// identically by fleet cost**.
+///
+/// The compared policies are deliberately cost-separated: a static
+/// peak-provisioned fleet (3 nodes, never scales), a lazy reactive scaler
+/// (adds at 85 % utilisation), and an eager cost-aware scaler (provisions
+/// for 55 % target utilisation — earlier up, later down). Both reactive
+/// policies act on offered-load/capacity, a clock-free signal defined on
+/// the arrival clock, which is what makes the ranking structural rather
+/// than a timing accident.
+#[derive(Debug, Clone)]
+pub struct ScalingPolicyCrossValidation {
+    /// One report per policy, same order in both realisations.
+    pub sim: Vec<FleetDynamicsReport>,
+    pub real: Vec<FleetDynamicsReport>,
+}
+
+impl ScalingPolicyCrossValidation {
+    fn ranking(reports: &[FleetDynamicsReport]) -> Vec<String> {
+        let mut idx: Vec<usize> = (0..reports.len()).collect();
+        idx.sort_by(|&a, &b| {
+            reports[a].cost_usd.partial_cmp(&reports[b].cost_usd).unwrap()
+        });
+        idx.into_iter().map(|i| reports[i].policy.clone()).collect()
+    }
+
+    /// Policies cheapest-first, as the simulator saw them.
+    pub fn sim_ranking(&self) -> Vec<String> {
+        Self::ranking(&self.sim)
+    }
+
+    /// Policies cheapest-first, as the real fleet saw them.
+    pub fn real_ranking(&self) -> Vec<String> {
+        Self::ranking(&self.real)
+    }
+
+    /// True when both realisations order the policies identically by
+    /// fleet cost.
+    pub fn agree_on_ranking(&self) -> bool {
+        self.sim_ranking() == self.real_ranking()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "cost ranking — sim [{}] vs real [{}] → {}",
+            self.sim_ranking().join(" < "),
+            self.real_ranking().join(" < "),
+            if self.agree_on_ranking() { "same ranking" } else { "RANKING MISMATCH" }
+        )
+    }
+}
+
+/// Run {DES, real} × {static-peak, reactive, cost-aware} under one
+/// diurnal period scaled to each realisation's measured node rate
+/// (trough 0.2×, peak 1.8× of a single node), and collect the six
+/// [`FleetDynamicsReport`]s for ranking.
+pub fn cross_validate_scaling_policies(
+    node: PipelineConfig,
+    factory: BackendFactory,
+    world: &World,
+    seed: u64,
+    batch_per_request: usize,
+    n_requests: usize,
+) -> Result<ScalingPolicyCrossValidation> {
+    let feeders = node.topology.workers.max(1);
+    let burst = |seed| PoissonSource::new(world, seed, 1e8, batch_per_request, n_requests);
+
+    // ---- Calibrate per-node drain rates (as the routing crossval) ------
+    let probe_cfg = ClusterConfig::new(1, node);
+    let probe = Cluster::new(probe_cfg, factory.clone());
+    let mu_real_rps = (0..2u64)
+        .map(|i| {
+            probe
+                .run(&mut burst(seed ^ (1 + i)))
+                .map(|r| r.achieved_qps / batch_per_request as f64)
+        })
+        .collect::<Result<Vec<_>>>()?
+        .into_iter()
+        .fold(0.0, f64::max);
+    let sim_spec = SimNodeSpec::v2_cloud(feeders);
+    let sim_probe = simulate_cluster(
+        &ClusterSimConfig::heterogeneous(vec![sim_spec]),
+        &sim_arrivals(&mut burst(seed ^ 1), false),
+    );
+    let mu_sim_rps = sim_probe.achieved_qps / batch_per_request as f64;
+
+    // Fresh policy instances per run; initial fleet size rides along.
+    let scalers = || -> Vec<(Box<dyn Autoscaler>, usize)> {
+        vec![
+            (Box::new(StaticFleet), 3),
+            (Box::new(ReactiveUtilisation::new(0)), 1),
+            (Box::new(CostAware::with_target(0.55)), 1),
+        ]
+    };
+    let schedule = |mu_rps: f64| {
+        // n requests at the sinusoid's base rate span ≈ one full period.
+        RateSchedule::diurnal(mu_rps, 0.8 * mu_rps, n_requests as f64 / mu_rps)
+    };
+
+    // ---- DES runs ------------------------------------------------------
+    let sim_sched = schedule(mu_sim_rps);
+    let sim_period_us = n_requests as f64 / mu_sim_rps * 1e6;
+    let sim_class =
+        SimClass::new(NodeClass::fpga_f1(mu_sim_rps * batch_per_request as f64), sim_spec);
+    let mut sim_reports = Vec::new();
+    for (mut scaler, initial) in scalers() {
+        let cfg = FleetSimConfig::new(vec![sim_class.clone()], vec![0; initial])
+            .with_control(sim_period_us / 25.0, sim_period_us / 100.0)
+            .with_bounds(1, 3)
+            .with_sla(f64::INFINITY)
+            .with_profile_label(sim_sched.label());
+        let arrivals = sim_arrivals(
+            &mut ScheduledSource::new(Box::new(burst(seed ^ 7)), seed ^ 9, &sim_sched),
+            false,
+        );
+        sim_reports.push(simulate_fleet(&cfg, scaler.as_mut(), &arrivals));
+    }
+
+    // ---- Real runs -----------------------------------------------------
+    let real_sched = schedule(mu_real_rps);
+    let real_period_us = n_requests as f64 / mu_real_rps * 1e6;
+    let real_class = RealClass {
+        class: NodeClass::fpga_f1(mu_real_rps * batch_per_request as f64),
+        node,
+        factory,
+    };
+    let mut real_reports = Vec::new();
+    for (mut scaler, initial) in scalers() {
+        let cfg = ManagedClusterConfig::new(vec![real_class.clone()], vec![0; initial])
+            .with_control(real_period_us / 25.0)
+            .with_bounds(1, 3)
+            .with_sla(f64::INFINITY)
+            .with_profile_label(real_sched.label());
+        let mut src =
+            ScheduledSource::new(Box::new(burst(seed ^ 7)), seed ^ 9, &real_sched);
+        real_reports.push(ManagedCluster::new(cfg).run(scaler.as_mut(), &mut src)?);
+    }
+
+    Ok(ScalingPolicyCrossValidation { sim: sim_reports, real: real_reports })
 }

@@ -32,8 +32,8 @@ pub mod sim;
 
 pub use config::{AggregationPolicy, FailurePolicy, PipelineConfig, Topology};
 pub use crossval::{
-    cross_validate, cross_validate_cluster_policies, ClusterPolicyCrossValidation,
-    CrossValidation,
+    cross_validate, cross_validate_cluster_policies, cross_validate_scaling_policies,
+    ClusterPolicyCrossValidation, CrossValidation, ScalingPolicyCrossValidation,
 };
 pub use domain_explorer::{DomainExplorer, MctStrategy, UserQueryOutcome};
 pub use metrics::Percentiles;

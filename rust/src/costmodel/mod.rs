@@ -52,6 +52,26 @@ pub enum Billing {
     Hourly,
 }
 
+/// Years an on-premises purchase is amortised over when compared against
+/// hourly cloud billing (the paper compares purchase totals to *yearly*
+/// cloud cost; 3 years is the depreciation the §6 discussion implies).
+pub const PURCHASE_AMORTISATION_YEARS: f64 = 3.0;
+
+impl Element {
+    /// Effective hourly price of one unit, so heterogeneous fleets can be
+    /// costed on a single axis: hourly elements quote it directly,
+    /// purchases amortise over [`PURCHASE_AMORTISATION_YEARS`]. This is
+    /// the number the control plane multiplies by node-hours.
+    pub fn hourly_usd(&self) -> f64 {
+        match self.billing {
+            Billing::Hourly => self.unit_cost,
+            Billing::Purchase => {
+                self.unit_cost / (PURCHASE_AMORTISATION_YEARS * HOURS_PER_YEAR)
+            }
+        }
+    }
+}
+
 /// Catalogue — prices as quoted in §6 (February 2021).
 pub mod catalog {
     use super::{Billing, Element};
@@ -455,6 +475,15 @@ mod tests {
             assert_eq!(plan.units, cloud_units_for_cpu_capacity(reduced, elem.vcpus));
             assert_eq!(plan.bottleneck, FleetBottleneck::CpuCapacity);
         }
+    }
+
+    #[test]
+    fn hourly_price_amortises_purchases() {
+        assert_eq!(catalog::AWS_F1_2XL.hourly_usd(), catalog::AWS_F1_2XL.unit_cost);
+        let onprem = catalog::ONPREM_U50.hourly_usd();
+        let expect = 13_000.0 / (PURCHASE_AMORTISATION_YEARS * HOURS_PER_YEAR);
+        assert!((onprem - expect).abs() < 1e-9, "amortised {onprem}");
+        assert!(onprem < catalog::AWS_F1_2XL.hourly_usd(), "owned hardware is cheap per hour");
     }
 
     #[test]

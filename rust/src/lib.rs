@@ -23,6 +23,7 @@ pub mod backend;
 pub mod benchkit;
 pub mod bits;
 pub mod cluster;
+pub mod controlplane;
 pub mod coordinator;
 pub mod costmodel;
 pub mod cpu_baseline;

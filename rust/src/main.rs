@@ -11,9 +11,12 @@
 //!                           [--strategy cpu|fpga] [--fail fast|degrade]
 //!                           [--open RATE_RPS] [--requests N] [--batch B] [--cache CAP]
 //!                           [--shards N]  (native backend: split large batches over N cores)
-//! erbium-search fleet       [--nodes N] [--route rr|jsq|shard] [--rate RPS] [--requests N]
-//!                           [--batch B] [--cache CAP] [--cap Q | --sla US]
+//! erbium-search fleet       [--nodes N] [--route rr|jsq|jsq2|jsqd:N|shard] [--rate RPS]
+//!                           [--requests N] [--batch B] [--cache CAP] [--cap Q | --sla US]
 //!                           [--rules N] [--seed S] [--p P] [--w W] [--k K] [--e E]
+//!                           [--autoscale static|reactive|sla|cost]   (control-plane DES)
+//!                           [--profile diurnal:BASE:AMP:PERIOD_S | const:RPS]
+//!                           [--faults N] [--hetero] [--tick-us T] [--max N] [--feeders F]
 //! erbium-search costs       [--uqps UQ_PER_S] [--node-qps QPS]
 //! ```
 
@@ -24,10 +27,16 @@ use erbium_search::backend::{
     xla_backend_factory, BackendFactory,
 };
 use erbium_search::cluster::{
-    simulate_cluster, AdmissionPolicy, Cluster, ClusterConfig, ClusterSimConfig, RoutePolicy,
+    scheduled_sim_arrivals, simulate_cluster, AdmissionPolicy, Cluster, ClusterConfig,
+    ClusterSimConfig, NodeClass, RoutePolicy, SimNodeSpec,
+};
+use erbium_search::controlplane::{
+    simulate_fleet, Autoscaler, CostAware, FaultPlan, FleetSimConfig, ReactiveUtilisation,
+    SimClass, SlaLatency, StaticFleet,
 };
 use erbium_search::coordinator::{
-    AggregationPolicy, FailurePolicy, MctStrategy, Pipeline, PipelineConfig, Topology,
+    AggregationPolicy, FailurePolicy, MctStrategy, Overheads, Pipeline, PipelineConfig,
+    Topology,
 };
 use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
 use erbium_search::nfa::constraint_gen::{estimate, HardwareConfig};
@@ -38,7 +47,9 @@ use erbium_search::rules::generator::{generate_rule_set, generate_world, Generat
 use erbium_search::rules::standard::{Schema, StandardVersion};
 use erbium_search::rules::serde_text;
 use erbium_search::runtime::Runtime;
-use erbium_search::workload::{generate_trace, random_query, PoissonSource, TraceConfig};
+use erbium_search::workload::{
+    generate_trace, random_query, PoissonSource, RateSchedule, TraceConfig,
+};
 
 struct Args(Vec<String>);
 
@@ -51,6 +62,9 @@ impl Args {
     }
     fn u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn flag(&self, key: &str) -> bool {
+        self.0.iter().any(|a| a == key)
     }
     fn f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -261,6 +275,83 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+        "fleet" if args.get("--autoscale").is_some() => {
+            // Control-plane DES: heterogeneous classes, diurnal load,
+            // autoscaling, optional fault injection. Synthetic arrivals —
+            // no world compilation needed.
+            let policy = args.get("--autoscale").unwrap().to_string();
+            let seed = args.u64("--seed", 1);
+            let batch = args.usize("--batch", 2_048);
+            let requests = args.usize("--requests", 1_500);
+            let o = Overheads::default();
+            let fpga = SimClass::calibrated(
+                NodeClass::fpga_f1(0.0),
+                SimNodeSpec::v2_cloud(args.usize("--feeders", 2)),
+                &o,
+                batch,
+            );
+            let cpu =
+                SimClass::calibrated(NodeClass::cpu_c5(0.0), SimNodeSpec::cpu(2, 2.0), &o, batch);
+            let classes =
+                if args.flag("--hetero") { vec![fpga.clone(), cpu] } else { vec![fpga.clone()] };
+            let cap_rps = fpga.class.capacity_qps / batch as f64;
+            let default_period = requests as f64 / cap_rps;
+            let schedule = match args.get("--profile") {
+                None => RateSchedule::diurnal(cap_rps, 0.8 * cap_rps, default_period),
+                Some(p) => {
+                    let parts: Vec<&str> = p.split(':').collect();
+                    match parts.as_slice() {
+                        ["const", r] => RateSchedule::constant(r.parse()?),
+                        ["diurnal", b, a, per] => {
+                            RateSchedule::diurnal(b.parse()?, a.parse()?, per.parse()?)
+                        }
+                        _ => anyhow::bail!(
+                            "bad --profile {p:?} (diurnal:BASE:AMP:PERIOD_S | const:RPS)"
+                        ),
+                    }
+                }
+            };
+            let arrivals = scheduled_sim_arrivals(seed, &schedule, batch, requests, 16, 0.9, 0);
+            let span_us = arrivals.last().map(|a| a.at_us).unwrap_or(1.0);
+            let tick_us = args.f64("--tick-us", span_us / 25.0);
+            let initial = args.usize("--nodes", 1);
+            let max_nodes = args.usize("--max", 6);
+            anyhow::ensure!(
+                initial >= 1 && initial <= max_nodes,
+                "--nodes {initial} must be between 1 and --max {max_nodes}"
+            );
+            let mut cfg = FleetSimConfig::new(classes, vec![0; initial])
+                .with_control(tick_us, tick_us / 2.0)
+                .with_sla(args.f64("--sla", 20_000.0))
+                .with_bounds(1, max_nodes)
+                .with_profile_label(schedule.label());
+            let n_faults = args.usize("--faults", 0);
+            if n_faults > 0 {
+                cfg = cfg.with_faults(FaultPlan::seeded(
+                    seed,
+                    initial,
+                    span_us,
+                    n_faults,
+                    span_us / 10.0,
+                ));
+            }
+            let mut scaler: Box<dyn Autoscaler> = match policy.as_str() {
+                "static" => Box::new(StaticFleet),
+                "reactive" => Box::new(ReactiveUtilisation::new(0)),
+                "sla" => Box::new(SlaLatency::new(0)),
+                "cost" => Box::new(CostAware::new()),
+                p => anyhow::bail!("bad --autoscale {p:?} (static|reactive|sla|cost)"),
+            };
+            let r = simulate_fleet(&cfg, scaler.as_mut(), &arrivals);
+            println!("{}", r.summary());
+            print!("{}", r.timeline());
+            for u in &r.usage {
+                println!(
+                    "  class {:<8} {:.2} node-h × {:.4} $/h = {:.4} $ (peak {} nodes)",
+                    u.class, u.node_hours, u.hourly_usd, u.cost_usd, u.peak_nodes
+                );
+            }
+        }
         "fleet" => {
             let (_, world, schema, rs) = setup(&args);
             let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
@@ -283,7 +374,9 @@ fn main() -> anyhow::Result<()> {
                 .get("--route")
                 .map(|s| {
                     RoutePolicy::parse(s)
-                        .ok_or_else(|| anyhow::anyhow!("bad --route {s:?} (rr|jsq|shard)"))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("bad --route {s:?} (rr|jsq|jsq2|jsqd:N|shard)")
+                        })
                 })
                 .transpose()?
                 .unwrap_or(RoutePolicy::RoundRobin);
@@ -294,7 +387,9 @@ fn main() -> anyhow::Result<()> {
             } else {
                 AdmissionPolicy::Open
             };
-            let cluster_cfg = ClusterConfig::new(args.usize("--nodes", 4), node)
+            let nodes = args.usize("--nodes", 4);
+            let feeders = node.topology.workers.max(1);
+            let cluster_cfg = ClusterConfig::new(nodes, node)
                 .with_route(route)
                 .with_admission(admission);
             let seed = args.u64("--seed", 1);
@@ -305,19 +400,18 @@ fn main() -> anyhow::Result<()> {
             let mut src = PoissonSource::new(&world, seed, rate, batch, requests);
             let real = Cluster::new(cluster_cfg, factory).run(&mut src)?;
             println!("real: {}", real.summary());
-            let sim_cfg = ClusterSimConfig::v2_cloud(
-                cluster_cfg.nodes,
-                cluster_cfg.node.topology.workers.max(1),
-            )
-            .with_route(route)
-            .with_admission(admission);
+            let sim_cfg = ClusterSimConfig::v2_cloud(nodes, feeders)
+                .with_route(route)
+                .with_admission(admission);
             let mut src = PoissonSource::new(&world, seed, rate, batch, requests);
             let arrivals = erbium_search::cluster::sim::sim_arrivals(&mut src, false);
             let sim = simulate_cluster(&sim_cfg, &arrivals);
             println!("sim : {}", sim.summary());
             for (i, nr) in real.per_node.iter().enumerate() {
                 println!(
-                    "  node {i}: {} req, p90 {:.0} µs, agg {:.2}, cache {:.1} %",
+                    "  node {i} [{}/{}]: {} req, p90 {:.0} µs, agg {:.2}, cache {:.1} %",
+                    nr.class,
+                    nr.backend,
                     nr.completed_requests,
                     nr.req_p90_us,
                     nr.mean_aggregation,

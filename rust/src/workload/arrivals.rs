@@ -26,6 +26,176 @@ use crate::rules::types::{MctQuery, World};
 
 use super::{ProductionTrace, QueryFactory};
 
+/// Shape of a time-varying offered-load profile, requests/second as a
+/// function of seconds since stream start.
+#[derive(Debug, Clone)]
+pub enum RateProfile {
+    /// Flat rate (what [`PoissonSource`] models natively).
+    Constant(f64),
+    /// `base − amplitude·cos(2π t / period)`: the diurnal curve — the
+    /// stream starts at the overnight trough, peaks at `period/2` and
+    /// returns. `amplitude` is clamped to `base` so the rate never goes
+    /// negative.
+    Diurnal { base_rps: f64, amplitude_rps: f64, period_s: f64 },
+    /// Step profile: `(from_s, rps)` knots in ascending time order; the
+    /// rate holds each step until the next knot.
+    Piecewise(Vec<(f64, f64)>),
+}
+
+/// A deterministic rate profile the open-loop sources (and the
+/// control-plane autoscalers) evaluate: *offered* requests/s at any
+/// instant of the run.
+#[derive(Debug, Clone)]
+pub struct RateSchedule {
+    pub profile: RateProfile,
+}
+
+impl RateSchedule {
+    pub fn constant(rps: f64) -> RateSchedule {
+        assert!(rps > 0.0);
+        RateSchedule { profile: RateProfile::Constant(rps) }
+    }
+
+    /// Diurnal sinusoid from trough to peak and back over `period_s`.
+    pub fn diurnal(base_rps: f64, amplitude_rps: f64, period_s: f64) -> RateSchedule {
+        assert!(base_rps > 0.0 && period_s > 0.0 && amplitude_rps >= 0.0);
+        RateSchedule {
+            profile: RateProfile::Diurnal {
+                base_rps,
+                amplitude_rps: amplitude_rps.min(base_rps),
+                period_s,
+            },
+        }
+    }
+
+    /// Step profile from `(from_s, rps)` knots (first knot at 0 s).
+    pub fn piecewise(steps: Vec<(f64, f64)>) -> RateSchedule {
+        assert!(!steps.is_empty() && steps[0].0 <= 0.0, "first knot must start at 0 s");
+        assert!(steps.windows(2).all(|w| w[0].0 < w[1].0), "knots must ascend");
+        assert!(steps.iter().all(|&(_, r)| r > 0.0));
+        RateSchedule { profile: RateProfile::Piecewise(steps) }
+    }
+
+    /// Offered request rate at `t_s` seconds into the run.
+    pub fn rate_rps(&self, t_s: f64) -> f64 {
+        match &self.profile {
+            RateProfile::Constant(r) => *r,
+            RateProfile::Diurnal { base_rps, amplitude_rps, period_s } => {
+                base_rps - amplitude_rps * (2.0 * std::f64::consts::PI * t_s / period_s).cos()
+            }
+            RateProfile::Piecewise(steps) => steps
+                .iter()
+                .rev()
+                .find(|&&(from, _)| t_s >= from)
+                .map(|&(_, r)| r)
+                .unwrap_or(steps[0].1),
+        }
+    }
+
+    /// Largest rate the profile reaches — what a static fleet must be
+    /// provisioned for.
+    pub fn peak_rps(&self) -> f64 {
+        match &self.profile {
+            RateProfile::Constant(r) => *r,
+            RateProfile::Diurnal { base_rps, amplitude_rps, .. } => base_rps + amplitude_rps,
+            RateProfile::Piecewise(steps) => {
+                steps.iter().map(|&(_, r)| r).fold(0.0, f64::max)
+            }
+        }
+    }
+
+    /// Inter-arrival gap (µs) of the inhomogeneous Poisson clock at
+    /// `clock_us`, driven by one uniform draw `u` ∈ [0, 1). The single
+    /// definition of the re-timing step, shared by [`ScheduledSource`]
+    /// and the DES's payload-free
+    /// [`scheduled_sim_arrivals`](crate::cluster::scheduled_sim_arrivals),
+    /// so the two arrival generators can never drift apart.
+    pub fn poisson_gap_us(&self, clock_us: f64, u: f64) -> f64 {
+        let rate = self.rate_rps(clock_us * 1e-6).max(1e-6);
+        -(1.0 - u).ln() / rate * 1e6
+    }
+
+    /// Smallest rate the profile reaches (the overnight trough).
+    pub fn trough_rps(&self) -> f64 {
+        match &self.profile {
+            RateProfile::Constant(r) => *r,
+            RateProfile::Diurnal { base_rps, amplitude_rps, .. } => base_rps - amplitude_rps,
+            RateProfile::Piecewise(steps) => {
+                steps.iter().map(|&(_, r)| r).fold(f64::INFINITY, f64::min)
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match &self.profile {
+            RateProfile::Constant(r) => format!("const {r:.0}/s"),
+            RateProfile::Diurnal { base_rps, amplitude_rps, period_s } => {
+                format!("diurnal {base_rps:.0}±{amplitude_rps:.0}/s over {period_s:.0}s")
+            }
+            RateProfile::Piecewise(steps) => format!("piecewise ×{}", steps.len()),
+        }
+    }
+}
+
+/// Re-times another source's request stream onto a [`RateSchedule`]: the
+/// payloads (and their order) come from the inner source, the arrival
+/// clock is a seeded inhomogeneous-Poisson draw against the profile —
+/// diurnal load without touching the payload generator. Think-time
+/// structure of a [`TraceSource`] is deliberately overridden: the wrapper
+/// owns the clock.
+pub struct ScheduledSource {
+    arrivals: std::vec::IntoIter<Arrival>,
+    total: usize,
+    offered_qps: f64,
+    label: String,
+}
+
+impl ScheduledSource {
+    pub fn new(
+        mut inner: Box<dyn ArrivalSource>,
+        seed: u64,
+        schedule: &RateSchedule,
+    ) -> ScheduledSource {
+        let mut rng = Rng::new(seed ^ 0xD1_42A1);
+        let mut clock_us = 0.0f64;
+        let mut total_queries = 0usize;
+        let inner_label = inner.label();
+        let mut arrivals: Vec<Arrival> = Vec::with_capacity(inner.total_requests());
+        while let Some(mut a) = inner.next_arrival() {
+            clock_us += schedule.poisson_gap_us(clock_us, rng.f64());
+            a.at_us = clock_us;
+            total_queries += a.queries.len();
+            arrivals.push(a);
+        }
+        let window_s = (arrivals.last().map(|a| a.at_us).unwrap_or(0.0) / 1e6).max(1e-9);
+        let total = arrivals.len();
+        ScheduledSource {
+            arrivals: arrivals.into_iter(),
+            total,
+            offered_qps: total_queries as f64 / window_s,
+            label: format!("{} @ {}", inner_label, schedule.label()),
+        }
+    }
+}
+
+impl ArrivalSource for ScheduledSource {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        self.arrivals.next()
+    }
+
+    fn offered_qps(&self) -> f64 {
+        self.offered_qps
+    }
+
+    fn total_requests(&self) -> usize {
+        self.total
+    }
+
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+}
+
 /// One MCT request entering the system at `at_us` (µs since stream start).
 #[derive(Debug, Clone)]
 pub struct Arrival {
@@ -320,6 +490,89 @@ mod tests {
         // Open-loop replay offers the full trace, nothing lost or invented.
         assert_eq!(queries, trace.stats().mct_queries);
         assert!(s.offered_qps() > 0.0);
+    }
+
+    #[test]
+    fn rate_schedule_shapes() {
+        let d = RateSchedule::diurnal(1_000.0, 800.0, 86_400.0);
+        assert!((d.rate_rps(0.0) - 200.0).abs() < 1e-9, "starts at the trough");
+        assert!((d.rate_rps(43_200.0) - 1_800.0).abs() < 1e-9, "peaks at midday");
+        assert_eq!(d.peak_rps(), 1_800.0);
+        assert_eq!(d.trough_rps(), 200.0);
+        // Amplitude clamps to base: the rate never goes negative.
+        let clamped = RateSchedule::diurnal(100.0, 5_000.0, 60.0);
+        assert!(clamped.rate_rps(0.0) >= 0.0);
+
+        let p = RateSchedule::piecewise(vec![(0.0, 100.0), (10.0, 900.0), (20.0, 300.0)]);
+        assert_eq!(p.rate_rps(5.0), 100.0);
+        assert_eq!(p.rate_rps(10.0), 900.0);
+        assert_eq!(p.rate_rps(99.0), 300.0);
+        assert_eq!(p.peak_rps(), 900.0);
+        assert_eq!(p.trough_rps(), 100.0);
+    }
+
+    #[test]
+    fn scheduled_source_retimes_but_preserves_payloads() {
+        let w = world();
+        let payloads = |src: &mut dyn ArrivalSource| {
+            let mut out = Vec::new();
+            while let Some(a) = src.next_arrival() {
+                out.push(a.queries);
+            }
+            out
+        };
+        let schedule = RateSchedule::diurnal(1_000.0, 900.0, 2.0);
+        let mut plain = PoissonSource::new(&w, 42, 10_000.0, 8, 300);
+        let mut wrapped = ScheduledSource::new(
+            Box::new(PoissonSource::new(&w, 42, 10_000.0, 8, 300)),
+            7,
+            &schedule,
+        );
+        assert_eq!(wrapped.total_requests(), 300);
+        assert!(wrapped.offered_qps() > 0.0);
+        let a = payloads(&mut plain);
+        let mut at = Vec::new();
+        let mut b = Vec::new();
+        while let Some(x) = wrapped.next_arrival() {
+            at.push(x.at_us);
+            b.push(x.queries);
+        }
+        assert_eq!(a, b, "re-timing must not touch payloads");
+        assert!(at.windows(2).all(|w| w[0] <= w[1]), "time-ordered");
+        // Deterministic: same seeds ⇒ same clock.
+        let mut again = ScheduledSource::new(
+            Box::new(PoissonSource::new(&w, 42, 10_000.0, 8, 300)),
+            7,
+            &schedule,
+        );
+        let first = again.next_arrival().unwrap();
+        assert_eq!(first.at_us, at[0]);
+    }
+
+    #[test]
+    fn diurnal_clock_breathes_with_the_profile() {
+        // Mean inter-arrival gap in the trough third vs the peak third of
+        // a one-period diurnal stream: the trough must be visibly sparser.
+        let w = world();
+        let schedule = RateSchedule::diurnal(1_000.0, 800.0, 4.0);
+        let mut src = ScheduledSource::new(
+            Box::new(PoissonSource::new(&w, 9, 1.0, 4, 2_000)),
+            21,
+            &schedule,
+        );
+        let mut ts = Vec::new();
+        while let Some(a) = src.next_arrival() {
+            ts.push(a.at_us);
+        }
+        let in_band = |lo_s: f64, hi_s: f64| {
+            ts.iter().filter(|&&t| t >= lo_s * 1e6 && t < hi_s * 1e6).count()
+        };
+        let trough = in_band(0.0, 0.8);
+        let peak = in_band(1.2, 2.0);
+        assert!(
+            peak as f64 > 2.0 * trough as f64,
+            "midday band must be ≥2× denser: peak {peak} vs trough {trough}"
+        );
     }
 
     #[test]

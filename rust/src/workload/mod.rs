@@ -10,7 +10,10 @@
 mod arrivals;
 mod trace;
 
-pub use arrivals::{Arrival, ArrivalSource, PoissonSource, TraceSource};
+pub use arrivals::{
+    Arrival, ArrivalSource, PoissonSource, RateProfile, RateSchedule, ScheduledSource,
+    TraceSource,
+};
 pub use trace::{
     generate_trace, ProductionTrace, TraceConfig, TraceStats, TravelSolution, UserQuery,
 };

@@ -1,0 +1,239 @@
+//! Control-plane acceptance: (a) an autoscaled heterogeneous fleet meets
+//! the same p90 SLA as a static peak-provisioned homogeneous fleet at
+//! strictly lower modeled $/Mquery under a diurnal profile; (b) killing a
+//! node mid-run loses zero admitted requests under the drain/reroute
+//! policy; plus the JSQ(d) satellite (power-of-two-choices tracks full
+//! JSQ and beats round-robin on heterogeneous fleets), the seeded
+//! conservation property under shed + node-failure, and the sim-vs-real
+//! scaling-policy ranking cross-validation.
+
+use erbium_search::cluster::sim::measure_spec_saturation_qps;
+use erbium_search::cluster::{
+    poisson_sim_arrivals, scheduled_sim_arrivals, simulate_cluster, AdmissionPolicy,
+    ClusterSimConfig, NodeClass, RoutePolicy, SimNodeSpec,
+};
+use erbium_search::controlplane::{
+    simulate_fleet, CostAware, FaultPlan, FleetSimConfig, SimClass, StaticFleet,
+};
+use erbium_search::coordinator::{
+    cross_validate_scaling_policies, AggregationPolicy, Overheads, PipelineConfig, Topology,
+};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::rules::standard::StandardVersion;
+use erbium_search::testing::fixture::compile_fixture;
+use erbium_search::workload::RateSchedule;
+
+/// Encoder-bound regime (§4.2): the feeder count is the binding knob.
+const BATCH: usize = 16_384;
+
+fn calibrated(class: NodeClass, spec: SimNodeSpec) -> SimClass {
+    let mut class = class;
+    class.capacity_qps = measure_spec_saturation_qps(spec, BATCH, 200);
+    SimClass::new(class, spec)
+}
+
+/// Acceptance (a): autoscaled-heterogeneous beats static-homogeneous on
+/// $/Mquery at equal p90-SLA attainment, deterministic seeded DES.
+#[test]
+fn autoscaled_heterogeneous_beats_static_homogeneous_at_equal_sla() {
+    let sla_us = 120_000.0;
+    let fpga = calibrated(NodeClass::fpga_f1(0.0), SimNodeSpec::v2_cloud(8));
+    let cpu = calibrated(NodeClass::cpu_c5(0.0), SimNodeSpec::cpu(4, 2.0));
+    let n = 900usize;
+    let base_rps = fpga.class.capacity_qps / BATCH as f64;
+    let period_s = n as f64 / base_rps;
+    let schedule = RateSchedule::diurnal(base_rps, 0.8 * base_rps, period_s);
+    let arrivals = scheduled_sim_arrivals(0xACC, &schedule, BATCH, n, 16, 0.9, 0);
+    let tick_us = period_s * 1e6 / 30.0;
+
+    // Static homogeneous, sized for peak demand at the standard 70 %
+    // utilisation target (the Table 2/3 discipline).
+    let peak_qps = schedule.peak_rps() * BATCH as f64;
+    let n_static = (peak_qps / 0.7 / fpga.class.capacity_qps).ceil() as usize;
+    let static_cfg = FleetSimConfig::new(vec![fpga.clone()], vec![0; n_static])
+        .with_control(tick_us, tick_us / 2.0)
+        .with_sla(sla_us)
+        .with_bounds(1, n_static);
+    let mut stat = StaticFleet;
+    let static_run = simulate_fleet(&static_cfg, &mut stat, &arrivals);
+
+    // Autoscaled heterogeneous: starts mixed (FPGA + CPU behind one
+    // router), cost-aware policy free to rebalance the classes.
+    let auto_cfg = FleetSimConfig::new(vec![fpga, cpu], vec![0, 1])
+        .with_control(tick_us, tick_us / 2.0)
+        .with_sla(sla_us)
+        .with_bounds(1, n_static + 2);
+    let mut scaler = CostAware::with_target(0.60);
+    let auto_run = simulate_fleet(&auto_cfg, &mut scaler, &arrivals);
+
+    assert!(static_run.cluster.conserves_requests());
+    assert!(auto_run.cluster.conserves_requests());
+    assert!(
+        static_run.meets_sla(0.9),
+        "peak-provisioned static must hold the SLA: {}",
+        static_run.summary()
+    );
+    assert!(
+        auto_run.meets_sla(0.9),
+        "autoscaled must hold the same SLA: {}",
+        auto_run.summary()
+    );
+    assert!(
+        auto_run.dollars_per_mquery() < static_run.dollars_per_mquery(),
+        "autoscaled must be strictly cheaper per Mquery: {:.4} !< {:.4}",
+        auto_run.dollars_per_mquery(),
+        static_run.dollars_per_mquery()
+    );
+    // Heterogeneity is real: both classes billed node time.
+    assert!(auto_run.usage.iter().all(|u| u.node_hours > 0.0), "{:?}", auto_run.usage);
+    // Determinism of the whole acceptance scenario.
+    let mut scaler2 = CostAware::with_target(0.60);
+    let again = simulate_fleet(&auto_cfg, &mut scaler2, &arrivals);
+    assert_eq!(again.cost_usd, auto_run.cost_usd);
+    assert_eq!(again.cluster.completed, auto_run.cluster.completed);
+}
+
+/// Acceptance (b): a mid-run node kill under drain/reroute loses zero
+/// admitted requests while a peer lives.
+#[test]
+fn mid_run_kill_preserves_every_admitted_request() {
+    let fpga = calibrated(NodeClass::fpga_f1(0.0), SimNodeSpec::v2_cloud(4));
+    let n = 600usize;
+    // 1.2× fleet overload on 2 nodes: the backlog grows monotonically, so
+    // the killed node is guaranteed to hold in-flight work.
+    let rate = 2.4 * fpga.class.capacity_qps / BATCH as f64;
+    let schedule = RateSchedule::constant(rate);
+    let arrivals = scheduled_sim_arrivals(0xFA11, &schedule, BATCH, n, 16, 0.9, 0);
+    let span = arrivals.last().unwrap().at_us;
+    let cfg = FleetSimConfig::new(vec![fpga], vec![0, 0])
+        .with_control(span / 20.0, span / 40.0)
+        .with_sla(f64::INFINITY)
+        .with_bounds(1, 2)
+        .with_faults(FaultPlan::kill(1, 0.5 * span, 0.2 * span));
+    let mut stat = StaticFleet;
+    let r = simulate_fleet(&cfg, &mut stat, &arrivals);
+    assert!(r.cluster.conserves_requests());
+    assert_eq!(r.cluster.dropped, 0, "open admission never sheds");
+    assert_eq!(r.cluster.lost, 0, "zero admitted requests lost: {}", r.summary());
+    assert!(r.rerouted > 0, "the kill must displace in-flight work");
+    assert_eq!(r.cluster.completed, n);
+}
+
+/// Satellite: JSQ(2) tracks full JSQ within a few percent of shed load
+/// while sampling only two queues — and beats round-robin decisively on a
+/// heterogeneous fleet (round-robin drowns the weak CPU nodes).
+#[test]
+fn jsq2_tracks_jsq_and_beats_round_robin_on_heterogeneous_fleets() {
+    let o = Overheads::default();
+    // Viable-but-weak CPU nodes (~3× less capacity than the FPGA nodes):
+    // blind round-robin floods them; the JSQ family, depth-normalised by
+    // capacity weight, does not.
+    let specs = vec![
+        SimNodeSpec::v2_cloud(4),
+        SimNodeSpec::v2_cloud(4),
+        SimNodeSpec::cpu(4, 1.0),
+        SimNodeSpec::cpu(4, 1.0),
+    ];
+    let batch = 4_096;
+    let total_cap_qps: f64 = specs.iter().map(|s| s.capacity_qps(&o, batch)).sum();
+    let rate_rps = 1.1 * total_cap_qps / batch as f64; // mild fleet overload
+    let requests = 800usize;
+    let arrivals = poisson_sim_arrivals(0x15_D2, rate_rps, batch, requests, 16, 0.9, 0);
+    let run = |route: RoutePolicy| {
+        let cfg = ClusterSimConfig::heterogeneous(specs.clone())
+            .with_route(route)
+            .with_route_seed(7)
+            .with_admission(AdmissionPolicy::QueueCap(8));
+        let r = simulate_cluster(&cfg, &arrivals);
+        assert!(r.conserves_requests(), "{route:?}");
+        r
+    };
+    let rr = run(RoutePolicy::RoundRobin);
+    let jsq = run(RoutePolicy::JoinShortestQueue);
+    let jsq2 = run(RoutePolicy::JsqD(2));
+    let frac = |d: usize| d as f64 / requests as f64;
+    assert!(
+        (frac(jsq2.dropped) - frac(jsq.dropped)).abs() <= 0.06,
+        "JSQ(2) must track full JSQ within a few % of shed load: {} vs {} of {}",
+        jsq2.dropped,
+        jsq.dropped,
+        requests
+    );
+    assert!(
+        frac(rr.dropped) >= frac(jsq2.dropped) + 0.08,
+        "two choices must beat blind round-robin on a mixed fleet: rr {} vs jsq2 {}",
+        rr.dropped,
+        jsq2.dropped
+    );
+}
+
+/// Satellite: seeded DES property — under shed + node-failure, every
+/// arrival is exactly one of completed / shed / lost-to-failure.
+#[test]
+fn conservation_property_under_shed_and_failures() {
+    let fpga = calibrated(NodeClass::fpga_f1(0.0), SimNodeSpec::v2_cloud(2));
+    for seed in [1u64, 7, 21, 77] {
+        let rate = 1.3 * fpga.class.capacity_qps / BATCH as f64; // sustained overload
+        let n = 350usize;
+        let arrivals = scheduled_sim_arrivals(
+            seed,
+            &RateSchedule::constant(rate),
+            BATCH,
+            n,
+            16,
+            0.9,
+            0,
+        );
+        let span = arrivals.last().unwrap().at_us;
+        // Seeded faults over a 2-node fleet: episodes where both replicas
+        // are down are possible (and must surface as `lost`, never as a
+        // bookkeeping hole).
+        let cfg = FleetSimConfig::new(vec![fpga.clone()], vec![0, 0])
+            .with_control(span / 15.0, span / 30.0)
+            .with_sla(f64::INFINITY)
+            .with_bounds(1, 2)
+            .with_admission(AdmissionPolicy::QueueCap(6))
+            .with_faults(FaultPlan::seeded(seed ^ 0xF, 2, span, 3, span / 4.0));
+        let mut stat = StaticFleet;
+        let r = simulate_fleet(&cfg, &mut stat, &arrivals);
+        assert!(
+            r.cluster.conserves_requests(),
+            "seed {seed}: {} != {} + {} + {}",
+            r.cluster.requests,
+            r.cluster.completed,
+            r.cluster.dropped,
+            r.cluster.lost
+        );
+        assert!(r.cluster.dropped > 0, "seed {seed}: overload over cap 6 must shed");
+        assert_eq!(
+            r.cluster.completed_queries + r.cluster.dropped_queries + r.cluster.lost_queries,
+            n * BATCH,
+            "seed {seed}: query-level conservation"
+        );
+    }
+}
+
+/// Acceptance: the DES and the real threaded fleet rank the autoscaling
+/// policies identically by fleet cost (static-peak vs lazy-reactive vs
+/// eager-cost-aware) under the same relative diurnal profile.
+#[test]
+fn sim_and_real_rank_scaling_policies_identically() {
+    let f = compile_fixture(3317, 300, StandardVersion::V2, HardwareConfig::v2_aws(4));
+    let node = PipelineConfig::new(Topology::new(2, 1, 1, 4))
+        .with_aggregation(AggregationPolicy::DrainQueue);
+    let cv = cross_validate_scaling_policies(node, f.native_factory(), &f.world, 59, 16, 300)
+        .unwrap();
+    assert!(cv.agree_on_ranking(), "{}", cv.summary());
+    // The designed separation: lazy reactive < eager cost-aware < static
+    // peak-provisioned, in both realisations.
+    assert_eq!(
+        cv.sim_ranking(),
+        vec!["reactive".to_string(), "cost-aware".to_string(), "static".to_string()],
+        "{}",
+        cv.summary()
+    );
+    for r in cv.sim.iter().chain(cv.real.iter()) {
+        assert!(r.cluster.conserves_requests());
+        assert_eq!(r.cluster.lost, 0);
+    }
+}
