@@ -1,22 +1,27 @@
 //! §Perf — the match-hot-path throughput harness.
 //!
-//! Measures the CPU *feeder* (encoder + sparse NFA walk) three ways on the
+//! Measures the CPU *feeder* (encoder + sparse NFA walk) five ways on the
 //! Fig 12 replay workload — scalar (per-query, allocating), batch
-//! (CSR arena + reused scratch), and sharded (multi-core batch split) —
+//! (CSR arena + reused scratch), sharded (multi-core batch split),
+//! lockstep (transposed 64-query-per-word walk) and sharded lockstep —
 //! plus the CPU baseline and the `MatchBackend` dispatch surface, and
 //! re-derives the §6.1 feeder-saturation point from the measured numbers:
 //! how many feeder cores it takes to saturate the modeled FPGA node under
-//! each feeder implementation.
+//! each feeder implementation. Lane-occupancy statistics (mean live lanes
+//! per lockstep group, scalar-fallback share) are reported alongside, so a
+//! station skew that defeats the bucketing is visible rather than silent.
 //!
 //! Emits machine-readable `BENCH_hotpath.json` (override the path with
 //! `BENCH_OUT`) — the repo's perf-trajectory baseline, uploaded as a CI
-//! artifact by the bench-smoke step. `BENCH_SMOKE=1` shrinks the rule set
-//! and budgets for CI.
+//! artifact by the bench-smoke step; `schema_version` 2 adds the
+//! `trajectory` section (per-feeder q/s + feeders-to-saturate knee).
+//! `BENCH_SMOKE=1` shrinks the rule set and budgets for CI.
 //!
-//! The harness *asserts* the batch feeder is no slower than the scalar one
-//! (ratio ≥ 1): the batch path strictly removes work (two bit-set
-//! allocations and one encode `Vec` per query), so a regression here means
-//! the hot path picked up a real cost.
+//! The harness *asserts* the batch feeder is no slower than the scalar
+//! one, and the lockstep feeder no slower than the batch one (both on
+//! minimum iteration times): each step strictly removes per-query work —
+//! allocations first, then per-query instruction counts — so a regression
+//! here means the hot path picked up a real cost.
 
 use erbium_search::backend::{CpuBackend, MatchBackend};
 use erbium_search::benchkit::{fmt_qps, measure, print_table, write_json, Json};
@@ -108,10 +113,30 @@ fn main() {
     // Sharded feeder: same batch split across cores.
     let st = measure(budget(400.0), || {
         enc.encode_batch_into(&queries, &mut ebatch);
-        native.evaluate_batch_sharded(&ebatch, shards, &mut out);
+        native.evaluate_batch_sharded(&ebatch, shards, &mut scratch, &mut out);
         std::hint::black_box(&out);
     });
     let sharded_qps = row(&format!("native evaluate_batch_sharded (×{shards})"), st.p50_ns);
+
+    // Lockstep feeder: station-bucketed lane groups, 64 queries per word.
+    let mut lanes = native.lane_scratch();
+    let st = measure(budget(400.0), || {
+        enc.encode_batch_into(&queries, &mut ebatch);
+        native.evaluate_batch_lockstep(&ebatch, &mut lanes, &mut out);
+        std::hint::black_box(&out);
+    });
+    let lockstep_qps = row("native evaluate_batch_lockstep (64-wide)", st.p50_ns);
+    let lockstep_min_ns = st.min_ns;
+    let lane_stats = native.evaluate_batch_lockstep(&ebatch, &mut lanes, &mut out);
+
+    // Sharded lockstep: shards split over whole lane groups.
+    let st = measure(budget(400.0), || {
+        enc.encode_batch_into(&queries, &mut ebatch);
+        native.evaluate_batch_lockstep_sharded(&ebatch, shards, &mut out);
+        std::hint::black_box(&out);
+    });
+    let lockstep_sharded_qps =
+        row(&format!("native lockstep_sharded (×{shards})"), st.p50_ns);
 
     // CPU baseline (§5.2), batch-into path with sharded airport caches.
     let st = measure(budget(400.0), || {
@@ -194,9 +219,36 @@ fn main() {
         fmt_qps(sharded_qps),
         feeders(sharded_qps)
     );
+    println!(
+        "  lockstep:      {} q/s → {} cores to saturate ({:.2}× over batch)",
+        fmt_qps(lockstep_qps),
+        feeders(lockstep_qps),
+        lockstep_qps / batch_qps
+    );
+    println!(
+        "  lockstep ×{shards}:   {} q/s → {} feeder units to saturate",
+        fmt_qps(lockstep_sharded_qps),
+        feeders(lockstep_sharded_qps)
+    );
+    println!(
+        "  lane occupancy: {:.1} live lanes/group mean over {} groups, \
+         {} stations, {:.1} % scalar fallback",
+        lane_stats.mean_occupancy(),
+        lane_stats.groups,
+        lane_stats.stations,
+        lane_stats.fallback_fraction() * 100.0
+    );
 
+    // One trajectory entry per feeder implementation: the measured rate
+    // and the derived §6.1 knee (feeder units needed to saturate the
+    // modeled node). Downstream tooling plots these to watch the knee move
+    // across PRs.
+    let leg = |q: f64| {
+        Json::obj([("qps", Json::Num(q)), ("feeders_to_saturate", Json::Int(feeders(q)))])
+    };
     let json = Json::obj([
         ("bench", Json::Str("hotpath".into())),
+        ("schema_version", Json::Int(2)),
         ("mode", Json::Str(if smoke { "smoke" } else { "full" }.into())),
         ("n_rules", Json::Int(n_rules as i64)),
         ("n_queries", Json::Int(n_queries as i64)),
@@ -205,8 +257,11 @@ fn main() {
         ("scalar_qps", Json::Num(scalar_qps)),
         ("batch_qps", Json::Num(batch_qps)),
         ("sharded_qps", Json::Num(sharded_qps)),
+        ("lockstep_qps", Json::Num(lockstep_qps)),
+        ("lockstep_sharded_qps", Json::Num(lockstep_sharded_qps)),
         ("batch_speedup", Json::Num(batch_qps / scalar_qps)),
         ("sharded_speedup", Json::Num(sharded_qps / scalar_qps)),
+        ("lockstep_speedup", Json::Num(lockstep_qps / scalar_qps)),
         ("cpu_baseline_qps", Json::Num(cpu_qps)),
         (
             "dyn_backend_qps",
@@ -218,19 +273,49 @@ fn main() {
         ("feeder_cores_to_saturate_scalar", Json::Int(feeders(scalar_qps))),
         ("feeder_cores_to_saturate_batch", Json::Int(feeders(batch_qps))),
         ("feeder_units_to_saturate_sharded", Json::Int(feeders(sharded_qps))),
+        ("feeder_cores_to_saturate_lockstep", Json::Int(feeders(lockstep_qps))),
+        (
+            "trajectory",
+            Json::obj([
+                ("scalar", leg(scalar_qps)),
+                ("batch", leg(batch_qps)),
+                ("sharded", leg(sharded_qps)),
+                ("lockstep", leg(lockstep_qps)),
+                ("lockstep_sharded", leg(lockstep_sharded_qps)),
+            ]),
+        ),
+        (
+            "lane_occupancy",
+            Json::obj([
+                ("mean_lanes_per_group", Json::Num(lane_stats.mean_occupancy())),
+                ("fallback_fraction", Json::Num(lane_stats.fallback_fraction())),
+                ("groups", Json::Int(lane_stats.groups as i64)),
+                ("stations", Json::Int(lane_stats.stations as i64)),
+            ]),
+        ),
     ]);
     let out_path =
         std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     write_json(&out_path, &json).expect("write bench artifact");
 
-    // Sanity bound, not a tuned threshold: batching strictly removes
-    // per-query work, so the ratio must not dip below 1. The assert
-    // compares *minimum* iteration times — noise (frequency scaling,
-    // neighbors on a shared runner) only ever adds time, so mins are the
-    // stable comparator; the p50-based q/s stay in the report and JSON.
+    // Sanity bounds, not tuned thresholds: batching strictly removes
+    // per-query work over scalar (two bit-set allocations and one encode
+    // `Vec` per query), and lockstep strictly removes per-query
+    // instructions over batch on this ≥64-row zipf workload (one table
+    // probe advances a whole lane group). The asserts compare *minimum*
+    // iteration times — noise (frequency scaling, neighbors on a shared
+    // runner) only ever adds time, so mins are the stable comparator; the
+    // p50-based q/s stay in the report and JSON.
     assert!(
         batch_min_ns <= scalar_min_ns,
         "batch path slower than scalar even at best-case timing: \
          {batch_min_ns:.0} ns > {scalar_min_ns:.0} ns per pass — hot-path regression"
+    );
+    assert!(
+        lockstep_min_ns <= batch_min_ns,
+        "lockstep path slower than scalar batch even at best-case timing: \
+         {lockstep_min_ns:.0} ns > {batch_min_ns:.0} ns per pass \
+         (occupancy {:.1} lanes/group) — hot-path regression",
+        lane_stats.mean_occupancy()
     );
 }

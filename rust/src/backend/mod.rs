@@ -270,7 +270,7 @@ pub fn native_backend_factory(
 
 /// Like [`native_backend_factory`], but each built engine splits large
 /// batches across `shards` cores — the feeder-side parallelism knob of the
-/// §6.1 analysis (`replay --shards`).
+/// §6.1 analysis (`replay --shards`). Lockstep stays on (the default).
 pub fn native_backend_factory_sharded(
     nfa: PartitionedNfa,
     model: FpgaModel,
@@ -278,9 +278,24 @@ pub fn native_backend_factory_sharded(
     s_pad: usize,
     shards: usize,
 ) -> BackendFactory {
+    native_backend_factory_tuned(nfa, model, l_pad, s_pad, shards, true)
+}
+
+/// Fully-tuned native factory: multi-core split *and* the lockstep toggle
+/// (`replay --no-lockstep` builds its engines through this with
+/// `lockstep = false`, the A/B lever for the feeder-saturation analysis).
+pub fn native_backend_factory_tuned(
+    nfa: PartitionedNfa,
+    model: FpgaModel,
+    l_pad: usize,
+    s_pad: usize,
+    shards: usize,
+    lockstep: bool,
+) -> BackendFactory {
     Arc::new(move || {
         let engine = ErbiumEngine::new(nfa.clone(), model, Backend::Native, l_pad, s_pad)?
-            .with_shards(shards);
+            .with_shards(shards)
+            .with_lockstep(lockstep);
         Ok(Box::new(engine) as Box<dyn MatchBackend>)
     })
 }

@@ -43,6 +43,39 @@ impl BitSet {
         width.div_ceil(64).max(1)
     }
 
+    /// The raw word lanes. The transposed lockstep walk
+    /// ([`crate::erbium::native`]) treats one `BitSet` as a state-indexed
+    /// array of 64-query lane masks — word `s` holds the mask of lanes whose
+    /// NFA walk is live in state `s` — so it reads and writes whole words,
+    /// not bits.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.w
+    }
+
+    /// Mutable access to the raw word lanes (see [`Self::words`]).
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.w
+    }
+
+    /// Total number of set bits. For a lane-mask set this is the number of
+    /// live (state, query-lane) pairs — the occupancy quantity the perf
+    /// harness reports.
+    #[inline]
+    pub fn count_ones(&self) -> usize {
+        self.w.iter().map(|x| x.count_ones() as usize).sum()
+    }
+
+    /// OR every word of `self` into `dst` (word-level set union). `dst` must
+    /// be at least as wide; extra words are left untouched.
+    pub fn or_into(&self, dst: &mut BitSet) {
+        assert!(dst.w.len() >= self.w.len(), "or_into target narrower than source");
+        for (d, s) in dst.w.iter_mut().zip(&self.w) {
+            *d |= s;
+        }
+    }
+
     #[inline]
     pub fn set(&mut self, i: u32) {
         self.w[(i >> 6) as usize] |= 1u64 << (i & 63);
@@ -113,5 +146,51 @@ mod tests {
         let b = BitSet::empty(0);
         assert!(b.is_empty());
         assert_eq!(b.iter().count(), 0);
+    }
+
+    #[test]
+    fn words_expose_lane_masks() {
+        let mut b = BitSet::empty(192);
+        assert_eq!(b.words().len(), 3);
+        // Word-level write, bit-level read: the lockstep contract.
+        b.words_mut()[1] = 0b1011;
+        assert!(b.get(64) && b.get(65) && !b.get(66) && b.get(67));
+        assert_eq!(b.words()[1], 0b1011);
+    }
+
+    #[test]
+    fn count_ones_totals_across_words() {
+        let mut b = BitSet::empty(256);
+        assert_eq!(b.count_ones(), 0);
+        for i in [0u32, 1, 63, 64, 128, 255] {
+            b.set(i);
+        }
+        assert_eq!(b.count_ones(), 6);
+        b.words_mut()[0] = u64::MAX;
+        assert_eq!(b.count_ones(), 64 + 3);
+    }
+
+    #[test]
+    fn or_into_unions_word_lanes() {
+        let mut a = BitSet::empty(128);
+        let mut b = BitSet::empty(256);
+        a.set(3);
+        a.set(100);
+        b.set(4);
+        b.set(200);
+        a.or_into(&mut b);
+        let got: Vec<u32> = b.iter().collect();
+        assert_eq!(got, vec![3, 4, 100, 200]);
+        // Source unchanged, words beyond the source width untouched.
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![3, 100]);
+        assert!(b.get(200));
+    }
+
+    #[test]
+    #[should_panic(expected = "narrower")]
+    fn or_into_rejects_narrow_target() {
+        let a = BitSet::empty(256);
+        let mut b = BitSet::empty(64);
+        a.or_into(&mut b);
     }
 }

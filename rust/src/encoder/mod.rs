@@ -137,6 +137,14 @@ impl EncodedBatch {
         self.stations[i]
     }
 
+    /// The whole station lane (parallel to the rows). The lockstep
+    /// evaluator sorts row indices by this slice to bucket a batch into
+    /// same-station lane groups without touching the value buffer.
+    #[inline]
+    pub fn stations(&self) -> &[u32] {
+        &self.stations
+    }
+
     /// The whole row-major value buffer (e.g. for handing to a dense
     /// kernel).
     pub fn values(&self) -> &[i32] {
@@ -302,6 +310,8 @@ mod tests {
             assert_eq!(batch.row(i), enc.encode(q).as_slice(), "row {i}");
             assert_eq!(batch.station(i), q.station);
         }
+        let stations: Vec<u32> = qs.iter().map(|q| q.station).collect();
+        assert_eq!(batch.stations(), stations.as_slice());
         // Refill with a smaller batch: rows shrink, stale content is gone.
         enc.encode_batch_into(&qs[..2], &mut batch);
         assert_eq!(batch.len(), 2);

@@ -27,7 +27,7 @@ use crate::runtime::{DeviceImage, NfaExecutable, Runtime};
 use crate::rules::types::{MctDecision, MctQuery};
 
 use super::hw_model::{BatchTiming, FpgaModel};
-use super::native::{EvalScratch, NativeEvaluator};
+use super::native::{EvalScratch, LaneScratch, NativeEvaluator, LOCKSTEP_MIN_ROWS};
 
 /// Which implementation computes the answers.
 #[derive(Clone)]
@@ -46,13 +46,15 @@ struct XlaState {
     images: Mutex<HashMap<usize, Arc<DeviceImage>>>,
 }
 
-/// Reusable native-path buffers: the encoded batch and the walker scratch,
-/// kept across calls so a steady-state engine call allocates nothing
-/// (DESIGN.md §Hot path). One lock per *batch*, not per query — the engine
-/// stays `Sync` without contending the hot loop.
+/// Reusable native-path buffers: the encoded batch, the scalar walker
+/// scratch and the lockstep lane scratch, kept across calls so a
+/// steady-state engine call allocates nothing (DESIGN.md §Hot path). One
+/// lock per *batch*, not per query — the engine stays `Sync` without
+/// contending the hot loop.
 struct NativeScratch {
     batch: EncodedBatch,
     scratch: EvalScratch,
+    lanes: LaneScratch,
 }
 
 /// The ERBIUM engine: compiled rule set + backend + datapath model.
@@ -67,6 +69,10 @@ pub struct ErbiumEngine {
     s_pad: usize,
     /// Multi-core split of large native batches (1 = single core).
     shards: usize,
+    /// Query-parallel lockstep walk for native batches of
+    /// [`LOCKSTEP_MIN_ROWS`]+ rows (on by default; `--no-lockstep` and
+    /// A/B tests turn it off).
+    lockstep: bool,
     scratch: Mutex<NativeScratch>,
 }
 
@@ -99,12 +105,25 @@ impl ErbiumEngine {
         let scratch = Mutex::new(NativeScratch {
             batch: EncodedBatch::default(),
             scratch: native.scratch(),
+            lanes: native.lane_scratch(),
         });
-        Ok(ErbiumEngine { nfa, encoder, native, xla, model, l_pad, s_pad, shards: 1, scratch })
+        Ok(ErbiumEngine {
+            nfa,
+            encoder,
+            native,
+            xla,
+            model,
+            l_pad,
+            s_pad,
+            shards: 1,
+            lockstep: true,
+            scratch,
+        })
     }
 
     /// Split native batches of [`crate::erbium::native::SHARD_MIN_ROWS`]+
-    /// rows across `shards` cores. No effect on the XLA path.
+    /// rows across `shards` cores. No effect on the XLA path. Composes
+    /// with lockstep: shards then split over whole lane groups.
     pub fn with_shards(mut self, shards: usize) -> ErbiumEngine {
         self.shards = shards.max(1);
         self
@@ -113,6 +132,19 @@ impl ErbiumEngine {
     /// Configured multi-core split of the native path.
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// Enable or disable the query-parallel lockstep walk on the native
+    /// path (on by default). With it off, large batches take the scalar
+    /// batch/sharded walk — the PR 3 baseline, kept for A/B measurement.
+    pub fn with_lockstep(mut self, lockstep: bool) -> ErbiumEngine {
+        self.lockstep = lockstep;
+        self
+    }
+
+    /// Whether the native path may use the lockstep walk.
+    pub fn lockstep(&self) -> bool {
+        self.lockstep
     }
 
     pub fn nfa(&self) -> &PartitionedNfa {
@@ -189,14 +221,21 @@ impl ErbiumEngine {
 
     fn evaluate_native_into(&self, queries: &[MctQuery], out: &mut Vec<MctDecision>) {
         let mut g = self.scratch.lock().unwrap();
-        let NativeScratch { batch, scratch } = &mut *g;
+        let NativeScratch { batch, scratch, lanes } = &mut *g;
         self.encoder.encode_batch_into(queries, batch);
-        if NativeEvaluator::sharding_pays(queries.len(), self.shards) {
-            self.native.evaluate_batch_sharded(batch, self.shards, out);
+        let n = queries.len();
+        if self.lockstep && n >= LOCKSTEP_MIN_ROWS {
+            // Query-parallel walk; sharded variant splits over lane groups.
+            if NativeEvaluator::sharding_pays(n, self.shards) {
+                self.native.evaluate_batch_lockstep_sharded(batch, self.shards, out);
+            } else {
+                self.native.evaluate_batch_lockstep(batch, lanes, out);
+            }
         } else {
-            // Below the shard floor (or unsharded): single-core walk on the
-            // engine's warm scratch, not freshly allocated sets.
-            self.native.evaluate_batch(batch, scratch, out);
+            // Scalar batch walk; the sharded call falls back to the
+            // engine's warm scratch below the shard floor, so tiny batches
+            // never allocate fresh bit-sets.
+            self.native.evaluate_batch_sharded(batch, self.shards, scratch, out);
         }
     }
 
@@ -349,6 +388,54 @@ mod tests {
         let again = single.evaluate_batch(&queries).unwrap();
         assert_eq!(a.len(), again.len());
         assert!(a.iter().zip(&again).all(|(x, y)| x.rule_id == y.rule_id));
+    }
+
+    #[test]
+    fn lockstep_engine_matches_scalar_engine() {
+        let cfg = GeneratorConfig::small(101, 350);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let (p, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+        let lockstep = ErbiumEngine::new(p.clone(), model, Backend::Native, 28, 64).unwrap();
+        assert!(lockstep.lockstep(), "lockstep must be the default");
+        let scalar = ErbiumEngine::new(p.clone(), model, Backend::Native, 28, 64)
+            .unwrap()
+            .with_lockstep(false);
+        assert!(!scalar.lockstep());
+        let sharded_lockstep =
+            ErbiumEngine::new(p, model, Backend::Native, 28, 64).unwrap().with_shards(3);
+        let mut rng = Rng::new(31);
+        // Batch sizes straddling LOCKSTEP_MIN_ROWS, the shard floor and the
+        // lane width, with the usual station mix.
+        for n in [1usize, 8, 16, 64, 65, 300] {
+            let queries: Vec<_> = (0..n)
+                .map(|_| {
+                    let st = rng.index(cfg.n_airports) as u32;
+                    random_query(&mut rng, &w, st)
+                })
+                .collect();
+            let a = scalar.evaluate_batch(&queries).unwrap();
+            let b = lockstep.evaluate_batch(&queries).unwrap();
+            let c = sharded_lockstep.evaluate_batch(&queries).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.rule_id, y.rule_id, "n={n} row {i}");
+                assert_eq!(x.minutes, y.minutes, "n={n} row {i}");
+            }
+            assert!(a.iter().zip(&c).all(|(x, y)| x.rule_id == y.rule_id), "sharded n={n}");
+        }
+        // Warm lane scratch must not leak group state across calls.
+        let queries: Vec<_> = (0..100)
+            .map(|_| {
+                let st = rng.index(cfg.n_airports) as u32;
+                random_query(&mut rng, &w, st)
+            })
+            .collect();
+        let first = lockstep.evaluate_batch(&queries).unwrap();
+        let second = lockstep.evaluate_batch(&queries).unwrap();
+        assert_eq!(first, second);
     }
 
     #[test]

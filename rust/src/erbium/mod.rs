@@ -2,8 +2,9 @@
 //! hardware kernel backends, and the FPGA datapath cost model.
 //!
 //! * [`native`] — sparse functional simulator of the NFA kernel (bit-set
-//!   active-state propagation). Bit-exact with the XLA path; used for bulk
-//!   sweeps and as the cross-check oracle.
+//!   active-state propagation, plus the transposed query-parallel lockstep
+//!   walk). Bit-exact with the XLA path; used for bulk sweeps and as the
+//!   cross-check oracle.
 //! * [`engine`] — the Host Executor facade: owns the compiled images, routes
 //!   queries to partitions, batches, and dispatches to a backend
 //!   (XLA artifact via PJRT, or native).
@@ -17,4 +18,7 @@ pub mod native;
 
 pub use engine::{Backend, ErbiumEngine};
 pub use hw_model::{BatchTiming, FpgaModel};
-pub use native::{EvalScratch, NativeEvaluator};
+pub use native::{
+    EvalScratch, LaneScratch, LockstepStats, NativeEvaluator, LANE_MIN_OCCUPANCY, LANE_WIDTH,
+    LOCKSTEP_MIN_ROWS,
+};

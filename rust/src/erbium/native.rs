@@ -22,7 +22,19 @@
 //!   instead of being allocated twice per query;
 //! * large batches optionally split across cores
 //!   ([`NativeEvaluator::evaluate_batch_sharded`]): the evaluator is
-//!   immutable after construction, so shards share it without locks.
+//!   immutable after construction, so shards share it without locks;
+//! * batches are evaluated **query-parallel in lockstep**
+//!   ([`NativeEvaluator::evaluate_batch_lockstep`]): rows are bucketed by
+//!   station into lane groups of up to [`LANE_WIDTH`] queries and the CSR
+//!   arena is walked level-by-level with *transposed* state — one `u64`
+//!   lane mask per NFA state ([`LaneScratch`]) instead of one bit-set per
+//!   query — so a single AND/OR advances every matching query at once.
+//!   Exact edges resolve against a per-level value → lane-mask prefix
+//!   table built once per group; range edges take two probes into the
+//!   same table (the prefix masks make the span mask one XOR); wildcard
+//!   edges are a single word OR. Groups below [`LANE_MIN_OCCUPANCY`]
+//!   lanes fall back to the scalar walk, and results are written back
+//!   through the bucketing permutation so callers always see batch order.
 
 use crate::bits::BitSet;
 use crate::encoder::EncodedBatch;
@@ -58,6 +70,10 @@ struct CsrPartition {
     /// (`words_for(max_width)`), so the shared scratch clears only what
     /// this partition can dirty.
     words: usize,
+    /// Widest level of this partition in *states*. The transposed lockstep
+    /// walk keeps one lane-mask word per state, so this is also the number
+    /// of [`LaneScratch`] words the partition can dirty.
+    width: usize,
 }
 
 impl CsrPartition {
@@ -73,6 +89,7 @@ impl CsrPartition {
             ranges: Vec::new(),
             any_tos: Vec::new(),
             words: BitSet::words_for(nfa.max_width()),
+            width: nfa.max_width(),
         };
         c.exact_off.push(0);
         c.range_off.push(0);
@@ -134,6 +151,291 @@ impl EvalScratch {
     }
 }
 
+/// Lanes per lockstep group: one query per bit of a `u64` lane mask.
+pub const LANE_WIDTH: usize = 64;
+
+/// Lane groups narrower than this walk the scalar path instead: building
+/// the per-level value tables costs more than it saves when only a handful
+/// of lanes share them.
+pub const LANE_MIN_OCCUPANCY: usize = 8;
+
+/// Below this many rows the engine does not try lockstep at all — the
+/// station bucketing sort alone outweighs any lane sharing.
+pub const LOCKSTEP_MIN_ROWS: usize = 16;
+
+/// Hint the CPU to pull `p`'s cache line while the current level is still
+/// being scanned. No-op off x86-64.
+#[inline(always)]
+fn prefetch<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: _mm_prefetch is a pure hint — it never dereferences the
+    // pointer and is architecturally valid for any address.
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(p as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+/// Per-level value → lane-mask table of one lockstep lane group.
+///
+/// `vals` holds the sorted distinct encoded values the group's lanes carry
+/// at this level; `cum` holds *prefix* ORs of their lane masks
+/// (`cum.len() == vals.len() + 1`, `cum[0] == 0`). Each lane contributes
+/// exactly one value per level, so the per-value masks are disjoint and
+/// `cum[j] ^ cum[i]` is the union of the masks of `vals[i..j]` — which
+/// makes a range edge two binary probes plus one XOR, and an exact edge
+/// one probe plus one XOR.
+#[derive(Debug, Clone, Default)]
+struct LevelTable {
+    vals: Vec<u32>,
+    cum: Vec<u64>,
+}
+
+impl LevelTable {
+    /// Lane mask of one exact value, if any lane carries it.
+    #[inline]
+    fn mask_of(&self, v: u32) -> u64 {
+        match self.vals.binary_search(&v) {
+            Ok(i) => self.cum[i + 1] ^ self.cum[i],
+            Err(_) => 0,
+        }
+    }
+
+    /// Union of the lane masks of every value in `lo..=hi`.
+    #[inline]
+    fn mask_of_range(&self, lo: u32, hi: u32) -> u64 {
+        let i = self.vals.partition_point(|&v| v < lo);
+        let j = self.vals.partition_point(|&v| v <= hi);
+        self.cum[j] ^ self.cum[i]
+    }
+}
+
+/// Occupancy accounting of one lockstep batch evaluation: how many rows
+/// actually ran transposed vs fell back to the scalar walk, and how full
+/// the lane groups were. The perf harness reports these so a station skew
+/// that defeats bucketing is visible rather than silent.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LockstepStats {
+    /// Lane groups walked transposed.
+    pub groups: usize,
+    /// Rows evaluated through those groups.
+    pub lockstep_rows: usize,
+    /// Rows that walked the scalar path (under-occupied trailing chunks).
+    pub fallback_rows: usize,
+    /// Distinct stations seen in the batch.
+    pub stations: usize,
+}
+
+impl LockstepStats {
+    /// Total rows accounted for.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.lockstep_rows + self.fallback_rows
+    }
+
+    /// Mean live lanes per transposed group (0 when nothing ran lockstep).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.groups == 0 {
+            0.0
+        } else {
+            self.lockstep_rows as f64 / self.groups as f64
+        }
+    }
+
+    /// Share of rows that fell back to the scalar walk.
+    pub fn fallback_fraction(&self) -> f64 {
+        let rows = self.rows();
+        if rows == 0 {
+            0.0
+        } else {
+            self.fallback_rows as f64 / rows as f64
+        }
+    }
+
+    /// Fold another shard's accounting into this one.
+    pub fn absorb(&mut self, other: LockstepStats) {
+        self.groups += other.groups;
+        self.lockstep_rows += other.lockstep_rows;
+        self.fallback_rows += other.fallback_rows;
+        self.stations += other.stations;
+    }
+}
+
+/// Reusable scratch of the transposed lockstep walk
+/// ([`NativeEvaluator::evaluate_batch_lockstep`]).
+///
+/// The two bit-sets are the *transposed* counterpart of
+/// [`EvalScratch`]: instead of one bit per NFA state for one query, word
+/// `s` holds the 64-lane mask of queries whose walk is live in state `s`.
+/// Everything else is reusable buffer space — the per-level value tables,
+/// the pair-staging buffer that builds them, the station-bucketing
+/// permutation, and an embedded scalar [`EvalScratch`] for under-occupied
+/// groups — so a warm caller evaluates whole batches allocation-free.
+#[derive(Debug, Clone)]
+pub struct LaneScratch {
+    /// Transposed active set: word `s` = lane mask live in state `s`.
+    active: BitSet,
+    /// Transposed next-level set (swapped with `active` per level).
+    next: BitSet,
+    /// Lane-mask words a previous walk may have dirtied.
+    dirty: usize,
+    /// Per-level value → lane-mask tables of the current lane group.
+    levels: Vec<LevelTable>,
+    /// Staging buffer for table building: `(value, lane)` pairs.
+    pairs: Vec<(u32, u32)>,
+    /// Station-bucketing permutation (row indices sorted by station).
+    order: Vec<u32>,
+    /// Scalar scratch for the under-occupancy fallback path.
+    scalar: EvalScratch,
+}
+
+impl LaneScratch {
+    /// Scratch able to walk partitions up to `width` states per level.
+    pub fn with_width(width: usize) -> LaneScratch {
+        let w = width.max(1);
+        LaneScratch {
+            // One 64-bit lane-mask word per state, so `width` words.
+            active: BitSet::empty(w * LANE_WIDTH),
+            next: BitSet::empty(w * LANE_WIDTH),
+            dirty: 0,
+            levels: Vec::new(),
+            pairs: Vec::new(),
+            order: Vec::new(),
+            scalar: EvalScratch::with_width(width),
+        }
+    }
+
+    /// (Re)build the per-level value → lane-mask tables for one lane group
+    /// (`rows` are indices into `batch`; lane `k` is `rows[k]`).
+    fn build_tables(&mut self, batch: &EncodedBatch, rows: &[u32]) {
+        debug_assert!(rows.len() <= LANE_WIDTH);
+        let depth = batch.depth();
+        if self.levels.len() < depth {
+            self.levels.resize_with(depth, LevelTable::default);
+        }
+        for (lv, t) in self.levels.iter_mut().take(depth).enumerate() {
+            self.pairs.clear();
+            for (lane, &r) in rows.iter().enumerate() {
+                // Encoded values are small non-negative domain values, so
+                // the u32 cast is lossless (same cast as the scalar walk).
+                self.pairs.push((batch.row(r as usize)[lv] as u32, lane as u32));
+            }
+            self.pairs.sort_unstable();
+            t.vals.clear();
+            t.cum.clear();
+            t.cum.push(0);
+            let mut acc = 0u64;
+            for &(v, lane) in &self.pairs {
+                if t.vals.last() != Some(&v) {
+                    t.vals.push(v);
+                    t.cum.push(acc);
+                }
+                acc |= 1u64 << lane;
+                *t.cum.last_mut().unwrap() = acc;
+            }
+        }
+    }
+
+    /// Walk one partition with every lane of `group_mask` in lockstep,
+    /// leaving the accept-level lane masks in `self.active`. Returns
+    /// `false` if every lane died before the accept level.
+    fn walk_partition(&mut self, nfa: &CompiledNfa, csr: &CsrPartition, group_mask: u64) -> bool {
+        let depth = nfa.depth();
+        debug_assert!(self.levels.len() >= depth);
+        // Scrub whatever the previous walk dirtied, then only this
+        // partition's span for the rest of the walk.
+        let scrub = csr.width.max(self.dirty);
+        self.active.clear_first_words(scrub);
+        self.next.clear_first_words(scrub);
+        self.dirty = csr.width;
+        self.active.words_mut()[0] = group_mask;
+        for lv in 0..depth {
+            let base = csr.level_base[lv] as usize;
+            let w_lv = csr.level_base[lv + 1] as usize - base;
+            let last = lv + 1 == depth;
+            let next_base = csr.level_base[lv + 1] as usize;
+            let table = &self.levels[lv];
+            let aw = &self.active.words()[..w_lv];
+            let nw = self.next.words_mut();
+            // OR of every lane mask written this level: the O(1) liveness
+            // check that replaces scanning `next` for emptiness.
+            let mut live = 0u64;
+            for (s, &m) in aw.iter().enumerate() {
+                if m == 0 {
+                    continue;
+                }
+                let g = base + s;
+                let (elo, ehi) = (csr.exact_off[g] as usize, csr.exact_off[g + 1] as usize);
+                if ehi > elo {
+                    if ehi - elo <= table.vals.len() {
+                        // Few edges: probe the value table per edge.
+                        for k in elo..ehi {
+                            let hit = table.mask_of(csr.exact_vals[k]) & m;
+                            if hit != 0 {
+                                let to = csr.exact_tos[k] as usize;
+                                nw[to] |= hit;
+                                live |= hit;
+                                if !last {
+                                    prefetch(&csr.exact_off[next_base + to]);
+                                }
+                            }
+                        }
+                    } else {
+                        // Few distinct values: probe the edges per value.
+                        for (vi, &v) in table.vals.iter().enumerate() {
+                            let hit = (table.cum[vi + 1] ^ table.cum[vi]) & m;
+                            if hit == 0 {
+                                continue;
+                            }
+                            if let Ok(k) = csr.exact_vals[elo..ehi].binary_search(&v) {
+                                let to = csr.exact_tos[elo + k] as usize;
+                                nw[to] |= hit;
+                                live |= hit;
+                                if !last {
+                                    prefetch(&csr.exact_off[next_base + to]);
+                                }
+                            }
+                        }
+                    }
+                }
+                for &(rlo, rhi, to) in
+                    &csr.ranges[csr.range_off[g] as usize..csr.range_off[g + 1] as usize]
+                {
+                    let hit = table.mask_of_range(rlo, rhi) & m;
+                    if hit != 0 {
+                        let to = to as usize;
+                        nw[to] |= hit;
+                        live |= hit;
+                        if !last {
+                            prefetch(&csr.exact_off[next_base + to]);
+                        }
+                    }
+                }
+                for &to in
+                    &csr.any_tos[csr.any_off[g] as usize..csr.any_off[g + 1] as usize]
+                {
+                    let to = to as usize;
+                    nw[to] |= m;
+                    live |= m;
+                    if !last {
+                        prefetch(&csr.exact_off[next_base + to]);
+                    }
+                }
+            }
+            if live == 0 {
+                return false;
+            }
+            std::mem::swap(&mut self.active, &mut self.next);
+            // The swapped-out set (now `next`) was dirtied up to the level
+            // width just scanned; scrub only that span for the next level.
+            self.next.clear_first_words(w_lv);
+        }
+        true
+    }
+}
+
 /// Sparse evaluator over a partitioned NFA.
 #[derive(Debug, Clone)]
 pub struct NativeEvaluator {
@@ -172,6 +474,13 @@ impl NativeEvaluator {
     /// and pass it to every batch (DESIGN.md §Hot path batch contract).
     pub fn scratch(&self) -> EvalScratch {
         EvalScratch::with_width(self.max_width)
+    }
+
+    /// Fresh lockstep scratch sized for this evaluator (one lane-mask word
+    /// per state of the widest level). Same ownership contract as
+    /// [`Self::scratch`]: one per thread, reused across batches.
+    pub fn lane_scratch(&self) -> LaneScratch {
+        LaneScratch::with_width(self.max_width)
     }
 
     /// Evaluate one *encoded* query (level-ordered values, length ≥ depth)
@@ -297,18 +606,20 @@ impl NativeEvaluator {
 
     /// Split a large batch across `shards` cores (scoped threads; the
     /// evaluator is immutable so shards share it without locks), each shard
-    /// walking with its own scratch. Falls back to the single-core walk for
-    /// small batches or `shards <= 1`. Output order matches the batch.
+    /// walking with its own scratch. Falls back to the single-core walk on
+    /// the *caller's* `scratch` for small batches or `shards <= 1`, so warm
+    /// callers never pay a fresh allocation for the common small case.
+    /// Output order matches the batch.
     pub fn evaluate_batch_sharded(
         &self,
         batch: &EncodedBatch,
         shards: usize,
+        scratch: &mut EvalScratch,
         out: &mut Vec<MctDecision>,
     ) {
         let n = batch.len();
         if !Self::sharding_pays(n, shards) {
-            let mut scratch = self.scratch();
-            self.evaluate_batch(batch, &mut scratch, out);
+            self.evaluate_batch(batch, scratch, out);
             return;
         }
         out.clear();
@@ -330,6 +641,259 @@ impl NativeEvaluator {
                 });
             }
         });
+    }
+
+    /// Walk one lane group (`rows`, all sharing `station`) through every
+    /// relevant partition in lockstep, writing one decision per lane into
+    /// `dest[..rows.len()]` (lane `k` answers row `rows[k]`).
+    fn lockstep_group(
+        &self,
+        batch: &EncodedBatch,
+        station: u32,
+        rows: &[u32],
+        lanes: &mut LaneScratch,
+        dest: &mut [MctDecision],
+    ) {
+        debug_assert!(!rows.is_empty() && rows.len() <= LANE_WIDTH);
+        lanes.build_tables(batch, rows);
+        let group_mask = if rows.len() == LANE_WIDTH {
+            u64::MAX
+        } else {
+            (1u64 << rows.len()) - 1
+        };
+        // Per-lane best across partitions (the scalar cross-partition
+        // merge, vectorised over lanes).
+        let mut matched = 0u64;
+        let mut best_w = [0f32; LANE_WIDTH];
+        let mut best_rid = [0u32; LANE_WIDTH];
+        let mut best_min = [0u16; LANE_WIDTH];
+        for pi in self.nfa.partitions_for(station) {
+            let nfa = &self.nfa.partitions[pi];
+            if !lanes.walk_partition(nfa, &self.csr[pi], group_mask) {
+                continue;
+            }
+            // Per-partition accept scan: strict `>` with accepts visited
+            // in ascending index keeps the lowest accept index on ties —
+            // identical to the scalar walk's per-partition rule.
+            let aw = lanes.active.words();
+            let mut pm = 0u64;
+            let mut pw = [0f32; LANE_WIDTH];
+            let mut prid = [0u32; LANE_WIDTH];
+            let mut pmin = [0u16; LANE_WIDTH];
+            for (s, a) in nfa.accepts.iter().enumerate() {
+                let mut m = aw[s];
+                while m != 0 {
+                    let lane = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if (pm >> lane) & 1 == 0 || a.weight > pw[lane] {
+                        pm |= 1u64 << lane;
+                        pw[lane] = a.weight;
+                        prid[lane] = a.rule_id;
+                        pmin[lane] = a.decision_min;
+                    }
+                }
+            }
+            // Cross-partition merge, lane by lane (the scalar merge rule:
+            // higher weight wins, lower rule id breaks weight ties).
+            let mut lanes_hit = pm;
+            while lanes_hit != 0 {
+                let lane = lanes_hit.trailing_zeros() as usize;
+                lanes_hit &= lanes_hit - 1;
+                let better = (matched >> lane) & 1 == 0
+                    || pw[lane] > best_w[lane]
+                    || (pw[lane] == best_w[lane] && prid[lane] < best_rid[lane]);
+                if better {
+                    matched |= 1u64 << lane;
+                    best_w[lane] = pw[lane];
+                    best_rid[lane] = prid[lane];
+                    best_min[lane] = pmin[lane];
+                }
+            }
+        }
+        for (lane, d) in dest.iter_mut().take(rows.len()).enumerate() {
+            *d = if (matched >> lane) & 1 != 0 {
+                MctDecision {
+                    minutes: best_min[lane],
+                    weight: best_w[lane],
+                    rule_id: best_rid[lane],
+                }
+            } else {
+                MctDecision::no_match()
+            };
+        }
+    }
+
+    /// Evaluate a whole batch query-parallel: bucket rows into same-station
+    /// lane groups of up to [`LANE_WIDTH`], walk each group transposed
+    /// (under-occupied trailing chunks fall back to the scalar walk on
+    /// `lanes`' embedded scratch), and scatter results back through the
+    /// bucketing permutation so `out` is in batch order. Allocation-free
+    /// once `lanes` and `out` are warm. Returns occupancy accounting.
+    pub fn evaluate_batch_lockstep(
+        &self,
+        batch: &EncodedBatch,
+        lanes: &mut LaneScratch,
+        out: &mut Vec<MctDecision>,
+    ) -> LockstepStats {
+        let n = batch.len();
+        out.clear();
+        out.resize(n, MctDecision::no_match());
+        let mut stats = LockstepStats::default();
+        if n == 0 {
+            return stats;
+        }
+        // Bucket rows by station. Keys are unique (the row index breaks
+        // station ties), so the unstable sort is deterministic and the
+        // permutation stable with respect to batch order.
+        let mut order = std::mem::take(&mut lanes.order);
+        order.clear();
+        order.extend(0..n as u32);
+        let stations = batch.stations();
+        order.sort_unstable_by_key(|&r| (stations[r as usize], r));
+        let mut dest = [MctDecision::no_match(); LANE_WIDTH];
+        let mut start = 0usize;
+        while start < n {
+            let station = stations[order[start] as usize];
+            let mut end = start + 1;
+            while end < n && stations[order[end] as usize] == station {
+                end += 1;
+            }
+            stats.stations += 1;
+            let mut gs = start;
+            while gs < end {
+                let ge = end.min(gs + LANE_WIDTH);
+                let rows = &order[gs..ge];
+                if rows.len() < LANE_MIN_OCCUPANCY {
+                    // Under-occupied trailing chunk: the scalar walk is
+                    // cheaper than building lane tables for a few rows.
+                    stats.fallback_rows += rows.len();
+                    for &r in rows {
+                        out[r as usize] = self.evaluate_encoded_with(
+                            station,
+                            batch.row(r as usize),
+                            &mut lanes.scalar,
+                        );
+                    }
+                } else {
+                    stats.groups += 1;
+                    stats.lockstep_rows += rows.len();
+                    self.lockstep_group(batch, station, rows, lanes, &mut dest);
+                    for (k, &r) in rows.iter().enumerate() {
+                        out[r as usize] = dest[k];
+                    }
+                }
+                gs = ge;
+            }
+            start = end;
+        }
+        lanes.order = order;
+        stats
+    }
+
+    /// Sharded lockstep: bucket once on the caller thread, cut the ordered
+    /// rows into lane groups, deal contiguous spans of whole groups to
+    /// scoped threads (each with its own [`LaneScratch`]), then scatter the
+    /// per-group results back to batch order. Shards split *over lane
+    /// groups*, never through one, so sharding cannot lower occupancy.
+    /// Falls back to single-core lockstep when sharding does not pay.
+    pub fn evaluate_batch_lockstep_sharded(
+        &self,
+        batch: &EncodedBatch,
+        shards: usize,
+        out: &mut Vec<MctDecision>,
+    ) -> LockstepStats {
+        let n = batch.len();
+        if !Self::sharding_pays(n, shards) {
+            let mut lanes = self.lane_scratch();
+            return self.evaluate_batch_lockstep(batch, &mut lanes, out);
+        }
+        out.clear();
+        out.resize(n, MctDecision::no_match());
+        let stations = batch.stations();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by_key(|&r| (stations[r as usize], r));
+        // Lane groups as (start, len) spans of `order`, plus the distinct
+        // station count (counted here — a station's groups may straddle a
+        // shard boundary, so shards cannot count stations themselves).
+        let mut groups: Vec<(u32, u32)> = Vec::new();
+        let mut n_stations = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let station = stations[order[start] as usize];
+            let mut end = start + 1;
+            while end < n && stations[order[end] as usize] == station {
+                end += 1;
+            }
+            n_stations += 1;
+            let mut gs = start;
+            while gs < end {
+                let ge = end.min(gs + LANE_WIDTH);
+                groups.push((gs as u32, (ge - gs) as u32));
+                gs = ge;
+            }
+            start = end;
+        }
+        // Results land contiguously in group order first (`perm[k]` answers
+        // row `order[k]`), so shards write disjoint slices without locking;
+        // the scatter to batch order happens once at the end.
+        let mut perm = vec![MctDecision::no_match(); n];
+        let stats_acc = std::sync::Mutex::new(LockstepStats::default());
+        let target = n.div_ceil(shards);
+        std::thread::scope(|scope| {
+            let mut rest: &[(u32, u32)] = &groups;
+            let mut perm_rest: &mut [MctDecision] = &mut perm;
+            while !rest.is_empty() {
+                let mut take = 0usize;
+                let mut rows_here = 0usize;
+                while take < rest.len() && rows_here < target {
+                    rows_here += rest[take].1 as usize;
+                    take += 1;
+                }
+                let (span, r) = rest.split_at(take);
+                rest = r;
+                // `take` moves the `&mut` out so the halves keep the outer
+                // lifetime (a plain reborrow would pin `perm_rest` and
+                // forbid the reassignment below).
+                let (chunk, pr) = std::mem::take(&mut perm_rest).split_at_mut(rows_here);
+                perm_rest = pr;
+                let order_ref = &order;
+                let stats_ref = &stats_acc;
+                scope.spawn(move || {
+                    let mut lanes = self.lane_scratch();
+                    let mut local = LockstepStats::default();
+                    let mut dest = [MctDecision::no_match(); LANE_WIDTH];
+                    let mut off = 0usize;
+                    for &(gs, glen) in span {
+                        let rows = &order_ref[gs as usize..(gs + glen) as usize];
+                        let station = stations[rows[0] as usize];
+                        if rows.len() < LANE_MIN_OCCUPANCY {
+                            local.fallback_rows += rows.len();
+                            for (k, &row) in rows.iter().enumerate() {
+                                chunk[off + k] = self.evaluate_encoded_with(
+                                    station,
+                                    batch.row(row as usize),
+                                    &mut lanes.scalar,
+                                );
+                            }
+                        } else {
+                            local.groups += 1;
+                            local.lockstep_rows += rows.len();
+                            self.lockstep_group(batch, station, rows, &mut lanes, &mut dest);
+                            chunk[off..off + rows.len()]
+                                .copy_from_slice(&dest[..rows.len()]);
+                        }
+                        off += rows.len();
+                    }
+                    stats_ref.lock().unwrap().absorb(local);
+                });
+            }
+        });
+        for (k, &r) in order.iter().enumerate() {
+            out[r as usize] = perm[k];
+        }
+        let mut stats = stats_acc.into_inner().unwrap();
+        stats.stations = n_stations;
+        stats
     }
 }
 
@@ -372,7 +936,16 @@ mod tests {
             let mut got_batch = Vec::new();
             eval.evaluate_batch(&batch, &mut scratch, &mut got_batch);
             let mut got_sharded = Vec::new();
-            eval.evaluate_batch_sharded(&batch, 3, &mut got_sharded);
+            eval.evaluate_batch_sharded(&batch, 3, &mut scratch, &mut got_sharded);
+            let mut lanes = eval.lane_scratch();
+            let mut got_lockstep = Vec::new();
+            let stats = eval.evaluate_batch_lockstep(&batch, &mut lanes, &mut got_lockstep);
+            assert_eq!(stats.rows(), queries.len());
+            let mut got_ls_sharded = Vec::new();
+            let sh_stats =
+                eval.evaluate_batch_lockstep_sharded(&batch, 3, &mut got_ls_sharded);
+            assert_eq!(sh_stats.rows(), queries.len());
+            assert_eq!(sh_stats.stations, stats.stations);
             let mut matched = 0;
             for (i, q) in queries.iter().enumerate() {
                 let want = evaluate_ruleset(&schema, &rs, q);
@@ -381,6 +954,8 @@ mod tests {
                 assert_eq!(got.minutes, want.minutes);
                 assert_eq!(got_batch[i], got, "batch row {i} diverges");
                 assert_eq!(got_sharded[i], got, "sharded row {i} diverges");
+                assert_eq!(got_lockstep[i], got, "lockstep row {i} diverges");
+                assert_eq!(got_ls_sharded[i], got, "lockstep-sharded row {i} diverges");
                 if got.matched() {
                     matched += 1;
                 }
@@ -474,7 +1049,96 @@ mod tests {
         eval.evaluate_batch(&batch, &mut eval.scratch(), &mut out);
         assert!(out.is_empty());
         out.push(MctDecision::no_match());
-        eval.evaluate_batch_sharded(&batch, 4, &mut out);
+        eval.evaluate_batch_sharded(&batch, 4, &mut eval.scratch(), &mut out);
         assert!(out.is_empty());
+        out.push(MctDecision::no_match());
+        let stats = eval.evaluate_batch_lockstep(&batch, &mut eval.lane_scratch(), &mut out);
+        assert!(out.is_empty());
+        assert_eq!(stats, LockstepStats::default());
+    }
+
+    /// Lane-group accounting: a single-station batch of 65 rows must split
+    /// into one full 64-lane group plus a 1-row scalar fallback, and the
+    /// stats must say so.
+    #[test]
+    fn lockstep_stats_count_groups_and_fallback() {
+        let cfg = GeneratorConfig::small(97, 300);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V2);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V2);
+        let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let enc = QueryEncoder::new(&p.plan, p.plan.len());
+        let eval = NativeEvaluator::new(p);
+        let mut rng = Rng::new(101);
+        let station = 0u32;
+        let mut lanes = eval.lane_scratch();
+        let mut out = Vec::new();
+        let mut batch = EncodedBatch::default();
+        for (n, groups, ls_rows, fb_rows) in
+            [(1usize, 0usize, 0usize, 1usize), (63, 1, 63, 0), (64, 1, 64, 0), (65, 1, 64, 1)]
+        {
+            let queries: Vec<_> =
+                (0..n).map(|_| random_query(&mut rng, &w, station)).collect();
+            enc.encode_batch_into(&queries, &mut batch);
+            let stats = eval.evaluate_batch_lockstep(&batch, &mut lanes, &mut out);
+            assert_eq!(stats.groups, groups, "n={n}");
+            assert_eq!(stats.lockstep_rows, ls_rows, "n={n}");
+            assert_eq!(stats.fallback_rows, fb_rows, "n={n}");
+            assert_eq!(stats.stations, 1, "n={n}");
+            // Every split agrees with the scalar walk regardless of which
+            // side of the occupancy floor the rows landed on.
+            for (i, q) in queries.iter().enumerate() {
+                let want = eval.evaluate_encoded(q.station, &enc.encode(q));
+                assert_eq!(out[i], want, "n={n} row {i}");
+            }
+        }
+        assert_eq!(LockstepStats::default().mean_occupancy(), 0.0);
+        assert_eq!(LockstepStats::default().fallback_fraction(), 0.0);
+    }
+
+    /// The prefix-OR level tables must map each distinct value to exactly
+    /// the lanes that carry it, and range probes to the union in between.
+    #[test]
+    fn level_tables_partition_the_lanes() {
+        let cfg = GeneratorConfig::small(103, 200);
+        let w = generate_world(&cfg);
+        let schema = Schema::for_version(StandardVersion::V1);
+        let rs = generate_rule_set(&cfg, &w, StandardVersion::V1);
+        let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+        let enc = QueryEncoder::new(&p.plan, p.plan.len());
+        let eval = NativeEvaluator::new(p);
+        let mut rng = Rng::new(107);
+        let queries: Vec<_> =
+            (0..40).map(|_| random_query(&mut rng, &w, 1)).collect();
+        let mut batch = EncodedBatch::default();
+        enc.encode_batch_into(&queries, &mut batch);
+        let rows: Vec<u32> = (0..queries.len() as u32).collect();
+        let mut lanes = eval.lane_scratch();
+        lanes.build_tables(&batch, &rows);
+        for lv in 0..batch.depth() {
+            let t = &lanes.levels[lv];
+            assert_eq!(t.cum.len(), t.vals.len() + 1);
+            assert!(t.vals.windows(2).all(|p| p[0] < p[1]), "values sorted+distinct");
+            // Per-value masks are disjoint and cover exactly the group.
+            let mut seen = 0u64;
+            for (vi, &v) in t.vals.iter().enumerate() {
+                let m = t.mask_of(v);
+                assert_ne!(m, 0);
+                assert_eq!(seen & m, 0, "lane masks must be disjoint");
+                seen |= m;
+                // Each lane in the mask really carries `v` at this level.
+                let mut mm = m;
+                while mm != 0 {
+                    let lane = mm.trailing_zeros() as usize;
+                    mm &= mm - 1;
+                    assert_eq!(batch.row(lane)[lv] as u32, v);
+                }
+                assert_eq!(t.mask_of_range(v, v), m);
+            }
+            assert_eq!(seen, (1u64 << rows.len()) - 1, "masks cover all lanes");
+            let (lo, hi) = (t.vals[0], *t.vals.last().unwrap());
+            assert_eq!(t.mask_of_range(lo, hi), seen, "full-span range = all lanes");
+            assert_eq!(t.mask_of_range(hi + 1, hi + 10), 0);
+        }
     }
 }

@@ -11,6 +11,7 @@
 //!                           [--strategy cpu|fpga] [--fail fast|degrade]
 //!                           [--open RATE_RPS] [--requests N] [--batch B] [--cache CAP]
 //!                           [--shards N]  (native backend: split large batches over N cores)
+//!                           [--no-lockstep]  (native backend: disable the query-parallel walk)
 //! erbium-search fleet       [--nodes N] [--route rr|jsq|jsq2|jsqd:N|shard] [--rate RPS]
 //!                           [--requests N] [--batch B] [--cache CAP] [--cap Q | --sla US]
 //!                           [--rules N] [--seed S] [--p P] [--w W] [--k K] [--e E]
@@ -23,7 +24,7 @@
 use std::sync::Arc;
 
 use erbium_search::backend::{
-    cpu_backend_factory, native_backend_factory, native_backend_factory_sharded,
+    cpu_backend_factory, native_backend_factory, native_backend_factory_tuned,
     xla_backend_factory, BackendFactory,
 };
 use erbium_search::cluster::{
@@ -185,12 +186,13 @@ fn main() -> anyhow::Result<()> {
                     );
                     xla_backend_factory(nfa.clone(), model, 1024, 28, 64)
                 }
-                _ => native_backend_factory_sharded(
+                _ => native_backend_factory_tuned(
                     nfa.clone(),
                     model,
                     28,
                     64,
                     args.usize("--shards", 1),
+                    !args.flag("--no-lockstep"),
                 ),
             };
             let strategy = match args.get("--strategy") {

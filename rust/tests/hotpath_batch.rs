@@ -1,12 +1,18 @@
 //! Hot-path batch equivalence: the seeded property that
-//! `evaluate_batch` ≡ per-query `evaluate_encoded` ≡ the semantic oracle
-//! across both standard versions, including the unknown-station fallback
-//! and the empty-batch edge case — the contract that lets the feeder
-//! switch to the allocation-free batch path without a semantic risk.
+//! `evaluate_batch_lockstep` ≡ `evaluate_batch` ≡ per-query
+//! `evaluate_encoded` ≡ the sharded walks ≡ the semantic oracle across both
+//! standard versions, including mixed-station batches, lane groups
+//! straddling the 64-lane width and the occupancy floor, the
+//! unknown-station fallback and the empty-batch edge case — the contract
+//! that lets the feeder switch to the transposed query-parallel path
+//! without a semantic risk.
 
 use erbium_search::backend::{CpuBackend, MatchBackend};
+use erbium_search::bits::BitSet;
 use erbium_search::encoder::{EncodedBatch, QueryEncoder};
-use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel, NativeEvaluator};
+use erbium_search::erbium::{
+    Backend, ErbiumEngine, FpgaModel, NativeEvaluator, LANE_MIN_OCCUPANCY, LANE_WIDTH,
+};
 use erbium_search::nfa::constraint_gen::HardwareConfig;
 use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
 use erbium_search::prng::Rng;
@@ -44,7 +50,7 @@ fn query_mix(cfg: &GeneratorConfig, world: &World, seed: u64, n: usize) -> Vec<M
 }
 
 #[test]
-fn batch_equals_scalar_equals_oracle_both_versions() {
+fn lockstep_equals_batch_equals_scalar_equals_oracle_both_versions() {
     for (seed, version) in [(211u64, StandardVersion::V1), (223, StandardVersion::V2)] {
         let (cfg, world, schema, rs) = setup(seed, 500, version);
         let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
@@ -60,7 +66,20 @@ fn batch_equals_scalar_equals_oracle_both_versions() {
         let mut got_batch = Vec::new();
         eval.evaluate_batch(&batch, &mut scratch, &mut got_batch);
         let mut got_sharded = Vec::new();
-        eval.evaluate_batch_sharded(&batch, 3, &mut got_sharded);
+        eval.evaluate_batch_sharded(&batch, 3, &mut scratch, &mut got_sharded);
+        let mut lanes = eval.lane_scratch();
+        let mut got_lockstep = Vec::new();
+        let stats = eval.evaluate_batch_lockstep(&batch, &mut lanes, &mut got_lockstep);
+        assert_eq!(stats.rows(), queries.len(), "{version:?} stats must cover the batch");
+        assert!(stats.stations > 1, "{version:?} mix must span stations");
+        let mut got_ls_sharded = Vec::new();
+        eval.evaluate_batch_lockstep_sharded(&batch, 3, &mut got_ls_sharded);
+
+        // Matched-row sets per surface, unioned word-wise: the BitSet
+        // word ops the transposed walk relies on must agree with the
+        // per-row equality below.
+        let mut matched_scalar = BitSet::empty(queries.len());
+        let mut matched_lockstep = BitSet::empty(queries.len());
 
         let mut matched = 0;
         for (i, q) in queries.iter().enumerate() {
@@ -70,11 +89,68 @@ fn batch_equals_scalar_equals_oracle_both_versions() {
             assert_eq!(scalar.minutes, oracle.minutes, "{version:?}");
             assert_eq!(got_batch[i], scalar, "{version:?} batch row {i} ≠ scalar");
             assert_eq!(got_sharded[i], scalar, "{version:?} sharded row {i} ≠ scalar");
+            assert_eq!(got_lockstep[i], scalar, "{version:?} lockstep row {i} ≠ scalar");
+            assert_eq!(
+                got_ls_sharded[i], scalar,
+                "{version:?} lockstep-sharded row {i} ≠ scalar"
+            );
             if scalar.matched() {
                 matched += 1;
+                matched_scalar.set(i as u32);
+            }
+            if got_lockstep[i].matched() {
+                matched_lockstep.set(i as u32);
             }
         }
         assert!(matched > 40, "{version:?}: only {matched} matches — mix too thin");
+        assert_eq!(matched_scalar.words(), matched_lockstep.words());
+        assert_eq!(matched_scalar.count_ones(), matched);
+        let mut union = BitSet::empty(queries.len());
+        matched_scalar.or_into(&mut union);
+        matched_lockstep.or_into(&mut union);
+        assert_eq!(union.count_ones(), matched, "union adds no phantom matches");
+    }
+}
+
+/// Lane groups straddling every interesting boundary: 1 row (pure scalar
+/// fallback), just under/at/over the 64-lane width, and a multi-group run —
+/// all on one station so the group split is exactly size-driven.
+#[test]
+fn lockstep_lane_group_boundaries_match_scalar() {
+    let (cfg, world, schema, rs) = setup(239, 400, StandardVersion::V2);
+    let (p, _) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+    let enc = QueryEncoder::new(&p.plan, p.plan.len());
+    let eval = NativeEvaluator::new(p);
+    let mut rng = Rng::new(241);
+    let station = rng.index(cfg.n_airports) as u32;
+    let mut lanes = eval.lane_scratch();
+    let mut batch = EncodedBatch::default();
+    let mut out = Vec::new();
+    for n in [1usize, 63, 64, 65, 130] {
+        let queries: Vec<_> =
+            (0..n).map(|_| random_query(&mut rng, &world, station)).collect();
+        enc.encode_batch_into(&queries, &mut batch);
+        let stats = eval.evaluate_batch_lockstep(&batch, &mut lanes, &mut out);
+        assert_eq!(out.len(), n);
+        assert_eq!(stats.rows(), n, "stats cover every row, n={n}");
+        assert_eq!(stats.stations, 1);
+        // Whole 64-lane groups first, then one trailing chunk that walks
+        // scalar iff it is under the occupancy floor.
+        let tail = n % LANE_WIDTH;
+        let full = n / LANE_WIDTH;
+        let (want_groups, want_fallback) = if tail == 0 {
+            (full, 0)
+        } else if tail < LANE_MIN_OCCUPANCY {
+            (full, tail)
+        } else {
+            (full + 1, 0)
+        };
+        assert_eq!(stats.groups, want_groups, "n={n}");
+        assert_eq!(stats.fallback_rows, want_fallback, "n={n}");
+        for (i, q) in queries.iter().enumerate() {
+            let want = eval.evaluate_encoded(q.station, &enc.encode(q));
+            assert_eq!(out[i], want, "n={n} row {i}");
+        }
     }
 }
 
@@ -95,6 +171,29 @@ fn unknown_station_answers_from_global_rules_in_batch() {
         assert_eq!(got.rule_id, want.rule_id);
         assert_eq!(got.minutes, want.minutes);
     }
+
+    // The same fallback through the lockstep path, twice over: 8 distinct
+    // unknown stations (eight 1-row scalar fallbacks) and one full 64-lane
+    // group sharing a single unknown station (global partitions only).
+    let mut lanes = eval.lane_scratch();
+    let stats = eval.evaluate_batch_lockstep(&batch, &mut lanes, &mut out);
+    assert_eq!(stats.stations, 8);
+    assert_eq!(stats.fallback_rows, 8, "1-row groups walk scalar");
+    for (q, got) in queries.iter().zip(&out) {
+        let want = evaluate_ruleset(&schema, &rs, q);
+        assert_eq!(got.rule_id, want.rule_id);
+        assert_eq!(got.minutes, want.minutes);
+    }
+    let same_station: Vec<_> =
+        (0..64).map(|i| query_for_station(&world, 77_777, 100 + i as u64)).collect();
+    enc.encode_batch_into(&same_station, &mut batch);
+    let stats = eval.evaluate_batch_lockstep(&batch, &mut lanes, &mut out);
+    assert_eq!((stats.groups, stats.lockstep_rows), (1, 64));
+    for (q, got) in same_station.iter().zip(&out) {
+        let want = evaluate_ruleset(&schema, &rs, q);
+        assert_eq!(got.rule_id, want.rule_id, "unknown-station lane group ≠ oracle");
+        assert_eq!(got.minutes, want.minutes);
+    }
 }
 
 #[test]
@@ -109,7 +208,12 @@ fn empty_batch_is_empty_through_every_surface() {
     let mut out = vec![];
     eval.evaluate_batch(&batch, &mut eval.scratch(), &mut out);
     assert!(out.is_empty());
-    eval.evaluate_batch_sharded(&batch, 4, &mut out);
+    eval.evaluate_batch_sharded(&batch, 4, &mut eval.scratch(), &mut out);
+    assert!(out.is_empty());
+    let ls_stats = eval.evaluate_batch_lockstep(&batch, &mut eval.lane_scratch(), &mut out);
+    assert!(out.is_empty());
+    assert_eq!(ls_stats.rows(), 0);
+    eval.evaluate_batch_lockstep_sharded(&batch, 4, &mut out);
     assert!(out.is_empty());
 
     let model = FpgaModel::new(HardwareConfig::v1_onprem(1), stats.depth);
