@@ -1,0 +1,226 @@
+//! Front-door bench: sessions-vs-p99 frontier and the thread-per-request
+//! vs event-driven head-to-head at equal offered load.
+//!
+//! Two experiments, both on the accept clock (latency measured from when
+//! a batch was *ready to send*, so queueing behind a parked session or a
+//! full thread pool is charged to the door, not hidden — no coordinated
+//! omission):
+//!
+//! 1. **Frontier (DES)** — sweep concurrent sessions S ∈ {M, 3M, 10M,
+//!    30M} at a fixed offered load (≈0.1× fleet capacity; more sessions
+//!    = a longer storm, not a heavier one). The event door accepts every
+//!    session at every S; the thread-per-session door pegs at its M
+//!    threads and sheds the rest at the socket.
+//! 2. **Head-to-head (real)** — at S = 10·M the event reactor must
+//!    sustain ≥ 10× the concurrent sessions of the thread-per-session
+//!    door at a no-worse accept-clock p99. This is the PR's acceptance
+//!    assertion, enforced here and recorded in the artifact.
+//!
+//! Emits machine-readable `BENCH_frontdoor.json` (override with
+//! `BENCH_OUT`), uploaded by the CI bench-smoke step. `BENCH_SMOKE=1`
+//! shrinks the thread cap and per-session depth for CI.
+
+use erbium_search::backend::BackendFactory;
+use erbium_search::benchkit::{print_table, write_json, Json};
+use erbium_search::cluster::{
+    AdmissionPolicy, Cluster, ClusterConfig, ClusterSimConfig, RoutePolicy, SimNodeSpec,
+};
+use erbium_search::controlplane::FaultPlan;
+use erbium_search::coordinator::{AggregationPolicy, PipelineConfig, Topology};
+use erbium_search::frontdoor::{
+    run_frontdoor, sim_frontdoor, BackpressurePolicy, FrontdoorConfig, FrontdoorReport,
+    FrontdoorSimConfig,
+};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::rules::standard::StandardVersion;
+use erbium_search::testing::fixture::compile_fixture;
+use erbium_search::workload::{session_plans, PoissonSource, RateSchedule, SessionPlan};
+
+const BATCH: usize = 16;
+const WINDOW: usize = 4;
+const NODES: usize = 2;
+/// Offered load as a fraction of measured fleet capacity — well under
+/// the knee, so the comparison is about multiplexing, not saturation.
+const LOAD: f64 = 0.1;
+
+fn node_cfg() -> PipelineConfig {
+    PipelineConfig::new(Topology::new(2, 1, 1, 4))
+        .with_aggregation(AggregationPolicy::DrainQueue)
+}
+
+/// Equal-offered-load session storm: the session arrival rate depends on
+/// the per-node drain rate only, so sweeping `sessions` lengthens the
+/// storm without changing the offered q/s.
+fn storm(
+    seed: u64,
+    mu_rps: f64,
+    sessions: usize,
+    batches: usize,
+    stations: usize,
+) -> Vec<SessionPlan> {
+    let rate = LOAD * NODES as f64 * mu_rps / batches as f64;
+    session_plans(seed, &RateSchedule::constant(rate), sessions, batches, BATCH, 0.0, stations)
+}
+
+fn report_json(r: &FrontdoorReport) -> Json {
+    Json::obj([
+        ("mode", Json::Str(r.mode.clone())),
+        ("backpressure", Json::Str(r.backpressure.clone())),
+        ("sessions_offered", Json::Int(r.sessions_offered as i64)),
+        ("sessions_accepted", Json::Int(r.sessions_accepted as i64)),
+        ("sessions_shed", Json::Int(r.sessions_shed as i64)),
+        ("offered_queries", Json::Int(r.offered_queries as i64)),
+        ("completed_queries", Json::Int(r.completed_queries as i64)),
+        ("shed_socket_queries", Json::Int(r.shed_socket_queries as i64)),
+        ("shed_queue_queries", Json::Int(r.shed_queue_queries as i64)),
+        ("lost_queries", Json::Int(r.lost_queries as i64)),
+        ("goodput_qps", Json::Num(r.goodput_qps)),
+        ("accept_p50_us", Json::Num(r.accept_p50_us)),
+        ("accept_p99_us", Json::Num(r.accept_p99_us)),
+        ("submit_p99_us", Json::Num(r.submit_p99_us)),
+        ("omission_gap_us", Json::Num(r.omission_gap_us())),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    // M = the thread-per-session door's thread cap; per-session depth.
+    let (m_threads, batches) = if smoke { (4, 4) } else { (16, 8) };
+
+    // ---- Frontier in the DES: sessions vs accept-clock p99 --------------
+    let sim_cluster = ClusterSimConfig::v2_cloud(NODES, 2).with_route(RoutePolicy::RoundRobin);
+    let spec = SimNodeSpec::v2_cloud(2);
+    let mu_sim_rps = spec.capacity_qps(&sim_cluster.overheads, BATCH) / BATCH as f64;
+    let sim_run = |frontdoor: FrontdoorConfig, plans: &[SessionPlan]| {
+        sim_frontdoor(
+            &FrontdoorSimConfig {
+                cluster: sim_cluster.clone(),
+                frontdoor,
+                faults: FaultPlan::none(),
+            },
+            plans,
+        )
+    };
+
+    let mut frontier_rows = Vec::new();
+    let mut frontier_json = Vec::new();
+    for mult in [1usize, 3, 10, 30] {
+        let sessions = mult * m_threads;
+        let plans = storm(0xF207 + mult as u64, mu_sim_rps, sessions, batches, 8);
+        let event = sim_run(
+            FrontdoorConfig::event(2, BackpressurePolicy::Window { window: WINDOW }),
+            &plans,
+        );
+        let baseline = sim_run(FrontdoorConfig::thread_per_session(m_threads), &plans);
+        assert!(event.conserves_queries() && baseline.conserves_queries());
+        assert_eq!(event.sessions_accepted, sessions, "event door accepts every session");
+        assert_eq!(
+            baseline.sessions_accepted,
+            m_threads.min(sessions),
+            "thread door pegs at its thread cap"
+        );
+        assert!(
+            event.accept_p99_us <= baseline.accept_p99_us,
+            "S={sessions}: multiplexing must not cost tail: event {:.0} vs thread {:.0} µs",
+            event.accept_p99_us,
+            baseline.accept_p99_us
+        );
+        frontier_rows.push(vec![
+            format!("{sessions}"),
+            format!("{}", event.sessions_accepted),
+            format!("{:.0}", event.accept_p99_us),
+            format!("{}", baseline.sessions_accepted),
+            format!("{:.0}", baseline.accept_p99_us),
+        ]);
+        frontier_json.push(Json::obj([
+            ("sessions", Json::Int(sessions as i64)),
+            ("event", report_json(&event)),
+            ("thread_per_session", report_json(&baseline)),
+        ]));
+    }
+    print_table(
+        "sessions-vs-p99 frontier (DES, equal offered load)",
+        &["sessions", "event accepted", "event p99 µs", "thread accepted", "thread p99 µs"],
+        &frontier_rows,
+    );
+
+    // ---- Head-to-head in the real reactor at S = 10·M -------------------
+    let f = compile_fixture(4117, 300, StandardVersion::V2, HardwareConfig::v2_aws(4));
+    let factory: BackendFactory = f.native_factory();
+    let world = f.world;
+    let probe_cfg = ClusterConfig::new(1, node_cfg()).with_admission(AdmissionPolicy::Open);
+    let probe = Cluster::new(probe_cfg, factory.clone());
+    let mu_real_rps = (0..2u64)
+        .map(|i| {
+            let mut src = PoissonSource::new(&world, 0xD00 ^ (1 + i), 1e8, BATCH, 240);
+            probe.run(&mut src).expect("probe run").achieved_qps / BATCH as f64
+        })
+        .fold(0.0, f64::max);
+
+    let sessions = 10 * m_threads;
+    let plans = storm(0xF207, mu_real_rps, sessions, batches, world.airports.len());
+    let real_cluster = ClusterConfig::new(NODES, node_cfg()).with_route(RoutePolicy::RoundRobin);
+    let real_run = |fd: &FrontdoorConfig| {
+        run_frontdoor(
+            real_cluster.clone(),
+            factory.clone(),
+            &world,
+            0xF207,
+            &plans,
+            fd,
+            &FaultPlan::none(),
+        )
+        .expect("frontdoor run")
+    };
+    let event = real_run(&FrontdoorConfig::event(2, BackpressurePolicy::Window { window: WINDOW }));
+    let baseline = real_run(&FrontdoorConfig::thread_per_session(m_threads));
+    println!("\nevent : {}", event.summary());
+    println!("thread: {}", baseline.summary());
+
+    assert!(event.conserves_queries() && baseline.conserves_queries());
+    assert!(
+        event.sessions_accepted >= 10 * baseline.sessions_accepted,
+        "acceptance: event door must sustain ≥10× the concurrent sessions: {} vs {}",
+        event.sessions_accepted,
+        baseline.sessions_accepted
+    );
+    assert!(
+        event.accept_p99_us <= baseline.accept_p99_us,
+        "acceptance: at no worse accept-clock p99: event {:.0} vs thread {:.0} µs",
+        event.accept_p99_us,
+        baseline.accept_p99_us
+    );
+    println!(
+        "\nevent door: {}× sessions ({} vs {}) at p99 {:.0} µs vs {:.0} µs",
+        event.sessions_accepted / baseline.sessions_accepted.max(1),
+        event.sessions_accepted,
+        baseline.sessions_accepted,
+        event.accept_p99_us,
+        baseline.accept_p99_us
+    );
+
+    // ---- Artifact -------------------------------------------------------
+    let json = Json::obj([
+        ("bench", Json::Str("frontdoor".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("batch", Json::Int(BATCH as i64)),
+        ("batches_per_session", Json::Int(batches as i64)),
+        ("window", Json::Int(WINDOW as i64)),
+        ("thread_cap", Json::Int(m_threads as i64)),
+        ("load_fraction", Json::Num(LOAD)),
+        ("mu_sim_rps", Json::Num(mu_sim_rps)),
+        ("mu_real_rps", Json::Num(mu_real_rps)),
+        ("frontier", Json::Arr(frontier_json)),
+        (
+            "head_to_head",
+            Json::obj([
+                ("sessions", Json::Int(sessions as i64)),
+                ("event", report_json(&event)),
+                ("thread_per_session", report_json(&baseline)),
+            ]),
+        ),
+    ]);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_frontdoor.json".to_string());
+    write_json(&out_path, &json).expect("write bench artifact");
+}

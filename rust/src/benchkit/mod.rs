@@ -168,6 +168,234 @@ impl Json {
         self.render_into(&mut s);
         s
     }
+
+    /// Parse a JSON document (the inverse of [`Json::render`], plus
+    /// whitespace and `null` → `Num(NAN)` round-tripping). Benches *emit*
+    /// artifacts; the library also *reads* them back — e.g. the cost model
+    /// pulls measured node throughput out of `BENCH_hotpath.json` — and
+    /// serde is not available offline, so this is a small recursive-descent
+    /// parser over the subset `render` produces (which is all of JSON minus
+    /// exotic escapes).
+    pub fn parse(text: &str) -> Option<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos == p.bytes.len() {
+            Some(v)
+        } else {
+            None // trailing garbage
+        }
+    }
+
+    /// Object field lookup (None for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Walk a path of object keys.
+    pub fn path(&self, keys: &[&str]) -> Option<&Json> {
+        keys.iter().try_fold(self, |j, k| j.get(k))
+    }
+
+    /// Numeric view: `Num` or `Int` (ints are exact up to 2^53 as f64,
+    /// far beyond any bench counter we emit).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(x) => Some(*x),
+            Json::Num(x) if x.fract() == 0.0 => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Recursive-descent state for [`Json::parse`].
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> Option<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    fn lit(&mut self, word: &str, value: Json) -> Option<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Some(value)
+        } else {
+            None
+        }
+    }
+
+    fn value(&mut self) -> Option<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string().map(Json::Str),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            // render() emits null for non-finite numbers; round-trip it as
+            // a NaN Num so readers can see "a number was here, but bad".
+            b'n' => self.lit("null", Json::Num(f64::NAN)),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Option<Json> {
+        self.eat(b'{')?;
+        let mut kvs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Some(Json::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            kvs.push((k, v));
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Some(Json::Obj(kvs));
+                }
+                _ => return None,
+            }
+        }
+    }
+
+    fn array(&mut self) -> Option<Json> {
+        self.eat(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Some(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Some(Json::Arr(xs));
+                }
+                _ => return None,
+            }
+        }
+    }
+
+    fn string(&mut self) -> Option<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    self.pos += 1;
+                    return Some(s);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    match self.peek()? {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = self.bytes.get(self.pos + 1..self.pos + 5)?;
+                            let code =
+                                u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
+                            s.push(char::from_u32(code)?);
+                            self.pos += 4;
+                        }
+                        _ => return None,
+                    }
+                    self.pos += 1;
+                }
+                // Multi-byte UTF-8: copy the whole scalar, not byte by byte.
+                _ => {
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..]).ok()?;
+                    let c = rest.chars().next()?;
+                    s.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Option<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).ok()?;
+        if text.is_empty() {
+            return None;
+        }
+        // Integers stay Int (counters survive a round trip); the rest Num.
+        if !text.contains(['.', 'e', 'E']) {
+            if let Ok(i) = text.parse::<i64>() {
+                return Some(Json::Int(i));
+            }
+        }
+        text.parse::<f64>().ok().map(Json::Num)
+    }
 }
 
 /// Write a JSON value to `path` (with a trailing newline) and echo the
@@ -219,5 +447,70 @@ mod tests {
     fn json_escapes_strings() {
         let j = Json::Str("a\"b\\c\nd".into());
         assert_eq!(j.render(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn json_parse_roundtrips_render() {
+        let j = Json::obj([
+            ("bench", Json::Str("hotpath".into())),
+            ("qps", Json::Num(1234.5)),
+            ("n", Json::Int(8192)),
+            ("ok", Json::Bool(true)),
+            ("rows", Json::Arr(vec![Json::Int(1), Json::Int(-2), Json::Num(3.25)])),
+            ("nested", Json::obj([("s", Json::Str("a\"b\\c\nd".into()))])),
+            ("empty_obj", Json::Obj(vec![])),
+            ("empty_arr", Json::Arr(vec![])),
+        ]);
+        let parsed = Json::parse(&j.render()).expect("parse back what we render");
+        assert_eq!(parsed.render(), j.render());
+    }
+
+    #[test]
+    fn json_parse_accessors_walk_bench_artifacts() {
+        let text = r#"{
+            "schema_version": 2,
+            "trajectory": {
+                "lockstep_sharded": { "qps": 1.25e7, "feeders_to_saturate": 3 }
+            },
+            "smoke": false,
+            "label": "hotpath"
+        }"#;
+        let j = Json::parse(text).unwrap();
+        assert_eq!(j.get("schema_version").and_then(Json::as_i64), Some(2));
+        assert_eq!(
+            j.path(&["trajectory", "lockstep_sharded", "qps"]).and_then(Json::as_f64),
+            Some(1.25e7)
+        );
+        assert_eq!(
+            j.path(&["trajectory", "lockstep_sharded", "feeders_to_saturate"])
+                .and_then(Json::as_i64),
+            Some(3)
+        );
+        assert_eq!(j.get("smoke").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("label").and_then(Json::as_str), Some("hotpath"));
+        assert!(j.get("missing").is_none());
+        assert!(j.path(&["trajectory", "missing", "qps"]).is_none());
+    }
+
+    #[test]
+    fn json_parse_rejects_malformed() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "{\"a\":1} extra",
+            "\"unterminated",
+            "nul",
+            "--3",
+        ] {
+            assert!(Json::parse(bad).is_none(), "should reject {bad:?}");
+        }
+        // null round-trips as a NaN number (render emits null for those).
+        match Json::parse("null") {
+            Some(Json::Num(x)) => assert!(x.is_nan()),
+            other => panic!("null parsed as {other:?}"),
+        }
     }
 }

@@ -325,10 +325,13 @@ pub struct ClusterConfig {
 }
 
 impl ClusterConfig {
-    /// N identical replicas of the default FPGA class.
+    /// N identical replicas of the default FPGA class, capacity-rated at
+    /// the measured lockstep knee when a `BENCH_hotpath.json` is on disk
+    /// (else the modeled v2 saturation) — so `CostAware` and
+    /// `plan_fleet` size fleets of these nodes from measurement.
     pub fn new(nodes: usize, node: PipelineConfig) -> ClusterConfig {
         assert!(nodes >= 1);
-        let class = NodeClass::fpga_f1(crate::costmodel::modeled_v2_node_qps());
+        let class = NodeClass::fpga_f1(crate::costmodel::default_node_qps());
         ClusterConfig::heterogeneous(
             (0..nodes).map(|_| NodeSpec { class: class.clone(), node }).collect(),
         )

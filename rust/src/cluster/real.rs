@@ -17,20 +17,132 @@
 //! so CPU-baseline and FPGA-engine replicas serve side by side and the
 //! report's per-class aggregates show who carried what.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::backend::BackendFactory;
-use crate::coordinator::pipeline::{Completion, NodeCore};
+use crate::coordinator::pipeline::{Completion, NodeCore, NodeStats};
 use crate::coordinator::Percentiles;
 use crate::workload::ArrivalSource;
 
 use super::{
-    merged_quantiles, update_service_estimate, ClusterConfig, ClusterReport, NodeReport,
+    merged_quantiles, update_service_estimate, AdmissionPolicy, ClusterConfig, ClusterReport,
+    NodeReport, Router,
 };
+
+/// Outcome of a non-blocking submission through [`ClusterHandle`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Submit {
+    /// Accepted and in flight on `node`; exactly one tagged [`Completion`]
+    /// will arrive for it.
+    Submitted { node: usize },
+    /// Refused — admission control said no, or no live node could take it.
+    Shed,
+}
+
+/// The cluster's **tagged-completion surface**: live replicas behind the
+/// shared router/admission policies, submissions returning immediately
+/// and completions flowing back over whatever channel the caller tags
+/// them with. [`Cluster::run`] drives it with one blocking injector; the
+/// front door drives it from event threads multiplexing thousands of
+/// sessions — same routing, same admission, same service-estimate
+/// feedback, so the two entry points can never disagree about policy.
+pub(crate) struct ClusterHandle {
+    nodes: Vec<NodeCore>,
+    router: Mutex<Router>,
+    admission: AdmissionPolicy,
+    /// Per-replica mean-service estimate, f64 bits in atomics so
+    /// submitters read what completion observers write.
+    est_service: Vec<AtomicU64>,
+    /// Liveness mask for fault drills: a downed node stops receiving but
+    /// drains what it holds (the real realisation's drain semantics).
+    up: Vec<AtomicBool>,
+}
+
+impl ClusterHandle {
+    /// Spawn every replica from its spec + factory.
+    pub(crate) fn spawn(config: &ClusterConfig, factories: &[BackendFactory]) -> ClusterHandle {
+        assert_eq!(factories.len(), config.nodes(), "one backend factory per node spec");
+        let nodes: Vec<NodeCore> = config
+            .specs
+            .iter()
+            .zip(factories)
+            .map(|(spec, factory)| NodeCore::spawn(&spec.node, factory))
+            .collect();
+        let n = nodes.len();
+        ClusterHandle {
+            nodes,
+            router: Mutex::new(config.router()),
+            admission: config.admission,
+            est_service: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            up: (0..n).map(|_| AtomicBool::new(true)).collect(),
+        }
+    }
+
+    pub(crate) fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub(crate) fn outstanding(&self, node: usize) -> usize {
+        self.nodes[node].outstanding()
+    }
+
+    pub(crate) fn depths(&self) -> Vec<usize> {
+        self.nodes.iter().map(|nd| nd.outstanding()).collect()
+    }
+
+    pub(crate) fn est_service_us(&self, node: usize) -> f64 {
+        f64::from_bits(self.est_service[node].load(Ordering::Relaxed))
+    }
+
+    /// Kill/revive a replica for fault drills. Downed replicas stop
+    /// receiving new work but finish what they hold.
+    pub(crate) fn set_up(&self, node: usize, up: bool) {
+        self.up[node].store(up, Ordering::Relaxed);
+    }
+
+    /// Route + admission-check + submit, without blocking. `Shed` means
+    /// the cluster refused the request *now* — the caller owns the
+    /// backpressure decision (drop it, park it, or push back on the
+    /// client).
+    pub(crate) fn try_submit(
+        &self,
+        station: u32,
+        queries: Vec<crate::rules::types::MctQuery>,
+        id: u64,
+        tx: &mpsc::Sender<Completion>,
+    ) -> Submit {
+        let depths = self.depths();
+        let live: Vec<bool> = self.up.iter().map(|u| u.load(Ordering::Relaxed)).collect();
+        let target =
+            self.router.lock().unwrap().route_up(station, &depths, Some(&live));
+        let Some(target) = target else {
+            return Submit::Shed;
+        };
+        if !self.admission.admits(depths[target], self.est_service_us(target)) {
+            return Submit::Shed;
+        }
+        self.nodes[target].submit_tagged(queries, id, target, tx);
+        Submit::Submitted { node: target }
+    }
+
+    /// Feed a completion back into the per-replica service estimate (the
+    /// signal [`AdmissionPolicy::SlaP90`] sheds on).
+    pub(crate) fn note_completion(&self, c: &Completion) {
+        let prev = f64::from_bits(self.est_service[c.node].load(Ordering::Relaxed));
+        let next = update_service_estimate(prev, c.latency_us, self.nodes[c.node].outstanding());
+        self.est_service[c.node].store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Join every replica and collect its stats. All submitted work must
+    /// have completed (drain before calling).
+    pub(crate) fn shutdown(self) -> Vec<NodeStats> {
+        self.nodes.into_iter().map(NodeCore::shutdown).collect()
+    }
+}
 
 /// A runnable cluster: every replica is built from its spec's factory (the
 /// backends themselves are constructed inside each replica's engine
@@ -63,24 +175,17 @@ impl Cluster {
     /// every submission produces exactly one completion.
     pub fn run(&self, source: &mut dyn ArrivalSource) -> Result<ClusterReport> {
         let n = self.config.nodes();
-        let nodes: Vec<NodeCore> = (0..n)
-            .map(|i| NodeCore::spawn(&self.config.specs[i].node, &self.factories[i]))
-            .collect();
+        let handle = ClusterHandle::spawn(&self.config, &self.factories);
         let (ctx, crx) = mpsc::channel::<Completion>();
-        // Per-replica mean-service estimate, f64 bits in atomics so the
-        // injector reads what the collector writes.
-        let est_service: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
 
         let t0 = Instant::now();
-        let mut router = self.config.router();
         let mut requests = 0usize;
         let mut dropped = 0usize;
         let mut dropped_queries = 0usize;
         let mut submitted = 0u64;
 
         let collected = std::thread::scope(|scope| {
-            let est = &est_service;
-            let nodes_ref = &nodes;
+            let h = &handle;
             let collector = scope.spawn(move || {
                 let mut lat: Vec<Percentiles> = (0..n).map(|_| Percentiles::new()).collect();
                 let mut completed = vec![0usize; n];
@@ -93,13 +198,7 @@ impl Cluster {
                     if !c.ok {
                         failed += 1;
                     }
-                    let prev = f64::from_bits(est[c.node].load(Ordering::Relaxed));
-                    let next = update_service_estimate(
-                        prev,
-                        c.latency_us,
-                        nodes_ref[c.node].outstanding(),
-                    );
-                    est[c.node].store(next.to_bits(), Ordering::Relaxed);
+                    h.note_completion(&c);
                 }
                 (lat, completed, completed_q, failed)
             });
@@ -108,23 +207,21 @@ impl Cluster {
             while let Some(a) = source.next_arrival() {
                 requests += 1;
                 crate::coordinator::pipeline::pace_until(t0, a.at_us);
-                let depths: Vec<usize> = nodes.iter().map(|nd| nd.outstanding()).collect();
-                let target = router.route(a.station(), &depths);
-                let est_us = f64::from_bits(est_service[target].load(Ordering::Relaxed));
-                if !self.config.admission.admits(depths[target], est_us) {
-                    dropped += 1;
-                    dropped_queries += a.queries.len();
-                    continue;
+                let n_queries = a.queries.len();
+                match handle.try_submit(a.station(), a.queries, submitted, &ctx) {
+                    Submit::Submitted { .. } => submitted += 1,
+                    Submit::Shed => {
+                        dropped += 1;
+                        dropped_queries += n_queries;
+                    }
                 }
-                nodes[target].submit_tagged(a.queries, submitted, target, &ctx);
-                submitted += 1;
             }
             drop(ctx);
             collector.join().expect("collector panicked")
         });
         let (lat, completed, completed_q, failed) = collected;
         let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
-        let stats: Vec<_> = nodes.into_iter().map(NodeCore::shutdown).collect();
+        let stats: Vec<_> = handle.shutdown();
 
         let completed_total: usize = completed.iter().sum();
         let completed_queries: usize = completed_q.iter().sum();

@@ -231,6 +231,16 @@ impl SimNodeSpec {
         }
     }
 
+    /// Closed-form service time of one `n_queries`-sized request on this
+    /// node, µs — the single-FIFO server model the front-door DES queues
+    /// behind. Derived from [`SimNodeSpec::capacity_qps`] at that batch
+    /// size, so sustained throughput under saturation matches the capacity
+    /// the router weights and autoscaler already believe in.
+    pub fn request_service_us(&self, o: &Overheads, n_queries: usize) -> f64 {
+        let b = n_queries.max(1);
+        b as f64 / self.capacity_qps(o, b).max(1e-9) * 1e6
+    }
+
     fn label(&self) -> String {
         match self.engine {
             SimEngine::Fpga { hw, .. } => {

@@ -40,6 +40,39 @@ pub struct ScalingEvent {
     pub up_after: usize,
 }
 
+impl ScalingEvent {
+    /// Fault-plan kill at `t_us` — the event shape shared by the control
+    /// plane's drills and the front door's fault timeline.
+    pub fn fail(t_us: f64, class: &str, node: usize, up_after: usize) -> ScalingEvent {
+        let class = class.to_string();
+        ScalingEvent { t_us, kind: ScalingEventKind::Fail, class, node, up_after }
+    }
+
+    /// Revival of a previously killed node.
+    pub fn recover(t_us: f64, class: &str, node: usize, up_after: usize) -> ScalingEvent {
+        ScalingEvent {
+            t_us,
+            kind: ScalingEventKind::Recover,
+            class: class.to_string(),
+            node,
+            up_after,
+        }
+    }
+
+    /// One formatted timeline line — every consumer (fleet timeline,
+    /// front-door fault log, CLIs) prints events identically.
+    pub fn line(&self) -> String {
+        format!(
+            "  t={:>10.0} µs  {:<7}  {:<8} node {:>2}  ({} up)",
+            self.t_us,
+            self.kind.label(),
+            self.class,
+            self.node,
+            self.up_after
+        )
+    }
+}
+
 /// Billed usage of one node class over the run.
 #[derive(Debug, Clone)]
 pub struct ClassUsage {
@@ -123,14 +156,8 @@ impl FleetDynamicsReport {
     pub fn timeline(&self) -> String {
         let mut out = String::new();
         for e in &self.events {
-            out.push_str(&format!(
-                "  t={:>10.0} µs  {:<7}  {:<8} node {:>2}  ({} up)\n",
-                e.t_us,
-                e.kind.label(),
-                e.class,
-                e.node,
-                e.up_after
-            ));
+            out.push_str(&e.line());
+            out.push('\n');
         }
         out
     }

@@ -26,12 +26,18 @@ use crate::cluster::{
     ClusterSimConfig, NodeClass, SimNodeSpec,
 };
 use crate::controlplane::{
-    simulate_fleet, Autoscaler, CostAware, FleetDynamicsReport, FleetSimConfig,
+    simulate_fleet, Autoscaler, CostAware, FaultPlan, FleetDynamicsReport, FleetSimConfig,
     ManagedCluster, ManagedClusterConfig, ReactiveUtilisation, RealClass, SimClass,
     StaticFleet,
 };
+use crate::frontdoor::{
+    run_frontdoor, sim_frontdoor, BackpressurePolicy, FrontdoorConfig, FrontdoorReport,
+    FrontdoorSimConfig,
+};
 use crate::rules::types::World;
-use crate::workload::{PoissonSource, ProductionTrace, RateSchedule, ScheduledSource};
+use crate::workload::{
+    session_plans, PoissonSource, ProductionTrace, RateSchedule, ScheduledSource,
+};
 
 use super::config::{AggregationPolicy, PipelineConfig, Topology};
 use super::pipeline::{Pipeline, PipelineReport};
@@ -354,4 +360,183 @@ pub fn cross_validate_scaling_policies(
     }
 
     Ok(ScalingPolicyCrossValidation { sim: sim_reports, real: real_reports })
+}
+
+/// The backpressure ladder configurations the front-door crossval ranks,
+/// in run order: no ladder, per-session window, full socket-shedding
+/// ladder. Window/cap sizes are deliberately tight against
+/// [`FRONTDOOR_CROSSVAL_QUEUE_CAP`] so the three policies separate by
+/// whole multiples on both axes, in both realisations.
+pub const FRONTDOOR_CROSSVAL_POLICIES: [BackpressurePolicy; 3] = [
+    BackpressurePolicy::None,
+    BackpressurePolicy::Window { window: 2 },
+    BackpressurePolicy::SocketShed { window: 2, pending_cap: 2 },
+];
+
+/// Per-replica queue cap of the front-door crossval scenario.
+pub const FRONTDOOR_CROSSVAL_QUEUE_CAP: usize = 24;
+
+const FRONTDOOR_CROSSVAL_SESSIONS: usize = 40;
+const FRONTDOOR_CROSSVAL_BATCHES: usize = 16;
+const FRONTDOOR_CROSSVAL_BATCH_QUERIES: usize = 16;
+/// Offered load as a multiple of measured fleet capacity: overloaded
+/// enough that the backpressure policy, not the fleet, decides the
+/// outcome.
+const FRONTDOOR_CROSSVAL_OVERLOAD: f64 = 2.0;
+
+/// Backpressure-policy cross-validation: the simulated and the real front
+/// door, each calibrated to its own node speed and driven by the same
+/// seeded 2×-overload session storm, must rank
+/// [`FRONTDOOR_CROSSVAL_POLICIES`] identically on **both** axes — goodput
+/// (completed queries, descending) and accept-clock p99 (ascending).
+///
+/// The double ranking is the point: `Window` completes the most but hides
+/// the overload in client-side waiting the accept clock exposes;
+/// `SocketShed` serves the least but fastest (it refuses what it cannot
+/// serve at the socket); `None` sits between on both axes, shedding in
+/// queue after work was buffered. A realisation pair that agrees on both
+/// orderings agrees on the *trade-off*, not just on a number.
+#[derive(Debug, Clone)]
+pub struct FrontdoorPolicyCrossValidation {
+    /// One report per policy, [`FRONTDOOR_CROSSVAL_POLICIES`] order.
+    pub sim: Vec<FrontdoorReport>,
+    pub real: Vec<FrontdoorReport>,
+}
+
+impl FrontdoorPolicyCrossValidation {
+    fn ranked_by(
+        reports: &[FrontdoorReport],
+        key: impl Fn(&FrontdoorReport) -> f64,
+    ) -> Vec<String> {
+        let mut idx: Vec<usize> = (0..reports.len()).collect();
+        idx.sort_by(|&a, &b| key(&reports[a]).partial_cmp(&key(&reports[b])).unwrap());
+        idx.into_iter().map(|i| reports[i].backpressure.clone()).collect()
+    }
+
+    /// Policies by completed queries, best-first, as the simulator saw it.
+    pub fn sim_goodput_ranking(&self) -> Vec<String> {
+        Self::ranked_by(&self.sim, |r| -(r.completed_queries as f64))
+    }
+
+    /// Policies by completed queries, best-first, as the real front door
+    /// saw it.
+    pub fn real_goodput_ranking(&self) -> Vec<String> {
+        Self::ranked_by(&self.real, |r| -(r.completed_queries as f64))
+    }
+
+    /// Policies by accept-clock p99, fastest-first, simulator view.
+    pub fn sim_tail_ranking(&self) -> Vec<String> {
+        Self::ranked_by(&self.sim, |r| r.accept_p99_us)
+    }
+
+    /// Policies by accept-clock p99, fastest-first, real view.
+    pub fn real_tail_ranking(&self) -> Vec<String> {
+        Self::ranked_by(&self.real, |r| r.accept_p99_us)
+    }
+
+    /// True when both realisations agree on both orderings.
+    pub fn agree_on_ranking(&self) -> bool {
+        self.sim_goodput_ranking() == self.real_goodput_ranking()
+            && self.sim_tail_ranking() == self.real_tail_ranking()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "goodput — sim [{}] vs real [{}]; accept p99 — sim [{}] vs real [{}] → {}",
+            self.sim_goodput_ranking().join(" > "),
+            self.real_goodput_ranking().join(" > "),
+            self.sim_tail_ranking().join(" < "),
+            self.real_tail_ranking().join(" < "),
+            if self.agree_on_ranking() { "same ranking" } else { "RANKING MISMATCH" }
+        )
+    }
+}
+
+/// Run {sim, real} × [`FRONTDOOR_CROSSVAL_POLICIES`] and collect the six
+/// [`FrontdoorReport`]s for ranking.
+///
+/// `cluster` contributes the fleet size and the per-node pipeline shape;
+/// route and admission are pinned to the crossval scenario (round-robin,
+/// `QueueCap(24)`) so the comparison is about the *front door's* policy,
+/// not the cluster's. As in the other fleet crossvals, each realisation is
+/// first calibrated: the real side probes one replica with a burst (twice,
+/// keeping the faster — both runs under-estimate the drain rate), the sim
+/// side derives it from the node model, and each is then offered
+/// [`FRONTDOOR_CROSSVAL_OVERLOAD`]× its own measured fleet capacity.
+pub fn cross_validate_frontdoor_policies(
+    cluster: ClusterConfig,
+    factory: BackendFactory,
+    world: &World,
+    seed: u64,
+) -> Result<FrontdoorPolicyCrossValidation> {
+    use crate::cluster::{AdmissionPolicy, RoutePolicy};
+    anyhow::ensure!(
+        cluster.is_homogeneous(),
+        "cross_validate_frontdoor_policies requires a homogeneous ClusterConfig"
+    );
+    let node = cluster.specs[0].node;
+    let nodes = cluster.nodes();
+    let feeders = node.topology.workers.max(1);
+    let batch = FRONTDOOR_CROSSVAL_BATCH_QUERIES;
+    let burst = |seed| PoissonSource::new(world, seed, 1e8, batch, 240);
+
+    // ---- Calibrate each realisation's per-node drain rate --------------
+    let probe_cfg = ClusterConfig::new(1, node).with_admission(AdmissionPolicy::Open);
+    let probe = Cluster::new(probe_cfg, factory.clone());
+    let mu_real_rps = (0..2u64)
+        .map(|i| {
+            probe
+                .run(&mut burst(seed ^ (1 + i)))
+                .map(|r| r.achieved_qps / batch as f64)
+        })
+        .collect::<Result<Vec<_>>>()?
+        .into_iter()
+        .fold(0.0, f64::max);
+    let sim_cluster = ClusterSimConfig::v2_cloud(nodes, feeders)
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(FRONTDOOR_CROSSVAL_QUEUE_CAP));
+    let spec = SimNodeSpec::v2_cloud(feeders);
+    let mu_sim_rps = spec.capacity_qps(&sim_cluster.overheads, batch) / batch as f64;
+
+    // ---- Matched-relative-overload session storms ----------------------
+    let plans_for = |mu_rps: f64| {
+        let session_rate =
+            FRONTDOOR_CROSSVAL_OVERLOAD * nodes as f64 * mu_rps / FRONTDOOR_CROSSVAL_BATCHES as f64;
+        session_plans(
+            seed,
+            &RateSchedule::constant(session_rate),
+            FRONTDOOR_CROSSVAL_SESSIONS,
+            FRONTDOOR_CROSSVAL_BATCHES,
+            batch,
+            0.0,
+            world.airports.len(),
+        )
+    };
+    let plans_sim = plans_for(mu_sim_rps);
+    let plans_real = plans_for(mu_real_rps);
+    let real_cluster = ClusterConfig::new(nodes, node)
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(FRONTDOOR_CROSSVAL_QUEUE_CAP));
+
+    let mut sim_reports = Vec::new();
+    let mut real_reports = Vec::new();
+    for policy in FRONTDOOR_CROSSVAL_POLICIES {
+        let fd = FrontdoorConfig::event(2, policy);
+        let sim_cfg = FrontdoorSimConfig {
+            cluster: sim_cluster.clone(),
+            frontdoor: fd,
+            faults: FaultPlan::none(),
+        };
+        sim_reports.push(sim_frontdoor(&sim_cfg, &plans_sim));
+        real_reports.push(run_frontdoor(
+            real_cluster.clone(),
+            factory.clone(),
+            world,
+            seed ^ 5,
+            &plans_real,
+            &fd,
+            &FaultPlan::none(),
+        )?);
+    }
+    Ok(FrontdoorPolicyCrossValidation { sim: sim_reports, real: real_reports })
 }

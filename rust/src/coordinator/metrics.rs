@@ -78,6 +78,58 @@ impl Percentiles {
     }
 }
 
+/// One latency event on two clocks: the **accept clock** (counted from
+/// the moment the client *had* the work — session accept plus the batch's
+/// stream offset) and the **submit clock** (counted from cluster
+/// submission). The gap between the two tails is the coordinated-omission
+/// error: time a request spent waiting in windows, parked buffers, or a
+/// blocked connection that submit-clock reports silently discard.
+#[derive(Debug, Clone, Default)]
+pub struct DualClock {
+    pub accept: Percentiles,
+    pub submit: Percentiles,
+}
+
+impl DualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request: latency from client readiness and
+    /// latency from cluster submission. Accept-clock latency can never be
+    /// shorter than submit-clock latency for the same request.
+    pub fn record(&mut self, accept_us: f64, submit_us: f64) {
+        debug_assert!(
+            accept_us >= submit_us - 1e-6,
+            "accept clock starts earlier: {accept_us} < {submit_us}"
+        );
+        self.accept.record(accept_us);
+        self.submit.record(submit_us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.accept.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.accept.is_empty()
+    }
+
+    pub fn merge(&mut self, other: &DualClock) {
+        self.accept.merge(&other.accept);
+        self.submit.merge(&other.submit);
+    }
+
+    /// The coordinated-omission gap at a percentile: how much latency the
+    /// submit-clock view hides at that quantile (≥ 0 up to reordering
+    /// between the two sorted sequences).
+    pub fn omission_gap(&mut self, p: f64) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.accept.percentile(p) - self.submit.percentile(p)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +208,29 @@ mod tests {
             assert_eq!(merged.percentile(q), direct.percentile(q), "q={q}");
         }
         assert!((merged.mean() - direct.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dual_clock_surfaces_the_omission_gap() {
+        // Ten requests, each ready at t=0 but submitted one service time
+        // apart (a window-1 session draining serially): the submit clock
+        // sees a flat 10 µs everywhere, the accept clock sees the queueing.
+        let mut dc = DualClock::new();
+        for i in 0..10 {
+            let wait_us = 10.0 * i as f64;
+            dc.record(wait_us + 10.0, 10.0);
+        }
+        assert_eq!(dc.len(), 10);
+        assert_eq!(dc.submit.p99(), 10.0);
+        assert_eq!(dc.accept.p99(), 100.0);
+        assert_eq!(dc.omission_gap(99.0), 90.0);
+        assert_eq!(dc.omission_gap(0.0), 0.0, "the first request never waited");
+
+        let mut merged = DualClock::new();
+        merged.merge(&dc);
+        merged.merge(&DualClock::new());
+        assert_eq!(merged.omission_gap(99.0), 90.0);
+        assert_eq!(DualClock::new().omission_gap(99.0), 0.0, "empty collector");
     }
 
     #[test]

@@ -32,11 +32,12 @@ pub mod sim;
 
 pub use config::{AggregationPolicy, FailurePolicy, PipelineConfig, Topology};
 pub use crossval::{
-    cross_validate, cross_validate_cluster_policies, cross_validate_scaling_policies,
-    ClusterPolicyCrossValidation, CrossValidation, ScalingPolicyCrossValidation,
+    cross_validate, cross_validate_cluster_policies, cross_validate_frontdoor_policies,
+    cross_validate_scaling_policies, ClusterPolicyCrossValidation, CrossValidation,
+    FrontdoorPolicyCrossValidation, ScalingPolicyCrossValidation,
 };
 pub use domain_explorer::{DomainExplorer, MctStrategy, UserQueryOutcome};
-pub use metrics::Percentiles;
+pub use metrics::{DualClock, Percentiles};
 pub use overheads::Overheads;
 pub use pipeline::{Pipeline, PipelineReport};
 pub use sim::{simulate, LoadMode, SimConfig, SimReport};

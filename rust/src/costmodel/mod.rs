@@ -148,6 +148,49 @@ pub fn modeled_v2_node_qps() -> f64 {
     crate::erbium::FpgaModel::new(HardwareConfig::v2_aws(4), 26).saturation_qps()
 }
 
+/// Feeder legs of the `BENCH_hotpath.json` (schema v2) `trajectory`
+/// section, best first: the lockstep knee is the rate a provisioned node
+/// actually sustains, the earlier legs are fallbacks for artifacts from
+/// older harness runs.
+const HOTPATH_TRAJECTORY_LEGS: [&str; 5] =
+    ["lockstep_sharded", "lockstep", "sharded", "batch", "scalar"];
+
+/// Extract the measured per-node feeder rate from a `BENCH_hotpath.json`
+/// document (schema v2): the q/s of the best `trajectory` leg present.
+/// `None` when the text is not the hot-path artifact.
+pub fn node_qps_from_hotpath_json(text: &str) -> Option<f64> {
+    let doc = crate::benchkit::Json::parse(text)?;
+    let trajectory = doc.get("trajectory")?;
+    HOTPATH_TRAJECTORY_LEGS
+        .iter()
+        .filter_map(|leg| trajectory.path(&[leg, "qps"])?.as_f64())
+        .find(|qps| qps.is_finite() && *qps > 0.0)
+}
+
+/// Measured node rate from the hot-path bench artifact on disk, if one
+/// exists: `$BENCH_HOTPATH` or `BENCH_hotpath.json` in the working
+/// directory (where the bench writes it). Read once per process — fleet
+/// sizing calls this from every `ClusterConfig`.
+pub fn measured_node_qps() -> Option<f64> {
+    static MEASURED: std::sync::OnceLock<Option<f64>> = std::sync::OnceLock::new();
+    *MEASURED.get_or_init(|| {
+        let path =
+            std::env::var("BENCH_HOTPATH").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+        std::fs::read_to_string(path).ok().as_deref().and_then(node_qps_from_hotpath_json)
+    })
+}
+
+/// The node rate fleet sizing should use: the measured lockstep knee when
+/// a `BENCH_hotpath.json` is available (CI runs the bench right before the
+/// fleet benches, so they size from measurement), else the modeled v2
+/// saturation. This is what `ClusterConfig::new` capacity-weights FPGA
+/// nodes with and what the `costs` CLI feeds [`plan_fleet`] — the Table
+/// 2/3 derivations themselves stay pinned to the modeled constant so the
+/// paper's unit counts remain reproducible byte-for-byte.
+pub fn default_node_qps() -> f64 {
+    measured_node_qps().unwrap_or_else(modeled_v2_node_qps)
+}
+
 /// Default fleet-wide user-query rate the tables assume (search-engine
 /// scale; ~7.6 M MCT q/s of demand via [`MCT_QUERIES_PER_USER_QUERY`]).
 pub const DEFAULT_UQ_PER_S: f64 = 10_000.0;
@@ -484,6 +527,45 @@ mod tests {
         let expect = 13_000.0 / (PURCHASE_AMORTISATION_YEARS * HOURS_PER_YEAR);
         assert!((onprem - expect).abs() < 1e-9, "amortised {onprem}");
         assert!(onprem < catalog::AWS_F1_2XL.hourly_usd(), "owned hardware is cheap per hour");
+    }
+
+    #[test]
+    fn node_qps_reads_hotpath_trajectory() {
+        // Schema v2 shape, abbreviated: the loader must take the best leg
+        // present (lockstep_sharded) and ignore the rest.
+        let text = r#"{
+            "schema_version": 2,
+            "trajectory": {
+                "scalar": { "qps": 1.0e6, "feeders_to_saturate": 26 },
+                "batch": { "qps": 4.0e6, "feeders_to_saturate": 7 },
+                "lockstep_sharded": { "qps": 2.5e7, "feeders_to_saturate": 2 }
+            }
+        }"#;
+        assert_eq!(node_qps_from_hotpath_json(text), Some(2.5e7));
+
+        // Older artifact with only the PR 3 legs: falls through the ladder.
+        let old = r#"{ "trajectory": { "batch": { "qps": 4.0e6 } } }"#;
+        assert_eq!(node_qps_from_hotpath_json(old), Some(4.0e6));
+
+        // Not the hot-path artifact (or damaged): no measurement.
+        assert_eq!(node_qps_from_hotpath_json("{}"), None);
+        assert_eq!(node_qps_from_hotpath_json("not json"), None);
+        assert_eq!(
+            node_qps_from_hotpath_json(r#"{ "trajectory": { "batch": { "qps": -1 } } }"#),
+            None,
+            "non-positive rates are not measurements"
+        );
+    }
+
+    #[test]
+    fn default_node_qps_falls_back_to_model() {
+        // Whatever the environment holds, the default is a usable positive
+        // rate, and without a measurement it is exactly the modeled one.
+        let d = default_node_qps();
+        assert!(d > 0.0);
+        if measured_node_qps().is_none() {
+            assert_eq!(d, modeled_v2_node_qps());
+        }
     }
 
     #[test]

@@ -1,0 +1,449 @@
+//! The **front door**: an event-driven session layer in front of the
+//! cluster, multiplexing many client sessions onto few serving replicas —
+//! the 1st-CLaaS lesson ("stream bits to the kernel, multiplex the web in
+//! front of it") applied to the MCT fleet. PR 3–5 made the stack fast *per
+//! batch*; this layer is what lets more than a few thousand concurrent
+//! clients actually load it: before it, every in-flight request held a
+//! blocking reply slot on a dedicated thread.
+//!
+//! Two realisations, as everywhere in this repo:
+//!
+//! * [`real::run_frontdoor`] — a poll-loop reactor on std threads: each
+//!   event thread owns N sessions, reads their batch streams, submits
+//!   through the cluster's tagged-completion surface
+//!   ([`ClusterHandle`](crate::cluster::real::ClusterHandle)) and matches
+//!   completions back to sessions — no per-request thread, no blocking
+//!   slot. A thread-per-session baseline mode serves as the "what we had
+//!   before" comparison the bench frontier measures.
+//! * [`sim::sim_frontdoor`] — the deterministic DES twin over the same
+//!   session plans, ladder rules and router/admission policies, with
+//!   [`FaultPlan`](crate::controlplane::FaultPlan) kill/revive support.
+//!
+//! **The backpressure ladder** ([`BackpressurePolicy`]) has three rungs,
+//! composing with the cluster's own
+//! [`AdmissionPolicy`](crate::cluster::AdmissionPolicy):
+//!
+//! 1. *Per-session window* — at most W batches of one session in flight;
+//!    excess waits parked (client-visible delay, no loss).
+//! 2. *Per-connection pending cap* — at most P batches parked per event
+//!    thread; the connection's read buffer is finite.
+//! 3. *Socket-level shed* — when the cap is hit, new batches (and whole
+//!    sessions, at accept) are refused at read/accept time, **before**
+//!    they ever occupy queue space. Overload is turned away at the edge,
+//!    not after queueing.
+//!
+//! Admission refusals below the ladder are counted `shed_queue` (the
+//! "too late, already buffered" shed); ladder refusals are `shed_socket`.
+//!
+//! **The accept clock.** All front-door latency is measured from when the
+//! client *had* the work — session accept plus the batch's stream offset —
+//! to the response, not from cluster submission. The difference between
+//! the two p99s ([`FrontdoorReport::omission_gap_us`]) is the
+//! coordinated-omission error that submit-clock reports hide: a window-1
+//! session's eighth batch waits seven round trips before the submit clock
+//! even starts ticking.
+
+pub mod real;
+pub mod sim;
+
+pub use real::run_frontdoor;
+pub use sim::{sim_frontdoor, FrontdoorSimConfig};
+
+use std::collections::VecDeque;
+
+use crate::controlplane::ScalingEvent;
+use crate::coordinator::DualClock;
+use crate::workload::SessionPlan;
+
+/// The three-rung backpressure ladder of the front door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackpressurePolicy {
+    /// No ladder: every batch is flung at the cluster the moment it is
+    /// ready. Overload lands in the replicas' queues and is shed (or
+    /// absorbed as queueing latency) there — the "shed in queue" world.
+    None,
+    /// Per-session window of `window` in-flight batches; excess parks
+    /// without bound. Lossless, at the price of unbounded client-visible
+    /// delay under sustained overload.
+    Window { window: usize },
+    /// Full ladder: per-session `window` plus a per-event-thread cap of
+    /// `pending_cap` parked batches; beyond the cap, reads — and at
+    /// accept time, whole sessions — are refused at the socket.
+    SocketShed { window: usize, pending_cap: usize },
+}
+
+impl BackpressurePolicy {
+    pub fn label(&self) -> String {
+        match self {
+            BackpressurePolicy::None => "none".to_string(),
+            BackpressurePolicy::Window { window } => format!("window:{window}"),
+            BackpressurePolicy::SocketShed { window, pending_cap } => {
+                format!("socket:{window}:{pending_cap}")
+            }
+        }
+    }
+
+    /// Parse `none` | `window:W` | `socket:W:P` (the CLI/bench syntax).
+    pub fn parse(s: &str) -> Option<BackpressurePolicy> {
+        let mut parts = s.split(':');
+        let kind = parts.next()?;
+        let num = |p: Option<&str>| p.and_then(|x| x.parse::<usize>().ok()).filter(|&x| x > 0);
+        let policy = match kind {
+            "none" => BackpressurePolicy::None,
+            "window" => BackpressurePolicy::Window { window: num(parts.next())? },
+            "socket" => BackpressurePolicy::SocketShed {
+                window: num(parts.next())?,
+                pending_cap: num(parts.next())?,
+            },
+            _ => return None,
+        };
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(policy)
+    }
+
+    /// Per-session in-flight window (unbounded for `None`).
+    pub fn window(&self) -> usize {
+        match self {
+            BackpressurePolicy::None => usize::MAX,
+            BackpressurePolicy::Window { window }
+            | BackpressurePolicy::SocketShed { window, .. } => (*window).max(1),
+        }
+    }
+
+    /// Per-thread parked-batch cap, if this policy sheds at the socket.
+    pub fn pending_cap(&self) -> Option<usize> {
+        match self {
+            BackpressurePolicy::SocketShed { pending_cap, .. } => Some((*pending_cap).max(1)),
+            _ => None,
+        }
+    }
+
+    /// Socket rung: may this thread buffer one more batch (or accept one
+    /// more session) given `thread_parked` batches already parked?
+    pub(crate) fn allows(&self, thread_parked: usize) -> bool {
+        self.pending_cap().map(|cap| thread_parked < cap).unwrap_or(true)
+    }
+
+    /// What an admission refusal means under this policy: ladder policies
+    /// hold the batch parked and retry (the refusal *is* backpressure);
+    /// the no-ladder policy has nowhere to hold it — the batch is shed in
+    /// queue.
+    pub(crate) fn reparks_on_admission_shed(&self) -> bool {
+        !matches!(self, BackpressurePolicy::None)
+    }
+}
+
+/// How the front door schedules sessions onto threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrontdoorMode {
+    /// The event-driven reactor: every event thread multiplexes its share
+    /// of *all* sessions.
+    Event,
+    /// The pre-front-door architecture: one blocking thread per session,
+    /// window 1, at most `max_threads` session threads ever — sessions
+    /// beyond that are refused at accept (thread exhaustion *is* the
+    /// socket shed of this mode).
+    ThreadPerSession { max_threads: usize },
+}
+
+impl FrontdoorMode {
+    pub fn label(&self) -> String {
+        match self {
+            FrontdoorMode::Event => "event".to_string(),
+            FrontdoorMode::ThreadPerSession { max_threads } => {
+                format!("thread-per-session(≤{max_threads})")
+            }
+        }
+    }
+}
+
+/// Front-door configuration, identical across realisations.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontdoorConfig {
+    pub event_threads: usize,
+    pub backpressure: BackpressurePolicy,
+    pub mode: FrontdoorMode,
+}
+
+impl FrontdoorConfig {
+    pub fn event(event_threads: usize, backpressure: BackpressurePolicy) -> FrontdoorConfig {
+        FrontdoorConfig {
+            event_threads: event_threads.max(1),
+            backpressure,
+            mode: FrontdoorMode::Event,
+        }
+    }
+
+    pub fn thread_per_session(max_threads: usize) -> FrontdoorConfig {
+        // Window 1 is structural to the baseline: one blocking slot per
+        // session thread.
+        FrontdoorConfig {
+            event_threads: 1,
+            backpressure: BackpressurePolicy::Window { window: 1 },
+            mode: FrontdoorMode::ThreadPerSession { max_threads: max_threads.max(1) },
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} bp={}", self.mode.label(), self.backpressure.label())
+    }
+}
+
+/// Per-session ladder state, shared by both realisations so the window
+/// accounting exists exactly once: the FIFO of parked batch indices and
+/// the in-flight count the window bounds.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct SessionGate {
+    pub(crate) parked: VecDeque<usize>,
+    pub(crate) in_flight: usize,
+    /// Session refused whole at accept (its batches never enter play).
+    pub(crate) refused: bool,
+}
+
+/// Shed/served accounting, in queries — the conservation currency.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct FrontdoorCounters {
+    pub(crate) sessions_accepted: usize,
+    pub(crate) sessions_shed: usize,
+    pub(crate) completed_requests: usize,
+    pub(crate) completed_queries: usize,
+    pub(crate) shed_socket_queries: usize,
+    pub(crate) shed_queue_queries: usize,
+    pub(crate) lost_queries: usize,
+}
+
+impl FrontdoorCounters {
+    pub(crate) fn merge(&mut self, o: &FrontdoorCounters) {
+        self.sessions_accepted += o.sessions_accepted;
+        self.sessions_shed += o.sessions_shed;
+        self.completed_requests += o.completed_requests;
+        self.completed_queries += o.completed_queries;
+        self.shed_socket_queries += o.shed_socket_queries;
+        self.shed_queue_queries += o.shed_queue_queries;
+        self.lost_queries += o.lost_queries;
+    }
+}
+
+/// Outcome of one front-door run (either realisation).
+#[derive(Debug, Clone)]
+pub struct FrontdoorReport {
+    /// Workload label ("S sessions × B batches × Q queries @ rate").
+    pub label: String,
+    /// `event` or `thread-per-session(≤N)`.
+    pub mode: String,
+    /// Backpressure-policy label.
+    pub backpressure: String,
+    pub event_threads: usize,
+
+    pub sessions_offered: usize,
+    pub sessions_accepted: usize,
+    /// Sessions refused whole at accept time.
+    pub sessions_shed: usize,
+
+    /// Conservation: `offered = completed + shed_socket + shed_queue +
+    /// lost`, all in queries, measured from the accept clock.
+    pub offered_queries: usize,
+    pub completed_queries: usize,
+    pub shed_socket_queries: usize,
+    pub shed_queue_queries: usize,
+    pub lost_queries: usize,
+    pub completed_requests: usize,
+
+    /// Offered queries over the client-clock span of the plans.
+    pub offered_qps: f64,
+    /// Completed queries over the run's wall (real) / virtual (sim) time.
+    pub goodput_qps: f64,
+    pub wall_s: f64,
+
+    /// Accept-clock percentiles (the honest numbers).
+    pub accept_p50_us: f64,
+    pub accept_p90_us: f64,
+    pub accept_p99_us: f64,
+    /// Submit-clock p99 (the flattering number), kept to expose the gap.
+    pub submit_p99_us: f64,
+
+    /// Fault-plan kill/revive timeline, control-plane vocabulary.
+    pub fault_events: Vec<ScalingEvent>,
+}
+
+impl FrontdoorReport {
+    /// Build a report from the shared counters + dual-clock samples.
+    pub(crate) fn assemble(
+        label: String,
+        config: &FrontdoorConfig,
+        plans: &[SessionPlan],
+        counters: FrontdoorCounters,
+        clock: &mut DualClock,
+        wall_s: f64,
+        fault_events: Vec<ScalingEvent>,
+    ) -> FrontdoorReport {
+        let offered_queries: usize = plans.iter().map(SessionPlan::total_queries).sum();
+        let span_s = plans
+            .iter()
+            .map(|p| (0..p.batches.len()).map(|i| p.ready_us(i)).fold(0.0, f64::max))
+            .fold(0.0, f64::max)
+            / 1e6;
+        let empty = clock.is_empty();
+        FrontdoorReport {
+            label,
+            mode: config.mode.label(),
+            backpressure: config.backpressure.label(),
+            event_threads: config.event_threads,
+            sessions_offered: plans.len(),
+            sessions_accepted: counters.sessions_accepted,
+            sessions_shed: counters.sessions_shed,
+            offered_queries,
+            completed_queries: counters.completed_queries,
+            shed_socket_queries: counters.shed_socket_queries,
+            shed_queue_queries: counters.shed_queue_queries,
+            lost_queries: counters.lost_queries,
+            completed_requests: counters.completed_requests,
+            offered_qps: offered_queries as f64 / span_s.max(1e-9),
+            goodput_qps: counters.completed_queries as f64 / wall_s.max(1e-9),
+            wall_s,
+            accept_p50_us: if empty { 0.0 } else { clock.accept.p50() },
+            accept_p90_us: if empty { 0.0 } else { clock.accept.p90() },
+            accept_p99_us: if empty { 0.0 } else { clock.accept.p99() },
+            submit_p99_us: if empty { 0.0 } else { clock.submit.p99() },
+            fault_events,
+        }
+    }
+
+    /// The end-to-end conservation law, from the accept clock: every
+    /// offered query is completed, refused at the socket, shed in queue,
+    /// or lost to a fault — nothing vanishes.
+    pub fn conserves_queries(&self) -> bool {
+        self.offered_queries
+            == self.completed_queries
+                + self.shed_socket_queries
+                + self.shed_queue_queries
+                + self.lost_queries
+    }
+
+    /// Completed fraction of offered queries (goodput as a ratio).
+    pub fn delivered_fraction(&self) -> f64 {
+        self.completed_queries as f64 / (self.offered_queries as f64).max(1.0)
+    }
+
+    /// Accept-clock p99 minus submit-clock p99: the latency the
+    /// pre-front-door reports were hiding.
+    pub fn omission_gap_us(&self) -> f64 {
+        self.accept_p99_us - self.submit_p99_us
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}] {} | sessions {}/{} (+{} shed) | q: {} offered → {} done, {} shed@socket, \
+             {} shed@queue, {} lost ({:.0} % delivered) | goodput {:.0} q/s | accept p50/p90/p99 \
+             {:.0}/{:.0}/{:.0} µs (submit p99 {:.0} µs, gap {:.0} µs)",
+            self.mode,
+            self.backpressure,
+            self.label,
+            self.sessions_accepted,
+            self.sessions_offered,
+            self.sessions_shed,
+            self.offered_queries,
+            self.completed_queries,
+            self.shed_socket_queries,
+            self.shed_queue_queries,
+            self.lost_queries,
+            self.delivered_fraction() * 100.0,
+            self.goodput_qps,
+            self.accept_p50_us,
+            self.accept_p90_us,
+            self.accept_p99_us,
+            self.submit_p99_us,
+            self.omission_gap_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backpressure_parse_roundtrips_labels() {
+        for p in [
+            BackpressurePolicy::None,
+            BackpressurePolicy::Window { window: 4 },
+            BackpressurePolicy::SocketShed { window: 2, pending_cap: 8 },
+        ] {
+            assert_eq!(BackpressurePolicy::parse(&p.label()), Some(p), "{}", p.label());
+        }
+        for bad in ["", "windows:2", "window", "window:0", "window:x", "socket:2", "none:1"] {
+            assert_eq!(BackpressurePolicy::parse(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn ladder_rungs() {
+        let none = BackpressurePolicy::None;
+        assert_eq!(none.window(), usize::MAX);
+        assert!(none.allows(1_000_000), "no cap, always reads");
+        assert!(!none.reparks_on_admission_shed(), "nowhere to park");
+
+        let win = BackpressurePolicy::Window { window: 2 };
+        assert_eq!(win.window(), 2);
+        assert!(win.allows(1_000_000), "window parks without bound");
+        assert!(win.reparks_on_admission_shed());
+
+        let sock = BackpressurePolicy::SocketShed { window: 2, pending_cap: 3 };
+        assert_eq!(sock.window(), 2);
+        assert_eq!(sock.pending_cap(), Some(3));
+        assert!(sock.allows(2));
+        assert!(!sock.allows(3), "cap reached: refuse at the socket");
+        assert!(sock.reparks_on_admission_shed());
+    }
+
+    #[test]
+    fn report_conservation_and_gap() {
+        let config = FrontdoorConfig::event(2, BackpressurePolicy::Window { window: 2 });
+        let plans = crate::workload::session_plans(
+            1,
+            &crate::workload::RateSchedule::constant(1_000.0),
+            10,
+            4,
+            8,
+            0.0,
+            4,
+        );
+        let mut clock = DualClock::new();
+        for i in 0..30 {
+            clock.record(100.0 + 10.0 * i as f64, 50.0);
+        }
+        let counters = FrontdoorCounters {
+            sessions_accepted: 9,
+            sessions_shed: 1,
+            completed_requests: 30,
+            completed_queries: 240,
+            shed_socket_queries: 48,
+            shed_queue_queries: 24,
+            lost_queries: 8,
+            ..Default::default()
+        };
+        let r = FrontdoorReport::assemble(
+            "test".into(),
+            &config,
+            &plans,
+            counters,
+            &mut clock,
+            2.0,
+            Vec::new(),
+        );
+        assert_eq!(r.offered_queries, 320);
+        assert!(r.conserves_queries(), "{}", r.summary());
+        assert_eq!(r.goodput_qps, 120.0);
+        assert!((r.delivered_fraction() - 0.75).abs() < 1e-12);
+        assert!(r.omission_gap_us() > 0.0);
+        assert!(r.accept_p99_us >= r.accept_p90_us && r.accept_p90_us >= r.accept_p50_us);
+        assert!(r.summary().contains("shed@socket"));
+
+        // Conservation actually fails when a query vanishes.
+        let mut broken = r.clone();
+        broken.lost_queries = 0;
+        assert!(!broken.conserves_queries());
+    }
+}

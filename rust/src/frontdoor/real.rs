@@ -1,0 +1,410 @@
+//! The real front door: a poll-loop reactor on std threads.
+//!
+//! Each event thread owns its share of the sessions (`s % threads`), walks
+//! a time-ordered accept/ready event list against the shared wall clock,
+//! and multiplexes every owned session's batches into the cluster through
+//! the tagged-completion surface
+//! ([`ClusterHandle`](crate::cluster::real::ClusterHandle)) — one channel
+//! per event thread, no per-request thread, no blocking reply slot. The
+//! [`BackpressurePolicy`](super::BackpressurePolicy) ladder runs at
+//! accept/read time; admission refusals from the cluster bounce the batch
+//! back to its parked slot (or drop it, under `None`), retried on the next
+//! completion or on a ≤1 ms tick so a refusal can never deadlock a thread
+//! with nothing in flight.
+//!
+//! The thread-per-session baseline
+//! ([`FrontdoorMode::ThreadPerSession`](super::FrontdoorMode)) is the
+//! pre-front-door architecture kept honest: one blocking thread per
+//! accepted session, window 1, sessions beyond the thread budget refused
+//! at accept. The bench frontier measures exactly this pair.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::backend::BackendFactory;
+use crate::cluster::real::{ClusterHandle, Submit};
+use crate::cluster::ClusterConfig;
+use crate::controlplane::{FaultPlan, ScalingEvent};
+use crate::coordinator::pipeline::{pace_until, Completion};
+use crate::coordinator::DualClock;
+use crate::prng::Rng;
+use crate::rules::types::{MctQuery, World};
+use crate::workload::{QueryFactory, SessionPlan};
+
+use super::{
+    BackpressurePolicy, FrontdoorConfig, FrontdoorCounters, FrontdoorMode, FrontdoorReport,
+    SessionGate,
+};
+
+/// Serve `plans` through the front door against a real cluster and report
+/// on the accept clock. `factory` builds every replica's backend
+/// (homogeneous fleet); `faults` is paced on the wall clock with the
+/// real realisation's drain semantics (a downed replica finishes what it
+/// holds, so nothing is ever lost here — the sim twin models the lossy
+/// variant).
+pub fn run_frontdoor(
+    cluster: ClusterConfig,
+    factory: BackendFactory,
+    world: &World,
+    seed: u64,
+    plans: &[SessionPlan],
+    fd: &FrontdoorConfig,
+    faults: &FaultPlan,
+) -> Result<FrontdoorReport> {
+    let factories = vec![factory; cluster.nodes()];
+    let classes: Vec<String> =
+        cluster.specs.iter().map(|s| s.class.name.to_string()).collect();
+    let label = format!("{} sessions | {}", plans.len(), cluster.label());
+    let payloads = materialise(world, seed, plans);
+    let handle = ClusterHandle::spawn(&cluster, &factories);
+    let t0 = Instant::now();
+
+    let (counters, mut clock, fault_events) = std::thread::scope(|scope| {
+        let h = &handle;
+        let classes = &classes;
+        let fault_driver = scope.spawn(move || drive_faults(h, t0, faults, classes));
+
+        let mut shed = FrontdoorCounters::default();
+        let workers = match fd.mode {
+            FrontdoorMode::Event => {
+                // Partition sessions across event threads by index.
+                let threads = fd.event_threads.min(plans.len().max(1));
+                let mut parts: Vec<Vec<(SessionPlan, Vec<Vec<MctQuery>>)>> =
+                    (0..threads).map(|_| Vec::new()).collect();
+                for (s, payload) in payloads.into_iter().enumerate() {
+                    parts[s % threads].push((plans[s].clone(), payload));
+                }
+                let policy = fd.backpressure;
+                parts
+                    .into_iter()
+                    .map(|part| scope.spawn(move || run_event_thread(h, t0, policy, part)))
+                    .collect::<Vec<_>>()
+            }
+            FrontdoorMode::ThreadPerSession { max_threads } => {
+                // The old architecture: threads are the accept budget. The
+                // first `max_threads` sessions by accept time get one
+                // blocking thread each; everyone else is refused whole.
+                let mut order: Vec<usize> = (0..plans.len()).collect();
+                order.sort_by(|&a, &b| {
+                    plans[a].accept_us.partial_cmp(&plans[b].accept_us).unwrap()
+                });
+                let accepted: std::collections::HashSet<usize> =
+                    order.iter().take(max_threads).copied().collect();
+                let mut workers = Vec::new();
+                for (s, payload) in payloads.into_iter().enumerate() {
+                    if accepted.contains(&s) {
+                        let plan = plans[s].clone();
+                        workers.push(
+                            scope.spawn(move || run_session_thread(h, t0, plan, payload)),
+                        );
+                    } else {
+                        shed.sessions_shed += 1;
+                        shed.shed_socket_queries += plans[s].total_queries();
+                    }
+                }
+                workers
+            }
+        };
+
+        let mut counters = shed;
+        let mut clock = DualClock::new();
+        for w in workers {
+            let (c, dc) = w.join().expect("front-door worker panicked");
+            counters.merge(&c);
+            clock.merge(&dc);
+        }
+        let fault_events = fault_driver.join().expect("fault driver panicked");
+        (counters, clock, fault_events)
+    });
+
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    handle.shutdown();
+
+    let report = FrontdoorReport::assemble(
+        label,
+        fd,
+        plans,
+        counters,
+        &mut clock,
+        wall_s,
+        fault_events,
+    );
+    anyhow::ensure!(report.conserves_queries(), "front door lost queries: {}", report.summary());
+    Ok(report)
+}
+
+/// Pre-materialise every batch's queries so generation cost never sits on
+/// the serving path (the reactor measures the front door, not the RNG).
+fn materialise(world: &World, seed: u64, plans: &[SessionPlan]) -> Vec<Vec<Vec<MctQuery>>> {
+    let factory = QueryFactory::new(world, seed, 24);
+    let mut rng = Rng::new(seed ^ 0xF207_D002);
+    plans
+        .iter()
+        .map(|p| {
+            p.batches
+                .iter()
+                .map(|b| {
+                    (0..b.n_queries)
+                        .map(|_| factory.query(&mut rng, world, p.station))
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn now_us(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e6
+}
+
+/// One accept/ready occurrence on a thread's timeline.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Accept(usize),
+    Ready(usize, usize),
+}
+
+impl Ev {
+    fn rank(&self) -> u8 {
+        // Accepts sort before same-instant readies (a gap-0 stream's first
+        // batch is ready the moment its session is accepted).
+        match self {
+            Ev::Accept(_) => 0,
+            Ev::Ready(..) => 1,
+        }
+    }
+}
+
+/// Per-thread reactor state: the sessions it owns, their ladder gates, and
+/// this connection's parked-batch budget.
+struct Reactor<'a> {
+    handle: &'a ClusterHandle,
+    t0: Instant,
+    policy: BackpressurePolicy,
+    sessions: Vec<(SessionPlan, Vec<Vec<MctQuery>>)>,
+    gates: Vec<SessionGate>,
+    thread_parked: usize,
+    in_flight: usize,
+    counters: FrontdoorCounters,
+    clock: DualClock,
+    ctx: mpsc::Sender<Completion>,
+}
+
+impl Reactor<'_> {
+    /// Submit the session's parked batches while its window has room.
+    /// An admission refusal either bounces the batch back to its parked
+    /// slot (ladder policies — the refusal *is* backpressure) or drops it
+    /// as shed-in-queue (`None` — nowhere to hold it).
+    fn drain_session(&mut self, s: usize) {
+        let window = self.policy.window();
+        while self.gates[s].in_flight < window {
+            let Some(&b) = self.gates[s].parked.front() else { break };
+            let station = self.sessions[s].0.station;
+            let queries = self.sessions[s].1[b].clone();
+            let n_queries = queries.len();
+            let id = ((s as u64) << 32) | b as u64;
+            match self.handle.try_submit(station, queries, id, &self.ctx) {
+                Submit::Submitted { .. } => {
+                    self.gates[s].parked.pop_front();
+                    self.thread_parked -= 1;
+                    self.gates[s].in_flight += 1;
+                    self.in_flight += 1;
+                }
+                Submit::Shed => {
+                    if self.policy.reparks_on_admission_shed() {
+                        return; // stays parked; retried on completion/tick
+                    }
+                    self.gates[s].parked.pop_front();
+                    self.thread_parked -= 1;
+                    self.counters.shed_queue_queries += n_queries;
+                }
+            }
+        }
+    }
+
+    fn drain_all(&mut self) {
+        for s in 0..self.sessions.len() {
+            if !self.gates[s].parked.is_empty() {
+                self.drain_session(s);
+            }
+        }
+    }
+
+    fn complete(&mut self, c: Completion) {
+        let s = (c.id >> 32) as usize;
+        let b = (c.id & 0xFFFF_FFFF) as usize;
+        // Accept clock: from when the client had the batch, not from
+        // submission. The max() absorbs sub-µs cross-clock jitter.
+        let accept_lat = (now_us(self.t0) - self.sessions[s].0.ready_us(b)).max(c.latency_us);
+        self.clock.record(accept_lat, c.latency_us);
+        self.gates[s].in_flight -= 1;
+        self.in_flight -= 1;
+        self.counters.completed_requests += 1;
+        self.counters.completed_queries += c.n_queries;
+        self.handle.note_completion(&c);
+    }
+}
+
+/// The event loop: fire due accept/ready events, then wait on the
+/// completion channel with a timeout bounded by the next event (≤1 ms, so
+/// reparked batches retry even when this thread has nothing in flight).
+fn run_event_thread(
+    handle: &ClusterHandle,
+    t0: Instant,
+    policy: BackpressurePolicy,
+    sessions: Vec<(SessionPlan, Vec<Vec<MctQuery>>)>,
+) -> (FrontdoorCounters, DualClock) {
+    let (ctx, crx) = mpsc::channel::<Completion>();
+    let mut events: Vec<(f64, Ev)> = Vec::new();
+    for (s, (plan, _)) in sessions.iter().enumerate() {
+        events.push((plan.accept_us, Ev::Accept(s)));
+        for b in 0..plan.batches.len() {
+            events.push((plan.ready_us(b), Ev::Ready(s, b)));
+        }
+    }
+    events.sort_by(|x, y| {
+        x.0.partial_cmp(&y.0).unwrap().then_with(|| x.1.rank().cmp(&y.1.rank()))
+    });
+
+    let n = sessions.len();
+    let mut r = Reactor {
+        handle,
+        t0,
+        policy,
+        sessions,
+        gates: vec![SessionGate::default(); n],
+        thread_parked: 0,
+        in_flight: 0,
+        counters: FrontdoorCounters::default(),
+        clock: DualClock::new(),
+        ctx,
+    };
+
+    let mut next_ev = 0usize;
+    loop {
+        while next_ev < events.len() && events[next_ev].0 <= now_us(t0) {
+            let (_, ev) = events[next_ev];
+            next_ev += 1;
+            match ev {
+                Ev::Accept(s) => {
+                    if r.policy.allows(r.thread_parked) {
+                        r.counters.sessions_accepted += 1;
+                    } else {
+                        // Rung 3 at the front edge: the connection buffer
+                        // is full, so the whole session is refused before
+                        // any of it is read.
+                        r.gates[s].refused = true;
+                        r.counters.sessions_shed += 1;
+                        r.counters.shed_socket_queries += r.sessions[s].0.total_queries();
+                    }
+                }
+                Ev::Ready(s, b) => {
+                    if r.gates[s].refused {
+                        continue;
+                    }
+                    let n_queries = r.sessions[s].0.batches[b].n_queries;
+                    if r.policy.allows(r.thread_parked) {
+                        r.gates[s].parked.push_back(b);
+                        r.thread_parked += 1;
+                        r.drain_session(s);
+                    } else {
+                        r.counters.shed_socket_queries += n_queries;
+                    }
+                }
+            }
+        }
+        if next_ev == events.len() && r.in_flight == 0 && r.thread_parked == 0 {
+            break;
+        }
+
+        let wait_us = if next_ev == events.len() {
+            1_000.0
+        } else {
+            (events[next_ev].0 - now_us(t0)).clamp(50.0, 1_000.0)
+        };
+        match crx.recv_timeout(Duration::from_micros(wait_us as u64)) {
+            Ok(c) => {
+                r.complete(c);
+                while let Ok(c) = crx.try_recv() {
+                    r.complete(c);
+                }
+                r.drain_all();
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if r.thread_parked > 0 {
+                    r.drain_all();
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                unreachable!("reactor owns its completion sender")
+            }
+        }
+    }
+    (r.counters, r.clock)
+}
+
+/// One blocking baseline thread: window-1 serial over its session's
+/// batches, retrying admission refusals on a 500 µs poll (a blocked
+/// connection, in the old architecture's terms).
+fn run_session_thread(
+    handle: &ClusterHandle,
+    t0: Instant,
+    plan: SessionPlan,
+    payloads: Vec<Vec<MctQuery>>,
+) -> (FrontdoorCounters, DualClock) {
+    let (ctx, crx) = mpsc::channel::<Completion>();
+    let mut counters = FrontdoorCounters { sessions_accepted: 1, ..Default::default() };
+    let mut clock = DualClock::new();
+    for (b, queries) in payloads.into_iter().enumerate() {
+        pace_until(t0, plan.ready_us(b));
+        loop {
+            match handle.try_submit(plan.station, queries.clone(), b as u64, &ctx) {
+                Submit::Submitted { .. } => {
+                    let c = crx.recv().expect("tagged completion");
+                    let accept_lat =
+                        (now_us(t0) - plan.ready_us(b)).max(c.latency_us);
+                    clock.record(accept_lat, c.latency_us);
+                    counters.completed_requests += 1;
+                    counters.completed_queries += c.n_queries;
+                    handle.note_completion(&c);
+                    break;
+                }
+                Submit::Shed => std::thread::sleep(Duration::from_micros(500)),
+            }
+        }
+    }
+    (counters, clock)
+}
+
+/// Pace the fault plan on the wall clock: kill/revive via the handle's
+/// liveness mask (drain semantics — a downed replica finishes what it
+/// holds) and return the control-plane-shaped timeline.
+fn drive_faults(
+    handle: &ClusterHandle,
+    t0: Instant,
+    faults: &FaultPlan,
+    classes: &[String],
+) -> Vec<ScalingEvent> {
+    let mut timeline: Vec<(f64, usize, bool)> = Vec::new();
+    for f in faults.faults() {
+        timeline.push((f.at_us, f.node, false));
+        timeline.push((f.at_us + f.down_us, f.node, true));
+    }
+    timeline.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut up = vec![true; handle.n_nodes()];
+    let mut events = Vec::new();
+    for (t, node, live) in timeline {
+        pace_until(t0, t);
+        handle.set_up(node, live);
+        up[node] = live;
+        let n_up = up.iter().filter(|u| **u).count();
+        events.push(if live {
+            ScalingEvent::recover(t, &classes[node], node, n_up)
+        } else {
+            ScalingEvent::fail(t, &classes[node], node, n_up)
+        });
+    }
+    events
+}

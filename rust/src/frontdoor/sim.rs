@@ -1,0 +1,483 @@
+//! The front door's DES twin: the same session plans, the same ladder
+//! rules, the same router/admission policies as [`super::real`], run
+//! against modeled single-FIFO replicas
+//! ([`SimNodeSpec::request_service_us`]) on a virtual clock.
+//!
+//! Faults here are the *lossy* variant the real realisation's drain
+//! semantics can't produce: a kill loses the request in service (its
+//! window slot is freed) and reroutes the node's queue among the live
+//! replicas — queries are lost only when no replica is live to take them.
+//! Both realisations satisfy the same conservation law; they differ only
+//! in which shed/lost bucket a fault lands in, which is exactly what the
+//! conservation property test pins down.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet, VecDeque};
+
+use crate::cluster::{
+    update_service_estimate, AdmissionPolicy, ClusterSimConfig, Router, SimNodeSpec,
+};
+use crate::controlplane::{FaultPlan, ScalingEvent};
+use crate::coordinator::{DualClock, Overheads};
+use crate::workload::SessionPlan;
+
+use super::{
+    BackpressurePolicy, FrontdoorConfig, FrontdoorCounters, FrontdoorMode, FrontdoorReport,
+    SessionGate,
+};
+
+/// Everything one simulated front-door run needs.
+#[derive(Debug, Clone)]
+pub struct FrontdoorSimConfig {
+    pub cluster: ClusterSimConfig,
+    pub frontdoor: FrontdoorConfig,
+    pub faults: FaultPlan,
+}
+
+/// One DES occurrence. Ordering exists for the heap tuple; ties on the
+/// nanosecond key are broken by push sequence, never by variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    Accept { session: usize },
+    Ready { session: usize, batch: usize },
+    Done { node: usize, epoch: u64 },
+    Kill { node: usize },
+    Revive { node: usize },
+}
+
+/// One admitted request sitting in (or at the head of) a replica's FIFO.
+#[derive(Debug, Clone, Copy)]
+struct Req {
+    session: usize,
+    batch: usize,
+    n_queries: usize,
+    t_submit_us: f64,
+}
+
+/// A modeled replica: one FIFO server with drain-rate-matched service
+/// times, a liveness flag, and an epoch that cancels the in-service
+/// completion when a kill interrupts it.
+#[derive(Debug, Clone, Default)]
+struct SimNode {
+    up: bool,
+    epoch: u64,
+    in_service: Option<Req>,
+    queue: VecDeque<Req>,
+    est_service_us: f64,
+}
+
+impl SimNode {
+    fn depth(&self) -> usize {
+        self.queue.len() + usize::from(self.in_service.is_some())
+    }
+}
+
+struct Des<'a> {
+    plans: &'a [SessionPlan],
+    policy: BackpressurePolicy,
+    threads: usize,
+    /// `ThreadPerSession` accept budget: the sessions that got a thread.
+    accepted_set: Option<HashSet<usize>>,
+    router: Router,
+    admission: AdmissionPolicy,
+    specs: &'a [SimNodeSpec],
+    overheads: Overheads,
+    nodes: Vec<SimNode>,
+    gates: Vec<SessionGate>,
+    thread_parked: Vec<usize>,
+    counters: FrontdoorCounters,
+    clock: DualClock,
+    heap: BinaryHeap<Reverse<(u64, u64, Event)>>,
+    seq: u64,
+    fault_events: Vec<ScalingEvent>,
+}
+
+impl Des<'_> {
+    fn push(&mut self, t_us: f64, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse(((t_us * 1_000.0).round() as u64, self.seq, ev)));
+    }
+
+    fn n_up(&self) -> usize {
+        self.nodes.iter().filter(|n| n.up).count()
+    }
+
+    /// Start service (node idle) or join the FIFO. `t_submit_us` is kept
+    /// from admission time, so latency includes the queue wait — the same
+    /// clock the real replica's tagged completion carries.
+    fn enqueue(&mut self, node: usize, req: Req, t: f64) {
+        if self.nodes[node].in_service.is_none() {
+            let service_us = self.specs[node].request_service_us(&self.overheads, req.n_queries);
+            self.nodes[node].in_service = Some(req);
+            let epoch = self.nodes[node].epoch;
+            self.push(t + service_us, Event::Done { node, epoch });
+        } else {
+            self.nodes[node].queue.push_back(req);
+        }
+    }
+
+    /// The ladder's drain rule, identical to the real reactor: submit the
+    /// session's parked batches while its window has room; an admission
+    /// refusal bounces the batch (ladder policies) or drops it as
+    /// shed-in-queue (`None`).
+    fn drain_session(&mut self, s: usize, t: f64) {
+        let window = self.policy.window();
+        while self.gates[s].in_flight < window {
+            let Some(&b) = self.gates[s].parked.front() else { break };
+            let n_queries = self.plans[s].batches[b].n_queries;
+            let depths: Vec<usize> = self.nodes.iter().map(SimNode::depth).collect();
+            let live: Vec<bool> = self.nodes.iter().map(|n| n.up).collect();
+            let target = self.router.route_up(self.plans[s].station, &depths, Some(&live));
+            let admitted = target
+                .map(|n| self.admission.admits(depths[n], self.nodes[n].est_service_us))
+                .unwrap_or(false);
+            let Some(node) = target.filter(|_| admitted) else {
+                if self.policy.reparks_on_admission_shed() {
+                    return; // stays parked; retried when a completion frees room
+                }
+                self.gates[s].parked.pop_front();
+                self.thread_parked[s % self.threads] -= 1;
+                self.counters.shed_queue_queries += n_queries;
+                continue;
+            };
+            self.gates[s].parked.pop_front();
+            self.thread_parked[s % self.threads] -= 1;
+            self.gates[s].in_flight += 1;
+            self.enqueue(node, Req { session: s, batch: b, n_queries, t_submit_us: t }, t);
+        }
+    }
+
+    fn drain_all(&mut self, t: f64) {
+        for s in 0..self.plans.len() {
+            if !self.gates[s].parked.is_empty() {
+                self.drain_session(s, t);
+            }
+        }
+    }
+
+    fn accept(&mut self, s: usize) {
+        let refused = match &self.accepted_set {
+            // Thread-per-session: no thread left ⇒ refused whole.
+            Some(set) => !set.contains(&s),
+            // Event mode: rung 3 of the ladder at the front edge.
+            None => !self.policy.allows(self.thread_parked[s % self.threads]),
+        };
+        if refused {
+            self.gates[s].refused = true;
+            self.counters.sessions_shed += 1;
+            self.counters.shed_socket_queries += self.plans[s].total_queries();
+        } else {
+            self.counters.sessions_accepted += 1;
+        }
+    }
+
+    fn ready(&mut self, s: usize, b: usize, t: f64) {
+        if self.gates[s].refused {
+            return;
+        }
+        let n_queries = self.plans[s].batches[b].n_queries;
+        if self.policy.allows(self.thread_parked[s % self.threads]) {
+            self.gates[s].parked.push_back(b);
+            self.thread_parked[s % self.threads] += 1;
+            self.drain_session(s, t);
+        } else {
+            self.counters.shed_socket_queries += n_queries;
+        }
+    }
+
+    fn complete(&mut self, node: usize, epoch: u64, t: f64) {
+        if self.nodes[node].epoch != epoch {
+            return; // cancelled by a kill
+        }
+        let req = self.nodes[node].in_service.take().expect("live Done ⇒ in service");
+        let latency_us = t - req.t_submit_us;
+        let accept_lat =
+            (t - self.plans[req.session].ready_us(req.batch)).max(latency_us);
+        self.clock.record(accept_lat, latency_us);
+        self.counters.completed_requests += 1;
+        self.counters.completed_queries += req.n_queries;
+        self.gates[req.session].in_flight -= 1;
+        if let Some(next) = self.nodes[node].queue.pop_front() {
+            let service_us = self.specs[node].request_service_us(&self.overheads, next.n_queries);
+            self.nodes[node].in_service = Some(next);
+            let epoch = self.nodes[node].epoch;
+            self.push(t + service_us, Event::Done { node, epoch });
+        }
+        let prev = self.nodes[node].est_service_us;
+        self.nodes[node].est_service_us =
+            update_service_estimate(prev, latency_us, self.nodes[node].depth());
+        self.drain_all(t);
+    }
+
+    fn kill(&mut self, node: usize, t: f64) {
+        if !self.nodes[node].up {
+            return;
+        }
+        self.nodes[node].up = false;
+        self.nodes[node].epoch += 1;
+        // The request on the engine dies with the node; its window slot is
+        // freed so the session keeps streaming.
+        if let Some(req) = self.nodes[node].in_service.take() {
+            self.counters.lost_queries += req.n_queries;
+            self.gates[req.session].in_flight -= 1;
+        }
+        // Queued requests were already admitted once — reroute them among
+        // the live replicas without a second admission pass; they are lost
+        // only if nobody is live to take them.
+        let orphans: Vec<Req> = self.nodes[node].queue.drain(..).collect();
+        for req in orphans {
+            let depths: Vec<usize> = self.nodes.iter().map(SimNode::depth).collect();
+            let live: Vec<bool> = self.nodes.iter().map(|n| n.up).collect();
+            let station = self.plans[req.session].station;
+            match self.router.route_up(station, &depths, Some(&live)) {
+                Some(target) => self.enqueue(target, req, t),
+                None => {
+                    self.counters.lost_queries += req.n_queries;
+                    self.gates[req.session].in_flight -= 1;
+                }
+            }
+        }
+        let up_after = self.n_up();
+        self.fault_events.push(ScalingEvent::fail(
+            t,
+            self.specs[node].class_name,
+            node,
+            up_after,
+        ));
+    }
+
+    fn revive(&mut self, node: usize, t: f64) {
+        if self.nodes[node].up {
+            return;
+        }
+        self.nodes[node].up = true;
+        let up_after = self.n_up();
+        self.fault_events.push(ScalingEvent::recover(
+            t,
+            self.specs[node].class_name,
+            node,
+            up_after,
+        ));
+        self.drain_all(t);
+    }
+}
+
+/// Run the session plans through the simulated front door. Deterministic:
+/// same config + plans ⇒ bit-identical report.
+pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> FrontdoorReport {
+    let threads = match cfg.frontdoor.mode {
+        FrontdoorMode::Event => cfg.frontdoor.event_threads.max(1),
+        FrontdoorMode::ThreadPerSession { .. } => 1,
+    };
+    let accepted_set = match cfg.frontdoor.mode {
+        FrontdoorMode::ThreadPerSession { max_threads } => {
+            let mut order: Vec<usize> = (0..plans.len()).collect();
+            order.sort_by(|&a, &b| {
+                plans[a].accept_us.partial_cmp(&plans[b].accept_us).unwrap()
+            });
+            Some(order.into_iter().take(max_threads).collect::<HashSet<usize>>())
+        }
+        FrontdoorMode::Event => None,
+    };
+    let n_nodes = cfg.cluster.specs.len();
+    let mut des = Des {
+        plans,
+        policy: cfg.frontdoor.backpressure,
+        threads,
+        accepted_set,
+        router: cfg.cluster.router(),
+        admission: cfg.cluster.admission,
+        specs: &cfg.cluster.specs,
+        overheads: cfg.cluster.overheads.clone(),
+        nodes: vec![SimNode { up: true, ..Default::default() }; n_nodes],
+        gates: vec![SessionGate::default(); plans.len()],
+        thread_parked: vec![0; threads],
+        counters: FrontdoorCounters::default(),
+        clock: DualClock::new(),
+        heap: BinaryHeap::new(),
+        seq: 0,
+        fault_events: Vec::new(),
+    };
+    for (s, p) in plans.iter().enumerate() {
+        des.push(p.accept_us, Event::Accept { session: s });
+        for b in 0..p.batches.len() {
+            des.push(p.ready_us(b), Event::Ready { session: s, batch: b });
+        }
+    }
+    for f in cfg.faults.faults() {
+        des.push(f.at_us, Event::Kill { node: f.node });
+        des.push(f.at_us + f.down_us, Event::Revive { node: f.node });
+    }
+
+    let mut t_end_us = 0.0f64;
+    while let Some(Reverse((key, _, ev))) = des.heap.pop() {
+        let t = key as f64 / 1_000.0;
+        t_end_us = t_end_us.max(t);
+        match ev {
+            Event::Accept { session } => des.accept(session),
+            Event::Ready { session, batch } => des.ready(session, batch, t),
+            Event::Done { node, epoch } => des.complete(node, epoch, t),
+            Event::Kill { node } => des.kill(node, t),
+            Event::Revive { node } => des.revive(node, t),
+        }
+    }
+    // Batches still parked when the heap runs dry can only mean the fleet
+    // ended the run dead (no completion will ever drain them): count them
+    // shed-in-queue so conservation stays structural, never silent.
+    for s in 0..plans.len() {
+        while let Some(b) = des.gates[s].parked.pop_front() {
+            des.counters.shed_queue_queries += plans[s].batches[b].n_queries;
+        }
+    }
+
+    let label = format!("{} sessions | {}", plans.len(), cfg.cluster.label());
+    let counters = des.counters;
+    let fault_events = des.fault_events;
+    let report = FrontdoorReport::assemble(
+        label,
+        &cfg.frontdoor,
+        plans,
+        counters,
+        &mut des.clock,
+        t_end_us / 1e6,
+        fault_events,
+    );
+    debug_assert!(report.conserves_queries(), "{}", report.summary());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::RoutePolicy;
+    use crate::workload::{session_plans, RateSchedule};
+
+    fn burst_plans(seed: u64, sessions: usize, batches: usize, batch_q: usize) -> Vec<SessionPlan> {
+        session_plans(seed, &RateSchedule::constant(1e9), sessions, batches, batch_q, 0.0, 8)
+    }
+
+    fn event_cfg(nodes: usize, policy: BackpressurePolicy) -> FrontdoorSimConfig {
+        FrontdoorSimConfig {
+            cluster: ClusterSimConfig::v2_cloud(nodes, 2)
+                .with_route(RoutePolicy::RoundRobin)
+                .with_admission(AdmissionPolicy::QueueCap(24)),
+            frontdoor: FrontdoorConfig::event(2, policy),
+            faults: FaultPlan::none(),
+        }
+    }
+
+    #[test]
+    fn sim_frontdoor_is_deterministic() {
+        let cfg = event_cfg(2, BackpressurePolicy::SocketShed { window: 2, pending_cap: 4 });
+        let plans = burst_plans(11, 20, 8, 8);
+        let a = sim_frontdoor(&cfg, &plans);
+        let b = sim_frontdoor(&cfg, &plans);
+        assert!(a.conserves_queries(), "{}", a.summary());
+        assert_eq!(a.completed_queries, b.completed_queries);
+        assert_eq!(a.shed_socket_queries, b.shed_socket_queries);
+        assert_eq!(a.shed_queue_queries, b.shed_queue_queries);
+        assert_eq!(a.accept_p99_us.to_bits(), b.accept_p99_us.to_bits());
+        assert_eq!(a.goodput_qps.to_bits(), b.goodput_qps.to_bits());
+    }
+
+    #[test]
+    fn kill_loses_exactly_the_request_in_service() {
+        // Burst everything at t≈0, then kill node 0 mid-way through its
+        // first service: the in-service request dies with the node (one
+        // batch of 8 queries), the node's queue reroutes to node 1, and
+        // the run still terminates and conserves.
+        let spec = SimNodeSpec::v2_cloud(2);
+        let mut cfg = event_cfg(2, BackpressurePolicy::Window { window: 2 });
+        cfg.cluster.admission = AdmissionPolicy::Open;
+        let svc_us = spec.request_service_us(&cfg.cluster.overheads, 8);
+        cfg.faults = FaultPlan::kill(0, 0.5 * svc_us, 50.0 * svc_us);
+        let plans = burst_plans(3, 12, 6, 8);
+        let r = sim_frontdoor(&cfg, &plans);
+        assert!(r.conserves_queries(), "{}", r.summary());
+        assert_eq!(r.lost_queries, 8, "{}", r.summary());
+        assert_eq!(r.fault_events.len(), 2);
+        assert_eq!(r.completed_queries, r.offered_queries - 8);
+        assert_eq!(r.sessions_accepted, 12);
+        assert!(r.fault_events[0].line().contains("fail"));
+    }
+
+    #[test]
+    fn revive_resumes_parked_sessions_and_the_accept_clock_shows_the_outage() {
+        // A single replica killed mid-service for a full virtual second:
+        // batches park behind the window through the outage, the revive
+        // drains them, and the accept clock — unlike the submit clock —
+        // carries the wait.
+        let spec = SimNodeSpec::v2_cloud(2);
+        let mut cfg = event_cfg(1, BackpressurePolicy::Window { window: 1 });
+        cfg.cluster = ClusterSimConfig::v2_cloud(1, 2)
+            .with_route(RoutePolicy::RoundRobin)
+            .with_admission(AdmissionPolicy::Open);
+        let svc_us = spec.request_service_us(&cfg.cluster.overheads, 8);
+        let down_us = 1e6;
+        cfg.faults = FaultPlan::kill(0, 0.5 * svc_us, down_us);
+        // Two window-1 sessions: at the kill, session 0's batch is in
+        // service (lost with the node) and session 1's batch is queued
+        // behind it (orphaned with no live replica to take it — lost too).
+        let plans = burst_plans(5, 2, 4, 8);
+        let r = sim_frontdoor(&cfg, &plans);
+        assert!(r.conserves_queries(), "{}", r.summary());
+        assert_eq!(r.lost_queries, 16, "{}", r.summary());
+        assert_eq!(r.completed_queries, r.offered_queries - 16);
+        assert_eq!(r.fault_events.len(), 2);
+        assert!(r.fault_events[1].line().contains("recover"));
+        assert!(
+            r.accept_p99_us > 0.5 * down_us,
+            "the outage wait must surface on the accept clock: p99 {} µs",
+            r.accept_p99_us
+        );
+        assert!(r.omission_gap_us() > 0.0, "{}", r.summary());
+    }
+
+    #[test]
+    fn backpressure_policies_separate_in_the_sim() {
+        // The engineered overload scenario the crossval ranks: 2× offered
+        // load, bursty 16-batch sessions, queue-capped replicas. Window
+        // completes the most (lossless parking), None loses admission
+        // refusals, SocketShed turns sessions away whole — while on the
+        // accept clock SocketShed is fastest (it only serves what fits)
+        // and Window slowest (it queues the whole backlog client-side).
+        let spec = SimNodeSpec::v2_cloud(2);
+        let o = ClusterSimConfig::v2_cloud(2, 2).overheads;
+        let node_rps = spec.capacity_qps(&o, 16) / 16.0;
+        let rate = 2.0 * 2.0 * node_rps / 16.0; // 2× the 2-node fleet, 16 req/session
+        let plans = session_plans(7, &RateSchedule::constant(rate), 40, 16, 16, 0.0, 8);
+        let run = |policy| sim_frontdoor(&event_cfg(2, policy), &plans);
+        let none = run(BackpressurePolicy::None);
+        let window = run(BackpressurePolicy::Window { window: 2 });
+        let socket = run(BackpressurePolicy::SocketShed { window: 2, pending_cap: 2 });
+
+        for r in [&none, &window, &socket] {
+            assert!(r.conserves_queries(), "{}", r.summary());
+        }
+        assert_eq!(window.completed_queries, window.offered_queries, "window is lossless");
+        assert!(none.shed_queue_queries > 0, "{}", none.summary());
+        assert!(socket.shed_socket_queries > 0, "{}", socket.summary());
+        assert!(socket.sessions_shed > 0, "socket refuses sessions whole");
+        // Goodput ranking: window > none > socket.
+        assert!(
+            window.completed_queries > none.completed_queries
+                && none.completed_queries > socket.completed_queries,
+            "completed: window {} none {} socket {}",
+            window.completed_queries,
+            none.completed_queries,
+            socket.completed_queries
+        );
+        // Accept-clock tail ranking: socket < none < window.
+        assert!(
+            socket.accept_p99_us < none.accept_p99_us
+                && none.accept_p99_us < window.accept_p99_us,
+            "accept p99: socket {} none {} window {}",
+            socket.accept_p99_us,
+            none.accept_p99_us,
+            window.accept_p99_us
+        );
+        // The omission gap is what the accept clock surfaces: under the
+        // window policy batches wait parked far longer than they queue.
+        assert!(window.omission_gap_us() > 0.0, "{}", window.summary());
+    }
+}

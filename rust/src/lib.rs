@@ -29,6 +29,7 @@ pub mod costmodel;
 pub mod cpu_baseline;
 pub mod encoder;
 pub mod erbium;
+pub mod frontdoor;
 pub mod nfa;
 pub mod prng;
 pub mod routescoring;

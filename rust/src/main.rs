@@ -18,6 +18,11 @@
 //!                           [--autoscale static|reactive|sla|cost]   (control-plane DES)
 //!                           [--profile diurnal:BASE:AMP:PERIOD_S | const:RPS]
 //!                           [--faults N] [--hetero] [--tick-us T] [--max N] [--feeders F]
+//! erbium-search frontdoor   [--sessions N] [--batches B] [--batch Q] [--rate SESSIONS_PER_S]
+//!                           [--backpressure none|window|socket] [--window W] [--pending P]
+//!                           [--threads T] [--nodes N] [--cap Q] [--faults N] [--seed S]
+//!                           [--baseline]  (thread-per-session door, T threads)
+//!                           [--des]       (run the DES twin instead of the real reactor)
 //! erbium-search costs       [--uqps UQ_PER_S] [--node-qps QPS]
 //! ```
 
@@ -40,6 +45,9 @@ use erbium_search::coordinator::{
     Topology,
 };
 use erbium_search::erbium::{Backend, ErbiumEngine, FpgaModel};
+use erbium_search::frontdoor::{
+    run_frontdoor, sim_frontdoor, BackpressurePolicy, FrontdoorConfig, FrontdoorSimConfig,
+};
 use erbium_search::nfa::constraint_gen::{estimate, HardwareConfig};
 use erbium_search::nfa::optimiser::OrderStrategy;
 use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
@@ -49,7 +57,7 @@ use erbium_search::rules::standard::{Schema, StandardVersion};
 use erbium_search::rules::serde_text;
 use erbium_search::runtime::Runtime;
 use erbium_search::workload::{
-    generate_trace, random_query, PoissonSource, RateSchedule, TraceConfig,
+    generate_trace, random_query, session_plans, PoissonSource, RateSchedule, TraceConfig,
 };
 
 struct Args(Vec<String>);
@@ -421,6 +429,78 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+        "frontdoor" => {
+            // The event-driven session door in front of the cluster —
+            // real poll-loop reactor by default, DES twin with --des,
+            // thread-per-session baseline with --baseline.
+            let sessions = args.usize("--sessions", 64);
+            let batches = args.usize("--batches", 8);
+            let batch = args.usize("--batch", 16);
+            let window = args.usize("--window", 4);
+            let pending = args.usize("--pending", 2 * window);
+            let policy = match args.get("--backpressure") {
+                None | Some("window") => BackpressurePolicy::Window { window },
+                Some("none") => BackpressurePolicy::None,
+                Some("socket") => BackpressurePolicy::SocketShed { window, pending_cap: pending },
+                Some(p) => anyhow::bail!("bad --backpressure {p:?} (none|window|socket)"),
+            };
+            let fd = if args.flag("--baseline") {
+                FrontdoorConfig::thread_per_session(args.usize("--threads", 16))
+            } else {
+                FrontdoorConfig::event(args.usize("--threads", 2), policy)
+            };
+            let seed = args.u64("--seed", 1);
+            let rate = args.f64("--rate", 2_000.0);
+            let nodes = args.usize("--nodes", 2);
+            let admission = match args.get("--cap").and_then(|v| v.parse().ok()) {
+                Some(cap) => AdmissionPolicy::QueueCap(cap),
+                None => AdmissionPolicy::Open,
+            };
+            let span_us = sessions as f64 / rate * 1e6;
+            let n_faults = args.usize("--faults", 0);
+            let faults = if n_faults > 0 {
+                FaultPlan::seeded(seed, nodes, span_us, n_faults, span_us / 10.0)
+            } else {
+                FaultPlan::none()
+            };
+            let schedule = RateSchedule::constant(rate);
+            let r = if args.flag("--des") {
+                // Synthetic stations — the DES never materialises queries.
+                let plans = session_plans(seed, &schedule, sessions, batches, batch, 0.0, 16);
+                let cfg = FrontdoorSimConfig {
+                    cluster: ClusterSimConfig::v2_cloud(nodes, 2)
+                        .with_route(RoutePolicy::RoundRobin)
+                        .with_admission(admission),
+                    frontdoor: fd,
+                    faults,
+                };
+                sim_frontdoor(&cfg, &plans)
+            } else {
+                let (_, world, schema, rs) = setup(&args);
+                let (nfa, stats) = compile_rule_set(&schema, &rs, &CompileOptions::default());
+                let model = FpgaModel::new(HardwareConfig::v2_aws(4), stats.depth);
+                let factory: BackendFactory = native_backend_factory(nfa, model, 28, 64);
+                let node = PipelineConfig::new(Topology::new(2, 1, 1, 4))
+                    .with_aggregation(AggregationPolicy::DrainQueue);
+                let cluster = ClusterConfig::new(nodes, node)
+                    .with_route(RoutePolicy::RoundRobin)
+                    .with_admission(admission);
+                let plans = session_plans(
+                    seed,
+                    &schedule,
+                    sessions,
+                    batches,
+                    batch,
+                    0.0,
+                    world.airports.len(),
+                );
+                run_frontdoor(cluster, factory, &world, seed, &plans, &fd, &faults)?
+            };
+            println!("{}", r.summary());
+            for e in &r.fault_events {
+                println!("{}", e.line());
+            }
+        }
         "costs" => {
             use erbium_search::costmodel as cm;
             for (title, rows) in [("Table 2", cm::table2()), ("Table 3", cm::table3())] {
@@ -437,7 +517,9 @@ fn main() -> anyhow::Result<()> {
             }
             // Fleet provisioning, derived from (measured or modeled) node
             // saturation rather than transcribed §6.1 constants.
-            let node_qps = args.f64("--node-qps", cm::modeled_v2_node_qps());
+            // Prefer the measured hot-path trajectory (BENCH_hotpath.json)
+            // over the analytic datapath model when an artifact is around.
+            let node_qps = args.f64("--node-qps", cm::default_node_qps());
             let target = cm::fleet_mct_demand_qps(args.f64("--uqps", cm::DEFAULT_UQ_PER_S));
             let reduced = cm::freed_server_count(cm::DE_SERVERS);
             println!(
@@ -463,7 +545,7 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             println!("erbium-search — see module docs; subcommands:");
-            println!("  gen-rules | compile | query | replay | fleet | costs");
+            println!("  gen-rules | compile | query | replay | fleet | frontdoor | costs");
             println!("run `cargo bench` for the paper's figures/tables,");
             println!("`cargo run --release --example e2e_search` for the end-to-end driver.");
         }

@@ -413,6 +413,74 @@ impl ArrivalSource for TraceSource {
     }
 }
 
+/// One query batch within a session's stream: ready `offset_us` after the
+/// session is accepted, carrying `n_queries` single-station queries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionBatch {
+    pub offset_us: f64,
+    pub n_queries: usize,
+}
+
+/// One front-door client session: accepted at `accept_us`, then a stream
+/// of query batches at fixed offsets from the accept. This is the unit
+/// the front door multiplexes — and the unit the **accept clock** starts
+/// from: a batch's honest latency is measured from `accept_us +
+/// offset_us` (when the client *had* it), not from when the serving stack
+/// deigned to read it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionPlan {
+    pub accept_us: f64,
+    pub station: u32,
+    pub batches: Vec<SessionBatch>,
+}
+
+impl SessionPlan {
+    /// Queries this session offers over its lifetime.
+    pub fn total_queries(&self) -> usize {
+        self.batches.iter().map(|b| b.n_queries).sum()
+    }
+
+    /// Client-clock instant batch `i` becomes ready.
+    pub fn ready_us(&self, batch: usize) -> f64 {
+        self.accept_us + self.batches[batch].offset_us
+    }
+}
+
+/// Seeded session arrival process on top of a [`RateSchedule`]: session
+/// accepts are an inhomogeneous Poisson stream (the same
+/// [`RateSchedule::poisson_gap_us`] re-timing step [`ScheduledSource`]
+/// uses), stations zipf-skewed as in [`PoissonSource`], and each session
+/// carries `batches_per_session` batches of `batch_queries` queries
+/// spaced `batch_gap_us` apart. A gap of 0 is the bursty client whose
+/// whole stream is ready at accept — the workload that makes the
+/// backpressure policies distinguishable.
+pub fn session_plans(
+    seed: u64,
+    schedule: &RateSchedule,
+    n_sessions: usize,
+    batches_per_session: usize,
+    batch_queries: usize,
+    batch_gap_us: f64,
+    n_stations: usize,
+) -> Vec<SessionPlan> {
+    assert!(batch_gap_us >= 0.0);
+    let mut rng = Rng::new(seed ^ 0x5E55_10);
+    let mut clock_us = 0.0f64;
+    (0..n_sessions)
+        .map(|_| {
+            clock_us += schedule.poisson_gap_us(clock_us, rng.f64());
+            let station = rng.zipf(n_stations.max(1), 1.05) as u32;
+            let batches = (0..batches_per_session.max(1))
+                .map(|i| SessionBatch {
+                    offset_us: i as f64 * batch_gap_us,
+                    n_queries: batch_queries.max(1),
+                })
+                .collect();
+            SessionPlan { accept_us: clock_us, station, batches }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -582,5 +650,103 @@ mod tests {
         let a = TraceSource::new(&trace, 3, 800.0, 25.0).schedule();
         let b = TraceSource::new(&trace, 3, 800.0, 25.0).schedule();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn piecewise_rate_at_step_boundaries() {
+        // Exactly *at* a knot the new rate applies (t >= from), and the
+        // final step holds forever.
+        let p = RateSchedule::piecewise(vec![(0.0, 50.0), (5.0, 500.0), (12.0, 80.0)]);
+        assert_eq!(p.rate_rps(0.0), 50.0, "first knot applies at t=0");
+        assert_eq!(p.rate_rps(4.999_999), 50.0);
+        assert_eq!(p.rate_rps(5.0), 500.0, "boundary belongs to the new step");
+        assert_eq!(p.rate_rps(11.999_999), 500.0);
+        assert_eq!(p.rate_rps(12.0), 80.0);
+        assert_eq!(p.rate_rps(1e9), 80.0, "last step holds forever");
+    }
+
+    #[test]
+    fn peak_and_trough_on_degenerate_schedules() {
+        // Single-step piecewise: peak == trough == the only rate.
+        let single = RateSchedule::piecewise(vec![(0.0, 750.0)]);
+        assert_eq!(single.peak_rps(), 750.0);
+        assert_eq!(single.trough_rps(), 750.0);
+        assert_eq!(single.rate_rps(0.0), 750.0);
+        assert_eq!(single.rate_rps(1e6), 750.0);
+
+        // Constant: likewise degenerate.
+        let c = RateSchedule::constant(123.0);
+        assert_eq!(c.peak_rps(), 123.0);
+        assert_eq!(c.trough_rps(), 123.0);
+
+        // Zero-amplitude diurnal: a flat line dressed as a sinusoid.
+        let flat = RateSchedule::diurnal(400.0, 0.0, 60.0);
+        assert_eq!(flat.peak_rps(), 400.0);
+        assert_eq!(flat.trough_rps(), 400.0);
+        assert_eq!(flat.rate_rps(17.0), 400.0);
+
+        // Full-amplitude diurnal troughs at exactly zero offered load.
+        let full = RateSchedule::diurnal(300.0, 300.0, 60.0);
+        assert_eq!(full.trough_rps(), 0.0);
+        assert!(full.rate_rps(0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn poisson_gap_is_monotone_in_u() {
+        // The inverse-CDF draw must be strictly increasing in u (and start
+        // at a zero gap for u=0): larger uniforms ⇒ rarer, longer gaps.
+        for schedule in [
+            RateSchedule::constant(1_000.0),
+            RateSchedule::diurnal(1_000.0, 900.0, 10.0),
+            RateSchedule::piecewise(vec![(0.0, 10.0), (1.0, 10_000.0)]),
+        ] {
+            for clock_us in [0.0, 5e5, 3e6] {
+                let mut last = -1.0;
+                for i in 0..100 {
+                    let u = i as f64 / 100.0;
+                    let gap = schedule.poisson_gap_us(clock_us, u);
+                    assert!(
+                        gap > last,
+                        "gap must grow with u: u={u} gap={gap} last={last} ({})",
+                        schedule.label()
+                    );
+                    last = gap;
+                }
+                assert_eq!(schedule.poisson_gap_us(clock_us, 0.0), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn session_plans_are_seeded_poisson_streams() {
+        let schedule = RateSchedule::constant(2_000.0);
+        let plans = session_plans(77, &schedule, 300, 4, 16, 500.0, 40);
+        assert_eq!(plans.len(), 300);
+        assert_eq!(plans, session_plans(77, &schedule, 300, 4, 16, 500.0, 40), "deterministic");
+        assert_ne!(
+            plans[0].accept_us,
+            session_plans(78, &schedule, 1, 4, 16, 500.0, 40)[0].accept_us,
+            "seed moves the clock"
+        );
+        let mut last = 0.0;
+        for p in &plans {
+            assert!(p.accept_us >= last, "accepts are time-ordered");
+            last = p.accept_us;
+            assert!((p.station as usize) < 40);
+            assert_eq!(p.batches.len(), 4);
+            assert_eq!(p.total_queries(), 64);
+            // Fixed spacing, and ready_us composes accept + offset.
+            for (i, b) in p.batches.iter().enumerate() {
+                assert_eq!(b.offset_us, i as f64 * 500.0);
+                assert_eq!(p.ready_us(i), p.accept_us + b.offset_us);
+            }
+        }
+        // Mean accept gap ≈ 1/λ = 500 µs (loose statistical bound).
+        let mean_gap = plans.last().unwrap().accept_us / 300.0;
+        assert!((350.0..650.0).contains(&mean_gap), "mean accept gap {mean_gap}");
+
+        // Bursty shape: gap 0 ⇒ every batch ready at accept.
+        let burst = session_plans(5, &schedule, 10, 8, 4, 0.0, 4);
+        assert!(burst.iter().all(|p| p.batches.iter().all(|b| b.offset_us == 0.0)));
     }
 }

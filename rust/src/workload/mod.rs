@@ -11,8 +11,8 @@ mod arrivals;
 mod trace;
 
 pub use arrivals::{
-    Arrival, ArrivalSource, PoissonSource, RateProfile, RateSchedule, ScheduledSource,
-    TraceSource,
+    session_plans, Arrival, ArrivalSource, PoissonSource, RateProfile, RateSchedule,
+    ScheduledSource, SessionBatch, SessionPlan, TraceSource,
 };
 pub use trace::{
     generate_trace, ProductionTrace, TraceConfig, TraceStats, TravelSolution, UserQuery,

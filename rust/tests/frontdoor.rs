@@ -1,0 +1,171 @@
+//! Front-door integration: the end-to-end conservation law from the
+//! accept clock — accepted sessions' queries = completed + shed(socket) +
+//! shed(queue) + lost — under faults and every backpressure rung, in both
+//! realisations; event-vs-thread-per-session multiplexing at equal
+//! offered load; and the sim/real backpressure-policy ranking agreement.
+
+use erbium_search::backend::BackendFactory;
+use erbium_search::cluster::{
+    AdmissionPolicy, ClusterConfig, ClusterSimConfig, RoutePolicy, SimNodeSpec,
+};
+use erbium_search::controlplane::FaultPlan;
+use erbium_search::coordinator::{
+    cross_validate_frontdoor_policies, AggregationPolicy, PipelineConfig, Topology,
+};
+use erbium_search::frontdoor::{
+    run_frontdoor, sim_frontdoor, BackpressurePolicy, FrontdoorConfig, FrontdoorSimConfig,
+};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::rules::standard::StandardVersion;
+use erbium_search::testing::fixture::compile_fixture;
+use erbium_search::workload::{session_plans, RateSchedule, SessionPlan};
+
+fn fixture() -> (BackendFactory, erbium_search::rules::types::World) {
+    let f = compile_fixture(1313, 300, StandardVersion::V2, HardwareConfig::v2_aws(4));
+    (f.native_factory(), f.world)
+}
+
+fn node_cfg() -> PipelineConfig {
+    PipelineConfig::new(Topology::new(2, 1, 1, 4))
+        .with_aggregation(AggregationPolicy::DrainQueue)
+}
+
+fn plans(seed: u64, sessions: usize, batches: usize, bq: usize, rate: f64) -> Vec<SessionPlan> {
+    session_plans(seed, &RateSchedule::constant(rate), sessions, batches, bq, 0.0, 8)
+}
+
+/// Satellite invariant, real realisation: every offered query is
+/// accounted for under a mid-run node kill and each ladder rung — and the
+/// real cluster's drain semantics mean a fault can never *lose* a query
+/// (the sim twin models the lossy variant).
+#[test]
+fn real_frontdoor_conserves_under_faults_and_backpressure() {
+    let (factory, world) = fixture();
+    let cluster = ClusterConfig::new(2, node_cfg())
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(8));
+    for policy in [
+        BackpressurePolicy::None,
+        BackpressurePolicy::Window { window: 2 },
+        BackpressurePolicy::SocketShed { window: 2, pending_cap: 2 },
+    ] {
+        let fd = FrontdoorConfig::event(2, policy);
+        let faults = FaultPlan::kill(0, 1_000.0, 3_000.0);
+        let p = plans(21, 12, 8, 8, 1e8);
+        let r = run_frontdoor(cluster.clone(), factory.clone(), &world, 7, &p, &fd, &faults)
+            .unwrap();
+        assert!(r.conserves_queries(), "{}", r.summary());
+        assert_eq!(r.lost_queries, 0, "real faults drain, they never lose: {}", r.summary());
+        assert_eq!(r.offered_queries, 12 * 8 * 8);
+        assert_eq!(r.sessions_offered, r.sessions_accepted + r.sessions_shed);
+        assert_eq!(r.fault_events.len(), 2, "one fail + one recover");
+        assert!(r.accept_p99_us >= r.submit_p99_us, "{}", r.summary());
+    }
+}
+
+/// Satellite invariant, DES realisation: conservation holds across seeds,
+/// policies, and an overlapping double-kill that exercises the lossy
+/// fault paths (in-service dies with the node; orphans with no live
+/// replica are lost).
+#[test]
+fn sim_frontdoor_conserves_across_seeds_policies_and_faults() {
+    for seed in [1u64, 7, 23, 99, 1234] {
+        for policy in [
+            BackpressurePolicy::None,
+            BackpressurePolicy::Window { window: 2 },
+            BackpressurePolicy::SocketShed { window: 2, pending_cap: 2 },
+        ] {
+            let cfg = FrontdoorSimConfig {
+                cluster: ClusterSimConfig::v2_cloud(2, 2)
+                    .with_route(RoutePolicy::RoundRobin)
+                    .with_admission(AdmissionPolicy::QueueCap(8)),
+                frontdoor: FrontdoorConfig::event(2, policy),
+                faults: FaultPlan::kill(0, 50.0, 500.0).and_kill(1, 120.0, 400.0),
+            };
+            let p = plans(seed, 16, 8, 8, 1e8);
+            let r = sim_frontdoor(&cfg, &p);
+            assert!(r.conserves_queries(), "seed {seed}: {}", r.summary());
+            assert_eq!(r.offered_queries, 16 * 8 * 8);
+            assert_eq!(r.sessions_offered, r.sessions_accepted + r.sessions_shed);
+            assert_eq!(r.fault_events.len(), 4, "two fails + two recovers");
+        }
+    }
+}
+
+/// The PR's point, in miniature: at the same offered load, the event door
+/// accepts every session where the thread-per-session door is out of
+/// threads after four — and serves them with a no-worse accept-clock tail
+/// (window 4 multiplexing vs window-1 serial draining of bursty streams).
+#[test]
+fn event_mode_multiplexes_more_sessions_than_thread_per_session() {
+    let spec = SimNodeSpec::v2_cloud(2);
+    let cluster = ClusterSimConfig::v2_cloud(2, 2).with_route(RoutePolicy::RoundRobin);
+    let node_rps = spec.capacity_qps(&cluster.overheads, 16) / 16.0;
+    let rate = 0.15 * 2.0 * node_rps / 8.0; // well under the knee, 8 req/session
+    let p = session_plans(9, &RateSchedule::constant(rate), 16, 8, 16, 0.0, 8);
+    let run = |frontdoor| {
+        sim_frontdoor(
+            &FrontdoorSimConfig { cluster: cluster.clone(), frontdoor, faults: FaultPlan::none() },
+            &p,
+        )
+    };
+    let event = run(FrontdoorConfig::event(2, BackpressurePolicy::Window { window: 4 }));
+    let baseline = run(FrontdoorConfig::thread_per_session(4));
+
+    assert_eq!(event.sessions_accepted, 16, "{}", event.summary());
+    assert_eq!(event.completed_queries, event.offered_queries);
+    assert_eq!(baseline.sessions_accepted, 4, "{}", baseline.summary());
+    assert_eq!(baseline.sessions_shed, 12, "thread exhaustion sheds at accept");
+    assert!(
+        event.sessions_accepted >= 4 * baseline.sessions_accepted,
+        "event {} vs baseline {}",
+        event.sessions_accepted,
+        baseline.sessions_accepted
+    );
+    assert!(
+        event.accept_p99_us <= baseline.accept_p99_us,
+        "multiplexing must not cost tail latency: event {} vs baseline {} µs",
+        event.accept_p99_us,
+        baseline.accept_p99_us
+    );
+    assert!(baseline.conserves_queries() && event.conserves_queries());
+}
+
+/// Under capacity with no faults, the real event door completes every
+/// offered query and the dual clock is coherent.
+#[test]
+fn real_event_frontdoor_completes_everything_under_capacity() {
+    let (factory, world) = fixture();
+    let cluster = ClusterConfig::new(2, node_cfg());
+    let p = plans(5, 10, 6, 8, 2_000.0);
+    let fd = FrontdoorConfig::event(3, BackpressurePolicy::Window { window: 2 });
+    let r = run_frontdoor(cluster, factory, &world, 11, &p, &fd, &FaultPlan::none()).unwrap();
+    assert_eq!(r.completed_queries, r.offered_queries, "{}", r.summary());
+    assert_eq!(r.sessions_accepted, 10);
+    assert_eq!(r.completed_requests, 60);
+    assert_eq!(r.shed_socket_queries + r.shed_queue_queries + r.lost_queries, 0);
+    assert!(r.accept_p99_us >= r.submit_p99_us);
+    assert!(r.goodput_qps > 0.0);
+    assert!(r.summary().contains("event"), "{}", r.summary());
+}
+
+/// Acceptance criterion: the DES twin and the real front door rank the
+/// three backpressure policies identically — on goodput *and* on the
+/// accept-clock tail.
+#[test]
+fn sim_and_real_rank_backpressure_policies_identically() {
+    let (factory, world) = fixture();
+    let cv = cross_validate_frontdoor_policies(
+        ClusterConfig::new(2, node_cfg()),
+        factory,
+        &world,
+        4242,
+    )
+    .unwrap();
+    assert!(cv.agree_on_ranking(), "{}", cv.summary());
+    assert_eq!(cv.sim_goodput_ranking(), vec!["window:2", "none", "socket:2:2"]);
+    assert_eq!(cv.sim_tail_ranking(), vec!["socket:2:2", "none", "window:2"]);
+    for r in cv.sim.iter().chain(cv.real.iter()) {
+        assert!(r.conserves_queries(), "{}", r.summary());
+    }
+}
