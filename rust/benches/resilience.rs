@@ -1,0 +1,297 @@
+//! Chaos harness: the gray-failure resilience ladder under seeded fault
+//! injection, with the PR's two headline assertions enforced on the DES
+//! and a wall-clock conservation smoke on the real reactor.
+//!
+//! 1. **Straggler + hedge (DES)** — 8 JSQ-routed nodes, one slowed 10×
+//!    mid-run. JSQ starves the straggler down to a trickle (ties break to
+//!    it, so it never fully drains out), which is exactly the gray regime:
+//!    a few percent of requests land there and eat 10–30× latency. The
+//!    storm runs light and with a wide session window — a hedge can only
+//!    cut the *backend* component of accept latency, so queueing delay
+//!    and batches parked behind their own session's predecessors put a
+//!    floor under the hedged p99 that no trigger tuning removes.
+//!    Acceptance: a tail-triggered hedge cuts accept-clock p99 **≥ 2×**
+//!    at **≤ 1.05×** physical backend load.
+//! 2. **Error replica + breaker (DES)** — 4 round-robin nodes, one
+//!    failing 20% of calls. Acceptance: retry + circuit breaker keeps
+//!    goodput (completed queries over the same offered set) within **10%
+//!    of the fault-free run**, and strictly above the no-policy run.
+//! 3. **Real-reactor chaos smoke** — slowdown + error-rate gray windows
+//!    against live threads under the full mechanism stack: the extended
+//!    conservation law holds on the wall clock and no completion is
+//!    recorded past its deadline.
+//!
+//! Emits machine-readable `BENCH_resilience.json` (override with
+//! `BENCH_OUT`), uploaded by the CI bench-smoke step. `BENCH_SMOKE=1`
+//! shrinks the storms for CI.
+
+use erbium_search::backend::BackendFactory;
+use erbium_search::benchkit::{print_table, write_json, Json};
+use erbium_search::cluster::{
+    AdmissionPolicy, Cluster, ClusterConfig, ClusterSimConfig, RoutePolicy, SimNodeSpec,
+};
+use erbium_search::controlplane::FaultPlan;
+use erbium_search::coordinator::{AggregationPolicy, PipelineConfig, Topology};
+use erbium_search::frontdoor::{
+    run_frontdoor, sim_frontdoor, BackpressurePolicy, FrontdoorConfig, FrontdoorReport,
+    FrontdoorSimConfig,
+};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::resilience::{BreakerConfig, HedgePolicy, ResiliencePolicy, RetryPolicy};
+use erbium_search::rules::standard::StandardVersion;
+use erbium_search::testing::fixture::compile_fixture;
+use erbium_search::workload::{session_plans, PoissonSource, RateSchedule, SessionPlan};
+
+const BATCH: usize = 16;
+/// Per-session backpressure window. Wide enough that a session's batches
+/// rarely park behind their own slow predecessors — park time is accept
+/// latency hedging cannot cut.
+const WINDOW: usize = 4;
+/// Offered load as a fraction of the *healthy* fleet's capacity — well
+/// under the knee, so the tail is the fault's signature, not queueing's:
+/// baseline waits inflate the winner-latency EWMA the hedge trigger is
+/// armed from, pushing the effective trigger far past its nominal factor.
+const LOAD: f64 = 0.4;
+
+fn node_cfg() -> PipelineConfig {
+    PipelineConfig::new(Topology::new(2, 1, 1, 4))
+        .with_aggregation(AggregationPolicy::DrainQueue)
+}
+
+fn storm(seed: u64, mu_rps: f64, nodes: usize, sessions: usize, batches: usize) -> Vec<SessionPlan> {
+    let rate = LOAD * nodes as f64 * mu_rps / batches as f64;
+    session_plans(seed, &RateSchedule::constant(rate), sessions, batches, BATCH, 0.0, 8)
+}
+
+fn report_json(r: &FrontdoorReport) -> Json {
+    Json::obj([
+        ("resilience", Json::Str(r.resilience.clone())),
+        ("offered_queries", Json::Int(r.offered_queries as i64)),
+        ("completed_queries", Json::Int(r.completed_queries as i64)),
+        ("shed_queue_queries", Json::Int(r.shed_queue_queries as i64)),
+        ("shed_deadline_queries", Json::Int(r.shed_deadline_queries as i64)),
+        ("lost_queries", Json::Int(r.lost_queries as i64)),
+        ("goodput_qps", Json::Num(r.goodput_qps)),
+        ("accept_p50_us", Json::Num(r.accept_p50_us)),
+        ("accept_p99_us", Json::Num(r.accept_p99_us)),
+        ("backend_load_factor", Json::Num(r.backend_load_factor())),
+        ("retries", Json::Int(r.res.retries as i64)),
+        ("hedges_issued", Json::Int(r.res.hedges_issued as i64)),
+        ("hedge_wins", Json::Int(r.res.hedge_wins as i64)),
+        ("breaker_trips", Json::Int(r.res.breaker_trips as i64)),
+        ("breaker_rejections", Json::Int(r.res.breaker_rejections as i64)),
+        ("degraded_requests", Json::Int(r.res.degraded_requests as i64)),
+        ("backend_requests", Json::Int(r.res.backend_requests as i64)),
+    ])
+}
+
+fn sim_run(
+    cluster: &ClusterSimConfig,
+    faults: &FaultPlan,
+    res: ResiliencePolicy,
+    plans: &[SessionPlan],
+) -> FrontdoorReport {
+    sim_frontdoor(
+        &FrontdoorSimConfig {
+            cluster: cluster.clone(),
+            frontdoor: FrontdoorConfig::event(2, BackpressurePolicy::Window { window: WINDOW })
+                .with_resilience(res),
+            faults: faults.clone(),
+        },
+        plans,
+    )
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (sessions, batches) = if smoke { (32, 6) } else { (64, 8) };
+
+    // ---- 1. Straggler + hedge (DES) -------------------------------------
+    let n_straggle = 8;
+    let straggle_cluster = ClusterSimConfig::v2_cloud(n_straggle, 2)
+        .with_route(RoutePolicy::JoinShortestQueue)
+        .with_admission(AdmissionPolicy::QueueCap(16));
+    let spec = SimNodeSpec::v2_cloud(2);
+    let svc = spec.request_service_us(&straggle_cluster.overheads, BATCH);
+    let mu_sim_rps = spec.capacity_qps(&straggle_cluster.overheads, BATCH) / BATCH as f64;
+    // The slowdown opens after a clean warm-up so the hedge expectation
+    // (winner-latency EWMA) is trained on healthy traffic.
+    let straggler = FaultPlan::none().and_slowdown(0, 20.0 * svc, 1e12, 10.0);
+    let plans = storm(0x6E51, mu_sim_rps, n_straggle, sessions, batches);
+    let plain = sim_run(&straggle_cluster, &straggler, ResiliencePolicy::none(), &plans);
+    let hedged = sim_run(
+        &straggle_cluster,
+        &straggler,
+        ResiliencePolicy::none().with_hedge(HedgePolicy::new(3.0)),
+        &plans,
+    );
+    assert!(plain.conserves_queries() && hedged.conserves_queries());
+    assert_eq!(hedged.completed_queries, hedged.offered_queries, "hedges lose nothing");
+    assert!(hedged.res.hedges_issued > 0 && hedged.res.hedge_wins > 0, "{}", hedged.summary());
+    assert!(
+        plain.accept_p99_us >= 2.0 * hedged.accept_p99_us,
+        "acceptance: hedging must cut accept-p99 ≥2× under a 10× straggler: \
+         plain {:.0} vs hedged {:.0} µs",
+        plain.accept_p99_us,
+        hedged.accept_p99_us
+    );
+    assert!(
+        hedged.backend_load_factor() <= 1.05,
+        "acceptance: at ≤1.05× physical backend load: {:.3}",
+        hedged.backend_load_factor()
+    );
+    print_table(
+        "10× straggler, 8 nodes JSQ (DES)",
+        &["policy", "p99 µs", "load ×", "hedges", "wins"],
+        &[&plain, &hedged]
+            .iter()
+            .map(|r| {
+                vec![
+                    r.resilience.clone(),
+                    format!("{:.0}", r.accept_p99_us),
+                    format!("{:.3}", r.backend_load_factor()),
+                    format!("{}", r.res.hedges_issued),
+                    format!("{}", r.res.hedge_wins),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    // ---- 2. Error replica + breaker (DES) --------------------------------
+    let n_err = 4;
+    let err_cluster = ClusterSimConfig::v2_cloud(n_err, 2)
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(16));
+    let flaky = FaultPlan::none().and_error_rate(0, 20.0 * svc, 1e12, 0.2);
+    let stack = ResiliencePolicy::none()
+        .with_retry(RetryPolicy::new(3, 0.5 * svc, 8.0 * svc))
+        .with_budget_ratio(0.5)
+        .with_breaker(BreakerConfig { open_us: 40.0 * svc, ..Default::default() });
+    let plans = storm(0x6E52, mu_sim_rps, n_err, sessions, batches);
+    let clean = sim_run(&err_cluster, &FaultPlan::none(), ResiliencePolicy::none(), &plans);
+    let unguarded = sim_run(&err_cluster, &flaky, ResiliencePolicy::none(), &plans);
+    let guarded = sim_run(&err_cluster, &flaky, stack, &plans);
+    for r in [&clean, &unguarded, &guarded] {
+        assert!(r.conserves_queries(), "{}", r.summary());
+    }
+    assert!(unguarded.lost_queries > 0, "the fault must bite: {}", unguarded.summary());
+    assert!(guarded.res.breaker_trips > 0, "{}", guarded.summary());
+    assert!(
+        guarded.completed_queries * 10 >= clean.completed_queries * 9,
+        "acceptance: breakers keep goodput within 10% of fault-free: {} vs {}",
+        guarded.completed_queries,
+        clean.completed_queries
+    );
+    assert!(
+        guarded.completed_queries > unguarded.completed_queries,
+        "the stack must beat no policy: {} vs {}",
+        guarded.completed_queries,
+        unguarded.completed_queries
+    );
+    print_table(
+        "20% error replica, 4 nodes RR (DES)",
+        &["policy", "faults", "completed", "lost", "trips", "retries"],
+        &[
+            (&clean, "none"),
+            (&unguarded, "err:0.2"),
+            (&guarded, "err:0.2"),
+        ]
+        .iter()
+        .map(|(r, f)| {
+            vec![
+                r.resilience.clone(),
+                (*f).to_string(),
+                format!("{}", r.completed_queries),
+                format!("{}", r.lost_queries),
+                format!("{}", r.res.breaker_trips),
+                format!("{}", r.res.retries),
+            ]
+        })
+        .collect::<Vec<_>>(),
+    );
+
+    // ---- 3. Real-reactor chaos smoke -------------------------------------
+    let f = compile_fixture(4117, 300, StandardVersion::V2, HardwareConfig::v2_aws(4));
+    let factory: BackendFactory = f.native_factory();
+    let world = f.world;
+    let probe_cfg = ClusterConfig::new(1, node_cfg()).with_admission(AdmissionPolicy::Open);
+    let probe = Cluster::new(probe_cfg, factory.clone());
+    let mu_real_rps = (0..2u64)
+        .map(|i| {
+            let mut src = PoissonSource::new(&world, 0xD05 ^ (1 + i), 1e8, BATCH, 240);
+            probe.run(&mut src).expect("probe run").achieved_qps / BATCH as f64
+        })
+        .fold(0.0, f64::max);
+    let (real_sessions, real_batches) = if smoke { (8, 4) } else { (16, 6) };
+    let real_cluster = ClusterConfig::new(3, node_cfg())
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(16));
+    let chaos = FaultPlan::none()
+        .and_slowdown(0, 10_000.0, 1e9, 6.0)
+        .and_error_rate(1, 10_000.0, 1e9, 0.3);
+    let deadline = 150_000.0;
+    let full = ResiliencePolicy::none()
+        .with_deadline(deadline)
+        .with_retry(RetryPolicy::new(3, 1_000.0, 8_000.0))
+        .with_budget_ratio(0.5)
+        .with_hedge(HedgePolicy::new(3.0))
+        .with_breaker(BreakerConfig { open_us: 80_000.0, ..Default::default() });
+    let real_plans = storm(0x6E53, mu_real_rps, 3, real_sessions, real_batches);
+    let fd = FrontdoorConfig::event(2, BackpressurePolicy::Window { window: WINDOW })
+        .with_resilience(full);
+    let real = run_frontdoor(
+        real_cluster,
+        factory,
+        &world,
+        0x6E53,
+        &real_plans,
+        &fd,
+        &chaos,
+    )
+    .expect("real chaos run");
+    println!("\nreal chaos: {}", real.summary());
+    assert!(real.conserves_queries(), "{}", real.summary());
+    assert_eq!(real.res.gray_fault_windows, 2);
+    assert!(real.res.backend_requests >= real.completed_requests, "{}", real.summary());
+    assert!(
+        // Slack: the expiry check and the latency record read the wall
+        // clock a few µs apart.
+        real.accept_p99_us <= deadline + 5_000.0,
+        "no completion recorded past its deadline: p99 {:.0} vs {deadline}",
+        real.accept_p99_us
+    );
+
+    // ---- Artifact -------------------------------------------------------
+    let json = Json::obj([
+        ("bench", Json::Str("resilience".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("batch", Json::Int(BATCH as i64)),
+        ("load_fraction", Json::Num(LOAD)),
+        ("mu_sim_rps", Json::Num(mu_sim_rps)),
+        ("mu_real_rps", Json::Num(mu_real_rps)),
+        (
+            "straggler_hedge",
+            Json::obj([
+                ("nodes", Json::Int(n_straggle as i64)),
+                ("slow_factor", Json::Num(10.0)),
+                ("plain", report_json(&plain)),
+                ("hedged", report_json(&hedged)),
+                ("p99_cut", Json::Num(plain.accept_p99_us / hedged.accept_p99_us.max(1.0))),
+            ]),
+        ),
+        (
+            "error_breaker",
+            Json::obj([
+                ("nodes", Json::Int(n_err as i64)),
+                ("error_p", Json::Num(0.2)),
+                ("clean", report_json(&clean)),
+                ("unguarded", report_json(&unguarded)),
+                ("guarded", report_json(&guarded)),
+            ]),
+        ),
+        ("real_chaos", report_json(&real)),
+    ]);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_resilience.json".to_string());
+    write_json(&out_path, &json).expect("write bench artifact");
+}

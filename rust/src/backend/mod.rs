@@ -33,13 +33,17 @@ pub use cache::{
     LruCache,
 };
 
+use std::cell::RefCell;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::controlplane::{FaultPlan, GrayEffect};
 use crate::cpu_baseline::CpuBaseline;
 use crate::erbium::{Backend, BatchTiming, ErbiumEngine, FpgaModel};
 use crate::nfa::model::PartitionedNfa;
+use crate::prng::Rng;
 use crate::rules::standard::Schema;
 use crate::rules::types::{MctDecision, MctQuery, RuleSet};
 use crate::runtime::Runtime;
@@ -328,6 +332,151 @@ pub fn cpu_backend_factory(schema: Schema, rs: RuleSet) -> BackendFactory {
     Arc::new(move || Ok(Box::new(CpuBackend::new(schema.clone(), &rs)) as Box<dyn MatchBackend>))
 }
 
+/// Gray-fault injecting decorator: the real-realisation twin of the DES's
+/// service-start sampling. Wraps any [`MatchBackend`] and consults the
+/// shared [`FaultPlan`] at *call time* on the run's wall clock (`t0` is
+/// the instant the cluster started accepting — the same origin the accept
+/// clock uses), so a scripted brown-out window degrades both realisations
+/// over the same stretch of the run:
+///
+/// * `Slowdown{factor}` — the call runs, then sleeps `(factor−1)×` its
+///   own elapsed time, and the modeled [`BatchTiming`] is scaled too, so
+///   wall and modeled clocks brown out together;
+/// * `ErrorRate{p}` — seeded Bernoulli draw fails the call with an `Err`
+///   before any work; the node still emits a (failed) completion;
+/// * `Hang{p, stall_us}` — seeded Bernoulli draw sleeps `stall_us`
+///   before serving (the intermittent-stall shape of a gray fault).
+///
+/// Draws come from a per-node seeded [`Rng`] — deterministic in *count*
+/// per node, not in thread interleaving (the real realisation is
+/// statistical by construction; the DES is the bit-exact one).
+pub struct GrayFaultBackend {
+    inner: Box<dyn MatchBackend>,
+    plan: FaultPlan,
+    node: usize,
+    t0: Instant,
+    rng: RefCell<Rng>,
+}
+
+impl GrayFaultBackend {
+    pub fn new(
+        inner: Box<dyn MatchBackend>,
+        plan: FaultPlan,
+        node: usize,
+        t0: Instant,
+        seed: u64,
+    ) -> GrayFaultBackend {
+        let rng = RefCell::new(Rng::new(seed ^ 0x62AF_17 ^ ((node as u64) << 40)));
+        GrayFaultBackend { inner, plan, node, t0, rng }
+    }
+
+    fn effect(&self) -> GrayEffect {
+        self.plan.gray_at(self.node, self.t0.elapsed().as_secs_f64() * 1e6)
+    }
+
+    /// Pre-call injection: `Err` on an error draw, stall on a hang draw.
+    fn inject_before(&self, eff: &GrayEffect) -> Result<()> {
+        let (fail, hang) = {
+            let mut rng = self.rng.borrow_mut();
+            (
+                eff.error_p > 0.0 && rng.chance(eff.error_p),
+                eff.hang_p > 0.0 && rng.chance(eff.hang_p),
+            )
+        };
+        if fail {
+            anyhow::bail!("gray fault: injected error on node {}", self.node);
+        }
+        if hang {
+            std::thread::sleep(std::time::Duration::from_secs_f64(eff.stall_us / 1e6));
+        }
+        Ok(())
+    }
+
+    /// Post-call injection: stretch wall and modeled time by the slowdown.
+    fn inject_after(&self, eff: &GrayEffect, started: Instant, timing: &mut BatchTiming) {
+        if eff.slow_factor > 1.0 {
+            std::thread::sleep(started.elapsed().mul_f64(eff.slow_factor - 1.0));
+            timing.setup_us *= eff.slow_factor;
+            timing.transfer_in_us *= eff.slow_factor;
+            timing.compute_us *= eff.slow_factor;
+            timing.transfer_out_us *= eff.slow_factor;
+            timing.total_us *= eff.slow_factor;
+        }
+    }
+}
+
+impl MatchBackend for GrayFaultBackend {
+    fn evaluate_batch_timed(
+        &self,
+        queries: &[MctQuery],
+    ) -> Result<(Vec<MctDecision>, BatchTiming)> {
+        let eff = self.effect();
+        if eff.is_clean() {
+            return self.inner.evaluate_batch_timed(queries);
+        }
+        self.inject_before(&eff)?;
+        let started = Instant::now();
+        let (ds, mut timing) = self.inner.evaluate_batch_timed(queries)?;
+        self.inject_after(&eff, started, &mut timing);
+        Ok((ds, timing))
+    }
+
+    fn evaluate_batch_timed_into(
+        &self,
+        queries: &[MctQuery],
+        out: &mut Vec<MctDecision>,
+    ) -> Result<BatchTiming> {
+        let eff = self.effect();
+        if eff.is_clean() {
+            return self.inner.evaluate_batch_timed_into(queries, out);
+        }
+        if let Err(e) = self.inject_before(&eff) {
+            out.clear(); // uphold the empty-buffer error contract
+            return Err(e);
+        }
+        let started = Instant::now();
+        let mut timing = self.inner.evaluate_batch_timed_into(queries, out)?;
+        self.inject_after(&eff, started, &mut timing);
+        Ok(timing)
+    }
+
+    fn kind(&self) -> BackendKind {
+        self.inner.kind()
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn benefits_from_batching(&self) -> bool {
+        self.inner.benefits_from_batching()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+}
+
+/// Wrap `inner` so every backend it builds injects `plan`'s gray windows
+/// for `node`. Kill faults are untouched — they stay with the up/down
+/// machinery; this decorator is only the *gray* (still-answering) path.
+pub fn gray_fault_factory(
+    inner: BackendFactory,
+    plan: FaultPlan,
+    node: usize,
+    t0: Instant,
+    seed: u64,
+) -> BackendFactory {
+    if !plan.has_gray() {
+        return inner;
+    }
+    Arc::new(move || {
+        let b = inner()?;
+        Ok(Box::new(GrayFaultBackend::new(b, plan.clone(), node, t0, seed))
+            as Box<dyn MatchBackend>)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,6 +552,65 @@ mod tests {
             cold.total_us
         );
         let _ = cfg;
+    }
+
+    #[test]
+    fn gray_decorator_errors_slows_and_delegates() {
+        let (cfg, world, schema, rs) = world_and_rules(61, 150);
+        let t0 = Instant::now();
+        let mut rng = Rng::new(3);
+        let st = rng.index(cfg.n_airports) as u32;
+        let q = random_query(&mut rng, &world, st);
+
+        // ErrorRate{1.0} over a huge window: every call must fail, with
+        // the into-buffer left empty per the error contract.
+        let plan = FaultPlan::none().and_error_rate(0, 0.0, 1e12, 1.0);
+        let erring = GrayFaultBackend::new(
+            Box::new(CpuBackend::new(schema.clone(), &rs)),
+            plan,
+            0,
+            t0,
+            7,
+        );
+        assert_eq!(erring.kind(), BackendKind::Cpu, "capability surface delegates");
+        assert_eq!(erring.label(), "cpu");
+        assert!(!erring.benefits_from_batching());
+        let mut out = vec![MctDecision { minutes: 0, weight: 0.0, rule_id: u32::MAX }];
+        assert!(erring.evaluate_batch_timed_into(&[q], &mut out).is_err());
+        assert!(out.is_empty(), "failed call must leave the buffer empty");
+
+        // Slowdown{4×} inflates the modeled timing; answers are untouched.
+        let slow = GrayFaultBackend::new(
+            Box::new(CpuBackend::new(schema.clone(), &rs)),
+            FaultPlan::none().and_slowdown(0, 0.0, 1e12, 4.0),
+            0,
+            t0,
+            7,
+        );
+        let clean = CpuBackend::new(schema.clone(), &rs);
+        let (ds_slow, t_slow) = slow.evaluate_batch_timed(&[q]).unwrap();
+        let (ds_clean, t_clean) = clean.evaluate_batch_timed(&[q]).unwrap();
+        assert_eq!(ds_slow[0].rule_id, ds_clean[0].rule_id);
+        assert!(
+            t_slow.total_us > 3.9 * t_clean.total_us,
+            "modeled time must stretch: {} !> 3.9×{}",
+            t_slow.total_us,
+            t_clean.total_us
+        );
+
+        // A window that never opens is a pass-through, and a plan with no
+        // gray faults never even wraps.
+        let dormant = GrayFaultBackend::new(
+            Box::new(CpuBackend::new(schema.clone(), &rs)),
+            FaultPlan::none().and_error_rate(0, 1e12, 1.0, 1.0),
+            0,
+            t0,
+            7,
+        );
+        assert!(dormant.evaluate_batch_timed(&[q]).is_ok());
+        let kills_only = FaultPlan::none().and_kill(0, 0.0, 1e6);
+        let f = gray_fault_factory(cpu_backend_factory(schema, rs), kills_only, 0, t0, 7);
+        assert!(f().unwrap().evaluate_batch_timed(&[q]).is_ok());
     }
 
     #[test]

@@ -105,11 +105,23 @@ pub struct Router {
     rng: Rng,
     /// Per-node capacity weights; empty ⇒ every node weighs 1.
     weights: Vec<f64>,
+    /// Per-node brown-out health weights in `(0, 1]`; empty ⇒ healthy.
+    /// Multiplied into the capacity weight, so the JSQ family sees a
+    /// browning replica as proportionally smaller — it keeps receiving
+    /// *some* traffic (health is floored), which is how recovery is
+    /// observed.
+    health: Vec<f64>,
 }
 
 impl Router {
     pub fn new(policy: RoutePolicy) -> Router {
-        Router { policy, rr_next: 0, rng: Rng::new(0x2070_D2), weights: Vec::new() }
+        Router {
+            policy,
+            rr_next: 0,
+            rng: Rng::new(0x2070_D2),
+            weights: Vec::new(),
+            health: Vec::new(),
+        }
     }
 
     /// Reseed the JSQ(d) sampling stream.
@@ -131,11 +143,20 @@ impl Router {
         self.weights = weights;
     }
 
-    fn weight(&self, i: usize) -> f64 {
-        self.weights.get(i).copied().filter(|w| *w > 0.0).unwrap_or(1.0)
+    /// Replace the brown-out health weights (the resilience layer calls
+    /// this as per-replica [`crate::resilience::HealthScore`]s move).
+    pub fn set_health(&mut self, health: Vec<f64>) {
+        self.health = health;
     }
 
-    /// Capacity-normalised depth the JSQ-family policies minimise.
+    fn weight(&self, i: usize) -> f64 {
+        let cap = self.weights.get(i).copied().filter(|w| *w > 0.0).unwrap_or(1.0);
+        let h = self.health.get(i).copied().filter(|h| *h > 0.0).unwrap_or(1.0);
+        cap * h
+    }
+
+    /// Capacity- and health-normalised depth the JSQ-family policies
+    /// minimise.
     fn rel_depth(&self, i: usize, depth: usize) -> f64 {
         depth as f64 / self.weight(i)
     }
@@ -322,6 +343,9 @@ pub struct ClusterConfig {
     pub admission: AdmissionPolicy,
     /// Seed of the router's JSQ(d) sampling stream.
     pub route_seed: u64,
+    /// Gray-degradation windows executed by the serving path itself
+    /// (kill faults are the control plane's job and are ignored here).
+    pub faults: crate::controlplane::FaultPlan,
 }
 
 impl ClusterConfig {
@@ -345,6 +369,7 @@ impl ClusterConfig {
             route: RoutePolicy::RoundRobin,
             admission: AdmissionPolicy::Open,
             route_seed: 0,
+            faults: crate::controlplane::FaultPlan::none(),
         }
     }
 
@@ -364,6 +389,11 @@ impl ClusterConfig {
 
     pub fn with_route_seed(mut self, seed: u64) -> ClusterConfig {
         self.route_seed = seed;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: crate::controlplane::FaultPlan) -> ClusterConfig {
+        self.faults = faults;
         self
     }
 
@@ -407,9 +437,13 @@ pub struct NodeReport {
     pub backend: String,
     pub completed_requests: usize,
     pub completed_queries: usize,
+    /// Requests whose engine path failed on this replica (gray errors).
+    pub failed_requests: usize,
     pub req_p90_us: f64,
     pub cache_hit_rate: f64,
     pub mean_aggregation: f64,
+    /// Final brown-out health weight in `(0, 1]` (1 = never degraded).
+    pub health: f64,
 }
 
 /// Per-class rollup of a heterogeneous run — what makes a mixed fleet's
@@ -445,8 +479,11 @@ pub struct ClusterReport {
     pub completed_queries: usize,
     pub dropped_queries: usize,
     pub lost_queries: usize,
-    /// Requests whose engine path failed (degraded replies).
+    /// Requests whose engine path failed (degraded replies). A failed
+    /// request still *completes* — conservation counts it once — but a
+    /// gray error burst surfaces here and in `failed_queries`.
     pub failed: usize,
+    pub failed_queries: usize,
     /// Fleet-level request latency (per-node samples merged).
     pub req_p50_us: f64,
     pub req_p90_us: f64,
@@ -623,6 +660,21 @@ mod tests {
     }
 
     #[test]
+    fn router_health_weights_compose_with_capacity() {
+        // Equal capacity, equal depth — but node 0 is browning out at
+        // health 0.1: its relative depth is 10× heavier, so JSQ shifts
+        // traffic away without taking the node out of rotation.
+        let mut r = Router::new(RoutePolicy::JoinShortestQueue)
+            .with_weights(vec![1.0, 1.0]);
+        r.set_health(vec![0.1, 1.0]);
+        assert_eq!(r.route(0, &[2, 8]), 1, "2/0.1 = 20 beats 8/1");
+        assert_eq!(r.route(0, &[0, 8]), 0, "an idle browning node still serves");
+        // Clearing health restores pure capacity routing.
+        r.set_health(Vec::new());
+        assert_eq!(r.route(0, &[2, 8]), 0);
+    }
+
+    #[test]
     fn router_jsqd_samples_d_and_never_picks_the_worst() {
         // With d = 2 of 4 and one empty queue, JSQ(2) must always pick a
         // queue no deeper than the second-shortest of its sample — in
@@ -772,9 +824,11 @@ mod tests {
             backend: class.into(),
             completed_requests: req,
             completed_queries: req * 10,
+            failed_requests: 0,
             req_p90_us: p90,
             cache_hit_rate: 0.0,
             mean_aggregation: 1.0,
+            health: 1.0,
         };
         let r = ClusterReport {
             label: "t".into(),
@@ -789,6 +843,7 @@ mod tests {
             dropped_queries: 60,
             lost_queries: 40,
             failed: 0,
+            failed_queries: 0,
             req_p50_us: 0.0,
             req_p90_us: 0.0,
             req_p99_us: 0.0,

@@ -23,9 +23,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::backend::BackendFactory;
+use crate::backend::{gray_fault_factory, BackendFactory};
 use crate::coordinator::pipeline::{Completion, NodeCore, NodeStats};
 use crate::coordinator::Percentiles;
+use crate::resilience::{HealthScore, BROWNOUT_DEGRADE_THRESHOLD};
 use crate::workload::ArrivalSource;
 
 use super::{
@@ -37,10 +38,29 @@ use super::{
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum Submit {
     /// Accepted and in flight on `node`; exactly one tagged [`Completion`]
-    /// will arrive for it.
-    Submitted { node: usize },
+    /// will arrive for it. `degraded` marks the brown-out ladder failing
+    /// an FPGA replica's traffic over to a CPU replica.
+    Submitted { node: usize, degraded: bool },
     /// Refused — admission control said no, or no live node could take it.
     Shed,
+}
+
+/// Optional routing extras for [`ClusterHandle::try_submit_ext`] — the
+/// resilience layer's knobs, all off in [`Default`] (which makes
+/// `try_submit_ext` behave exactly like [`ClusterHandle::try_submit`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct SubmitOpts<'a> {
+    /// Replica that must not take this copy (a hedge goes to a *different*
+    /// node). Ignored when it is the only live choice.
+    pub exclude: Option<usize>,
+    /// Per-replica deny mask (open circuit breakers).
+    pub deny: Option<&'a [bool]>,
+    /// Compose the per-replica brown-out weights into the router's
+    /// capacity scaling.
+    pub brownout: bool,
+    /// Graceful-degradation ladder: fail a browning FPGA replica's
+    /// traffic over to the least-loaded live CPU replica before shedding.
+    pub degrade: bool,
 }
 
 /// The cluster's **tagged-completion surface**: live replicas behind the
@@ -60,6 +80,11 @@ pub(crate) struct ClusterHandle {
     /// Liveness mask for fault drills: a downed node stops receiving but
     /// drains what it holds (the real realisation's drain semantics).
     up: Vec<AtomicBool>,
+    /// Per-replica brown-out health, fed by every observed completion.
+    health: Vec<Mutex<HealthScore>>,
+    /// CPU-class replicas (by class name) — the degradation ladder's
+    /// fail-over targets.
+    is_cpu: Vec<bool>,
 }
 
 impl ClusterHandle {
@@ -79,6 +104,8 @@ impl ClusterHandle {
             admission: config.admission,
             est_service: (0..n).map(|_| AtomicU64::new(0)).collect(),
             up: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            health: (0..n).map(|_| Mutex::new(HealthScore::new())).collect(),
+            is_cpu: config.specs.iter().map(|s| s.class.name.starts_with("cpu")).collect(),
         }
     }
 
@@ -115,26 +142,94 @@ impl ClusterHandle {
         id: u64,
         tx: &mpsc::Sender<Completion>,
     ) -> Submit {
+        self.try_submit_ext(station, queries, id, tx, SubmitOpts::default())
+    }
+
+    /// [`Self::try_submit`] with the resilience layer's routing extras:
+    /// breaker deny masks, hedge exclusion, brown-out weights and the
+    /// FPGA→CPU degradation ladder.
+    pub(crate) fn try_submit_ext(
+        &self,
+        station: u32,
+        queries: Vec<crate::rules::types::MctQuery>,
+        id: u64,
+        tx: &mpsc::Sender<Completion>,
+        opts: SubmitOpts<'_>,
+    ) -> Submit {
         let depths = self.depths();
-        let live: Vec<bool> = self.up.iter().map(|u| u.load(Ordering::Relaxed)).collect();
-        let target =
-            self.router.lock().unwrap().route_up(station, &depths, Some(&live));
-        let Some(target) = target else {
+        let mut live: Vec<bool> = self.up.iter().map(|u| u.load(Ordering::Relaxed)).collect();
+        if let Some(deny) = opts.deny {
+            for (l, d) in live.iter_mut().zip(deny) {
+                *l = *l && !*d;
+            }
+        }
+        if let Some(x) = opts.exclude {
+            // Hedge to a different replica — unless it is the only one left.
+            if x < live.len() && live.iter().enumerate().any(|(i, l)| *l && i != x) {
+                live[x] = false;
+            }
+        }
+        let health = (opts.brownout || opts.degrade).then(|| self.health_weights());
+        let target = {
+            let mut router = self.router.lock().unwrap();
+            router.set_health(if opts.brownout {
+                health.clone().unwrap_or_default()
+            } else {
+                Vec::new()
+            });
+            router.route_up(station, &depths, Some(&live))
+        };
+        let Some(mut target) = target else {
             return Submit::Shed;
         };
+        let mut degraded = false;
+        if opts.degrade && !self.is_cpu[target] {
+            let browning = health
+                .as_ref()
+                .and_then(|h| h.get(target))
+                .is_some_and(|h| *h < BROWNOUT_DEGRADE_THRESHOLD);
+            if browning {
+                let cpu = (0..live.len())
+                    .filter(|&i| live[i] && self.is_cpu[i])
+                    .min_by_key(|&i| depths[i]);
+                if let Some(cpu) = cpu {
+                    target = cpu;
+                    degraded = true;
+                }
+            }
+        }
         if !self.admission.admits(depths[target], self.est_service_us(target)) {
             return Submit::Shed;
         }
         self.nodes[target].submit_tagged(queries, id, target, tx);
-        Submit::Submitted { node: target }
+        Submit::Submitted { node: target, degraded }
     }
 
     /// Feed a completion back into the per-replica service estimate (the
     /// signal [`AdmissionPolicy::SlaP90`] sheds on).
     pub(crate) fn note_completion(&self, c: &Completion) {
+        self.note_outcome(c, false);
+    }
+
+    /// [`Self::note_completion`] plus the brown-out health observation —
+    /// callers that track deadlines report misses here.
+    pub(crate) fn note_outcome(&self, c: &Completion, deadline_miss: bool) {
+        let outstanding = self.nodes[c.node].outstanding();
         let prev = f64::from_bits(self.est_service[c.node].load(Ordering::Relaxed));
-        let next = update_service_estimate(prev, c.latency_us, self.nodes[c.node].outstanding());
+        let next = update_service_estimate(prev, c.latency_us, outstanding);
         self.est_service[c.node].store(next.to_bits(), Ordering::Relaxed);
+        let norm = c.latency_us / (outstanding as f64 + 1.0);
+        self.health[c.node].lock().unwrap().observe(c.ok, deadline_miss, norm);
+    }
+
+    /// Per-replica brown-out routing weights, `(0, 1]`.
+    pub(crate) fn health_weights(&self) -> Vec<f64> {
+        self.health.iter().map(|h| h.lock().unwrap().weight()).collect()
+    }
+
+    /// Is this replica a CPU-class fail-over target?
+    pub(crate) fn is_cpu(&self, node: usize) -> bool {
+        self.is_cpu[node]
     }
 
     /// Join every replica and collect its stats. All submitted work must
@@ -175,10 +270,26 @@ impl Cluster {
     /// every submission produces exactly one completion.
     pub fn run(&self, source: &mut dyn ArrivalSource) -> Result<ClusterReport> {
         let n = self.config.nodes();
-        let handle = ClusterHandle::spawn(&self.config, &self.factories);
-        let (ctx, crx) = mpsc::channel::<Completion>();
-
+        // t0 before spawn: the gray-fault decorators and the pacing loop
+        // must share one clock origin, so a scripted brown-out window sits
+        // on the same stretch of arrivals in both realisations.
         let t0 = Instant::now();
+        let factories: Vec<BackendFactory> = self
+            .factories
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                gray_fault_factory(
+                    f.clone(),
+                    self.config.faults.clone(),
+                    i,
+                    t0,
+                    self.config.route_seed,
+                )
+            })
+            .collect();
+        let handle = ClusterHandle::spawn(&self.config, &factories);
+        let (ctx, crx) = mpsc::channel::<Completion>();
         let mut requests = 0usize;
         let mut dropped = 0usize;
         let mut dropped_queries = 0usize;
@@ -190,17 +301,19 @@ impl Cluster {
                 let mut lat: Vec<Percentiles> = (0..n).map(|_| Percentiles::new()).collect();
                 let mut completed = vec![0usize; n];
                 let mut completed_q = vec![0usize; n];
-                let mut failed = 0usize;
+                let mut failed = vec![0usize; n];
+                let mut failed_q = vec![0usize; n];
                 while let Ok(c) = crx.recv() {
                     lat[c.node].record(c.latency_us);
                     completed[c.node] += 1;
                     completed_q[c.node] += c.n_queries;
                     if !c.ok {
-                        failed += 1;
+                        failed[c.node] += 1;
+                        failed_q[c.node] += c.n_queries;
                     }
                     h.note_completion(&c);
                 }
-                (lat, completed, completed_q, failed)
+                (lat, completed, completed_q, failed, failed_q)
             });
 
             // ---- Injector (this thread) --------------------------------
@@ -219,8 +332,9 @@ impl Cluster {
             drop(ctx);
             collector.join().expect("collector panicked")
         });
-        let (lat, completed, completed_q, failed) = collected;
+        let (lat, completed, completed_q, failed, failed_q) = collected;
         let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let health = handle.health_weights();
         let stats: Vec<_> = handle.shutdown();
 
         let completed_total: usize = completed.iter().sum();
@@ -238,9 +352,11 @@ impl Cluster {
                 backend: stats[i].backend.clone(),
                 completed_requests: completed[i],
                 completed_queries: completed_q[i],
+                failed_requests: failed[i],
                 req_p90_us: if lat[i].is_empty() { 0.0 } else { lat[i].p90() },
                 cache_hit_rate: stats[i].cache_hit_rate(),
                 mean_aggregation: stats[i].mean_aggregation(),
+                health: health[i],
             })
             .collect();
         let (lookups, hits) = stats
@@ -262,7 +378,8 @@ impl Cluster {
             completed_queries,
             dropped_queries,
             lost_queries: 0,
-            failed,
+            failed: failed.iter().sum(),
+            failed_queries: failed_q.iter().sum(),
             req_p50_us: p50,
             req_p90_us: p90,
             req_p99_us: p99,
@@ -400,6 +517,36 @@ mod tests {
         let cpu_row = r.per_node.iter().find(|n| n.class == "cpu-c5").unwrap();
         assert_eq!(cpu_row.backend, "cpu");
         assert!(r.summary().contains("by class"), "{}", r.summary());
+    }
+
+    #[test]
+    fn gray_error_rate_fails_calls_but_conserves() {
+        use crate::controlplane::FaultPlan;
+        let (factory, world) = fixture();
+        // Every call on node 0 fails for the whole run: its requests still
+        // complete (as failed), conservation holds, and its health sinks
+        // while the clean node's holds.
+        let cfg = ClusterConfig::new(2, node_cfg())
+            .with_route(RoutePolicy::RoundRobin)
+            .with_faults(FaultPlan::none().and_error_rate(0, 0.0, 1e12, 1.0));
+        let mut src = PoissonSource::new(&world, 21, 1e6, 16, 120);
+        let r = Cluster::new(cfg, factory).run(&mut src).unwrap();
+        assert!(r.conserves_requests());
+        assert_eq!(r.completed, 120);
+        assert!(r.failed >= 50, "RR sends ~half the calls into the fault: {}", r.failed);
+        assert_eq!(r.failed_queries, r.failed * 16);
+        assert_eq!(r.per_node[0].failed_requests, r.failed);
+        assert_eq!(r.per_node[1].failed_requests, 0);
+        assert!(
+            r.per_node[0].health < 0.2,
+            "all-errors node must brown out: {}",
+            r.per_node[0].health
+        );
+        assert!(
+            r.per_node[1].health > 0.5,
+            "clean node health must hold: {}",
+            r.per_node[1].health
+        );
     }
 
     #[test]

@@ -25,10 +25,12 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::backend::{query_key, LruCache};
+use crate::controlplane::FaultPlan;
 use crate::coordinator::{Overheads, Percentiles};
 use crate::erbium::FpgaModel;
 use crate::nfa::constraint_gen::HardwareConfig;
 use crate::prng::Rng;
+use crate::resilience::HealthScore;
 use crate::workload::{Arrival, ArrivalSource, RateSchedule};
 
 use super::{
@@ -263,6 +265,11 @@ pub struct ClusterSimConfig {
     pub overheads: Overheads,
     /// Seed of the router's JSQ(d) sampling stream.
     pub route_seed: u64,
+    /// Gray degradation windows (stragglers, error bursts, kernel
+    /// stalls) sampled at service start. Kill entries are ignored here —
+    /// the plain cluster DES has no up/down machinery; the front door
+    /// and control plane execute those.
+    pub faults: FaultPlan,
 }
 
 impl ClusterSimConfig {
@@ -283,6 +290,7 @@ impl ClusterSimConfig {
             cache_capacity: None,
             overheads: Overheads::default(),
             route_seed: 0,
+            faults: FaultPlan::none(),
         }
     }
 
@@ -307,6 +315,11 @@ impl ClusterSimConfig {
 
     pub fn with_route_seed(mut self, seed: u64) -> ClusterSimConfig {
         self.route_seed = seed;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> ClusterSimConfig {
+        self.faults = faults;
         self
     }
 
@@ -371,6 +384,9 @@ struct ReqSim {
     /// Queries that must pass through encode + kernel (set at feed time;
     /// `n` until the cache has spoken).
     misses: usize,
+    /// Cleared by a gray error draw at service start: the request still
+    /// completes (conservation counts it once) but as a failed call.
+    ok: bool,
 }
 
 struct NodeSim {
@@ -385,6 +401,9 @@ struct NodeSim {
     est_service_us: f64,
     completed: usize,
     completed_q: usize,
+    failed: usize,
+    failed_q: usize,
+    health: HealthScore,
     lookups: u64,
     hits: u64,
     lat: Percentiles,
@@ -406,6 +425,9 @@ impl NodeSim {
             est_service_us: 0.0,
             completed: 0,
             completed_q: 0,
+            failed: 0,
+            failed_q: 0,
+            health: HealthScore::new(),
             lookups: 0,
             hits: 0,
             lat: Percentiles::new(),
@@ -429,7 +451,13 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
         offered_q += a.n_queries;
         window_us = window_us.max(a.at_us);
         let rid = reqs.len();
-        reqs.push(ReqSim { node: usize::MAX, at_us: a.at_us, n: a.n_queries, misses: a.n_queries });
+        reqs.push(ReqSim {
+            node: usize::MAX,
+            at_us: a.at_us,
+            n: a.n_queries,
+            misses: a.n_queries,
+            ok: true,
+        });
         push_event(
             &mut heap,
             &mut seq,
@@ -441,6 +469,9 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
     let mut dropped = 0usize;
     let mut dropped_q = 0usize;
     let mut makespan = 0.0f64;
+    // Gray-fault sampling stream: effects are drawn at service start, so
+    // the draw order is fixed by the (deterministic) event order.
+    let mut gray_rng = Rng::new(cfg.route_seed ^ 0x62AF_17);
 
     // Start the next queued request on a free feeder: the cache speaks at
     // feed time (hits skip encode and the kernel), then the feeder spends
@@ -456,6 +487,8 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
         now: f64,
         heap: &mut EventHeap,
         seq: &mut u64,
+        faults: &FaultPlan,
+        gray_rng: &mut Rng,
     ) {
         while nodes[node_idx].free_feeders > 0 {
             let Some(rid) = nodes[node_idx].queue.pop_front() else { break };
@@ -479,16 +512,34 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
             }
             reqs[rid].misses = misses;
             node.free_feeders -= 1;
-            let service = match node.spec.engine {
+            let mut service = match node.spec.engine {
                 SimEngine::Fpga { .. } => o.sched.us(reqs[rid].n) + o.encode.us(misses),
                 SimEngine::Cpu { per_query_us } => {
                     o.sched.us(reqs[rid].n) + misses as f64 * per_query_us
                 }
             };
+            // Gray effects, sampled once at feeder-service start: the
+            // straggler factor inflates this stage, the error draw marks
+            // the whole request failed; stalls hit CPU nodes here (FPGA
+            // stalls model kernel hangs and are drawn at kernel start).
+            let eff = faults.gray_at(node_idx, now);
+            if !eff.is_clean() {
+                service *= eff.slow_factor;
+                if eff.error_p > 0.0 && gray_rng.chance(eff.error_p) {
+                    reqs[rid].ok = false;
+                }
+                if matches!(node.spec.engine, SimEngine::Cpu { .. })
+                    && eff.hang_p > 0.0
+                    && gray_rng.chance(eff.hang_p)
+                {
+                    service += eff.stall_us;
+                }
+            }
             push_event(heap, seq, now + service, Event::FeederDone { req: rid });
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn try_start_kernel(
         node_idx: usize,
         nodes: &mut [NodeSim],
@@ -497,6 +548,8 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
         now: f64,
         heap: &mut EventHeap,
         seq: &mut u64,
+        faults: &FaultPlan,
+        gray_rng: &mut Rng,
     ) {
         let node = &mut nodes[node_idx];
         if node.kernel_busy {
@@ -505,8 +558,15 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
         let Some(rid) = node.kernel_queue.pop_front() else { return };
         let model = node.model.as_ref().expect("kernel queue on a CPU node");
         node.kernel_busy = true;
-        let service = o.xrt.submission_us(node.spec.feeders)
+        let mut service = o.xrt.submission_us(node.spec.feeders)
             + model.batch_timing(reqs[rid].misses).total_us;
+        let eff = faults.gray_at(node_idx, now);
+        if !eff.is_clean() {
+            service *= eff.slow_factor;
+            if eff.hang_p > 0.0 && gray_rng.chance(eff.hang_p) {
+                service += eff.stall_us;
+            }
+        }
         push_event(heap, seq, now + service, Event::KernelDone { node: node_idx, req: rid });
     }
 
@@ -517,8 +577,13 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
         node.outstanding -= 1;
         node.completed += 1;
         node.completed_q += reqs[rid].n;
+        if !reqs[rid].ok {
+            node.failed += 1;
+            node.failed_q += reqs[rid].n;
+        }
         node.est_service_us =
             update_service_estimate(node.est_service_us, latency, node.outstanding);
+        node.health.observe(reqs[rid].ok, false, latency / (node.outstanding as f64 + 1.0));
         done
     };
 
@@ -538,6 +603,7 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
                 nodes[target].queue.push_back(req);
                 try_start_feeder(
                     target, &mut nodes, &mut reqs, arrivals, o, now, &mut heap, &mut seq,
+                    &cfg.faults, &mut gray_rng,
                 );
             }
             Event::FeederDone { req } => {
@@ -551,23 +617,32 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
                     makespan = makespan.max(done);
                 } else {
                     nodes[node_idx].kernel_queue.push_back(req);
-                    try_start_kernel(node_idx, &mut nodes, &reqs, o, now, &mut heap, &mut seq);
+                    try_start_kernel(
+                        node_idx, &mut nodes, &reqs, o, now, &mut heap, &mut seq,
+                        &cfg.faults, &mut gray_rng,
+                    );
                 }
                 try_start_feeder(
                     node_idx, &mut nodes, &mut reqs, arrivals, o, now, &mut heap, &mut seq,
+                    &cfg.faults, &mut gray_rng,
                 );
             }
             Event::KernelDone { node, req } => {
                 nodes[node].kernel_busy = false;
                 let done = complete(&mut nodes[node], req, &reqs, now);
                 makespan = makespan.max(done);
-                try_start_kernel(node, &mut nodes, &reqs, o, now, &mut heap, &mut seq);
+                try_start_kernel(
+                    node, &mut nodes, &reqs, o, now, &mut heap, &mut seq, &cfg.faults,
+                    &mut gray_rng,
+                );
             }
         }
     }
 
     let completed: usize = nodes.iter().map(|n| n.completed).sum();
     let completed_queries: usize = nodes.iter().map(|n| n.completed_q).sum();
+    let failed: usize = nodes.iter().map(|n| n.failed).sum();
+    let failed_queries: usize = nodes.iter().map(|n| n.failed_q).sum();
     assert_eq!(
         completed + dropped,
         arrivals.len(),
@@ -585,9 +660,11 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
             backend: n.spec.class_name.to_string(),
             completed_requests: n.completed,
             completed_queries: n.completed_q,
+            failed_requests: n.failed,
             req_p90_us: if n.lat.is_empty() { 0.0 } else { n.lat.p90() },
             cache_hit_rate: if n.lookups == 0 { 0.0 } else { n.hits as f64 / n.lookups as f64 },
             mean_aggregation: 1.0,
+            health: n.health.weight(),
         })
         .collect();
 
@@ -603,7 +680,8 @@ pub fn simulate_cluster(cfg: &ClusterSimConfig, arrivals: &[SimArrival]) -> Clus
         completed_queries,
         dropped_queries: dropped_q,
         lost_queries: 0,
-        failed: 0,
+        failed,
+        failed_queries,
         req_p50_us: p50,
         req_p90_us: p90,
         req_p99_us: p99,
@@ -658,6 +736,64 @@ mod tests {
             assert_eq!(a.req_p90_us, b.req_p90_us);
             assert_eq!(a.cache_hit_rate, b.cache_hit_rate);
         }
+    }
+
+    #[test]
+    fn gray_faults_inflate_latency_and_fail_calls_without_breaking_conservation() {
+        let arrivals = poisson_sim_arrivals(11, 40_000.0, 1024, 500, 16, 1.1, 0);
+        let span = arrivals.last().map(|a| a.at_us).unwrap_or(0.0) + 1.0;
+        let clean_cfg = ClusterSimConfig::v2_cloud(4, 2);
+        let clean = simulate_cluster(&clean_cfg, &arrivals);
+
+        // Gray windows open after a clean warm-up so the health floor is
+        // learned from fault-free service (the shape of a real brown-out).
+        let gray_cfg = ClusterSimConfig::v2_cloud(4, 2).with_faults(
+            FaultPlan::none()
+                .and_slowdown(0, 0.3 * span, 20.0 * span, 10.0)
+                .and_error_rate(1, 0.3 * span, 20.0 * span, 0.5),
+        );
+        let a = simulate_cluster(&gray_cfg, &arrivals);
+        let b = simulate_cluster(&gray_cfg, &arrivals);
+
+        // Gray faults are drawn from the seeded stream: byte-identical reruns.
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.failed, b.failed);
+        assert_eq!(a.req_p90_us, b.req_p90_us);
+
+        // A failed call still completes — conservation is untouched.
+        assert!(a.conserves_requests());
+        assert!(a.failed > 0, "0.5 error rate must fail calls");
+        assert_eq!(
+            a.completed, clean.completed,
+            "gray errors must not change what completes"
+        );
+
+        // The ×10 straggler shows up in its own tail and its health score;
+        // the clean nodes keep theirs.
+        let straggler = &a.per_node[0];
+        let clean_node = &clean.per_node[0];
+        assert!(
+            straggler.req_p90_us > 3.0 * clean_node.req_p90_us,
+            "slowdown must inflate the straggler's p90: {} !> 3×{}",
+            straggler.req_p90_us,
+            clean_node.req_p90_us
+        );
+        assert!(
+            straggler.health < 0.5,
+            "straggler health must sink: {}",
+            straggler.health
+        );
+        assert!(
+            a.per_node[1].health < 0.9,
+            "erroring node health must sink: {}",
+            a.per_node[1].health
+        );
+        assert!(
+            a.per_node[2].health > 0.8,
+            "clean node health must hold: {}",
+            a.per_node[2].health
+        );
+        assert_eq!(a.per_node[1].failed_requests + a.per_node[0].failed_requests, a.failed);
     }
 
     #[test]

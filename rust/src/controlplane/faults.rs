@@ -1,23 +1,78 @@
-//! Seeded fault injection: which node dies when, and for how long.
+//! Seeded fault injection: which node fails when, how, and for how long.
 //!
 //! A [`FaultPlan`] is pure data — both fleet realisations execute the same
 //! plan, so a DES run and a real threaded run see the *same* failures at
-//! the same points of the arrival clock. Semantics at the fleet layer
-//! (`controlplane::{sim, real}`): a faulted node stops being routable
-//! immediately; its in-flight work is drained or rerouted (never silently
-//! discarded — the report's conservation invariant separates `rerouted`
-//! from `lost`, and `lost` stays zero while at least one replica is live);
-//! after `down_us` the node revives cold (fresh cache, fresh queues).
+//! the same points of the arrival clock. Two fault families share the
+//! plan:
+//!
+//! * **Fail-stop** ([`FaultMode::Kill`]): the node stops being routable
+//!   immediately; its in-flight work is drained or rerouted (never
+//!   silently discarded — the report's conservation invariant separates
+//!   `rerouted` from `lost`, and `lost` stays zero while at least one
+//!   replica is live); after `down_us` the node revives cold (fresh
+//!   cache, fresh queues).
+//! * **Gray** ([`FaultMode::Slowdown`], [`FaultMode::ErrorRate`],
+//!   [`FaultMode::Hang`]): the node stays up and routable but degrades —
+//!   a straggler multiplies its service time, an intermittent fault
+//!   fails calls with probability `p`, a stalling kernel adds `stall_us`
+//!   with probability `p`. Gray windows are *invisible* to the fleet's
+//!   up/down machinery by design (that is what makes them gray); the
+//!   resilience layer (`rust/src/resilience/`) has to detect them from
+//!   outcomes. Executors sample [`FaultPlan::gray_at`] at service start
+//!   (DES) or call time (the real `MatchBackend` decorator) with a
+//!   seeded RNG, so both realisations draw from the same distributions.
 
 use crate::prng::Rng;
 
-/// One injected failure: `node` dies at `at_us` and revives `down_us`
-/// later.
+/// How a fault manifests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultMode {
+    /// Fail-stop: node down, revives after `down_us`.
+    Kill,
+    /// Straggler: service time multiplied by `factor` while active.
+    Slowdown { factor: f64 },
+    /// Intermittent per-call failures with probability `p`.
+    ErrorRate { p: f64 },
+    /// Kernel stalls: with probability `p` a call takes `stall_us` extra.
+    Hang { p: f64, stall_us: f64 },
+}
+
+/// One injected failure: `node` degrades in `mode` at `at_us` for
+/// `down_us` (for `Kill`, the time until revival; for gray modes, the
+/// length of the degradation window).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Fault {
     pub node: usize,
     pub at_us: f64,
     pub down_us: f64,
+    pub mode: FaultMode,
+}
+
+impl Fault {
+    pub fn active_at(&self, t_us: f64) -> bool {
+        t_us >= self.at_us && t_us < self.at_us + self.down_us
+    }
+}
+
+/// The combined gray effect on one node at one instant: all active
+/// windows folded together (slowdown factors multiply, error/hang
+/// probabilities saturate-add).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GrayEffect {
+    pub slow_factor: f64,
+    pub error_p: f64,
+    pub hang_p: f64,
+    pub stall_us: f64,
+}
+
+impl GrayEffect {
+    pub fn clean() -> GrayEffect {
+        GrayEffect { slow_factor: 1.0, error_p: 0.0, hang_p: 0.0, stall_us: 0.0 }
+    }
+
+    pub fn is_clean(&self) -> bool {
+        *self == GrayEffect::clean()
+    }
 }
 
 /// The run's failure script, time-ordered.
@@ -38,10 +93,39 @@ impl FaultPlan {
     }
 
     /// Append another scripted kill (kept time-ordered).
-    pub fn and_kill(mut self, node: usize, at_us: f64, down_us: f64) -> FaultPlan {
+    pub fn and_kill(self, node: usize, at_us: f64, down_us: f64) -> FaultPlan {
+        self.and_fault(node, at_us, down_us, FaultMode::Kill)
+    }
+
+    /// Append a straggler window: `node` serves `factor ×` slower.
+    pub fn and_slowdown(self, node: usize, at_us: f64, down_us: f64, factor: f64) -> FaultPlan {
+        assert!(factor >= 1.0);
+        self.and_fault(node, at_us, down_us, FaultMode::Slowdown { factor })
+    }
+
+    /// Append an intermittent-error window: calls fail w.p. `p`.
+    pub fn and_error_rate(self, node: usize, at_us: f64, down_us: f64, p: f64) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&p));
+        self.and_fault(node, at_us, down_us, FaultMode::ErrorRate { p })
+    }
+
+    /// Append a kernel-stall window: calls take `stall_us` extra w.p. `p`.
+    pub fn and_hang(
+        self,
+        node: usize,
+        at_us: f64,
+        down_us: f64,
+        p: f64,
+        stall_us: f64,
+    ) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&p) && stall_us > 0.0);
+        self.and_fault(node, at_us, down_us, FaultMode::Hang { p, stall_us })
+    }
+
+    fn and_fault(mut self, node: usize, at_us: f64, down_us: f64, mode: FaultMode) -> FaultPlan {
         assert!(at_us >= 0.0 && down_us > 0.0);
-        self.faults.push(Fault { node, at_us, down_us });
-        self.faults.sort_by(|a, b| a.at_us.partial_cmp(&b.at_us).unwrap());
+        self.faults.push(Fault { node, at_us, down_us, mode });
+        self.faults.sort_by(|a, b| a.at_us.total_cmp(&b.at_us));
         self
     }
 
@@ -67,8 +151,128 @@ impl FaultPlan {
         plan
     }
 
+    /// A seeded gray-fault matrix: `n_faults` degradation windows over
+    /// the initial `n_nodes`, uniformly placed across the middle 80% of
+    /// `window_us`, each lasting 20–60% of the window. Modes rotate
+    /// through straggler (4–16×), error rate (10–40%), and hangs
+    /// (2–10% at 20–120 × `service_scale_us`). Deterministic per seed.
+    pub fn seeded_gray(
+        seed: u64,
+        n_nodes: usize,
+        window_us: f64,
+        n_faults: usize,
+        service_scale_us: f64,
+    ) -> FaultPlan {
+        assert!(n_nodes >= 1 && window_us > 0.0 && service_scale_us > 0.0);
+        let mut rng = Rng::new(seed ^ 0x62A9);
+        let mut plan = FaultPlan::none();
+        for _ in 0..n_faults {
+            let node = rng.index(n_nodes);
+            let at_us = (0.1 + 0.8 * rng.f64()) * window_us;
+            let down_us = (0.2 + 0.4 * rng.f64()) * window_us;
+            plan = match rng.index(3) {
+                0 => plan.and_slowdown(node, at_us, down_us, 4.0 + 12.0 * rng.f64()),
+                1 => plan.and_error_rate(node, at_us, down_us, 0.1 + 0.3 * rng.f64()),
+                _ => plan.and_hang(
+                    node,
+                    at_us,
+                    down_us,
+                    0.02 + 0.08 * rng.f64(),
+                    (20.0 + 100.0 * rng.f64()) * service_scale_us,
+                ),
+            };
+        }
+        plan
+    }
+
+    /// Parse a CLI fault spec. Accepted forms:
+    /// `N` (N seeded kills — back-compat), `gray:slow:F` (one straggler
+    /// window at `F ×`), `gray:err:P`, `gray:hang:P:STALL_US`, and
+    /// `gray:mix:N` (a seeded `N`-window gray matrix). Scripted gray
+    /// windows span the middle 80% of `window_us` on a seeded node.
+    pub fn parse_cli(
+        spec: &str,
+        seed: u64,
+        n_nodes: usize,
+        window_us: f64,
+        service_scale_us: f64,
+    ) -> Option<FaultPlan> {
+        if let Ok(n) = spec.parse::<usize>() {
+            return Some(if n == 0 {
+                FaultPlan::none()
+            } else {
+                FaultPlan::seeded(seed, n_nodes, window_us, n, window_us / 10.0)
+            });
+        }
+        let parts: Vec<&str> = spec.split(':').collect();
+        if parts.first() != Some(&"gray") {
+            return None;
+        }
+        let node = Rng::new(seed ^ 0x62A9).index(n_nodes);
+        let (at, dur) = (0.1 * window_us, 0.8 * window_us);
+        match (parts.get(1), parts.get(2), parts.get(3)) {
+            (Some(&"slow"), Some(f), None) => {
+                Some(FaultPlan::none().and_slowdown(node, at, dur, f.parse().ok()?))
+            }
+            (Some(&"err"), Some(p), None) => {
+                Some(FaultPlan::none().and_error_rate(node, at, dur, p.parse().ok()?))
+            }
+            (Some(&"hang"), Some(p), Some(s)) => Some(FaultPlan::none().and_hang(
+                node,
+                at,
+                dur,
+                p.parse().ok()?,
+                s.parse().ok()?,
+            )),
+            (Some(&"mix"), Some(n), None) => Some(FaultPlan::seeded_gray(
+                seed,
+                n_nodes,
+                window_us,
+                n.parse().ok()?,
+                service_scale_us,
+            )),
+            _ => None,
+        }
+    }
+
     pub fn faults(&self) -> &[Fault] {
         &self.faults
+    }
+
+    /// The fail-stop subset — what the fleets' up/down machinery executes.
+    pub fn kills(&self) -> Vec<Fault> {
+        self.faults.iter().filter(|f| f.mode == FaultMode::Kill).copied().collect()
+    }
+
+    /// The gray subset — what the service-time/error injectors execute.
+    pub fn grays(&self) -> Vec<Fault> {
+        self.faults.iter().filter(|f| f.mode != FaultMode::Kill).copied().collect()
+    }
+
+    pub fn has_gray(&self) -> bool {
+        self.faults.iter().any(|f| f.mode != FaultMode::Kill)
+    }
+
+    /// Fold every gray window active on `node` at `t_us` into one
+    /// effect: slowdown factors multiply, error and hang probabilities
+    /// saturate-add (capped at 1), stall times add.
+    pub fn gray_at(&self, node: usize, t_us: f64) -> GrayEffect {
+        let mut eff = GrayEffect::clean();
+        for f in &self.faults {
+            if f.node != node || !f.active_at(t_us) {
+                continue;
+            }
+            match f.mode {
+                FaultMode::Kill => {}
+                FaultMode::Slowdown { factor } => eff.slow_factor *= factor,
+                FaultMode::ErrorRate { p } => eff.error_p = (eff.error_p + p).min(1.0),
+                FaultMode::Hang { p, stall_us } => {
+                    eff.hang_p = (eff.hang_p + p).min(1.0);
+                    eff.stall_us += stall_us;
+                }
+            }
+        }
+        eff
     }
 
     pub fn is_empty(&self) -> bool {
@@ -83,7 +287,12 @@ impl FaultPlan {
         if self.is_empty() {
             "no-faults".into()
         } else {
-            format!("{} faults", self.faults.len())
+            let grays = self.grays().len();
+            match (self.faults.len() - grays, grays) {
+                (k, 0) => format!("{k} faults"),
+                (0, g) => format!("{g} gray faults"),
+                (k, g) => format!("{k} faults + {g} gray"),
+            }
         }
     }
 }
@@ -100,6 +309,7 @@ mod tests {
         assert_eq!(a.len(), 6);
         assert!(a.faults().windows(2).all(|w| w[0].at_us <= w[1].at_us));
         assert!(a.faults().iter().all(|f| f.node < 4 && f.at_us <= 1e6 && f.down_us > 0.0));
+        assert!(a.faults().iter().all(|f| f.mode == FaultMode::Kill));
         let c = FaultPlan::seeded(8, 4, 1e6, 6, 50_000.0);
         assert_ne!(a.faults(), c.faults(), "different seeds script different failures");
     }
@@ -111,5 +321,63 @@ mod tests {
         assert_eq!(plan.faults()[1].node, 1);
         assert_eq!(plan.label(), "2 faults");
         assert_eq!(FaultPlan::none().label(), "no-faults");
+    }
+
+    #[test]
+    fn gray_windows_fold_and_stay_invisible_to_kills() {
+        let plan = FaultPlan::kill(0, 0.0, 100.0)
+            .and_slowdown(1, 100.0, 400.0, 8.0)
+            .and_slowdown(1, 200.0, 100.0, 2.0)
+            .and_error_rate(1, 100.0, 400.0, 0.3)
+            .and_hang(2, 0.0, 1_000.0, 0.05, 500.0);
+        assert_eq!(plan.kills().len(), 1);
+        assert_eq!(plan.grays().len(), 4);
+        assert!(plan.has_gray());
+        assert_eq!(plan.label(), "1 faults + 4 gray");
+
+        // Outside any window: clean.
+        assert!(plan.gray_at(1, 50.0).is_clean());
+        // One straggler window + errors.
+        let e = plan.gray_at(1, 150.0);
+        assert_eq!(e.slow_factor, 8.0);
+        assert_eq!(e.error_p, 0.3);
+        // Overlapping straggler windows multiply.
+        assert_eq!(plan.gray_at(1, 250.0).slow_factor, 16.0);
+        // Hang node carries stall probability and stall time.
+        let h = plan.gray_at(2, 500.0);
+        assert_eq!((h.hang_p, h.stall_us), (0.05, 500.0));
+        // Kills do not contribute gray effects.
+        assert!(plan.gray_at(0, 50.0).is_clean());
+        // Window end is exclusive.
+        assert!(plan.gray_at(1, 500.0).is_clean());
+    }
+
+    #[test]
+    fn seeded_gray_matrix_is_deterministic_and_gray_only() {
+        let a = FaultPlan::seeded_gray(11, 4, 1e6, 5, 300.0);
+        let b = FaultPlan::seeded_gray(11, 4, 1e6, 5, 300.0);
+        assert_eq!(a.faults(), b.faults());
+        assert_eq!(a.grays().len(), 5);
+        assert!(a.kills().is_empty());
+        assert_ne!(a.faults(), FaultPlan::seeded_gray(12, 4, 1e6, 5, 300.0).faults());
+    }
+
+    #[test]
+    fn cli_specs_parse_back_compat_and_gray() {
+        let kills = FaultPlan::parse_cli("3", 7, 4, 1e6, 300.0).unwrap();
+        assert_eq!(kills.kills().len(), 3);
+        assert!(FaultPlan::parse_cli("0", 7, 4, 1e6, 300.0).unwrap().is_empty());
+        let slow = FaultPlan::parse_cli("gray:slow:10", 7, 4, 1e6, 300.0).unwrap();
+        assert_eq!(slow.grays().len(), 1);
+        assert!(matches!(slow.faults()[0].mode, FaultMode::Slowdown { factor } if factor == 10.0));
+        let err = FaultPlan::parse_cli("gray:err:0.2", 7, 4, 1e6, 300.0).unwrap();
+        assert!(matches!(err.faults()[0].mode, FaultMode::ErrorRate { p } if p == 0.2));
+        let hang = FaultPlan::parse_cli("gray:hang:0.05:800", 7, 4, 1e6, 300.0).unwrap();
+        assert!(
+            matches!(hang.faults()[0].mode, FaultMode::Hang { p, stall_us } if p == 0.05 && stall_us == 800.0)
+        );
+        assert_eq!(FaultPlan::parse_cli("gray:mix:4", 7, 4, 1e6, 300.0).unwrap().len(), 4);
+        assert!(FaultPlan::parse_cli("bogus", 7, 4, 1e6, 300.0).is_none());
+        assert!(FaultPlan::parse_cli("gray:slow", 7, 4, 1e6, 300.0).is_none());
     }
 }

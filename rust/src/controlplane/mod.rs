@@ -45,7 +45,7 @@ pub use autoscaler::{
     Autoscaler, CostAware, FleetObservation, ReactiveUtilisation, ScalingAction, SlaLatency,
     StaticFleet,
 };
-pub use faults::{Fault, FaultPlan};
+pub use faults::{Fault, FaultMode, FaultPlan, GrayEffect};
 pub use real::{ManagedCluster, ManagedClusterConfig, RealClass};
 pub use report::{ClassUsage, FleetDynamicsReport, ScalingEvent, ScalingEventKind};
 pub use sim::{simulate_fleet, FleetSimConfig, SimClass};

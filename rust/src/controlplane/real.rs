@@ -254,7 +254,7 @@ impl ManagedCluster {
         }
         let mut peak_by_class = billable_by_class.clone();
         let mut peak_total = slots.len();
-        let faults = cfg.faults.faults().to_vec();
+        let faults = cfg.faults.kills();
         let mut next_fault = 0usize;
         // (revive time µs, slot) — kept sorted by construction order of
         // faults, merged into the control-event stream below.
@@ -513,6 +513,7 @@ impl ManagedCluster {
                 backend: s.backend.clone(),
                 completed_requests: completed[i],
                 completed_queries: completed_q[i],
+                failed_requests: 0,
                 req_p90_us: if lat[i].is_empty() { 0.0 } else { lat[i].p90() },
                 cache_hit_rate: if s.cache_lookups == 0 {
                     0.0
@@ -520,6 +521,7 @@ impl ManagedCluster {
                     s.cache_hits as f64 / s.cache_lookups as f64
                 },
                 mean_aggregation: s.agg_requests as f64 / s.agg_calls.max(1) as f64,
+                health: 1.0,
             })
             .collect();
         let (lookups, hits) = slots
@@ -539,6 +541,7 @@ impl ManagedCluster {
             dropped_queries: dropped_q,
             lost_queries: lost_q,
             failed,
+            failed_queries: 0,
             req_p50_us: p50,
             req_p90_us: p90,
             req_p99_us: p99,
@@ -583,6 +586,7 @@ impl ManagedCluster {
             },
             rerouted,
             peak_nodes: peak_total,
+            gray_fault_windows: cfg.faults.grays().len(),
         })
     }
 }

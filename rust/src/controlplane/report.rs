@@ -117,6 +117,11 @@ pub struct FleetDynamicsReport {
     pub rerouted: usize,
     /// Most nodes simultaneously billed.
     pub peak_nodes: usize,
+    /// Gray degradation windows scripted by the fault plan (stragglers,
+    /// error bursts, hangs). Gray faults never touch the up/down
+    /// machinery — they surface as `cluster.failed` calls and inflated
+    /// latency, which is exactly what makes them gray.
+    pub gray_fault_windows: usize,
 }
 
 impl FleetDynamicsReport {
@@ -181,6 +186,7 @@ mod tests {
             dropped_queries: 0,
             lost_queries: 0,
             failed: 0,
+            failed_queries: 0,
             req_p50_us: 0.0,
             req_p90_us: 0.0,
             req_p99_us: 0.0,
@@ -209,6 +215,7 @@ mod tests {
             sla_attainment: 0.93,
             rerouted: 0,
             peak_nodes: 2,
+            gray_fault_windows: 0,
         };
         assert!((r.dollars_per_mquery() - 1.5).abs() < 1e-12);
         assert!(r.meets_sla(0.9));

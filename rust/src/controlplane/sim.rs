@@ -387,8 +387,11 @@ pub fn simulate_fleet(
             req: rid,
         });
     }
-    for (i, _f) in cfg.faults.faults().iter().enumerate() {
-        push_ev(&mut heap, &mut seq, cfg.faults.faults()[i].at_us, Ev::FaultDown { fault: i });
+    // The fleet's up/down machinery executes the fail-stop subset only;
+    // gray windows degrade service inside the cluster layer instead.
+    let kills = cfg.faults.kills();
+    for (i, f) in kills.iter().enumerate() {
+        push_ev(&mut heap, &mut seq, f.at_us, Ev::FaultDown { fault: i });
     }
     if cfg.tick_us <= end_us {
         push_ev(&mut heap, &mut seq, cfg.tick_us, Ev::Tick);
@@ -498,7 +501,7 @@ pub fn simulate_fleet(
                 try_start_kernel(node, &mut nodes, &reqs, o, now, &mut heap, &mut seq);
             }
             Ev::FaultDown { fault } => {
-                let f = cfg.faults.faults()[fault];
+                let f = kills[fault];
                 if f.node >= nodes.len()
                     || matches!(nodes[f.node].state, NodeState::Down | NodeState::Retired)
                 {
@@ -707,9 +710,11 @@ pub fn simulate_fleet(
             backend: n.spec.class_name.to_string(),
             completed_requests: n.completed,
             completed_queries: n.completed_q,
+            failed_requests: 0,
             req_p90_us: if n.lat.is_empty() { 0.0 } else { n.lat.p90() },
             cache_hit_rate: if n.lookups == 0 { 0.0 } else { n.hits as f64 / n.lookups as f64 },
             mean_aggregation: 1.0,
+            health: 1.0,
         })
         .collect();
 
@@ -726,6 +731,7 @@ pub fn simulate_fleet(
         dropped_queries: dropped_q,
         lost_queries: lost_q,
         failed: 0,
+        failed_queries: 0,
         req_p50_us: p50,
         req_p90_us: p90,
         req_p99_us: p99,
@@ -767,6 +773,7 @@ pub fn simulate_fleet(
         sla_attainment: within_sla as f64 / arrivals.len() as f64,
         rerouted,
         peak_nodes: peak_total,
+        gray_fault_windows: cfg.faults.grays().len(),
     }
 }
 

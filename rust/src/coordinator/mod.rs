@@ -33,8 +33,10 @@ pub mod sim;
 pub use config::{AggregationPolicy, FailurePolicy, PipelineConfig, Topology};
 pub use crossval::{
     cross_validate, cross_validate_cluster_policies, cross_validate_frontdoor_policies,
-    cross_validate_scaling_policies, ClusterPolicyCrossValidation, CrossValidation,
-    FrontdoorPolicyCrossValidation, ScalingPolicyCrossValidation,
+    cross_validate_resilience_policies, cross_validate_scaling_policies,
+    resilience_crossval_faults, ClusterPolicyCrossValidation, CrossValidation,
+    FrontdoorPolicyCrossValidation, ResiliencePolicyCrossValidation,
+    ScalingPolicyCrossValidation,
 };
 pub use domain_explorer::{DomainExplorer, MctStrategy, UserQueryOutcome};
 pub use metrics::{DualClock, Percentiles};

@@ -53,6 +53,7 @@ use std::collections::VecDeque;
 
 use crate::controlplane::ScalingEvent;
 use crate::coordinator::DualClock;
+use crate::resilience::{ResilienceCounters, ResiliencePolicy};
 use crate::workload::SessionPlan;
 
 /// The three-rung backpressure ladder of the front door.
@@ -165,6 +166,10 @@ pub struct FrontdoorConfig {
     pub event_threads: usize,
     pub backpressure: BackpressurePolicy,
     pub mode: FrontdoorMode,
+    /// Gray-failure resilience ladder (deadlines, retries, hedges,
+    /// breakers, brown-out routing) — [`ResiliencePolicy::none`] keeps
+    /// the pre-resilience behaviour bit-for-bit.
+    pub resilience: ResiliencePolicy,
 }
 
 impl FrontdoorConfig {
@@ -173,6 +178,7 @@ impl FrontdoorConfig {
             event_threads: event_threads.max(1),
             backpressure,
             mode: FrontdoorMode::Event,
+            resilience: ResiliencePolicy::none(),
         }
     }
 
@@ -183,11 +189,26 @@ impl FrontdoorConfig {
             event_threads: 1,
             backpressure: BackpressurePolicy::Window { window: 1 },
             mode: FrontdoorMode::ThreadPerSession { max_threads: max_threads.max(1) },
+            resilience: ResiliencePolicy::none(),
         }
     }
 
+    pub fn with_resilience(mut self, resilience: ResiliencePolicy) -> FrontdoorConfig {
+        self.resilience = resilience;
+        self
+    }
+
     pub fn label(&self) -> String {
-        format!("{} bp={}", self.mode.label(), self.backpressure.label())
+        if self.resilience.is_none() {
+            format!("{} bp={}", self.mode.label(), self.backpressure.label())
+        } else {
+            format!(
+                "{} bp={} res={}",
+                self.mode.label(),
+                self.backpressure.label(),
+                self.resilience.label()
+            )
+        }
     }
 }
 
@@ -211,7 +232,12 @@ pub(crate) struct FrontdoorCounters {
     pub(crate) completed_queries: usize,
     pub(crate) shed_socket_queries: usize,
     pub(crate) shed_queue_queries: usize,
+    /// Queries whose accept-clock deadline expired before completion —
+    /// cancelled work, never counted completed.
+    pub(crate) shed_deadline_queries: usize,
     pub(crate) lost_queries: usize,
+    /// Resilience-mechanism accounting (retries, hedges, breakers, …).
+    pub(crate) res: ResilienceCounters,
 }
 
 impl FrontdoorCounters {
@@ -222,7 +248,9 @@ impl FrontdoorCounters {
         self.completed_queries += o.completed_queries;
         self.shed_socket_queries += o.shed_socket_queries;
         self.shed_queue_queries += o.shed_queue_queries;
+        self.shed_deadline_queries += o.shed_deadline_queries;
         self.lost_queries += o.lost_queries;
+        self.res.merge(&o.res);
     }
 }
 
@@ -243,13 +271,22 @@ pub struct FrontdoorReport {
     pub sessions_shed: usize,
 
     /// Conservation: `offered = completed + shed_socket + shed_queue +
-    /// lost`, all in queries, measured from the accept clock.
+    /// shed_deadline + lost`, all in queries, measured from the accept
+    /// clock.
     pub offered_queries: usize,
     pub completed_queries: usize,
     pub shed_socket_queries: usize,
     pub shed_queue_queries: usize,
+    /// Deadline-expired queries — cancelled, never completed.
+    pub shed_deadline_queries: usize,
     pub lost_queries: usize,
     pub completed_requests: usize,
+
+    /// Resilience-policy label (`no-retry`, `retry+hedge`, …).
+    pub resilience: String,
+    /// Resilience-mechanism counters (hedge wins, breaker trips, physical
+    /// backend submissions, …).
+    pub res: ResilienceCounters,
 
     /// Offered queries over the client-clock span of the plans.
     pub offered_qps: f64,
@@ -298,8 +335,11 @@ impl FrontdoorReport {
             completed_queries: counters.completed_queries,
             shed_socket_queries: counters.shed_socket_queries,
             shed_queue_queries: counters.shed_queue_queries,
+            shed_deadline_queries: counters.shed_deadline_queries,
             lost_queries: counters.lost_queries,
             completed_requests: counters.completed_requests,
+            resilience: config.resilience.label(),
+            res: counters.res,
             offered_qps: offered_queries as f64 / span_s.max(1e-9),
             goodput_qps: counters.completed_queries as f64 / wall_s.max(1e-9),
             wall_s,
@@ -313,13 +353,25 @@ impl FrontdoorReport {
 
     /// The end-to-end conservation law, from the accept clock: every
     /// offered query is completed, refused at the socket, shed in queue,
-    /// or lost to a fault — nothing vanishes.
+    /// cancelled at its deadline, or lost to a fault — nothing vanishes,
+    /// and a hedged request still counts exactly once.
     pub fn conserves_queries(&self) -> bool {
         self.offered_queries
             == self.completed_queries
                 + self.shed_socket_queries
                 + self.shed_queue_queries
+                + self.shed_deadline_queries
                 + self.lost_queries
+    }
+
+    /// Physical backend submissions per completed request — the hedge/
+    /// retry amplification factor (1.0 when no mechanism fired).
+    pub fn backend_load_factor(&self) -> f64 {
+        if self.res.backend_requests == 0 || self.completed_requests == 0 {
+            1.0
+        } else {
+            self.res.backend_requests as f64 / self.completed_requests as f64
+        }
     }
 
     /// Completed fraction of offered queries (goodput as a ratio).
@@ -334,10 +386,10 @@ impl FrontdoorReport {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} [{}] {} | sessions {}/{} (+{} shed) | q: {} offered → {} done, {} shed@socket, \
-             {} shed@queue, {} lost ({:.0} % delivered) | goodput {:.0} q/s | accept p50/p90/p99 \
-             {:.0}/{:.0}/{:.0} µs (submit p99 {:.0} µs, gap {:.0} µs)",
+             {} shed@queue, {} shed@deadline, {} lost ({:.0} % delivered) | goodput {:.0} q/s | \
+             accept p50/p90/p99 {:.0}/{:.0}/{:.0} µs (submit p99 {:.0} µs, gap {:.0} µs)",
             self.mode,
             self.backpressure,
             self.label,
@@ -348,6 +400,7 @@ impl FrontdoorReport {
             self.completed_queries,
             self.shed_socket_queries,
             self.shed_queue_queries,
+            self.shed_deadline_queries,
             self.lost_queries,
             self.delivered_fraction() * 100.0,
             self.goodput_qps,
@@ -356,7 +409,26 @@ impl FrontdoorReport {
             self.accept_p99_us,
             self.submit_p99_us,
             self.omission_gap_us(),
-        )
+        );
+        if self.res.any() {
+            s.push_str(&format!(
+                " | resilience[{}]: {} retries ({} budget-refused), {} hedges ({} wins), \
+                 {} breaker-rejects/{} trips, {} degraded, {} backend reqs ({:.2}× load), \
+                 {} gray windows",
+                self.resilience,
+                self.res.retries,
+                self.res.retry_budget_exhausted,
+                self.res.hedges_issued,
+                self.res.hedge_wins,
+                self.res.breaker_rejections,
+                self.res.breaker_trips,
+                self.res.degraded_requests,
+                self.res.backend_requests,
+                self.backend_load_factor(),
+                self.res.gray_fault_windows,
+            ));
+        }
+        s
     }
 }
 
@@ -420,8 +492,16 @@ mod tests {
             completed_requests: 30,
             completed_queries: 240,
             shed_socket_queries: 48,
-            shed_queue_queries: 24,
+            shed_queue_queries: 20,
+            shed_deadline_queries: 4,
             lost_queries: 8,
+            res: ResilienceCounters {
+                retries: 3,
+                hedges_issued: 2,
+                hedge_wins: 1,
+                backend_requests: 35,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let r = FrontdoorReport::assemble(
@@ -440,10 +520,15 @@ mod tests {
         assert!(r.omission_gap_us() > 0.0);
         assert!(r.accept_p99_us >= r.accept_p90_us && r.accept_p90_us >= r.accept_p50_us);
         assert!(r.summary().contains("shed@socket"));
+        assert!(r.summary().contains("resilience[no-retry]"), "{}", r.summary());
+        assert!((r.backend_load_factor() - 35.0 / 30.0).abs() < 1e-12);
 
         // Conservation actually fails when a query vanishes.
         let mut broken = r.clone();
         broken.lost_queries = 0;
         assert!(!broken.conserves_queries());
+        let mut broken = r.clone();
+        broken.shed_deadline_queries = 0;
+        assert!(!broken.conserves_queries(), "deadline sheds are part of the law");
     }
 }

@@ -18,18 +18,20 @@
 //! accepted session, window 1, sessions beyond the thread budget refused
 //! at accept. The bench frontier measures exactly this pair.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::backend::BackendFactory;
-use crate::cluster::real::{ClusterHandle, Submit};
+use crate::backend::{gray_fault_factory, BackendFactory};
+use crate::cluster::real::{ClusterHandle, Submit, SubmitOpts};
 use crate::cluster::ClusterConfig;
 use crate::controlplane::{FaultPlan, ScalingEvent};
 use crate::coordinator::pipeline::{pace_until, Completion};
 use crate::coordinator::DualClock;
 use crate::prng::Rng;
+use crate::resilience::{CircuitBreaker, ResiliencePolicy, RetryBudget, RetryPolicy};
 use crate::rules::types::{MctQuery, World};
 use crate::workload::{QueryFactory, SessionPlan};
 
@@ -53,13 +55,17 @@ pub fn run_frontdoor(
     fd: &FrontdoorConfig,
     faults: &FaultPlan,
 ) -> Result<FrontdoorReport> {
-    let factories = vec![factory; cluster.nodes()];
     let classes: Vec<String> =
         cluster.specs.iter().map(|s| s.class.name.to_string()).collect();
     let label = format!("{} sessions | {}", plans.len(), cluster.label());
     let payloads = materialise(world, seed, plans);
-    let handle = ClusterHandle::spawn(&cluster, &factories);
+    // The gray decorators and the fault driver share one clock origin, so
+    // a window scripted at `at_us` opens at the same instant for both.
     let t0 = Instant::now();
+    let factories: Vec<BackendFactory> = (0..cluster.nodes())
+        .map(|i| gray_fault_factory(factory.clone(), faults.clone(), i, t0, seed))
+        .collect();
+    let handle = ClusterHandle::spawn(&cluster, &factories);
 
     let (counters, mut clock, fault_events) = std::thread::scope(|scope| {
         let h = &handle;
@@ -77,9 +83,14 @@ pub fn run_frontdoor(
                     parts[s % threads].push((plans[s].clone(), payload));
                 }
                 let policy = fd.backpressure;
+                let res = fd.resilience;
                 parts
                     .into_iter()
-                    .map(|part| scope.spawn(move || run_event_thread(h, t0, policy, part)))
+                    .enumerate()
+                    .map(|(i, part)| {
+                        let tseed = seed ^ ((i as u64 + 1) << 17);
+                        scope.spawn(move || run_event_thread(h, t0, policy, res, tseed, part))
+                    })
                     .collect::<Vec<_>>()
             }
             FrontdoorMode::ThreadPerSession { max_threads } => {
@@ -87,9 +98,7 @@ pub fn run_frontdoor(
                 // first `max_threads` sessions by accept time get one
                 // blocking thread each; everyone else is refused whole.
                 let mut order: Vec<usize> = (0..plans.len()).collect();
-                order.sort_by(|&a, &b| {
-                    plans[a].accept_us.partial_cmp(&plans[b].accept_us).unwrap()
-                });
+                order.sort_by(|&a, &b| plans[a].accept_us.total_cmp(&plans[b].accept_us));
                 let accepted: std::collections::HashSet<usize> =
                     order.iter().take(max_threads).copied().collect();
                 let mut workers = Vec::new();
@@ -115,6 +124,7 @@ pub fn run_frontdoor(
             counters.merge(&c);
             clock.merge(&dc);
         }
+        counters.res.gray_fault_windows = faults.grays().len();
         let fault_events = fault_driver.join().expect("fault driver panicked");
         (counters, clock, fault_events)
     });
@@ -177,8 +187,32 @@ impl Ev {
     }
 }
 
-/// Per-thread reactor state: the sessions it owns, their ladder gates, and
-/// this connection's parked-batch budget.
+/// Resilience state of one in-flight *logical* request. All physical
+/// copies (first attempt, retries, the hedge) share the request id; the
+/// logical request holds one window slot and resolves exactly once.
+#[derive(Debug, Clone, Copy)]
+struct Flight {
+    session: usize,
+    batch: usize,
+    n_queries: usize,
+    /// Physical copies currently inside the cluster.
+    copies: usize,
+    /// Node of the newest non-hedge copy — hedges exclude it.
+    first_node: usize,
+    /// Attempts used, first submission included.
+    attempt: u32,
+    prev_backoff_us: f64,
+    /// Set while waiting out a retry backoff (`copies == 0`).
+    retry_at_us: Option<f64>,
+    /// Hedge trigger instant; `None` when hedging is off or untrained.
+    hedge_at_us: Option<f64>,
+    hedged: bool,
+}
+
+/// Per-thread reactor state: the sessions it owns, their ladder gates,
+/// this connection's parked-batch budget, and the resilience layer
+/// (deadlines, budgeted retries, hedges, breakers — all per-connection,
+/// like a client library's view of the fleet).
 struct Reactor<'a> {
     handle: &'a ClusterHandle,
     t0: Instant,
@@ -190,29 +224,89 @@ struct Reactor<'a> {
     counters: FrontdoorCounters,
     clock: DualClock,
     ctx: mpsc::Sender<Completion>,
+    res: ResiliencePolicy,
+    flights: HashMap<u64, Flight>,
+    budget: RetryBudget,
+    breakers: Vec<CircuitBreaker>,
+    retry_rng: Rng,
+    breaker_rng: Rng,
+    /// EWMA of winner latencies — the hedge trigger's expectation. Zero
+    /// until the first completion trains it (no hedges before that).
+    lat_ewma: f64,
 }
 
 impl Reactor<'_> {
+    fn submit_opts<'d>(&self, deny: Option<&'d [bool]>, exclude: Option<usize>) -> SubmitOpts<'d> {
+        SubmitOpts { exclude, deny, brownout: self.res.brownout, degrade: self.res.brownout }
+    }
+
+    /// The per-replica breaker mask for this routing decision, `None`
+    /// when no breaker policy is set.
+    fn breaker_deny(&mut self, now: f64) -> Option<Vec<bool>> {
+        self.res.breaker?;
+        let rng = &mut self.breaker_rng;
+        Some(self.breakers.iter_mut().map(|b| !b.allows(now, rng)).collect())
+    }
+
     /// Submit the session's parked batches while its window has room.
     /// An admission refusal either bounces the batch back to its parked
     /// slot (ladder policies — the refusal *is* backpressure) or drops it
-    /// as shed-in-queue (`None` — nowhere to hold it).
+    /// as shed-in-queue (`None` — nowhere to hold it). Batches whose
+    /// deadline lapsed while parked are cancelled, never submitted.
     fn drain_session(&mut self, s: usize) {
         let window = self.policy.window();
         while self.gates[s].in_flight < window {
             let Some(&b) = self.gates[s].parked.front() else { break };
+            let now = now_us(self.t0);
+            let n_queries = self.sessions[s].1[b].len();
+            if self.res.expired(self.sessions[s].0.ready_us(b), now) {
+                self.gates[s].parked.pop_front();
+                self.thread_parked -= 1;
+                self.counters.shed_deadline_queries += n_queries;
+                continue;
+            }
             let station = self.sessions[s].0.station;
             let queries = self.sessions[s].1[b].clone();
-            let n_queries = queries.len();
             let id = ((s as u64) << 32) | b as u64;
-            match self.handle.try_submit(station, queries, id, &self.ctx) {
-                Submit::Submitted { .. } => {
+            let deny = self.breaker_deny(now);
+            let opts = self.submit_opts(deny.as_deref(), None);
+            match self.handle.try_submit_ext(station, queries, id, &self.ctx, opts) {
+                Submit::Submitted { node, degraded } => {
                     self.gates[s].parked.pop_front();
                     self.thread_parked -= 1;
                     self.gates[s].in_flight += 1;
                     self.in_flight += 1;
+                    self.budget.deposit();
+                    self.counters.res.backend_requests += 1;
+                    if degraded {
+                        self.counters.res.degraded_requests += 1;
+                    }
+                    let hedge_at = self
+                        .res
+                        .hedge
+                        .filter(|_| self.lat_ewma > 0.0)
+                        .and_then(|h| h.trigger_us(self.lat_ewma))
+                        .map(|trig| now + trig);
+                    self.flights.insert(
+                        id,
+                        Flight {
+                            session: s,
+                            batch: b,
+                            n_queries,
+                            copies: 1,
+                            first_node: node,
+                            attempt: 1,
+                            prev_backoff_us: 0.0,
+                            retry_at_us: None,
+                            hedge_at_us: hedge_at,
+                            hedged: false,
+                        },
+                    );
                 }
                 Submit::Shed => {
+                    if deny.as_ref().is_some_and(|d| d.iter().all(|&x| x)) {
+                        self.counters.res.breaker_rejections += 1;
+                    }
                     if self.policy.reparks_on_admission_shed() {
                         return; // stays parked; retried on completion/tick
                     }
@@ -233,17 +327,180 @@ impl Reactor<'_> {
     }
 
     fn complete(&mut self, c: Completion) {
-        let s = (c.id >> 32) as usize;
-        let b = (c.id & 0xFFFF_FFFF) as usize;
-        // Accept clock: from when the client had the batch, not from
-        // submission. The max() absorbs sub-µs cross-clock jitter.
-        let accept_lat = (now_us(self.t0) - self.sessions[s].0.ready_us(b)).max(c.latency_us);
-        self.clock.record(accept_lat, c.latency_us);
-        self.gates[s].in_flight -= 1;
-        self.in_flight -= 1;
-        self.counters.completed_requests += 1;
-        self.counters.completed_queries += c.n_queries;
-        self.handle.note_completion(&c);
+        let now = now_us(self.t0);
+        if self.res.breaker.is_some() {
+            let norm = c.latency_us / (self.handle.outstanding(c.node) as f64 + 1.0);
+            self.breakers[c.node].on_outcome(now, c.ok, norm);
+            self.counters.res.breaker_trips = self.breakers.iter().map(|b| b.trips()).sum();
+        }
+        let Some(entry) = self.flights.get_mut(&c.id) else {
+            // A copy of an already-resolved request (hedge loser, late
+            // retry): pure signal, no counters.
+            self.handle.note_outcome(&c, false);
+            return;
+        };
+        entry.copies -= 1;
+        let fl = *entry;
+        let s = fl.session;
+        let ready = self.sessions[s].0.ready_us(fl.batch);
+        let expired = self.res.expired(ready, now);
+        self.handle.note_outcome(&c, expired);
+        if c.ok && !expired {
+            // First OK copy inside the deadline wins and counts once.
+            self.flights.remove(&c.id);
+            let accept_lat = (now - ready).max(c.latency_us);
+            self.clock.record(accept_lat, c.latency_us);
+            self.gates[s].in_flight -= 1;
+            self.in_flight -= 1;
+            self.counters.completed_requests += 1;
+            self.counters.completed_queries += c.n_queries;
+            if fl.hedged && c.node != fl.first_node {
+                self.counters.res.hedge_wins += 1;
+            }
+            self.lat_ewma = if self.lat_ewma > 0.0 {
+                self.lat_ewma + 0.2 * (c.latency_us - self.lat_ewma)
+            } else {
+                c.latency_us
+            };
+            return;
+        }
+        if expired {
+            // Past its deadline: cancelled work, never completed.
+            self.flights.remove(&c.id);
+            self.counters.shed_deadline_queries += fl.n_queries;
+            self.gates[s].in_flight -= 1;
+            self.in_flight -= 1;
+            return;
+        }
+        // Failed copy inside the deadline: an in-flight twin may still
+        // win; only the last copy standing goes to the retry path.
+        if fl.copies == 0 {
+            self.fail_or_retry(c.id, now);
+        }
+    }
+
+    /// Resolve the flight as unrecoverable (`lost`) or schedule a
+    /// budgeted, deadline-aware backoff retry.
+    fn fail_or_retry(&mut self, id: u64, now: f64) {
+        let fl = self.flights[&id];
+        let ready = self.sessions[fl.session].0.ready_us(fl.batch);
+        let give_up = |r: &mut Self| {
+            r.flights.remove(&id);
+            r.counters.lost_queries += fl.n_queries;
+            r.gates[fl.session].in_flight -= 1;
+            r.in_flight -= 1;
+        };
+        let Some(rp) = self.res.retry else {
+            give_up(self);
+            return;
+        };
+        if fl.attempt >= rp.max_attempts {
+            give_up(self);
+            return;
+        }
+        if !self.budget.try_spend() {
+            self.counters.res.retry_budget_exhausted += 1;
+            give_up(self);
+            return;
+        }
+        let backoff = rp.backoff_us(fl.prev_backoff_us, &mut self.retry_rng);
+        self.counters.res.retries += 1;
+        if self.res.expired(ready, now + backoff) {
+            // The backoff alone would blow the deadline: cancel now.
+            self.flights.remove(&id);
+            self.counters.shed_deadline_queries += fl.n_queries;
+            self.gates[fl.session].in_flight -= 1;
+            self.in_flight -= 1;
+            return;
+        }
+        let entry = self.flights.get_mut(&id).expect("retrying a live flight");
+        entry.attempt += 1;
+        entry.prev_backoff_us = backoff;
+        entry.retry_at_us = Some(now + backoff);
+    }
+
+    /// Issue the retry copy whose backoff elapsed.
+    fn resubmit(&mut self, id: u64, now: f64) {
+        let fl = self.flights[&id];
+        let station = self.sessions[fl.session].0.station;
+        let queries = self.sessions[fl.session].1[fl.batch].clone();
+        let deny = self.breaker_deny(now);
+        let opts = self.submit_opts(deny.as_deref(), None);
+        match self.handle.try_submit_ext(station, queries, id, &self.ctx, opts) {
+            Submit::Submitted { node, degraded } => {
+                self.counters.res.backend_requests += 1;
+                if degraded {
+                    self.counters.res.degraded_requests += 1;
+                }
+                let entry = self.flights.get_mut(&id).expect("resubmitting a live flight");
+                entry.copies = 1;
+                entry.first_node = node;
+                entry.retry_at_us = None;
+            }
+            Submit::Shed => {
+                // Refused (admission, or every replica breaker-denied):
+                // the attempt is consumed like any other failure.
+                if deny.as_ref().is_some_and(|d| d.iter().all(|&x| x)) {
+                    self.counters.res.breaker_rejections += 1;
+                }
+                self.flights.get_mut(&id).expect("live flight").retry_at_us = None;
+                self.fail_or_retry(id, now);
+            }
+        }
+    }
+
+    /// Issue the one hedge copy to a different replica (one-shot: a
+    /// refusal forfeits the hedge rather than hammering the cluster).
+    fn hedge(&mut self, id: u64, now: f64) {
+        let fl = self.flights[&id];
+        let station = self.sessions[fl.session].0.station;
+        let queries = self.sessions[fl.session].1[fl.batch].clone();
+        let deny = self.breaker_deny(now);
+        let opts = self.submit_opts(deny.as_deref(), Some(fl.first_node));
+        match self.handle.try_submit_ext(station, queries, id, &self.ctx, opts) {
+            Submit::Submitted { .. } => {
+                self.counters.res.backend_requests += 1;
+                self.counters.res.hedges_issued += 1;
+                let entry = self.flights.get_mut(&id).expect("hedging a live flight");
+                entry.copies += 1;
+                entry.hedged = true;
+            }
+            Submit::Shed => {
+                self.flights.get_mut(&id).expect("live flight").hedged = true;
+            }
+        }
+    }
+
+    /// The reactor's resilience tick: fire due retries and hedges, cancel
+    /// backoff waits whose deadline lapsed. Runs on every loop iteration
+    /// (completions and ≤1 ms timeouts alike).
+    fn scan(&mut self) {
+        if self.res.is_none() || self.flights.is_empty() {
+            return;
+        }
+        let now = now_us(self.t0);
+        let ids: Vec<u64> = self.flights.keys().copied().collect();
+        for id in ids {
+            let Some(&fl) = self.flights.get(&id) else { continue };
+            let ready = self.sessions[fl.session].0.ready_us(fl.batch);
+            if fl.copies == 0 {
+                if self.res.expired(ready, now) {
+                    self.flights.remove(&id);
+                    self.counters.shed_deadline_queries += fl.n_queries;
+                    self.gates[fl.session].in_flight -= 1;
+                    self.in_flight -= 1;
+                } else if fl.retry_at_us.is_some_and(|due| due <= now) {
+                    self.resubmit(id, now);
+                }
+                continue;
+            }
+            if !fl.hedged
+                && fl.hedge_at_us.is_some_and(|due| due <= now)
+                && !self.res.expired(ready, now)
+            {
+                self.hedge(id, now);
+            }
+        }
     }
 }
 
@@ -254,6 +511,8 @@ fn run_event_thread(
     handle: &ClusterHandle,
     t0: Instant,
     policy: BackpressurePolicy,
+    res: ResiliencePolicy,
+    seed: u64,
     sessions: Vec<(SessionPlan, Vec<Vec<MctQuery>>)>,
 ) -> (FrontdoorCounters, DualClock) {
     let (ctx, crx) = mpsc::channel::<Completion>();
@@ -264,11 +523,10 @@ fn run_event_thread(
             events.push((plan.ready_us(b), Ev::Ready(s, b)));
         }
     }
-    events.sort_by(|x, y| {
-        x.0.partial_cmp(&y.0).unwrap().then_with(|| x.1.rank().cmp(&y.1.rank()))
-    });
+    events.sort_by(|x, y| x.0.total_cmp(&y.0).then_with(|| x.1.rank().cmp(&y.1.rank())));
 
     let n = sessions.len();
+    let n_nodes = handle.n_nodes();
     let mut r = Reactor {
         handle,
         t0,
@@ -280,6 +538,13 @@ fn run_event_thread(
         counters: FrontdoorCounters::default(),
         clock: DualClock::new(),
         ctx,
+        res,
+        flights: HashMap::new(),
+        budget: res.budget(),
+        breakers: vec![CircuitBreaker::new(res.breaker.unwrap_or_default()); n_nodes],
+        retry_rng: Rng::new(seed ^ 0x8E_774),
+        breaker_rng: Rng::new(seed ^ 0xB4EA_C3),
+        lat_ewma: 0.0,
     };
 
     let mut next_ev = 0usize;
@@ -330,9 +595,11 @@ fn run_event_thread(
                 while let Ok(c) = crx.try_recv() {
                     r.complete(c);
                 }
+                r.scan();
                 r.drain_all();
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
+                r.scan();
                 if r.thread_parked > 0 {
                     r.drain_all();
                 }
@@ -346,8 +613,9 @@ fn run_event_thread(
 }
 
 /// One blocking baseline thread: window-1 serial over its session's
-/// batches, retrying admission refusals on a 500 µs poll (a blocked
-/// connection, in the old architecture's terms).
+/// batches, retrying admission refusals on a capped exponential backoff
+/// with decorrelated jitter (a fixed-period poll synchronises refused
+/// threads into thundering herds; jitter spreads them out).
 fn run_session_thread(
     handle: &ClusterHandle,
     t0: Instant,
@@ -357,8 +625,11 @@ fn run_session_thread(
     let (ctx, crx) = mpsc::channel::<Completion>();
     let mut counters = FrontdoorCounters { sessions_accepted: 1, ..Default::default() };
     let mut clock = DualClock::new();
+    let repark = RetryPolicy::new(1, 100.0, 2_000.0);
+    let mut rng = Rng::new(0x9A11_5EED ^ (u64::from(plan.station) << 32) ^ plan.accept_us as u64);
     for (b, queries) in payloads.into_iter().enumerate() {
         pace_until(t0, plan.ready_us(b));
+        let mut backoff_us = 0.0;
         loop {
             match handle.try_submit(plan.station, queries.clone(), b as u64, &ctx) {
                 Submit::Submitted { .. } => {
@@ -371,7 +642,10 @@ fn run_session_thread(
                     handle.note_completion(&c);
                     break;
                 }
-                Submit::Shed => std::thread::sleep(Duration::from_micros(500)),
+                Submit::Shed => {
+                    backoff_us = repark.backoff_us(backoff_us, &mut rng);
+                    std::thread::sleep(Duration::from_micros(backoff_us as u64));
+                }
             }
         }
     }
@@ -387,12 +661,14 @@ fn drive_faults(
     faults: &FaultPlan,
     classes: &[String],
 ) -> Vec<ScalingEvent> {
+    // Only fail-stop faults drive the liveness mask; gray windows are
+    // executed inside the per-replica fault decorators.
     let mut timeline: Vec<(f64, usize, bool)> = Vec::new();
-    for f in faults.faults() {
+    for f in faults.kills() {
         timeline.push((f.at_us, f.node, false));
         timeline.push((f.at_us + f.down_us, f.node, true));
     }
-    timeline.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    timeline.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut up = vec![true; handle.n_nodes()];
     let mut events = Vec::new();
     for (t, node, live) in timeline {

@@ -10,15 +10,36 @@
 //! Both realisations satisfy the same conservation law; they differ only
 //! in which shed/lost bucket a fault lands in, which is exactly what the
 //! conservation property test pins down.
+//!
+//! **Gray faults and the resilience ladder.** Gray windows
+//! ([`FaultMode::Slowdown`](crate::controlplane::FaultMode) /
+//! `ErrorRate` / `Hang`) never touch the up/down machinery: their
+//! effects are sampled at *service start* from a seeded stream, exactly
+//! like `cluster::sim`. Against them the
+//! [`ResiliencePolicy`](crate::resilience::ResiliencePolicy) on the
+//! front-door config runs deadlines on the accept clock, budgeted
+//! retries with decorrelated-jitter backoff, tail-triggered hedges
+//! (one logical request = one window slot, however many physical copies
+//! fly; the first finisher wins and counts once), per-replica circuit
+//! breakers consulted at routing time, and brown-out health weights
+//! composed into the router — with the FPGA→CPU degradation ladder
+//! rerouting a browning accelerator's traffic before shedding it.
+//! Conservation extends to `offered = completed + shed_socket +
+//! shed_queue + shed_deadline + lost`; a deadline-expired request is
+//! cancelled work and is never counted completed.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet, VecDeque};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 
 use crate::cluster::{
-    update_service_estimate, AdmissionPolicy, ClusterSimConfig, Router, SimNodeSpec,
+    update_service_estimate, AdmissionPolicy, ClusterSimConfig, Router, SimEngine, SimNodeSpec,
 };
 use crate::controlplane::{FaultPlan, ScalingEvent};
 use crate::coordinator::{DualClock, Overheads};
+use crate::prng::Rng;
+use crate::resilience::{
+    CircuitBreaker, HealthScore, ResiliencePolicy, RetryBudget, BROWNOUT_DEGRADE_THRESHOLD,
+};
 use crate::workload::SessionPlan;
 
 use super::{
@@ -43,6 +64,11 @@ enum Event {
     Done { node: usize, epoch: u64 },
     Kill { node: usize },
     Revive { node: usize },
+    /// Retry of a failed logical request after its backoff.
+    Resubmit { session: usize, batch: usize },
+    /// Tail-latency hedge trigger; stale once the logical request moved
+    /// past `attempt` (a retry invalidates the pending hedge).
+    HedgeDue { session: usize, batch: usize, attempt: u32 },
 }
 
 /// One admitted request sitting in (or at the head of) a replica's FIFO.
@@ -52,6 +78,31 @@ struct Req {
     batch: usize,
     n_queries: usize,
     t_submit_us: f64,
+    /// Cleared by a gray error draw at service start: the call still
+    /// occupies the server, but completes as failed.
+    ok: bool,
+    /// A hedge copy (for first-winner attribution).
+    is_hedge: bool,
+}
+
+/// Resilience state of one *logical* request — however many physical
+/// copies (first attempt, retries, hedges) are in flight, the logical
+/// request holds exactly one window slot and resolves exactly once.
+#[derive(Debug, Clone, Copy)]
+struct Logical {
+    /// Physical copies currently in flight.
+    copies: usize,
+    /// Resolved (completed / deadline-shed / lost): later copies only do
+    /// node-FIFO bookkeeping.
+    resolved: bool,
+    /// One hedge per logical request, ever.
+    hedged: bool,
+    /// Attempts used, first submission included.
+    attempt: u32,
+    /// Previous backoff (decorrelated jitter feeds on it).
+    prev_backoff_us: f64,
+    /// Node of the newest non-hedge copy — the hedge excludes it.
+    first_node: usize,
 }
 
 /// A modeled replica: one FIFO server with drain-rate-matched service
@@ -90,6 +141,27 @@ struct Des<'a> {
     heap: BinaryHeap<Reverse<(u64, u64, Event)>>,
     seq: u64,
     fault_events: Vec<ScalingEvent>,
+    // ---- resilience layer -------------------------------------------
+    res: ResiliencePolicy,
+    faults: &'a FaultPlan,
+    /// Per-(session, batch) logical-request state.
+    logical: HashMap<(usize, usize), Logical>,
+    budget: RetryBudget,
+    breakers: Vec<CircuitBreaker>,
+    health: Vec<HealthScore>,
+    /// Gray effects are drawn at service start, so the draw order is
+    /// fixed by the (deterministic) event order.
+    gray_rng: Rng,
+    /// Backoff jitter draws.
+    retry_rng: Rng,
+    /// Half-open probe admission draws.
+    breaker_rng: Rng,
+    /// EWMA of winner latencies — the hedge trigger's expectation, like
+    /// the real reactor's. Deliberately *fleet-wide*: a per-target
+    /// estimate would learn the straggler's slowness as normal and stop
+    /// hedging exactly where hedges matter. Zero until the first
+    /// completion trains it (no hedges before that).
+    lat_ewma: f64,
 }
 
 impl Des<'_> {
@@ -107,12 +179,197 @@ impl Des<'_> {
     /// clock the real replica's tagged completion carries.
     fn enqueue(&mut self, node: usize, req: Req, t: f64) {
         if self.nodes[node].in_service.is_none() {
-            let service_us = self.specs[node].request_service_us(&self.overheads, req.n_queries);
-            self.nodes[node].in_service = Some(req);
-            let epoch = self.nodes[node].epoch;
-            self.push(t + service_us, Event::Done { node, epoch });
+            self.start_service(node, req, t);
         } else {
             self.nodes[node].queue.push_back(req);
+        }
+    }
+
+    /// Put `req` on the engine, sampling the node's gray effect *at
+    /// service start* (the same instant the real decorator samples at
+    /// call time): slowdowns stretch the service, error draws mark the
+    /// call failed, hang draws add the stall.
+    fn start_service(&mut self, node: usize, mut req: Req, t: f64) {
+        let mut service_us = self.specs[node].request_service_us(&self.overheads, req.n_queries);
+        let eff = self.faults.gray_at(node, t);
+        if !eff.is_clean() {
+            service_us *= eff.slow_factor;
+            if eff.error_p > 0.0 && self.gray_rng.chance(eff.error_p) {
+                req.ok = false;
+            }
+            if eff.hang_p > 0.0 && self.gray_rng.chance(eff.hang_p) {
+                service_us += eff.stall_us;
+            }
+        }
+        self.nodes[node].in_service = Some(req);
+        let epoch = self.nodes[node].epoch;
+        self.push(t + service_us, Event::Done { node, epoch });
+    }
+
+    /// Mask breaker-open replicas out of `live`. Returns true when the
+    /// breakers denied *every* otherwise-live replica — that, and only
+    /// that, is counted a breaker rejection (partial masks are the
+    /// breaker doing its routing job).
+    fn apply_breaker_mask(&mut self, live: &mut [bool], t: f64) -> bool {
+        if self.res.breaker.is_none() {
+            return false;
+        }
+        let had_live = live.iter().any(|l| *l);
+        let rng = &mut self.breaker_rng;
+        for (l, br) in live.iter_mut().zip(self.breakers.iter_mut()) {
+            if *l && !br.allows(t, rng) {
+                *l = false;
+            }
+        }
+        had_live && !live.iter().any(|l| *l)
+    }
+
+    /// Push the brown-out weights into the router (no-op unless the
+    /// policy routes on health).
+    fn apply_brownout(&mut self) {
+        if self.res.brownout {
+            let w: Vec<f64> = self.health.iter().map(HealthScore::weight).collect();
+            self.router.set_health(w);
+        }
+    }
+
+    /// Graceful-degradation ladder: a browning FPGA replica's traffic
+    /// fails over to the least-loaded live CPU replica before shedding.
+    fn degrade_target(&self, target: usize, live: &[bool], depths: &[usize]) -> Option<usize> {
+        if !self.res.brownout
+            || matches!(self.specs[target].engine, SimEngine::Cpu { .. })
+            || self.health[target].weight() >= BROWNOUT_DEGRADE_THRESHOLD
+        {
+            return None;
+        }
+        (0..live.len())
+            .filter(|&i| live[i] && matches!(self.specs[i].engine, SimEngine::Cpu { .. }))
+            .min_by_key(|&i| depths[i])
+    }
+
+    /// Route a retry/hedge copy: already-admitted work, so no second
+    /// admission pass — only liveness, breaker masks and (for hedges)
+    /// exclusion of the node the first copy sits on.
+    fn route_copy(&mut self, station: u32, t: f64, exclude: Option<usize>) -> Option<usize> {
+        let depths: Vec<usize> = self.nodes.iter().map(SimNode::depth).collect();
+        let mut live: Vec<bool> = self.nodes.iter().map(|n| n.up).collect();
+        self.apply_breaker_mask(&mut live, t);
+        if let Some(x) = exclude {
+            if x < live.len() && live.iter().enumerate().any(|(i, l)| *l && i != x) {
+                live[x] = false;
+            }
+        }
+        self.apply_brownout();
+        self.router.route_up(station, &depths, Some(&live))
+    }
+
+    /// Submit one more physical copy of a logical request already holding
+    /// its window slot. Returns false when no replica could take it.
+    fn submit_copy(&mut self, s: usize, b: usize, t: f64, is_hedge: bool) -> bool {
+        let st = self.logical[&(s, b)];
+        let exclude = if is_hedge { Some(st.first_node) } else { None };
+        let Some(node) = self.route_copy(self.plans[s].station, t, exclude) else {
+            return false;
+        };
+        let n_queries = self.plans[s].batches[b].n_queries;
+        let entry = self.logical.get_mut(&(s, b)).expect("copy of a known logical");
+        entry.copies += 1;
+        if !is_hedge {
+            entry.first_node = node;
+        }
+        self.counters.res.backend_requests += 1;
+        let req = Req { session: s, batch: b, n_queries, t_submit_us: t, ok: true, is_hedge };
+        self.enqueue(node, req, t);
+        true
+    }
+
+    /// A physical copy died with its node (kill mid-service, or orphaned
+    /// with nobody live). The logical request fails over to its surviving
+    /// copies, then to the retry path.
+    fn copy_died(&mut self, req: Req, t: f64) {
+        let st = self.logical.get_mut(&(req.session, req.batch)).expect("copy state");
+        st.copies -= 1;
+        if st.resolved || st.copies > 0 {
+            return;
+        }
+        self.fail_or_retry(req.session, req.batch, req.n_queries, t);
+    }
+
+    /// Last in-flight copy of an unresolved logical request failed:
+    /// schedule a budgeted, deadline-aware retry — or resolve it lost.
+    fn fail_or_retry(&mut self, s: usize, b: usize, n_queries: usize, t: f64) {
+        let ready = self.plans[s].ready_us(b);
+        let resolve_lost = |des: &mut Des| {
+            des.logical.get_mut(&(s, b)).expect("logical").resolved = true;
+            des.counters.lost_queries += n_queries;
+            des.gates[s].in_flight -= 1;
+        };
+        let Some(rp) = self.res.retry else {
+            resolve_lost(self);
+            return;
+        };
+        let attempt = self.logical[&(s, b)].attempt;
+        if attempt >= rp.max_attempts {
+            resolve_lost(self);
+            return;
+        }
+        if !self.budget.try_spend() {
+            self.counters.res.retry_budget_exhausted += 1;
+            resolve_lost(self);
+            return;
+        }
+        let prev = self.logical[&(s, b)].prev_backoff_us;
+        let backoff = rp.backoff_us(prev, &mut self.retry_rng);
+        let st = self.logical.get_mut(&(s, b)).expect("logical");
+        st.prev_backoff_us = backoff;
+        st.attempt += 1;
+        self.counters.res.retries += 1;
+        if self.res.expired(ready, t + backoff) {
+            // The backoff alone would blow the deadline: cancel now.
+            let st = self.logical.get_mut(&(s, b)).expect("logical");
+            st.resolved = true;
+            self.counters.shed_deadline_queries += n_queries;
+            self.gates[s].in_flight -= 1;
+            return;
+        }
+        self.push(t + backoff, Event::Resubmit { session: s, batch: b });
+    }
+
+    /// `Resubmit` fired: issue the retry copy (unless the logical request
+    /// resolved or expired while backing off).
+    fn resubmit(&mut self, s: usize, b: usize, t: f64) {
+        let Some(st) = self.logical.get(&(s, b)).copied() else { return };
+        if st.resolved {
+            return;
+        }
+        let n_queries = self.plans[s].batches[b].n_queries;
+        if self.res.expired(self.plans[s].ready_us(b), t) {
+            let st = self.logical.get_mut(&(s, b)).expect("logical");
+            st.resolved = true;
+            self.counters.shed_deadline_queries += n_queries;
+            self.gates[s].in_flight -= 1;
+            return;
+        }
+        if !self.submit_copy(s, b, t, false) {
+            // Nobody could take the retry (all dead, or breakers denied
+            // everyone): consume the failure like any other attempt.
+            self.fail_or_retry(s, b, n_queries, t);
+        }
+    }
+
+    /// `HedgeDue` fired: duplicate the still-outstanding first attempt to
+    /// a second replica, once per logical request.
+    fn hedge_due(&mut self, s: usize, b: usize, attempt: u32, t: f64) {
+        let Some(st) = self.logical.get(&(s, b)).copied() else { return };
+        if st.resolved || st.hedged || st.attempt != attempt || st.copies == 0 {
+            return;
+        }
+        if self.res.expired(self.plans[s].ready_us(b), t) {
+            return; // pointless to duplicate work that can no longer count
+        }
+        if self.submit_copy(s, b, t, true) {
+            self.logical.get_mut(&(s, b)).expect("logical").hedged = true;
+            self.counters.res.hedges_issued += 1;
         }
     }
 
@@ -125,13 +382,34 @@ impl Des<'_> {
         while self.gates[s].in_flight < window {
             let Some(&b) = self.gates[s].parked.front() else { break };
             let n_queries = self.plans[s].batches[b].n_queries;
+            // A batch whose deadline passed while parked is cancelled
+            // work: it never reaches a backend and never counts completed.
+            if self.res.expired(self.plans[s].ready_us(b), t) {
+                self.gates[s].parked.pop_front();
+                self.thread_parked[s % self.threads] -= 1;
+                self.counters.shed_deadline_queries += n_queries;
+                continue;
+            }
             let depths: Vec<usize> = self.nodes.iter().map(SimNode::depth).collect();
-            let live: Vec<bool> = self.nodes.iter().map(|n| n.up).collect();
-            let target = self.router.route_up(self.plans[s].station, &depths, Some(&live));
+            let mut live: Vec<bool> = self.nodes.iter().map(|n| n.up).collect();
+            let all_denied = self.apply_breaker_mask(&mut live, t);
+            self.apply_brownout();
+            let routed = self.router.route_up(self.plans[s].station, &depths, Some(&live));
+            let mut degraded = false;
+            let target = routed.map(|n| match self.degrade_target(n, &live, &depths) {
+                Some(cpu) => {
+                    degraded = true;
+                    cpu
+                }
+                None => n,
+            });
             let admitted = target
                 .map(|n| self.admission.admits(depths[n], self.nodes[n].est_service_us))
                 .unwrap_or(false);
             let Some(node) = target.filter(|_| admitted) else {
+                if all_denied {
+                    self.counters.res.breaker_rejections += 1;
+                }
                 if self.policy.reparks_on_admission_shed() {
                     return; // stays parked; retried when a completion frees room
                 }
@@ -143,7 +421,36 @@ impl Des<'_> {
             self.gates[s].parked.pop_front();
             self.thread_parked[s % self.threads] -= 1;
             self.gates[s].in_flight += 1;
-            self.enqueue(node, Req { session: s, batch: b, n_queries, t_submit_us: t }, t);
+            self.logical.insert(
+                (s, b),
+                Logical {
+                    copies: 1,
+                    resolved: false,
+                    hedged: false,
+                    attempt: 1,
+                    prev_backoff_us: 0.0,
+                    first_node: node,
+                },
+            );
+            self.budget.deposit();
+            self.counters.res.backend_requests += 1;
+            if degraded {
+                self.counters.res.degraded_requests += 1;
+            }
+            if let Some(h) = self.res.hedge {
+                // Expectation is the fleet-wide winner EWMA (`lat_ewma`),
+                // mirroring the real reactor — not the target node's own
+                // estimate, which would learn a straggler's slowness as
+                // normal and never hedge it. Untrained → no hedge yet.
+                if self.lat_ewma > 0.0 {
+                    if let Some(trig) = h.trigger_us(self.lat_ewma) {
+                        self.push(t + trig, Event::HedgeDue { session: s, batch: b, attempt: 1 });
+                    }
+                }
+            }
+            let req =
+                Req { session: s, batch: b, n_queries, t_submit_us: t, ok: true, is_hedge: false };
+            self.enqueue(node, req, t);
         }
     }
 
@@ -191,22 +498,70 @@ impl Des<'_> {
         }
         let req = self.nodes[node].in_service.take().expect("live Done ⇒ in service");
         let latency_us = t - req.t_submit_us;
-        let accept_lat =
-            (t - self.plans[req.session].ready_us(req.batch)).max(latency_us);
-        self.clock.record(accept_lat, latency_us);
-        self.counters.completed_requests += 1;
-        self.counters.completed_queries += req.n_queries;
-        self.gates[req.session].in_flight -= 1;
+        let deadline_miss = self.resolve(req, latency_us, t);
         if let Some(next) = self.nodes[node].queue.pop_front() {
-            let service_us = self.specs[node].request_service_us(&self.overheads, next.n_queries);
-            self.nodes[node].in_service = Some(next);
-            let epoch = self.nodes[node].epoch;
-            self.push(t + service_us, Event::Done { node, epoch });
+            self.start_service(node, next, t);
         }
         let prev = self.nodes[node].est_service_us;
         self.nodes[node].est_service_us =
             update_service_estimate(prev, latency_us, self.nodes[node].depth());
+        // Per-replica signals the resilience policies feed on: the
+        // breaker's depth-normalized latency/error EWMAs, and the brown-out
+        // health score (a deadline miss is a partial strike — the replica
+        // answered, too late to count).
+        let norm = latency_us / (self.nodes[node].depth() as f64 + 1.0);
+        if self.res.breaker.is_some() {
+            self.breakers[node].on_outcome(t, req.ok, norm);
+        }
+        if self.res.brownout {
+            self.health[node].observe(req.ok, deadline_miss, norm);
+        }
         self.drain_all(t);
+    }
+
+    /// A physical copy finished: resolve its logical request exactly once.
+    /// Returns whether the copy came back past its deadline (for the
+    /// health signal). The winner — the first OK copy inside the deadline
+    /// — records latency and counts completed; an expired response is
+    /// cancelled work (`shed_deadline`, never completed); a failed copy
+    /// defers to in-flight twins before the retry path.
+    fn resolve(&mut self, req: Req, latency_us: f64, t: f64) -> bool {
+        let key = (req.session, req.batch);
+        let expired = self.res.expired(self.plans[req.session].ready_us(req.batch), t);
+        let st = self.logical.get_mut(&key).expect("completion of a known logical");
+        st.copies -= 1;
+        if st.resolved {
+            return expired; // a twin already settled this request
+        }
+        if req.ok && !expired {
+            st.resolved = true;
+            let accept_lat = (t - self.plans[req.session].ready_us(req.batch)).max(latency_us);
+            self.clock.record(accept_lat, latency_us);
+            self.lat_ewma = if self.lat_ewma > 0.0 {
+                self.lat_ewma + 0.2 * (latency_us - self.lat_ewma)
+            } else {
+                latency_us
+            };
+            self.counters.completed_requests += 1;
+            self.counters.completed_queries += req.n_queries;
+            self.gates[req.session].in_flight -= 1;
+            if req.is_hedge {
+                self.counters.res.hedge_wins += 1;
+            }
+            return false;
+        }
+        if expired {
+            st.resolved = true;
+            self.counters.shed_deadline_queries += req.n_queries;
+            self.gates[req.session].in_flight -= 1;
+            return true;
+        }
+        // Failed copy, inside the deadline: an in-flight twin may still
+        // win; only the last copy standing goes to the retry path.
+        if st.copies == 0 {
+            self.fail_or_retry(req.session, req.batch, req.n_queries, t);
+        }
+        false
     }
 
     fn kill(&mut self, node: usize, t: f64) {
@@ -215,15 +570,15 @@ impl Des<'_> {
         }
         self.nodes[node].up = false;
         self.nodes[node].epoch += 1;
-        // The request on the engine dies with the node; its window slot is
-        // freed so the session keeps streaming.
+        // The request on the engine dies with the node; with no retry
+        // policy its window slot is freed as lost, with one it re-enters
+        // through the backoff path like any other failed copy.
         if let Some(req) = self.nodes[node].in_service.take() {
-            self.counters.lost_queries += req.n_queries;
-            self.gates[req.session].in_flight -= 1;
+            self.copy_died(req, t);
         }
         // Queued requests were already admitted once — reroute them among
-        // the live replicas without a second admission pass; they are lost
-        // only if nobody is live to take them.
+        // the live replicas without a second admission pass; with nobody
+        // live the copy dies and the retry path (if any) takes over.
         let orphans: Vec<Req> = self.nodes[node].queue.drain(..).collect();
         for req in orphans {
             let depths: Vec<usize> = self.nodes.iter().map(SimNode::depth).collect();
@@ -231,10 +586,7 @@ impl Des<'_> {
             let station = self.plans[req.session].station;
             match self.router.route_up(station, &depths, Some(&live)) {
                 Some(target) => self.enqueue(target, req, t),
-                None => {
-                    self.counters.lost_queries += req.n_queries;
-                    self.gates[req.session].in_flight -= 1;
-                }
+                None => self.copy_died(req, t),
             }
         }
         let up_after = self.n_up();
@@ -272,14 +624,14 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
     let accepted_set = match cfg.frontdoor.mode {
         FrontdoorMode::ThreadPerSession { max_threads } => {
             let mut order: Vec<usize> = (0..plans.len()).collect();
-            order.sort_by(|&a, &b| {
-                plans[a].accept_us.partial_cmp(&plans[b].accept_us).unwrap()
-            });
+            order.sort_by(|&a, &b| plans[a].accept_us.total_cmp(&plans[b].accept_us));
             Some(order.into_iter().take(max_threads).collect::<HashSet<usize>>())
         }
         FrontdoorMode::Event => None,
     };
     let n_nodes = cfg.cluster.specs.len();
+    let res = cfg.frontdoor.resilience;
+    let seed = cfg.cluster.route_seed;
     let mut des = Des {
         plans,
         policy: cfg.frontdoor.backpressure,
@@ -297,6 +649,19 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
         heap: BinaryHeap::new(),
         seq: 0,
         fault_events: Vec::new(),
+        res,
+        faults: &cfg.faults,
+        logical: HashMap::new(),
+        budget: res.budget(),
+        breakers: vec![
+            CircuitBreaker::new(res.breaker.unwrap_or_default());
+            n_nodes
+        ],
+        health: vec![HealthScore::new(); n_nodes],
+        gray_rng: Rng::new(seed ^ 0x62AF_17),
+        retry_rng: Rng::new(seed ^ 0x8E_774),
+        breaker_rng: Rng::new(seed ^ 0xB4EA_C3),
+        lat_ewma: 0.0,
     };
     for (s, p) in plans.iter().enumerate() {
         des.push(p.accept_us, Event::Accept { session: s });
@@ -304,10 +669,13 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
             des.push(p.ready_us(b), Event::Ready { session: s, batch: b });
         }
     }
-    for f in cfg.faults.faults() {
+    // Only fail-stop faults touch the up/down machinery; gray windows act
+    // on the serving path via `gray_at` sampling at service start.
+    for f in cfg.faults.kills() {
         des.push(f.at_us, Event::Kill { node: f.node });
         des.push(f.at_us + f.down_us, Event::Revive { node: f.node });
     }
+    des.counters.res.gray_fault_windows = cfg.faults.grays().len();
 
     let mut t_end_us = 0.0f64;
     while let Some(Reverse((key, _, ev))) = des.heap.pop() {
@@ -319,6 +687,10 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
             Event::Done { node, epoch } => des.complete(node, epoch, t),
             Event::Kill { node } => des.kill(node, t),
             Event::Revive { node } => des.revive(node, t),
+            Event::Resubmit { session, batch } => des.resubmit(session, batch, t),
+            Event::HedgeDue { session, batch, attempt } => {
+                des.hedge_due(session, batch, attempt, t)
+            }
         }
     }
     // Batches still parked when the heap runs dry can only mean the fleet
@@ -329,6 +701,7 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
             des.counters.shed_queue_queries += plans[s].batches[b].n_queries;
         }
     }
+    des.counters.res.breaker_trips = des.breakers.iter().map(CircuitBreaker::trips).sum();
 
     let label = format!("{} sessions | {}", plans.len(), cfg.cluster.label());
     let counters = des.counters;
@@ -350,6 +723,7 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
 mod tests {
     use super::*;
     use crate::cluster::RoutePolicy;
+    use crate::resilience::{BreakerConfig, HedgePolicy, RetryPolicy};
     use crate::workload::{session_plans, RateSchedule};
 
     fn burst_plans(seed: u64, sessions: usize, batches: usize, batch_q: usize) -> Vec<SessionPlan> {
@@ -479,5 +853,176 @@ mod tests {
         // The omission gap is what the accept clock surfaces: under the
         // window policy batches wait parked far longer than they queue.
         assert!(window.omission_gap_us() > 0.0, "{}", window.summary());
+    }
+
+    #[test]
+    fn resilient_sim_is_deterministic() {
+        // The full mechanism stack (deadline + retry + hedge + breaker +
+        // brownout) under a mixed gray-fault plan must stay bit-identical
+        // across runs: every stochastic draw comes from a seeded stream.
+        let spec = SimNodeSpec::v2_cloud(2);
+        let mut cfg = event_cfg(3, BackpressurePolicy::Window { window: 2 });
+        cfg.cluster.admission = AdmissionPolicy::Open;
+        let svc = spec.request_service_us(&cfg.cluster.overheads, 8);
+        cfg.faults = FaultPlan::none()
+            .and_slowdown(0, 0.0, 1e9, 8.0)
+            .and_error_rate(1, 0.0, 1e9, 0.4);
+        cfg.frontdoor = cfg.frontdoor.with_resilience(
+            ResiliencePolicy::none()
+                .with_deadline(60.0 * svc)
+                .with_retry(RetryPolicy::new(3, 0.5 * svc, 8.0 * svc))
+                .with_budget_ratio(0.5)
+                .with_hedge(HedgePolicy::new(3.0))
+                .with_breaker(BreakerConfig { open_us: 40.0 * svc, ..Default::default() })
+                .with_brownout(),
+        );
+        let plans = burst_plans(17, 24, 6, 8);
+        let a = sim_frontdoor(&cfg, &plans);
+        let b = sim_frontdoor(&cfg, &plans);
+        assert!(a.conserves_queries(), "{}", a.summary());
+        assert_eq!(a.completed_queries, b.completed_queries);
+        assert_eq!(a.shed_deadline_queries, b.shed_deadline_queries);
+        assert_eq!(a.lost_queries, b.lost_queries);
+        assert_eq!(a.res, b.res, "resilience counters must replay exactly");
+        assert_eq!(a.accept_p99_us.to_bits(), b.accept_p99_us.to_bits());
+        assert!(a.res.gray_fault_windows == 2, "{}", a.summary());
+    }
+
+    #[test]
+    fn deadline_expired_work_is_shed_never_completed() {
+        // One replica, deep client-side windows, a deadline a few services
+        // wide: the backlog blows the deadline for most of the burst.
+        // Expired work lands in shed_deadline — and because a winner is
+        // only ever recorded inside its deadline, every recorded accept
+        // latency (p99 included) stays under it.
+        let spec = SimNodeSpec::v2_cloud(2);
+        let mut cfg = event_cfg(1, BackpressurePolicy::Window { window: 4 });
+        cfg.cluster = ClusterSimConfig::v2_cloud(1, 2)
+            .with_route(RoutePolicy::RoundRobin)
+            .with_admission(AdmissionPolicy::Open);
+        let svc = spec.request_service_us(&cfg.cluster.overheads, 8);
+        let deadline = 3.0 * svc;
+        cfg.frontdoor =
+            cfg.frontdoor.with_resilience(ResiliencePolicy::none().with_deadline(deadline));
+        let plans = burst_plans(9, 8, 6, 8);
+        let r = sim_frontdoor(&cfg, &plans);
+        assert!(r.conserves_queries(), "{}", r.summary());
+        assert!(r.shed_deadline_queries > 0, "{}", r.summary());
+        assert!(r.completed_queries > 0, "{}", r.summary());
+        assert!(
+            r.completed_queries + r.shed_deadline_queries == r.offered_queries,
+            "every query either completed in time or was cancelled: {}",
+            r.summary()
+        );
+        assert!(
+            r.accept_p99_us <= deadline + 1.0,
+            "no completion past the deadline may be recorded: p99 {} vs deadline {}",
+            r.accept_p99_us,
+            deadline
+        );
+    }
+
+    #[test]
+    fn retries_recover_gray_errors() {
+        // Node 0 fails 70% of its calls; node 1 is clean. Without a retry
+        // policy those failures are lost queries; with budgeted backoff
+        // retries nearly all of them land on a second attempt.
+        let spec = SimNodeSpec::v2_cloud(2);
+        let mut cfg = event_cfg(2, BackpressurePolicy::Window { window: 2 });
+        cfg.cluster.admission = AdmissionPolicy::Open;
+        let svc = spec.request_service_us(&cfg.cluster.overheads, 8);
+        cfg.faults = FaultPlan::none().and_error_rate(0, 0.0, 1e9, 0.7);
+        let plans = burst_plans(13, 16, 6, 8);
+        let plain = sim_frontdoor(&cfg, &plans);
+        cfg.frontdoor = cfg.frontdoor.with_resilience(
+            ResiliencePolicy::none()
+                .with_retry(RetryPolicy::new(4, 0.5 * svc, 8.0 * svc))
+                .with_budget_ratio(1.0),
+        );
+        let retried = sim_frontdoor(&cfg, &plans);
+        assert!(plain.conserves_queries(), "{}", plain.summary());
+        assert!(retried.conserves_queries(), "{}", retried.summary());
+        assert!(plain.lost_queries > 0, "{}", plain.summary());
+        assert!(
+            retried.lost_queries * 4 < plain.lost_queries,
+            "retries must recover most gray errors: {} vs {}",
+            retried.lost_queries,
+            plain.lost_queries
+        );
+        assert!(retried.res.retries > 0, "{}", retried.summary());
+        assert!(
+            retried.res.backend_requests > plain.res.backend_requests,
+            "retries are extra physical load"
+        );
+    }
+
+    #[test]
+    fn hedging_rescues_hung_calls_and_cuts_the_tail() {
+        // Node 0 stalls 20% of its calls for 40 services — the classic
+        // gray straggler. A tail-triggered hedge reissues the stalled
+        // request to a clean replica, which wins; accept p99 drops well
+        // below the stall while the duplicate load stays bounded.
+        let spec = SimNodeSpec::v2_cloud(2);
+        let o = ClusterSimConfig::v2_cloud(4, 2).overheads;
+        let svc = spec.request_service_us(&o, 8);
+        let node_rps = spec.capacity_qps(&o, 8) / 8.0;
+        let rate = 0.3 * 4.0 * node_rps / 8.0;
+        let plans = session_plans(21, &RateSchedule::constant(rate), 60, 8, 8, 0.0, 8);
+        let mut cfg = event_cfg(4, BackpressurePolicy::Window { window: 2 });
+        cfg.cluster.admission = AdmissionPolicy::Open;
+        cfg.faults = FaultPlan::none().and_hang(0, 0.0, 1e9, 0.2, 40.0 * svc);
+        let plain = sim_frontdoor(&cfg, &plans);
+        cfg.frontdoor = cfg
+            .frontdoor
+            .with_resilience(ResiliencePolicy::none().with_hedge(HedgePolicy::new(3.0)));
+        let hedged = sim_frontdoor(&cfg, &plans);
+        assert!(plain.conserves_queries(), "{}", plain.summary());
+        assert!(hedged.conserves_queries(), "{}", hedged.summary());
+        assert!(hedged.res.hedges_issued > 0, "{}", hedged.summary());
+        assert!(hedged.res.hedge_wins > 0, "{}", hedged.summary());
+        assert!(
+            hedged.accept_p99_us < 0.6 * plain.accept_p99_us,
+            "hedging must cut the stall tail: {} vs {}",
+            hedged.accept_p99_us,
+            plain.accept_p99_us
+        );
+        assert!(
+            hedged.backend_load_factor() < 1.5,
+            "hedge amplification stays bounded: {}",
+            hedged.backend_load_factor()
+        );
+        assert_eq!(hedged.completed_queries, hedged.offered_queries, "hedges lose nothing");
+    }
+
+    #[test]
+    fn breaker_trips_on_a_high_error_replica() {
+        // Node 0 fails 90% of its calls. With retry alone every second
+        // request burns attempts against it; adding the breaker trips it
+        // open after min_observations and steers traffic to the clean
+        // replica, recovering more of the offered load.
+        let spec = SimNodeSpec::v2_cloud(2);
+        let mut cfg = event_cfg(2, BackpressurePolicy::Window { window: 2 });
+        cfg.cluster.admission = AdmissionPolicy::Open;
+        let svc = spec.request_service_us(&cfg.cluster.overheads, 8);
+        cfg.faults = FaultPlan::none().and_error_rate(0, 0.0, 1e9, 0.9);
+        let retry = ResiliencePolicy::none()
+            .with_retry(RetryPolicy::new(3, 0.5 * svc, 8.0 * svc))
+            .with_budget_ratio(0.5);
+        let plans = burst_plans(29, 24, 6, 8);
+        cfg.frontdoor = cfg.frontdoor.with_resilience(retry);
+        let retried = sim_frontdoor(&cfg, &plans);
+        cfg.frontdoor = cfg.frontdoor.with_resilience(
+            retry.with_breaker(BreakerConfig { open_us: 50.0 * svc, ..Default::default() }),
+        );
+        let broken = sim_frontdoor(&cfg, &plans);
+        assert!(retried.conserves_queries(), "{}", retried.summary());
+        assert!(broken.conserves_queries(), "{}", broken.summary());
+        assert!(broken.res.breaker_trips > 0, "{}", broken.summary());
+        assert!(
+            broken.lost_queries <= retried.lost_queries,
+            "tripping the bad replica cannot lose more: {} vs {}",
+            broken.lost_queries,
+            retried.lost_queries
+        );
     }
 }

@@ -32,6 +32,7 @@ pub mod erbium;
 pub mod frontdoor;
 pub mod nfa;
 pub mod prng;
+pub mod resilience;
 pub mod routescoring;
 pub mod rules;
 pub mod runtime;

@@ -17,12 +17,18 @@
 //!                           [--rules N] [--seed S] [--p P] [--w W] [--k K] [--e E]
 //!                           [--autoscale static|reactive|sla|cost]   (control-plane DES)
 //!                           [--profile diurnal:BASE:AMP:PERIOD_S | const:RPS]
-//!                           [--faults N] [--hetero] [--tick-us T] [--max N] [--feeders F]
+//!                           [--faults FAULTS] [--hetero] [--tick-us T] [--max N] [--feeders F]
+//!                           [--retry] [--hedge] [--breaker] [--deadline-us D]
+//!                           (resilience flags run the fleet behind the event front door)
 //! erbium-search frontdoor   [--sessions N] [--batches B] [--batch Q] [--rate SESSIONS_PER_S]
 //!                           [--backpressure none|window|socket] [--window W] [--pending P]
-//!                           [--threads T] [--nodes N] [--cap Q] [--faults N] [--seed S]
+//!                           [--threads T] [--nodes N] [--cap Q] [--faults FAULTS] [--seed S]
+//!                           [--retry] [--hedge] [--breaker] [--deadline-us D]
 //!                           [--baseline]  (thread-per-session door, T threads)
 //!                           [--des]       (run the DES twin instead of the real reactor)
+//!
+//! FAULTS is either `N` (N seeded kills, back-compat) or a gray spec:
+//! `gray:slow:F` | `gray:err:P` | `gray:hang:P:STALL_US` | `gray:mix:N`.
 //! erbium-search costs       [--uqps UQ_PER_S] [--node-qps QPS]
 //! ```
 
@@ -52,6 +58,7 @@ use erbium_search::nfa::constraint_gen::{estimate, HardwareConfig};
 use erbium_search::nfa::optimiser::OrderStrategy;
 use erbium_search::nfa::parser::{compile_rule_set, CompileOptions};
 use erbium_search::prng::Rng;
+use erbium_search::resilience::{BreakerConfig, HedgePolicy, ResiliencePolicy, RetryPolicy};
 use erbium_search::rules::generator::{generate_rule_set, generate_world, GeneratorConfig};
 use erbium_search::rules::standard::{Schema, StandardVersion};
 use erbium_search::rules::serde_text;
@@ -97,6 +104,47 @@ fn setup(args: &Args) -> (GeneratorConfig, erbium_search::rules::types::World, S
     let schema = Schema::for_version(version);
     let rs = generate_rule_set(&cfg, &world, version);
     (cfg, world, schema, rs)
+}
+
+/// The `--retry`/`--hedge`/`--breaker`/`--deadline-us` flags shared by
+/// the `fleet` and `frontdoor` subcommands. Retry backoffs and breaker
+/// thresholds use library defaults at µs scale; the hedge trigger is
+/// scale-free (a multiple of the learned winner latency).
+fn resilience_from_args(args: &Args) -> ResiliencePolicy {
+    let mut res = ResiliencePolicy::none();
+    if let Some(d) = args.get("--deadline-us").and_then(|v| v.parse().ok()) {
+        res = res.with_deadline(d);
+    }
+    if args.flag("--retry") {
+        res = res.with_retry(RetryPolicy::new(3, 500.0, 8_000.0)).with_budget_ratio(0.5);
+    }
+    if args.flag("--hedge") {
+        res = res.with_hedge(HedgePolicy::new(3.0));
+    }
+    if args.flag("--breaker") {
+        res = res.with_breaker(BreakerConfig::default());
+    }
+    res
+}
+
+/// Parse `--faults` (kills or a gray spec) against the run's span.
+fn faults_from_args(
+    args: &Args,
+    seed: u64,
+    nodes: usize,
+    span_us: f64,
+    service_scale_us: f64,
+) -> anyhow::Result<FaultPlan> {
+    match args.get("--faults") {
+        None => Ok(FaultPlan::none()),
+        Some(spec) => FaultPlan::parse_cli(spec, seed, nodes, span_us, service_scale_us)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "bad --faults {spec:?} (N | gray:slow:F | gray:err:P | \
+                     gray:hang:P:STALL_US | gray:mix:N)"
+                )
+            }),
+    }
 }
 
 fn backend(args: &Args) -> anyhow::Result<Backend> {
@@ -335,15 +383,9 @@ fn main() -> anyhow::Result<()> {
                 .with_sla(args.f64("--sla", 20_000.0))
                 .with_bounds(1, max_nodes)
                 .with_profile_label(schedule.label());
-            let n_faults = args.usize("--faults", 0);
-            if n_faults > 0 {
-                cfg = cfg.with_faults(FaultPlan::seeded(
-                    seed,
-                    initial,
-                    span_us,
-                    n_faults,
-                    span_us / 10.0,
-                ));
+            let faults = faults_from_args(&args, seed, initial, span_us, 1_000.0)?;
+            if !faults.is_empty() {
+                cfg = cfg.with_faults(faults);
             }
             let mut scaler: Box<dyn Autoscaler> = match policy.as_str() {
                 "static" => Box::new(StaticFleet),
@@ -406,13 +448,56 @@ fn main() -> anyhow::Result<()> {
             let rate = args.f64("--rate", 50_000.0);
             let batch = args.usize("--batch", 256);
             let requests = args.usize("--requests", 1_000);
-            // The same seeded stream through both realisations.
+            let span_us = requests as f64 / rate * 1e6;
+            let faults = faults_from_args(&args, seed, nodes, span_us, 2_000.0)?;
+            let res = resilience_from_args(&args);
+            if !res.is_none() {
+                // Client-side resilience lives in the front door: run the
+                // same fleet behind the event reactor, one batch per
+                // session at the same request rate. The door executes the
+                // fault plan (kills and gray windows) itself, so the
+                // cluster configs stay fault-free here — setting both
+                // would apply gray degradation twice.
+                let schedule = RateSchedule::constant(rate);
+                let plans = session_plans(
+                    seed,
+                    &schedule,
+                    requests,
+                    1,
+                    batch,
+                    0.0,
+                    world.airports.len(),
+                );
+                let fd = FrontdoorConfig::event(2, BackpressurePolicy::Window { window: 2 })
+                    .with_resilience(res);
+                let real =
+                    run_frontdoor(cluster_cfg, factory, &world, seed, &plans, &fd, &faults)?;
+                println!("real: {}", real.summary());
+                let sim_cfg = ClusterSimConfig::v2_cloud(nodes, feeders)
+                    .with_route(route)
+                    .with_admission(admission);
+                let sim = sim_frontdoor(
+                    &FrontdoorSimConfig { cluster: sim_cfg, frontdoor: fd, faults },
+                    &plans,
+                );
+                println!("sim : {}", sim.summary());
+                return Ok(());
+            }
+            anyhow::ensure!(
+                faults.kills().is_empty(),
+                "kill faults in plain `fleet` need --autoscale (the control-plane DES owns \
+                 liveness) or a resilience flag (front-door run); gray specs apply in place"
+            );
+            // The same seeded stream through both realisations; gray
+            // windows degrade the cluster layers in place.
             let mut src = PoissonSource::new(&world, seed, rate, batch, requests);
-            let real = Cluster::new(cluster_cfg, factory).run(&mut src)?;
+            let real =
+                Cluster::new(cluster_cfg.with_faults(faults.clone()), factory).run(&mut src)?;
             println!("real: {}", real.summary());
             let sim_cfg = ClusterSimConfig::v2_cloud(nodes, feeders)
                 .with_route(route)
-                .with_admission(admission);
+                .with_admission(admission)
+                .with_faults(faults);
             let mut src = PoissonSource::new(&world, seed, rate, batch, requests);
             let arrivals = erbium_search::cluster::sim::sim_arrivals(&mut src, false);
             let sim = simulate_cluster(&sim_cfg, &arrivals);
@@ -448,7 +533,8 @@ fn main() -> anyhow::Result<()> {
                 FrontdoorConfig::thread_per_session(args.usize("--threads", 16))
             } else {
                 FrontdoorConfig::event(args.usize("--threads", 2), policy)
-            };
+            }
+            .with_resilience(resilience_from_args(&args));
             let seed = args.u64("--seed", 1);
             let rate = args.f64("--rate", 2_000.0);
             let nodes = args.usize("--nodes", 2);
@@ -457,12 +543,7 @@ fn main() -> anyhow::Result<()> {
                 None => AdmissionPolicy::Open,
             };
             let span_us = sessions as f64 / rate * 1e6;
-            let n_faults = args.usize("--faults", 0);
-            let faults = if n_faults > 0 {
-                FaultPlan::seeded(seed, nodes, span_us, n_faults, span_us / 10.0)
-            } else {
-                FaultPlan::none()
-            };
+            let faults = faults_from_args(&args, seed, nodes, span_us, 2_000.0)?;
             let schedule = RateSchedule::constant(rate);
             let r = if args.flag("--des") {
                 // Synthetic stations — the DES never materialises queries.

@@ -1,0 +1,643 @@
+//! Gray-failure resilience: deadlines, budgeted retries, hedged
+//! requests, circuit breakers, and brown-out health scores.
+//!
+//! Everything in this module is *pure policy state* driven by an
+//! explicit clock (`t_us`) and a seeded [`Rng`], so the real threaded
+//! realisation (wall clock) and the DES (virtual clock) execute exactly
+//! the same decision logic — only the clock and the scheduler differ.
+//! The mechanisms compose as a ladder:
+//!
+//! * **Deadlines** live on the *accept clock*: a request that became
+//!   ready at `ready_us` must complete by `ready_us + deadline_us` or it
+//!   is counted `shed_deadline` — cancelled work is never `completed`.
+//! * **[`RetryPolicy`]** re-issues failed calls with capped exponential
+//!   backoff and decorrelated jitter, gated by a token-bucket
+//!   [`RetryBudget`] so a brown-out cannot be amplified into a retry
+//!   storm (retries are paid for by fresh first-attempt traffic).
+//! * **[`HedgePolicy`]** duplicates a still-outstanding request to a
+//!   second replica once it has been in flight longer than a tail
+//!   trigger; the first copy to finish wins and is counted once.
+//! * **[`CircuitBreaker`]** is per-replica: EWMA error-rate and
+//!   latency-inflation signals drive closed → open → half-open, with
+//!   seeded probe admission in half-open.
+//! * **[`HealthScore`]** folds failed calls, deadline misses and
+//!   service-time inflation into a per-replica brown-out weight in
+//!   `(0, 1]` that routing composes with queue depths, plus a
+//!   graceful-degradation ladder that fails a browning FPGA node's
+//!   traffic over to a CPU-class replica before shedding it.
+
+use crate::prng::Rng;
+
+/// Capped exponential backoff with decorrelated jitter
+/// (`sleep = min(cap, uniform(base, 3·prev))`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first submission (≥ 1).
+    pub max_attempts: u32,
+    /// Lower bound of the first backoff interval, µs.
+    pub base_us: f64,
+    /// Backoff ceiling, µs.
+    pub cap_us: f64,
+}
+
+impl RetryPolicy {
+    pub fn new(max_attempts: u32, base_us: f64, cap_us: f64) -> Self {
+        assert!(max_attempts >= 1 && base_us > 0.0 && cap_us >= base_us);
+        Self { max_attempts, base_us, cap_us }
+    }
+
+    /// Next backoff given the previous one (pass `0.0` for the first
+    /// retry). Decorrelated jitter keeps concurrent retriers spread out.
+    pub fn backoff_us(&self, prev_us: f64, rng: &mut Rng) -> f64 {
+        let hi = (prev_us.max(self.base_us) * 3.0).min(self.cap_us);
+        self.base_us + rng.f64() * (hi - self.base_us).max(0.0)
+    }
+}
+
+/// Token-bucket retry budget: each *first-attempt* request deposits
+/// `ratio` tokens, each retry spends one. When the bucket is dry the
+/// retry is refused — the request fails instead of joining a storm.
+#[derive(Clone, Debug)]
+pub struct RetryBudget {
+    balance: f64,
+    cap: f64,
+    ratio: f64,
+}
+
+impl RetryBudget {
+    pub fn new(ratio: f64, cap: f64) -> Self {
+        assert!(ratio >= 0.0 && cap >= 1.0);
+        // Start full so a fault in the first few requests can still retry.
+        Self { balance: cap, cap, ratio }
+    }
+
+    /// Account one first-attempt request.
+    pub fn deposit(&mut self) {
+        self.balance = (self.balance + self.ratio).min(self.cap);
+    }
+
+    /// Try to pay for one retry.
+    pub fn try_spend(&mut self) -> bool {
+        if self.balance >= 1.0 {
+            self.balance -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn balance(&self) -> f64 {
+        self.balance
+    }
+}
+
+/// Tail-latency hedging: duplicate an outstanding request to a second
+/// replica once it has been in flight for `trigger_factor ×` its
+/// expected latency (a p9x proxy). Both realisations feed the trigger a
+/// *fleet-wide* EWMA of winner latencies — deliberately not the routed
+/// node's own estimate, which would learn a straggler's slowness as
+/// normal and stop hedging exactly the replica that needs it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HedgePolicy {
+    pub trigger_factor: f64,
+}
+
+impl HedgePolicy {
+    pub fn new(trigger_factor: f64) -> Self {
+        assert!(trigger_factor >= 1.0);
+        Self { trigger_factor }
+    }
+
+    /// Hedge fire time relative to submission. `expected_latency_us` of
+    /// zero means the caller has no estimate yet — never hedge blind.
+    pub fn trigger_us(&self, expected_latency_us: f64) -> Option<f64> {
+        if expected_latency_us > 0.0 {
+            Some(self.trigger_factor * expected_latency_us)
+        } else {
+            None
+        }
+    }
+}
+
+/// Circuit-breaker thresholds. Latency trips compare the EWMA of
+/// *depth-normalized* per-request latency against `latency_factor ×`
+/// the smallest normalized latency ever observed on the replica (its
+/// fault-free floor), so queueing under load does not false-trip.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BreakerConfig {
+    /// Trip when the EWMA error rate exceeds this.
+    pub error_threshold: f64,
+    /// Trip when EWMA normalized latency exceeds `factor × floor`.
+    pub latency_factor: f64,
+    /// Cool-down in the open state before probing resumes, µs.
+    pub open_us: f64,
+    /// EWMA smoothing for both signals.
+    pub alpha: f64,
+    /// Probe admission probability while half-open.
+    pub probe_p: f64,
+    /// Minimum outcomes observed before the breaker may trip.
+    pub min_observations: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            error_threshold: 0.1,
+            latency_factor: 8.0,
+            open_us: 20_000.0,
+            alpha: 0.15,
+            probe_p: 0.2,
+            min_observations: 8,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Per-replica breaker: closed → open on EWMA error/latency signals,
+/// open → half-open after `open_us`, half-open admits seeded probes and
+/// closes on the first probe success (re-opens on probe failure).
+#[derive(Clone, Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    open_until_us: f64,
+    err_ewma: f64,
+    lat_ewma_us: f64,
+    floor_us: f64,
+    seen: u32,
+    trips: usize,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Self {
+            cfg,
+            state: BreakerState::Closed,
+            open_until_us: 0.0,
+            err_ewma: 0.0,
+            lat_ewma_us: 0.0,
+            floor_us: f64::INFINITY,
+            seen: 0,
+            trips: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    pub fn trips(&self) -> usize {
+        self.trips
+    }
+
+    /// Routing gate: may this replica receive a request at `t_us`?
+    /// Open transitions to half-open once the cool-down has elapsed;
+    /// half-open admits a seeded Bernoulli(probe_p) trickle.
+    pub fn allows(&mut self, t_us: f64, rng: &mut Rng) -> bool {
+        if self.state == BreakerState::Open {
+            if t_us < self.open_until_us {
+                return false;
+            }
+            self.state = BreakerState::HalfOpen;
+        }
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => rng.chance(self.cfg.probe_p),
+            BreakerState::Open => unreachable!(),
+        }
+    }
+
+    fn trip(&mut self, t_us: f64) {
+        self.state = BreakerState::Open;
+        self.open_until_us = t_us + self.cfg.open_us;
+        self.trips += 1;
+    }
+
+    /// Feed one call outcome. `norm_latency_us` should be the
+    /// per-request latency normalized by the replica's queue depth at
+    /// completion (the same normalization the service estimator uses).
+    pub fn on_outcome(&mut self, t_us: f64, ok: bool, norm_latency_us: f64) {
+        self.seen += 1;
+        let a = self.cfg.alpha;
+        self.err_ewma += a * ((if ok { 0.0 } else { 1.0 }) - self.err_ewma);
+        if norm_latency_us > 0.0 {
+            if self.lat_ewma_us == 0.0 {
+                self.lat_ewma_us = norm_latency_us;
+            } else {
+                self.lat_ewma_us += a * (norm_latency_us - self.lat_ewma_us);
+            }
+            if ok {
+                self.floor_us = self.floor_us.min(norm_latency_us);
+            }
+        }
+        match self.state {
+            BreakerState::HalfOpen => {
+                if ok {
+                    // Probe succeeded: close and forget the bad spell so
+                    // the error EWMA restarts from clean.
+                    self.state = BreakerState::Closed;
+                    self.err_ewma = 0.0;
+                    self.lat_ewma_us = self.floor_us.min(self.lat_ewma_us);
+                } else {
+                    self.trip(t_us);
+                }
+            }
+            BreakerState::Closed => {
+                if self.seen >= self.cfg.min_observations && self.signals_bad() {
+                    self.trip(t_us);
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    fn signals_bad(&self) -> bool {
+        self.err_ewma > self.cfg.error_threshold
+            || (self.floor_us.is_finite()
+                && self.lat_ewma_us > self.cfg.latency_factor * self.floor_us)
+    }
+}
+
+/// EWMA smoothing for [`HealthScore`].
+pub const HEALTH_ALPHA: f64 = 0.15;
+/// Brown-out weights never reach zero — a floored weight keeps the
+/// replica routable (at heavy de-preference) so recovery is observable.
+pub const HEALTH_FLOOR: f64 = 0.05;
+/// An FPGA node whose health weight drops below this fails its traffic
+/// over to a CPU-class replica (the graceful-degradation ladder).
+pub const BROWNOUT_DEGRADE_THRESHOLD: f64 = 0.5;
+
+/// Per-replica brown-out health: an EWMA over instantaneous outcome
+/// scores — 0 for a failed call, 0.25 for a deadline miss, and
+/// `floor/normalized-latency` for service-time inflation — yielding a
+/// routing weight in `(0, 1]`.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthScore {
+    score: f64,
+    floor_us: f64,
+}
+
+impl Default for HealthScore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HealthScore {
+    pub fn new() -> Self {
+        Self { score: 1.0, floor_us: f64::INFINITY }
+    }
+
+    /// Preset the fault-free latency floor (the DES knows it from the
+    /// node spec; the real realisation tracks a running minimum).
+    pub fn with_nominal(nominal_us: f64) -> Self {
+        Self { score: 1.0, floor_us: nominal_us.max(1e-9) }
+    }
+
+    pub fn observe(&mut self, ok: bool, deadline_miss: bool, norm_latency_us: f64) {
+        let instant = if !ok {
+            0.0
+        } else if deadline_miss {
+            0.25
+        } else if norm_latency_us > 0.0 {
+            self.floor_us = self.floor_us.min(norm_latency_us);
+            (self.floor_us / norm_latency_us).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+        self.score += HEALTH_ALPHA * (instant - self.score);
+    }
+
+    pub fn score(&self) -> f64 {
+        self.score
+    }
+
+    /// Routing weight: health floored away from zero.
+    pub fn weight(&self) -> f64 {
+        self.score.max(HEALTH_FLOOR)
+    }
+}
+
+/// The composed per-request resilience policy a front door runs with.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResiliencePolicy {
+    /// Accept-clock deadline per request (ready → complete), µs.
+    pub deadline_us: Option<f64>,
+    pub retry: Option<RetryPolicy>,
+    /// Tokens deposited into the retry budget per first-attempt request.
+    pub retry_budget_ratio: f64,
+    pub hedge: Option<HedgePolicy>,
+    pub breaker: Option<BreakerConfig>,
+    /// Health-weighted routing plus the FPGA→CPU degradation ladder.
+    pub brownout: bool,
+}
+
+impl Default for ResiliencePolicy {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl ResiliencePolicy {
+    pub fn none() -> Self {
+        Self {
+            deadline_us: None,
+            retry: None,
+            retry_budget_ratio: 0.1,
+            hedge: None,
+            breaker: None,
+            brownout: false,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline_us: f64) -> Self {
+        assert!(deadline_us > 0.0);
+        self.deadline_us = Some(deadline_us);
+        self
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = Some(retry);
+        self
+    }
+
+    pub fn with_budget_ratio(mut self, ratio: f64) -> Self {
+        self.retry_budget_ratio = ratio;
+        self
+    }
+
+    pub fn with_hedge(mut self, hedge: HedgePolicy) -> Self {
+        self.hedge = Some(hedge);
+        self
+    }
+
+    pub fn with_breaker(mut self, breaker: BreakerConfig) -> Self {
+        self.breaker = Some(breaker);
+        self
+    }
+
+    pub fn with_brownout(mut self) -> Self {
+        self.brownout = true;
+        self
+    }
+
+    /// No mechanism active at all (deadline included).
+    pub fn is_none(&self) -> bool {
+        self.deadline_us.is_none()
+            && self.retry.is_none()
+            && self.hedge.is_none()
+            && self.breaker.is_none()
+            && !self.brownout
+    }
+
+    /// Has a request whose ready time is `ready_us` expired at `t_us`?
+    pub fn expired(&self, ready_us: f64, t_us: f64) -> bool {
+        match self.deadline_us {
+            Some(d) => t_us > ready_us + d,
+            None => false,
+        }
+    }
+
+    pub fn budget(&self) -> RetryBudget {
+        RetryBudget::new(self.retry_budget_ratio, 8.0)
+    }
+
+    /// The four-rung ladder `cross_validate_resilience_policies` ranks,
+    /// scaled to a nominal per-request service time.
+    pub fn ladder(service_us: f64) -> Vec<ResiliencePolicy> {
+        let retry = RetryPolicy::new(3, 0.5 * service_us, 8.0 * service_us);
+        let hedge = HedgePolicy::new(3.0);
+        let breaker = BreakerConfig {
+            open_us: 40.0 * service_us,
+            ..BreakerConfig::default()
+        };
+        vec![
+            Self::none(),
+            Self::none().with_retry(retry).with_budget_ratio(0.5),
+            Self::none().with_retry(retry).with_budget_ratio(0.5).with_hedge(hedge),
+            Self::none()
+                .with_retry(retry)
+                .with_budget_ratio(0.5)
+                .with_hedge(hedge)
+                .with_breaker(breaker),
+        ]
+    }
+
+    /// Mechanism label: `no-retry`, `retry`, `retry+hedge`,
+    /// `retry+hedge+breaker`, … (deadline does not change the label).
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.retry.is_some() {
+            parts.push("retry");
+        }
+        if self.hedge.is_some() {
+            parts.push("hedge");
+        }
+        if self.breaker.is_some() {
+            parts.push("breaker");
+        }
+        if self.brownout {
+            parts.push("brownout");
+        }
+        if parts.is_empty() {
+            "no-retry".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+/// Resilience counters shared by both realisations, embedded in
+/// [`crate::frontdoor::FrontdoorCounters`]. `backend_requests` counts
+/// *physical* submissions (first attempts + retries + hedges) so the
+/// hedge amplification factor is measurable against logical load.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResilienceCounters {
+    pub retries: usize,
+    pub retry_budget_exhausted: usize,
+    pub hedges_issued: usize,
+    pub hedge_wins: usize,
+    pub breaker_rejections: usize,
+    pub breaker_trips: usize,
+    pub degraded_requests: usize,
+    pub backend_requests: usize,
+    pub gray_fault_windows: usize,
+}
+
+impl ResilienceCounters {
+    pub fn merge(&mut self, other: &ResilienceCounters) {
+        self.retries += other.retries;
+        self.retry_budget_exhausted += other.retry_budget_exhausted;
+        self.hedges_issued += other.hedges_issued;
+        self.hedge_wins += other.hedge_wins;
+        self.breaker_rejections += other.breaker_rejections;
+        self.breaker_trips += other.breaker_trips;
+        self.degraded_requests += other.degraded_requests;
+        self.backend_requests += other.backend_requests;
+        self.gray_fault_windows += other.gray_fault_windows;
+    }
+
+    pub fn any(&self) -> bool {
+        *self != ResilienceCounters::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_capped_jittered_and_seeded() {
+        let p = RetryPolicy::new(4, 100.0, 1_000.0);
+        let mut rng = Rng::new(7);
+        let mut prev = 0.0;
+        for _ in 0..50 {
+            let b = p.backoff_us(prev, &mut rng);
+            assert!(b >= p.base_us && b <= p.cap_us, "backoff {b} out of [base, cap]");
+            prev = b;
+        }
+        // Deterministic per seed.
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        assert_eq!(p.backoff_us(0.0, &mut a), p.backoff_us(0.0, &mut b));
+    }
+
+    #[test]
+    fn retry_budget_refuses_when_dry_and_refills_from_traffic() {
+        let mut budget = RetryBudget::new(0.5, 2.0);
+        assert!(budget.try_spend());
+        assert!(budget.try_spend());
+        assert!(!budget.try_spend(), "bucket starts at cap=2, third spend must fail");
+        budget.deposit();
+        assert!(!budget.try_spend(), "0.5 tokens is not a whole retry");
+        budget.deposit();
+        assert!(budget.try_spend(), "two deposits buy one retry");
+    }
+
+    #[test]
+    fn breaker_closed_to_open_on_error_ewma() {
+        let cfg = BreakerConfig { min_observations: 4, ..BreakerConfig::default() };
+        let mut br = CircuitBreaker::new(cfg);
+        let mut rng = Rng::new(1);
+        assert_eq!(br.state(), BreakerState::Closed);
+        for i in 0..10 {
+            assert!(br.allows(i as f64, &mut rng), "closed breaker admits everything");
+            br.on_outcome(i as f64, i % 2 == 0, 100.0);
+        }
+        assert_eq!(br.state(), BreakerState::Open, "50% errors must trip a 10% threshold");
+        assert_eq!(br.trips(), 1);
+        assert!(!br.allows(11.0, &mut rng), "open breaker rejects before cool-down");
+    }
+
+    #[test]
+    fn breaker_latency_inflation_trips_without_errors() {
+        let cfg = BreakerConfig {
+            min_observations: 4,
+            latency_factor: 5.0,
+            ..BreakerConfig::default()
+        };
+        let mut br = CircuitBreaker::new(cfg);
+        // Establish a healthy floor, then a 10× straggler phase.
+        for i in 0..6 {
+            br.on_outcome(i as f64, true, 100.0);
+        }
+        assert_eq!(br.state(), BreakerState::Closed);
+        for i in 6..40 {
+            br.on_outcome(i as f64, true, 1_000.0);
+        }
+        assert_eq!(br.state(), BreakerState::Open, "sustained 10× inflation must trip 5×");
+    }
+
+    #[test]
+    fn breaker_half_open_probe_and_close_cycle() {
+        let cfg = BreakerConfig {
+            min_observations: 2,
+            open_us: 1_000.0,
+            probe_p: 0.5,
+            ..BreakerConfig::default()
+        };
+        let mut br = CircuitBreaker::new(cfg);
+        for i in 0..6 {
+            br.on_outcome(i as f64, false, 100.0);
+        }
+        assert_eq!(br.state(), BreakerState::Open);
+        let mut rng = Rng::new(9);
+        assert!(!br.allows(500.0, &mut rng), "still cooling down");
+        // After cool-down: seeded probe admission — some draws pass,
+        // some don't, but the state is now half-open either way.
+        let admitted = (0..20).filter(|_| br.allows(2_000.0, &mut rng)).count();
+        assert_eq!(br.state(), BreakerState::HalfOpen);
+        assert!(admitted > 0 && admitted < 20, "probe_p=0.5 admits a strict subset: {admitted}");
+        // Failed probe re-opens …
+        br.on_outcome(2_100.0, false, 100.0);
+        assert_eq!(br.state(), BreakerState::Open);
+        assert_eq!(br.trips(), 2);
+        // … and a successful probe after the next cool-down closes.
+        assert!(!br.allows(2_500.0, &mut rng));
+        while !br.allows(4_000.0, &mut rng) {}
+        br.on_outcome(4_001.0, true, 100.0);
+        assert_eq!(br.state(), BreakerState::Closed);
+        assert!(br.allows(4_002.0, &mut rng), "closed again after probe success");
+    }
+
+    #[test]
+    fn breaker_probe_admission_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let cfg = BreakerConfig { min_observations: 1, ..BreakerConfig::default() };
+            let mut br = CircuitBreaker::new(cfg);
+            for i in 0..4 {
+                br.on_outcome(i as f64, false, 50.0);
+            }
+            let mut rng = Rng::new(seed);
+            (0..32).map(|_| br.allows(1e9, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(77), run(77));
+        assert_ne!(run(77), run(78), "different seeds draw different probe patterns");
+    }
+
+    #[test]
+    fn health_score_sinks_on_faults_and_recovers() {
+        let mut h = HealthScore::with_nominal(100.0);
+        assert!((h.weight() - 1.0).abs() < 1e-12);
+        for _ in 0..40 {
+            h.observe(false, false, 100.0);
+        }
+        assert!(h.weight() < 0.1, "sustained failures brown the replica out: {}", h.score());
+        assert!(h.weight() >= HEALTH_FLOOR, "weight never reaches zero");
+        for _ in 0..60 {
+            h.observe(true, false, 100.0);
+        }
+        assert!(h.score() > 0.9, "healthy traffic restores the score: {}", h.score());
+    }
+
+    #[test]
+    fn health_score_sees_service_inflation() {
+        let mut h = HealthScore::with_nominal(100.0);
+        for _ in 0..60 {
+            h.observe(true, false, 1_000.0);
+        }
+        assert!(
+            h.score() < 0.2,
+            "a 10× straggler must brown out on latency alone: {}",
+            h.score()
+        );
+    }
+
+    #[test]
+    fn ladder_labels_and_deadline_expiry() {
+        let rungs = ResiliencePolicy::ladder(250.0);
+        let labels: Vec<String> = rungs.iter().map(|p| p.label()).collect();
+        assert_eq!(labels, vec!["no-retry", "retry", "retry+hedge", "retry+hedge+breaker"]);
+        let p = ResiliencePolicy::none().with_deadline(1_000.0);
+        assert!(!p.expired(500.0, 1_400.0));
+        assert!(p.expired(500.0, 1_500.1));
+        assert!(!ResiliencePolicy::none().expired(0.0, f64::MAX));
+        assert!(ResiliencePolicy::none().is_none() && !p.is_none());
+    }
+}

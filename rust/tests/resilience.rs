@@ -1,0 +1,220 @@
+//! Gray-failure resilience: the extended conservation law — accepted =
+//! completed + shed(socket|queue|deadline) + lost, with hedges counted
+//! once — across seeds × gray-fault modes in both realisations; the
+//! structural "no deadline-expired request is ever counted completed"
+//! invariant; and the sim/real resilience-ladder ranking agreement.
+
+use erbium_search::backend::BackendFactory;
+use erbium_search::cluster::{
+    AdmissionPolicy, ClusterConfig, ClusterSimConfig, RoutePolicy, SimNodeSpec,
+};
+use erbium_search::controlplane::FaultPlan;
+use erbium_search::coordinator::{
+    cross_validate_resilience_policies, AggregationPolicy, PipelineConfig, Topology,
+};
+use erbium_search::frontdoor::{
+    run_frontdoor, sim_frontdoor, BackpressurePolicy, FrontdoorConfig, FrontdoorSimConfig,
+};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::resilience::{
+    BreakerConfig, HedgePolicy, ResiliencePolicy, RetryPolicy,
+};
+use erbium_search::rules::standard::StandardVersion;
+use erbium_search::testing::fixture::compile_fixture;
+use erbium_search::workload::{session_plans, RateSchedule, SessionPlan};
+
+fn fixture() -> (BackendFactory, erbium_search::rules::types::World) {
+    let f = compile_fixture(1313, 300, StandardVersion::V2, HardwareConfig::v2_aws(4));
+    (f.native_factory(), f.world)
+}
+
+fn node_cfg() -> PipelineConfig {
+    PipelineConfig::new(Topology::new(2, 1, 1, 4))
+        .with_aggregation(AggregationPolicy::DrainQueue)
+}
+
+fn plans(seed: u64, sessions: usize, batches: usize, bq: usize, rate: f64) -> Vec<SessionPlan> {
+    session_plans(seed, &RateSchedule::constant(rate), sessions, batches, bq, 0.0, 8)
+}
+
+/// The seeded gray-fault matrix the property sweep runs: every gray mode,
+/// scaled to the realisation's nominal service time.
+fn gray_matrix(svc_us: f64) -> Vec<(&'static str, FaultPlan)> {
+    let at = 20.0 * svc_us;
+    vec![
+        ("slowdown", FaultPlan::none().and_slowdown(0, at, 1e12, 10.0)),
+        ("error", FaultPlan::none().and_error_rate(0, at, 1e12, 0.5)),
+        ("hang", FaultPlan::none().and_hang(0, at, 1e12, 0.3, 30.0 * svc_us)),
+        (
+            "mix",
+            FaultPlan::none()
+                .and_slowdown(0, at, 1e12, 8.0)
+                .and_error_rate(1, at, 1e12, 0.4)
+                .and_hang(0, at, 1e12, 0.1, 20.0 * svc_us),
+        ),
+    ]
+}
+
+/// The full mechanism stack the sweep runs under each gray mode.
+fn full_stack(svc_us: f64, deadline_us: f64) -> ResiliencePolicy {
+    ResiliencePolicy::none()
+        .with_deadline(deadline_us)
+        .with_retry(RetryPolicy::new(3, 0.5 * svc_us, 8.0 * svc_us))
+        .with_budget_ratio(0.5)
+        .with_hedge(HedgePolicy::new(3.0))
+        .with_breaker(BreakerConfig { open_us: 40.0 * svc_us, ..Default::default() })
+}
+
+/// Property sweep, DES realisation: seeds × gray modes × {no policy, full
+/// stack}. The extended conservation law holds exactly, and with a
+/// deadline set no recorded completion exceeds it — a deadline-expired
+/// request can only land in `shed_deadline`.
+#[test]
+fn sim_conserves_across_seeds_and_gray_modes() {
+    let spec = SimNodeSpec::v2_cloud(2);
+    let cluster = ClusterSimConfig::v2_cloud(3, 2)
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(16));
+    let svc = spec.request_service_us(&cluster.overheads, 8);
+    let deadline = 30.0 * svc;
+    for seed in [3u64, 17, 71, 909] {
+        for (mode, faults) in gray_matrix(svc) {
+            for policy in [ResiliencePolicy::none(), full_stack(svc, deadline)] {
+                let cfg = FrontdoorSimConfig {
+                    cluster: cluster.clone(),
+                    frontdoor: FrontdoorConfig::event(
+                        2,
+                        BackpressurePolicy::Window { window: 2 },
+                    )
+                    .with_resilience(policy),
+                    faults: faults.clone(),
+                };
+                let p = plans(seed, 16, 6, 8, 1e8);
+                let r = sim_frontdoor(&cfg, &p);
+                assert!(
+                    r.conserves_queries(),
+                    "seed {seed} mode {mode} [{}]: {}",
+                    policy.label(),
+                    r.summary()
+                );
+                assert_eq!(r.offered_queries, 16 * 6 * 8);
+                if policy.deadline_us.is_some() {
+                    assert!(
+                        r.accept_p99_us <= deadline + 1.0,
+                        "seed {seed} mode {mode}: completion past the deadline recorded \
+                         (p99 {} vs deadline {deadline})",
+                        r.accept_p99_us
+                    );
+                } else {
+                    assert_eq!(
+                        r.shed_deadline_queries, 0,
+                        "no deadline, nothing to shed on it: {}",
+                        r.summary()
+                    );
+                }
+                if r.res.hedges_issued == 0 {
+                    assert!(r.res.hedge_wins == 0, "{}", r.summary());
+                }
+            }
+        }
+    }
+}
+
+/// Property sweep, real realisation: the same invariants on wall-clock
+/// threads under the mixed gray matrix (the most adversarial mode), with
+/// kills layered on top so the fail-stop and gray paths interleave.
+#[test]
+fn real_conserves_under_gray_faults_and_the_full_stack() {
+    let (factory, world) = fixture();
+    let cluster = ClusterConfig::new(3, node_cfg())
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(16));
+    // Wall-clock scale: µs-denominated windows against real service times.
+    let svc = 2_000.0;
+    let deadline = 150_000.0;
+    for seed in [11u64, 47] {
+        let faults = FaultPlan::none()
+            .and_slowdown(0, 10_000.0, 1e9, 6.0)
+            .and_error_rate(1, 10_000.0, 1e9, 0.4)
+            .and_kill(2, 40_000.0, 30_000.0);
+        let fd = FrontdoorConfig::event(2, BackpressurePolicy::Window { window: 2 })
+            .with_resilience(full_stack(svc, deadline));
+        let p = plans(seed, 12, 6, 8, 1e8);
+        let r = run_frontdoor(cluster.clone(), factory.clone(), &world, seed, &p, &fd, &faults)
+            .unwrap();
+        assert!(r.conserves_queries(), "seed {seed}: {}", r.summary());
+        assert_eq!(r.offered_queries, 12 * 6 * 8);
+        assert_eq!(r.fault_events.len(), 2, "only the kill drives liveness");
+        assert!(
+            // Generous slack: the expiry check and the accept-latency
+            // record read the wall clock a few µs apart.
+            r.accept_p99_us <= deadline + 5_000.0,
+            "seed {seed}: completion past the deadline recorded (p99 {} vs {deadline})",
+            r.accept_p99_us
+        );
+        assert!(
+            r.res.backend_requests >= r.completed_requests,
+            "every completion rode a physical submission: {}",
+            r.summary()
+        );
+        assert_eq!(r.res.gray_fault_windows, 2, "{}", r.summary());
+    }
+}
+
+/// Retries must also pay off end-to-end in the real realisation: under a
+/// flaky replica, the full stack loses strictly fewer queries than no
+/// policy at all.
+#[test]
+fn real_retries_recover_gray_errors() {
+    let (factory, world) = fixture();
+    let cluster = ClusterConfig::new(2, node_cfg())
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::Open);
+    let faults = FaultPlan::none().and_error_rate(0, 0.0, 1e9, 0.8);
+    let p = plans(31, 10, 6, 8, 1e8);
+    let run = |res: ResiliencePolicy| {
+        let fd = FrontdoorConfig::event(2, BackpressurePolicy::Window { window: 2 })
+            .with_resilience(res);
+        run_frontdoor(cluster.clone(), factory.clone(), &world, 9, &p, &fd, &faults).unwrap()
+    };
+    let plain = run(ResiliencePolicy::none());
+    let retried = run(
+        ResiliencePolicy::none()
+            .with_retry(RetryPolicy::new(4, 500.0, 8_000.0))
+            .with_budget_ratio(1.0),
+    );
+    assert!(plain.conserves_queries(), "{}", plain.summary());
+    assert!(retried.conserves_queries(), "{}", retried.summary());
+    assert!(plain.lost_queries > 0, "{}", plain.summary());
+    assert!(
+        retried.lost_queries * 2 < plain.lost_queries,
+        "retries must recover most gray errors: {} vs {}",
+        retried.lost_queries,
+        plain.lost_queries
+    );
+    assert!(retried.res.retries > 0, "{}", retried.summary());
+}
+
+/// Acceptance criterion: the DES twin and the real front door rank the
+/// four-rung resilience ladder identically under the seeded gray-fault
+/// matrix — on goodput *and* on the accept-clock tail.
+#[test]
+fn sim_and_real_rank_resilience_policies_identically() {
+    let (factory, world) = fixture();
+    let cv = cross_validate_resilience_policies(
+        ClusterConfig::new(3, node_cfg()),
+        factory,
+        &world,
+        2424,
+    )
+    .unwrap();
+    assert!(cv.agree_on_ranking(), "{}", cv.summary());
+    for r in cv.sim.iter().chain(cv.real.iter()) {
+        assert!(r.conserves_queries(), "{}", r.summary());
+    }
+    // The ladder's mechanics must actually engage in both realisations.
+    assert!(cv.sim[1].res.retries > 0, "{}", cv.sim[1].summary());
+    assert!(cv.real[1].res.retries > 0, "{}", cv.real[1].summary());
+    assert!(cv.sim[2].res.hedges_issued > 0, "{}", cv.sim[2].summary());
+    assert!(cv.sim[0].res.retries == 0, "rung 0 is bare: {}", cv.sim[0].summary());
+}
