@@ -1,0 +1,173 @@
+//! Telemetry bench: the flight recorder's overhead gate and the trace
+//! artifact.
+//!
+//! Three measurements:
+//!
+//! 1. **Overhead gate (DES)** — the same front-door simulation run with
+//!    the zero-cost `NullRecorder` path and with a full `RingRecorder`,
+//!    best-of-N wall clock each. Acceptance: traced throughput ≥
+//!    [`MIN_THROUGHPUT_RATIO`] of untraced (≤ ~5 % overhead), and the
+//!    traced run's *results* are bit-identical to the untraced run's —
+//!    recording is a side effect, never a perturbation.
+//! 2. **Ring micro-bench** — raw `RingRecorder::record` events/s, full
+//!    and 1-in-64 sampled (the sampled path pays the hash but skips the
+//!    ring).
+//! 3. **Reconciliation** — the traced run's lane counts equal the
+//!    report's exactly (the flight recorder is an audit, not an
+//!    estimate).
+//!
+//! Emits `BENCH_telemetry.json` (override with `BENCH_OUT`) plus a
+//! Perfetto-loadable `BENCH_telemetry.trace.json` (override with
+//! `TRACE_OUT`), both uploaded by the CI bench-smoke step. `BENCH_SMOKE=1`
+//! shrinks the workload for CI.
+
+use std::time::Instant;
+
+use erbium_search::benchkit::{print_table, write_json, Json};
+use erbium_search::cluster::{AdmissionPolicy, ClusterSimConfig, RoutePolicy};
+use erbium_search::controlplane::FaultPlan;
+use erbium_search::frontdoor::{
+    sim_frontdoor, BackpressurePolicy, FrontdoorConfig, FrontdoorReport, FrontdoorSimConfig,
+};
+use erbium_search::telemetry::{
+    write_chrome_trace, Recorder, RingRecorder, StageEvent, TraceSpec,
+};
+use erbium_search::workload::{session_plans, RateSchedule, SessionPlan};
+
+const BATCH: usize = 16;
+const NODES: usize = 3;
+/// Acceptance: traced DES throughput as a fraction of untraced.
+const MIN_THROUGHPUT_RATIO: f64 = 0.95;
+
+fn plans(sessions: usize, batches: usize) -> Vec<SessionPlan> {
+    // Moderate load on the modelled fleet; the absolute rate only scales
+    // virtual time, the wall-clock cost is per *event*.
+    session_plans(0x7E1E, &RateSchedule::constant(4_000.0), sessions, batches, BATCH, 0.0, 8)
+}
+
+fn cfg(trace: Option<TraceSpec>) -> FrontdoorSimConfig {
+    let mut fd = FrontdoorConfig::event(2, BackpressurePolicy::Window { window: 4 });
+    if let Some(spec) = trace {
+        fd = fd.with_trace(spec);
+    }
+    FrontdoorSimConfig {
+        cluster: ClusterSimConfig::v2_cloud(NODES, 2)
+            .with_route(RoutePolicy::RoundRobin)
+            .with_admission(AdmissionPolicy::QueueCap(24)),
+        frontdoor: fd,
+        faults: FaultPlan::none(),
+    }
+}
+
+/// Best-of-N wall clock of one DES run (min is the standard noise floor
+/// estimator for a deterministic workload).
+fn best_of(repeats: usize, cfg: &FrontdoorSimConfig, p: &[SessionPlan]) -> (f64, FrontdoorReport) {
+    let mut best = f64::INFINITY;
+    let mut report = None;
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        let r = sim_frontdoor(cfg, p);
+        best = best.min(t0.elapsed().as_secs_f64());
+        report = Some(r);
+    }
+    (best, report.expect("at least one repeat"))
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (sessions, batches, repeats, micro_n) =
+        if smoke { (48, 8, 5, 1_000_000u64) } else { (96, 16, 7, 4_000_000u64) };
+    let p = plans(sessions, batches);
+
+    // ---- 1. Overhead gate: NullRecorder vs RingRecorder -----------------
+    let (t_null, r_null) = best_of(repeats, &cfg(None), &p);
+    let (t_ring, r_ring) = best_of(repeats, &cfg(Some(TraceSpec::full())), &p);
+    let ratio = t_null / t_ring.max(1e-12);
+    println!(
+        "DES {} requests: untraced {:.2} ms, traced {:.2} ms → traced throughput {:.1}% \
+         ({} events recorded)",
+        sessions * batches,
+        t_null * 1e3,
+        t_ring * 1e3,
+        ratio * 100.0,
+        r_ring.trace.len(),
+    );
+    assert!(
+        ratio >= MIN_THROUGHPUT_RATIO,
+        "acceptance: tracing must keep ≥{:.0}% of untraced throughput, got {:.1}%",
+        MIN_THROUGHPUT_RATIO * 100.0,
+        ratio * 100.0
+    );
+    // Recording is side-effect-only: identical results bit for bit.
+    assert_eq!(r_null.completed_queries, r_ring.completed_queries);
+    assert_eq!(r_null.lost_queries, r_ring.lost_queries);
+    assert_eq!(r_null.accept_p99_us.to_bits(), r_ring.accept_p99_us.to_bits());
+    assert!(!r_ring.trace.is_empty(), "traced run must actually record");
+
+    // ---- 2. Ring micro-bench: events/s, full and sampled ----------------
+    let micro = |spec: TraceSpec| {
+        let mut rec = RingRecorder::new(spec);
+        let t0 = Instant::now();
+        for i in 0..micro_n {
+            rec.record(i as f64, i, StageEvent::Admitted);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        (micro_n as f64 / dt.max(1e-12), rec.into_trace())
+    };
+    let (full_eps, _) = micro(TraceSpec::full());
+    let (sampled_eps, sampled_trace) = micro(TraceSpec::sampled(64));
+    println!(
+        "RingRecorder: {:.0} M events/s full, {:.0} M events/s 1-in-64 sampled \
+         ({} kept of {micro_n})",
+        full_eps / 1e6,
+        sampled_eps / 1e6,
+        sampled_trace.len() + sampled_trace.dropped as usize,
+    );
+
+    // ---- 3. Reconciliation: the trace is an audit of the report ---------
+    assert!(r_ring.conserves_queries(), "{}", r_ring.summary());
+    assert!(r_ring.trace.is_complete());
+    let lanes = r_ring.trace.lane_counts();
+    assert_eq!(lanes.completed_queries, r_ring.completed_queries);
+    assert_eq!(lanes.shed_socket_queries, r_ring.shed_socket_queries);
+    assert_eq!(lanes.shed_queue_queries, r_ring.shed_queue_queries);
+    assert_eq!(lanes.shed_deadline_queries, r_ring.shed_deadline_queries);
+    assert_eq!(lanes.lost_queries, r_ring.lost_queries);
+    assert_eq!(lanes.terminal_queries(), r_ring.offered_queries);
+
+    print_table(
+        "flight-recorder overhead",
+        &["run", "best ms", "throughput vs untraced"],
+        &[
+            vec!["untraced (NullRecorder)".into(), format!("{:.2}", t_null * 1e3), "—".into()],
+            vec![
+                "traced (RingRecorder)".into(),
+                format!("{:.2}", t_ring * 1e3),
+                format!("{:.1}%", ratio * 100.0),
+            ],
+        ],
+    );
+
+    // ---- Artifacts ------------------------------------------------------
+    let trace_path = std::env::var("TRACE_OUT")
+        .unwrap_or_else(|_| "BENCH_telemetry.trace.json".to_string());
+    write_chrome_trace(&trace_path, &r_ring.trace).expect("write chrome trace");
+
+    let json = Json::obj([
+        ("bench", Json::Str("telemetry".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("requests", Json::Int((sessions * batches) as i64)),
+        ("repeats", Json::Int(repeats as i64)),
+        ("untraced_best_s", Json::Num(t_null)),
+        ("traced_best_s", Json::Num(t_ring)),
+        ("throughput_ratio", Json::Num(ratio)),
+        ("min_throughput_ratio", Json::Num(MIN_THROUGHPUT_RATIO)),
+        ("trace_events", Json::Int(r_ring.trace.len() as i64)),
+        ("ring_full_events_per_s", Json::Num(full_eps)),
+        ("ring_sampled64_events_per_s", Json::Num(sampled_eps)),
+        ("trace_artifact", Json::Str(trace_path)),
+    ]);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_telemetry.json".to_string());
+    write_json(&out_path, &json).expect("write bench artifact");
+}

@@ -37,7 +37,7 @@ pub fn measure<F: FnMut()>(budget_ms: f64, mut f: F) -> Stats {
         f();
         samples.push(t.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     Stats {
         mean_ns: samples.iter().sum::<f64>() / iters as f64,
         p50_ns: samples[iters / 2],

@@ -214,12 +214,25 @@ impl ClusterHandle {
     /// [`Self::note_completion`] plus the brown-out health observation —
     /// callers that track deadlines report misses here.
     pub(crate) fn note_outcome(&self, c: &Completion, deadline_miss: bool) {
+        self.note_outcome_at(c, deadline_miss, f64::NAN);
+    }
+
+    /// [`Self::note_outcome`] with a caller clock: returns the brown-out
+    /// threshold crossing this outcome caused, if any, so the reactor —
+    /// which owns the flight recorder — can log the health transition.
+    /// (NaN clock: observe without transition reporting.)
+    pub(crate) fn note_outcome_at(
+        &self,
+        c: &Completion,
+        deadline_miss: bool,
+        t_us: f64,
+    ) -> Option<crate::resilience::HealthTransition> {
         let outstanding = self.nodes[c.node].outstanding();
         let prev = f64::from_bits(self.est_service[c.node].load(Ordering::Relaxed));
         let next = update_service_estimate(prev, c.latency_us, outstanding);
         self.est_service[c.node].store(next.to_bits(), Ordering::Relaxed);
         let norm = c.latency_us / (outstanding as f64 + 1.0);
-        self.health[c.node].lock().unwrap().observe(c.ok, deadline_miss, norm);
+        self.health[c.node].lock().unwrap().observe_at(t_us, c.ok, deadline_miss, norm)
     }
 
     /// Per-replica brown-out routing weights, `(0, 1]`.

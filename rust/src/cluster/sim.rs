@@ -243,6 +243,29 @@ impl SimNodeSpec {
         b as f64 / self.capacity_qps(o, b).max(1e-9) * 1e6
     }
 
+    /// Fraction of a request's service time that is the accelerator
+    /// kernel itself (as opposed to the CPU feed stage), in [0, 1] — the
+    /// telemetry plane's `kernel_us` attribution for simulated exec
+    /// spans. Exactly `capacity / kernel-capacity` from the same
+    /// decomposition [`SimNodeSpec::capacity_qps`] min's over: 1.0 when
+    /// the kernel is the binding stage, small when a weak feeder starves
+    /// it (§6.1 — the kernel idles while the node is saturated). CPU
+    /// nodes have no kernel stage: 0.
+    pub fn kernel_share(&self, o: &Overheads, n_queries: usize) -> f64 {
+        let batch = n_queries.max(1);
+        let b = batch as f64;
+        match self.engine {
+            SimEngine::Fpga { hw, depth } => {
+                let model = FpgaModel::new(hw, depth);
+                let kernel_us =
+                    o.xrt.submission_us(self.feeders) + model.batch_timing(batch).total_us;
+                let kernel_qps = b / kernel_us.max(1e-9) * 1e6;
+                (self.capacity_qps(o, batch) / kernel_qps.max(1e-9)).clamp(0.0, 1.0)
+            }
+            SimEngine::Cpu { .. } => 0.0,
+        }
+    }
+
     fn label(&self) -> String {
         match self.engine {
             SimEngine::Fpga { hw, .. } => {
@@ -816,6 +839,35 @@ mod tests {
         assert!(four > 1.5 * one, "feeders must relieve the bottleneck");
         assert!(eight < 1.3 * four, "kernel ceiling must flatten the curve");
         assert!(eight < sat, "nothing exceeds the nominal kernel rate");
+    }
+
+    #[test]
+    fn kernel_share_tracks_the_binding_stage() {
+        let o = Overheads::default();
+        // One weak feeder at a large batch: the feeder is the wall, the
+        // kernel mostly idles — share below the telemetry localiser's
+        // kernel-idle threshold (0.4), which is what makes the §6.1
+        // weak-feeder crossval regime legible. (Past one XDMA chunk the
+        // kernel's per-query steady state is ~31 ns vs the feeder's
+        // ~145 ns, so the share keeps falling with batch size.)
+        let weak = SimNodeSpec::v2_cloud(1);
+        let share_weak = weak.kernel_share(&o, 32_768);
+        assert!(
+            share_weak < 0.4,
+            "1 feeder at batch 32k must starve the kernel: share {share_weak:.2}"
+        );
+        // Plenty of feeders: the kernel becomes the binding stage.
+        let strong = SimNodeSpec::v2_cloud(16);
+        let share_strong = strong.kernel_share(&o, 32_768);
+        assert!(
+            share_strong > 0.99,
+            "16 feeders must saturate the kernel: share {share_strong:.2}"
+        );
+        // The share is exactly capacity/kernel-capacity: when the kernel
+        // binds, service time × share equals the kernel's closed-form time.
+        assert!(share_weak > 0.0 && share_weak <= 1.0);
+        // CPU nodes have no kernel stage at all.
+        assert_eq!(SimNodeSpec::cpu(4, 2.0).kernel_share(&o, 1_024), 0.0);
     }
 
     #[test]

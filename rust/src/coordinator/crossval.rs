@@ -35,6 +35,7 @@ use crate::frontdoor::{
     FrontdoorSimConfig,
 };
 use crate::rules::types::World;
+use crate::telemetry::{Bottleneck, StageBreakdown, TraceSpec};
 use crate::workload::{
     session_plans, PoissonSource, ProductionTrace, RateSchedule, ScheduledSource,
 };
@@ -824,4 +825,271 @@ pub fn cross_validate_resilience_policies(
 /// Requests/second one replica drains at a given nominal service time.
 fn mu_sim_rps_of(service_us: f64) -> f64 {
     1e6 / service_us.max(1e-9)
+}
+
+// ---------------------------------------------------------------------------
+// Stage-breakdown cross-validation (the telemetry plane's acceptance test)
+// ---------------------------------------------------------------------------
+
+/// Batch size of the weak-feeder regime. Large enough that the per-query
+/// CPU feed stage (~145 ns/q of encode + wrapper sched) dwarfs the
+/// chunk-pipelined kernel's ~31 ns/q steady state — the §6.1 imbalance.
+/// At this size a 1-feeder node's modelled
+/// [`SimNodeSpec::kernel_share`] is ≈0.29, comfortably under the
+/// localiser's [`KERNEL_IDLE`](crate::telemetry::breakdown::KERNEL_IDLE)
+/// threshold; at the front-door batch sizes (16) the kernel binds and the
+/// signature disappears.
+const STAGE_CROSSVAL_FEEDER_BATCH: usize = 32_768;
+const STAGE_CROSSVAL_FEEDER_SESSIONS: usize = 10;
+const STAGE_CROSSVAL_FEEDER_BATCHES: usize = 4;
+/// Offered load of the weak-feeder regime, ×measured fleet capacity:
+/// overloaded, so the wait sits upstream of the starved kernel and the
+/// upstream shares dominate the decomposition.
+const STAGE_CROSSVAL_FEEDER_OVERLOAD: f64 = 2.0;
+/// Saturating-probe requests per calibration burst. The weak-feeder
+/// regime probes with fewer (its batches are 2 048× larger).
+const STAGE_CROSSVAL_FEEDER_PROBE: usize = 60;
+
+const STAGE_CROSSVAL_STRAGGLER_BATCH: usize = 16;
+const STAGE_CROSSVAL_STRAGGLER_SESSIONS: usize = 24;
+const STAGE_CROSSVAL_STRAGGLER_BATCHES: usize = 8;
+/// Offered load of the straggler regime, ×measured fleet capacity:
+/// light, so the 8× slowdown shows up as exec-span skew on one replica
+/// rather than fleet-wide queueing collapse.
+const STAGE_CROSSVAL_STRAGGLER_LOAD: f64 = 0.2;
+const STAGE_CROSSVAL_STRAGGLER_PROBE: usize = 240;
+/// Gray slowdown factor of the straggler regime (inside PR 7's 8–10×
+/// matrix, ≥ 2× the localiser's [`STRAGGLER_FACTOR`]).
+///
+/// [`STRAGGLER_FACTOR`]: crate::telemetry::breakdown::STRAGGLER_FACTOR
+const STAGE_CROSSVAL_SLOWDOWN: f64 = 8.0;
+/// Clean warm-up before the slowdown window opens, in nominal services.
+const STAGE_CROSSVAL_WARMUP_SVCS: f64 = 40.0;
+/// Per-session backpressure window (as in the resilience crossval: wide
+/// enough that parked time measures the fleet, not the session itself).
+const STAGE_CROSSVAL_WINDOW: usize = 4;
+
+/// One engineered regime of the stage-breakdown crossval: both
+/// realisations run it under full tracing and their breakdowns must hand
+/// the localiser the same verdict — the `expected` one.
+#[derive(Debug, Clone)]
+pub struct StageRegime {
+    pub name: &'static str,
+    /// The verdict the regime was engineered to produce.
+    pub expected: Bottleneck,
+    pub sim_report: FrontdoorReport,
+    pub real_report: FrontdoorReport,
+    pub sim: StageBreakdown,
+    pub real: StageBreakdown,
+}
+
+impl StageRegime {
+    /// Both realisations localise the bottleneck to the same place.
+    pub fn agree(&self) -> bool {
+        self.sim.localise() == self.real.localise()
+    }
+
+    /// …and that place is the one the regime was engineered to produce.
+    pub fn pins_expected(&self) -> bool {
+        self.sim.localise() == self.expected && self.real.localise() == self.expected
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} (expect {}) — sim: {} | real: {} → {}",
+            self.name,
+            self.expected.label(),
+            self.sim.summary(),
+            self.real.summary(),
+            if self.pins_expected() { "agree" } else { "LOCALISATION MISMATCH" }
+        )
+    }
+}
+
+/// Stage-breakdown cross-validation: the DES twin and the real threaded
+/// front door run the same two engineered regimes under full tracing, and
+/// [`StageBreakdown::localise`] must pin the same bottleneck in both.
+///
+/// * **weak-feeder** — §6.1's imbalance: one wrapper worker feeding four
+///   kernels, huge batches, 2× overload. The node is saturated but the
+///   kernels idle behind the serial feed stage → [`Bottleneck::Feeder`].
+/// * **straggler** — PR 7's gray slowdown on replica 0 under light load:
+///   its exec spans dwarf its peers' → `Bottleneck::Replica(0)`.
+///
+/// As in the other fleet crossvals each realisation is first calibrated
+/// (probe burst vs node model) and offered the same *relative* load, so
+/// "the same regime" means the same place on each realisation's own
+/// saturation curve — the agreement is on the *shape* of the
+/// decomposition, never on absolute times.
+#[derive(Debug, Clone)]
+pub struct StageBreakdownCrossValidation {
+    pub regimes: Vec<StageRegime>,
+}
+
+impl StageBreakdownCrossValidation {
+    /// True when every regime's localiser verdict matches in both
+    /// realisations *and* is the engineered one.
+    pub fn agree_on_localisation(&self) -> bool {
+        self.regimes.iter().all(StageRegime::pins_expected)
+    }
+
+    pub fn summary(&self) -> String {
+        self.regimes.iter().map(StageRegime::summary).collect::<Vec<_>>().join("\n")
+    }
+}
+
+/// Shape of one engineered stage-crossval regime.
+struct StageRegimeSpec {
+    name: &'static str,
+    expected: Bottleneck,
+    node: PipelineConfig,
+    nodes: usize,
+    batch: usize,
+    sessions: usize,
+    batches: usize,
+    load: f64,
+    probe_requests: usize,
+    /// Gray slowdown factor on replica 0 (after a
+    /// [`STAGE_CROSSVAL_WARMUP_SVCS`]-service clean warm-up), if any.
+    slowdown: Option<f64>,
+}
+
+/// Run both realisations of one regime under full tracing and decompose
+/// the traces. Same calibration discipline as the policy crossvals: probe
+/// the real node, derive the sim node, offer each `spec.load`× its own
+/// fleet capacity.
+fn run_stage_regime(
+    factory: &BackendFactory,
+    world: &World,
+    seed: u64,
+    rs: StageRegimeSpec,
+) -> Result<StageRegime> {
+    use crate::cluster::{AdmissionPolicy, RoutePolicy};
+
+    let batch = rs.batch;
+    let burst = |s| PoissonSource::new(world, s, 1e8, batch, rs.probe_requests);
+
+    // ---- Calibrate each realisation's per-node drain rate --------------
+    let probe_cfg = ClusterConfig::new(1, rs.node).with_admission(AdmissionPolicy::Open);
+    let probe = Cluster::new(probe_cfg, factory.clone());
+    let mu_real_rps = (0..2u64)
+        .map(|i| {
+            probe
+                .run(&mut burst(seed ^ (1 + i)))
+                .map(|r| r.achieved_qps / batch as f64)
+        })
+        .collect::<Result<Vec<_>>>()?
+        .into_iter()
+        .fold(0.0, f64::max);
+    let feeders = rs.node.topology.workers.max(1);
+    let sim_cluster = ClusterSimConfig::v2_cloud(rs.nodes, feeders)
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(FRONTDOOR_CROSSVAL_QUEUE_CAP));
+    let spec = SimNodeSpec::v2_cloud(feeders);
+    let svc_sim = spec.request_service_us(&sim_cluster.overheads, batch);
+    let svc_real = 1e6 / mu_real_rps.max(1e-9);
+
+    // ---- Matched-relative-load session streams -------------------------
+    let plans_for = |mu_rps: f64| {
+        let session_rate = rs.load * rs.nodes as f64 * mu_rps / rs.batches as f64;
+        session_plans(
+            seed,
+            &RateSchedule::constant(session_rate),
+            rs.sessions,
+            rs.batches,
+            batch,
+            0.0,
+            world.airports.len(),
+        )
+    };
+    let plans_sim = plans_for(mu_sim_rps_of(svc_sim));
+    let plans_real = plans_for(mu_real_rps);
+    let real_cluster = ClusterConfig::new(rs.nodes, rs.node)
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(FRONTDOOR_CROSSVAL_QUEUE_CAP));
+
+    let faults_of = |svc: f64| match rs.slowdown {
+        Some(f) => {
+            FaultPlan::none().and_slowdown(0, STAGE_CROSSVAL_WARMUP_SVCS * svc, 1e12, f)
+        }
+        None => FaultPlan::none(),
+    };
+    let fd = FrontdoorConfig::event(
+        2,
+        BackpressurePolicy::Window { window: STAGE_CROSSVAL_WINDOW },
+    )
+    .with_trace(TraceSpec::full());
+
+    let sim_report = sim_frontdoor(
+        &FrontdoorSimConfig {
+            cluster: sim_cluster,
+            frontdoor: fd,
+            faults: faults_of(svc_sim),
+        },
+        &plans_sim,
+    );
+    let real_report = run_frontdoor(
+        real_cluster,
+        factory.clone(),
+        world,
+        seed ^ 5,
+        &plans_real,
+        &fd,
+        &faults_of(svc_real),
+    )?;
+
+    // The sim's exec spans carry absolute kernel slices (service ×
+    // kernel-share) on a single modelled kernel pipeline; the real node
+    // spreads its engine spans over `topology.kernels` engine servers.
+    let sim = StageBreakdown::analyze(&sim_report.trace, rs.nodes, 1);
+    let real =
+        StageBreakdown::analyze(&real_report.trace, rs.nodes, rs.node.topology.kernels);
+    Ok(StageRegime { name: rs.name, expected: rs.expected, sim_report, real_report, sim, real })
+}
+
+/// Run the two engineered regimes through both realisations and collect
+/// the verdicts. See [`StageBreakdownCrossValidation`].
+pub fn cross_validate_stage_breakdown(
+    factory: BackendFactory,
+    world: &World,
+    seed: u64,
+) -> Result<StageBreakdownCrossValidation> {
+    let weak_feeder = run_stage_regime(
+        &factory,
+        world,
+        seed,
+        StageRegimeSpec {
+            name: "weak-feeder",
+            expected: Bottleneck::Feeder,
+            // One wrapper worker feeding four kernels: the §6.1 shape.
+            node: PipelineConfig::new(Topology::new(2, 1, 4, 1))
+                .with_aggregation(AggregationPolicy::DrainQueue),
+            nodes: 2,
+            batch: STAGE_CROSSVAL_FEEDER_BATCH,
+            sessions: STAGE_CROSSVAL_FEEDER_SESSIONS,
+            batches: STAGE_CROSSVAL_FEEDER_BATCHES,
+            load: STAGE_CROSSVAL_FEEDER_OVERLOAD,
+            probe_requests: STAGE_CROSSVAL_FEEDER_PROBE,
+            slowdown: None,
+        },
+    )?;
+    let straggler = run_stage_regime(
+        &factory,
+        world,
+        seed ^ 0x51AE,
+        StageRegimeSpec {
+            name: "straggler",
+            expected: Bottleneck::Replica(0),
+            node: PipelineConfig::new(Topology::new(2, 1, 1, 4))
+                .with_aggregation(AggregationPolicy::DrainQueue),
+            nodes: 3,
+            batch: STAGE_CROSSVAL_STRAGGLER_BATCH,
+            sessions: STAGE_CROSSVAL_STRAGGLER_SESSIONS,
+            batches: STAGE_CROSSVAL_STRAGGLER_BATCHES,
+            load: STAGE_CROSSVAL_STRAGGLER_LOAD,
+            probe_requests: STAGE_CROSSVAL_STRAGGLER_PROBE,
+            slowdown: Some(STAGE_CROSSVAL_SLOWDOWN),
+        },
+    )?;
+    Ok(StageBreakdownCrossValidation { regimes: vec![weak_feeder, straggler] })
 }

@@ -28,7 +28,7 @@ impl Percentiles {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.samples.sort_by(f64::total_cmp);
             self.sorted = true;
         }
     }
@@ -127,6 +127,160 @@ impl DualClock {
             return 0.0;
         }
         self.accept.percentile(p) - self.submit.percentile(p)
+    }
+}
+
+/// Sub-buckets per octave in [`LogHistogram`]: 16 linear sub-divisions of
+/// every power-of-two range bound the relative bucket error at 1/16 =
+/// 6.25% — tight enough for stage-share timelines, far below the
+/// regime-level tolerances crossval uses.
+const LOG_HIST_SUBBUCKETS: usize = 16;
+/// Values below this resolve exactly (one bucket per integer µs).
+const LOG_HIST_LINEAR_LIMIT: u64 = LOG_HIST_SUBBUCKETS as u64;
+/// Bucket count covering the full `u64` range: 16 exact linear buckets,
+/// then 16 sub-buckets for each of the 60 octaves above them.
+const LOG_HIST_BUCKETS: usize = LOG_HIST_LINEAR_LIMIT as usize + 60 * LOG_HIST_SUBBUCKETS;
+
+/// A bounded, mergeable log-linear histogram of non-negative µs values —
+/// the telemetry-plane companion to [`Percentiles`]. `Percentiles` keeps
+/// every sample (exact, but unbounded at million-request scale); this
+/// keeps a fixed ~1k-slot count array with ≤6.25% relative bucket error
+/// on quantiles, plus exact `min`/`max`/`sum`. Use `Percentiles` for
+/// tests and crossval, `LogHistogram` for always-on timelines.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Box<[u64; LOG_HIST_BUCKETS]>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: Box::new([0; LOG_HIST_BUCKETS]),
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(u: u64) -> usize {
+        if u < LOG_HIST_LINEAR_LIMIT {
+            return u as usize;
+        }
+        // Octave = position of the leading bit; the next 4 bits pick one
+        // of 16 linear sub-buckets inside it.
+        let top = 63 - u.leading_zeros() as usize; // ≥ 4 here
+        let sub = ((u >> (top - 4)) & 0xF) as usize;
+        LOG_HIST_LINEAR_LIMIT as usize + (top - 4) * LOG_HIST_SUBBUCKETS + sub
+    }
+
+    /// Representative (midpoint) value of a bucket, for quantile answers.
+    fn bucket_mid(b: usize) -> f64 {
+        if b < LOG_HIST_LINEAR_LIMIT as usize {
+            return b as f64;
+        }
+        let rel = b - LOG_HIST_LINEAR_LIMIT as usize;
+        let top = rel / LOG_HIST_SUBBUCKETS + 4;
+        let sub = (rel % LOG_HIST_SUBBUCKETS) as u64;
+        let lo = (1u64 << top) + (sub << (top - 4));
+        let width = 1u64 << (top - 4);
+        lo as f64 + (width as f64 - 1.0) / 2.0
+    }
+
+    /// Record one value. Negative and NaN inputs clamp to zero — the
+    /// histogram is for durations, which are non-negative by construction.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        let u = if v >= u64::MAX as f64 { u64::MAX } else { v.round() as u64 };
+        self.counts[Self::bucket_of(u)] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+    pub fn mean(&self) -> f64 {
+        self.sum / (self.n as f64).max(1.0)
+    }
+    /// Exact observed maximum (not a bucket approximation).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+    /// Exact observed minimum.
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    /// Exact sum of all recorded values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Nearest-rank percentile answered with the bucket midpoint —
+    /// within 6.25% of the exact sample answer, bounded by construction.
+    /// Returns 0.0 on an empty histogram (timelines may legitimately be
+    /// empty; the panic-on-empty contract stays with `Percentiles`).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Clamp into the exact observed range so p0/p100 never
+                // overshoot min/max by bucket rounding.
+                return Self::bucket_mid(b).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fold another histogram in: counts add, extremes combine — exact
+    /// with respect to the bucketed representation (merge-then-query ==
+    /// record-everything-on-one).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 }
 
@@ -243,5 +397,94 @@ mod tests {
         let mut b = Percentiles::new();
         b.merge(&a);
         assert_eq!(b.p50(), 2.0);
+    }
+
+    #[test]
+    fn nan_samples_sort_instead_of_panicking() {
+        let mut p = Percentiles::new();
+        p.record(5.0);
+        p.record(f64::NAN);
+        p.record(1.0);
+        // total_cmp sorts NaN after every finite value; the finite
+        // quantiles stay sane and nothing panics.
+        assert_eq!(p.percentile(0.0), 1.0);
+        assert_eq!(p.p50(), 5.0);
+    }
+
+    #[test]
+    fn log_histogram_tracks_percentiles_within_bucket_error() {
+        // Same distribution through both collectors: every quantile must
+        // agree within the 6.25% bucket bound.
+        let mut exact = Percentiles::new();
+        let mut hist = LogHistogram::new();
+        let mut x = 7u64;
+        for _ in 0..20_000 {
+            // xorshift-ish spread over ~6 decades
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = (x % 1_000_000) as f64;
+            exact.record(v);
+            hist.record(v);
+        }
+        assert_eq!(hist.len(), 20_000);
+        for q in [1.0, 10.0, 50.0, 90.0, 99.0, 99.9] {
+            let e = exact.percentile(q);
+            let h = hist.percentile(q);
+            let tol = (e * 0.0625).max(1.0);
+            assert!((h - e).abs() <= tol, "q={q}: exact {e} vs hist {h} (tol {tol})");
+        }
+        assert_eq!(hist.max(), exact.max(), "max is exact, not bucketed");
+        assert_eq!(hist.min(), exact.percentile(0.0), "min is exact");
+        assert!((hist.mean() - exact.mean()).abs() < 1e-6, "sum/mean are exact");
+    }
+
+    #[test]
+    fn log_histogram_small_values_are_exact() {
+        let mut hist = LogHistogram::new();
+        for v in 0..16 {
+            hist.record(v as f64);
+        }
+        assert_eq!(hist.percentile(0.0), 0.0);
+        assert_eq!(hist.p50(), 7.0, "sub-16 µs values resolve exactly");
+        assert_eq!(hist.percentile(100.0), 15.0);
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_direct() {
+        let mut direct = LogHistogram::new();
+        let mut shards = vec![LogHistogram::new(), LogHistogram::new(), LogHistogram::new()];
+        for i in 0..3_000usize {
+            let v = ((i * 131) % 50_000) as f64;
+            direct.record(v);
+            shards[i % 3].record(v);
+        }
+        let mut merged = LogHistogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.len(), direct.len());
+        for q in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(merged.percentile(q), direct.percentile(q), "q={q}");
+        }
+        assert_eq!(merged.max(), direct.max());
+        assert!((merged.sum() - direct.sum()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_histogram_handles_degenerate_inputs() {
+        let empty = LogHistogram::new();
+        assert!(empty.is_empty());
+        assert_eq!(empty.p99(), 0.0, "empty histogram answers 0, no panic");
+        assert_eq!(empty.max(), 0.0);
+
+        let mut h = LogHistogram::new();
+        h.record(-5.0); // clamps to 0
+        h.record(f64::NAN); // clamps to 0
+        h.record(1e18); // far octave, no overflow
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.min(), 0.0);
+        let p100 = h.percentile(100.0);
+        assert!((p100 - 1e18).abs() <= 1e18 * 0.0625, "giant value lands in range: {p100}");
     }
 }

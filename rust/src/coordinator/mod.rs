@@ -34,12 +34,13 @@ pub use config::{AggregationPolicy, FailurePolicy, PipelineConfig, Topology};
 pub use crossval::{
     cross_validate, cross_validate_cluster_policies, cross_validate_frontdoor_policies,
     cross_validate_resilience_policies, cross_validate_scaling_policies,
-    resilience_crossval_faults, ClusterPolicyCrossValidation, CrossValidation,
-    FrontdoorPolicyCrossValidation, ResiliencePolicyCrossValidation,
-    ScalingPolicyCrossValidation,
+    cross_validate_stage_breakdown, resilience_crossval_faults,
+    ClusterPolicyCrossValidation, CrossValidation, FrontdoorPolicyCrossValidation,
+    ResiliencePolicyCrossValidation, ScalingPolicyCrossValidation,
+    StageBreakdownCrossValidation, StageRegime,
 };
 pub use domain_explorer::{DomainExplorer, MctStrategy, UserQueryOutcome};
-pub use metrics::{DualClock, Percentiles};
+pub use metrics::{DualClock, LogHistogram, Percentiles};
 pub use overheads::Overheads;
 pub use pipeline::{Pipeline, PipelineReport};
 pub use sim::{simulate, LoadMode, SimConfig, SimReport};

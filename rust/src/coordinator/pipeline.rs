@@ -77,6 +77,15 @@ pub(crate) struct Completion {
     pub n_queries: usize,
     /// Queue + aggregation + engine time as seen from submission, µs.
     pub latency_us: f64,
+    /// Worker-dequeue → reply span, µs (the exec stage of `latency_us`;
+    /// the remainder is router-queue wait). The flight recorder stamps
+    /// `ExecStart` retroactively at `completion − exec_us`.
+    pub exec_us: f64,
+    /// This request's slice of the engine-call span, µs — the combined
+    /// call's span attributed query-weighted (`span × n / combined_len`)
+    /// so an aggregated call is not counted once per rider. The §6.1
+    /// feeder-vs-kernel signal.
+    pub kernel_us: f64,
     pub ok: bool,
 }
 
@@ -86,10 +95,12 @@ pub(crate) struct WorkRequest {
     reply: ReplySlot,
 }
 
-/// One combined request travelling worker → engine server.
+/// One combined request travelling worker → engine server. The reply
+/// carries the engine-side call span (µs) so the worker can attribute
+/// kernel time per request without another shared counter.
 struct EngineRequest {
     queries: Vec<MctQuery>,
-    reply: mpsc::Sender<Result<Vec<MctDecision>, String>>,
+    reply: mpsc::Sender<(Result<Vec<MctDecision>, String>, f64)>,
 }
 
 /// Counters shared across the pipeline stages.
@@ -189,7 +200,7 @@ impl NodeCore {
                         while let Ok(req) = erx.lock().unwrap().recv() {
                             counters.engine_calls.fetch_add(1, Ordering::Relaxed);
                             counters.failed_calls.fetch_add(1, Ordering::Relaxed);
-                            let _ = req.reply.send(Err(format!("backend init: {e:#}")));
+                            let _ = req.reply.send((Err(format!("backend init: {e:#}")), 0.0));
                         }
                         return;
                     }
@@ -227,10 +238,9 @@ impl NodeCore {
                             Err(format!("{e:#}"))
                         }
                     };
-                    counters
-                        .kernel_busy_ns
-                        .fetch_add(b0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    let _ = req.reply.send(msg);
+                    let span = b0.elapsed();
+                    counters.kernel_busy_ns.fetch_add(span.as_nanos() as u64, Ordering::Relaxed);
+                    let _ = req.reply.send((msg, span.as_secs_f64() * 1e6));
                 }
             }));
         }
@@ -287,13 +297,13 @@ impl NodeCore {
                     // scatter), not the blocked wait on the engine — the
                     // stages must not double-count each other's service.
                     let combine_ns = b0.elapsed().as_nanos() as u64;
-                    let res = if etx
+                    let (res, engine_span_us) = if etx
                         .send(EngineRequest { queries: combined, reply: rtx })
                         .is_err()
                     {
-                        Err("board gone".to_string())
+                        (Err("board gone".to_string()), 0.0)
                     } else {
-                        rrx.recv().unwrap_or_else(|_| Err("engine server died".into()))
+                        rrx.recv().unwrap_or_else(|_| (Err("engine server died".into()), 0.0))
                     };
                     let res = match res {
                         Ok(ds) if ds.len() != combined_len => Err(format!(
@@ -305,6 +315,11 @@ impl NodeCore {
 
                     // Scatter the aggregate reply back per request.
                     let s0 = Instant::now();
+                    // Exec span (dequeue → reply) and the engine call's
+                    // per-query kernel slice, shared by every rider of
+                    // this combined call.
+                    let exec_us = b0.elapsed().as_secs_f64() * 1e6;
+                    let kernel_per_query_us = engine_span_us / combined_len.max(1) as f64;
                     let mut off = 0;
                     for (req, n) in pending.into_iter().zip(&spans) {
                         let slice = match &res {
@@ -325,6 +340,8 @@ impl NodeCore {
                                     node,
                                     n_queries: *n,
                                     latency_us: t_submit.elapsed().as_secs_f64() * 1e6,
+                                    exec_us,
+                                    kernel_us: kernel_per_query_us * *n as f64,
                                     ok: slice.is_ok(),
                                 });
                             }
@@ -595,15 +612,46 @@ impl Pipeline {
     /// carries offered vs achieved throughput. The Domain-Explorer stage
     /// is bypassed — the source already materialised the MCT requests.
     pub fn run_open(&self, source: &mut dyn ArrivalSource) -> Result<PipelineReport> {
+        self.run_open_traced(source, &mut crate::telemetry::NullRecorder)
+    }
+
+    /// [`Pipeline::run_open`] with a flight recorder attached: each
+    /// request's lifecycle (`Accepted → … → Completed`) is recorded on
+    /// the run's wall clock, with `ExecStart` stamped retroactively from
+    /// the completion's `exec_us` span. The recorder is dyn so the
+    /// un-traced path pays nothing and this single-threaded driver needs
+    /// no generic plumbing.
+    pub fn run_open_traced(
+        &self,
+        source: &mut dyn ArrivalSource,
+        rec: &mut dyn crate::telemetry::Recorder,
+    ) -> Result<PipelineReport> {
+        use crate::telemetry::{AttemptKind, StageEvent};
+
         let t0 = Instant::now();
         let node = NodeCore::spawn(&self.config, &self.factory);
         let (ctx, crx) = mpsc::channel::<Completion>();
 
         let mut submitted = 0u64;
+        // Wall submit time per request id, so completion events can be
+        // stamped `t_submit + latency` even though this thread collects
+        // them after the submit loop ends.
+        let mut submit_at_us: Vec<f64> = Vec::new();
         while let Some(a) = source.next_arrival() {
             // Pace the injector to the arrival clock (best effort: if the
             // wall lags the schedule the backlog itself is the measurement).
             pace_until(t0, a.at_us);
+            let now_us = t0.elapsed().as_secs_f64() * 1e6;
+            rec.record(now_us, submitted, StageEvent::Accepted { n_queries: a.queries.len() });
+            rec.record(now_us, submitted, StageEvent::Admitted);
+            rec.record(
+                now_us,
+                submitted,
+                StageEvent::AttemptStart { kind: AttemptKind::Primary },
+            );
+            rec.record(now_us, submitted, StageEvent::Routed { replica: 0 });
+            rec.record(now_us, submitted, StageEvent::Enqueued { replica: 0 });
+            submit_at_us.push(now_us);
             node.submit_tagged(a.queries, submitted, 0, &ctx);
             submitted += 1;
         }
@@ -614,6 +662,18 @@ impl Pipeline {
         let mut completed = 0u64;
         let mut degraded_reqs = 0usize;
         while let Ok(c) = crx.recv() {
+            let t_done = submit_at_us[c.id as usize] + c.latency_us;
+            rec.record(
+                (t_done - c.exec_us).max(0.0),
+                c.id,
+                StageEvent::ExecStart { replica: 0 },
+            );
+            rec.record(
+                t_done,
+                c.id,
+                StageEvent::ExecEnd { replica: 0, kernel_us: c.kernel_us, ok: c.ok },
+            );
+            rec.record(t_done, c.id, StageEvent::Completed { n_queries: c.n_queries });
             req_lat.record(c.latency_us);
             mct_queries += c.n_queries;
             completed += 1;

@@ -54,6 +54,7 @@ use std::collections::VecDeque;
 use crate::controlplane::ScalingEvent;
 use crate::coordinator::DualClock;
 use crate::resilience::{ResilienceCounters, ResiliencePolicy};
+use crate::telemetry::{Trace, TraceSpec};
 use crate::workload::SessionPlan;
 
 /// The three-rung backpressure ladder of the front door.
@@ -170,6 +171,11 @@ pub struct FrontdoorConfig {
     /// breakers, brown-out routing) — [`ResiliencePolicy::none`] keeps
     /// the pre-resilience behaviour bit-for-bit.
     pub resilience: ResiliencePolicy,
+    /// Flight-recorder spec. `None` runs the zero-cost
+    /// [`NullRecorder`](crate::telemetry::NullRecorder) path; `Some`
+    /// gives every worker thread its own ring recorder, merged into
+    /// [`FrontdoorReport::trace`] at join.
+    pub trace: Option<TraceSpec>,
 }
 
 impl FrontdoorConfig {
@@ -179,6 +185,7 @@ impl FrontdoorConfig {
             backpressure,
             mode: FrontdoorMode::Event,
             resilience: ResiliencePolicy::none(),
+            trace: None,
         }
     }
 
@@ -190,11 +197,17 @@ impl FrontdoorConfig {
             backpressure: BackpressurePolicy::Window { window: 1 },
             mode: FrontdoorMode::ThreadPerSession { max_threads: max_threads.max(1) },
             resilience: ResiliencePolicy::none(),
+            trace: None,
         }
     }
 
     pub fn with_resilience(mut self, resilience: ResiliencePolicy) -> FrontdoorConfig {
         self.resilience = resilience;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: TraceSpec) -> FrontdoorConfig {
+        self.trace = Some(trace);
         self
     }
 
@@ -303,6 +316,10 @@ pub struct FrontdoorReport {
 
     /// Fault-plan kill/revive timeline, control-plane vocabulary.
     pub fault_events: Vec<ScalingEvent>,
+
+    /// Flight-recorder stream (empty unless [`FrontdoorConfig::trace`]
+    /// was set). Merged across worker threads and sorted by timestamp.
+    pub trace: Trace,
 }
 
 impl FrontdoorReport {
@@ -348,6 +365,7 @@ impl FrontdoorReport {
             accept_p99_us: if empty { 0.0 } else { clock.accept.p99() },
             submit_p99_us: if empty { 0.0 } else { clock.submit.p99() },
             fault_events,
+            trace: Trace::default(),
         }
     }
 

@@ -33,6 +33,9 @@ use crate::coordinator::DualClock;
 use crate::prng::Rng;
 use crate::resilience::{CircuitBreaker, ResiliencePolicy, RetryBudget, RetryPolicy};
 use crate::rules::types::{MctQuery, World};
+use crate::telemetry::{
+    AttemptKind, NullRecorder, Recorder, RingRecorder, ShedLane, StageEvent, Trace, CONTROL_ID,
+};
 use crate::workload::{QueryFactory, SessionPlan};
 
 use super::{
@@ -67,29 +70,47 @@ pub fn run_frontdoor(
         .collect();
     let handle = ClusterHandle::spawn(&cluster, &factories);
 
-    let (counters, mut clock, fault_events) = std::thread::scope(|scope| {
+    let (counters, mut clock, fault_events, mut trace) = std::thread::scope(|scope| {
         let h = &handle;
         let classes = &classes;
         let fault_driver = scope.spawn(move || drive_faults(h, t0, faults, classes));
 
         let mut shed = FrontdoorCounters::default();
+        // Socket refusals decided before any worker exists land here, on
+        // the same spec-filtered recording path as everything else.
+        let mut door_rec = fd.trace.map(RingRecorder::new);
         let workers = match fd.mode {
             FrontdoorMode::Event => {
-                // Partition sessions across event threads by index.
+                // Partition sessions across event threads by index,
+                // keeping the global session index for stable trace ids.
                 let threads = fd.event_threads.min(plans.len().max(1));
-                let mut parts: Vec<Vec<(SessionPlan, Vec<Vec<MctQuery>>)>> =
+                let mut parts: Vec<Vec<(usize, SessionPlan, Vec<Vec<MctQuery>>)>> =
                     (0..threads).map(|_| Vec::new()).collect();
                 for (s, payload) in payloads.into_iter().enumerate() {
-                    parts[s % threads].push((plans[s].clone(), payload));
+                    parts[s % threads].push((s, plans[s].clone(), payload));
                 }
                 let policy = fd.backpressure;
                 let res = fd.resilience;
+                let tspec = fd.trace;
                 parts
                     .into_iter()
                     .enumerate()
                     .map(|(i, part)| {
                         let tseed = seed ^ ((i as u64 + 1) << 17);
-                        scope.spawn(move || run_event_thread(h, t0, policy, res, tseed, part))
+                        scope.spawn(move || match tspec {
+                            None => {
+                                run_event_thread(h, t0, policy, res, tseed, part, NullRecorder)
+                            }
+                            Some(spec) => run_event_thread(
+                                h,
+                                t0,
+                                policy,
+                                res,
+                                tseed,
+                                part,
+                                RingRecorder::new(spec),
+                            ),
+                        })
                     })
                     .collect::<Vec<_>>()
             }
@@ -102,15 +123,27 @@ pub fn run_frontdoor(
                 let accepted: std::collections::HashSet<usize> =
                     order.iter().take(max_threads).copied().collect();
                 let mut workers = Vec::new();
+                let tspec = fd.trace;
                 for (s, payload) in payloads.into_iter().enumerate() {
                     if accepted.contains(&s) {
                         let plan = plans[s].clone();
-                        workers.push(
-                            scope.spawn(move || run_session_thread(h, t0, plan, payload)),
-                        );
+                        workers.push(scope.spawn(move || match tspec {
+                            None => run_session_thread(h, t0, s, plan, payload, NullRecorder),
+                            Some(spec) => {
+                                run_session_thread(h, t0, s, plan, payload, RingRecorder::new(spec))
+                            }
+                        }));
                     } else {
                         shed.sessions_shed += 1;
                         shed.shed_socket_queries += plans[s].total_queries();
+                        if let Some(rec) = door_rec.as_mut() {
+                            for (b, batch) in plans[s].batches.iter().enumerate() {
+                                rec.record(plans[s].accept_us, rid(s, b), StageEvent::Shed {
+                                    lane: ShedLane::Socket,
+                                    n_queries: batch.n_queries,
+                                });
+                            }
+                        }
                     }
                 }
                 workers
@@ -119,20 +152,23 @@ pub fn run_frontdoor(
 
         let mut counters = shed;
         let mut clock = DualClock::new();
+        let mut trace = door_rec.map(RingRecorder::into_trace).unwrap_or_default();
         for w in workers {
-            let (c, dc) = w.join().expect("front-door worker panicked");
+            let (c, dc, tr) = w.join().expect("front-door worker panicked");
             counters.merge(&c);
             clock.merge(&dc);
+            trace.merge(tr);
         }
         counters.res.gray_fault_windows = faults.grays().len();
         let fault_events = fault_driver.join().expect("fault driver panicked");
-        (counters, clock, fault_events)
+        (counters, clock, fault_events, trace)
     });
 
     let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
     handle.shutdown();
 
-    let report = FrontdoorReport::assemble(
+    trace.sort();
+    let mut report = FrontdoorReport::assemble(
         label,
         fd,
         plans,
@@ -141,8 +177,16 @@ pub fn run_frontdoor(
         wall_s,
         fault_events,
     );
+    report.trace = trace;
     anyhow::ensure!(report.conserves_queries(), "front door lost queries: {}", report.summary());
     Ok(report)
+}
+
+/// Stable trace id shared with the DES twin: session in the high half,
+/// batch in the low, so deterministic sampling keeps the *same* requests
+/// in both realisations.
+fn rid(s: usize, b: usize) -> u64 {
+    ((s as u64) << 32) | b as u64
 }
 
 /// Pre-materialise every batch's queries so generation cost never sits on
@@ -213,11 +257,14 @@ struct Flight {
 /// this connection's parked-batch budget, and the resilience layer
 /// (deadlines, budgeted retries, hedges, breakers — all per-connection,
 /// like a client library's view of the fleet).
-struct Reactor<'a> {
+struct Reactor<'a, R: Recorder> {
     handle: &'a ClusterHandle,
     t0: Instant,
     policy: BackpressurePolicy,
     sessions: Vec<(SessionPlan, Vec<Vec<MctQuery>>)>,
+    /// Global session index per local slot — trace/submit ids stay
+    /// unique across event threads and aligned with the DES twin's.
+    sids: Vec<usize>,
     gates: Vec<SessionGate>,
     thread_parked: usize,
     in_flight: usize,
@@ -233,11 +280,21 @@ struct Reactor<'a> {
     /// EWMA of winner latencies — the hedge trigger's expectation. Zero
     /// until the first completion trains it (no hedges before that).
     lat_ewma: f64,
+    /// Flight recorder. [`NullRecorder`] when tracing is off — the whole
+    /// emission layer monomorphizes away. This thread's ring is merged
+    /// into the run's trace at join.
+    rec: R,
 }
 
-impl Reactor<'_> {
+impl<R: Recorder> Reactor<'_, R> {
     fn submit_opts<'d>(&self, deny: Option<&'d [bool]>, exclude: Option<usize>) -> SubmitOpts<'d> {
         SubmitOpts { exclude, deny, brownout: self.res.brownout, degrade: self.res.brownout }
+    }
+
+    /// Trace/submit id of a local session's batch (global session index
+    /// in the high half).
+    fn rid_of(&self, s: usize, b: usize) -> u64 {
+        rid(self.sids[s], b)
     }
 
     /// The per-replica breaker mask for this routing decision, `None`
@@ -246,6 +303,17 @@ impl Reactor<'_> {
         self.res.breaker?;
         let rng = &mut self.breaker_rng;
         Some(self.breakers.iter_mut().map(|b| !b.allows(now, rng)).collect())
+    }
+
+    /// Feed an outcome to the cluster's health plane; a brown-out
+    /// threshold crossing becomes a control event in the trace.
+    fn note_outcome(&mut self, c: &Completion, deadline_miss: bool, now: f64) {
+        if let Some(tr) = self.handle.note_outcome_at(c, deadline_miss, now) {
+            self.rec.record(tr.t_us, CONTROL_ID, StageEvent::Health {
+                replica: c.node,
+                degraded: tr.degraded,
+            });
+        }
     }
 
     /// Submit the session's parked batches while its window has room.
@@ -263,11 +331,15 @@ impl Reactor<'_> {
                 self.gates[s].parked.pop_front();
                 self.thread_parked -= 1;
                 self.counters.shed_deadline_queries += n_queries;
+                self.rec.record(now, self.rid_of(s, b), StageEvent::Shed {
+                    lane: ShedLane::Deadline,
+                    n_queries,
+                });
                 continue;
             }
             let station = self.sessions[s].0.station;
             let queries = self.sessions[s].1[b].clone();
-            let id = ((s as u64) << 32) | b as u64;
+            let id = self.rid_of(s, b);
             let deny = self.breaker_deny(now);
             let opts = self.submit_opts(deny.as_deref(), None);
             match self.handle.try_submit_ext(station, queries, id, &self.ctx, opts) {
@@ -281,6 +353,12 @@ impl Reactor<'_> {
                     if degraded {
                         self.counters.res.degraded_requests += 1;
                     }
+                    self.rec.record(now, id, StageEvent::Admitted);
+                    self.rec.record(now, id, StageEvent::AttemptStart {
+                        kind: AttemptKind::Primary,
+                    });
+                    self.rec.record(now, id, StageEvent::Routed { replica: node });
+                    self.rec.record(now, id, StageEvent::Enqueued { replica: node });
                     let hedge_at = self
                         .res
                         .hedge
@@ -313,6 +391,10 @@ impl Reactor<'_> {
                     self.gates[s].parked.pop_front();
                     self.thread_parked -= 1;
                     self.counters.shed_queue_queries += n_queries;
+                    self.rec.record(now, id, StageEvent::Shed {
+                        lane: ShedLane::Queue,
+                        n_queries,
+                    });
                 }
             }
         }
@@ -328,6 +410,17 @@ impl Reactor<'_> {
 
     fn complete(&mut self, c: Completion) {
         let now = now_us(self.t0);
+        // Retroactive exec span: the worker measured dequeue→reply on its
+        // own clock and shipped the span width; anchor it to end at
+        // delivery so it nests inside the request's lifecycle.
+        self.rec.record((now - c.exec_us).max(0.0), c.id, StageEvent::ExecStart {
+            replica: c.node,
+        });
+        self.rec.record(now, c.id, StageEvent::ExecEnd {
+            replica: c.node,
+            kernel_us: c.kernel_us,
+            ok: c.ok,
+        });
         if self.res.breaker.is_some() {
             let norm = c.latency_us / (self.handle.outstanding(c.node) as f64 + 1.0);
             self.breakers[c.node].on_outcome(now, c.ok, norm);
@@ -336,7 +429,7 @@ impl Reactor<'_> {
         let Some(entry) = self.flights.get_mut(&c.id) else {
             // A copy of an already-resolved request (hedge loser, late
             // retry): pure signal, no counters.
-            self.handle.note_outcome(&c, false);
+            self.note_outcome(&c, false, now);
             return;
         };
         entry.copies -= 1;
@@ -344,7 +437,7 @@ impl Reactor<'_> {
         let s = fl.session;
         let ready = self.sessions[s].0.ready_us(fl.batch);
         let expired = self.res.expired(ready, now);
-        self.handle.note_outcome(&c, expired);
+        self.note_outcome(&c, expired, now);
         if c.ok && !expired {
             // First OK copy inside the deadline wins and counts once.
             self.flights.remove(&c.id);
@@ -362,6 +455,7 @@ impl Reactor<'_> {
             } else {
                 c.latency_us
             };
+            self.rec.record(now, c.id, StageEvent::Completed { n_queries: c.n_queries });
             return;
         }
         if expired {
@@ -370,6 +464,10 @@ impl Reactor<'_> {
             self.counters.shed_deadline_queries += fl.n_queries;
             self.gates[s].in_flight -= 1;
             self.in_flight -= 1;
+            self.rec.record(now, c.id, StageEvent::Shed {
+                lane: ShedLane::Deadline,
+                n_queries: fl.n_queries,
+            });
             return;
         }
         // Failed copy inside the deadline: an in-flight twin may still
@@ -389,6 +487,7 @@ impl Reactor<'_> {
             r.counters.lost_queries += fl.n_queries;
             r.gates[fl.session].in_flight -= 1;
             r.in_flight -= 1;
+            r.rec.record(now, id, StageEvent::Lost { n_queries: fl.n_queries });
         };
         let Some(rp) = self.res.retry else {
             give_up(self);
@@ -411,6 +510,10 @@ impl Reactor<'_> {
             self.counters.shed_deadline_queries += fl.n_queries;
             self.gates[fl.session].in_flight -= 1;
             self.in_flight -= 1;
+            self.rec.record(now, id, StageEvent::Shed {
+                lane: ShedLane::Deadline,
+                n_queries: fl.n_queries,
+            });
             return;
         }
         let entry = self.flights.get_mut(&id).expect("retrying a live flight");
@@ -432,6 +535,9 @@ impl Reactor<'_> {
                 if degraded {
                     self.counters.res.degraded_requests += 1;
                 }
+                self.rec.record(now, id, StageEvent::AttemptStart { kind: AttemptKind::Retry });
+                self.rec.record(now, id, StageEvent::Routed { replica: node });
+                self.rec.record(now, id, StageEvent::Enqueued { replica: node });
                 let entry = self.flights.get_mut(&id).expect("resubmitting a live flight");
                 entry.copies = 1;
                 entry.first_node = node;
@@ -458,9 +564,12 @@ impl Reactor<'_> {
         let deny = self.breaker_deny(now);
         let opts = self.submit_opts(deny.as_deref(), Some(fl.first_node));
         match self.handle.try_submit_ext(station, queries, id, &self.ctx, opts) {
-            Submit::Submitted { .. } => {
+            Submit::Submitted { node, .. } => {
                 self.counters.res.backend_requests += 1;
                 self.counters.res.hedges_issued += 1;
+                self.rec.record(now, id, StageEvent::AttemptStart { kind: AttemptKind::Hedge });
+                self.rec.record(now, id, StageEvent::Routed { replica: node });
+                self.rec.record(now, id, StageEvent::Enqueued { replica: node });
                 let entry = self.flights.get_mut(&id).expect("hedging a live flight");
                 entry.copies += 1;
                 entry.hedged = true;
@@ -489,6 +598,10 @@ impl Reactor<'_> {
                     self.counters.shed_deadline_queries += fl.n_queries;
                     self.gates[fl.session].in_flight -= 1;
                     self.in_flight -= 1;
+                    self.rec.record(now, id, StageEvent::Shed {
+                        lane: ShedLane::Deadline,
+                        n_queries: fl.n_queries,
+                    });
                 } else if fl.retry_at_us.is_some_and(|due| due <= now) {
                     self.resubmit(id, now);
                 }
@@ -507,15 +620,21 @@ impl Reactor<'_> {
 /// The event loop: fire due accept/ready events, then wait on the
 /// completion channel with a timeout bounded by the next event (≤1 ms, so
 /// reparked batches retry even when this thread has nothing in flight).
-fn run_event_thread(
+fn run_event_thread<R: Recorder>(
     handle: &ClusterHandle,
     t0: Instant,
     policy: BackpressurePolicy,
     res: ResiliencePolicy,
     seed: u64,
-    sessions: Vec<(SessionPlan, Vec<Vec<MctQuery>>)>,
-) -> (FrontdoorCounters, DualClock) {
+    sessions: Vec<(usize, SessionPlan, Vec<Vec<MctQuery>>)>,
+    rec: R,
+) -> (FrontdoorCounters, DualClock, Trace) {
     let (ctx, crx) = mpsc::channel::<Completion>();
+    // Split off the global session indices (trace ids must be unique
+    // across threads; everything else runs on the local index).
+    let sids: Vec<usize> = sessions.iter().map(|(s, ..)| *s).collect();
+    let sessions: Vec<(SessionPlan, Vec<Vec<MctQuery>>)> =
+        sessions.into_iter().map(|(_, plan, payload)| (plan, payload)).collect();
     let mut events: Vec<(f64, Ev)> = Vec::new();
     for (s, (plan, _)) in sessions.iter().enumerate() {
         events.push((plan.accept_us, Ev::Accept(s)));
@@ -532,6 +651,7 @@ fn run_event_thread(
         t0,
         policy,
         sessions,
+        sids,
         gates: vec![SessionGate::default(); n],
         thread_parked: 0,
         in_flight: 0,
@@ -545,6 +665,7 @@ fn run_event_thread(
         retry_rng: Rng::new(seed ^ 0x8E_774),
         breaker_rng: Rng::new(seed ^ 0xB4EA_C3),
         lat_ewma: 0.0,
+        rec,
     };
 
     let mut next_ev = 0usize;
@@ -559,10 +680,18 @@ fn run_event_thread(
                     } else {
                         // Rung 3 at the front edge: the connection buffer
                         // is full, so the whole session is refused before
-                        // any of it is read.
+                        // any of it is read — accept-less terminals for
+                        // every batch so lane totals still reconcile.
                         r.gates[s].refused = true;
                         r.counters.sessions_shed += 1;
                         r.counters.shed_socket_queries += r.sessions[s].0.total_queries();
+                        let now = now_us(t0);
+                        for b in 0..r.sessions[s].0.batches.len() {
+                            r.rec.record(now, r.rid_of(s, b), StageEvent::Shed {
+                                lane: ShedLane::Socket,
+                                n_queries: r.sessions[s].0.batches[b].n_queries,
+                            });
+                        }
                     }
                 }
                 Ev::Ready(s, b) => {
@@ -571,11 +700,18 @@ fn run_event_thread(
                     }
                     let n_queries = r.sessions[s].0.batches[b].n_queries;
                     if r.policy.allows(r.thread_parked) {
+                        r.rec.record(now_us(t0), r.rid_of(s, b), StageEvent::Accepted {
+                            n_queries,
+                        });
                         r.gates[s].parked.push_back(b);
                         r.thread_parked += 1;
                         r.drain_session(s);
                     } else {
                         r.counters.shed_socket_queries += n_queries;
+                        r.rec.record(now_us(t0), r.rid_of(s, b), StageEvent::Shed {
+                            lane: ShedLane::Socket,
+                            n_queries,
+                        });
                     }
                 }
             }
@@ -609,19 +745,32 @@ fn run_event_thread(
             }
         }
     }
-    (r.counters, r.clock)
+    // Breaker state changes were logged inside this thread's breakers on
+    // the shared wall clock; drain them as control events.
+    for (i, br) in r.breakers.iter_mut().enumerate() {
+        for tr in br.take_transitions() {
+            r.rec.record(tr.t_us, CONTROL_ID, StageEvent::Breaker {
+                replica: i,
+                from: tr.from.into(),
+                to: tr.to.into(),
+            });
+        }
+    }
+    (r.counters, r.clock, r.rec.into_trace())
 }
 
 /// One blocking baseline thread: window-1 serial over its session's
 /// batches, retrying admission refusals on a capped exponential backoff
 /// with decorrelated jitter (a fixed-period poll synchronises refused
 /// threads into thundering herds; jitter spreads them out).
-fn run_session_thread(
+fn run_session_thread<R: Recorder>(
     handle: &ClusterHandle,
     t0: Instant,
+    s: usize,
     plan: SessionPlan,
     payloads: Vec<Vec<MctQuery>>,
-) -> (FrontdoorCounters, DualClock) {
+    mut rec: R,
+) -> (FrontdoorCounters, DualClock, Trace) {
     let (ctx, crx) = mpsc::channel::<Completion>();
     let mut counters = FrontdoorCounters { sessions_accepted: 1, ..Default::default() };
     let mut clock = DualClock::new();
@@ -629,13 +778,31 @@ fn run_session_thread(
     let mut rng = Rng::new(0x9A11_5EED ^ (u64::from(plan.station) << 32) ^ plan.accept_us as u64);
     for (b, queries) in payloads.into_iter().enumerate() {
         pace_until(t0, plan.ready_us(b));
+        let id = rid(s, b);
+        let n_queries = queries.len();
+        rec.record(now_us(t0), id, StageEvent::Accepted { n_queries });
         let mut backoff_us = 0.0;
         loop {
-            match handle.try_submit(plan.station, queries.clone(), b as u64, &ctx) {
-                Submit::Submitted { .. } => {
+            match handle.try_submit(plan.station, queries.clone(), id, &ctx) {
+                Submit::Submitted { node, .. } => {
+                    let now = now_us(t0);
+                    rec.record(now, id, StageEvent::Admitted);
+                    rec.record(now, id, StageEvent::AttemptStart { kind: AttemptKind::Primary });
+                    rec.record(now, id, StageEvent::Routed { replica: node });
+                    rec.record(now, id, StageEvent::Enqueued { replica: node });
                     let c = crx.recv().expect("tagged completion");
+                    let done = now_us(t0);
+                    rec.record((done - c.exec_us).max(0.0), id, StageEvent::ExecStart {
+                        replica: c.node,
+                    });
+                    rec.record(done, id, StageEvent::ExecEnd {
+                        replica: c.node,
+                        kernel_us: c.kernel_us,
+                        ok: c.ok,
+                    });
+                    rec.record(done, id, StageEvent::Completed { n_queries: c.n_queries });
                     let accept_lat =
-                        (now_us(t0) - plan.ready_us(b)).max(c.latency_us);
+                        (done - plan.ready_us(b)).max(c.latency_us);
                     clock.record(accept_lat, c.latency_us);
                     counters.completed_requests += 1;
                     counters.completed_queries += c.n_queries;
@@ -649,7 +816,7 @@ fn run_session_thread(
             }
         }
     }
-    (counters, clock)
+    (counters, clock, rec.into_trace())
 }
 
 /// Pace the fault plan on the wall clock: kill/revive via the handle's

@@ -40,6 +40,9 @@ use crate::prng::Rng;
 use crate::resilience::{
     CircuitBreaker, HealthScore, ResiliencePolicy, RetryBudget, BROWNOUT_DEGRADE_THRESHOLD,
 };
+use crate::telemetry::{
+    AttemptKind, NullRecorder, Recorder, RingRecorder, ShedLane, StageEvent, CONTROL_ID,
+};
 use crate::workload::SessionPlan;
 
 use super::{
@@ -83,6 +86,10 @@ struct Req {
     ok: bool,
     /// A hedge copy (for first-winner attribution).
     is_hedge: bool,
+    /// Kernel slice of the service span, fixed at service start
+    /// (service × [`SimNodeSpec::kernel_share`]); carried to the
+    /// `ExecEnd` trace event.
+    kernel_us: f64,
 }
 
 /// Resilience state of one *logical* request — however many physical
@@ -123,7 +130,7 @@ impl SimNode {
     }
 }
 
-struct Des<'a> {
+struct Des<'a, R: Recorder> {
     plans: &'a [SessionPlan],
     policy: BackpressurePolicy,
     threads: usize,
@@ -162,12 +169,24 @@ struct Des<'a> {
     /// hedging exactly where hedges matter. Zero until the first
     /// completion trains it (no hedges before that).
     lat_ewma: f64,
+    /// Flight recorder. [`NullRecorder`] when tracing is off — the whole
+    /// emission layer monomorphizes away. Recording is side-effect-only
+    /// (no RNG draws, no event reordering), so a traced run replays the
+    /// untraced run bit-for-bit.
+    rec: R,
 }
 
-impl Des<'_> {
+impl<R: Recorder> Des<'_, R> {
     fn push(&mut self, t_us: f64, ev: Event) {
         self.seq += 1;
         self.heap.push(Reverse(((t_us * 1_000.0).round() as u64, self.seq, ev)));
+    }
+
+    /// Stable request id shared with the real realisation — session in
+    /// the high half, batch in the low — so deterministic sampling keeps
+    /// the *same* requests in both worlds.
+    fn rid(s: usize, b: usize) -> u64 {
+        ((s as u64) << 32) | b as u64
     }
 
     fn n_up(&self) -> usize {
@@ -201,6 +220,12 @@ impl Des<'_> {
                 service_us += eff.stall_us;
             }
         }
+        // Gray stretch is attributed proportionally: the kernel slice is
+        // the clean share of however long the call actually takes.
+        req.kernel_us = service_us * self.specs[node].kernel_share(&self.overheads, req.n_queries);
+        self.rec.record(t, Self::rid(req.session, req.batch), StageEvent::ExecStart {
+            replica: node,
+        });
         self.nodes[node].in_service = Some(req);
         let epoch = self.nodes[node].epoch;
         self.push(t + service_us, Event::Done { node, epoch });
@@ -278,7 +303,20 @@ impl Des<'_> {
             entry.first_node = node;
         }
         self.counters.res.backend_requests += 1;
-        let req = Req { session: s, batch: b, n_queries, t_submit_us: t, ok: true, is_hedge };
+        let id = Self::rid(s, b);
+        let kind = if is_hedge { AttemptKind::Hedge } else { AttemptKind::Retry };
+        self.rec.record(t, id, StageEvent::AttemptStart { kind });
+        self.rec.record(t, id, StageEvent::Routed { replica: node });
+        self.rec.record(t, id, StageEvent::Enqueued { replica: node });
+        let req = Req {
+            session: s,
+            batch: b,
+            n_queries,
+            t_submit_us: t,
+            ok: true,
+            is_hedge,
+            kernel_us: 0.0,
+        };
         self.enqueue(node, req, t);
         true
     }
@@ -299,10 +337,11 @@ impl Des<'_> {
     /// schedule a budgeted, deadline-aware retry — or resolve it lost.
     fn fail_or_retry(&mut self, s: usize, b: usize, n_queries: usize, t: f64) {
         let ready = self.plans[s].ready_us(b);
-        let resolve_lost = |des: &mut Des| {
+        let resolve_lost = |des: &mut Des<R>| {
             des.logical.get_mut(&(s, b)).expect("logical").resolved = true;
             des.counters.lost_queries += n_queries;
             des.gates[s].in_flight -= 1;
+            des.rec.record(t, Self::rid(s, b), StageEvent::Lost { n_queries });
         };
         let Some(rp) = self.res.retry else {
             resolve_lost(self);
@@ -330,6 +369,10 @@ impl Des<'_> {
             st.resolved = true;
             self.counters.shed_deadline_queries += n_queries;
             self.gates[s].in_flight -= 1;
+            self.rec.record(t, Self::rid(s, b), StageEvent::Shed {
+                lane: ShedLane::Deadline,
+                n_queries,
+            });
             return;
         }
         self.push(t + backoff, Event::Resubmit { session: s, batch: b });
@@ -348,6 +391,10 @@ impl Des<'_> {
             st.resolved = true;
             self.counters.shed_deadline_queries += n_queries;
             self.gates[s].in_flight -= 1;
+            self.rec.record(t, Self::rid(s, b), StageEvent::Shed {
+                lane: ShedLane::Deadline,
+                n_queries,
+            });
             return;
         }
         if !self.submit_copy(s, b, t, false) {
@@ -388,6 +435,10 @@ impl Des<'_> {
                 self.gates[s].parked.pop_front();
                 self.thread_parked[s % self.threads] -= 1;
                 self.counters.shed_deadline_queries += n_queries;
+                self.rec.record(t, Self::rid(s, b), StageEvent::Shed {
+                    lane: ShedLane::Deadline,
+                    n_queries,
+                });
                 continue;
             }
             let depths: Vec<usize> = self.nodes.iter().map(SimNode::depth).collect();
@@ -416,6 +467,10 @@ impl Des<'_> {
                 self.gates[s].parked.pop_front();
                 self.thread_parked[s % self.threads] -= 1;
                 self.counters.shed_queue_queries += n_queries;
+                self.rec.record(t, Self::rid(s, b), StageEvent::Shed {
+                    lane: ShedLane::Queue,
+                    n_queries,
+                });
                 continue;
             };
             self.gates[s].parked.pop_front();
@@ -448,8 +503,20 @@ impl Des<'_> {
                     }
                 }
             }
-            let req =
-                Req { session: s, batch: b, n_queries, t_submit_us: t, ok: true, is_hedge: false };
+            let id = Self::rid(s, b);
+            self.rec.record(t, id, StageEvent::Admitted);
+            self.rec.record(t, id, StageEvent::AttemptStart { kind: AttemptKind::Primary });
+            self.rec.record(t, id, StageEvent::Routed { replica: node });
+            self.rec.record(t, id, StageEvent::Enqueued { replica: node });
+            let req = Req {
+                session: s,
+                batch: b,
+                n_queries,
+                t_submit_us: t,
+                ok: true,
+                is_hedge: false,
+                kernel_us: 0.0,
+            };
             self.enqueue(node, req, t);
         }
     }
@@ -462,7 +529,7 @@ impl Des<'_> {
         }
     }
 
-    fn accept(&mut self, s: usize) {
+    fn accept(&mut self, s: usize, t: f64) {
         let refused = match &self.accepted_set {
             // Thread-per-session: no thread left ⇒ refused whole.
             Some(set) => !set.contains(&s),
@@ -473,6 +540,14 @@ impl Des<'_> {
             self.gates[s].refused = true;
             self.counters.sessions_shed += 1;
             self.counters.shed_socket_queries += self.plans[s].total_queries();
+            // A session refused whole sheds every batch at the socket:
+            // accept-less terminals, so lane totals still reconcile.
+            for b in 0..self.plans[s].batches.len() {
+                self.rec.record(t, Self::rid(s, b), StageEvent::Shed {
+                    lane: ShedLane::Socket,
+                    n_queries: self.plans[s].batches[b].n_queries,
+                });
+            }
         } else {
             self.counters.sessions_accepted += 1;
         }
@@ -484,11 +559,16 @@ impl Des<'_> {
         }
         let n_queries = self.plans[s].batches[b].n_queries;
         if self.policy.allows(self.thread_parked[s % self.threads]) {
+            self.rec.record(t, Self::rid(s, b), StageEvent::Accepted { n_queries });
             self.gates[s].parked.push_back(b);
             self.thread_parked[s % self.threads] += 1;
             self.drain_session(s, t);
         } else {
             self.counters.shed_socket_queries += n_queries;
+            self.rec.record(t, Self::rid(s, b), StageEvent::Shed {
+                lane: ShedLane::Socket,
+                n_queries,
+            });
         }
     }
 
@@ -497,6 +577,11 @@ impl Des<'_> {
             return; // cancelled by a kill
         }
         let req = self.nodes[node].in_service.take().expect("live Done ⇒ in service");
+        self.rec.record(t, Self::rid(req.session, req.batch), StageEvent::ExecEnd {
+            replica: node,
+            kernel_us: req.kernel_us,
+            ok: req.ok,
+        });
         let latency_us = t - req.t_submit_us;
         let deadline_miss = self.resolve(req, latency_us, t);
         if let Some(next) = self.nodes[node].queue.pop_front() {
@@ -514,7 +599,12 @@ impl Des<'_> {
             self.breakers[node].on_outcome(t, req.ok, norm);
         }
         if self.res.brownout {
-            self.health[node].observe(req.ok, deadline_miss, norm);
+            if let Some(tr) = self.health[node].observe_at(t, req.ok, deadline_miss, norm) {
+                self.rec.record(tr.t_us, CONTROL_ID, StageEvent::Health {
+                    replica: node,
+                    degraded: tr.degraded,
+                });
+            }
         }
         self.drain_all(t);
     }
@@ -548,12 +638,19 @@ impl Des<'_> {
             if req.is_hedge {
                 self.counters.res.hedge_wins += 1;
             }
+            self.rec.record(t, Self::rid(req.session, req.batch), StageEvent::Completed {
+                n_queries: req.n_queries,
+            });
             return false;
         }
         if expired {
             st.resolved = true;
             self.counters.shed_deadline_queries += req.n_queries;
             self.gates[req.session].in_flight -= 1;
+            self.rec.record(t, Self::rid(req.session, req.batch), StageEvent::Shed {
+                lane: ShedLane::Deadline,
+                n_queries: req.n_queries,
+            });
             return true;
         }
         // Failed copy, inside the deadline: an in-flight twin may still
@@ -585,7 +682,12 @@ impl Des<'_> {
             let live: Vec<bool> = self.nodes.iter().map(|n| n.up).collect();
             let station = self.plans[req.session].station;
             match self.router.route_up(station, &depths, Some(&live)) {
-                Some(target) => self.enqueue(target, req, t),
+                Some(target) => {
+                    self.rec.record(t, Self::rid(req.session, req.batch), StageEvent::Enqueued {
+                        replica: target,
+                    });
+                    self.enqueue(target, req, t);
+                }
                 None => self.copy_died(req, t),
             }
         }
@@ -615,8 +717,20 @@ impl Des<'_> {
 }
 
 /// Run the session plans through the simulated front door. Deterministic:
-/// same config + plans ⇒ bit-identical report.
+/// same config + plans ⇒ bit-identical report — with or without tracing,
+/// because recording never draws RNG or reorders events.
 pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> FrontdoorReport {
+    match cfg.frontdoor.trace {
+        None => sim_frontdoor_with(cfg, plans, NullRecorder),
+        Some(spec) => sim_frontdoor_with(cfg, plans, RingRecorder::new(spec)),
+    }
+}
+
+fn sim_frontdoor_with<R: Recorder>(
+    cfg: &FrontdoorSimConfig,
+    plans: &[SessionPlan],
+    rec: R,
+) -> FrontdoorReport {
     let threads = match cfg.frontdoor.mode {
         FrontdoorMode::Event => cfg.frontdoor.event_threads.max(1),
         FrontdoorMode::ThreadPerSession { .. } => 1,
@@ -662,6 +776,7 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
         retry_rng: Rng::new(seed ^ 0x8E_774),
         breaker_rng: Rng::new(seed ^ 0xB4EA_C3),
         lat_ewma: 0.0,
+        rec,
     };
     for (s, p) in plans.iter().enumerate() {
         des.push(p.accept_us, Event::Accept { session: s });
@@ -682,7 +797,7 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
         let t = key as f64 / 1_000.0;
         t_end_us = t_end_us.max(t);
         match ev {
-            Event::Accept { session } => des.accept(session),
+            Event::Accept { session } => des.accept(session, t),
             Event::Ready { session, batch } => des.ready(session, batch, t),
             Event::Done { node, epoch } => des.complete(node, epoch, t),
             Event::Kill { node } => des.kill(node, t),
@@ -698,15 +813,33 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
     // shed-in-queue so conservation stays structural, never silent.
     for s in 0..plans.len() {
         while let Some(b) = des.gates[s].parked.pop_front() {
-            des.counters.shed_queue_queries += plans[s].batches[b].n_queries;
+            let n_queries = plans[s].batches[b].n_queries;
+            des.counters.shed_queue_queries += n_queries;
+            des.rec.record(t_end_us, Des::<R>::rid(s, b), StageEvent::Shed {
+                lane: ShedLane::Queue,
+                n_queries,
+            });
         }
     }
     des.counters.res.breaker_trips = des.breakers.iter().map(CircuitBreaker::trips).sum();
+    // Breaker state changes were logged inside the breakers on the same
+    // virtual clock; drain them into the trace as control events.
+    for (i, br) in des.breakers.iter_mut().enumerate() {
+        for tr in br.take_transitions() {
+            des.rec.record(tr.t_us, CONTROL_ID, StageEvent::Breaker {
+                replica: i,
+                from: tr.from.into(),
+                to: tr.to.into(),
+            });
+        }
+    }
 
     let label = format!("{} sessions | {}", plans.len(), cfg.cluster.label());
     let counters = des.counters;
     let fault_events = des.fault_events;
-    let report = FrontdoorReport::assemble(
+    let mut trace = des.rec.into_trace();
+    trace.sort();
+    let mut report = FrontdoorReport::assemble(
         label,
         &cfg.frontdoor,
         plans,
@@ -715,6 +848,7 @@ pub fn sim_frontdoor(cfg: &FrontdoorSimConfig, plans: &[SessionPlan]) -> Frontdo
         t_end_us / 1e6,
         fault_events,
     );
+    report.trace = trace;
     debug_assert!(report.conserves_queries(), "{}", report.summary());
     report
 }
@@ -886,6 +1020,51 @@ mod tests {
         assert_eq!(a.res, b.res, "resilience counters must replay exactly");
         assert_eq!(a.accept_p99_us.to_bits(), b.accept_p99_us.to_bits());
         assert!(a.res.gray_fault_windows == 2, "{}", a.summary());
+    }
+
+    #[test]
+    fn unsampled_trace_reconciles_with_the_report_exactly() {
+        use crate::telemetry::TraceSpec;
+        // Overload at the socket + gray errors + a deadline + a thin
+        // retry budget: several shed/lost lanes fire at once. The flight
+        // recorder's lane totals must re-derive the report's counters
+        // *exactly*, every request must get exactly one terminal event,
+        // and tracing must not perturb the run it observes.
+        let spec = SimNodeSpec::v2_cloud(2);
+        let mut cfg = event_cfg(2, BackpressurePolicy::SocketShed { window: 2, pending_cap: 2 });
+        let svc = spec.request_service_us(&cfg.cluster.overheads, 8);
+        cfg.faults = FaultPlan::none().and_error_rate(0, 0.0, 1e9, 0.5);
+        cfg.frontdoor = cfg.frontdoor.with_resilience(
+            ResiliencePolicy::none()
+                .with_deadline(40.0 * svc)
+                .with_retry(RetryPolicy::new(2, 0.5 * svc, 4.0 * svc))
+                .with_budget_ratio(0.2),
+        );
+        let plans = burst_plans(31, 24, 6, 8);
+        let plain = sim_frontdoor(&cfg, &plans);
+        cfg.frontdoor = cfg.frontdoor.with_trace(TraceSpec::full());
+        let r = sim_frontdoor(&cfg, &plans);
+        assert!(r.conserves_queries(), "{}", r.summary());
+        assert!(r.trace.is_complete(), "a full-spec trace must not sample or drop");
+        assert!(r.completed_queries > 0 && r.shed_socket_queries > 0, "{}", r.summary());
+
+        let lanes = r.trace.lane_counts();
+        assert_eq!(lanes.completed_queries, r.completed_queries);
+        assert_eq!(lanes.completed_requests, r.completed_requests);
+        assert_eq!(lanes.shed_socket_queries, r.shed_socket_queries);
+        assert_eq!(lanes.shed_queue_queries, r.shed_queue_queries);
+        assert_eq!(lanes.shed_deadline_queries, r.shed_deadline_queries);
+        assert_eq!(lanes.lost_queries, r.lost_queries);
+        assert_eq!(lanes.terminal_queries(), r.offered_queries, "trace-side conservation");
+        for (id, n) in r.trace.terminals_per_request() {
+            assert_eq!(n, 1, "request {id:#x} must resolve exactly once");
+        }
+        // The observer effect must be zero: bit-identical to the
+        // untraced run.
+        assert_eq!(plain.completed_queries, r.completed_queries);
+        assert_eq!(plain.lost_queries, r.lost_queries);
+        assert_eq!(plain.res, r.res);
+        assert_eq!(plain.accept_p99_us.to_bits(), r.accept_p99_us.to_bits());
     }
 
     #[test]

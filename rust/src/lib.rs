@@ -36,5 +36,6 @@ pub mod resilience;
 pub mod routescoring;
 pub mod rules;
 pub mod runtime;
+pub mod telemetry;
 pub mod testing;
 pub mod workload;

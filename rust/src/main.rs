@@ -31,6 +31,13 @@
 //! `gray:slow:F` | `gray:err:P` | `gray:hang:P:STALL_US` | `gray:mix:N`.
 //! erbium-search costs       [--uqps UQ_PER_S] [--node-qps QPS]
 //! ```
+//!
+//! `--trace FILE [--trace-sample N]` attaches the flight recorder
+//! ([`erbium_search::telemetry`]) and exports a Chrome-trace-event JSON
+//! to FILE — load it in Perfetto (ui.perfetto.dev) or `chrome://tracing`.
+//! Supported by `replay --open`, `frontdoor`, and front-door `fleet` runs
+//! (a resilience flag set); `--trace-sample N` keeps 1 in N requests
+//! (deterministic in the request id; default 1 = everything).
 
 use std::sync::Arc;
 
@@ -63,6 +70,7 @@ use erbium_search::rules::generator::{generate_rule_set, generate_world, Generat
 use erbium_search::rules::standard::{Schema, StandardVersion};
 use erbium_search::rules::serde_text;
 use erbium_search::runtime::Runtime;
+use erbium_search::telemetry::{write_chrome_trace, Recorder, RingRecorder, Trace, TraceSpec};
 use erbium_search::workload::{
     generate_trace, random_query, session_plans, PoissonSource, RateSchedule, TraceConfig,
 };
@@ -125,6 +133,26 @@ fn resilience_from_args(args: &Args) -> ResiliencePolicy {
         res = res.with_breaker(BreakerConfig::default());
     }
     res
+}
+
+/// The `--trace FILE [--trace-sample N]` pair: where to export the
+/// flight-recorder trace, and how it samples.
+fn trace_from_args(args: &Args) -> Option<(String, TraceSpec)> {
+    let path = args.get("--trace")?.to_string();
+    let sample = args.usize("--trace-sample", 1).max(1) as u32;
+    Some((path, TraceSpec::sampled(sample)))
+}
+
+/// Export a drained trace as Chrome trace events and say where it went.
+fn export_trace(path: &str, trace: &Trace) -> anyhow::Result<()> {
+    write_chrome_trace(path, trace)?;
+    println!(
+        "trace: {} events (1-in-{} sampled, {} dropped) → {path} — load in Perfetto",
+        trace.len(),
+        trace.sample.max(1),
+        trace.dropped
+    );
+    Ok(())
 }
 
 /// Parse `--faults` (kills or a gray spec) against the run's span.
@@ -276,6 +304,7 @@ fn main() -> anyhow::Result<()> {
             }
             // --open RATE: bypass the closed-loop trace replay and drive the
             // node from a Poisson arrival stream at RATE requests/s.
+            let flight = trace_from_args(&args);
             let r = match args.get("--open").and_then(|v| v.parse::<f64>().ok()) {
                 Some(rate) => {
                     let mut src = PoissonSource::new(
@@ -285,9 +314,24 @@ fn main() -> anyhow::Result<()> {
                         args.usize("--batch", 256),
                         args.usize("--requests", 512),
                     );
-                    Pipeline::new(cfg, factory).run_open(&mut src)?
+                    match &flight {
+                        Some((path, spec)) => {
+                            let mut rec = RingRecorder::new(*spec);
+                            let r =
+                                Pipeline::new(cfg, factory).run_open_traced(&mut src, &mut rec)?;
+                            export_trace(path, &rec.into_trace())?;
+                            r
+                        }
+                        None => Pipeline::new(cfg, factory).run_open(&mut src)?,
+                    }
                 }
-                None => Pipeline::new(cfg, factory).run(&trace)?,
+                None => {
+                    anyhow::ensure!(
+                        flight.is_none(),
+                        "--trace on replay needs --open (the recorder hooks the open-loop driver)"
+                    );
+                    Pipeline::new(cfg, factory).run(&trace)?
+                }
             };
             println!(
                 "{} | backend {} | agg {} | {} uq, {} MCT q, {} requests, {} calls ({} failed)",
@@ -468,11 +512,18 @@ fn main() -> anyhow::Result<()> {
                     0.0,
                     world.airports.len(),
                 );
-                let fd = FrontdoorConfig::event(2, BackpressurePolicy::Window { window: 2 })
+                let mut fd = FrontdoorConfig::event(2, BackpressurePolicy::Window { window: 2 })
                     .with_resilience(res);
+                let flight = trace_from_args(&args);
+                if let Some((_, spec)) = &flight {
+                    fd = fd.with_trace(*spec);
+                }
                 let real =
                     run_frontdoor(cluster_cfg, factory, &world, seed, &plans, &fd, &faults)?;
                 println!("real: {}", real.summary());
+                if let Some((path, _)) = &flight {
+                    export_trace(path, &real.trace)?;
+                }
                 let sim_cfg = ClusterSimConfig::v2_cloud(nodes, feeders)
                     .with_route(route)
                     .with_admission(admission);
@@ -487,6 +538,11 @@ fn main() -> anyhow::Result<()> {
                 faults.kills().is_empty(),
                 "kill faults in plain `fleet` need --autoscale (the control-plane DES owns \
                  liveness) or a resilience flag (front-door run); gray specs apply in place"
+            );
+            anyhow::ensure!(
+                trace_from_args(&args).is_none(),
+                "--trace in `fleet` needs a resilience flag (the flight recorder hooks the \
+                 front-door run) — add e.g. --retry, or use `frontdoor`"
             );
             // The same seeded stream through both realisations; gray
             // windows degrade the cluster layers in place.
@@ -529,12 +585,16 @@ fn main() -> anyhow::Result<()> {
                 Some("socket") => BackpressurePolicy::SocketShed { window, pending_cap: pending },
                 Some(p) => anyhow::bail!("bad --backpressure {p:?} (none|window|socket)"),
             };
-            let fd = if args.flag("--baseline") {
+            let mut fd = if args.flag("--baseline") {
                 FrontdoorConfig::thread_per_session(args.usize("--threads", 16))
             } else {
                 FrontdoorConfig::event(args.usize("--threads", 2), policy)
             }
             .with_resilience(resilience_from_args(&args));
+            let flight = trace_from_args(&args);
+            if let Some((_, spec)) = &flight {
+                fd = fd.with_trace(*spec);
+            }
             let seed = args.u64("--seed", 1);
             let rate = args.f64("--rate", 2_000.0);
             let nodes = args.usize("--nodes", 2);
@@ -580,6 +640,9 @@ fn main() -> anyhow::Result<()> {
             println!("{}", r.summary());
             for e in &r.fault_events {
                 println!("{}", e.line());
+            }
+            if let Some((path, _)) = &flight {
+                export_trace(path, &r.trace)?;
             }
         }
         "costs" => {

@@ -159,6 +159,31 @@ pub enum BreakerState {
     HalfOpen,
 }
 
+/// Bound on the per-breaker transition log: a breaker flapping open/
+/// half-open/open every cool-down for an entire run stays well under
+/// this; beyond it the oldest transitions are dropped (and counted),
+/// keeping memory constant — the telemetry plane's bounding rule.
+pub const TRANSITION_LOG_CAP: usize = 256;
+
+/// One timestamped breaker state change, in the order it happened —
+/// the open → half-open → close record end-state reporting loses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BreakerTransition {
+    pub t_us: f64,
+    pub from: BreakerState,
+    pub to: BreakerState,
+}
+
+/// A health score crossing the brown-out degrade threshold (in either
+/// direction), timestamped on the caller's clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HealthTransition {
+    pub t_us: f64,
+    /// `true` = crossed below [`BROWNOUT_DEGRADE_THRESHOLD`] (degraded),
+    /// `false` = recovered above it.
+    pub degraded: bool,
+}
+
 /// Per-replica breaker: closed → open on EWMA error/latency signals,
 /// open → half-open after `open_us`, half-open admits seeded probes and
 /// closes on the first probe success (re-opens on probe failure).
@@ -172,6 +197,8 @@ pub struct CircuitBreaker {
     floor_us: f64,
     seen: u32,
     trips: usize,
+    transitions: Vec<BreakerTransition>,
+    transitions_dropped: usize,
 }
 
 impl CircuitBreaker {
@@ -185,6 +212,8 @@ impl CircuitBreaker {
             floor_us: f64::INFINITY,
             seen: 0,
             trips: 0,
+            transitions: Vec::new(),
+            transitions_dropped: 0,
         }
     }
 
@@ -196,6 +225,33 @@ impl CircuitBreaker {
         self.trips
     }
 
+    /// The timestamped state-change log so far (bounded; see
+    /// [`TRANSITION_LOG_CAP`]).
+    pub fn transitions(&self) -> &[BreakerTransition] {
+        &self.transitions
+    }
+
+    /// Transitions evicted from the bounded log (0 = the log is
+    /// complete).
+    pub fn transitions_dropped(&self) -> usize {
+        self.transitions_dropped
+    }
+
+    /// Drain the transition log (telemetry pulls this at end of run so
+    /// per-thread breakers feed the per-thread recorder without locks).
+    pub fn take_transitions(&mut self) -> Vec<BreakerTransition> {
+        std::mem::take(&mut self.transitions)
+    }
+
+    fn move_to(&mut self, t_us: f64, to: BreakerState) {
+        if self.transitions.len() >= TRANSITION_LOG_CAP {
+            self.transitions.remove(0);
+            self.transitions_dropped += 1;
+        }
+        self.transitions.push(BreakerTransition { t_us, from: self.state, to });
+        self.state = to;
+    }
+
     /// Routing gate: may this replica receive a request at `t_us`?
     /// Open transitions to half-open once the cool-down has elapsed;
     /// half-open admits a seeded Bernoulli(probe_p) trickle.
@@ -204,7 +260,7 @@ impl CircuitBreaker {
             if t_us < self.open_until_us {
                 return false;
             }
-            self.state = BreakerState::HalfOpen;
+            self.move_to(t_us, BreakerState::HalfOpen);
         }
         match self.state {
             BreakerState::Closed => true,
@@ -214,7 +270,7 @@ impl CircuitBreaker {
     }
 
     fn trip(&mut self, t_us: f64) {
-        self.state = BreakerState::Open;
+        self.move_to(t_us, BreakerState::Open);
         self.open_until_us = t_us + self.cfg.open_us;
         self.trips += 1;
     }
@@ -241,7 +297,7 @@ impl CircuitBreaker {
                 if ok {
                     // Probe succeeded: close and forget the bad spell so
                     // the error EWMA restarts from clean.
-                    self.state = BreakerState::Closed;
+                    self.move_to(t_us, BreakerState::Closed);
                     self.err_ewma = 0.0;
                     self.lat_ewma_us = self.floor_us.min(self.lat_ewma_us);
                 } else {
@@ -301,6 +357,21 @@ impl HealthScore {
     }
 
     pub fn observe(&mut self, ok: bool, deadline_miss: bool, norm_latency_us: f64) {
+        self.observe_at(f64::NAN, ok, deadline_miss, norm_latency_us);
+    }
+
+    /// Like [`HealthScore::observe`], but timestamped: returns the
+    /// brown-out threshold crossing this observation caused, if any, so
+    /// the caller can feed it to the flight recorder. `HealthScore`
+    /// stays `Copy` (it lives by value behind the cluster's per-replica
+    /// locks) — the log belongs to the caller, not the score.
+    pub fn observe_at(
+        &mut self,
+        t_us: f64,
+        ok: bool,
+        deadline_miss: bool,
+        norm_latency_us: f64,
+    ) -> Option<HealthTransition> {
         let instant = if !ok {
             0.0
         } else if deadline_miss {
@@ -311,7 +382,14 @@ impl HealthScore {
         } else {
             1.0
         };
+        let was_degraded = self.score < BROWNOUT_DEGRADE_THRESHOLD;
         self.score += HEALTH_ALPHA * (instant - self.score);
+        let is_degraded = self.score < BROWNOUT_DEGRADE_THRESHOLD;
+        if is_degraded != was_degraded && t_us.is_finite() {
+            Some(HealthTransition { t_us, degraded: is_degraded })
+        } else {
+            None
+        }
     }
 
     pub fn score(&self) -> f64 {
@@ -627,6 +705,108 @@ mod tests {
             "a 10× straggler must brown out on latency alone: {}",
             h.score()
         );
+    }
+
+    #[test]
+    fn breaker_logs_timestamped_transitions() {
+        let cfg = BreakerConfig {
+            min_observations: 2,
+            open_us: 1_000.0,
+            probe_p: 1.0, // every half-open draw admits, for determinism
+            ..BreakerConfig::default()
+        };
+        let mut br = CircuitBreaker::new(cfg);
+        // Errors at t=0..4 trip the breaker; cool-down; probe fails at
+        // t=2100 (re-open); cool-down; probe succeeds at t=4000 (close).
+        for i in 0..4 {
+            br.on_outcome(i as f64, false, 100.0);
+        }
+        let mut rng = Rng::new(3);
+        assert!(br.allows(2_000.0, &mut rng));
+        br.on_outcome(2_100.0, false, 100.0);
+        assert!(br.allows(3_500.0, &mut rng));
+        br.on_outcome(4_000.0, true, 100.0);
+        assert_eq!(br.state(), BreakerState::Closed);
+
+        let log = br.transitions();
+        let states: Vec<(BreakerState, BreakerState)> =
+            log.iter().map(|t| (t.from, t.to)).collect();
+        assert_eq!(
+            states,
+            vec![
+                (BreakerState::Closed, BreakerState::Open),
+                (BreakerState::Open, BreakerState::HalfOpen),
+                (BreakerState::HalfOpen, BreakerState::Open),
+                (BreakerState::Open, BreakerState::HalfOpen),
+                (BreakerState::HalfOpen, BreakerState::Closed),
+            ],
+            "full open → half-open → close cycle, in order: {log:?}"
+        );
+        assert!(
+            log.windows(2).all(|w| w[0].t_us <= w[1].t_us),
+            "timestamps are monotone: {log:?}"
+        );
+        assert_eq!(log[4].t_us, 4_000.0, "close stamped at the probe outcome");
+        assert_eq!(br.transitions_dropped(), 0);
+        // Draining empties the log without touching the state machine.
+        let drained = br.take_transitions();
+        assert_eq!(drained.len(), 5);
+        assert!(br.transitions().is_empty());
+        assert_eq!(br.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_transition_log_is_bounded() {
+        let cfg = BreakerConfig {
+            min_observations: 1,
+            open_us: 10.0,
+            probe_p: 1.0,
+            ..BreakerConfig::default()
+        };
+        let mut br = CircuitBreaker::new(cfg);
+        let mut rng = Rng::new(5);
+        // Flap forever: each iteration is open → half-open → open.
+        let mut t = 0.0;
+        for _ in 0..TRANSITION_LOG_CAP {
+            br.on_outcome(t, false, 50.0);
+            t += 20.0;
+            let _ = br.allows(t, &mut rng);
+        }
+        assert_eq!(br.transitions().len(), TRANSITION_LOG_CAP, "log capped");
+        assert!(br.transitions_dropped() > 0, "overflow counted, not silent");
+        // The log keeps the *newest* transitions.
+        let last = br.transitions().last().unwrap();
+        assert!(last.t_us >= t - 20.0);
+    }
+
+    #[test]
+    fn health_score_reports_brownout_crossings() {
+        let mut h = HealthScore::with_nominal(100.0);
+        let mut crossings = Vec::new();
+        let mut t = 0.0;
+        // Sustained failures: exactly one degraded crossing on the way
+        // down, one recovery on the way back up.
+        for _ in 0..40 {
+            t += 10.0;
+            if let Some(c) = h.observe_at(t, false, false, 100.0) {
+                crossings.push(c);
+            }
+        }
+        for _ in 0..60 {
+            t += 10.0;
+            if let Some(c) = h.observe_at(t, true, false, 100.0) {
+                crossings.push(c);
+            }
+        }
+        assert_eq!(crossings.len(), 2, "one degrade + one recover: {crossings:?}");
+        assert!(crossings[0].degraded && !crossings[1].degraded);
+        assert!(crossings[0].t_us < crossings[1].t_us);
+        // The untimestamped path never reports (NaN clock).
+        let mut h2 = HealthScore::with_nominal(100.0);
+        for _ in 0..40 {
+            h2.observe(false, false, 100.0);
+        }
+        assert!(h2.score() < BROWNOUT_DEGRADE_THRESHOLD, "state still moves");
     }
 
     #[test]

@@ -1,0 +1,654 @@
+//! **Stage breakdown + automatic bottleneck localisation** over a drained
+//! [`Trace`]: the paper's manual where-does-the-millisecond-go analysis
+//! (§6.1 feeder/kernel imbalance, §4.3 aggregation effects) turned into a
+//! checked decomposition.
+//!
+//! Per completed request the lifecycle stream decomposes into four
+//! additive stages on the accept clock:
+//!
+//! * **park** — `Accepted → first AttemptStart`: time waiting at the
+//!   front door (session window, pending buffer, admission re-tries).
+//! * **queue** — `Enqueued → ExecStart` of the *winning* attempt: time
+//!   in the replica's queue (plus channel/router transit in the real
+//!   realisation, which stamps ExecStart retroactively).
+//! * **exec** — the winning attempt's `ExecStart → ExecEnd` span, with
+//!   `kernel_us` inside it attributing the accelerator-kernel slice.
+//! * **overhead** — the residual: failed attempts, retry backoff, hedge
+//!   arming — everything the resilience ladder spent beyond the winner.
+//!
+//! Shares are time-weighted (`Σ stage / Σ total`), so a handful of
+//! pathological requests can't be voted down by a crowd of fast ones.
+//!
+//! The localiser walks a fixed decision tree over the breakdown —
+//! replica skew first (a gray straggler distorts every downstream
+//! share), then upstream-vs-exec, then feeder-vs-kernel via wall-clock
+//! kernel occupancy:
+//!
+//! 1. A replica whose mean exec span is ≥ [`STRAGGLER_FACTOR`]× the
+//!    median of its peers (with enough samples) → [`Bottleneck::Replica`].
+//! 2. Upstream shares (park + queue) dominate (≥ [`UPSTREAM_DOMINANT`]):
+//!    replicas mostly idle → [`Bottleneck::Frontdoor`] (work is stuck at
+//!    the door, not the backend); replicas busy but kernels idle
+//!    (occupancy < [`KERNEL_IDLE`]) → [`Bottleneck::Feeder`] — the §6.1
+//!    signature: queue grows upstream while the FPGA starves; otherwise
+//!    → [`Bottleneck::Kernel`].
+//! 3. Nothing dominates → [`Bottleneck::Balanced`].
+
+use super::{AttemptKind, ShedLane, StageEvent, Trace, TraceEvent, CONTROL_ID};
+use crate::coordinator::LogHistogram;
+
+/// A replica is a straggler when its mean exec span is this many times
+/// its peers' median (PR 7's gray slowdown factors are 8–10×; 3× keeps
+/// margin on both sides).
+pub const STRAGGLER_FACTOR: f64 = 3.0;
+/// Minimum exec spans on a replica before its mean is trusted.
+pub const MIN_REPLICA_SPANS: usize = 8;
+/// Park + queue share at/above which the bottleneck is upstream of exec.
+pub const UPSTREAM_DOMINANT: f64 = 0.5;
+/// Mean replica busy fraction below which the backend counts as idle
+/// (the door, not the replicas, is the constraint).
+pub const NODE_IDLE: f64 = 0.35;
+/// Kernel occupancy below which a busy replica is feeder-bound: the
+/// CPU side is saturated while the accelerator waits for work.
+pub const KERNEL_IDLE: f64 = 0.4;
+/// Cap on stored queue-depth timeline points per replica (decimated
+/// beyond this — the trace itself is already ring-bounded).
+const DEPTH_TIMELINE_CAP: usize = 2048;
+
+/// Where the pipeline's constraint sits, as localised from a trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    /// One replica is limping (gray straggler): its exec spans dwarf its
+    /// peers'.
+    Replica(usize),
+    /// Work is stuck at the front door / admission while replicas idle.
+    Frontdoor,
+    /// The §6.1 weak-feeder regime: replicas busy, queues full upstream,
+    /// but the accelerator kernels are starved by the CPU feed stage.
+    Feeder,
+    /// The accelerator itself is the constraint: kernels saturated.
+    Kernel,
+    /// No single stage dominates.
+    Balanced,
+}
+
+impl Bottleneck {
+    pub fn label(&self) -> String {
+        match self {
+            Bottleneck::Replica(i) => format!("replica:{i}"),
+            Bottleneck::Frontdoor => "frontdoor".to_string(),
+            Bottleneck::Feeder => "feeder".to_string(),
+            Bottleneck::Kernel => "kernel".to_string(),
+            Bottleneck::Balanced => "balanced".to_string(),
+        }
+    }
+}
+
+/// The dominant request-level stage (argmax of the four shares) — the
+/// coarse regime signature crossval compares across realisations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DominantStage {
+    Park,
+    Queue,
+    Exec,
+    Overhead,
+}
+
+impl DominantStage {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DominantStage::Park => "park",
+            DominantStage::Queue => "queue",
+            DominantStage::Exec => "exec",
+            DominantStage::Overhead => "overhead",
+        }
+    }
+}
+
+/// Per-replica utilisation and queue view, from the replica-scoped
+/// events (`Enqueued`/`ExecStart`/`ExecEnd`).
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub replica: usize,
+    /// Completed exec spans observed (winners and losers alike).
+    pub exec_spans: usize,
+    /// Σ exec-span durations — can exceed the trace span on replicas
+    /// with parallel engines.
+    pub busy_us: f64,
+    /// Σ kernel slices inside those spans.
+    pub kernel_busy_us: f64,
+    pub mean_exec_us: f64,
+    /// `busy_us / span_us` — per-replica busy fraction (>1 with engine
+    /// parallelism).
+    pub util: f64,
+    /// `kernel_busy_us / (span_us × kernels)` — wall-clock kernel
+    /// occupancy, the §6.1 starvation signal.
+    pub kernel_util: f64,
+    pub max_queue_depth: usize,
+    /// `(t_us, depth)` after each enqueue/exec-start, decimated to at
+    /// most [`DEPTH_TIMELINE_CAP`] points.
+    pub depth_timeline: Vec<(f64, u32)>,
+}
+
+/// Time-in-stage decomposition of a trace plus the per-replica view and
+/// the control-plane transition log.
+#[derive(Debug, Clone)]
+pub struct StageBreakdown {
+    /// Completed requests that decomposed fully (had accept, attempt,
+    /// enqueue, exec and terminal events in the trace).
+    pub requests: usize,
+    /// Observed trace span (first to last event), µs.
+    pub span_us: f64,
+    pub park_share: f64,
+    pub queue_share: f64,
+    pub exec_share: f64,
+    pub overhead_share: f64,
+    /// Σ kernel slice / Σ winning exec span — how much of exec was the
+    /// accelerator itself.
+    pub kernel_exec_share: f64,
+    pub park: LogHistogram,
+    pub queue: LogHistogram,
+    pub exec: LogHistogram,
+    pub overhead: LogHistogram,
+    pub total: LogHistogram,
+    pub replicas: Vec<ReplicaStats>,
+    /// Breaker/health transitions, time-ordered ([`CONTROL_ID`] events).
+    pub transitions: Vec<TraceEvent>,
+    /// How many kernels each replica drives (localiser occupancy basis).
+    pub kernels_per_replica: usize,
+}
+
+/// Accumulator for one request's lifecycle while scanning its events.
+#[derive(Debug, Clone, Default)]
+struct RequestLane {
+    t_accept: Option<f64>,
+    t_first_attempt: Option<f64>,
+    attempts: usize,
+    enqueues: Vec<(f64, usize)>,
+    exec_starts: Vec<(f64, usize)>,
+    exec_spans: Vec<(f64, f64, usize, f64)>, // (start, end, replica, kernel_us)
+    t_terminal: Option<f64>,
+    completed: bool,
+}
+
+impl StageBreakdown {
+    /// Decompose a drained trace. `n_replicas` sizes the per-replica
+    /// table (replicas beyond any seen in the trace report zeros);
+    /// `kernels_per_replica` is the number of kernel servers behind each
+    /// replica — the denominator of kernel occupancy (1 for the sim's
+    /// single modelled kernel pipeline, `topology.kernels` engine-server
+    /// threads for the real node).
+    pub fn analyze(trace: &Trace, n_replicas: usize, kernels_per_replica: usize) -> StageBreakdown {
+        let kpr = kernels_per_replica.max(1);
+        let mut events = trace.events.clone();
+        events.sort_by(|a, b| a.t_us.total_cmp(&b.t_us).then_with(|| a.id.cmp(&b.id)));
+
+        let span_us = match (events.first(), events.last()) {
+            (Some(f), Some(l)) => (l.t_us - f.t_us).max(1e-9),
+            _ => 1e-9,
+        };
+
+        // Group request-scoped events by id; keep control events aside.
+        let mut transitions: Vec<TraceEvent> = Vec::new();
+        let mut lanes: Vec<(u64, RequestLane)> = Vec::new();
+        for e in &events {
+            if e.id == CONTROL_ID {
+                if e.ev.is_control() {
+                    transitions.push(*e);
+                }
+                continue;
+            }
+            let lane = match lanes.binary_search_by_key(&e.id, |&(id, _)| id) {
+                Ok(i) => &mut lanes[i].1,
+                Err(i) => {
+                    lanes.insert(i, (e.id, RequestLane::default()));
+                    &mut lanes[i].1
+                }
+            };
+            match e.ev {
+                StageEvent::Accepted { .. } => lane.t_accept = lane.t_accept.or(Some(e.t_us)),
+                StageEvent::AttemptStart { .. } => {
+                    lane.t_first_attempt = lane.t_first_attempt.or(Some(e.t_us));
+                    lane.attempts += 1;
+                }
+                StageEvent::Enqueued { replica } => lane.enqueues.push((e.t_us, replica)),
+                StageEvent::ExecStart { replica } => lane.exec_starts.push((e.t_us, replica)),
+                StageEvent::ExecEnd { replica, kernel_us, .. } => {
+                    // Pair with the earliest unmatched start on the same
+                    // replica (FIFO per replica — each replica executes a
+                    // given request's attempt once at a time).
+                    let start = lane
+                        .exec_starts
+                        .iter()
+                        .position(|&(_, r)| r == replica)
+                        .map(|i| lane.exec_starts.remove(i).0)
+                        .unwrap_or(e.t_us);
+                    lane.exec_spans.push((start, e.t_us, replica, kernel_us));
+                }
+                StageEvent::Completed { .. } => {
+                    lane.t_terminal = lane.t_terminal.or(Some(e.t_us));
+                    lane.completed = true;
+                }
+                StageEvent::Shed { .. } | StageEvent::Lost { .. } => {
+                    lane.t_terminal = lane.t_terminal.or(Some(e.t_us));
+                }
+                _ => {}
+            }
+        }
+
+        // Per-replica stats from all exec spans + queue-depth timelines.
+        let max_seen_replica = lanes
+            .iter()
+            .flat_map(|(_, l)| {
+                l.exec_spans.iter().map(|&(_, _, r, _)| r).chain(l.enqueues.iter().map(|&(_, r)| r))
+            })
+            .max()
+            .map(|r| r + 1)
+            .unwrap_or(0);
+        let nr = n_replicas.max(max_seen_replica);
+        let mut replicas: Vec<ReplicaStats> = (0..nr)
+            .map(|replica| ReplicaStats {
+                replica,
+                exec_spans: 0,
+                busy_us: 0.0,
+                kernel_busy_us: 0.0,
+                mean_exec_us: 0.0,
+                util: 0.0,
+                kernel_util: 0.0,
+                max_queue_depth: 0,
+                depth_timeline: Vec::new(),
+            })
+            .collect();
+        let mut depth_deltas: Vec<Vec<(f64, i32)>> = vec![Vec::new(); nr];
+        for (_, lane) in &lanes {
+            for &(start, end, r, kernel_us) in &lane.exec_spans {
+                let s = &mut replicas[r];
+                s.exec_spans += 1;
+                s.busy_us += (end - start).max(0.0);
+                s.kernel_busy_us += kernel_us.max(0.0);
+            }
+            for &(t, r) in &lane.enqueues {
+                depth_deltas[r].push((t, 1));
+            }
+            for &(start, _, r, _) in &lane.exec_spans {
+                depth_deltas[r].push((start, -1));
+            }
+        }
+        for (r, deltas) in depth_deltas.iter_mut().enumerate() {
+            deltas.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| b.1.cmp(&a.1)));
+            let mut depth: i64 = 0;
+            let mut timeline = Vec::with_capacity(deltas.len());
+            for &(t, d) in deltas.iter() {
+                depth = (depth + d as i64).max(0);
+                timeline.push((t, depth as u32));
+            }
+            let s = &mut replicas[r];
+            s.max_queue_depth = timeline.iter().map(|&(_, d)| d as usize).max().unwrap_or(0);
+            // Decimate long timelines to the cap, always keeping the last
+            // point so the end state survives.
+            if timeline.len() > DEPTH_TIMELINE_CAP {
+                let step = timeline.len().div_ceil(DEPTH_TIMELINE_CAP);
+                let last = *timeline.last().unwrap();
+                let mut kept: Vec<(f64, u32)> = timeline.into_iter().step_by(step).collect();
+                if kept.last() != Some(&last) {
+                    kept.push(last);
+                }
+                timeline = kept;
+            }
+            s.depth_timeline = timeline;
+            s.mean_exec_us = s.busy_us / (s.exec_spans as f64).max(1.0);
+            s.util = s.busy_us / span_us;
+            s.kernel_util = s.kernel_busy_us / (span_us * kpr as f64);
+        }
+
+        // Stage decomposition over completed, fully-observed requests.
+        let (mut park, mut queue, mut exec, mut overhead, mut total) = (
+            LogHistogram::new(),
+            LogHistogram::new(),
+            LogHistogram::new(),
+            LogHistogram::new(),
+            LogHistogram::new(),
+        );
+        let (mut sum_park, mut sum_queue, mut sum_exec, mut sum_over, mut sum_total) =
+            (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let mut sum_kernel = 0.0f64;
+        let mut requests = 0usize;
+        for (_, lane) in &lanes {
+            let (Some(t_accept), Some(t_attempt), Some(t_term)) =
+                (lane.t_accept, lane.t_first_attempt, lane.t_terminal)
+            else {
+                continue;
+            };
+            if !lane.completed {
+                continue;
+            }
+            // Winner = the exec span ending at (or latest before) the
+            // terminal; hedge losers end after it.
+            let Some(&(w_start, w_end, _, w_kernel)) = lane
+                .exec_spans
+                .iter()
+                .filter(|&&(_, end, _, _)| end <= t_term + 1e-6)
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+            else {
+                continue;
+            };
+            // The winning attempt's enqueue: the latest at/before its
+            // exec start (earlier enqueues belong to failed attempts).
+            let t_enq = lane
+                .enqueues
+                .iter()
+                .filter(|&&(t, _)| t <= w_start + 1e-6)
+                .map(|&(t, _)| t)
+                .fold(f64::NEG_INFINITY, f64::max);
+            if !t_enq.is_finite() {
+                continue;
+            }
+            let r_total = (t_term - t_accept).max(0.0);
+            let r_park = (t_attempt - t_accept).max(0.0);
+            let r_exec = (w_end - w_start).max(0.0);
+            let r_queue = (w_start - t_enq).max(0.0);
+            let r_over = (r_total - r_park - r_queue - r_exec).max(0.0);
+            park.record(r_park);
+            queue.record(r_queue);
+            exec.record(r_exec);
+            overhead.record(r_over);
+            total.record(r_total);
+            sum_park += r_park;
+            sum_queue += r_queue;
+            sum_exec += r_exec;
+            sum_over += r_over;
+            sum_total += r_total;
+            sum_kernel += w_kernel.max(0.0);
+            requests += 1;
+        }
+
+        let denom = sum_total.max(1e-9);
+        StageBreakdown {
+            requests,
+            span_us,
+            park_share: sum_park / denom,
+            queue_share: sum_queue / denom,
+            exec_share: sum_exec / denom,
+            overhead_share: sum_over / denom,
+            kernel_exec_share: sum_kernel / sum_exec.max(1e-9),
+            park,
+            queue,
+            exec,
+            overhead,
+            total,
+            replicas,
+            transitions,
+            kernels_per_replica: kpr,
+        }
+    }
+
+    /// Argmax of the four stage shares.
+    pub fn dominant_stage(&self) -> DominantStage {
+        let shares = [
+            (self.park_share, DominantStage::Park),
+            (self.queue_share, DominantStage::Queue),
+            (self.exec_share, DominantStage::Exec),
+            (self.overhead_share, DominantStage::Overhead),
+        ];
+        shares.iter().max_by(|a, b| a.0.total_cmp(&b.0)).map(|&(_, s)| s).unwrap()
+    }
+
+    /// Mean busy fraction across replicas that saw any exec work.
+    pub fn mean_util(&self) -> f64 {
+        let active: Vec<&ReplicaStats> =
+            self.replicas.iter().filter(|r| r.exec_spans > 0).collect();
+        if active.is_empty() {
+            return 0.0;
+        }
+        active.iter().map(|r| r.util).sum::<f64>() / active.len() as f64
+    }
+
+    /// Mean wall-clock kernel occupancy across active replicas.
+    pub fn mean_kernel_util(&self) -> f64 {
+        let active: Vec<&ReplicaStats> =
+            self.replicas.iter().filter(|r| r.exec_spans > 0).collect();
+        if active.is_empty() {
+            return 0.0;
+        }
+        active.iter().map(|r| r.kernel_util).sum::<f64>() / active.len() as f64
+    }
+
+    /// The automatic bottleneck localiser (decision tree in the module
+    /// docs). Deterministic: same trace, same verdict.
+    pub fn localise(&self) -> Bottleneck {
+        if self.requests == 0 {
+            return Bottleneck::Balanced;
+        }
+        // 1. Replica skew first: a straggler distorts everything below.
+        let trusted: Vec<(usize, f64)> = self
+            .replicas
+            .iter()
+            .filter(|r| r.exec_spans >= MIN_REPLICA_SPANS)
+            .map(|r| (r.replica, r.mean_exec_us))
+            .collect();
+        if trusted.len() >= 2 {
+            let mut worst: Option<(usize, f64)> = None;
+            for &(i, mean) in &trusted {
+                let mut peers: Vec<f64> =
+                    trusted.iter().filter(|&&(j, _)| j != i).map(|&(_, m)| m).collect();
+                peers.sort_by(f64::total_cmp);
+                let median = peers[peers.len() / 2];
+                let ratio = mean / median.max(1e-9);
+                if ratio >= STRAGGLER_FACTOR && worst.map(|(_, w)| ratio > w).unwrap_or(true) {
+                    worst = Some((i, ratio));
+                }
+            }
+            if let Some((i, _)) = worst {
+                return Bottleneck::Replica(i);
+            }
+        }
+        // 2. Upstream-dominant: the door or the feed, not the kernel.
+        if self.park_share + self.queue_share >= UPSTREAM_DOMINANT {
+            if self.mean_util() < NODE_IDLE {
+                return Bottleneck::Frontdoor;
+            }
+            if self.mean_kernel_util() < KERNEL_IDLE {
+                return Bottleneck::Feeder;
+            }
+            return Bottleneck::Kernel;
+        }
+        Bottleneck::Balanced
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs over {:.1} ms | shares park/queue/exec/overhead \
+             {:.2}/{:.2}/{:.2}/{:.2} (kernel {:.2} of exec) | util {:.2} kernel-util {:.2} | \
+             dominant {} → {} | {} transitions",
+            self.requests,
+            self.span_us / 1e3,
+            self.park_share,
+            self.queue_share,
+            self.exec_share,
+            self.overhead_share,
+            self.kernel_exec_share,
+            self.mean_util(),
+            self.mean_kernel_util(),
+            self.dominant_stage().label(),
+            self.localise().label(),
+            self.transitions.len(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{BreakerPhase, Recorder, RingRecorder, TraceSpec};
+
+    /// Drive one synthetic request through a recorder with explicit stage
+    /// durations, returning its completion time.
+    #[allow(clippy::too_many_arguments)]
+    fn request(
+        rec: &mut RingRecorder,
+        id: u64,
+        t0: f64,
+        replica: usize,
+        park: f64,
+        queue: f64,
+        exec: f64,
+        kernel: f64,
+    ) -> f64 {
+        let n = 16;
+        rec.record(t0, id, StageEvent::Accepted { n_queries: n });
+        let t1 = t0 + park;
+        rec.record(t1, id, StageEvent::Admitted);
+        rec.record(t1, id, StageEvent::AttemptStart { kind: AttemptKind::Primary });
+        rec.record(t1, id, StageEvent::Routed { replica });
+        rec.record(t1, id, StageEvent::Enqueued { replica });
+        let t2 = t1 + queue;
+        rec.record(t2, id, StageEvent::ExecStart { replica });
+        let t3 = t2 + exec;
+        rec.record(t3, id, StageEvent::ExecEnd { replica, kernel_us: kernel, ok: true });
+        rec.record(t3, id, StageEvent::Completed { n_queries: n });
+        t3
+    }
+
+    #[test]
+    fn shares_recover_known_stage_durations() {
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        for i in 0..40u64 {
+            // park 10, queue 30, exec 60 → shares 0.1/0.3/0.6 exactly.
+            request(&mut rec, i, i as f64 * 120.0, (i % 2) as usize, 10.0, 30.0, 60.0, 40.0);
+        }
+        let trace = rec.into_trace();
+        let b = StageBreakdown::analyze(&trace, 2, 1);
+        assert_eq!(b.requests, 40);
+        assert!((b.park_share - 0.1).abs() < 1e-6, "{}", b.summary());
+        assert!((b.queue_share - 0.3).abs() < 1e-6, "{}", b.summary());
+        assert!((b.exec_share - 0.6).abs() < 1e-6, "{}", b.summary());
+        assert!(b.overhead_share.abs() < 1e-6);
+        assert!((b.kernel_exec_share - 40.0 / 60.0).abs() < 1e-6);
+        assert_eq!(b.dominant_stage(), DominantStage::Exec);
+        assert_eq!(b.replicas.len(), 2);
+        assert_eq!(b.replicas[0].exec_spans + b.replicas[1].exec_spans, 40);
+        assert!((b.exec.mean() - 60.0).abs() < 1.0, "exec histogram centred on 60 µs");
+    }
+
+    #[test]
+    fn retry_overhead_lands_in_the_residual() {
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        let id = 1u64;
+        let n = 16;
+        // Accepted at 0; failed primary (exec 0→50 on replica 0, not ok);
+        // retry at 100 (backoff), enqueued, exec 110→140 on replica 1.
+        rec.record(0.0, id, StageEvent::Accepted { n_queries: n });
+        rec.record(5.0, id, StageEvent::Admitted);
+        rec.record(5.0, id, StageEvent::AttemptStart { kind: AttemptKind::Primary });
+        rec.record(5.0, id, StageEvent::Enqueued { replica: 0 });
+        rec.record(10.0, id, StageEvent::ExecStart { replica: 0 });
+        rec.record(50.0, id, StageEvent::ExecEnd { replica: 0, kernel_us: 0.0, ok: false });
+        rec.record(100.0, id, StageEvent::AttemptStart { kind: AttemptKind::Retry });
+        rec.record(100.0, id, StageEvent::Enqueued { replica: 1 });
+        rec.record(110.0, id, StageEvent::ExecStart { replica: 1 });
+        rec.record(140.0, id, StageEvent::ExecEnd { replica: 1, kernel_us: 20.0, ok: true });
+        rec.record(140.0, id, StageEvent::Completed { n_queries: n });
+        let b = StageBreakdown::analyze(&rec.into_trace(), 2, 1);
+        assert_eq!(b.requests, 1);
+        // total 140: park 5, queue 10 (winner's enqueue 100 → start 110),
+        // exec 30, overhead 95 (failed attempt + backoff).
+        assert!((b.park_share - 5.0 / 140.0).abs() < 1e-6, "{}", b.summary());
+        assert!((b.queue_share - 10.0 / 140.0).abs() < 1e-6, "{}", b.summary());
+        assert!((b.exec_share - 30.0 / 140.0).abs() < 1e-6, "{}", b.summary());
+        assert!((b.overhead_share - 95.0 / 140.0).abs() < 1e-6, "{}", b.summary());
+        assert_eq!(b.dominant_stage(), DominantStage::Overhead);
+    }
+
+    #[test]
+    fn localiser_pins_a_straggler_replica() {
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        let mut t = 0.0;
+        for i in 0..60u64 {
+            let replica = (i % 3) as usize;
+            // Replica 1 limps at 8× the exec span of its peers.
+            let exec = if replica == 1 { 400.0 } else { 50.0 };
+            t = request(&mut rec, i, t, replica, 2.0, 5.0, exec, exec * 0.8);
+        }
+        let b = StageBreakdown::analyze(&rec.into_trace(), 3, 1);
+        assert_eq!(b.localise(), Bottleneck::Replica(1), "{}", b.summary());
+    }
+
+    #[test]
+    fn localiser_separates_feeder_from_kernel_saturation() {
+        // Feeder-bound: queue dominates, replicas busy, kernel slice tiny
+        // (the CPU feed stage is the wall; the FPGA idles — §6.1).
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        for i in 0..50u64 {
+            // back-to-back spans: replica busy the whole trace
+            request(&mut rec, i, i as f64 * 100.0, 0, 2.0, 200.0, 98.0, 10.0);
+        }
+        let b = StageBreakdown::analyze(&rec.into_trace(), 1, 1);
+        assert!(b.park_share + b.queue_share >= UPSTREAM_DOMINANT, "{}", b.summary());
+        assert!(b.mean_util() >= NODE_IDLE, "{}", b.summary());
+        assert_eq!(b.localise(), Bottleneck::Feeder, "{}", b.summary());
+
+        // Kernel-bound: same queueing but the kernel slice fills the span.
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        for i in 0..50u64 {
+            request(&mut rec, i, i as f64 * 100.0, 0, 2.0, 200.0, 98.0, 95.0);
+        }
+        let b = StageBreakdown::analyze(&rec.into_trace(), 1, 1);
+        assert_eq!(b.localise(), Bottleneck::Kernel, "{}", b.summary());
+
+        // Door-bound: park dominates and the replica is mostly idle.
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        for i in 0..50u64 {
+            request(&mut rec, i, i as f64 * 1000.0, 0, 900.0, 2.0, 50.0, 40.0);
+        }
+        let b = StageBreakdown::analyze(&rec.into_trace(), 1, 1);
+        assert!(b.mean_util() < NODE_IDLE, "{}", b.summary());
+        assert_eq!(b.localise(), Bottleneck::Frontdoor, "{}", b.summary());
+
+        // Balanced: exec dominates, nothing upstream.
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        for i in 0..50u64 {
+            request(&mut rec, i, i as f64 * 100.0, 0, 2.0, 5.0, 90.0, 80.0);
+        }
+        let b = StageBreakdown::analyze(&rec.into_trace(), 1, 1);
+        assert_eq!(b.localise(), Bottleneck::Balanced, "{}", b.summary());
+    }
+
+    #[test]
+    fn queue_depth_timeline_and_transitions() {
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        // Three enqueues before any exec start: depth peaks at 3.
+        for id in 0..3u64 {
+            rec.record(id as f64, id, StageEvent::Accepted { n_queries: 1 });
+            rec.record(id as f64, id, StageEvent::AttemptStart { kind: AttemptKind::Primary });
+            rec.record(id as f64, id, StageEvent::Enqueued { replica: 0 });
+        }
+        for id in 0..3u64 {
+            let t = 10.0 + id as f64 * 20.0;
+            rec.record(t, id, StageEvent::ExecStart { replica: 0 });
+            rec.record(t + 15.0, id, StageEvent::ExecEnd { replica: 0, kernel_us: 5.0, ok: true });
+            rec.record(t + 15.0, id, StageEvent::Completed { n_queries: 1 });
+        }
+        rec.record(
+            30.0,
+            CONTROL_ID,
+            StageEvent::Breaker { replica: 0, from: BreakerPhase::Closed, to: BreakerPhase::Open },
+        );
+        rec.record(60.0, CONTROL_ID, StageEvent::Health { replica: 0, degraded: true });
+        let b = StageBreakdown::analyze(&rec.into_trace(), 1, 1);
+        assert_eq!(b.replicas[0].max_queue_depth, 3);
+        let last = *b.replicas[0].depth_timeline.last().unwrap();
+        assert_eq!(last.1, 0, "queue drains by the end");
+        assert_eq!(b.transitions.len(), 2);
+        assert!(matches!(b.transitions[0].ev, StageEvent::Breaker { .. }));
+        assert!(matches!(b.transitions[1].ev, StageEvent::Health { degraded: true, .. }));
+    }
+
+    #[test]
+    fn empty_trace_is_balanced_and_quiet() {
+        let b = StageBreakdown::analyze(&Trace::default(), 2, 4);
+        assert_eq!(b.requests, 0);
+        assert_eq!(b.localise(), Bottleneck::Balanced);
+        assert_eq!(b.replicas.len(), 2);
+        assert!(b.summary().contains("0 reqs"));
+    }
+}

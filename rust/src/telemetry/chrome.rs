@@ -1,0 +1,240 @@
+//! **Chrome-trace-event exporter**: turn a drained [`Trace`] into the
+//! Trace Event Format JSON that Perfetto (ui.perfetto.dev) and
+//! `chrome://tracing` load directly — no serde, via [`benchkit::Json`].
+//!
+//! Layout:
+//!
+//! * **pid 0 ("requests")** — one complete (`ph:"X"`) span per request
+//!   from `Accepted` to its terminal, named by its terminal lane
+//!   (`completed`/`shed:*`/`lost`), one track (`tid`) per request.
+//! * **pid 1+r ("replica r")** — one `X` span per exec
+//!   (`ExecStart→ExecEnd`), carrying the kernel slice and backend
+//!   outcome in `args`; same per-request `tid` so a request's exec spans
+//!   line up under its lifecycle span.
+//! * **instants (`ph:"i"`)** — terminals without an accept (socket sheds
+//!   refused before acceptance) on pid 0, and breaker/health transitions
+//!   on their replica's pid.
+//!
+//! Timestamps pass through unscaled: both realisations already stamp
+//! events in µs, the format's native unit.
+
+use super::{StageEvent, Trace, CONTROL_ID};
+use crate::benchkit::Json;
+
+/// Build the Trace Event Format document for a trace.
+pub fn chrome_trace_json(trace: &Trace) -> Json {
+    let mut sorted = trace.clone();
+    sorted.sort();
+
+    let mut out: Vec<Json> = Vec::new();
+    // Process-name metadata rows.
+    let mut replicas: Vec<usize> = sorted
+        .events
+        .iter()
+        .filter_map(|e| match e.ev {
+            StageEvent::Routed { replica }
+            | StageEvent::Enqueued { replica }
+            | StageEvent::ExecStart { replica }
+            | StageEvent::ExecEnd { replica, .. }
+            | StageEvent::Breaker { replica, .. }
+            | StageEvent::Health { replica, .. } => Some(replica),
+            _ => None,
+        })
+        .collect();
+    replicas.sort_unstable();
+    replicas.dedup();
+    out.push(meta_process(0, "requests"));
+    for &r in &replicas {
+        out.push(meta_process(1 + r as i64, &format!("replica {r}")));
+    }
+
+    // Compact per-request track ids, in first-appearance order.
+    let mut tids: Vec<u64> = Vec::new();
+    let mut tid_of = |id: u64, tids: &mut Vec<u64>| -> i64 {
+        match tids.iter().position(|&x| x == id) {
+            Some(i) => i as i64,
+            None => {
+                tids.push(id);
+                (tids.len() - 1) as i64
+            }
+        }
+    };
+
+    // Walk per request: accept time, open exec starts, terminal.
+    let mut accept_at: Vec<(u64, f64, usize)> = Vec::new(); // (id, t, n)
+    let mut open_exec: Vec<(u64, usize, f64)> = Vec::new(); // (id, replica, t_start)
+    for e in &sorted.events {
+        if e.id == CONTROL_ID {
+            if let StageEvent::Breaker { replica, from, to } = e.ev {
+                out.push(instant(
+                    e.t_us,
+                    1 + replica as i64,
+                    0,
+                    &format!("breaker {}→{}", from.label(), to.label()),
+                ));
+            } else if let StageEvent::Health { replica, degraded } = e.ev {
+                let name = if degraded { "health: degraded" } else { "health: recovered" };
+                out.push(instant(e.t_us, 1 + replica as i64, 0, name));
+            }
+            continue;
+        }
+        match e.ev {
+            StageEvent::Accepted { n_queries } => accept_at.push((e.id, e.t_us, n_queries)),
+            StageEvent::ExecStart { replica } => open_exec.push((e.id, replica, e.t_us)),
+            StageEvent::ExecEnd { replica, kernel_us, ok } => {
+                if let Some(i) =
+                    open_exec.iter().position(|&(id, r, _)| id == e.id && r == replica)
+                {
+                    let (_, _, t_start) = open_exec.remove(i);
+                    let tid = tid_of(e.id, &mut tids);
+                    out.push(Json::obj([
+                        ("name", Json::Str("exec".to_string())),
+                        ("ph", Json::Str("X".to_string())),
+                        ("ts", Json::Num(t_start)),
+                        ("dur", Json::Num((e.t_us - t_start).max(0.0))),
+                        ("pid", Json::Int(1 + replica as i64)),
+                        ("tid", Json::Int(tid)),
+                        (
+                            "args",
+                            Json::obj([
+                                ("id", Json::Int(e.id as i64)),
+                                ("kernel_us", Json::Num(kernel_us)),
+                                ("ok", Json::Bool(ok)),
+                            ]),
+                        ),
+                    ]));
+                }
+            }
+            ev if ev.is_terminal() => {
+                let tid = tid_of(e.id, &mut tids);
+                match accept_at.iter().position(|&(id, _, _)| id == e.id) {
+                    Some(i) => {
+                        let (_, t_accept, n) = accept_at.remove(i);
+                        out.push(Json::obj([
+                            ("name", Json::Str(ev.label().to_string())),
+                            ("ph", Json::Str("X".to_string())),
+                            ("ts", Json::Num(t_accept)),
+                            ("dur", Json::Num((e.t_us - t_accept).max(0.0))),
+                            ("pid", Json::Int(0)),
+                            ("tid", Json::Int(tid)),
+                            (
+                                "args",
+                                Json::obj([
+                                    ("id", Json::Int(e.id as i64)),
+                                    ("n_queries", Json::Int(n as i64)),
+                                ]),
+                            ),
+                        ]));
+                    }
+                    // Refused before acceptance (socket shed): an instant.
+                    None => out.push(instant(e.t_us, 0, tid, ev.label())),
+                }
+            }
+            _ => {}
+        }
+    }
+
+    Json::obj([
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "otherData",
+            Json::obj([
+                ("sample", Json::Int(trace.sample as i64)),
+                ("dropped", Json::Int(trace.dropped as i64)),
+                ("events", Json::Int(trace.events.len() as i64)),
+            ]),
+        ),
+    ])
+}
+
+/// Write `trace` to `path` in Trace Event Format (open in Perfetto).
+pub fn write_chrome_trace(path: &str, trace: &Trace) -> std::io::Result<()> {
+    crate::benchkit::write_json(path, &chrome_trace_json(trace))
+}
+
+fn meta_process(pid: i64, name: &str) -> Json {
+    Json::obj([
+        ("name", Json::Str("process_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Int(pid)),
+        ("tid", Json::Int(0)),
+        ("args", Json::obj([("name", Json::Str(name.to_string()))])),
+    ])
+}
+
+fn instant(t_us: f64, pid: i64, tid: i64, name: &str) -> Json {
+    Json::obj([
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("i".to_string())),
+        ("ts", Json::Num(t_us)),
+        ("pid", Json::Int(pid)),
+        ("tid", Json::Int(tid)),
+        ("s", Json::Str("p".to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{
+        AttemptKind, BreakerPhase, Recorder, RingRecorder, ShedLane, TraceSpec,
+    };
+
+    #[test]
+    fn export_produces_loadable_trace_event_json() {
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        let id = 42u64;
+        rec.record(0.0, id, StageEvent::Accepted { n_queries: 8 });
+        rec.record(1.0, id, StageEvent::Admitted);
+        rec.record(1.0, id, StageEvent::AttemptStart { kind: AttemptKind::Primary });
+        rec.record(1.0, id, StageEvent::Routed { replica: 1 });
+        rec.record(1.0, id, StageEvent::Enqueued { replica: 1 });
+        rec.record(4.0, id, StageEvent::ExecStart { replica: 1 });
+        rec.record(9.0, id, StageEvent::ExecEnd { replica: 1, kernel_us: 3.0, ok: true });
+        rec.record(9.0, id, StageEvent::Completed { n_queries: 8 });
+        rec.record(2.0, 7, StageEvent::Shed { lane: ShedLane::Socket, n_queries: 8 });
+        rec.record(
+            5.0,
+            CONTROL_ID,
+            StageEvent::Breaker { replica: 1, from: BreakerPhase::Closed, to: BreakerPhase::Open },
+        );
+        let doc = chrome_trace_json(&rec.into_trace());
+
+        // Round-trips through the benchkit parser (valid JSON).
+        let text = doc.render();
+        let back = Json::parse(&text).expect("exporter emits valid JSON");
+        let events = match back.get("traceEvents") {
+            Some(Json::Arr(xs)) => xs.clone(),
+            other => panic!("traceEvents must be an array, got {other:?}"),
+        };
+        // 2 process metadata + request span + exec span + shed instant +
+        // breaker instant.
+        assert_eq!(events.len(), 6, "{text}");
+
+        let find = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("missing event {name} in {text}"))
+        };
+        let req = find("completed");
+        assert_eq!(req.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(req.get("ts").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(req.get("dur").and_then(Json::as_f64), Some(9.0));
+        assert_eq!(req.get("pid").and_then(Json::as_i64), Some(0));
+        let exec = find("exec");
+        assert_eq!(exec.get("pid").and_then(Json::as_i64), Some(2), "replica 1 → pid 2");
+        assert_eq!(exec.get("dur").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(exec.path(&["args", "kernel_us"]).and_then(Json::as_f64), Some(3.0));
+        assert_eq!(
+            exec.get("tid").and_then(Json::as_i64),
+            req.get("tid").and_then(Json::as_i64),
+            "exec spans share the request's track"
+        );
+        let shed = find("shed:socket");
+        assert_eq!(shed.get("ph").and_then(Json::as_str), Some("i"), "no accept → instant");
+        let brk = find("breaker closed→open");
+        assert_eq!(brk.get("pid").and_then(Json::as_i64), Some(2));
+    }
+}

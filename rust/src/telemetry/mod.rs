@@ -1,0 +1,568 @@
+//! The **flight recorder**: a dependency-free per-request stage-tracing
+//! plane that both realisations feed identically. The paper's core
+//! contribution is the *end-to-end decomposition* — knowing where each
+//! millisecond goes between the CPU feeder, the queues, and the FPGA so
+//! the §6.1 imbalance and the §4.3 aggregation effects become visible.
+//! Endpoint aggregates ([`FrontdoorReport`](crate::frontdoor::FrontdoorReport))
+//! tell you *that* goodput fell; the trace tells you *which stage* ate it.
+//!
+//! Design rules, in order of importance:
+//!
+//! 1. **Zero cost when off.** The hot paths are generic over [`Recorder`];
+//!    the default [`NullRecorder`] monomorphises every `record` call to
+//!    nothing. The determinism tests (bit-identical sim reports) hold
+//!    because recording is side-effect-only: no RNG draws, no counter
+//!    writes, no event reordering.
+//! 2. **No hot-path locks.** Each event thread owns a [`RingRecorder`];
+//!    rings are drained into one [`Trace`] at thread join, mirroring how
+//!    per-thread [`FrontdoorCounters`](crate::frontdoor) merge.
+//! 3. **Deterministic sampling keyed on request id.** 1-in-N sampling
+//!    hashes the *request id* (not a counter, not a clock), so the sim
+//!    and the real run sample the *same* requests and their stage
+//!    decompositions are comparable request-for-request.
+//! 4. **Explicit clocks.** Events are stamped on the clock each
+//!    realisation already owns: the reactor's wall clock (µs since run
+//!    start) or the DES virtual clock. The recorder never reads a clock
+//!    itself.
+//!
+//! The lifecycle stream per request:
+//! `Accepted → Admitted → AttemptStart → Routed → Enqueued → ExecStart →
+//! ExecEnd → (Completed | Shed | Lost)`, with extra `AttemptStart{Retry|
+//! Hedge}`/`Routed`/`Enqueued`/`Exec*` groups per resilience attempt.
+//! Control events ([`StageEvent::Breaker`], [`StageEvent::Health`]) carry
+//! the sentinel id [`CONTROL_ID`] and bypass sampling — state transitions
+//! are rare and always worth keeping.
+//!
+//! On top of the raw stream: [`breakdown::StageBreakdown`] (time-in-stage
+//! shares and the automatic bottleneck localiser) and [`chrome`] (a
+//! Chrome-trace-event exporter; the output loads directly in Perfetto).
+
+pub mod breakdown;
+pub mod chrome;
+
+pub use breakdown::{Bottleneck, ReplicaStats, StageBreakdown};
+pub use chrome::{chrome_trace_json, write_chrome_trace};
+
+use std::collections::VecDeque;
+
+/// Sentinel id for control-plane events (breaker/health transitions,
+/// which belong to a replica, not a request). Control events bypass
+/// sampling: they are rare and always recorded.
+pub const CONTROL_ID: u64 = u64::MAX;
+
+/// Default per-thread ring capacity: enough for ~8k requests' full
+/// lifecycles per thread, bounded regardless of run length.
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// Which attempt a submission belongs to, in resilience-ladder terms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttemptKind {
+    Primary,
+    Retry,
+    Hedge,
+}
+
+/// Which shed lane a request died in — mirrors the conservation law's
+/// three shed terms (`shed_socket`/`shed_queue`/`shed_deadline`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedLane {
+    Socket,
+    Queue,
+    Deadline,
+}
+
+/// Circuit-breaker phase, recorder vocabulary. The resilience layer owns
+/// the real state machine; transitions are mapped into this mirror enum
+/// when drained so telemetry stays foundational (no internal deps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerPhase {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerPhase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BreakerPhase::Closed => "closed",
+            BreakerPhase::Open => "open",
+            BreakerPhase::HalfOpen => "half-open",
+        }
+    }
+}
+
+impl From<crate::resilience::BreakerState> for BreakerPhase {
+    fn from(s: crate::resilience::BreakerState) -> BreakerPhase {
+        match s {
+            crate::resilience::BreakerState::Closed => BreakerPhase::Closed,
+            crate::resilience::BreakerState::Open => BreakerPhase::Open,
+            crate::resilience::BreakerState::HalfOpen => BreakerPhase::HalfOpen,
+        }
+    }
+}
+
+/// One point in a request's lifecycle (or a control-plane transition).
+///
+/// Terminal events (`Completed`/`Shed`/`Lost`) and `Accepted` carry the
+/// request's query count so lane totals — the conservation law — can be
+/// re-derived exactly from an unsampled trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StageEvent {
+    /// The client had the work: session accepted, batch ready (the accept
+    /// clock's zero for this request).
+    Accepted { n_queries: usize },
+    /// Passed the front-door ladder (window + pending cap) and is being
+    /// handed to the cluster.
+    Admitted,
+    /// An attempt begins (primary submission, a retry, or a hedge copy).
+    AttemptStart { kind: AttemptKind },
+    /// The router picked a replica for this attempt.
+    Routed { replica: usize },
+    /// The attempt entered the replica's queue.
+    Enqueued { replica: usize },
+    /// The replica started executing this attempt.
+    ExecStart { replica: usize },
+    /// The replica finished executing: `kernel_us` is the slice of the
+    /// exec span spent in the accelerator kernel itself (0 for CPU
+    /// backends), `ok` whether the backend call succeeded.
+    ExecEnd { replica: usize, kernel_us: f64, ok: bool },
+    /// Terminal: completed within deadline.
+    Completed { n_queries: usize },
+    /// Terminal: shed in `lane`.
+    Shed { lane: ShedLane, n_queries: usize },
+    /// Terminal: lost to a fault (failed with retries exhausted/disabled).
+    Lost { n_queries: usize },
+    /// Control: a circuit breaker changed state (id = [`CONTROL_ID`]).
+    Breaker { replica: usize, from: BreakerPhase, to: BreakerPhase },
+    /// Control: a replica's health score crossed the brown-out degrade
+    /// threshold (id = [`CONTROL_ID`]).
+    Health { replica: usize, degraded: bool },
+}
+
+impl StageEvent {
+    /// Is this one of the three terminal lanes?
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            StageEvent::Completed { .. } | StageEvent::Shed { .. } | StageEvent::Lost { .. }
+        )
+    }
+
+    /// Is this a control-plane event (replica-scoped, not request-scoped)?
+    pub fn is_control(&self) -> bool {
+        matches!(self, StageEvent::Breaker { .. } | StageEvent::Health { .. })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            StageEvent::Accepted { .. } => "accepted",
+            StageEvent::Admitted => "admitted",
+            StageEvent::AttemptStart { kind: AttemptKind::Primary } => "attempt:primary",
+            StageEvent::AttemptStart { kind: AttemptKind::Retry } => "attempt:retry",
+            StageEvent::AttemptStart { kind: AttemptKind::Hedge } => "attempt:hedge",
+            StageEvent::Routed { .. } => "routed",
+            StageEvent::Enqueued { .. } => "enqueued",
+            StageEvent::ExecStart { .. } => "exec-start",
+            StageEvent::ExecEnd { .. } => "exec-end",
+            StageEvent::Completed { .. } => "completed",
+            StageEvent::Shed { lane: ShedLane::Socket, .. } => "shed:socket",
+            StageEvent::Shed { lane: ShedLane::Queue, .. } => "shed:queue",
+            StageEvent::Shed { lane: ShedLane::Deadline, .. } => "shed:deadline",
+            StageEvent::Lost { .. } => "lost",
+            StageEvent::Breaker { .. } => "breaker",
+            StageEvent::Health { .. } => "health",
+        }
+    }
+}
+
+/// One recorded event: realisation clock, request id, lifecycle point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub t_us: f64,
+    pub id: u64,
+    pub ev: StageEvent,
+}
+
+/// Trace configuration, identical across realisations (Copy so it rides
+/// inside the Copy `FrontdoorConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// Record 1 in `sample` requests (1 = every request). Sampling is
+    /// keyed on a hash of the request id, so both realisations keep the
+    /// same subset.
+    pub sample: u32,
+    /// Per-recorder ring capacity; the oldest events are overwritten
+    /// (and counted in [`Trace::dropped`]) beyond it.
+    pub capacity: usize,
+}
+
+impl TraceSpec {
+    /// Record everything (sample 1, default capacity).
+    pub fn full() -> TraceSpec {
+        TraceSpec { sample: 1, capacity: DEFAULT_RING_CAPACITY }
+    }
+
+    /// Record 1 in `n` requests.
+    pub fn sampled(n: u32) -> TraceSpec {
+        TraceSpec { sample: n.max(1), capacity: DEFAULT_RING_CAPACITY }
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> TraceSpec {
+        self.capacity = capacity.max(1);
+        self
+    }
+
+    /// Does this spec keep request `id`? Deterministic in `id` alone.
+    #[inline]
+    pub fn keeps(&self, id: u64) -> bool {
+        self.sample <= 1 || id == CONTROL_ID || sample_hash(id) % self.sample as u64 == 0
+    }
+}
+
+/// splitmix64 finalizer — a cheap, well-mixed hash so sampling is
+/// insensitive to request-id structure (sequential batch indices,
+/// session<<32 packing).
+#[inline]
+pub fn sample_hash(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// The recording surface both realisations call. Implementations must be
+/// side-effect-only with respect to the caller: no clock reads, no RNG,
+/// no shared state — so a recorded run is bit-identical to an unrecorded
+/// one in everything but the trace.
+pub trait Recorder {
+    fn record(&mut self, t_us: f64, id: u64, ev: StageEvent);
+
+    /// Drain this recorder into a trace (called at thread join / end of
+    /// run). The default is the empty trace — what `NullRecorder` yields.
+    fn into_trace(self) -> Trace
+    where
+        Self: Sized,
+    {
+        Trace::default()
+    }
+}
+
+/// The zero-cost default: every `record` call monomorphises to nothing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    #[inline(always)]
+    fn record(&mut self, _t_us: f64, _id: u64, _ev: StageEvent) {}
+}
+
+/// A per-thread fixed-capacity ring recorder: push is O(1), no locks, no
+/// allocation after warm-up; when full, the oldest event is overwritten
+/// and counted. Sampling filters whole requests (all-or-nothing per id),
+/// so every kept request has its complete lifecycle in the ring.
+#[derive(Debug, Clone)]
+pub struct RingRecorder {
+    spec: TraceSpec,
+    ring: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+impl RingRecorder {
+    pub fn new(spec: TraceSpec) -> RingRecorder {
+        RingRecorder {
+            spec,
+            // Cap the eager allocation; the ring still grows to spec
+            // capacity on demand.
+            ring: VecDeque::with_capacity(spec.capacity.min(4096)),
+            dropped: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+}
+
+impl Recorder for RingRecorder {
+    #[inline]
+    fn record(&mut self, t_us: f64, id: u64, ev: StageEvent) {
+        if !self.spec.keeps(id) {
+            return;
+        }
+        if self.ring.len() >= self.spec.capacity {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(TraceEvent { t_us, id, ev });
+    }
+
+    fn into_trace(self) -> Trace {
+        Trace { events: self.ring.into(), dropped: self.dropped, sample: self.spec.sample }
+    }
+}
+
+/// Query totals per terminal lane, re-derived from a trace — the
+/// conservation law's terms as the event stream saw them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneCounts {
+    pub accepted_queries: usize,
+    pub completed_queries: usize,
+    pub completed_requests: usize,
+    pub shed_socket_queries: usize,
+    pub shed_queue_queries: usize,
+    pub shed_deadline_queries: usize,
+    pub lost_queries: usize,
+}
+
+impl LaneCounts {
+    /// Total queries across all terminal lanes — equals offered queries
+    /// when the trace is unsampled and nothing was ring-dropped.
+    pub fn terminal_queries(&self) -> usize {
+        self.completed_queries
+            + self.shed_socket_queries
+            + self.shed_queue_queries
+            + self.shed_deadline_queries
+            + self.lost_queries
+    }
+}
+
+/// A drained, merged event stream (plus how it was sampled/bounded).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    /// Events overwritten by ring wrap-around (0 = the trace is complete
+    /// with respect to its sampling).
+    pub dropped: u64,
+    /// The 1-in-N sampling this trace was recorded under (0 = no trace
+    /// was requested; treat as empty).
+    pub sample: u32,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Is this trace a complete record (every request, nothing dropped)?
+    /// Only then does lane reconciliation against a report hold exactly.
+    pub fn is_complete(&self) -> bool {
+        self.sample == 1 && self.dropped == 0
+    }
+
+    /// Fold another recorder's drained trace in (thread-join merge).
+    pub fn merge(&mut self, other: Trace) {
+        self.events.extend(other.events);
+        self.dropped += other.dropped;
+        self.sample = self.sample.max(other.sample);
+    }
+
+    /// Sort events by time (then id, then lifecycle order) — merged
+    /// per-thread rings interleave arbitrarily until this runs.
+    pub fn sort(&mut self) {
+        self.events.sort_by(|a, b| {
+            a.t_us
+                .total_cmp(&b.t_us)
+                .then_with(|| a.id.cmp(&b.id))
+                .then_with(|| event_order(&a.ev).cmp(&event_order(&b.ev)))
+        });
+    }
+
+    /// Re-derive the conservation-law lane totals from terminal events.
+    pub fn lane_counts(&self) -> LaneCounts {
+        let mut lanes = LaneCounts::default();
+        for e in &self.events {
+            match e.ev {
+                StageEvent::Accepted { n_queries } => lanes.accepted_queries += n_queries,
+                StageEvent::Completed { n_queries } => {
+                    lanes.completed_queries += n_queries;
+                    lanes.completed_requests += 1;
+                }
+                StageEvent::Shed { lane: ShedLane::Socket, n_queries } => {
+                    lanes.shed_socket_queries += n_queries
+                }
+                StageEvent::Shed { lane: ShedLane::Queue, n_queries } => {
+                    lanes.shed_queue_queries += n_queries
+                }
+                StageEvent::Shed { lane: ShedLane::Deadline, n_queries } => {
+                    lanes.shed_deadline_queries += n_queries
+                }
+                StageEvent::Lost { n_queries } => lanes.lost_queries += n_queries,
+                _ => {}
+            }
+        }
+        lanes
+    }
+
+    /// Per-request terminal-event counts, for the exactly-one-terminal
+    /// invariant: every request that appears in the trace must terminate
+    /// exactly once. Returns `(id, terminals)` sorted by id.
+    pub fn terminals_per_request(&self) -> Vec<(u64, usize)> {
+        let mut ids: Vec<u64> = self
+            .events
+            .iter()
+            .filter(|e| e.id != CONTROL_ID)
+            .map(|e| e.id)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let mut counts: Vec<(u64, usize)> = ids.into_iter().map(|id| (id, 0)).collect();
+        for e in &self.events {
+            if e.id == CONTROL_ID || !e.ev.is_terminal() {
+                continue;
+            }
+            if let Ok(i) = counts.binary_search_by_key(&e.id, |&(id, _)| id) {
+                counts[i].1 += 1;
+            }
+        }
+        counts
+    }
+}
+
+/// Lifecycle ordering for same-timestamp same-request ties (the DES
+/// stamps several lifecycle points at one virtual instant).
+fn event_order(ev: &StageEvent) -> u8 {
+    match ev {
+        StageEvent::Accepted { .. } => 0,
+        StageEvent::Admitted => 1,
+        StageEvent::AttemptStart { .. } => 2,
+        StageEvent::Routed { .. } => 3,
+        StageEvent::Enqueued { .. } => 4,
+        StageEvent::ExecStart { .. } => 5,
+        StageEvent::ExecEnd { .. } => 6,
+        StageEvent::Completed { .. } | StageEvent::Shed { .. } | StageEvent::Lost { .. } => 7,
+        StageEvent::Breaker { .. } | StageEvent::Health { .. } => 8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lifecycle(rec: &mut impl Recorder, id: u64, t0: f64, n: usize) {
+        rec.record(t0, id, StageEvent::Accepted { n_queries: n });
+        rec.record(t0 + 1.0, id, StageEvent::Admitted);
+        rec.record(t0 + 1.0, id, StageEvent::AttemptStart { kind: AttemptKind::Primary });
+        rec.record(t0 + 1.0, id, StageEvent::Routed { replica: 0 });
+        rec.record(t0 + 1.0, id, StageEvent::Enqueued { replica: 0 });
+        rec.record(t0 + 5.0, id, StageEvent::ExecStart { replica: 0 });
+        rec.record(t0 + 15.0, id, StageEvent::ExecEnd { replica: 0, kernel_us: 6.0, ok: true });
+        rec.record(t0 + 15.0, id, StageEvent::Completed { n_queries: n });
+    }
+
+    #[test]
+    fn null_recorder_yields_the_empty_trace() {
+        let mut rec = NullRecorder;
+        lifecycle(&mut rec, 7, 0.0, 16);
+        let t = rec.into_trace();
+        assert!(t.is_empty());
+        assert_eq!(t.sample, 0, "no trace was requested");
+    }
+
+    #[test]
+    fn ring_records_full_lifecycles_and_reconciles_lanes() {
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        for id in 0..10u64 {
+            lifecycle(&mut rec, id, id as f64 * 100.0, 16);
+        }
+        rec.record(1e4, 99, StageEvent::Shed { lane: ShedLane::Queue, n_queries: 16 });
+        rec.record(1e4, 100, StageEvent::Lost { n_queries: 16 });
+        let t = rec.into_trace();
+        assert!(t.is_complete());
+        let lanes = t.lane_counts();
+        assert_eq!(lanes.completed_queries, 160);
+        assert_eq!(lanes.completed_requests, 10);
+        assert_eq!(lanes.shed_queue_queries, 16);
+        assert_eq!(lanes.lost_queries, 16);
+        assert_eq!(lanes.terminal_queries(), 192);
+        for (id, terms) in t.terminals_per_request() {
+            assert_eq!(terms, 1, "request {id} must terminate exactly once");
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let mut rec = RingRecorder::new(TraceSpec::full().with_capacity(8));
+        for id in 0..4u64 {
+            lifecycle(&mut rec, id, id as f64, 1); // 8 events each
+        }
+        let t = rec.into_trace();
+        assert_eq!(t.len(), 8, "ring holds exactly its capacity");
+        assert_eq!(t.dropped, 24, "three full lifecycles were overwritten");
+        assert!(!t.is_complete());
+        assert!(t.events.iter().all(|e| e.id == 3), "only the newest request survives");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_keyed_on_id() {
+        let spec = TraceSpec::sampled(4);
+        // The kept subset is a pure function of the id — two recorders
+        // (sim and real) keep exactly the same requests.
+        let kept_a: Vec<u64> = (0..1000).filter(|&id| spec.keeps(id)).collect();
+        let kept_b: Vec<u64> = (0..1000).filter(|&id| spec.keeps(id)).collect();
+        assert_eq!(kept_a, kept_b);
+        // Roughly 1-in-4 (hash-spread, not exact).
+        assert!(
+            kept_a.len() > 150 && kept_a.len() < 350,
+            "1-in-4 of 1000 ≈ 250, got {}",
+            kept_a.len()
+        );
+        // Sampling is all-or-nothing per request: a sampled-out id leaves
+        // zero events, a sampled-in id leaves its full lifecycle.
+        let mut rec = RingRecorder::new(spec);
+        for id in 0..1000u64 {
+            lifecycle(&mut rec, id, id as f64, 1);
+        }
+        let t = rec.into_trace();
+        assert_eq!(t.len(), kept_a.len() * 8);
+        // Control events bypass sampling.
+        let mut rec = RingRecorder::new(TraceSpec::sampled(1_000_000));
+        rec.record(
+            1.0,
+            CONTROL_ID,
+            StageEvent::Breaker {
+                replica: 0,
+                from: BreakerPhase::Closed,
+                to: BreakerPhase::Open,
+            },
+        );
+        assert_eq!(rec.into_trace().len(), 1);
+    }
+
+    #[test]
+    fn merge_and_sort_interleave_thread_rings() {
+        let mut a = RingRecorder::new(TraceSpec::full());
+        let mut b = RingRecorder::new(TraceSpec::full());
+        lifecycle(&mut a, 1, 50.0, 4);
+        lifecycle(&mut b, 2, 0.0, 4);
+        let mut t = a.into_trace();
+        t.merge(b.into_trace());
+        t.sort();
+        assert_eq!(t.len(), 16);
+        assert!(t.events.windows(2).all(|w| w[0].t_us <= w[1].t_us), "time-ordered");
+        assert_eq!(t.events[0].id, 2, "thread b's request came first");
+        // Same-instant lifecycle points keep their logical order.
+        let id2: Vec<&'static str> =
+            t.events.iter().filter(|e| e.id == 2).map(|e| e.ev.label()).collect();
+        assert_eq!(
+            id2,
+            vec![
+                "accepted",
+                "admitted",
+                "attempt:primary",
+                "routed",
+                "enqueued",
+                "exec-start",
+                "exec-end",
+                "completed"
+            ]
+        );
+    }
+}
