@@ -1,0 +1,173 @@
+//! Disaggregated FPGA pool vs the PCIe fleet — the $/Mquery head-to-head.
+//!
+//! The §6.1 imbalance (one weak CPU feeder starves a PCIe-attached
+//! kernel at large batch) means a PCIe fleet buys one board per feeder
+//! and leaves most of each board idle. A network-attached pool decouples
+//! the ratio: M feeders share N kernels over a modelled 10GbE hop, and N
+//! is sized to the *kernel* demand, not the feeder count. Under
+//! rack-density pricing (64 modules amortising one chassis) the pooled
+//! kernels are also far cheaper per unit than f1.2xlarge boards.
+//!
+//! Two sweeps over the pool DES at the §6.1 batch:
+//!
+//! 1. **Kernel sweep** (10 feeders, N = 1..=8, fifo and packing leases):
+//!    goodput climbs with N until the feeder ceiling binds; the
+//!    head-to-head finds the smallest N that matches an 8-node PCIe
+//!    fleet's goodput.
+//! 2. **Feeder sweep** (3 kernels, M = 4..16): the mirrored knee —
+//!    goodput climbs with M until the 3-kernel ceiling binds.
+//!
+//! Acceptance (the PR's tentpole claim): some pool with *strictly fewer*
+//! kernels than the PCIe fleet's 8 boards reaches ≥ its goodput at
+//! *strictly lower* $/Mquery, with each pooled kernel serving ≥2× the
+//! queries of a PCIe board. Emits `BENCH_fpga_pool.json` (override with
+//! `BENCH_OUT`); `BENCH_SMOKE=1` shrinks the workload for CI.
+
+use erbium_search::benchkit::{fmt_qps, print_table, write_json, Json};
+use erbium_search::cluster::sim::measure_node_saturation_qps;
+use erbium_search::costmodel::{
+    dollars_per_mquery, pcie_topology_hourly_usd, pool_topology_hourly_usd,
+};
+use erbium_search::pool::sim::{measure_pool_saturation_qps, PoolSimConfig};
+use erbium_search::pool::LeasePolicy;
+
+/// The §6.1 weak-feeder point: one feeder's sched+encode (~2.4 ms) caps
+/// a PCIe node at a fraction of the kernel rate.
+const BATCH: usize = 16_384;
+const PCIE_NODES: usize = 8;
+const POOL_FEEDERS: usize = 10;
+const KERNEL_SWEEP: std::ops::RangeInclusive<usize> = 1..=8;
+/// Acceptance: per-kernel goodput of the winning pool vs per-board
+/// goodput of the PCIe fleet.
+const MIN_KERNEL_LEVERAGE: f64 = 2.0;
+
+fn pack_at_knee() -> LeasePolicy {
+    // Two §6.1 batches per transfer: still coalescing, without letting
+    // the age cap dominate at saturation.
+    LeasePolicy::SizeAware { pack_queries: 2 * BATCH, age_cap_us: 600.0 }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let requests = if smoke { 150 } else { 400 };
+
+    // ---- PCIe baseline: 8 single-feeder nodes, one board each ----------
+    let pcie_node_qps = measure_node_saturation_qps(1, BATCH, requests);
+    let pcie_qps = PCIE_NODES as f64 * pcie_node_qps;
+    let pcie_hourly = pcie_topology_hourly_usd(PCIE_NODES);
+    let pcie_usd_mq = dollars_per_mquery(pcie_hourly, pcie_qps);
+
+    // ---- 1. Kernel sweep: 10 feeders over N pooled kernels -------------
+    let pool_qps = |kernels: usize, lease: LeasePolicy| {
+        let cfg = PoolSimConfig::v2_pool(POOL_FEEDERS, kernels).with_lease(lease);
+        measure_pool_saturation_qps(&cfg, BATCH, requests)
+    };
+    let mut rows = Vec::new();
+    let mut sweep_json = Vec::new();
+    let mut k_min = None;
+    for kernels in KERNEL_SWEEP {
+        let fifo = pool_qps(kernels, LeasePolicy::Fifo);
+        let pack = pool_qps(kernels, pack_at_knee());
+        let hourly = pool_topology_hourly_usd(POOL_FEEDERS, kernels);
+        let usd_mq = dollars_per_mquery(hourly, fifo);
+        if k_min.is_none() && fifo >= pcie_qps {
+            k_min = Some((kernels, fifo, usd_mq));
+        }
+        rows.push(vec![
+            format!("{POOL_FEEDERS}:{kernels}"),
+            fmt_qps(fifo),
+            fmt_qps(pack),
+            format!("{:.2} $/h", hourly),
+            format!("{:.2} µ$/Mq", usd_mq * 1e6),
+            format!("{:.0} %", fifo / pcie_qps * 100.0),
+        ]);
+        sweep_json.push(Json::obj([
+            ("kernels", Json::Int(kernels as i64)),
+            ("fifo_qps", Json::Num(fifo)),
+            ("pack_qps", Json::Num(pack)),
+            ("hourly_usd", Json::Num(hourly)),
+            ("fifo_usd_per_mquery", Json::Num(usd_mq)),
+        ]));
+    }
+    print_table(
+        &format!(
+            "pool kernel sweep ({POOL_FEEDERS} feeders, batch {BATCH}) vs \
+             {PCIE_NODES}-node PCIe fleet at {}",
+            fmt_qps(pcie_qps)
+        ),
+        &["M:N", "fifo", "pack", "pool cost", "fifo $/Mq", "of PCIe goodput"],
+        &rows,
+    );
+
+    // ---- 2. Feeder sweep: the mirrored knee at 3 kernels ---------------
+    let mut feeder_rows = Vec::new();
+    for feeders in [4usize, 6, 8, 10, 12, 16] {
+        let cfg = PoolSimConfig::v2_pool(feeders, 3);
+        let qps = measure_pool_saturation_qps(&cfg, BATCH, requests);
+        let ceiling = cfg.ceiling_qps(BATCH);
+        feeder_rows.push(vec![
+            format!("{feeders}:3"),
+            fmt_qps(qps),
+            fmt_qps(ceiling),
+            format!("{:.0} %", qps / ceiling * 100.0),
+        ]);
+    }
+    print_table(
+        "pool feeder sweep (3 kernels): goodput climbs to the kernel ceiling",
+        &["M:N", "goodput", "model ceiling", "of ceiling"],
+        &feeder_rows,
+    );
+
+    // ---- Head-to-head acceptance ---------------------------------------
+    let (k, pool_match_qps, pool_usd_mq) =
+        k_min.expect("some pool in the sweep must reach PCIe goodput");
+    let leverage = (pool_match_qps / k as f64) / pcie_node_qps;
+    println!(
+        "\nhead-to-head: pool {POOL_FEEDERS}:{k} at {} matches the PCIe fleet's {} \
+         with {k} kernels instead of {PCIE_NODES} boards",
+        fmt_qps(pool_match_qps),
+        fmt_qps(pcie_qps),
+    );
+    println!(
+        "$/Mquery: pool {:.2} µ$ vs PCIe {:.2} µ$ ({:.1}× cheaper); \
+         per-kernel leverage {leverage:.1}×",
+        pool_usd_mq * 1e6,
+        pcie_usd_mq * 1e6,
+        pcie_usd_mq / pool_usd_mq,
+    );
+    assert!(
+        k < PCIE_NODES,
+        "acceptance: the matching pool must use strictly fewer kernels ({k} vs {PCIE_NODES})"
+    );
+    assert!(pool_match_qps >= pcie_qps, "acceptance: pool goodput must reach the PCIe fleet");
+    assert!(
+        pool_usd_mq < pcie_usd_mq,
+        "acceptance: pool $/Mquery {pool_usd_mq:.3e} must be strictly below PCIe {pcie_usd_mq:.3e}"
+    );
+    assert!(
+        leverage >= MIN_KERNEL_LEVERAGE,
+        "acceptance: each pooled kernel must serve ≥{MIN_KERNEL_LEVERAGE}× a PCIe board's \
+         queries, got {leverage:.2}×"
+    );
+
+    // ---- Artifact ------------------------------------------------------
+    let json = Json::obj([
+        ("bench", Json::Str("fpga_pool".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("batch", Json::Int(BATCH as i64)),
+        ("requests", Json::Int(requests as i64)),
+        ("pcie_nodes", Json::Int(PCIE_NODES as i64)),
+        ("pcie_qps", Json::Num(pcie_qps)),
+        ("pcie_hourly_usd", Json::Num(pcie_hourly)),
+        ("pcie_usd_per_mquery", Json::Num(pcie_usd_mq)),
+        ("pool_feeders", Json::Int(POOL_FEEDERS as i64)),
+        ("kernel_sweep", Json::Arr(sweep_json)),
+        ("match_kernels", Json::Int(k as i64)),
+        ("match_qps", Json::Num(pool_match_qps)),
+        ("match_usd_per_mquery", Json::Num(pool_usd_mq)),
+        ("kernel_leverage", Json::Num(leverage)),
+    ]);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_fpga_pool.json".to_string());
+    write_json(&out_path, &json).expect("write bench artifact");
+}

@@ -205,6 +205,21 @@ impl ClusterHandle {
         Submit::Submitted { node: target, degraded }
     }
 
+    /// Submit directly to `node`, bypassing the router and admission —
+    /// for callers that own both decisions themselves, like the pool
+    /// dispatcher's lease scheduler picking the least-loaded leased
+    /// kernel. The node must be live and the caller must collect exactly
+    /// one tagged [`Completion`] for it.
+    pub(crate) fn try_submit_to(
+        &self,
+        node: usize,
+        queries: Vec<crate::rules::types::MctQuery>,
+        id: u64,
+        tx: &mpsc::Sender<Completion>,
+    ) {
+        self.nodes[node].submit_tagged(queries, id, node, tx);
+    }
+
     /// Feed a completion back into the per-replica service estimate (the
     /// signal [`AdmissionPolicy::SlaP90`] sheds on).
     pub(crate) fn note_completion(&self, c: &Completion) {

@@ -16,7 +16,10 @@
 //! *routing* policies identically by shed load?) and
 //! [`cross_validate_scaling_policies`] (do both realisations rank
 //! *autoscaling* policies identically by fleet cost under the same
-//! diurnal profile?).
+//! diurnal profile?). [`cross_validate_pool_topologies`] closes the
+//! disaggregation loop: do both realisations rank the PCIe fleet and
+//! the network-attached kernel pool identically on goodput *and*
+//! $/Mquery?
 
 use anyhow::Result;
 
@@ -1092,4 +1095,258 @@ pub fn cross_validate_stage_breakdown(
         },
     )?;
     Ok(StageBreakdownCrossValidation { regimes: vec![weak_feeder, straggler] })
+}
+
+// ---------------------------------------------------------------------------
+// Pool-topology cross-validation (the disaggregated pool's acceptance test)
+// ---------------------------------------------------------------------------
+
+/// Batch size of the topology shoot-out: the §6.1 knee, where one CPU
+/// feeder (~2.4 ms of sched + encode per batch) is the PCIe node's
+/// bottleneck and the kernel idles. That imbalance is exactly what the
+/// disaggregated pool converts into hardware savings, so it is the
+/// regime where the ranking must hold.
+const POOL_CROSSVAL_BATCH: usize = 16_384;
+/// PCIe baseline: four 1-feeder nodes, each with its own board.
+const POOL_CROSSVAL_PCIE_NODES: usize = 4;
+/// Pool topology: eight feeder lanes share three pooled kernels.
+const POOL_CROSSVAL_FEEDERS: usize = 8;
+const POOL_CROSSVAL_KERNELS: usize = 3;
+/// Feeder threads per pooled kernel node in the real realisation — the
+/// real analogue of the pool's M:N decoupling (the PCIe baseline keeps
+/// one).
+const POOL_CROSSVAL_POOL_WORKERS: usize = 4;
+/// Offered load relative to each arm's nominal capacity: saturating, so
+/// goodput reads as capacity.
+const POOL_CROSSVAL_OVERLOAD: f64 = 2.0;
+/// The fifo hop budget: the dispatcher's per-transfer occupancy is
+/// calibrated so one-batch-per-transfer leasing clears only this factor
+/// over the *probed* PCIe fleet rate. Packing ships
+/// [`POOL_CROSSVAL_PACK_BATCHES`] batches per occupancy slot and clears
+/// the hop entirely — the structural reason pack > fifo > pcie.
+const POOL_CROSSVAL_HOP_HEADROOM: f64 = 1.25;
+const POOL_CROSSVAL_PACK_BATCHES: usize = 8;
+const POOL_CROSSVAL_PROBE_REQUESTS: usize = 60;
+const POOL_CROSSVAL_SIM_REQUESTS: usize = 400;
+const POOL_CROSSVAL_REAL_REQUESTS: usize = 96;
+
+/// One topology arm of the shoot-out, priced under the rack-density
+/// cost model.
+#[derive(Debug, Clone)]
+pub struct PoolArm {
+    pub label: &'static str,
+    pub goodput_qps: f64,
+    pub hourly_usd: f64,
+    pub usd_per_mquery: f64,
+}
+
+fn pool_arm_ranking(arms: &[PoolArm], key: fn(&PoolArm) -> f64, ascending: bool) -> Vec<String> {
+    let mut sorted: Vec<&PoolArm> = arms.iter().collect();
+    sorted.sort_by(|a, b| key(a).partial_cmp(&key(b)).expect("finite metric"));
+    if !ascending {
+        sorted.reverse();
+    }
+    sorted.iter().map(|a| a.label.to_string()).collect()
+}
+
+/// Paired topology arms of the two realisations. The invariant is a
+/// *double* ranking: sim and real must order {pcie, pool/fifo,
+/// pool/pack} identically on goodput (descending) **and** on $/Mquery
+/// (ascending) — absolute numbers are calibrated per realisation and
+/// never compared.
+#[derive(Debug, Clone)]
+pub struct PoolTopologyCrossValidation {
+    pub sim: Vec<PoolArm>,
+    pub real: Vec<PoolArm>,
+}
+
+impl PoolTopologyCrossValidation {
+    pub fn goodput_ranking(arms: &[PoolArm]) -> Vec<String> {
+        pool_arm_ranking(arms, |a| a.goodput_qps, false)
+    }
+
+    pub fn cost_ranking(arms: &[PoolArm]) -> Vec<String> {
+        pool_arm_ranking(arms, |a| a.usd_per_mquery, true)
+    }
+
+    /// True when both realisations produce the same goodput ranking and
+    /// the same $/Mquery ranking.
+    pub fn agree_on_ranking(&self) -> bool {
+        Self::goodput_ranking(&self.sim) == Self::goodput_ranking(&self.real)
+            && Self::cost_ranking(&self.sim) == Self::cost_ranking(&self.real)
+    }
+
+    pub fn summary(&self) -> String {
+        let line = |name: &str, arms: &[PoolArm]| {
+            let detail = arms
+                .iter()
+                .map(|a| {
+                    format!(
+                        "{} {:.2}Mq/s ${:.3}/Mq",
+                        a.label,
+                        a.goodput_qps / 1e6,
+                        a.usd_per_mquery
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(", ");
+            format!(
+                "{name}: goodput {} | $/Mq {} | {detail}",
+                Self::goodput_ranking(arms).join(" > "),
+                Self::cost_ranking(arms).join(" < "),
+            )
+        };
+        format!(
+            "{}\n{}\n{}",
+            line("sim ", &self.sim),
+            line("real", &self.real),
+            if self.agree_on_ranking() { "same double ranking" } else { "RANKING MISMATCH" }
+        )
+    }
+}
+
+/// Race the PCIe fleet against the disaggregated pool (fifo and packing
+/// leases) in both realisations at the §6.1 weak-feeder knee, and pair
+/// the arms for the double-ranking check. Each realisation is
+/// calibrated against its own probed per-node rate; the fifo hop budget
+/// and the saturating offered load derive from that probe, so the two
+/// realisations run the same *relative* experiment at their own speeds.
+pub fn cross_validate_pool_topologies(
+    factory: BackendFactory,
+    world: &World,
+    seed: u64,
+) -> Result<PoolTopologyCrossValidation> {
+    use crate::cluster::sim::{measure_node_saturation_qps, poisson_sim_arrivals};
+    use crate::cluster::{AdmissionPolicy, RoutePolicy};
+    use crate::costmodel::{dollars_per_mquery, pcie_topology_hourly_usd, pool_topology_hourly_usd};
+    use crate::pool::real::{PoolCluster, PoolRealConfig};
+    use crate::pool::sim::{simulate_pool, PoolSimConfig};
+    use crate::pool::LeasePolicy;
+
+    let batch = POOL_CROSSVAL_BATCH;
+    let nodes = POOL_CROSSVAL_PCIE_NODES;
+    let hourly_pcie = pcie_topology_hourly_usd(nodes);
+    let hourly_pool = pool_topology_hourly_usd(POOL_CROSSVAL_FEEDERS, POOL_CROSSVAL_KERNELS);
+    // Per-transfer hop occupancy and pack age cap, from a probed
+    // per-node request rate (same formula, either realisation's probe).
+    let hop_us_of = |mu_rps: f64| {
+        1e6 / (POOL_CROSSVAL_HOP_HEADROOM * nodes as f64 * mu_rps)
+    };
+    let age_cap_of =
+        |mu_rps: f64| POOL_CROSSVAL_PACK_BATCHES as f64 * 1e6 / (nodes as f64 * mu_rps);
+    let pack_of = |mu_rps: f64| LeasePolicy::SizeAware {
+        pack_queries: POOL_CROSSVAL_PACK_BATCHES * batch,
+        age_cap_us: age_cap_of(mu_rps),
+    };
+    let arm = |label: &'static str, goodput_qps: f64, hourly_usd: f64| PoolArm {
+        label,
+        goodput_qps,
+        hourly_usd,
+        usd_per_mquery: dollars_per_mquery(hourly_usd, goodput_qps),
+    };
+
+    // ---- Sim realisation ------------------------------------------------
+    let mu_sim_rps =
+        measure_node_saturation_qps(1, batch, POOL_CROSSVAL_PROBE_REQUESTS) / batch as f64;
+    let pcie_sim_cfg = ClusterSimConfig::v2_cloud(nodes, 1)
+        .with_route(RoutePolicy::RoundRobin)
+        .with_admission(AdmissionPolicy::QueueCap(FRONTDOOR_CROSSVAL_QUEUE_CAP));
+    let pcie_arrivals = poisson_sim_arrivals(
+        seed ^ 0xF00D,
+        POOL_CROSSVAL_OVERLOAD * nodes as f64 * mu_sim_rps,
+        batch,
+        POOL_CROSSVAL_SIM_REQUESTS,
+        1,
+        0.0,
+        0,
+    );
+    let pcie_sim = simulate_cluster(&pcie_sim_cfg, &pcie_arrivals).achieved_qps;
+
+    let pool_sim_cfg = PoolSimConfig::v2_pool(POOL_CROSSVAL_FEEDERS, POOL_CROSSVAL_KERNELS)
+        .with_seed(seed)
+        .with_dispatch_us(hop_us_of(mu_sim_rps));
+    let pool_arrivals = poisson_sim_arrivals(
+        seed ^ 0xB10C,
+        POOL_CROSSVAL_OVERLOAD * pool_sim_cfg.ceiling_qps(batch) / batch as f64,
+        batch,
+        POOL_CROSSVAL_SIM_REQUESTS,
+        1,
+        0.0,
+        0,
+    );
+    let fifo_sim = simulate_pool(
+        &pool_sim_cfg.clone().with_lease(LeasePolicy::Fifo),
+        &pool_arrivals,
+    )
+    .goodput_qps;
+    let pack_sim = simulate_pool(
+        &pool_sim_cfg.with_lease(pack_of(mu_sim_rps)),
+        &pool_arrivals,
+    )
+    .goodput_qps;
+
+    // ---- Real realisation ----------------------------------------------
+    let pcie_node = PipelineConfig::new(Topology::new(2, 1, 1, 4))
+        .with_aggregation(AggregationPolicy::DrainQueue);
+    let pool_node = PipelineConfig::new(Topology::new(2, POOL_CROSSVAL_POOL_WORKERS, 1, 4))
+        .with_aggregation(AggregationPolicy::DrainQueue);
+    let probe = Cluster::new(
+        ClusterConfig::new(1, pcie_node).with_admission(AdmissionPolicy::Open),
+        factory.clone(),
+    );
+    let mu_real_rps = (0..2u64)
+        .map(|i| {
+            let mut burst =
+                PoissonSource::new(world, seed ^ (1 + i), 1e8, batch, POOL_CROSSVAL_PROBE_REQUESTS);
+            probe.run(&mut burst).map(|r| r.achieved_qps / batch as f64)
+        })
+        .collect::<Result<Vec<_>>>()?
+        .into_iter()
+        .fold(0.0, f64::max);
+
+    let pcie_real_cluster = Cluster::new(
+        ClusterConfig::new(nodes, pcie_node)
+            .with_route(RoutePolicy::RoundRobin)
+            .with_admission(AdmissionPolicy::QueueCap(FRONTDOOR_CROSSVAL_QUEUE_CAP)),
+        factory.clone(),
+    );
+    let mut pcie_source = PoissonSource::new(
+        world,
+        seed ^ 11,
+        POOL_CROSSVAL_OVERLOAD * nodes as f64 * mu_real_rps,
+        batch,
+        POOL_CROSSVAL_REAL_REQUESTS,
+    );
+    let pcie_real = pcie_real_cluster.run(&mut pcie_source)?.achieved_qps;
+
+    let pool_rate = POOL_CROSSVAL_OVERLOAD
+        * (POOL_CROSSVAL_KERNELS * POOL_CROSSVAL_POOL_WORKERS) as f64
+        * mu_real_rps;
+    let run_pool_arm = |lease: LeasePolicy, salt: u64| -> Result<f64> {
+        let pool = PoolCluster::new(
+            ClusterConfig::new(POOL_CROSSVAL_KERNELS, pool_node),
+            PoolRealConfig::new(POOL_CROSSVAL_FEEDERS)
+                .with_transfer_us(hop_us_of(mu_real_rps))
+                .with_lease(lease),
+            factory.clone(),
+        );
+        let mut source =
+            PoissonSource::new(world, seed ^ salt, pool_rate, batch, POOL_CROSSVAL_REAL_REQUESTS);
+        Ok(pool.run(&mut source)?.goodput_qps)
+    };
+    let fifo_real = run_pool_arm(LeasePolicy::Fifo, 13)?;
+    let pack_real = run_pool_arm(pack_of(mu_real_rps), 17)?;
+
+    Ok(PoolTopologyCrossValidation {
+        sim: vec![
+            arm("pcie", pcie_sim, hourly_pcie),
+            arm("pool/fifo", fifo_sim, hourly_pool),
+            arm("pool/pack", pack_sim, hourly_pool),
+        ],
+        real: vec![
+            arm("pcie", pcie_real, hourly_pcie),
+            arm("pool/fifo", fifo_real, hourly_pool),
+            arm("pool/pack", pack_real, hourly_pool),
+        ],
+    })
 }

@@ -33,9 +33,10 @@ pub mod sim;
 pub use config::{AggregationPolicy, FailurePolicy, PipelineConfig, Topology};
 pub use crossval::{
     cross_validate, cross_validate_cluster_policies, cross_validate_frontdoor_policies,
-    cross_validate_resilience_policies, cross_validate_scaling_policies,
-    cross_validate_stage_breakdown, resilience_crossval_faults,
-    ClusterPolicyCrossValidation, CrossValidation, FrontdoorPolicyCrossValidation,
+    cross_validate_pool_topologies, cross_validate_resilience_policies,
+    cross_validate_scaling_policies, cross_validate_stage_breakdown,
+    resilience_crossval_faults, ClusterPolicyCrossValidation, CrossValidation,
+    FrontdoorPolicyCrossValidation, PoolArm, PoolTopologyCrossValidation,
     ResiliencePolicyCrossValidation, ScalingPolicyCrossValidation,
     StageBreakdownCrossValidation, StageRegime,
 };

@@ -98,6 +98,69 @@ pub mod catalog {
         Element { name: "F48s v2", vcpus: 48, unit_cost: 1.2084, billing: Billing::Hourly };
     pub const AZURE_NP10S: Element =
         Element { name: "NP10s", vcpus: 10, unit_cost: 1.0411, billing: Billing::Hourly };
+
+    /// One network-attached FPGA module in a cloudFPGA-style sled
+    /// (Kintex KU060 class, no host CPU — the whole point): board-level
+    /// purchase price, amortised like other on-prem hardware.
+    pub const CLOUDFPGA_KU060: Element = Element {
+        name: "cloudFPGA KU060 module",
+        vcpus: 0,
+        unit_cost: 2_500.0,
+        billing: Billing::Purchase,
+    };
+    /// The 2U chassis that carries [`super::CHASSIS_FPGA_SLOTS`] modules:
+    /// two 32-module sleds, each fronted by a 64-port 10 GbE ToR switch
+    /// (640 Gb/s bisection). Price covers enclosure + both switches +
+    /// power/cooling gear, amortised as a purchase.
+    pub const CLOUDFPGA_CHASSIS: Element = Element {
+        name: "cloudFPGA 2U chassis (2 sleds + switches)",
+        vcpus: 0,
+        unit_cost: 28_000.0,
+        billing: Billing::Purchase,
+    };
+}
+
+/// FPGA modules per 2U chassis in the cloudFPGA rack design (2 sleds of
+/// 32 network-attached modules each).
+pub const CHASSIS_FPGA_SLOTS: usize = 64;
+/// Chassis per 42U rack — 1 024 FPGAs/rack, the density figure the
+/// disaggregated pool is priced against.
+pub const CHASSIS_PER_RACK: usize = 16;
+
+/// Hourly price of `kernels` leased network-attached FPGA modules:
+/// per-module amortised purchase plus whole chassis (enclosure +
+/// switches) in units of [`CHASSIS_FPGA_SLOTS`]. Charging whole chassis
+/// is deliberately conservative — a part-filled chassis is not shared
+/// with anyone else's lease.
+pub fn pool_kernels_hourly_usd(kernels: usize) -> f64 {
+    let chassis = kernels.div_ceil(CHASSIS_FPGA_SLOTS);
+    kernels as f64 * catalog::CLOUDFPGA_KU060.hourly_usd()
+        + chassis as f64 * catalog::CLOUDFPGA_CHASSIS.hourly_usd()
+}
+
+/// Hourly price of `feeders` pool feeder lanes: each lane is one vCPU's
+/// slice of a c5.12xlarge — feeders encode locally and push encoded
+/// batches over the network, so they need CPU only.
+pub fn pool_feeders_hourly_usd(feeders: usize) -> f64 {
+    feeders as f64 * catalog::AWS_C5_12XL.unit_cost / catalog::AWS_C5_12XL.vcpus as f64
+}
+
+/// Hourly price of a whole pooled topology: M feeder lanes + N leased
+/// kernels (chassis included).
+pub fn pool_topology_hourly_usd(feeders: usize, kernels: usize) -> f64 {
+    pool_feeders_hourly_usd(feeders) + pool_kernels_hourly_usd(kernels)
+}
+
+/// Hourly price of the PCIe-attached baseline: whole f1.2xlarge nodes,
+/// one FPGA welded to one (small) host CPU each — the §6.1 shape.
+pub fn pcie_topology_hourly_usd(nodes: usize) -> f64 {
+    nodes as f64 * catalog::AWS_F1_2XL.unit_cost
+}
+
+/// Dollars per million queries served: the head-to-head axis of the pool
+/// bench. `hourly_usd` buys `qps * 3600` queries per hour.
+pub fn dollars_per_mquery(hourly_usd: f64, qps: f64) -> f64 {
+    hourly_usd / (qps.max(1e-9) * 3600.0 / 1e6)
 }
 
 /// One row of Table 2 / Table 3.
@@ -527,6 +590,46 @@ mod tests {
         let expect = 13_000.0 / (PURCHASE_AMORTISATION_YEARS * HOURS_PER_YEAR);
         assert!((onprem - expect).abs() < 1e-9, "amortised {onprem}");
         assert!(onprem < catalog::AWS_F1_2XL.hourly_usd(), "owned hardware is cheap per hour");
+    }
+
+    #[test]
+    fn rack_density_pricing_steps_per_chassis() {
+        // One module still pays for one whole chassis…
+        let one = pool_kernels_hourly_usd(1);
+        let module = catalog::CLOUDFPGA_KU060.hourly_usd();
+        let chassis = catalog::CLOUDFPGA_CHASSIS.hourly_usd();
+        assert!((one - (module + chassis)).abs() < 1e-12);
+        // …which is linear in modules up to the 64-slot boundary, then
+        // steps by a second chassis.
+        let at_cap = pool_kernels_hourly_usd(CHASSIS_FPGA_SLOTS);
+        assert!((at_cap - (64.0 * module + chassis)).abs() < 1e-9);
+        let over = pool_kernels_hourly_usd(CHASSIS_FPGA_SLOTS + 1);
+        assert!((over - (65.0 * module + 2.0 * chassis)).abs() < 1e-9);
+        // A rack's worth: 16 chassis, 1 024 modules.
+        let rack = pool_kernels_hourly_usd(CHASSIS_FPGA_SLOTS * CHASSIS_PER_RACK);
+        assert!((rack - (1024.0 * module + 16.0 * chassis)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pooled_topology_undercuts_pcie_nodes() {
+        // The bench's operating point: 10 feeder lanes + 3 leased kernels
+        // against 8 whole f1.2xlarge nodes. Disaggregation wins on price
+        // before any throughput argument: amortised boards + a chassis
+        // share + vCPU-sliced feeders vs whole instances.
+        let pool = pool_topology_hourly_usd(10, 3);
+        let pcie = pcie_topology_hourly_usd(8);
+        assert!(pool < 0.25 * pcie, "pool {pool:.3} $/h vs pcie {pcie:.3} $/h");
+        // And $/Mquery follows at any common throughput.
+        let d_pool = dollars_per_mquery(pool, 50e6);
+        let d_pcie = dollars_per_mquery(pcie, 50e6);
+        assert!(d_pool < d_pcie);
+    }
+
+    #[test]
+    fn dollars_per_mquery_arithmetic() {
+        // $3.60/h at 1 M q/s → 3 600 M queries per hour → $0.001/Mquery.
+        let d = dollars_per_mquery(3.6, 1e6);
+        assert!((d - 0.001).abs() < 1e-12, "{d}");
     }
 
     #[test]

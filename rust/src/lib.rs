@@ -31,6 +31,7 @@ pub mod encoder;
 pub mod erbium;
 pub mod frontdoor;
 pub mod nfa;
+pub mod pool;
 pub mod prng;
 pub mod resilience;
 pub mod routescoring;

@@ -645,6 +645,60 @@ fn main() -> anyhow::Result<()> {
                 export_trace(path, &r.trace)?;
             }
         }
+        "pool" => {
+            // The disaggregated network-attached kernel pool (DES): M
+            // feeders lease N kernels over a modelled link. Knobs:
+            // --feeders M --kernels N --link-us L --link-gbps B
+            // --lease fifo|pack[:<queries>[:<age_us>]] --dispatch-us D
+            // --batch --rate --requests --seed.
+            use erbium_search::costmodel::{dollars_per_mquery, pool_topology_hourly_usd};
+            use erbium_search::pool::sim::{simulate_pool, PoolSimConfig};
+            use erbium_search::pool::{LeasePolicy, LinkModel};
+            let feeders = args.usize("--feeders", 10);
+            let kernels = args.usize("--kernels", 3);
+            let lease = match args.get("--lease") {
+                Some(s) => LeasePolicy::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("bad --lease {s:?} (fifo|pack|pack:<q>|pack:<q>:<age_us>)")
+                })?,
+                None => LeasePolicy::Fifo,
+            };
+            let default_link = LinkModel::tor_10g();
+            let link = LinkModel {
+                hop_us: args.f64("--link-us", default_link.hop_us),
+                gbps: args.f64("--link-gbps", default_link.gbps),
+                switch_gbps: default_link.switch_gbps,
+            };
+            let batch = args.usize("--batch", 16_384);
+            let requests = args.usize("--requests", 400);
+            let seed = args.u64("--seed", 0xB007);
+            let cfg = PoolSimConfig::v2_pool(feeders, kernels)
+                .with_lease(lease)
+                .with_link(link)
+                .with_seed(seed)
+                .with_dispatch_us(args.f64("--dispatch-us", 0.0));
+            let ceiling = cfg.ceiling_qps(batch);
+            // Default drive: 2× the model ceiling, i.e. saturation —
+            // goodput then reads as the topology's capacity.
+            let rate = args.f64("--rate", 2.0 * ceiling / batch as f64);
+            let arrivals = erbium_search::cluster::sim::poisson_sim_arrivals(
+                seed ^ 0xFEED,
+                rate,
+                batch,
+                requests,
+                1,
+                0.0,
+                0,
+            );
+            let r = simulate_pool(&cfg, &arrivals);
+            println!("{}", r.summary());
+            let hourly = pool_topology_hourly_usd(feeders, kernels);
+            println!(
+                "model ceiling {:.2} M q/s | rack-density fleet {hourly:.3} $/h → \
+                 {:.2} µ$/Mquery at measured goodput",
+                ceiling / 1e6,
+                dollars_per_mquery(hourly, r.goodput_qps) * 1e6
+            );
+        }
         "costs" => {
             use erbium_search::costmodel as cm;
             for (title, rows) in [("Table 2", cm::table2()), ("Table 3", cm::table3())] {
@@ -689,7 +743,7 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             println!("erbium-search — see module docs; subcommands:");
-            println!("  gen-rules | compile | query | replay | fleet | frontdoor | costs");
+            println!("  gen-rules | compile | query | replay | fleet | frontdoor | pool | costs");
             println!("run `cargo bench` for the paper's figures/tables,");
             println!("`cargo run --release --example e2e_search` for the end-to-end driver.");
         }

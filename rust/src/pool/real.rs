@@ -1,0 +1,484 @@
+//! Real (threaded) realisation of the disaggregated kernel pool.
+//!
+//! The injector paces arrivals on the wall clock and parks each batch
+//! on the least-loaded **feeder lane** (a bounded in-flight counter —
+//! the feeder-side admission valve). Accepted jobs cross a channel hop
+//! into a single **pool dispatcher** thread: the network model is the
+//! dispatcher pacing itself `transfer_us` per transfer (hop latency +
+//! serialisation of one encoded batch), so the hop's capacity — and
+//! the amortisation a packing lease buys — is physical, not assumed.
+//! The dispatcher leases each transfer to the least-loaded eligible
+//! kernel node ([`pick_kernel`] over live queue depths) and submits it
+//! through the cluster's tagged-completion surface
+//! ([`ClusterHandle::try_submit_to`]); a collector thread maps tagged
+//! completions back to pack members, feeds per-kernel circuit
+//! breakers, and folds per-member latency.
+//!
+//! Lease revocation follows the real realisation's drain semantics: a
+//! revoked kernel (forced window or breaker trip) stops receiving new
+//! leases but finishes what it holds — so `lost` is structurally zero
+//! here, exactly like [`Cluster::run`](crate::cluster::real::Cluster),
+//! and the conservation law closes through `completed + shed`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::backend::{gray_fault_factory, BackendFactory};
+use crate::cluster::real::ClusterHandle;
+use crate::cluster::ClusterConfig;
+use crate::coordinator::pipeline::{pace_until, Completion};
+use crate::coordinator::Percentiles;
+use crate::prng::Rng;
+use crate::resilience::{BreakerConfig, CircuitBreaker};
+use crate::rules::types::MctQuery;
+use crate::workload::ArrivalSource;
+
+use super::{pick_kernel, LeasePolicy, PoolReport};
+
+/// Pool-side knobs of the real realisation (the kernel fleet itself is
+/// a plain [`ClusterConfig`]).
+#[derive(Debug, Clone)]
+pub struct PoolRealConfig {
+    /// Feeder lanes the injector spreads over (M of M:N).
+    pub feeders: usize,
+    /// Per-lane in-flight cap — the feeder-side admission valve.
+    pub feeder_cap: usize,
+    /// Dispatcher occupancy per transfer, µs: the modelled hop latency
+    /// plus serialisation of one encoded batch onto the pool's link.
+    pub transfer_us: f64,
+    pub lease: LeasePolicy,
+    pub breaker: BreakerConfig,
+    /// Forced lease-revocation windows `(t_down_us, t_up_us, kernel)`:
+    /// the kernel takes no new leases inside the window (drain
+    /// semantics — in-flight work completes).
+    pub revoke_windows: Vec<(f64, f64, usize)>,
+    /// Dispatcher outage windows `(t_down_us, t_up_us)`: the channel
+    /// buffers jobs until revival.
+    pub dispatcher_down: Vec<(f64, f64)>,
+    pub seed: u64,
+}
+
+impl PoolRealConfig {
+    pub fn new(feeders: usize) -> PoolRealConfig {
+        PoolRealConfig {
+            feeders,
+            feeder_cap: 64,
+            transfer_us: 0.0,
+            lease: LeasePolicy::Fifo,
+            breaker: BreakerConfig::default(),
+            revoke_windows: Vec::new(),
+            dispatcher_down: Vec::new(),
+            seed: 0xB007,
+        }
+    }
+
+    pub fn with_lease(mut self, lease: LeasePolicy) -> Self {
+        self.lease = lease;
+        self
+    }
+
+    pub fn with_transfer_us(mut self, transfer_us: f64) -> Self {
+        self.transfer_us = transfer_us;
+        self
+    }
+
+    pub fn with_feeder_cap(mut self, feeder_cap: usize) -> Self {
+        self.feeder_cap = feeder_cap;
+        self
+    }
+
+    pub fn with_revoke_windows(mut self, w: Vec<(f64, f64, usize)>) -> Self {
+        self.revoke_windows = w;
+        self
+    }
+
+    pub fn with_dispatcher_down(mut self, w: Vec<(f64, f64)>) -> Self {
+        self.dispatcher_down = w;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// One feeder batch crossing the feeder→dispatcher hop.
+struct PoolJob {
+    queries: Vec<MctQuery>,
+    n: usize,
+    /// Injector clock when the lane accepted the job, µs.
+    accept_us: f64,
+    /// Injector clock when the job left the feeder for the hop, µs.
+    sent_us: f64,
+    feeder: usize,
+}
+
+/// One request inside a (possibly packed) transfer, as the collector
+/// needs it back.
+struct Member {
+    n: usize,
+    accept_us: f64,
+    feeder: usize,
+}
+
+/// Aggregates the dispatcher thread hands back at join.
+#[derive(Default)]
+struct DispatchStats {
+    transfers: usize,
+    transfer_queries: usize,
+    net_forward_sum: f64,
+    net_forward_n: usize,
+}
+
+fn now_us(t0: &Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e6
+}
+
+/// A runnable pool: M feeder lanes → dispatcher hop → N kernel nodes.
+pub struct PoolCluster {
+    pub cluster: ClusterConfig,
+    pub pool: PoolRealConfig,
+    factories: Vec<BackendFactory>,
+}
+
+impl PoolCluster {
+    /// Homogeneous kernel fleet from one factory.
+    pub fn new(cluster: ClusterConfig, pool: PoolRealConfig, factory: BackendFactory) -> Self {
+        let factories = vec![factory; cluster.nodes()];
+        for &(_, _, k) in &pool.revoke_windows {
+            assert!(k < cluster.nodes(), "revocation names kernel {k}");
+        }
+        PoolCluster { cluster, pool, factories }
+    }
+
+    /// Serve the arrival stream through the pool and report.
+    pub fn run(&self, source: &mut dyn ArrivalSource) -> Result<PoolReport> {
+        let n_kernels = self.cluster.nodes();
+        let cfg = &self.pool;
+        assert!(cfg.feeders > 0 && n_kernels > 0);
+        let t0 = Instant::now();
+        let factories: Vec<BackendFactory> = self
+            .factories
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                gray_fault_factory(
+                    f.clone(),
+                    self.cluster.faults.clone(),
+                    i,
+                    t0,
+                    self.cluster.route_seed,
+                )
+            })
+            .collect();
+        let handle = ClusterHandle::spawn(&self.cluster, &factories);
+        let (jtx, jrx) = mpsc::channel::<PoolJob>();
+        let (ctx, crx) = mpsc::channel::<Completion>();
+        let members: Mutex<HashMap<u64, Vec<Member>>> = Mutex::new(HashMap::new());
+        let breakers: Mutex<Vec<CircuitBreaker>> =
+            Mutex::new((0..n_kernels).map(|_| CircuitBreaker::new(cfg.breaker)).collect());
+        let pending: Vec<AtomicUsize> = (0..cfg.feeders).map(|_| AtomicUsize::new(0)).collect();
+
+        let mut requests = 0usize;
+        let mut shed = 0usize;
+        let mut shed_queries = 0usize;
+
+        let (lat_completed, dstats) = std::thread::scope(|scope| {
+            let h = &handle;
+            let members_ref = &members;
+            let breakers_ref = &breakers;
+            let pending_ref = &pending;
+
+            // ---- Pool dispatcher -----------------------------------
+            let dispatcher = scope.spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ 0xB007_CAFE);
+                let mut stats = DispatchStats::default();
+                let mut next_free_us = 0.0f64;
+                let mut xfer_id = 0u64;
+                let mut buf: Vec<PoolJob> = Vec::new();
+                let mut buf_q = 0usize;
+                let mut closed = false;
+
+                let mut submit = |jobs: Vec<PoolJob>, stats: &mut DispatchStats,
+                                  next_free_us: &mut f64,
+                                  xfer_id: &mut u64| {
+                    // Outage windows: the dispatcher is simply gone;
+                    // the channel (and pack buffer) hold the backlog.
+                    loop {
+                        let now = now_us(&t0);
+                        match cfg
+                            .dispatcher_down
+                            .iter()
+                            .find(|&&(d, u)| now >= d && now < u)
+                        {
+                            Some(&(_, up)) => pace_until(t0, up),
+                            None => break,
+                        }
+                    }
+                    // The hop is a single-server resource: one transfer
+                    // serialises at a time, whatever its size — this is
+                    // what packing amortises.
+                    let now = now_us(&t0);
+                    *next_free_us = now.max(*next_free_us) + cfg.transfer_us;
+                    pace_until(t0, *next_free_us);
+                    // Lease: least-loaded eligible kernel, by live depth.
+                    let k = loop {
+                        let now = now_us(&t0);
+                        let depths = h.depths();
+                        let eligible: Vec<bool> = (0..n_kernels)
+                            .map(|k| {
+                                !cfg.revoke_windows
+                                    .iter()
+                                    .any(|&(d, u, rk)| rk == k && now >= d && now < u)
+                                    && breakers_ref.lock().unwrap()[k].allows(now, &mut rng)
+                            })
+                            .collect();
+                        match pick_kernel(&depths, &eligible, cfg.seed, *xfer_id) {
+                            Some(k) => break k,
+                            // Every lease revoked: wait out the storm.
+                            None => std::thread::sleep(Duration::from_micros(200)),
+                        }
+                    };
+                    let now = now_us(&t0);
+                    let mut queries = Vec::new();
+                    let mut mem = Vec::new();
+                    for j in jobs {
+                        stats.net_forward_sum += now - j.sent_us;
+                        stats.net_forward_n += 1;
+                        queries.extend(j.queries);
+                        mem.push(Member { n: j.n, accept_us: j.accept_us, feeder: j.feeder });
+                    }
+                    stats.transfers += 1;
+                    stats.transfer_queries += queries.len();
+                    members_ref.lock().unwrap().insert(*xfer_id, mem);
+                    h.try_submit_to(k, queries, *xfer_id, &ctx);
+                    *xfer_id += 1;
+                };
+
+                while !closed || !buf.is_empty() {
+                    match cfg.lease {
+                        LeasePolicy::Fifo => match jrx.recv() {
+                            Ok(j) => submit(vec![j], &mut stats, &mut next_free_us, &mut xfer_id),
+                            Err(_) => closed = true,
+                        },
+                        LeasePolicy::SizeAware { pack_queries, age_cap_us } => {
+                            if closed {
+                                let jobs = std::mem::take(&mut buf);
+                                buf_q = 0;
+                                submit(jobs, &mut stats, &mut next_free_us, &mut xfer_id);
+                                continue;
+                            }
+                            if buf.is_empty() {
+                                match jrx.recv() {
+                                    Ok(j) => {
+                                        buf_q += j.n;
+                                        buf.push(j);
+                                    }
+                                    Err(_) => closed = true,
+                                }
+                                continue;
+                            }
+                            let now = now_us(&t0);
+                            let deadline = buf[0].sent_us + age_cap_us;
+                            if buf_q >= pack_queries || now >= deadline {
+                                let jobs = std::mem::take(&mut buf);
+                                buf_q = 0;
+                                submit(jobs, &mut stats, &mut next_free_us, &mut xfer_id);
+                                continue;
+                            }
+                            let wait = Duration::from_micros((deadline - now) as u64 + 1);
+                            match jrx.recv_timeout(wait) {
+                                Ok(j) => {
+                                    buf_q += j.n;
+                                    buf.push(j);
+                                }
+                                Err(mpsc::RecvTimeoutError::Timeout) => {
+                                    let jobs = std::mem::take(&mut buf);
+                                    buf_q = 0;
+                                    submit(jobs, &mut stats, &mut next_free_us, &mut xfer_id);
+                                }
+                                Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+                            }
+                        }
+                    }
+                }
+                stats
+            });
+
+            // ---- Collector -----------------------------------------
+            let collector = scope.spawn(move || {
+                let mut lat = Percentiles::new();
+                let mut completed = 0usize;
+                let mut completed_q = 0usize;
+                let mut failed = 0usize;
+                while let Ok(c) = crx.recv() {
+                    let now = now_us(&t0);
+                    h.note_completion(&c);
+                    breakers_ref.lock().unwrap()[c.node].on_outcome(
+                        now,
+                        c.ok,
+                        c.latency_us * 1024.0 / c.n_queries.max(1) as f64,
+                    );
+                    let mem = members_ref
+                        .lock()
+                        .unwrap()
+                        .remove(&c.id)
+                        .expect("every tagged completion has a member map entry");
+                    for m in mem {
+                        pending_ref[m.feeder].fetch_sub(1, Ordering::Relaxed);
+                        lat.record(now - m.accept_us);
+                        completed += 1;
+                        completed_q += m.n;
+                        if !c.ok {
+                            failed += 1;
+                        }
+                    }
+                }
+                (lat, completed, completed_q, failed)
+            });
+
+            // ---- Injector (this thread) ----------------------------
+            let mut idx = 0u64;
+            while let Some(a) = source.next_arrival() {
+                requests += 1;
+                pace_until(t0, a.at_us);
+                let n = a.queries.len();
+                let loads: Vec<usize> =
+                    pending.iter().map(|p| p.load(Ordering::Relaxed)).collect();
+                let all = vec![true; cfg.feeders];
+                let f = pick_kernel(&loads, &all, cfg.seed ^ 0xFEED_F00D, idx)
+                    .expect("at least one feeder lane");
+                idx += 1;
+                if loads[f] >= cfg.feeder_cap {
+                    shed += 1;
+                    shed_queries += n;
+                    continue;
+                }
+                pending[f].fetch_add(1, Ordering::Relaxed);
+                let now = now_us(&t0);
+                jtx.send(PoolJob {
+                    queries: a.queries,
+                    n,
+                    accept_us: now,
+                    sent_us: now,
+                    feeder: f,
+                })
+                .expect("dispatcher outlives the injector");
+            }
+            drop(jtx);
+            let dstats = dispatcher.join().expect("dispatcher panicked");
+            let lat_completed = collector.join().expect("collector panicked");
+            (lat_completed, dstats)
+        });
+
+        let (mut lat, completed, completed_queries, failed) = lat_completed;
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let stranded: usize = members.lock().unwrap().values().map(Vec::len).sum();
+        let trips: usize = breakers.lock().unwrap().iter().map(CircuitBreaker::trips).sum();
+        handle.shutdown();
+
+        anyhow::ensure!(
+            completed + shed + stranded == requests,
+            "pool lost requests: {requests} in, {completed} completed + {shed} shed + \
+             {stranded} stranded"
+        );
+
+        Ok(PoolReport {
+            label: format!("pool/{}", cfg.lease.label()),
+            feeders: cfg.feeders,
+            kernels: n_kernels,
+            requests,
+            accepted: requests - shed,
+            completed,
+            shed_queue: shed,
+            lost: stranded,
+            completed_queries,
+            shed_queries,
+            failed,
+            offered_qps: source.offered_qps(),
+            goodput_qps: completed_queries as f64 / wall_s,
+            p50_us: lat.p50(),
+            p90_us: lat.p90(),
+            p99_us: lat.p99(),
+            transfers: dstats.transfers,
+            mean_transfer_queries: dstats.transfer_queries as f64
+                / dstats.transfers.max(1) as f64,
+            net_forward_mean_us: dstats.net_forward_sum / dstats.net_forward_n.max(1) as f64,
+            revocations: self.pool.revoke_windows.len() + trips,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AggregationPolicy, PipelineConfig, Topology};
+    use crate::nfa::constraint_gen::HardwareConfig;
+    use crate::rules::standard::StandardVersion;
+    use crate::testing::fixture::compile_fixture;
+    use crate::workload::PoissonSource;
+
+    fn fixture() -> (BackendFactory, crate::rules::types::World) {
+        let f = compile_fixture(909, 300, StandardVersion::V2, HardwareConfig::v2_aws(4));
+        (f.native_factory(), f.world)
+    }
+
+    fn kernel_node() -> PipelineConfig {
+        PipelineConfig::new(Topology::new(2, 1, 1, 4))
+            .with_aggregation(AggregationPolicy::DrainQueue)
+    }
+
+    #[test]
+    fn pool_serves_and_conserves_fifo() {
+        let (factory, world) = fixture();
+        let cluster = ClusterConfig::new(2, kernel_node());
+        let pool = PoolRealConfig::new(4).with_transfer_us(50.0);
+        let mut src = PoissonSource::new(&world, 11, 3e5, 16, 200);
+        let r = PoolCluster::new(cluster, pool, factory).run(&mut src).unwrap();
+        assert!(r.conserves());
+        assert_eq!(r.requests, 200);
+        assert_eq!(r.lost, 0, "real pool drains; nothing is lost");
+        assert_eq!(r.transfers, r.accepted, "fifo: one transfer per accepted batch");
+        assert!(r.completed > 0);
+    }
+
+    #[test]
+    fn pool_packing_coalesces_in_the_real_hop() {
+        let (factory, world) = fixture();
+        let cluster = ClusterConfig::new(2, kernel_node());
+        let pool = PoolRealConfig::new(4)
+            .with_transfer_us(50.0)
+            .with_lease(LeasePolicy::SizeAware { pack_queries: 64, age_cap_us: 2_000.0 });
+        let mut src = PoissonSource::new(&world, 12, 4e5, 16, 240);
+        let r = PoolCluster::new(cluster, pool, factory).run(&mut src).unwrap();
+        assert!(r.conserves());
+        assert!(
+            r.transfers < r.accepted,
+            "packing must coalesce: {} transfers for {} accepted",
+            r.transfers,
+            r.accepted
+        );
+        assert!(r.mean_transfer_queries > 16.0);
+    }
+
+    #[test]
+    fn revocation_window_drains_onto_surviving_kernels() {
+        let (factory, world) = fixture();
+        let cluster = ClusterConfig::new(2, kernel_node());
+        // Kernel 0's lease is revoked for the whole run.
+        let pool = PoolRealConfig::new(4)
+            .with_transfer_us(20.0)
+            .with_revoke_windows(vec![(0.0, 60e6, 0)]);
+        let mut src = PoissonSource::new(&world, 13, 3e5, 16, 150);
+        let r = PoolCluster::new(cluster, pool, factory).run(&mut src).unwrap();
+        assert!(r.conserves());
+        assert_eq!(r.lost, 0);
+        assert!(r.revocations >= 1);
+        assert_eq!(r.completed, r.accepted, "kernel 1 must carry everything");
+    }
+}

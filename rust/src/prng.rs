@@ -6,15 +6,34 @@
 //! experiments regenerate identically. We implement splitmix64 (seeding)
 //! and xoshiro256** (bulk generation), the standard public-domain pair.
 
+/// The splitmix64 increment (the 64-bit golden-ratio constant).
+const SPLITMIX64_GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The splitmix64 xor-multiply avalanche over an already-incremented state.
+#[inline]
+fn splitmix64_avalanche(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless splitmix64 finalizer: a cheap, well-mixed `u64 → u64` hash
+/// (golden-ratio increment + xor-multiply avalanche). `mix64(x)` equals
+/// what [`splitmix64`] would emit from state `x` without advancing any
+/// state — the one splitmix definition shared by trace sampling
+/// ([`crate::telemetry::TraceSpec::keeps`]) and the kernel-pool lease
+/// scheduler's deterministic tie-breaking.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    splitmix64_avalanche(x.wrapping_add(SPLITMIX64_GOLDEN))
+}
+
 /// splitmix64 step: used to expand a single `u64` seed into a full
 /// xoshiro256** state and as a cheap standalone mixer.
 #[inline]
 pub fn splitmix64(state: &mut u64) -> u64 {
-    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    let mut z = *state;
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
+    *state = state.wrapping_add(SPLITMIX64_GOLDEN);
+    splitmix64_avalanche(*state)
 }
 
 /// xoshiro256** deterministic PRNG.
@@ -155,6 +174,25 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix64_pins_the_splitmix64_constants() {
+        // The canonical splitmix64 reference vector (seed 0): any change
+        // to the golden-ratio increment, the multiply constants, or the
+        // shift amounts breaks these exact outputs — and with them the
+        // cross-realisation trace-sampling agreement and the lease
+        // scheduler's tie-break determinism.
+        let mut s = 0u64;
+        assert_eq!(splitmix64(&mut s), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(&mut s), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(splitmix64(&mut s), 0x06C4_5D18_8009_454F);
+        // The stateless finalizer is the same function of the incremented
+        // state: mix64(x) == splitmix64 stepped once from state x.
+        assert_eq!(mix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(mix64(0x9E37_79B9_7F4A_7C15), 0x6E78_9E6A_A1B9_65F4);
+        // And it is the telemetry sampling hash, re-exported.
+        assert_eq!(crate::telemetry::sample_hash(12345), mix64(12345));
+    }
 
     #[test]
     fn deterministic_across_constructions() {

@@ -13,6 +13,11 @@
 //!   realisation, which stamps ExecStart retroactively).
 //! * **exec** — the winning attempt's `ExecStart → ExecEnd` span, with
 //!   `kernel_us` inside it attributing the accelerator-kernel slice.
+//! * **network** — pool-topology hops around the winning attempt:
+//!   `NetSend → Enqueued` (forward: link latency + serialisation + any
+//!   switch wait + dispatcher packing delay) plus `ExecEnd → NetRecv`
+//!   (the result's way back). Zero on PCIe-attached traces, which emit
+//!   no `Net*` events.
 //! * **overhead** — the residual: failed attempts, retry backoff, hedge
 //!   arming — everything the resilience ladder spent beyond the winner.
 //!
@@ -26,13 +31,16 @@
 //!
 //! 1. A replica whose mean exec span is ≥ [`STRAGGLER_FACTOR`]× the
 //!    median of its peers (with enough samples) → [`Bottleneck::Replica`].
-//! 2. Upstream shares (park + queue) dominate (≥ [`UPSTREAM_DOMINANT`]):
+//! 2. The network share alone reaches [`NETWORK_DOMINANT`] → the pool's
+//!    hop (link, switch, or dispatcher packing) is eating the latency:
+//!    [`Bottleneck::Network`].
+//! 3. Upstream shares (park + queue) dominate (≥ [`UPSTREAM_DOMINANT`]):
 //!    replicas mostly idle → [`Bottleneck::Frontdoor`] (work is stuck at
 //!    the door, not the backend); replicas busy but kernels idle
 //!    (occupancy < [`KERNEL_IDLE`]) → [`Bottleneck::Feeder`] — the §6.1
 //!    signature: queue grows upstream while the FPGA starves; otherwise
 //!    → [`Bottleneck::Kernel`].
-//! 3. Nothing dominates → [`Bottleneck::Balanced`].
+//! 4. Nothing dominates → [`Bottleneck::Balanced`].
 
 use super::{AttemptKind, ShedLane, StageEvent, Trace, TraceEvent, CONTROL_ID};
 use crate::coordinator::LogHistogram;
@@ -51,6 +59,10 @@ pub const NODE_IDLE: f64 = 0.35;
 /// Kernel occupancy below which a busy replica is feeder-bound: the
 /// CPU side is saturated while the accelerator waits for work.
 pub const KERNEL_IDLE: f64 = 0.4;
+/// Network share at/above which the pool hop itself is the verdict —
+/// checked before the upstream split, since a slow link backs work up
+/// into park/queue too.
+pub const NETWORK_DOMINANT: f64 = 0.4;
 /// Cap on stored queue-depth timeline points per replica (decimated
 /// beyond this — the trace itself is already ring-bounded).
 const DEPTH_TIMELINE_CAP: usize = 2048;
@@ -66,6 +78,9 @@ pub enum Bottleneck {
     /// The §6.1 weak-feeder regime: replicas busy, queues full upstream,
     /// but the accelerator kernels are starved by the CPU feed stage.
     Feeder,
+    /// The pool's network hop (link latency, serialisation, switch wait,
+    /// dispatcher packing delay) dominates request time.
+    Network,
     /// The accelerator itself is the constraint: kernels saturated.
     Kernel,
     /// No single stage dominates.
@@ -78,6 +93,7 @@ impl Bottleneck {
             Bottleneck::Replica(i) => format!("replica:{i}"),
             Bottleneck::Frontdoor => "frontdoor".to_string(),
             Bottleneck::Feeder => "feeder".to_string(),
+            Bottleneck::Network => "network".to_string(),
             Bottleneck::Kernel => "kernel".to_string(),
             Bottleneck::Balanced => "balanced".to_string(),
         }
@@ -91,6 +107,7 @@ pub enum DominantStage {
     Park,
     Queue,
     Exec,
+    Network,
     Overhead,
 }
 
@@ -100,6 +117,7 @@ impl DominantStage {
             DominantStage::Park => "park",
             DominantStage::Queue => "queue",
             DominantStage::Exec => "exec",
+            DominantStage::Network => "network",
             DominantStage::Overhead => "overhead",
         }
     }
@@ -142,6 +160,9 @@ pub struct StageBreakdown {
     pub park_share: f64,
     pub queue_share: f64,
     pub exec_share: f64,
+    /// Pool-hop share (forward + reply network spans of the winning
+    /// attempt); exactly 0 on PCIe-attached traces.
+    pub network_share: f64,
     pub overhead_share: f64,
     /// Σ kernel slice / Σ winning exec span — how much of exec was the
     /// accelerator itself.
@@ -149,6 +170,7 @@ pub struct StageBreakdown {
     pub park: LogHistogram,
     pub queue: LogHistogram,
     pub exec: LogHistogram,
+    pub network: LogHistogram,
     pub overhead: LogHistogram,
     pub total: LogHistogram,
     pub replicas: Vec<ReplicaStats>,
@@ -164,6 +186,8 @@ struct RequestLane {
     t_accept: Option<f64>,
     t_first_attempt: Option<f64>,
     attempts: usize,
+    net_sends: Vec<f64>,
+    net_recvs: Vec<f64>,
     enqueues: Vec<(f64, usize)>,
     exec_starts: Vec<(f64, usize)>,
     exec_spans: Vec<(f64, f64, usize, f64)>, // (start, end, replica, kernel_us)
@@ -211,6 +235,8 @@ impl StageBreakdown {
                     lane.t_first_attempt = lane.t_first_attempt.or(Some(e.t_us));
                     lane.attempts += 1;
                 }
+                StageEvent::NetSend { .. } => lane.net_sends.push(e.t_us),
+                StageEvent::NetRecv { .. } => lane.net_recvs.push(e.t_us),
                 StageEvent::Enqueued { replica } => lane.enqueues.push((e.t_us, replica)),
                 StageEvent::ExecStart { replica } => lane.exec_starts.push((e.t_us, replica)),
                 StageEvent::ExecEnd { replica, kernel_us, .. } => {
@@ -302,15 +328,16 @@ impl StageBreakdown {
         }
 
         // Stage decomposition over completed, fully-observed requests.
-        let (mut park, mut queue, mut exec, mut overhead, mut total) = (
+        let (mut park, mut queue, mut exec, mut network, mut overhead, mut total) = (
+            LogHistogram::new(),
             LogHistogram::new(),
             LogHistogram::new(),
             LogHistogram::new(),
             LogHistogram::new(),
             LogHistogram::new(),
         );
-        let (mut sum_park, mut sum_queue, mut sum_exec, mut sum_over, mut sum_total) =
-            (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let (mut sum_park, mut sum_queue, mut sum_exec, mut sum_net, mut sum_over, mut sum_total) =
+            (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
         let mut sum_kernel = 0.0f64;
         let mut requests = 0usize;
         for (_, lane) in &lanes {
@@ -347,15 +374,35 @@ impl StageBreakdown {
             let r_park = (t_attempt - t_accept).max(0.0);
             let r_exec = (w_end - w_start).max(0.0);
             let r_queue = (w_start - t_enq).max(0.0);
-            let r_over = (r_total - r_park - r_queue - r_exec).max(0.0);
+            // Pool hops around the winner, otherwise part of the residual:
+            // forward = the latest NetSend at/before the winning enqueue →
+            // that enqueue; reply = winning ExecEnd → the earliest NetRecv
+            // at/after it. PCIe traces have no Net events → both zero.
+            let r_net_fwd = lane
+                .net_sends
+                .iter()
+                .filter(|&&t| t <= t_enq + 1e-6)
+                .fold(f64::NEG_INFINITY, |a, &t| a.max(t));
+            let r_net_fwd = if r_net_fwd.is_finite() { (t_enq - r_net_fwd).max(0.0) } else { 0.0 };
+            let r_net_reply = lane
+                .net_recvs
+                .iter()
+                .filter(|&&t| t >= w_end - 1e-6)
+                .fold(f64::INFINITY, |a, &t| a.min(t));
+            let r_net_reply =
+                if r_net_reply.is_finite() { (r_net_reply - w_end).max(0.0) } else { 0.0 };
+            let r_net = r_net_fwd + r_net_reply;
+            let r_over = (r_total - r_park - r_queue - r_exec - r_net).max(0.0);
             park.record(r_park);
             queue.record(r_queue);
             exec.record(r_exec);
+            network.record(r_net);
             overhead.record(r_over);
             total.record(r_total);
             sum_park += r_park;
             sum_queue += r_queue;
             sum_exec += r_exec;
+            sum_net += r_net;
             sum_over += r_over;
             sum_total += r_total;
             sum_kernel += w_kernel.max(0.0);
@@ -369,11 +416,13 @@ impl StageBreakdown {
             park_share: sum_park / denom,
             queue_share: sum_queue / denom,
             exec_share: sum_exec / denom,
+            network_share: sum_net / denom,
             overhead_share: sum_over / denom,
             kernel_exec_share: sum_kernel / sum_exec.max(1e-9),
             park,
             queue,
             exec,
+            network,
             overhead,
             total,
             replicas,
@@ -388,6 +437,7 @@ impl StageBreakdown {
             (self.park_share, DominantStage::Park),
             (self.queue_share, DominantStage::Queue),
             (self.exec_share, DominantStage::Exec),
+            (self.network_share, DominantStage::Network),
             (self.overhead_share, DominantStage::Overhead),
         ];
         shares.iter().max_by(|a, b| a.0.total_cmp(&b.0)).map(|&(_, s)| s).unwrap()
@@ -442,7 +492,12 @@ impl StageBreakdown {
                 return Bottleneck::Replica(i);
             }
         }
-        // 2. Upstream-dominant: the door or the feed, not the kernel.
+        // 2. The pool hop itself: checked before the upstream split
+        // because a saturated link also backs work up into park/queue.
+        if self.network_share >= NETWORK_DOMINANT {
+            return Bottleneck::Network;
+        }
+        // 3. Upstream-dominant: the door or the feed, not the kernel.
         if self.park_share + self.queue_share >= UPSTREAM_DOMINANT {
             if self.mean_util() < NODE_IDLE {
                 return Bottleneck::Frontdoor;
@@ -457,14 +512,15 @@ impl StageBreakdown {
 
     pub fn summary(&self) -> String {
         format!(
-            "{} reqs over {:.1} ms | shares park/queue/exec/overhead \
-             {:.2}/{:.2}/{:.2}/{:.2} (kernel {:.2} of exec) | util {:.2} kernel-util {:.2} | \
-             dominant {} → {} | {} transitions",
+            "{} reqs over {:.1} ms | shares park/queue/exec/net/overhead \
+             {:.2}/{:.2}/{:.2}/{:.2}/{:.2} (kernel {:.2} of exec) | util {:.2} kernel-util {:.2} \
+             | dominant {} → {} | {} transitions",
             self.requests,
             self.span_us / 1e3,
             self.park_share,
             self.queue_share,
             self.exec_share,
+            self.network_share,
             self.overhead_share,
             self.kernel_exec_share,
             self.mean_util(),
@@ -557,6 +613,69 @@ mod tests {
         assert!((b.exec_share - 30.0 / 140.0).abs() < 1e-6, "{}", b.summary());
         assert!((b.overhead_share - 95.0 / 140.0).abs() < 1e-6, "{}", b.summary());
         assert_eq!(b.dominant_stage(), DominantStage::Overhead);
+    }
+
+    /// One pooled request: feeder hands off at `t0+park`, the batch rides
+    /// the network for `fwd`, queues `queue`, executes `exec`, and the
+    /// result rides back for `reply`.
+    #[allow(clippy::too_many_arguments)]
+    fn pooled_request(
+        rec: &mut RingRecorder,
+        id: u64,
+        t0: f64,
+        park: f64,
+        fwd: f64,
+        queue: f64,
+        exec: f64,
+        reply: f64,
+    ) -> f64 {
+        let n = 16;
+        rec.record(t0, id, StageEvent::Accepted { n_queries: n });
+        let t1 = t0 + park;
+        rec.record(t1, id, StageEvent::Admitted);
+        rec.record(t1, id, StageEvent::AttemptStart { kind: AttemptKind::Primary });
+        rec.record(t1, id, StageEvent::Routed { replica: 0 });
+        rec.record(t1, id, StageEvent::NetSend { bytes: 832 });
+        let t2 = t1 + fwd;
+        rec.record(t2, id, StageEvent::Enqueued { replica: 0 });
+        let t3 = t2 + queue;
+        rec.record(t3, id, StageEvent::ExecStart { replica: 0 });
+        let t4 = t3 + exec;
+        rec.record(t4, id, StageEvent::ExecEnd { replica: 0, kernel_us: exec, ok: true });
+        let t5 = t4 + reply;
+        rec.record(t5, id, StageEvent::NetRecv { bytes: 128 });
+        rec.record(t5, id, StageEvent::Completed { n_queries: n });
+        t5
+    }
+
+    #[test]
+    fn network_hops_carve_out_of_the_residual() {
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        for i in 0..30u64 {
+            // park 5, fwd 25, queue 10, exec 40, reply 20 → total 100,
+            // network share (25+20)/100 exactly; overhead exactly 0.
+            pooled_request(&mut rec, i, i as f64 * 150.0, 5.0, 25.0, 10.0, 40.0, 20.0);
+        }
+        let b = StageBreakdown::analyze(&rec.into_trace(), 1, 1);
+        assert_eq!(b.requests, 30);
+        assert!((b.park_share - 0.05).abs() < 1e-6, "{}", b.summary());
+        assert!((b.network_share - 0.45).abs() < 1e-6, "{}", b.summary());
+        assert!((b.queue_share - 0.10).abs() < 1e-6, "{}", b.summary());
+        assert!((b.exec_share - 0.40).abs() < 1e-6, "{}", b.summary());
+        assert!(b.overhead_share.abs() < 1e-6, "{}", b.summary());
+        assert_eq!(b.dominant_stage(), DominantStage::Network);
+        assert!((b.network.mean() - 45.0).abs() < 1.0, "network histogram centred on 45 µs");
+        // 0.45 ≥ NETWORK_DOMINANT: the localiser names the hop.
+        assert_eq!(b.localise(), Bottleneck::Network, "{}", b.summary());
+
+        // A fast link stays out of the verdict: same shape, tiny hops.
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        for i in 0..30u64 {
+            pooled_request(&mut rec, i, i as f64 * 150.0, 5.0, 2.0, 10.0, 80.0, 1.0);
+        }
+        let b = StageBreakdown::analyze(&rec.into_trace(), 1, 1);
+        assert!(b.network_share < 0.05, "{}", b.summary());
+        assert_eq!(b.localise(), Bottleneck::Balanced, "{}", b.summary());
     }
 
     #[test]

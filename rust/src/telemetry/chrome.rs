@@ -11,6 +11,12 @@
 //!   (`ExecStart→ExecEnd`), carrying the kernel slice and backend
 //!   outcome in `args`; same per-request `tid` so a request's exec spans
 //!   line up under its lifecycle span.
+//! * **pid [`NETWORK_PID`] ("network")** — the pool topology's hop lane:
+//!   one `X` span per forward hop (`NetSend→Enqueued`) named `net:send`
+//!   and per reply hop (`ExecEnd→NetRecv`) named `net:recv`, with the
+//!   payload bytes in `args`; same per-request `tid`. Emitted (with its
+//!   metadata row) only when the trace contains `Net*` events, so
+//!   PCIe-attached exports are unchanged.
 //! * **instants (`ph:"i"`)** — terminals without an accept (socket sheds
 //!   refused before acceptance) on pid 0, and breaker/health transitions
 //!   on their replica's pid.
@@ -20,6 +26,10 @@
 
 use super::{StageEvent, Trace, CONTROL_ID};
 use crate::benchkit::Json;
+
+/// The network hop's process row — far above any plausible `1 + replica`
+/// pid so the lanes can never collide.
+pub const NETWORK_PID: i64 = 9_999;
 
 /// Build the Trace Event Format document for a trace.
 pub fn chrome_trace_json(trace: &Trace) -> Json {
@@ -47,6 +57,13 @@ pub fn chrome_trace_json(trace: &Trace) -> Json {
     for &r in &replicas {
         out.push(meta_process(1 + r as i64, &format!("replica {r}")));
     }
+    let has_net = sorted
+        .events
+        .iter()
+        .any(|e| matches!(e.ev, StageEvent::NetSend { .. } | StageEvent::NetRecv { .. }));
+    if has_net {
+        out.push(meta_process(NETWORK_PID, "network"));
+    }
 
     // Compact per-request track ids, in first-appearance order.
     let mut tids: Vec<u64> = Vec::new();
@@ -60,9 +77,11 @@ pub fn chrome_trace_json(trace: &Trace) -> Json {
         }
     };
 
-    // Walk per request: accept time, open exec starts, terminal.
+    // Walk per request: accept time, open exec starts, open hops, terminal.
     let mut accept_at: Vec<(u64, f64, usize)> = Vec::new(); // (id, t, n)
     let mut open_exec: Vec<(u64, usize, f64)> = Vec::new(); // (id, replica, t_start)
+    let mut open_send: Vec<(u64, f64, usize)> = Vec::new(); // (id, t, bytes)
+    let mut last_exec_end: Vec<(u64, f64)> = Vec::new(); // (id, t) — reply hop start
     for e in &sorted.events {
         if e.id == CONTROL_ID {
             if let StageEvent::Breaker { replica, from, to } = e.ev {
@@ -80,8 +99,26 @@ pub fn chrome_trace_json(trace: &Trace) -> Json {
         }
         match e.ev {
             StageEvent::Accepted { n_queries } => accept_at.push((e.id, e.t_us, n_queries)),
+            StageEvent::NetSend { bytes } => open_send.push((e.id, e.t_us, bytes)),
+            StageEvent::Enqueued { .. } => {
+                // Close the forward hop, if this request rode the pool.
+                if let Some(i) = open_send.iter().position(|&(id, _, _)| id == e.id) {
+                    let (_, t_send, bytes) = open_send.remove(i);
+                    let tid = tid_of(e.id, &mut tids);
+                    out.push(net_span("net:send", t_send, e.t_us, tid, e.id, bytes));
+                }
+            }
+            StageEvent::NetRecv { bytes } => {
+                // Pair with the latest exec end (the winning attempt).
+                if let Some(i) = last_exec_end.iter().rposition(|&(id, _)| id == e.id) {
+                    let (_, t_end) = last_exec_end.remove(i);
+                    let tid = tid_of(e.id, &mut tids);
+                    out.push(net_span("net:recv", t_end, e.t_us, tid, e.id, bytes));
+                }
+            }
             StageEvent::ExecStart { replica } => open_exec.push((e.id, replica, e.t_us)),
             StageEvent::ExecEnd { replica, kernel_us, ok } => {
+                last_exec_end.push((e.id, e.t_us));
                 if let Some(i) =
                     open_exec.iter().position(|&(id, r, _)| id == e.id && r == replica)
                 {
@@ -163,6 +200,21 @@ fn meta_process(pid: i64, name: &str) -> Json {
     ])
 }
 
+fn net_span(name: &str, t_start: f64, t_end: f64, tid: i64, id: u64, bytes: usize) -> Json {
+    Json::obj([
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(t_start)),
+        ("dur", Json::Num((t_end - t_start).max(0.0))),
+        ("pid", Json::Int(NETWORK_PID)),
+        ("tid", Json::Int(tid)),
+        (
+            "args",
+            Json::obj([("id", Json::Int(id as i64)), ("bytes", Json::Int(bytes as i64))]),
+        ),
+    ])
+}
+
 fn instant(t_us: f64, pid: i64, tid: i64, name: &str) -> Json {
     Json::obj([
         ("name", Json::Str(name.to_string())),
@@ -236,5 +288,61 @@ mod tests {
         assert_eq!(shed.get("ph").and_then(Json::as_str), Some("i"), "no accept → instant");
         let brk = find("breaker closed→open");
         assert_eq!(brk.get("pid").and_then(Json::as_i64), Some(2));
+        // No Net events → no network lane.
+        assert!(
+            !events.iter().any(|e| e.get("pid").and_then(Json::as_i64) == Some(NETWORK_PID)),
+            "PCIe-attached traces must not grow a network lane"
+        );
+    }
+
+    #[test]
+    fn pool_hops_get_their_own_network_lane() {
+        let mut rec = RingRecorder::new(TraceSpec::full());
+        let id = 7u64;
+        rec.record(0.0, id, StageEvent::Accepted { n_queries: 8 });
+        rec.record(1.0, id, StageEvent::Admitted);
+        rec.record(1.0, id, StageEvent::AttemptStart { kind: AttemptKind::Primary });
+        rec.record(1.0, id, StageEvent::Routed { replica: 0 });
+        rec.record(3.0, id, StageEvent::NetSend { bytes: 416 });
+        rec.record(10.0, id, StageEvent::Enqueued { replica: 0 });
+        rec.record(12.0, id, StageEvent::ExecStart { replica: 0 });
+        rec.record(20.0, id, StageEvent::ExecEnd { replica: 0, kernel_us: 8.0, ok: true });
+        rec.record(26.0, id, StageEvent::NetRecv { bytes: 64 });
+        rec.record(26.0, id, StageEvent::Completed { n_queries: 8 });
+        let doc = chrome_trace_json(&rec.into_trace());
+        let text = doc.render();
+        let back = Json::parse(&text).expect("exporter emits valid JSON");
+        let events = match back.get("traceEvents") {
+            Some(Json::Arr(xs)) => xs.clone(),
+            other => panic!("traceEvents must be an array, got {other:?}"),
+        };
+        let find = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("missing event {name} in {text}"))
+        };
+        // The lane announces itself and both hops are complete spans on it.
+        let meta = events
+            .iter()
+            .find(|e| e.path(&["args", "name"]).and_then(Json::as_str) == Some("network"))
+            .expect("network process metadata row");
+        assert_eq!(meta.get("pid").and_then(Json::as_i64), Some(NETWORK_PID));
+        let send = find("net:send");
+        assert_eq!(send.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(send.get("ts").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(send.get("dur").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(send.get("pid").and_then(Json::as_i64), Some(NETWORK_PID));
+        assert_eq!(send.path(&["args", "bytes"]).and_then(Json::as_i64), Some(416));
+        let recv = find("net:recv");
+        assert_eq!(recv.get("ts").and_then(Json::as_f64), Some(20.0));
+        assert_eq!(recv.get("dur").and_then(Json::as_f64), Some(6.0));
+        assert_eq!(recv.path(&["args", "bytes"]).and_then(Json::as_i64), Some(64));
+        // Hops ride the request's track so the lanes line up in Perfetto.
+        let req = find("completed");
+        assert_eq!(
+            send.get("tid").and_then(Json::as_i64),
+            req.get("tid").and_then(Json::as_i64)
+        );
     }
 }

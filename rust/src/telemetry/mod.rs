@@ -26,9 +26,11 @@
 //!    itself.
 //!
 //! The lifecycle stream per request:
-//! `Accepted → Admitted → AttemptStart → Routed → Enqueued → ExecStart →
-//! ExecEnd → (Completed | Shed | Lost)`, with extra `AttemptStart{Retry|
-//! Hedge}`/`Routed`/`Enqueued`/`Exec*` groups per resilience attempt.
+//! `Accepted → Admitted → AttemptStart → Routed → [NetSend] → Enqueued →
+//! ExecStart → ExecEnd → [NetRecv] → (Completed | Shed | Lost)`, with
+//! extra `AttemptStart{Retry|Hedge}`/`Routed`/`Enqueued`/`Exec*` groups
+//! per resilience attempt; the bracketed network hops appear only on the
+//! disaggregated pool topology ([`crate::pool`]).
 //! Control events ([`StageEvent::Breaker`], [`StageEvent::Health`]) carry
 //! the sentinel id [`CONTROL_ID`] and bypass sampling — state transitions
 //! are rare and always worth keeping.
@@ -118,6 +120,10 @@ pub enum StageEvent {
     AttemptStart { kind: AttemptKind },
     /// The router picked a replica for this attempt.
     Routed { replica: usize },
+    /// The encoded batch left the feeder onto the pool's network hop
+    /// (`bytes` = encoded payload size). Only the disaggregated pool
+    /// topology emits this; PCIe-attached paths go straight to `Enqueued`.
+    NetSend { bytes: usize },
     /// The attempt entered the replica's queue.
     Enqueued { replica: usize },
     /// The replica started executing this attempt.
@@ -126,6 +132,9 @@ pub enum StageEvent {
     /// exec span spent in the accelerator kernel itself (0 for CPU
     /// backends), `ok` whether the backend call succeeded.
     ExecEnd { replica: usize, kernel_us: f64, ok: bool },
+    /// The result batch arrived back over the pool's network hop
+    /// (`bytes` = result payload size). Pool topology only, as `NetSend`.
+    NetRecv { bytes: usize },
     /// Terminal: completed within deadline.
     Completed { n_queries: usize },
     /// Terminal: shed in `lane`.
@@ -161,9 +170,11 @@ impl StageEvent {
             StageEvent::AttemptStart { kind: AttemptKind::Retry } => "attempt:retry",
             StageEvent::AttemptStart { kind: AttemptKind::Hedge } => "attempt:hedge",
             StageEvent::Routed { .. } => "routed",
+            StageEvent::NetSend { .. } => "net-send",
             StageEvent::Enqueued { .. } => "enqueued",
             StageEvent::ExecStart { .. } => "exec-start",
             StageEvent::ExecEnd { .. } => "exec-end",
+            StageEvent::NetRecv { .. } => "net-recv",
             StageEvent::Completed { .. } => "completed",
             StageEvent::Shed { lane: ShedLane::Socket, .. } => "shed:socket",
             StageEvent::Shed { lane: ShedLane::Queue, .. } => "shed:queue",
@@ -221,13 +232,11 @@ impl TraceSpec {
 
 /// splitmix64 finalizer — a cheap, well-mixed hash so sampling is
 /// insensitive to request-id structure (sequential batch indices,
-/// session<<32 packing).
+/// session<<32 packing). The one definition lives in [`crate::prng`];
+/// the pool's lease scheduler shares it for tie-breaking.
 #[inline]
-pub fn sample_hash(mut x: u64) -> u64 {
-    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    x ^ (x >> 31)
+pub fn sample_hash(x: u64) -> u64 {
+    crate::prng::mix64(x)
 }
 
 /// The recording surface both realisations call. Implementations must be
@@ -434,11 +443,13 @@ fn event_order(ev: &StageEvent) -> u8 {
         StageEvent::Admitted => 1,
         StageEvent::AttemptStart { .. } => 2,
         StageEvent::Routed { .. } => 3,
-        StageEvent::Enqueued { .. } => 4,
-        StageEvent::ExecStart { .. } => 5,
-        StageEvent::ExecEnd { .. } => 6,
-        StageEvent::Completed { .. } | StageEvent::Shed { .. } | StageEvent::Lost { .. } => 7,
-        StageEvent::Breaker { .. } | StageEvent::Health { .. } => 8,
+        StageEvent::NetSend { .. } => 4,
+        StageEvent::Enqueued { .. } => 5,
+        StageEvent::ExecStart { .. } => 6,
+        StageEvent::ExecEnd { .. } => 7,
+        StageEvent::NetRecv { .. } => 8,
+        StageEvent::Completed { .. } | StageEvent::Shed { .. } | StageEvent::Lost { .. } => 9,
+        StageEvent::Breaker { .. } | StageEvent::Health { .. } => 10,
     }
 }
 

@@ -1,0 +1,172 @@
+//! The disaggregated pool's acceptance surface, both realisations:
+//!
+//! * the conservation law (`accepted = completed + shed + lost`) holds
+//!   under mid-flight kernel-lease revocation and pool-dispatcher
+//!   kill/revive, across seeds and lease policies;
+//! * sim and real rank the three topologies {pcie, pool/fifo,
+//!   pool/pack} identically on goodput **and** $/Mquery — the PR's
+//!   tentpole cross-validation;
+//! * a saturated pool hop is localised as [`Bottleneck::Network`] from
+//!   the trace alone, and the Chrome export carries the network lane.
+
+use erbium_search::backend::BackendFactory;
+use erbium_search::cluster::sim::poisson_sim_arrivals;
+use erbium_search::cluster::ClusterConfig;
+use erbium_search::coordinator::{
+    cross_validate_pool_topologies, AggregationPolicy, PipelineConfig,
+    PoolTopologyCrossValidation, Topology,
+};
+use erbium_search::nfa::constraint_gen::HardwareConfig;
+use erbium_search::pool::real::{PoolCluster, PoolRealConfig};
+use erbium_search::pool::sim::{simulate_pool, simulate_pool_traced, PoolFaults, PoolSimConfig};
+use erbium_search::pool::{LeasePolicy, LinkModel};
+use erbium_search::rules::standard::StandardVersion;
+use erbium_search::telemetry::breakdown::NETWORK_DOMINANT;
+use erbium_search::telemetry::chrome::NETWORK_PID;
+use erbium_search::telemetry::{
+    chrome_trace_json, Bottleneck, RingRecorder, StageBreakdown, TraceSpec,
+};
+use erbium_search::testing::fixture::compile_fixture;
+use erbium_search::workload::PoissonSource;
+
+fn fixture() -> (BackendFactory, erbium_search::rules::types::World) {
+    let f = compile_fixture(1313, 300, StandardVersion::V2, HardwareConfig::v2_aws(4));
+    (f.native_factory(), f.world)
+}
+
+fn leases() -> [LeasePolicy; 2] {
+    [
+        LeasePolicy::Fifo,
+        LeasePolicy::SizeAware { pack_queries: 2 * 2_048, age_cap_us: 900.0 },
+    ]
+}
+
+/// The DES conservation law under the full fault surface: two forced
+/// lease revocations (one kernel never comes back) overlapping a
+/// dispatcher kill/revive window, across seeds and both lease policies.
+/// Every offered request must land in exactly one terminal lane, and
+/// every lane must actually fire: the 6× overload sheds at the feeder
+/// valves, and the second revocation lands 50 µs after the dispatcher
+/// revives — mid-burst, while every kernel is provably mid-invocation —
+/// so its in-flight transfer is lost.
+#[test]
+fn sim_pool_conserves_under_revocation_and_dispatcher_outage() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        for lease in leases() {
+            let mut faults = PoolFaults::none();
+            faults.revoke = vec![(2_000.0, 0, 3_000.0), (7_050.0, 1, 1e9)];
+            faults.dispatcher_down = vec![(3_000.0, 7_000.0)];
+            let cfg = PoolSimConfig::v2_pool(2, 3)
+                .with_lease(lease)
+                .with_seed(seed)
+                .with_faults(faults);
+            let arrivals = poisson_sim_arrivals(seed ^ 0xA11, 40_000.0, 2_048, 400, 1, 0.0, 0);
+            let r = simulate_pool(&cfg, &arrivals);
+            assert!(r.conserves(), "seed {seed} {}: {}", cfg.lease.label(), r.summary());
+            assert!(r.revocations >= 2, "both forced revocations must register");
+            assert!(r.completed > 0, "survivors must keep serving: {}", r.summary());
+            assert!(r.shed_queue > 0, "6x overload must shed: {}", r.summary());
+            assert!(r.lost > 0, "the mid-burst revocation must lose in-flight work: {}", r.summary());
+        }
+    }
+}
+
+/// The real (threaded) pool under the same fault surface: a revocation
+/// window on kernel 0 overlapping a dispatcher outage. Real drain
+/// semantics finish in-flight work, so nothing is structurally lost —
+/// but the ledger must still close exactly, across seeds and leases.
+#[test]
+fn real_pool_conserves_under_revocation_and_dispatcher_outage() {
+    let (factory, world) = fixture();
+    let node = PipelineConfig::new(Topology::new(2, 1, 1, 4))
+        .with_aggregation(AggregationPolicy::DrainQueue);
+    for seed in [21u64, 22] {
+        for lease in [
+            LeasePolicy::Fifo,
+            LeasePolicy::SizeAware { pack_queries: 64, age_cap_us: 2_000.0 },
+        ] {
+            let pool = PoolCluster::new(
+                ClusterConfig::new(2, node),
+                PoolRealConfig::new(4)
+                    .with_lease(lease)
+                    .with_transfer_us(40.0)
+                    .with_revoke_windows(vec![(10_000.0, 60_000.0, 0)])
+                    .with_dispatcher_down(vec![(5_000.0, 25_000.0)])
+                    .with_seed(seed),
+                factory.clone(),
+            );
+            let mut source = PoissonSource::new(&world, seed, 3e5, 16, 150);
+            let r = pool.run(&mut source).unwrap();
+            assert!(r.conserves(), "seed {seed} {}: {}", r.label, r.summary());
+            assert_eq!(r.requests, 150);
+            assert!(r.revocations >= 1, "the revocation window must register");
+            assert_eq!(r.lost, 0, "real drain semantics lose nothing: {}", r.summary());
+            assert!(r.completed > 0, "{}", r.summary());
+        }
+    }
+}
+
+/// Tentpole acceptance: both realisations rank {pcie, pool/fifo,
+/// pool/pack} identically on goodput and on $/Mquery at the §6.1
+/// weak-feeder knee — and the pool wins both metrics.
+#[test]
+fn sim_and_real_rank_pool_topologies_identically() {
+    let (factory, world) = fixture();
+    let cv = cross_validate_pool_topologies(factory, &world, 77).unwrap();
+    assert!(cv.agree_on_ranking(), "{}", cv.summary());
+    let expected = ["pool/pack", "pool/fifo", "pcie"];
+    assert_eq!(
+        PoolTopologyCrossValidation::goodput_ranking(&cv.sim),
+        expected,
+        "{}",
+        cv.summary()
+    );
+    assert_eq!(
+        PoolTopologyCrossValidation::cost_ranking(&cv.sim),
+        expected,
+        "{}",
+        cv.summary()
+    );
+    // The disaggregation claim in absolute terms, in both realisations:
+    // every pooled arm is strictly cheaper per Mquery than PCIe.
+    for arms in [&cv.sim, &cv.real] {
+        let pcie = arms.iter().find(|a| a.label == "pcie").unwrap();
+        for pooled in arms.iter().filter(|a| a.label != "pcie") {
+            assert!(
+                pooled.usd_per_mquery < pcie.usd_per_mquery,
+                "{} must undercut pcie: {}",
+                pooled.label,
+                cv.summary()
+            );
+        }
+    }
+}
+
+/// A saturated pool hop shows up in the flight recorder: with a WAN-grade
+/// 20 ms hop the localiser's verdict is [`Bottleneck::Network`], the
+/// network share dominates the decomposition, and the Chrome export
+/// renders the dedicated network lane.
+#[test]
+fn pool_trace_localises_the_network_hop() {
+    let cfg = PoolSimConfig::v2_pool(4, 2).with_link(LinkModel {
+        hop_us: 20_000.0,
+        gbps: 10.0,
+        switch_gbps: None,
+    });
+    let arrivals = poisson_sim_arrivals(5, 1_000.0, 1_024, 40, 1, 0.0, 0);
+    let mut rec = RingRecorder::new(TraceSpec::full());
+    let r = simulate_pool_traced(&cfg, &arrivals, &mut rec);
+    assert!(r.conserves());
+    assert_eq!(r.completed, 40);
+    let trace = rec.into_trace();
+    let b = StageBreakdown::analyze(&trace, cfg.kernels, 1);
+    assert!(
+        b.network_share >= NETWORK_DOMINANT,
+        "a 20 ms hop must dominate the decomposition: {}",
+        b.summary()
+    );
+    assert_eq!(b.localise(), Bottleneck::Network, "{}", b.summary());
+    let chrome = chrome_trace_json(&trace).render();
+    assert!(chrome.contains("net:send") && chrome.contains("net:recv"));
+    assert!(chrome.contains(&NETWORK_PID.to_string()), "network lane must be present");
+}
